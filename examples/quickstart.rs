@@ -1,0 +1,50 @@
+//! Quickstart: build the paper's schedules, simulate a round, compare
+//! schemes, and peek at the lower bound — in under a minute.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use straggler_sched::delay::{DelayModel, TruncatedGaussianModel};
+use straggler_sched::harness::{evaluate, EvalPoint};
+use straggler_sched::report::Table;
+use straggler_sched::scheduler::{CyclicScheduler, Scheduler, StaircaseScheduler};
+use straggler_sched::sim::simulate_round;
+use straggler_sched::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let (n, r) = (4usize, 3usize);
+    let mut rng = Rng::seed_from_u64(0);
+
+    // 1. the paper's TO matrices (Examples 2 and 3, 1-based display)
+    let cs = CyclicScheduler.schedule(n, r, &mut rng);
+    let ss = StaircaseScheduler.schedule(n, r, &mut rng);
+    println!("C_CS (n = {n}, r = {r}):\n{}", cs.to_paper_string());
+    println!("C_SS (n = {n}, r = {r}):\n{}", ss.to_paper_string());
+
+    // 2. one simulated round under the paper's scenario-1 delays
+    let model = TruncatedGaussianModel::scenario1(n);
+    let sample = model.sample(n, r, &mut rng);
+    let round = simulate_round(&cs, &sample, n);
+    println!(
+        "one CS round, k = n = {n}: completed in {:.4} ms; arrival order of tasks: {:?}",
+        round.completion_time,
+        round.winners.iter().map(|t| t + 1).collect::<Vec<_>>()
+    );
+
+    // 3. average completion times across schemes, coupled delay stream
+    let point = EvalPoint::new(8, 4, 8, 50_000, 7);
+    let model8 = TruncatedGaussianModel::scenario1(8);
+    let mut table = Table::new(
+        "t̄ (ms): n = 8, r = 4, k = 8, scenario-1 truncated Gaussian",
+        &["scheme", "mean", "p95"],
+    );
+    for e in evaluate(&point, &model8) {
+        table.push_row(vec![e.scheme.clone(), Table::fmt(e.mean), Table::fmt(e.p95)]);
+    }
+    table.print();
+
+    println!("\nnext: `straggler fig4` .. `fig7` regenerate the paper's figures;");
+    println!("      `cargo run --release --example train_distributed` runs the full stack.");
+    Ok(())
+}

@@ -1,0 +1,5 @@
+"""Build-time compile package: L2 jax model + L1 pallas kernels + AOT.
+
+Never imported at runtime — ``make artifacts`` runs ``compile.aot`` once
+and the rust binary consumes only ``artifacts/*.hlo.txt`` afterwards.
+"""

@@ -1,0 +1,142 @@
+"""AOT pipeline: lower every L2 entry point to HLO-text artifacts.
+
+Runs exactly once at build time (``make artifacts``):
+
+    cd python && python -m compile.aot --out ../artifacts
+
+For each (experiment profile × entry point) this lowers the jitted jax
+function — Pallas kernels included, in interpret mode — to StableHLO,
+converts to an XlaComputation and dumps **HLO text**.  Text, not
+``.serialize()``: jax ≥ 0.5 emits HloModuleProto with 64-bit instruction
+ids which the xla_extension 0.5.1 under the rust ``xla`` crate rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+A ``manifest.json`` records, for every artifact, the entry-point name,
+profile, dims, argument shapes and output shape — the rust runtime
+(rust/src/runtime/artifacts.rs) is manifest-driven and never hard-codes
+shapes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import gram_matvec as _gm
+
+# Interpret-mode Pallas pays a full-array slice copy per grid step on the
+# CPU backend, so AOT artifacts use monolithic blocks (grid = 1) unless
+# overridden — a 4.3x kernel speedup at the e2e shape with identical
+# numerics (EXPERIMENTS.md §Perf).  Real-TPU lowering would restore the
+# 128-wide MXU tiling that the pytest suite keeps exercising.  Applied
+# only inside build() so importing this module never perturbs the
+# kernels' default (the pytest suite relies on 128).
+AOT_BLOCK = int(os.environ.get("STRAGGLER_AOT_BLOCK", "1024"))
+
+# ---------------------------------------------------------------------------
+# Experiment profiles.  dims = {d: features, b: samples per partition,
+# n: partitions, m: coded matrices produced per encode call}.
+#
+# Profiles mirror the paper's evaluation points (DESIGN.md §4) plus a small
+# quickstart profile for examples/tests.  ``m = 2n`` covers PC/PCMM with
+# computation load r = 2 (their minimum); larger r encodes in several calls.
+# ---------------------------------------------------------------------------
+
+PROFILES: dict[str, dict[str, int]] = {
+    # tiny shapes for unit/integration tests and examples/quickstart.rs
+    "quickstart": {"d": 64, "b": 32, "n": 4, "m": 8},
+    # Fig. 3 cluster profile: N=900, d=500, n=3
+    "fig3": {"d": 500, "b": 300, "n": 3, "m": 6},
+    # Fig. 5 cluster profile: N=900, d=400, n=15
+    "fig5": {"d": 400, "b": 60, "n": 15, "m": 30},
+    # Fig. 7 profile: N=1000, d=800, n=10
+    "fig7": {"d": 800, "b": 100, "n": 10, "m": 20},
+    # end-to-end training example: N=10240, d=512, n=10
+    "e2e": {"d": 512, "b": 1024, "n": 10, "m": 20},
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(name: str, dims: dict[str, int]) -> tuple[str, list[list[int]]]:
+    """Lower one entry point at concrete dims; return (hlo_text, arg shapes)."""
+    fn, arg_templates = model.ENTRY_POINTS[name]
+    args = model.example_args(arg_templates, dims)
+    lowered = jax.jit(fn).lower(*args)
+    return to_hlo_text(lowered), [list(a.shape) for a in args]
+
+
+def build(out_dir: str, profiles: list[str], verbose: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    prev_block = _gm.DEFAULT_BLOCK
+    _gm.DEFAULT_BLOCK = AOT_BLOCK
+    try:
+        return _build_inner(out_dir, profiles, verbose)
+    finally:
+        _gm.DEFAULT_BLOCK = prev_block
+
+
+def _build_inner(out_dir: str, profiles: list[str], verbose: bool) -> dict:
+    manifest: dict = {"format": "hlo-text/v1", "artifacts": {}}
+    for prof in profiles:
+        dims = PROFILES[prof]
+        for entry, (_, arg_templates) in model.ENTRY_POINTS.items():
+            key = f"{prof}/{entry}"
+            fname = f"{prof}__{entry}.hlo.txt"
+            path = os.path.join(out_dir, fname)
+            text, arg_shapes = lower_entry(entry, dims)
+            with open(path, "w") as f:
+                f.write(text)
+            digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+            manifest["artifacts"][key] = {
+                "file": fname,
+                "entry": entry,
+                "profile": prof,
+                "dims": dims,
+                "arg_shapes": arg_shapes,
+                "arg_names": [t.split(":", 1)[0] for t in arg_templates],
+                "dtype": "f32",
+                "sha256_16": digest,
+            }
+            if verbose:
+                print(f"  wrote {fname:44s} ({len(text):>8d} chars)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    if verbose:
+        print(f"manifest: {len(manifest['artifacts'])} artifacts -> {out_dir}/manifest.json")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact output directory")
+    ap.add_argument(
+        "--profiles",
+        default=",".join(PROFILES),
+        help=f"comma-separated subset of {list(PROFILES)}",
+    )
+    args = ap.parse_args()
+    profiles = [p for p in args.profiles.split(",") if p]
+    unknown = [p for p in profiles if p not in PROFILES]
+    if unknown:
+        sys.exit(f"unknown profiles: {unknown}")
+    build(args.out, profiles)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""L1 Pallas kernels (build-time only; lowered into HLO artifacts).
+
+``ref`` holds the pure-jnp oracles; ``gram_matvec`` and ``partial_grad``
+hold the tiled Pallas implementations the L2 model calls.
+"""
+
+from . import gram_matvec, partial_grad, ref  # noqa: F401

@@ -1,0 +1,130 @@
+"""L1 Pallas kernels: tiled gram matrix–vector product  h(X) = X Xᵀ θ.
+
+This is the compute hot-spot of every scheme in the paper: each task a
+worker executes — uncoded (CS/SS/RA) on a raw partition, or coded
+(PC/PCMM) on an encoded partition — is exactly one gram mat-vec over a
+``(d, b)`` matrix (paper eq. 50, Table I).
+
+TPU-shaped structure (DESIGN.md §Hardware-Adaptation):
+
+* pass 1 ``u = Xᵀ θ``: grid over column tiles, each program pulls an
+  ``(d, bb)`` block of ``X`` HBM→VMEM plus the full ``θ`` and issues one
+  MXU-friendly ``(bb, d) @ (d,)`` contraction;
+* pass 2 ``v = X u``: grid over row tiles, ``(dd, b)`` blocks against the
+  full ``u``.
+
+Both passes keep the VMEM working set to one block + one vector
+(≤ a few hundred KiB for the paper's shapes, see DESIGN.md §7) instead of
+the whole ``X``.  Block sizes are chosen as the largest divisor of the
+dimension ≤ a target (default 128 = MXU lane width) so that arbitrary
+hypothesis-generated shapes run without padding logic; the AOT shapes
+used by the rust runtime are multiples of 8 and get full-width tiles.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so interpret mode is both the correctness path and what the
+AOT pipeline lowers into the HLO artifacts (see /opt/xla-example/README).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile target: one MXU tile edge.  Real TPU lowering would want
+# (128, 128) f32 / (256, 256) bf16 blocks; interpret mode just needs the
+# same structure.  Mutable module global read at call time: the AOT
+# pipeline raises it (STRAGGLER_AOT_BLOCK, default 1024) because
+# interpret-mode grids pay a full-array slice copy per step on CPU —
+# 4.3x on the e2e task shape (EXPERIMENTS.md §Perf) — while the pytest
+# suite keeps 128 so the tiled BlockSpec schedule stays exercised.
+DEFAULT_BLOCK = 128
+
+# interpret=True is mandatory on this image (CPU PJRT backend).  Kept as a
+# module switch so a TPU build only has to flip one constant.
+INTERPRET = True
+
+
+def pick_block(dim: int, target: int | None = None) -> int:
+    """Largest divisor of ``dim`` that is ≤ ``target``.
+
+    ``target=None`` reads the module's ``DEFAULT_BLOCK`` at call time so
+    the AOT pipeline can widen tiles globally.  Guarantees the grid
+    tiles the array exactly, so kernels never read out-of-bounds garbage
+    for ragged shapes (hypothesis feeds primes).
+    """
+    if target is None:
+        target = DEFAULT_BLOCK
+    if dim <= 0:
+        raise ValueError(f"dimension must be positive, got {dim}")
+    best = 1
+    d = 1
+    while d * d <= dim:
+        if dim % d == 0:
+            for c in (d, dim // d):
+                if c <= target and c > best:
+                    best = c
+        d += 1
+    return best
+
+
+def _matvec_t_kernel(x_ref, theta_ref, o_ref):
+    """One column tile of  u = Xᵀ θ:  o[bb] = x[d, bb]ᵀ @ theta[d]."""
+    # Contract over the full d axis held in VMEM; the (bb, d) x (d,)
+    # product maps onto the MXU as a thin matmul.
+    o_ref[...] = x_ref[...].T @ theta_ref[...]
+
+
+def _matvec_kernel(x_ref, u_ref, o_ref):
+    """One row tile of  v = X u:  o[dd] = x[dd, b] @ u[b]."""
+    o_ref[...] = x_ref[...] @ u_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def matvec_t(x: jnp.ndarray, theta: jnp.ndarray, *, block: int | None = None) -> jnp.ndarray:
+    """u = Xᵀ θ via Pallas.  x: (d, b), theta: (d,) → (b,)."""
+    d, b = x.shape
+    bb = pick_block(b) if block is None else block
+    grid = (b // bb,)
+    return pl.pallas_call(
+        _matvec_t_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((d, bb), lambda i: (0, i)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bb,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), x.dtype),
+        interpret=INTERPRET,
+    )(x, theta)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def matvec(x: jnp.ndarray, u: jnp.ndarray, *, block: int | None = None) -> jnp.ndarray:
+    """v = X u via Pallas.  x: (d, b), u: (b,) → (d,)."""
+    d, b = x.shape
+    dd = pick_block(d) if block is None else block
+    grid = (d // dd,)
+    return pl.pallas_call(
+        _matvec_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((dd, b), lambda i: (i, 0)),
+            pl.BlockSpec((b,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((dd,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((d,), x.dtype),
+        interpret=INTERPRET,
+    )(x, u)
+
+
+def gram_matvec(x: jnp.ndarray, theta: jnp.ndarray) -> jnp.ndarray:
+    """h(X) = X (Xᵀ θ)  — paper eq. 50, two tiled passes.
+
+    The intermediate ``u`` stays a device value between the two
+    pallas_calls, so the whole thing lowers into a single HLO module and
+    XLA schedules the two passes back to back with no host round-trip.
+    """
+    return matvec(x, matvec_t(x, theta))

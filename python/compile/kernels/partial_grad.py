@@ -1,0 +1,52 @@
+"""L1 Pallas kernel: fused per-partition gradient  g = X Xᵀ θ − b.
+
+The fused form saves one HBM round-trip of the ``(d,)`` intermediate
+versus composing ``gram_matvec`` with a separate subtraction: the second
+pass consumes ``u = Xᵀ θ`` and the precomputed ``b = X y`` tile in the
+same program and writes the already-subtracted result.
+
+Used by the ``task_grad`` L2 entry point (the uncoded worker task when
+the master wants finished gradient terms rather than raw ``h(X_i)``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .gram_matvec import INTERPRET, matvec_t, pick_block
+
+
+def _fused_grad_kernel(x_ref, u_ref, b_ref, o_ref):
+    """One row tile:  o[dd] = x[dd, b] @ u[b] − b_vec[dd]."""
+    o_ref[...] = x_ref[...] @ u_ref[...] - b_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def matvec_sub(
+    x: jnp.ndarray, u: jnp.ndarray, b_vec: jnp.ndarray, *, block: int | None = None
+) -> jnp.ndarray:
+    """v = X u − b_vec via Pallas.  x: (d, b), u: (b,), b_vec: (d,) → (d,)."""
+    d, b = x.shape
+    dd = pick_block(d) if block is None else block
+    grid = (d // dd,)
+    return pl.pallas_call(
+        _fused_grad_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((dd, b), lambda i: (i, 0)),
+            pl.BlockSpec((b,), lambda i: (0,)),
+            pl.BlockSpec((dd,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((dd,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((d,), x.dtype),
+        interpret=INTERPRET,
+    )(x, u, b_vec)
+
+
+def partial_grad(x: jnp.ndarray, b_vec: jnp.ndarray, theta: jnp.ndarray) -> jnp.ndarray:
+    """g = X Xᵀ θ − b_vec  (paper §VI-A, the summand of eq. 48)."""
+    return matvec_sub(x, matvec_t(x, theta), b_vec)

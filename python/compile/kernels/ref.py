@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness reference).
+
+Every Pallas kernel in this package has an exact, un-tiled counterpart
+here.  pytest (python/tests/test_kernels.py) asserts allclose between the
+kernel (interpret=True) and these functions across a hypothesis sweep of
+shapes and dtypes; the rust integration tests re-check the same numbers
+through the AOT artifacts, so the chain
+
+    ref.py  ==  pallas kernel  ==  HLO artifact  ==  rust runtime output
+
+is closed end to end.
+
+Shape conventions follow the paper (§VI-A): a partition ("mini-batch
+task") is ``X_i ∈ R^{d×b}`` with ``b = N/n`` samples as *columns*, the
+model is ``theta ∈ R^d``, and the per-task computation is the gram
+matrix–vector product
+
+    h(X_i) = X_i X_iᵀ theta            (paper eq. 50)
+
+which every scheme (CS, SS, RA, PC, PCMM) executes per task.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matvec_t(x: jnp.ndarray, theta: jnp.ndarray) -> jnp.ndarray:
+    """u = Xᵀ theta  — first pass of the gram mat-vec.
+
+    x: (d, b), theta: (d,)  →  (b,)
+    """
+    return x.T @ theta
+
+
+def matvec(x: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
+    """v = X u  — second pass of the gram mat-vec.
+
+    x: (d, b), u: (b,)  →  (d,)
+    """
+    return x @ u
+
+
+def gram_matvec(x: jnp.ndarray, theta: jnp.ndarray) -> jnp.ndarray:
+    """h(X) = X Xᵀ theta  (paper eq. 50).  x: (d, b), theta: (d,) → (d,)."""
+    return x @ (x.T @ theta)
+
+
+def partial_grad(x: jnp.ndarray, b_vec: jnp.ndarray, theta: jnp.ndarray) -> jnp.ndarray:
+    """Per-partition gradient term  g_i = X_i X_iᵀ theta − X_i y_i.
+
+    ``b_vec`` is the precomputed ``X_i y_i`` (constant across iterations,
+    paper §VI-A).  x: (d, b), b_vec: (d,), theta: (d,) → (d,).
+    """
+    return gram_matvec(x, theta) - b_vec
+
+
+def xy_vec(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """b_i = X_i y_i.  x: (d, b), y: (b,) → (d,)."""
+    return x @ y
+
+
+def loss(x_parts: jnp.ndarray, y_parts: jnp.ndarray, theta: jnp.ndarray) -> jnp.ndarray:
+    """F(theta) = 1/N ‖Xθ − y‖²  (paper eq. 47).
+
+    x_parts: (n, d, b) stacked partitions, y_parts: (n, b) → scalar.
+    """
+    n, d, b = x_parts.shape
+    preds = jnp.einsum("ndb,d->nb", x_parts, theta)
+    resid = preds - y_parts
+    return jnp.sum(resid * resid) / (n * b)
+
+
+def encode_parts(x_parts: jnp.ndarray, coeffs: jnp.ndarray) -> jnp.ndarray:
+    """Coded-matrix construction for PC/PCMM (paper eqs. 53, 58).
+
+    x_parts: (n, d, b), coeffs: (m, n)  →  (m, d, b) where
+    out[j] = Σ_i coeffs[j, i] · x_parts[i].
+    """
+    return jnp.einsum("mi,idb->mdb", coeffs, x_parts)
+
+
+def master_update(theta: jnp.ndarray, agg: jnp.ndarray, eta_eff: jnp.ndarray) -> jnp.ndarray:
+    """θ_{l+1} = θ_l − η_eff · agg   (paper eqs. 49/61/62 with the
+    scheme-specific scale folded into ``eta_eff``)."""
+    return theta - eta_eff * agg

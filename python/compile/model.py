@@ -1,0 +1,116 @@
+"""L2 JAX model: the distributed linear-regression DGD computation graph.
+
+Paper §VI-A: minimize  F(θ) = 1/N ‖Xθ − y‖²  by distributed gradient
+descent.  The dataset is split into n partitions X_i ∈ R^{d×b} (b = N/n);
+the per-task worker computation is  h(X_i) = X_i X_iᵀ θ  (eq. 50) and the
+master update with computation target k is
+
+    θ_{l+1} = θ_l − η·(2n/(kN)) Σ_{i=1}^{k} (h(X_{p_i}) − X_{p_i} y_{p_i})   (eq. 61)
+
+Every public function here is a *pure* jax function over fixed shapes —
+``aot.py`` lowers each one to an HLO-text artifact that the rust runtime
+(rust/src/runtime/) loads and executes on the request path.  The gram
+mat-vec hot-spot is the L1 Pallas kernel, so it lowers into the same HLO.
+
+Entry points (shapes with d = features, b = samples/partition, n = parts):
+
+    task_gram      (d,b),(d,)            → (d,)     worker task, eq. 50
+    task_grad      (d,b),(d,),(d,)       → (d,)     fused h(X_i) − X_i y_i
+    xy_vec         (d,b),(b,)            → (d,)     setup-time X_i y_i
+    master_update  (d,),(d,),()          → (d,)     eqs. 49/61
+    loss           (n,d,b),(n,b),(d,)    → ()       eq. 47
+    encode_parts   (n,d,b),(m,n)         → (m,d,b)  PC/PCMM coded matrices
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gram_matvec as gm
+from .kernels import partial_grad as pg
+
+
+def task_gram(x: jnp.ndarray, theta: jnp.ndarray) -> tuple[jnp.ndarray]:
+    """Worker task: h(X_i) = X_i X_iᵀ θ (eq. 50), via the L1 kernel."""
+    return (gm.gram_matvec(x, theta),)
+
+
+def task_grad(x: jnp.ndarray, b_vec: jnp.ndarray, theta: jnp.ndarray) -> tuple[jnp.ndarray]:
+    """Worker task, fused gradient form: h(X_i) − X_i y_i."""
+    return (pg.partial_grad(x, b_vec, theta),)
+
+
+def xy_vec(x: jnp.ndarray, y: jnp.ndarray) -> tuple[jnp.ndarray]:
+    """Setup-time constant b_i = X_i y_i (computed once by the master)."""
+    return (x @ y,)
+
+
+def master_update(
+    theta: jnp.ndarray, agg: jnp.ndarray, eta_eff: jnp.ndarray
+) -> tuple[jnp.ndarray]:
+    """θ_{l+1} = θ_l − η_eff · agg.
+
+    ``agg`` is Σ (h(X_{p_i}) − X_{p_i} y_{p_i}) over the k received
+    distinct tasks; ``eta_eff = η·2n/(kN)`` folds the eq.-61 scale (or
+    η·2/N for the coded schemes' eq. 49 — the rust master picks).
+    """
+    return (theta - eta_eff * agg,)
+
+
+def loss(x_parts: jnp.ndarray, y_parts: jnp.ndarray, theta: jnp.ndarray) -> tuple[jnp.ndarray]:
+    """F(θ) = 1/N ‖Xθ − y‖² over stacked partitions (eq. 47)."""
+    n, d, b = x_parts.shape
+    preds = jnp.einsum("ndb,d->nb", x_parts, theta)
+    resid = preds - y_parts
+    return (jnp.sum(resid * resid) / (n * b),)
+
+
+def encode_parts(x_parts: jnp.ndarray, coeffs: jnp.ndarray) -> tuple[jnp.ndarray]:
+    """Coded matrices for PC/PCMM:  out[j] = Σ_i coeffs[j,i]·X_i.
+
+    PC eq. 53 uses structured integer coefficients; PCMM eq. 58 uses
+    Lagrange-basis evaluations.  Both are just this einsum — the rust
+    ``coded`` module supplies the coefficient matrix.
+    """
+    return (jnp.einsum("mi,idb->mdb", coeffs, x_parts),)
+
+
+def grad_autodiff(x_parts: jnp.ndarray, y_parts: jnp.ndarray, theta: jnp.ndarray) -> jnp.ndarray:
+    """Full-dataset ∇F(θ) via jax autodiff — test oracle only (eq. 48).
+
+    Not AOT-exported; used by python/tests/test_model.py to confirm that
+    summing the n task_grad outputs (scaled 2/N) equals the true gradient.
+    """
+    return jax.grad(lambda t: loss(x_parts, y_parts, t)[0])(theta)
+
+
+# ---------------------------------------------------------------------------
+# Entry-point registry used by aot.py.  Each spec maps argument names to
+# shape templates in terms of (d, b, n, m); dtype is f32 throughout (the
+# paper's EC2 experiments are float32 numpy).
+# ---------------------------------------------------------------------------
+
+ENTRY_POINTS = {
+    "task_gram": (task_gram, ("x:d,b", "theta:d")),
+    "task_grad": (task_grad, ("x:d,b", "b_vec:d", "theta:d")),
+    "xy_vec": (xy_vec, ("x:d,b", "y:b")),
+    "master_update": (master_update, ("theta:d", "agg:d", "eta_eff:")),
+    "loss": (loss, ("x_parts:n,d,b", "y_parts:n,b", "theta:d")),
+    "encode_parts": (encode_parts, ("x_parts:n,d,b", "coeffs:m,n")),
+}
+
+
+def shape_of(template: str, dims: dict[str, int]) -> tuple[int, ...]:
+    """Resolve a template like ``"n,d,b"`` against concrete dims."""
+    template = template.split(":", 1)[1] if ":" in template else template
+    if not template:
+        return ()
+    return tuple(dims[axis] for axis in template.split(","))
+
+
+def example_args(names: tuple[str, ...], dims: dict[str, int]) -> list[jax.ShapeDtypeStruct]:
+    """ShapeDtypeStructs for an entry point at concrete dims."""
+    return [
+        jax.ShapeDtypeStruct(shape_of(t, dims), jnp.float32) for t in names
+    ]

@@ -1,0 +1,6 @@
+import jax
+
+# Deterministic CPU-only test environment; the whole AOT path targets the
+# CPU PJRT backend (interpret-mode Pallas), so tests must match.
+jax.config.update("jax_platform_name", "cpu")
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,83 @@
+"""AOT pipeline: HLO-text artifacts + manifest are well-formed."""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    manifest = aot.build(out, ["quickstart"], verbose=False)
+    return out, manifest
+
+
+class TestBuild:
+    def test_all_entries_emitted(self, built):
+        out, manifest = built
+        assert set(manifest["artifacts"]) == {
+            f"quickstart/{e}" for e in model.ENTRY_POINTS
+        }
+
+    def test_files_exist_and_are_hlo_text(self, built):
+        out, manifest = built
+        for meta in manifest["artifacts"].values():
+            path = os.path.join(out, meta["file"])
+            text = open(path).read()
+            assert "HloModule" in text, meta["file"]
+            assert "ENTRY" in text, meta["file"]
+
+    def test_manifest_roundtrips_from_disk(self, built):
+        out, manifest = built
+        on_disk = json.load(open(os.path.join(out, "manifest.json")))
+        assert on_disk == manifest
+        assert on_disk["format"] == "hlo-text/v1"
+
+    def test_arg_shapes_match_profile_dims(self, built):
+        _, manifest = built
+        dims = aot.PROFILES["quickstart"]
+        meta = manifest["artifacts"]["quickstart/task_gram"]
+        assert meta["arg_shapes"] == [[dims["d"], dims["b"]], [dims["d"]]]
+        meta = manifest["artifacts"]["quickstart/master_update"]
+        assert meta["arg_shapes"] == [[dims["d"]], [dims["d"]], []]
+
+    def test_parameter_count_in_hlo(self, built):
+        out, manifest = built
+        meta = manifest["artifacts"]["quickstart/task_grad"]
+        text = open(os.path.join(out, meta["file"])).read()
+        # ENTRY computation must declare 3 parameters
+        entry = text[text.index("ENTRY"):]
+        first_line = entry.splitlines()[0]
+        assert first_line.count("parameter") == 0  # params are in body
+        assert "parameter(2)" in entry
+
+    def test_deterministic_output(self, built):
+        out, manifest = built
+        text1, _ = aot.lower_entry("task_gram", aot.PROFILES["quickstart"])
+        text2, _ = aot.lower_entry("task_gram", aot.PROFILES["quickstart"])
+        assert text1 == text2
+
+
+class TestProfiles:
+    def test_profiles_cover_paper_experiments(self):
+        assert {"fig3", "fig5", "fig7", "e2e", "quickstart"} <= set(aot.PROFILES)
+
+    def test_profile_dims_match_paper(self):
+        # Fig. 3: N=900, d=500, n=3  →  b = 300
+        assert aot.PROFILES["fig3"] == {"d": 500, "b": 300, "n": 3, "m": 6}
+        # Fig. 5: N=900, d=400, n=15  →  b = 60
+        p5 = aot.PROFILES["fig5"]
+        assert p5["d"] == 400 and p5["b"] * p5["n"] == 900
+        # Fig. 7: N=1000, d=800, n=10 →  b = 100
+        p7 = aot.PROFILES["fig7"]
+        assert p7["d"] == 800 and p7["b"] * p7["n"] == 1000
+
+    def test_unknown_profile_rejected(self):
+        with pytest.raises(KeyError):
+            aot.lower_entry("task_gram", aot.PROFILES["nope"])

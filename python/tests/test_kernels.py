@@ -1,0 +1,161 @@
+"""L1 correctness: Pallas kernels (interpret=True) vs pure-jnp oracles.
+
+Hypothesis sweeps the shape/dtype space — including ragged primes that
+force block size 1 — and asserts allclose against ref.py.  This is the
+core correctness signal for the compute hot-spot; the rust integration
+tests re-verify the same numerics through the AOT artifacts.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import gram_matvec as gm
+from compile.kernels import partial_grad as pg
+from compile.kernels import ref
+
+DIMS = st.integers(min_value=1, max_value=97)
+
+
+def rand(shape, dtype=np.float32, seed=0):
+    rng = np.random.default_rng(seed + sum(shape))
+    return rng.standard_normal(shape).astype(dtype)
+
+
+def tol(dtype):
+    # bf16 matmuls accumulate in f32 but round outputs; loosen accordingly.
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# pick_block
+# ---------------------------------------------------------------------------
+
+
+class TestPickBlock:
+    @given(dim=st.integers(1, 4096), target=st.integers(1, 256))
+    @settings(max_examples=200, deadline=None)
+    def test_divides_and_bounded(self, dim, target):
+        b = gm.pick_block(dim, target)
+        assert dim % b == 0
+        assert 1 <= b <= target
+
+    @given(dim=st.integers(1, 1024))
+    @settings(max_examples=100, deadline=None)
+    def test_maximal(self, dim):
+        b = gm.pick_block(dim, 128)
+        # no larger divisor of dim fits under the target
+        for cand in range(b + 1, min(dim, 128) + 1):
+            assert dim % cand != 0
+
+    def test_rejects_nonpositive(self):
+        with pytest.raises(ValueError):
+            gm.pick_block(0)
+
+    def test_explicit_target(self):
+        assert gm.pick_block(512, 1024) == 512
+        assert gm.pick_block(2048, 1024) == 1024
+
+    def test_exact_power_of_two(self):
+        assert gm.pick_block(512) == 128
+        assert gm.pick_block(128) == 128
+        assert gm.pick_block(100) == 100
+        assert gm.pick_block(300) == 100
+        assert gm.pick_block(97) == 97  # prime but under target: whole dim
+        assert gm.pick_block(131) == 1  # prime above target: degenerate tile
+
+
+# ---------------------------------------------------------------------------
+# matvec_t / matvec / gram_matvec vs oracle
+# ---------------------------------------------------------------------------
+
+
+class TestMatvecT:
+    @given(d=DIMS, b=DIMS)
+    @settings(max_examples=40, deadline=None)
+    def test_matches_ref(self, d, b):
+        x, theta = rand((d, b)), rand((d,), seed=1)
+        got = gm.matvec_t(jnp.asarray(x), jnp.asarray(theta))
+        np.testing.assert_allclose(got, ref.matvec_t(x, theta), **tol(jnp.float32))
+
+    def test_explicit_small(self):
+        x = np.array([[1.0, 2.0], [3.0, 4.0]], np.float32)
+        theta = np.array([1.0, -1.0], np.float32)
+        np.testing.assert_allclose(gm.matvec_t(x, theta), [-2.0, -2.0])
+
+    def test_forced_block_one(self):
+        x, theta = rand((13, 7)), rand((13,), seed=2)
+        got = gm.matvec_t(jnp.asarray(x), jnp.asarray(theta), block=1)
+        np.testing.assert_allclose(got, ref.matvec_t(x, theta), **tol(jnp.float32))
+
+
+class TestMatvec:
+    @given(d=DIMS, b=DIMS)
+    @settings(max_examples=40, deadline=None)
+    def test_matches_ref(self, d, b):
+        x, u = rand((d, b)), rand((b,), seed=3)
+        got = gm.matvec(jnp.asarray(x), jnp.asarray(u))
+        np.testing.assert_allclose(got, ref.matvec(x, u), **tol(jnp.float32))
+
+    def test_identity(self):
+        x = np.eye(5, dtype=np.float32)
+        u = rand((5,), seed=4)
+        np.testing.assert_allclose(gm.matvec(x, u), u, rtol=1e-6)
+
+
+class TestGramMatvec:
+    @given(d=DIMS, b=DIMS)
+    @settings(max_examples=40, deadline=None)
+    def test_matches_ref(self, d, b):
+        x, theta = rand((d, b)), rand((d,), seed=5)
+        got = gm.gram_matvec(jnp.asarray(x), jnp.asarray(theta))
+        np.testing.assert_allclose(got, ref.gram_matvec(x, theta), rtol=1e-3, atol=1e-3)
+
+    def test_psd_quadratic_form(self):
+        # θᵀ (X Xᵀ θ) = ‖Xᵀθ‖² ≥ 0 — gram operator is PSD.
+        x, theta = rand((40, 23), seed=6), rand((40,), seed=7)
+        h = np.asarray(gm.gram_matvec(jnp.asarray(x), jnp.asarray(theta)))
+        assert float(theta @ h) >= -1e-4
+
+    def test_paper_shapes(self):
+        # Fig. 7 profile: d=800, b=100 — the largest AOT shape.
+        x, theta = rand((800, 100), seed=8), rand((800,), seed=9)
+        got = gm.gram_matvec(jnp.asarray(x), jnp.asarray(theta))
+        np.testing.assert_allclose(got, ref.gram_matvec(x, theta), rtol=5e-3, atol=5e-3)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        x = jnp.asarray(rand((32, 16), seed=10), dtype=dtype)
+        theta = jnp.asarray(rand((32,), seed=11), dtype=dtype)
+        got = gm.gram_matvec(x, theta)
+        assert got.dtype == dtype
+        want = ref.gram_matvec(x.astype(jnp.float32), theta.astype(jnp.float32))
+        np.testing.assert_allclose(got.astype(jnp.float32), want, **tol(dtype))
+
+
+class TestPartialGrad:
+    @given(d=DIMS, b=DIMS)
+    @settings(max_examples=40, deadline=None)
+    def test_matches_ref(self, d, b):
+        x, bv, theta = rand((d, b)), rand((d,), seed=12), rand((d,), seed=13)
+        got = pg.partial_grad(jnp.asarray(x), jnp.asarray(bv), jnp.asarray(theta))
+        np.testing.assert_allclose(got, ref.partial_grad(x, bv, theta), rtol=1e-3, atol=1e-3)
+
+    def test_zero_b_equals_gram(self):
+        x, theta = rand((24, 9), seed=14), rand((24,), seed=15)
+        g = pg.partial_grad(jnp.asarray(x), jnp.zeros(24, jnp.float32), jnp.asarray(theta))
+        h = gm.gram_matvec(jnp.asarray(x), jnp.asarray(theta))
+        np.testing.assert_allclose(g, h, rtol=1e-5, atol=1e-5)
+
+    def test_at_optimum_gradient_vanishes(self):
+        # If y = Xᵀθ* exactly, then b = X y = X Xᵀ θ* and g(θ*) = 0.
+        x = rand((16, 12), seed=16)
+        theta_star = rand((16,), seed=17)
+        y = x.T @ theta_star
+        bv = x @ y
+        g = pg.partial_grad(jnp.asarray(x), jnp.asarray(bv), jnp.asarray(theta_star))
+        np.testing.assert_allclose(g, np.zeros(16), atol=1e-3)

@@ -1,0 +1,31 @@
+//! Figure 4 regeneration bench: t̄ vs computation load r under the
+//! paper's truncated-Gaussian scenarios (n = 16, k = n).  Prints the
+//! figure's series and times the full sweep.
+//!
+//! ```bash
+//! cargo bench --bench fig4_completion_vs_load
+//! ```
+
+use std::time::Instant;
+
+use straggler_sched::harness::{fig4, Options};
+
+fn main() -> anyhow::Result<()> {
+    for scenario in [1u8, 2] {
+        let opts = Options {
+            trials: 20_000,
+            seed: 0xF16,
+            out_dir: Some("results".into()),
+            scenario,
+            cluster: false,
+        };
+        let t0 = Instant::now();
+        fig4(&opts)?;
+        println!(
+            "fig4 scenario {scenario}: regenerated in {:.2} s ({} trials/point, 15 points)\n",
+            t0.elapsed().as_secs_f64(),
+            opts.trials
+        );
+    }
+    Ok(())
+}

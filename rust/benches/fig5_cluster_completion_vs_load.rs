@@ -1,0 +1,28 @@
+//! Figure 5 regeneration bench: t̄ vs r on the EC2-like substrate
+//! (n = 15, d = 400, N = 900, k = n), plus wall-clock for the sweep.
+//!
+//! ```bash
+//! cargo bench --bench fig5_cluster_completion_vs_load
+//! ```
+
+use std::time::Instant;
+
+use straggler_sched::harness::{fig5, Options};
+
+fn main() -> anyhow::Result<()> {
+    let opts = Options {
+        trials: 20_000,
+        seed: 0xF16,
+        out_dir: Some("results".into()),
+        scenario: 1,
+        cluster: false,
+    };
+    let t0 = Instant::now();
+    fig5(&opts)?;
+    println!(
+        "fig5: regenerated in {:.2} s ({} trials/point, 14 points)",
+        t0.elapsed().as_secs_f64(),
+        opts.trials
+    );
+    Ok(())
+}

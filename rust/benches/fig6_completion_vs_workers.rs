@@ -1,0 +1,28 @@
+//! Figure 6 regeneration bench: t̄ vs number of workers n ∈ [10, 15]
+//! at r = n, k = n (d = 500, N = 1000).
+//!
+//! ```bash
+//! cargo bench --bench fig6_completion_vs_workers
+//! ```
+
+use std::time::Instant;
+
+use straggler_sched::harness::{fig6, Options};
+
+fn main() -> anyhow::Result<()> {
+    let opts = Options {
+        trials: 20_000,
+        seed: 0xF16,
+        out_dir: Some("results".into()),
+        scenario: 1,
+        cluster: false,
+    };
+    let t0 = Instant::now();
+    fig6(&opts)?;
+    println!(
+        "fig6: regenerated in {:.2} s ({} trials/point, 6 points)",
+        t0.elapsed().as_secs_f64(),
+        opts.trials
+    );
+    Ok(())
+}

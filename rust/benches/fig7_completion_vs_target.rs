@@ -1,0 +1,28 @@
+//! Figure 7 regeneration bench: t̄ vs computation target k ∈ [2, n]
+//! for the uncoded schemes + LB (n = 10, r = n, d = 800, N = 1000).
+//!
+//! ```bash
+//! cargo bench --bench fig7_completion_vs_target
+//! ```
+
+use std::time::Instant;
+
+use straggler_sched::harness::{fig7, Options};
+
+fn main() -> anyhow::Result<()> {
+    let opts = Options {
+        trials: 20_000,
+        seed: 0xF16,
+        out_dir: Some("results".into()),
+        scenario: 1,
+        cluster: false,
+    };
+    let t0 = Instant::now();
+    fig7(&opts)?;
+    println!(
+        "fig7: regenerated in {:.2} s ({} trials/point, 9 points)",
+        t0.elapsed().as_secs_f64(),
+        opts.trials
+    );
+    Ok(())
+}

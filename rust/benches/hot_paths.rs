@@ -1,0 +1,150 @@
+//! Hot-path micro-benchmarks — the §Perf measurement surface of
+//! EXPERIMENTS.md.  Every optimization iteration re-runs this target
+//! and diffs the report lines.
+//!
+//! ```bash
+//! cargo bench --bench hot_paths
+//! ```
+
+use std::hint::black_box;
+
+use straggler_sched::analysis::{collect_task_times, theorem1_mean};
+use straggler_sched::coded::{PcScheme, PcmmScheme};
+use straggler_sched::coordinator::Msg;
+use straggler_sched::delay::{DelayModel, DelaySample, TruncatedGaussianModel};
+use straggler_sched::lb::kth_slot_arrival;
+use straggler_sched::linalg::Mat;
+use straggler_sched::scheduler::{CyclicScheduler, RandomAssignment, Scheduler, StaircaseScheduler};
+use straggler_sched::sim::{completion_time_fast, simulate_round_with, SimScratch};
+use straggler_sched::util::benchkit::{bench, group};
+use straggler_sched::util::rng::Rng;
+
+fn main() {
+    let (n, r) = (16usize, 16usize);
+    let model = TruncatedGaussianModel::scenario1(n);
+    let mut rng = Rng::seed_from_u64(42);
+    let to_cs = CyclicScheduler.schedule(n, r, &mut rng);
+    let to_ss = StaircaseScheduler.schedule(n, r, &mut rng);
+
+    group("delay sampling");
+    {
+        let mut sample = DelaySample::zeros(n, r);
+        let mut rng = Rng::seed_from_u64(1);
+        bench("truncated_gaussian/sample_round_16x16", || {
+            model.sample_into(black_box(&mut sample), &mut rng);
+        });
+    }
+
+    group("simulation round (paper eq. 1-2 + k-distinct stop)");
+    {
+        let mut sample = DelaySample::zeros(n, r);
+        let mut rng = Rng::seed_from_u64(2);
+        model.sample_into(&mut sample, &mut rng);
+        let mut scratch = SimScratch::new();
+        bench("simulate_round/cs_n16_r16_k16", || {
+            black_box(simulate_round_with(&to_cs, &sample, 16, &mut scratch));
+        });
+        bench("simulate_round/ss_n16_r16_k8", || {
+            black_box(simulate_round_with(&to_ss, &sample, 8, &mut scratch));
+        });
+        let mut fast_scratch: Vec<f64> = Vec::with_capacity(n);
+        bench("simulate_round/fast_cs_n16_r16_k16", || {
+            black_box(completion_time_fast(&to_cs, &sample, 16, &mut fast_scratch));
+        });
+        let mut lbs = Vec::with_capacity(n * r);
+        bench("lower_bound/kth_slot_arrival_k16", || {
+            black_box(kth_slot_arrival(&sample, 16, &mut lbs));
+        });
+        let pc = PcScheme::new(n, r);
+        let pcmm = PcmmScheme::new(n, r);
+        bench("coded/pc_completion", || {
+            black_box(pc.completion_time(&sample, &mut lbs));
+        });
+        bench("coded/pcmm_completion", || {
+            black_box(pcmm.completion_time(&sample, &mut lbs));
+        });
+    }
+
+    group("full monte-carlo round (sample + all schemes) — figure inner loop");
+    {
+        let mut sample = DelaySample::zeros(n, r);
+        let mut rng = Rng::seed_from_u64(3);
+        let mut fast_scratch: Vec<f64> = Vec::with_capacity(n);
+        let mut lbs = Vec::with_capacity(n * r);
+        let pc = PcScheme::new(n, r);
+        let pcmm = PcmmScheme::new(n, r);
+        bench("figure_inner_loop/n16_r16_all_schemes", || {
+            model.sample_into(&mut sample, &mut rng);
+            black_box(completion_time_fast(&to_cs, &sample, 16, &mut fast_scratch));
+            black_box(completion_time_fast(&to_ss, &sample, 16, &mut fast_scratch));
+            black_box(pc.completion_time(&sample, &mut lbs));
+            black_box(pcmm.completion_time(&sample, &mut lbs));
+            black_box(kth_slot_arrival(&sample, 16, &mut lbs));
+        });
+    }
+
+    group("schedulers");
+    {
+        let mut rng = Rng::seed_from_u64(4);
+        bench("schedule/cs_n16_r16", || {
+            black_box(CyclicScheduler.schedule(16, 16, &mut rng));
+        });
+        bench("schedule/ra_n16_r16", || {
+            black_box(RandomAssignment.schedule(16, 16, &mut rng));
+        });
+    }
+
+    group("analysis (theorem 1, n = 12)");
+    {
+        let model12 = TruncatedGaussianModel::scenario1(12);
+        let samples = collect_task_times(&CyclicScheduler, &model12, 12, 4, 200, 5);
+        bench("theorem1_mean/n12_200rounds", || {
+            black_box(theorem1_mean(&samples, 9));
+        });
+    }
+
+    group("protocol codec");
+    {
+        let msg = Msg::Result {
+            round: 7,
+            worker_id: 3,
+            task: 11,
+            comp_us: 1500,
+            send_ts_us: 123_456,
+            h: vec![1.25f32; 512],
+        };
+        bench("protocol/encode_result_d512", || {
+            black_box(msg.encode());
+        });
+        let enc = msg.encode();
+        bench("protocol/decode_result_d512", || {
+            black_box(Msg::decode(&enc).unwrap());
+        });
+    }
+
+    group("linalg oracle (d = 400, b = 60 — fig5 task shape)");
+    {
+        let mut rng = Rng::seed_from_u64(6);
+        let x = Mat::from_fn(400, 60, |_, _| rng.normal());
+        let theta: Vec<f64> = (0..400).map(|_| rng.normal()).collect();
+        bench("linalg/gram_matvec_400x60", || {
+            black_box(x.gram_matvec(black_box(&theta)));
+        });
+    }
+
+    group("pjrt runtime (quickstart artifact, d = 64, b = 32)");
+    {
+        let dir = straggler_sched::runtime::default_artifact_dir();
+        if dir.join("manifest.json").exists() {
+            let mut rt = straggler_sched::runtime::Runtime::new(dir).expect("runtime");
+            let x: Vec<f32> = (0..64 * 32).map(|i| (i % 13) as f32 / 7.0).collect();
+            let theta: Vec<f32> = (0..64).map(|i| (i % 7) as f32 / 5.0).collect();
+            rt.prepare("quickstart", "task_gram").unwrap();
+            bench("runtime/task_gram_execute_64x32", || {
+                black_box(rt.task_gram("quickstart", &x, &theta).unwrap());
+            });
+        } else {
+            println!("runtime/task_gram_execute_64x32  SKIPPED (run `make artifacts`)");
+        }
+    }
+}

@@ -1,0 +1,147 @@
+//! Closed-form ground truth for the `r = 1` shifted-exponential case.
+//!
+//! With `r = 1` and the CS/SS schedules, worker `j` computes task `j`
+//! only, so the per-task arrival times `t_j = T⁽¹⁾ + T⁽²⁾` are i.i.d.
+//! hypoexponential sums (plus deterministic shifts) and the completion
+//! time is the k-th order statistic of n i.i.d. variables:
+//!
+//! ```text
+//! Pr{t_(k) > t} = Σ_{j=0}^{k−1} C(n,j) F(t)ʲ S(t)^{n−j}
+//! ```
+//!
+//! The mean is integrated with adaptive Simpson.  This path provides
+//! *true analytic numbers* (independent of the simulator's code) that
+//! the test suite compares against Monte-Carlo output — closing the
+//! loop that Theorem-1 internal consistency alone cannot.
+
+use crate::delay::exponential::ShiftedExp;
+use crate::util::combin::binomial_f64;
+use crate::util::math::adaptive_simpson;
+
+/// Survival function of `X + Y` where `X = s₁ + Exp(λ₁)`,
+/// `Y = s₂ + Exp(λ₂)` (hypoexponential with a deterministic shift).
+pub fn sum_survival(comp: ShiftedExp, comm: ShiftedExp, t: f64) -> f64 {
+    let shift = comp.shift + comm.shift;
+    if t <= shift {
+        return 1.0;
+    }
+    let u = t - shift;
+    let (l1, l2) = (comp.rate, comm.rate);
+    if (l1 - l2).abs() < 1e-9 * l1.max(l2) {
+        // Erlang-2 limit
+        let l = 0.5 * (l1 + l2);
+        (1.0 + l * u) * (-l * u).exp()
+    } else {
+        (l2 * (-l1 * u).exp() - l1 * (-l2 * u).exp()) / (l2 - l1)
+    }
+}
+
+/// Survival of the k-th order statistic of `n` i.i.d. variables with
+/// elementwise survival `s`.
+pub fn order_stat_survival(n: usize, k: usize, s: f64) -> f64 {
+    debug_assert!((0.0..=1.0 + 1e-12).contains(&s));
+    let f = 1.0 - s;
+    let mut total = 0.0;
+    for j in 0..k {
+        total += binomial_f64(n as u64, j as u64) * f.powi(j as i32) * s.powi((n - j) as i32);
+    }
+    total.clamp(0.0, 1.0)
+}
+
+/// Exact `t̄(r=1, k)` for i.i.d. shifted-exponential comp/comm delays.
+pub fn mean_completion_r1_exp(n: usize, k: usize, comp: ShiftedExp, comm: ShiftedExp) -> f64 {
+    assert!(k >= 1 && k <= n);
+    let shift = comp.shift + comm.shift;
+    // upper integration limit: far into the exponential tail
+    let tail = 60.0 / comp.rate.min(comm.rate);
+    let sf = |t: f64| order_stat_survival(n, k, sum_survival(comp, comm, t));
+    shift + adaptive_simpson(&sf, shift, shift + tail, 1e-10)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::delay::ShiftedExponential;
+    use crate::scheduler::CyclicScheduler;
+    use crate::sim::MonteCarlo;
+
+    #[test]
+    fn sum_survival_is_valid_tail() {
+        let c1 = ShiftedExp::new(0.1, 2.0);
+        let c2 = ShiftedExp::new(0.2, 5.0);
+        assert_eq!(sum_survival(c1, c2, 0.0), 1.0);
+        assert_eq!(sum_survival(c1, c2, 0.3), 1.0);
+        let mut last = 1.0;
+        for i in 1..200 {
+            let t = 0.3 + i as f64 * 0.05;
+            let s = sum_survival(c1, c2, t);
+            assert!(s <= last + 1e-12, "survival must be non-increasing");
+            assert!((0.0..=1.0).contains(&s));
+            last = s;
+        }
+        assert!(last < 1e-6);
+    }
+
+    #[test]
+    fn sum_survival_equal_rates_is_erlang() {
+        let c = ShiftedExp::new(0.0, 3.0);
+        // Erlang-2: S(t) = (1 + λt)e^{−λt}
+        let t = 0.7;
+        let want = (1.0 + 3.0 * t) * (-3.0 * t as f64).exp();
+        assert!((sum_survival(c, c, t) - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sum_mean_from_survival_integral() {
+        // E[X+Y] = shifts + 1/λ₁ + 1/λ₂ must equal ∫ S dt
+        let c1 = ShiftedExp::new(0.1, 2.0);
+        let c2 = ShiftedExp::new(0.05, 4.0);
+        let integral = adaptive_simpson(&|t| sum_survival(c1, c2, t), 0.0, 40.0, 1e-11);
+        let want = 0.15 + 0.5 + 0.25;
+        assert!((integral - want).abs() < 1e-7, "{integral} vs {want}");
+    }
+
+    #[test]
+    fn order_stat_survival_boundaries() {
+        // k = 1: survival of the minimum = sⁿ
+        assert!((order_stat_survival(5, 1, 0.8) - 0.8f64.powi(5)).abs() < 1e-12);
+        // k = n: survival of the maximum = 1 − (1−s)ⁿ
+        assert!((order_stat_survival(5, 5, 0.8) - (1.0 - 0.2f64.powi(5))).abs() < 1e-12);
+        // degenerate s
+        assert_eq!(order_stat_survival(4, 2, 1.0), 1.0);
+        assert_eq!(order_stat_survival(4, 2, 0.0), 0.0);
+    }
+
+    #[test]
+    fn analytic_matches_monte_carlo() {
+        // the headline cross-check: true analytic t̄ vs the simulator
+        let comp = ShiftedExp::new(0.1, 5.0);
+        let comm = ShiftedExp::new(0.3, 2.0);
+        let model = ShiftedExponential { comp, comm };
+        let mc = MonteCarlo::new(150_000, 99);
+        for (n, k) in [(4, 1), (4, 3), (8, 8), (10, 6)] {
+            let exact = mean_completion_r1_exp(n, k, comp, comm);
+            let est = mc.estimate(&CyclicScheduler, &model, n, 1, k);
+            assert!(
+                (exact - est.mean).abs() < 5.0 * est.std_err + 1e-4,
+                "n={n} k={k}: exact {exact} vs MC {} ± {}",
+                est.mean,
+                est.std_err
+            );
+        }
+    }
+
+    #[test]
+    fn mean_increasing_in_k_decreasing_in_n() {
+        let comp = ShiftedExp::new(0.1, 5.0);
+        let comm = ShiftedExp::new(0.3, 2.0);
+        let m1 = mean_completion_r1_exp(8, 2, comp, comm);
+        let m2 = mean_completion_r1_exp(8, 5, comp, comm);
+        let m3 = mean_completion_r1_exp(8, 8, comp, comm);
+        assert!(m1 < m2 && m2 < m3);
+        // fixed k, more workers → k-th order stat shrinks
+        let w8 = mean_completion_r1_exp(8, 4, comp, comm);
+        let w12 = mean_completion_r1_exp(12, 4, comp, comm);
+        assert!(w12 < w8);
+    }
+}

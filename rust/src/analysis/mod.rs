@@ -1,0 +1,255 @@
+//! Analytic completion-time evaluation — Theorem 1 (paper §III).
+//!
+//! Theorem 1 expresses the completion-time tail for *any* TO matrix via
+//! inclusion–exclusion over task subsets:
+//!
+//! ```text
+//! Pr{t_C(r,k) > t} = Σ_{i=n−k+1}^{n} (−1)^{n−k+i+1} C(i−1, n−k)
+//!                      Σ_{|S|=i} Pr{ t_j > t  ∀ j ∈ S }          (7)
+//! ```
+//!
+//! Integrating (8) and using `∫₀^∞ Pr{min_{j∈S} t_j > t} dt =
+//! E[min_{j∈S} t_j]` turns the average completion time into a signed sum
+//! of **expected subset minima** of the per-task arrival times `t_j`:
+//!
+//! ```text
+//! t̄_C(r,k) = Σ_i (−1)^{n−k+i+1} C(i−1, n−k) Σ_{|S|=i} E[ min_{j∈S} t_j ]
+//! ```
+//!
+//! [`theorem1_mean`] evaluates that sum *exactly under the empirical
+//! measure* of a set of Monte-Carlo draws of `(t_1, …, t_n)`.  Because
+//! Theorem 1 holds for any distribution — including the empirical one —
+//! the result must agree with the direct estimator
+//! [`empirical_mean`] up to floating-point error, for every TO matrix
+//! and delay model.  This is the strongest possible cross-validation of
+//! the simulator and is enforced by tests and proptests.
+//!
+//! [`exact`] additionally provides closed-form survival functions for
+//! the `r = 1` shifted-exponential case (hypoexponential sums), so the
+//! whole pipeline is checked against *true* analytic numbers, not just
+//! internal consistency.
+
+pub mod exact;
+
+use crate::util::combin::binomial_f64;
+use crate::util::rng::Rng;
+
+/// Per-round first-arrival times `t_j` for each task (rows = rounds).
+pub struct TaskTimeSamples {
+    pub n: usize,
+    /// flattened rounds × n
+    times: Vec<f64>,
+}
+
+impl TaskTimeSamples {
+    pub fn new(n: usize) -> Self {
+        Self {
+            n,
+            times: Vec::new(),
+        }
+    }
+
+    pub fn push_round(&mut self, t: &[f64]) {
+        assert_eq!(t.len(), self.n);
+        self.times.extend_from_slice(t);
+    }
+
+    pub fn rounds(&self) -> usize {
+        self.times.len() / self.n
+    }
+
+    pub fn round(&self, idx: usize) -> &[f64] {
+        &self.times[idx * self.n..(idx + 1) * self.n]
+    }
+}
+
+/// The Theorem-1 sign/coefficient `(−1)^{n−k+i+1} C(i−1, n−k)` for the
+/// size-`i` subset layer (from eq. 16).
+pub fn theorem1_coefficient(n: usize, k: usize, i: usize) -> f64 {
+    debug_assert!(i >= n - k + 1 && i <= n);
+    let sign = if (n - k + i + 1) % 2 == 0 { 1.0 } else { -1.0 };
+    sign * binomial_f64((i - 1) as u64, (n - k) as u64)
+}
+
+/// Evaluate Theorem 1 under the empirical measure of `samples`:
+/// `t̄_C(r,k)` as the signed sum of expected subset minima.
+///
+/// Complexity `O(rounds · 2ⁿ)` using an in-place subset-minimum DP over
+/// bitmasks (each mask extends a smaller mask by its lowest set bit), so
+/// practical for `n ≤ 20`; the engine asserts `n ≤ 24` to keep memory
+/// bounded.
+pub fn theorem1_mean(samples: &TaskTimeSamples, k: usize) -> f64 {
+    let n = samples.n;
+    assert!(n <= 24, "Theorem-1 evaluator is exponential in n; n ≤ 24");
+    assert!(k >= 1 && k <= n);
+    let rounds = samples.rounds();
+    assert!(rounds > 0, "no samples");
+
+    let full = 1usize << n;
+    // accumulate E[min over S] per mask
+    let mut acc = vec![0.0f64; full];
+    let mut min_s = vec![0.0f64; full];
+    for round in 0..rounds {
+        let t = samples.round(round);
+        // DP: min over mask = min(t[lowest bit], min over rest)
+        for mask in 1..full {
+            let low = mask.trailing_zeros() as usize;
+            let rest = mask & (mask - 1);
+            let m = if rest == 0 {
+                t[low]
+            } else {
+                t[low].min(min_s[rest])
+            };
+            min_s[mask] = m;
+        }
+        for mask in 1..full {
+            acc[mask] += min_s[mask];
+        }
+    }
+    let inv_rounds = 1.0 / rounds as f64;
+
+    // signed layer sums
+    let mut total = 0.0;
+    for mask in 1..full {
+        let i = mask.count_ones() as usize;
+        if i >= n - k + 1 {
+            total += theorem1_coefficient(n, k, i) * acc[mask] * inv_rounds;
+        }
+    }
+    total
+}
+
+/// Direct estimator: mean of the k-th smallest *distinct-task* arrival
+/// time per round — i.e. the k-th order statistic of `(t_1, …, t_n)`
+/// (the completion time, since `t_j` are per-task first arrivals).
+pub fn empirical_mean(samples: &TaskTimeSamples, k: usize) -> f64 {
+    let n = samples.n;
+    assert!(k >= 1 && k <= n);
+    let rounds = samples.rounds();
+    let mut scratch = vec![0.0f64; n];
+    let mut sum = 0.0;
+    for round in 0..rounds {
+        scratch.copy_from_slice(samples.round(round));
+        scratch.sort_unstable_by(f64::total_cmp);
+        sum += scratch[k - 1];
+    }
+    sum / rounds as f64
+}
+
+/// Collect per-task arrival-time samples for a (scheduler, model) pair.
+pub fn collect_task_times(
+    scheduler: &dyn crate::scheduler::Scheduler,
+    model: &dyn crate::delay::DelayModel,
+    n: usize,
+    r: usize,
+    rounds: usize,
+    seed: u64,
+) -> TaskTimeSamples {
+    
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut rng_sched = Rng::seed_from_u64(seed ^ 0x5C4ED);
+    let mut out = TaskTimeSamples::new(n);
+    let mut sample = crate::delay::DelaySample::zeros(n, r);
+    let fixed = if scheduler.is_randomized() {
+        None
+    } else {
+        Some(scheduler.schedule(n, r, &mut rng_sched))
+    };
+    for _ in 0..rounds {
+        model.sample_into(&mut sample, &mut rng);
+        let to = match &fixed {
+            Some(to) => to.clone(),
+            None => scheduler.schedule(n, r, &mut rng_sched),
+        };
+        let t = crate::sim::task_arrival_times(&to, &sample);
+        out.push_round(&t);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::delay::{ShiftedExponential, TruncatedGaussianModel};
+    use crate::scheduler::{CyclicScheduler, RandomAssignment, StaircaseScheduler};
+
+    #[test]
+    fn coefficient_matches_eq_16() {
+        // n = 4, k = 3 → n−k = 1; layers i = 2, 3, 4
+        // i=2: (−1)^{1+2+1} C(1,1) = +1 ; i=3: (−1)^{1+3+1} C(2,1) = −2
+        // i=4: (−1)^{1+4+1} C(3,1) = +3
+        assert_eq!(theorem1_coefficient(4, 3, 2), 1.0);
+        assert_eq!(theorem1_coefficient(4, 3, 3), -2.0);
+        assert_eq!(theorem1_coefficient(4, 3, 4), 3.0);
+        // k = n → alternating ±1·C(i−1, 0)
+        assert_eq!(theorem1_coefficient(5, 5, 1), 1.0);
+        assert_eq!(theorem1_coefficient(5, 5, 2), -1.0);
+        assert_eq!(theorem1_coefficient(5, 5, 5), 1.0);
+    }
+
+    #[test]
+    fn max_min_identity_for_k_equals_n() {
+        // for k = n Theorem 1 reduces to the classic
+        // E[max] = Σ (−1)^{|S|+1} E[min over S] identity
+        let mut s = TaskTimeSamples::new(3);
+        s.push_round(&[1.0, 2.0, 5.0]);
+        s.push_round(&[4.0, 1.0, 3.0]);
+        let got = theorem1_mean(&s, 3);
+        let want = (5.0 + 4.0) / 2.0;
+        assert!((got - want).abs() < 1e-12, "{got} vs {want}");
+    }
+
+    #[test]
+    fn theorem1_equals_order_statistic_on_fixed_samples() {
+        // the identity holds under the empirical measure for every k
+        let mut s = TaskTimeSamples::new(5);
+        s.push_round(&[0.3, 1.2, 0.7, 2.0, 0.9]);
+        s.push_round(&[1.1, 0.2, 3.0, 0.4, 0.8]);
+        s.push_round(&[2.2, 2.1, 0.1, 0.6, 1.4]);
+        for k in 1..=5 {
+            let t1 = theorem1_mean(&s, k);
+            let emp = empirical_mean(&s, k);
+            assert!(
+                (t1 - emp).abs() < 1e-9,
+                "k={k}: theorem1 {t1} vs empirical {emp}"
+            );
+        }
+    }
+
+    #[test]
+    fn theorem1_validates_simulator_cs() {
+        let model = TruncatedGaussianModel::scenario1(6);
+        let samples = collect_task_times(&CyclicScheduler, &model, 6, 3, 400, 21);
+        for k in [1, 3, 6] {
+            let t1 = theorem1_mean(&samples, k);
+            let emp = empirical_mean(&samples, k);
+            assert!(
+                (t1 - emp).abs() < 1e-8,
+                "k={k}: {t1} vs {emp}"
+            );
+        }
+    }
+
+    #[test]
+    fn theorem1_validates_simulator_ss_and_ra() {
+        let model = ShiftedExponential::new(0.05, 4.0, 0.2, 2.0);
+        for sched in [
+            &StaircaseScheduler as &dyn crate::scheduler::Scheduler,
+            &RandomAssignment,
+        ] {
+            let samples = collect_task_times(sched, &model, 5, 5, 300, 33);
+            for k in 2..=5 {
+                let t1 = theorem1_mean(&samples, k);
+                let emp = empirical_mean(&samples, k);
+                assert!((t1 - emp).abs() < 1e-8, "{} k={k}", sched.name());
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "exponential in n")]
+    fn refuses_large_n() {
+        let s = TaskTimeSamples::new(30);
+        theorem1_mean(&s, 2);
+    }
+}

@@ -1,0 +1,23 @@
+//! Coded-computation baselines (paper §VI-B): **PC** — polynomially
+//! coded regression [13] — and **PCMM** — polynomially coded
+//! multi-message [17].
+//!
+//! Unlike most reproductions, these are *real* implementations, not just
+//! timing formulas: [`poly`] provides the vector Newton interpolation
+//! the master actually runs, [`pc`]/[`pcmm`] build the true encoding
+//! coefficient matrices (eqs. 53, 58), and tests verify that encoding →
+//! per-worker gram computation → interpolation → reconstruction
+//! reproduces `XᵀXθ` exactly.  The timing side (completion criteria of
+//! Table I) consumes the same [`crate::delay::DelaySample`]s as the
+//! uncoded engine, so comparisons are coupled sample-by-sample.
+//!
+//! Per the paper, the master-side encode/decode *delay* is excluded from
+//! the completion-time metric (it would only worsen the coded schemes);
+//! the harness measures it separately and reports it alongside.
+
+pub mod pc;
+pub mod pcmm;
+pub mod poly;
+
+pub use pc::PcScheme;
+pub use pcmm::PcmmScheme;

@@ -1,0 +1,264 @@
+//! Polynomially coded (PC) regression — Li et al. [13], paper §VI-B.
+//!
+//! Construction (generalizing Example 4): split the `n` tasks into
+//! `c = ⌈n/r⌉` *positions* with stride `r`: position `u` holds tasks
+//! `{u·r, …, u·r + r − 1}` … equivalently, worker `i`'s `j`-th coded
+//! matrix mixes the tasks `{j, j + r, j + 2r, …}` (the `j`-th member of
+//! every group) with Lagrange-basis weights evaluated at `x = i`:
+//!
+//! ```text
+//! X̃_{i,j} = Σ_{u=0}^{c−1} ℓ_u(x_i) · X_{j + u·r}
+//! ```
+//!
+//! Worker `i` computes `Σ_j X̃_{i,j} X̃_{i,j}ᵀ θ = φ(x_i)` — a single
+//! degree-`2(c−1)` vector polynomial — and sends the **sum** in one
+//! message.  The master interpolates `φ` from any `2c − 1` workers and
+//! reconstructs `XᵀXθ = Σ_u φ(node_u)`.
+//!
+//! Timing (Table I): one message per worker, computation delay = sum of
+//! `r` per-task delays ⇒ completion = `(2⌈n/r⌉ − 1)`-th order statistic
+//! of `t_i = Σ_j T⁽¹⁾_{i,j} + T⁽²⁾_i` (eqs. 51–52).
+
+use crate::delay::DelaySample;
+use crate::linalg::{vec_axpy, Mat};
+
+use super::poly::{lagrange_basis, NewtonPoly};
+
+/// The PC scheme for `n` tasks/workers at computation load `r ≥ 2`.
+#[derive(Debug, Clone)]
+pub struct PcScheme {
+    pub n: usize,
+    pub r: usize,
+    /// number of groups `c = ⌈n/r⌉`; polynomial degree is `2(c−1)`
+    pub groups: usize,
+    /// interpolation nodes (one per group position)
+    nodes: Vec<f64>,
+    /// evaluation point of worker `i`
+    points: Vec<f64>,
+}
+
+impl PcScheme {
+    pub fn new(n: usize, r: usize) -> Self {
+        assert!(r >= 2, "PC requires computation load r ≥ 2 (paper Table I)");
+        assert!(r <= n, "load cannot exceed task count");
+        let groups = n.div_ceil(r);
+        // nodes 1..c and worker points 1..n, as in the paper's examples
+        let nodes = (1..=groups).map(|u| u as f64).collect();
+        let points = (1..=n).map(|i| i as f64).collect();
+        Self {
+            n,
+            r,
+            groups,
+            nodes,
+            points,
+        }
+    }
+
+    /// Workers the master must hear from (paper: `2⌈n/r⌉ − 1`).
+    pub fn recovery_threshold(&self) -> usize {
+        2 * self.groups - 1
+    }
+
+    /// Encoding coefficients of worker `i`: `r × n` matrix `A` with
+    /// `X̃_{i,j} = Σ_m A[j][m] X_m`.
+    pub fn encode_coeffs(&self, worker: usize) -> Vec<Vec<f64>> {
+        assert!(worker < self.n);
+        let x = self.points[worker];
+        let mut rows = vec![vec![0.0; self.n]; self.r];
+        for (j, row) in rows.iter_mut().enumerate() {
+            for u in 0..self.groups {
+                let task = j + u * self.r;
+                if task < self.n {
+                    row[task] = lagrange_basis(&self.nodes, u, x);
+                }
+            }
+        }
+        rows
+    }
+
+    /// Worker `i`'s full computation on real data: encode its `r`
+    /// matrices, gram-matvec each against `theta`, sum (one message).
+    pub fn worker_compute(&self, worker: usize, parts: &[Mat], theta: &[f64]) -> Vec<f64> {
+        assert_eq!(parts.len(), self.n, "need all n partitions to encode");
+        let coeffs = self.encode_coeffs(worker);
+        let d = parts[0].rows;
+        let mut total = vec![0.0; d];
+        for row in &coeffs {
+            let coded = Mat::linear_combination(row, parts);
+            vec_axpy(&mut total, 1.0, &coded.gram_matvec(theta));
+        }
+        total
+    }
+
+    /// Master decode: from `(worker, value)` pairs (≥ threshold),
+    /// interpolate `φ` and reconstruct `XᵀXθ = Σ_u φ(node_u)`.
+    pub fn decode(&self, responses: &[(usize, Vec<f64>)]) -> Vec<f64> {
+        assert!(
+            responses.len() >= self.recovery_threshold(),
+            "PC needs {} responses, got {}",
+            self.recovery_threshold(),
+            responses.len()
+        );
+        let take = self.recovery_threshold();
+        let xs: Vec<f64> = responses[..take]
+            .iter()
+            .map(|&(w, _)| self.points[w])
+            .collect();
+        let ys: Vec<Vec<f64>> = responses[..take].iter().map(|(_, v)| v.clone()).collect();
+        let phi = NewtonPoly::interpolate(&xs, &ys);
+        phi.eval_sum(&self.nodes)
+    }
+
+    /// Completion time of one delay realization (eqs. 51–52): worker `i`
+    /// finishes at `Σ_{j<r} comp(i,j) + comm(i, r−1)` (all `r` tasks,
+    /// one message), and the round completes at the threshold-th order
+    /// statistic across workers.
+    pub fn completion_time(&self, sample: &DelaySample, scratch: &mut Vec<f64>) -> f64 {
+        assert_eq!(sample.n, self.n);
+        assert_eq!(sample.r, self.r);
+        scratch.clear();
+        for i in 0..self.n {
+            let comp: f64 = sample.comp_row(i).iter().sum();
+            // single message: use the last slot's comm delay (the draw
+            // is exchangeable across slots, so any fixed slot works)
+            let t = comp + sample.comm(i, self.r - 1);
+            scratch.push(t);
+        }
+        let k = self.recovery_threshold();
+        let (_, kth, _) = scratch.select_nth_unstable_by(k - 1, |a, b| a.total_cmp(b));
+        *kth
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_parts(n: usize, d: usize, b: usize, rng: &mut Rng) -> Vec<Mat> {
+        (0..n)
+            .map(|_| Mat::from_fn(d, b, |_, _| rng.normal()))
+            .collect()
+    }
+
+    fn uncoded_sum(parts: &[Mat], theta: &[f64]) -> Vec<f64> {
+        let mut total = vec![0.0; parts[0].rows];
+        for p in parts {
+            vec_axpy(&mut total, 1.0, &p.gram_matvec(theta));
+        }
+        total
+    }
+
+    #[test]
+    fn example_4_coefficients() {
+        // paper Example 4: n = 4, r = 2 →
+        //   X̃_{i,1} = −(i−2)X_1 + (i−1)X_3,  X̃_{i,2} = −(i−2)X_2 + (i−1)X_4
+        let pc = PcScheme::new(4, 2);
+        assert_eq!(pc.groups, 2);
+        assert_eq!(pc.recovery_threshold(), 3);
+        for i in 0..4 {
+            let a = pc.encode_coeffs(i);
+            let x = (i + 1) as f64;
+            // 0-based tasks: X_1→0, X_3→2 in coded matrix j=0
+            assert!((a[0][0] - (2.0 - x)).abs() < 1e-12, "worker {i}");
+            assert!((a[0][2] - (x - 1.0)).abs() < 1e-12);
+            assert_eq!(a[0][1], 0.0);
+            assert_eq!(a[0][3], 0.0);
+            // X_2→1, X_4→3 in coded matrix j=1
+            assert!((a[1][1] - (2.0 - x)).abs() < 1e-12);
+            assert!((a[1][3] - (x - 1.0)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn decode_reconstructs_gram_sum_exactly() {
+        let mut rng = Rng::seed_from_u64(12);
+        for (n, r) in [(4usize, 2usize), (6, 2), (6, 3), (9, 3), (8, 4)] {
+            let pc = PcScheme::new(n, r);
+            let (d, b) = (10, 5);
+            let parts = random_parts(n, d, b, &mut rng);
+            let theta: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+            // any `threshold` workers suffice — pick a scattered subset
+            let mut resp = Vec::new();
+            for w in (0..n).rev() {
+                if resp.len() < pc.recovery_threshold() {
+                    resp.push((w, pc.worker_compute(w, &parts, &theta)));
+                }
+            }
+            let got = pc.decode(&resp);
+            let want = uncoded_sum(&parts, &theta);
+            for lane in 0..d {
+                assert!(
+                    (got[lane] - want[lane]).abs() < 1e-6 * (1.0 + want[lane].abs()),
+                    "n={n} r={r} lane {lane}: {} vs {}",
+                    got[lane],
+                    want[lane]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn non_divisible_n_padded_groups_decode() {
+        // n = 5, r = 2 → c = 3 groups, last group ragged
+        let mut rng = Rng::seed_from_u64(7);
+        let pc = PcScheme::new(5, 2);
+        assert_eq!(pc.recovery_threshold(), 5);
+        let parts = random_parts(5, 6, 3, &mut rng);
+        let theta: Vec<f64> = (0..6).map(|_| rng.normal()).collect();
+        let resp: Vec<_> = (0..5)
+            .map(|w| (w, pc.worker_compute(w, &parts, &theta)))
+            .collect();
+        let got = pc.decode(&resp);
+        let want = uncoded_sum(&parts, &theta);
+        for lane in 0..6 {
+            assert!((got[lane] - want[lane]).abs() < 1e-6 * (1.0 + want[lane].abs()));
+        }
+    }
+
+    #[test]
+    fn completion_uses_threshold_order_stat() {
+        let pc = PcScheme::new(4, 2);
+        // comp rows sum: w0: 3, w1: 1, w2: 9, w3: 5; comm(last): 1 each
+        let s = DelaySample::from_rows(
+            vec![
+                vec![1.0, 2.0],
+                vec![0.5, 0.5],
+                vec![4.0, 5.0],
+                vec![2.0, 3.0],
+            ],
+            vec![vec![9.0, 1.0]; 4],
+        );
+        // worker finish times: 4, 2, 10, 6 → 3rd smallest = 6
+        let mut scratch = Vec::new();
+        assert_eq!(pc.completion_time(&s, &mut scratch), 6.0);
+    }
+
+    #[test]
+    fn full_load_needs_single_worker_group() {
+        // r = n → c = 1, threshold 1: fastest worker alone completes
+        let pc = PcScheme::new(4, 4);
+        assert_eq!(pc.recovery_threshold(), 1);
+        let mut rng = Rng::seed_from_u64(3);
+        let parts = random_parts(4, 5, 2, &mut rng);
+        let theta: Vec<f64> = (0..5).map(|_| rng.normal()).collect();
+        let got = pc.decode(&[(2, pc.worker_compute(2, &parts, &theta))]);
+        let want = uncoded_sum(&parts, &theta);
+        for lane in 0..5 {
+            assert!((got[lane] - want[lane]).abs() < 1e-8 * (1.0 + want[lane].abs()));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "r ≥ 2")]
+    fn rejects_r1() {
+        PcScheme::new(4, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "needs")]
+    fn decode_rejects_too_few() {
+        let pc = PcScheme::new(6, 2);
+        pc.decode(&[(0, vec![0.0])]);
+    }
+}

@@ -1,0 +1,263 @@
+//! Polynomially coded multi-message (PCMM) — Ozfatura, Gündüz & Ulukus
+//! [17], paper §VI-B.
+//!
+//! PCMM keeps PC's polynomial structure but lets workers stream partial
+//! results: worker `i` stores `r` coded matrices, each a Lagrange
+//! combination of **all** `n` partitions evaluated at its own point
+//! `β_{i,j}` (eq. 58):
+//!
+//! ```text
+//! X̂_{i,j} = Σ_{m=1}^{n} X_m · ℓ_m(β_{i,j})        nodes = {1, …, n}
+//! ```
+//!
+//! Each gram mat-vec `X̂X̂ᵀθ` is one evaluation of the degree-`2(n−1)`
+//! polynomial `ψ(x)` (eq. 59), computed *sequentially* and sent
+//! *immediately* — so the master can harvest evaluations from slow
+//! workers too.  It interpolates `ψ` from any `2n − 1` evaluations and
+//! reconstructs `XᵀXθ = Σ_{u=1}^{n} ψ(u)` (eq. 60).
+//!
+//! Timing (eqs. 56–57): slot arrivals are identical in law to the
+//! uncoded engine's; completion is the `(2n−1)`-th order statistic over
+//! **all** `n·r` slot arrivals (no distinctness requirement — every
+//! evaluation point is fresh information).
+//!
+//! `β` points: the paper only requires distinct reals; we use Chebyshev
+//! points on `[1, n]` for interpolation stability at degree `2n − 2`
+//! (DESIGN.md §5 notes this choice; it does not affect timing).
+
+use crate::delay::DelaySample;
+use crate::linalg::Mat;
+
+use super::poly::{chebyshev_points, lagrange_basis, NewtonPoly};
+
+/// The PCMM scheme for `n` tasks/workers at computation load `r ≥ 2`.
+#[derive(Debug, Clone)]
+pub struct PcmmScheme {
+    pub n: usize,
+    pub r: usize,
+    /// Lagrange nodes (1..n) used both for encoding and reconstruction.
+    nodes: Vec<f64>,
+    /// β_{i,j}: evaluation point of worker i's j-th coded matrix.
+    betas: Vec<Vec<f64>>,
+}
+
+impl PcmmScheme {
+    pub fn new(n: usize, r: usize) -> Self {
+        assert!(r >= 2, "PCMM requires computation load r ≥ 2 (paper Table I)");
+        assert!(r <= n, "load cannot exceed task count");
+        assert!(
+            n * r >= 2 * n - 1,
+            "need n·r ≥ 2n−1 evaluation slots to ever decode"
+        );
+        let nodes: Vec<f64> = (1..=n).map(|u| u as f64).collect();
+        let flat = chebyshev_points(n * r, 1.0, n as f64);
+        let betas = (0..n).map(|i| flat[i * r..(i + 1) * r].to_vec()).collect();
+        Self { n, r, nodes, betas }
+    }
+
+    /// Evaluations the master must collect (paper: `2n − 1`).
+    pub fn recovery_threshold(&self) -> usize {
+        2 * self.n - 1
+    }
+
+    /// β point of worker `i`'s `j`-th computation.
+    pub fn beta(&self, worker: usize, slot: usize) -> f64 {
+        self.betas[worker][slot]
+    }
+
+    /// Encoding coefficients of worker `i`'s `j`-th coded matrix over
+    /// the `n` partitions (eq. 58).
+    pub fn encode_coeffs(&self, worker: usize, slot: usize) -> Vec<f64> {
+        let x = self.beta(worker, slot);
+        (0..self.n)
+            .map(|m| lagrange_basis(&self.nodes, m, x))
+            .collect()
+    }
+
+    /// Worker `i`'s `j`-th computation on real data: one evaluation
+    /// `ψ(β_{i,j})`, sent to the master immediately.
+    pub fn worker_compute(
+        &self,
+        worker: usize,
+        slot: usize,
+        parts: &[Mat],
+        theta: &[f64],
+    ) -> Vec<f64> {
+        assert_eq!(parts.len(), self.n, "need all n partitions to encode");
+        let coded = Mat::linear_combination(&self.encode_coeffs(worker, slot), parts);
+        coded.gram_matvec(theta)
+    }
+
+    /// Master decode from `((worker, slot), value)` pairs.
+    pub fn decode(&self, responses: &[((usize, usize), Vec<f64>)]) -> Vec<f64> {
+        assert!(
+            responses.len() >= self.recovery_threshold(),
+            "PCMM needs {} evaluations, got {}",
+            self.recovery_threshold(),
+            responses.len()
+        );
+        let take = self.recovery_threshold();
+        let xs: Vec<f64> = responses[..take]
+            .iter()
+            .map(|&((i, j), _)| self.beta(i, j))
+            .collect();
+        let ys: Vec<Vec<f64>> = responses[..take].iter().map(|(_, v)| v.clone()).collect();
+        let psi = NewtonPoly::interpolate(&xs, &ys);
+        psi.eval_sum(&self.nodes)
+    }
+
+    /// Completion time of one delay realization (eqs. 56–57): the
+    /// `(2n−1)`-th smallest slot arrival among all `n·r` slots.
+    pub fn completion_time(&self, sample: &DelaySample, scratch: &mut Vec<f64>) -> f64 {
+        assert_eq!(sample.n, self.n);
+        assert_eq!(sample.r, self.r);
+        scratch.clear();
+        for i in 0..self.n {
+            let comp = sample.comp_row(i);
+            let comm = sample.comm_row(i);
+            let mut prefix = 0.0;
+            for j in 0..self.r {
+                prefix += comp[j];
+                scratch.push(prefix + comm[j]);
+            }
+        }
+        let k = self.recovery_threshold();
+        let (_, kth, _) = scratch.select_nth_unstable_by(k - 1, |a, b| a.total_cmp(b));
+        *kth
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::vec_axpy;
+    use crate::util::rng::Rng;
+
+    fn random_parts(n: usize, d: usize, b: usize, rng: &mut Rng) -> Vec<Mat> {
+        (0..n)
+            .map(|_| Mat::from_fn(d, b, |_, _| rng.normal()))
+            .collect()
+    }
+
+    fn uncoded_sum(parts: &[Mat], theta: &[f64]) -> Vec<f64> {
+        let mut total = vec![0.0; parts[0].rows];
+        for p in parts {
+            vec_axpy(&mut total, 1.0, &p.gram_matvec(theta));
+        }
+        total
+    }
+
+    #[test]
+    fn betas_are_distinct_across_all_slots() {
+        let s = PcmmScheme::new(6, 3);
+        let mut all: Vec<f64> = (0..6)
+            .flat_map(|i| (0..3).map(move |j| (i, j)))
+            .map(|(i, j)| s.beta(i, j))
+            .collect();
+        all.sort_by(f64::total_cmp);
+        all.dedup_by(|a, b| (*a - *b).abs() < 1e-12);
+        assert_eq!(all.len(), 18);
+    }
+
+    #[test]
+    fn encoding_at_node_m_recovers_partition_m() {
+        // if β happens to hit node m, the coded matrix is exactly X_m;
+        // we verify the basis property instead (β are off-node): the
+        // coefficients sum to 1 (partition of unity for Lagrange bases)
+        let s = PcmmScheme::new(5, 2);
+        for i in 0..5 {
+            for j in 0..2 {
+                let c = s.encode_coeffs(i, j);
+                let total: f64 = c.iter().sum();
+                assert!((total - 1.0).abs() < 1e-9, "worker {i} slot {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn decode_reconstructs_gram_sum() {
+        let mut rng = Rng::seed_from_u64(21);
+        for (n, r) in [(3usize, 2usize), (4, 2), (5, 3)] {
+            let s = PcmmScheme::new(n, r);
+            let (d, b) = (8, 4);
+            let parts = random_parts(n, d, b, &mut rng);
+            let theta: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+            // gather evaluations in arbitrary (worker, slot) order
+            let mut resp = Vec::new();
+            'outer: for j in 0..r {
+                for i in 0..n {
+                    resp.push(((i, j), s.worker_compute(i, j, &parts, &theta)));
+                    if resp.len() == s.recovery_threshold() {
+                        break 'outer;
+                    }
+                }
+            }
+            let got = s.decode(&resp);
+            let want = uncoded_sum(&parts, &theta);
+            for lane in 0..d {
+                assert!(
+                    (got[lane] - want[lane]).abs() < 1e-4 * (1.0 + want[lane].abs()),
+                    "n={n} r={r} lane {lane}: {} vs {}",
+                    got[lane],
+                    want[lane]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn completion_is_2n_minus_1_slot_order_stat() {
+        let s = PcmmScheme::new(2, 2);
+        // arrivals: w0: 1+10=11, 3+1=4 ; w1: 4+1=5, 5+1=6  → sorted 4,5,6,11
+        let sample = DelaySample::from_rows(
+            vec![vec![1.0, 2.0], vec![4.0, 1.0]],
+            vec![vec![10.0, 1.0], vec![1.0, 1.0]],
+        );
+        let mut scratch = Vec::new();
+        // threshold = 3 → 6.0
+        assert_eq!(s.completion_time(&sample, &mut scratch), 6.0);
+    }
+
+    #[test]
+    fn pcmm_profits_from_partial_work_vs_pc() {
+        // with heterogeneous workers, PCMM's multi-message harvest should
+        // (on average) beat PC at the same load — the paper's Fig. 4/5
+        // observation
+        use crate::delay::{DelayModel, TruncatedGaussianModel};
+        // at r = 2 the two schemes are nearly tied (threshold 2⌈n/r⌉−1
+        // vs 2n−1 balance out); from r = 4 PCMM's partial-work harvest
+        // wins clearly — exactly the paper's Fig. 4 shape
+        let n = 8;
+        let r = 4;
+        let model = TruncatedGaussianModel::scenario2(n, 3);
+        let pc = crate::coded::PcScheme::new(n, r);
+        let pcmm = PcmmScheme::new(n, r);
+        let mut rng = Rng::seed_from_u64(5);
+        let (mut tot_pc, mut tot_pcmm) = (0.0, 0.0);
+        let mut scratch = Vec::new();
+        for _ in 0..4000 {
+            let s = model.sample(n, r, &mut rng);
+            tot_pc += pc.completion_time(&s, &mut scratch);
+            tot_pcmm += pcmm.completion_time(&s, &mut scratch);
+        }
+        assert!(
+            tot_pcmm < tot_pc,
+            "PCMM {} should beat PC {}",
+            tot_pcmm / 4000.0,
+            tot_pc / 4000.0
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "r ≥ 2")]
+    fn rejects_r1() {
+        PcmmScheme::new(4, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "needs")]
+    fn decode_rejects_too_few() {
+        let s = PcmmScheme::new(3, 2);
+        s.decode(&[((0, 0), vec![1.0])]);
+    }
+}

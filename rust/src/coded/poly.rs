@@ -1,0 +1,231 @@
+//! Vector-valued polynomial interpolation — the decode machinery shared
+//! by the PC and PCMM baselines.
+//!
+//! Both schemes make each worker evaluate a (vector-valued) polynomial
+//! `φ(x) ∈ R^d` at a known point; the master interpolates `φ` from
+//! enough evaluations and then evaluates it at the reconstruction
+//! points.  We use the **Newton form with divided differences**, applied
+//! element-wise over the `d` vector lanes: `O(m²·d)` to build, `O(m·d)`
+//! per evaluation, and numerically far better behaved than solving the
+//! Vandermonde system.
+
+/// Newton-form interpolant of a vector-valued polynomial from samples
+/// `(x_i, y_i ∈ R^d)` at pairwise-distinct nodes.
+#[derive(Debug, Clone)]
+pub struct NewtonPoly {
+    nodes: Vec<f64>,
+    /// divided-difference coefficients, one `d`-vector per order
+    coeffs: Vec<Vec<f64>>,
+    dim: usize,
+}
+
+impl NewtonPoly {
+    /// Build from `m` samples; interpolates the unique polynomial of
+    /// degree ≤ m−1 through them.
+    pub fn interpolate(xs: &[f64], ys: &[Vec<f64>]) -> Self {
+        assert_eq!(xs.len(), ys.len(), "node/value count mismatch");
+        assert!(!xs.is_empty(), "need at least one sample");
+        let dim = ys[0].len();
+        for y in ys {
+            assert_eq!(y.len(), dim, "ragged sample vectors");
+        }
+        for (i, &a) in xs.iter().enumerate() {
+            for &b in &xs[..i] {
+                assert!(
+                    (a - b).abs() > 1e-12 * (1.0 + a.abs().max(b.abs())),
+                    "interpolation nodes must be distinct (got {a} ≈ {b})"
+                );
+            }
+        }
+        // divided differences, classic in-place backward sweep: after
+        // pass `order`, table[i] = f[x_{i−order}, …, x_i], so at the end
+        // table[j] is the Newton coefficient f[x_0, …, x_j].
+        let m = xs.len();
+        let mut table: Vec<Vec<f64>> = ys.to_vec();
+        for order in 1..m {
+            for i in (order..m).rev() {
+                let denom = xs[i] - xs[i - order];
+                for lane in 0..dim {
+                    table[i][lane] = (table[i][lane] - table[i - 1][lane]) / denom;
+                }
+            }
+        }
+        Self {
+            nodes: xs.to_vec(),
+            coeffs: table,
+            dim,
+        }
+    }
+
+    pub fn degree_bound(&self) -> usize {
+        self.coeffs.len() - 1
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Evaluate at `x` via the vector Horner/Newton scheme.
+    pub fn eval(&self, x: f64) -> Vec<f64> {
+        let m = self.coeffs.len();
+        let mut acc = self.coeffs[m - 1].clone();
+        for i in (0..m - 1).rev() {
+            let w = x - self.nodes[i];
+            for lane in 0..self.dim {
+                acc[lane] = acc[lane] * w + self.coeffs[i][lane];
+            }
+        }
+        acc
+    }
+
+    /// Evaluate at several points and sum the results — the master's
+    /// reconstruction step `Σ_u φ(u)` in both PC and PCMM.
+    pub fn eval_sum(&self, points: &[f64]) -> Vec<f64> {
+        let mut total = vec![0.0; self.dim];
+        for &x in points {
+            let v = self.eval(x);
+            for (t, vi) in total.iter_mut().zip(v) {
+                *t += vi;
+            }
+        }
+        total
+    }
+}
+
+/// Scalar Lagrange basis polynomial `ℓ_u(x)` over the given nodes:
+/// `Π_{m ≠ u} (x − node_m) / (node_u − node_m)`.
+pub fn lagrange_basis(nodes: &[f64], u: usize, x: f64) -> f64 {
+    let mut acc = 1.0;
+    for (m, &node) in nodes.iter().enumerate() {
+        if m != u {
+            acc *= (x - node) / (nodes[u] - node);
+        }
+    }
+    acc
+}
+
+/// Chebyshev points of the second kind mapped to `[lo, hi]` — the
+/// evaluation points PCMM workers use (`β_{i,j}`), chosen for
+/// interpolation stability at the paper's degrees (2n − 2).
+pub fn chebyshev_points(count: usize, lo: f64, hi: f64) -> Vec<f64> {
+    assert!(count >= 1);
+    if count == 1 {
+        return vec![0.5 * (lo + hi)];
+    }
+    (0..count)
+        .map(|j| {
+            let t = (j as f64 * std::f64::consts::PI / (count - 1) as f64).cos();
+            0.5 * (lo + hi) + 0.5 * (hi - lo) * t
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn interpolates_scalar_quadratic_exactly() {
+        // y = 2x² − 3x + 1 through 3 points
+        let f = |x: f64| vec![2.0 * x * x - 3.0 * x + 1.0];
+        let xs = [0.0, 1.0, 3.0];
+        let ys: Vec<Vec<f64>> = xs.iter().map(|&x| f(x)).collect();
+        let p = NewtonPoly::interpolate(&xs, &ys);
+        for x in [-2.0, 0.5, 2.0, 10.0] {
+            assert!((p.eval(x)[0] - f(x)[0]).abs() < 1e-9, "x={x}");
+        }
+    }
+
+    #[test]
+    fn interpolates_vector_polys_lanewise() {
+        // lanes: [x², x + 1]
+        let f = |x: f64| vec![x * x, x + 1.0];
+        let xs = [1.0, 2.0, 4.0];
+        let ys: Vec<Vec<f64>> = xs.iter().map(|&x| f(x)).collect();
+        let p = NewtonPoly::interpolate(&xs, &ys);
+        let v = p.eval(3.0);
+        assert!((v[0] - 9.0).abs() < 1e-9);
+        assert!((v[1] - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn random_poly_roundtrip() {
+        let mut rng = Rng::seed_from_u64(5);
+        for degree in [0usize, 1, 3, 6, 10] {
+            let dim = 4;
+            // random coefficients
+            let coef: Vec<Vec<f64>> = (0..=degree)
+                .map(|_| (0..dim).map(|_| rng.range_f64(-2.0, 2.0)).collect())
+                .collect();
+            let eval = |x: f64| -> Vec<f64> {
+                (0..dim)
+                    .map(|l| {
+                        coef.iter()
+                            .rev()
+                            .fold(0.0, |acc, c| acc * x + c[l])
+                    })
+                    .collect()
+            };
+            let xs = chebyshev_points(degree + 1, -1.0, 2.0);
+            let ys: Vec<Vec<f64>> = xs.iter().map(|&x| eval(x)).collect();
+            let p = NewtonPoly::interpolate(&xs, &ys);
+            for _ in 0..10 {
+                let x = rng.range_f64(-1.0, 2.0);
+                let (got, want) = (p.eval(x), eval(x));
+                for l in 0..dim {
+                    assert!(
+                        (got[l] - want[l]).abs() < 1e-7 * (1.0 + want[l].abs()),
+                        "deg {degree} lane {l}: {} vs {}",
+                        got[l],
+                        want[l]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn eval_sum_matches_individual_sums() {
+        let xs = [0.0, 1.0, 2.0];
+        let ys = vec![vec![1.0], vec![2.0], vec![5.0]]; // x² + 1
+        let p = NewtonPoly::interpolate(&xs, &ys);
+        let total = p.eval_sum(&[1.0, 2.0, 3.0])[0];
+        assert!((total - (2.0 + 5.0 + 10.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lagrange_basis_partition_of_unity() {
+        let nodes = [1.0, 2.0, 3.0, 4.0];
+        for x in [0.3, 1.5, 3.9] {
+            let total: f64 = (0..4).map(|u| lagrange_basis(&nodes, u, x)).sum();
+            assert!((total - 1.0).abs() < 1e-10, "x={x}");
+        }
+        // kronecker at the nodes
+        for (u, &xu) in nodes.iter().enumerate() {
+            for v in 0..4 {
+                let want = if u == v { 1.0 } else { 0.0 };
+                assert!((lagrange_basis(&nodes, v, xu) - want).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn chebyshev_points_distinct_and_bounded() {
+        let pts = chebyshev_points(9, 1.0, 15.0);
+        assert_eq!(pts.len(), 9);
+        for &p in &pts {
+            assert!((1.0..=15.0).contains(&p));
+        }
+        let mut sorted = pts.clone();
+        sorted.sort_by(f64::total_cmp);
+        sorted.dedup_by(|a, b| (*a - *b).abs() < 1e-12);
+        assert_eq!(sorted.len(), 9);
+    }
+
+    #[test]
+    #[should_panic(expected = "distinct")]
+    fn rejects_duplicate_nodes() {
+        NewtonPoly::interpolate(&[1.0, 1.0], &[vec![0.0], vec![1.0]]);
+    }
+}

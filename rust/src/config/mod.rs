@@ -1,0 +1,303 @@
+//! Config-driven experiments: describe a sweep in JSON, run it with
+//! `straggler run --config exp.json`.
+//!
+//! Example:
+//!
+//! ```json
+//! {
+//!   "name": "my-sweep",
+//!   "n": 12,
+//!   "rs": [2, 4, 8, 12],
+//!   "ks": [12],
+//!   "trials": 10000,
+//!   "seed": 7,
+//!   "ingest_ms": 0.0,
+//!   "schemes": ["CS", "SS", "RA", "PC", "PCMM", "LB"],
+//!   "model": {"kind": "ec2_like", "seed": 3, "hetero": 0.2}
+//! }
+//! ```
+//!
+//! Model kinds: `scenario1`, `scenario2 {seed}`, `ec2_like {seed,
+//! hetero}`, `shifted_exp {comp_shift, comp_rate, comm_shift,
+//! comm_rate}`, `truncated_gaussian {comp: {...}, comm: {...}}` —
+//! the same space as [`crate::delay::DelayModelKind`].
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::delay::{DelayModelKind, TruncatedGaussian};
+use crate::harness::{evaluate, EvalPoint};
+use crate::report::Table;
+use crate::scheduler::SchemeId;
+use crate::util::json::Json;
+
+/// A declarative experiment sweep.
+#[derive(Debug, Clone)]
+pub struct Experiment {
+    pub name: String,
+    pub n: usize,
+    pub rs: Vec<usize>,
+    pub ks: Vec<usize>,
+    pub trials: usize,
+    pub seed: u64,
+    pub ingest_ms: f64,
+    pub schemes: Vec<SchemeId>,
+    pub model: DelayModelKind,
+}
+
+impl Experiment {
+    pub fn from_json_str(text: &str) -> Result<Self> {
+        let root = Json::parse(text).map_err(|e| anyhow!("config parse error: {e}"))?;
+        Self::from_json(&root)
+    }
+
+    pub fn from_file(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::from_json_str(&text)
+    }
+
+    pub fn from_json(root: &Json) -> Result<Self> {
+        let usize_field = |key: &str, default: Option<usize>| -> Result<usize> {
+            match root.get(key) {
+                Some(v) => v.as_usize().ok_or_else(|| anyhow!("`{key}` must be an integer")),
+                None => default.ok_or_else(|| anyhow!("config missing `{key}`")),
+            }
+        };
+        let n = usize_field("n", None)?;
+        let list_field = |key: &str, default: Vec<usize>| -> Result<Vec<usize>> {
+            match root.get(key) {
+                None => Ok(default),
+                Some(Json::Arr(items)) => items
+                    .iter()
+                    .map(|v| v.as_usize().ok_or_else(|| anyhow!("`{key}` entries must be ints")))
+                    .collect(),
+                Some(v) => v
+                    .as_usize()
+                    .map(|u| vec![u])
+                    .ok_or_else(|| anyhow!("`{key}` must be int or int array")),
+            }
+        };
+        let rs = list_field("rs", vec![n])?;
+        let ks = list_field("ks", vec![n])?;
+        for &r in &rs {
+            if r < 1 || r > n {
+                bail!("r = {r} out of range [1, {n}]");
+            }
+        }
+        for &k in &ks {
+            if k < 1 || k > n {
+                bail!("k = {k} out of range [1, {n}]");
+            }
+        }
+        let schemes = match root.get("schemes") {
+            None => vec![
+                SchemeId::Cs,
+                SchemeId::Ss,
+                SchemeId::Ra,
+                SchemeId::Pc,
+                SchemeId::Pcmm,
+                SchemeId::Lb,
+            ],
+            Some(Json::Arr(items)) => items
+                .iter()
+                .map(|v| parse_scheme(v.as_str().unwrap_or("")))
+                .collect::<Result<Vec<_>>>()?,
+            Some(_) => bail!("`schemes` must be an array of scheme names"),
+        };
+        Ok(Self {
+            name: root
+                .get("name")
+                .and_then(Json::as_str)
+                .unwrap_or("experiment")
+                .to_string(),
+            n,
+            rs,
+            ks,
+            trials: usize_field("trials", Some(10_000))?,
+            seed: root
+                .get("seed")
+                .map(|v| v.as_f64().unwrap_or(0.0) as u64)
+                .unwrap_or(0xF16),
+            ingest_ms: root.get("ingest_ms").and_then(Json::as_f64).unwrap_or(0.0),
+            schemes,
+            model: parse_model(
+                root.get("model")
+                    .ok_or_else(|| anyhow!("config missing `model`"))?,
+            )?,
+        })
+    }
+
+    /// Run the sweep; one row per (r, k) point.
+    pub fn run(&self) -> Table {
+        let model = self.model.build(self.n);
+        let mut headers = vec!["r".to_string(), "k".to_string()];
+        headers.extend(self.schemes.iter().map(|s| s.to_string()));
+        let mut table = Table::new(
+            &format!(
+                "{}: n = {}, {} trials, model = {}",
+                self.name,
+                self.n,
+                self.trials,
+                model.name()
+            ),
+            &headers.iter().map(String::as_str).collect::<Vec<_>>(),
+        );
+        for &r in &self.rs {
+            for &k in &self.ks {
+                let point = EvalPoint::new(self.n, r, k, self.trials, self.seed)
+                    .with_schemes(&self.schemes)
+                    .with_ingest(self.ingest_ms);
+                let est = evaluate(&point, model.as_ref());
+                let mut row = vec![r.to_string(), k.to_string()];
+                for s in &self.schemes {
+                    let mean = est
+                        .iter()
+                        .find(|e| e.scheme == s.to_string())
+                        .map(|e| e.mean)
+                        .unwrap_or(f64::NAN);
+                    row.push(Table::fmt(mean));
+                }
+                table.push_row(row);
+            }
+        }
+        table
+    }
+}
+
+fn parse_scheme(name: &str) -> Result<SchemeId> {
+    Ok(match name.to_uppercase().as_str() {
+        "CS" => SchemeId::Cs,
+        "SS" => SchemeId::Ss,
+        "RA" => SchemeId::Ra,
+        "PC" => SchemeId::Pc,
+        "PCMM" => SchemeId::Pcmm,
+        "LB" => SchemeId::Lb,
+        other => bail!("unknown scheme {other:?}"),
+    })
+}
+
+fn parse_model(v: &Json) -> Result<DelayModelKind> {
+    let kind = v
+        .get("kind")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("model needs a `kind`"))?;
+    let f = |key: &str, default: Option<f64>| -> Result<f64> {
+        match v.get(key) {
+            Some(x) => x.as_f64().ok_or_else(|| anyhow!("`{key}` must be a number")),
+            None => default.ok_or_else(|| anyhow!("model missing `{key}`")),
+        }
+    };
+    Ok(match kind {
+        "scenario1" => DelayModelKind::TruncatedGaussianScenario1,
+        "scenario2" => DelayModelKind::TruncatedGaussianScenario2 {
+            seed: f("seed", Some(0.0))? as u64,
+        },
+        "ec2_like" => DelayModelKind::Ec2Like {
+            seed: f("seed", Some(0.0))? as u64,
+            hetero: f("hetero", Some(0.2))?,
+        },
+        "shifted_exp" => DelayModelKind::ShiftedExponential {
+            comp_shift: f("comp_shift", None)?,
+            comp_rate: f("comp_rate", None)?,
+            comm_shift: f("comm_shift", None)?,
+            comm_rate: f("comm_rate", None)?,
+        },
+        "truncated_gaussian" => {
+            let tg = |key: &str| -> Result<TruncatedGaussian> {
+                let o = v.get(key).ok_or_else(|| anyhow!("model missing `{key}`"))?;
+                let g = |k2: &str| -> Result<f64> {
+                    o.get(k2)
+                        .and_then(Json::as_f64)
+                        .ok_or_else(|| anyhow!("`{key}.{k2}` must be a number"))
+                };
+                Ok(TruncatedGaussian {
+                    mu: g("mu")?,
+                    sigma: g("sigma")?,
+                    a: g("a")?,
+                    b: o.get("b").and_then(Json::as_f64).unwrap_or(g("a")?),
+                })
+            };
+            DelayModelKind::TruncatedGaussian {
+                comp: tg("comp")?,
+                comm: tg("comm")?,
+            }
+        }
+        other => bail!("unknown model kind {other:?}"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GOOD: &str = r#"{
+        "name": "t",
+        "n": 6,
+        "rs": [2, 6],
+        "ks": [4, 6],
+        "trials": 400,
+        "seed": 3,
+        "schemes": ["CS", "SS", "LB"],
+        "model": {"kind": "scenario1"}
+    }"#;
+
+    #[test]
+    fn parses_and_runs() {
+        let exp = Experiment::from_json_str(GOOD).unwrap();
+        assert_eq!(exp.n, 6);
+        assert_eq!(exp.rs, vec![2, 6]);
+        assert_eq!(exp.schemes.len(), 3);
+        let table = exp.run();
+        assert_eq!(table.rows.len(), 4); // 2 rs × 2 ks
+        assert_eq!(table.headers, vec!["r", "k", "CS", "SS", "LB"]);
+        // every cell parses as a positive number
+        for row in &table.rows {
+            for cell in &row[2..] {
+                assert!(cell.parse::<f64>().unwrap() > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_r_and_defaults() {
+        let exp = Experiment::from_json_str(
+            r#"{"n": 4, "rs": 2, "model": {"kind": "ec2_like", "seed": 1}}"#,
+        )
+        .unwrap();
+        assert_eq!(exp.rs, vec![2]);
+        assert_eq!(exp.ks, vec![4]);
+        assert_eq!(exp.trials, 10_000);
+        assert_eq!(exp.schemes.len(), 6);
+    }
+
+    #[test]
+    fn full_model_specification() {
+        let exp = Experiment::from_json_str(
+            r#"{"n": 4, "model": {"kind": "truncated_gaussian",
+                 "comp": {"mu": 0.1, "sigma": 0.1, "a": 0.03},
+                 "comm": {"mu": 0.5, "sigma": 0.2, "a": 0.2}}}"#,
+        )
+        .unwrap();
+        match exp.model {
+            DelayModelKind::TruncatedGaussian { comp, .. } => {
+                assert!((comp.mu - 0.1).abs() < 1e-12);
+                assert_eq!(comp.b, comp.a); // symmetric default
+            }
+            _ => panic!("wrong kind"),
+        }
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        for bad in [
+            r#"{"rs": [2], "model": {"kind": "scenario1"}}"#, // no n
+            r#"{"n": 4, "rs": [9], "model": {"kind": "scenario1"}}"#, // r > n
+            r#"{"n": 4, "ks": [0], "model": {"kind": "scenario1"}}"#, // k < 1
+            r#"{"n": 4}"#,                                    // no model
+            r#"{"n": 4, "model": {"kind": "wat"}}"#,          // bad kind
+            r#"{"n": 4, "schemes": ["XX"], "model": {"kind": "scenario1"}}"#,
+        ] {
+            assert!(Experiment::from_json_str(bad).is_err(), "{bad}");
+        }
+    }
+}

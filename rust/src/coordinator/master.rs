@@ -1,0 +1,299 @@
+//! Cluster master (leader): schedules, distributes, collects, stops,
+//! updates — the paper's §II protocol over real sockets.
+
+use std::collections::HashSet;
+use std::io::Write as _;
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::protocol::Msg;
+use super::{now_us, TaskDelaySampler};
+use crate::data::Dataset;
+use crate::delay::DelayModelKind;
+use crate::gd::UncodedMaster;
+use crate::metrics::DelayRecorder;
+use crate::scheduler::Scheduler;
+use crate::util::rng::Rng;
+
+/// Cluster configuration.
+pub struct ClusterConfig {
+    pub n: usize,
+    pub r: usize,
+    pub k: usize,
+    pub eta: f64,
+    pub rounds: usize,
+    /// artifact profile the workers execute (`task_gram` entry)
+    pub profile: String,
+    pub scheduler: Box<dyn Scheduler>,
+    pub dataset: Dataset,
+    /// injected straggling; `None` measures bare-metal delays
+    pub inject: Option<DelayModelKind>,
+    pub seed: u64,
+    /// worker compute engine
+    pub use_pjrt: bool,
+    pub artifact_dir: Option<std::path::PathBuf>,
+    /// record loss every this many rounds (loss is O(N·d))
+    pub loss_every: usize,
+    /// listen address; `None` binds an ephemeral localhost port
+    pub listen: Option<String>,
+    /// spawn the n workers in-process (false = wait for external
+    /// `straggler worker --connect` processes — real multi-process mode)
+    pub spawn_workers: bool,
+}
+
+/// Per-round record.
+#[derive(Debug, Clone)]
+pub struct RoundLog {
+    pub round: usize,
+    /// wall-clock ms from round start to k-th distinct result
+    pub completion_ms: f64,
+    /// the k distinct tasks, in arrival order
+    pub winners: Vec<usize>,
+    /// total results received (incl. duplicates/destroyed-by-stop tail)
+    pub results_seen: usize,
+    pub loss: Option<f64>,
+}
+
+/// Whole-run report.
+pub struct ClusterReport {
+    pub rounds: Vec<RoundLog>,
+    /// per-worker measured delays (ms) — feeds Fig. 3 + empirical replay
+    pub recorders: Vec<DelayRecorder>,
+    pub final_theta: Vec<f64>,
+    pub final_loss: f64,
+}
+
+impl ClusterReport {
+    pub fn mean_completion_ms(&self) -> f64 {
+        let s: f64 = self.rounds.iter().map(|r| r.completion_ms).sum();
+        s / self.rounds.len().max(1) as f64
+    }
+}
+
+/// Run a full cluster experiment: spawns `n` in-process workers over
+/// localhost TCP, executes `rounds` DGD rounds, returns the report.
+pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
+    let ClusterConfig {
+        n,
+        r,
+        k,
+        eta,
+        rounds,
+        profile,
+        scheduler,
+        dataset,
+        inject,
+        seed,
+        use_pjrt,
+        artifact_dir,
+        loss_every,
+        listen,
+        spawn_workers,
+    } = cfg;
+    anyhow::ensure!(dataset.n == n, "dataset partitions must equal n");
+    anyhow::ensure!(k >= 1 && k <= n, "need 1 ≤ k ≤ n");
+    anyhow::ensure!(r >= 1 && r <= n, "need 1 ≤ r ≤ n");
+
+    let listener = match &listen {
+        Some(addr) => TcpListener::bind(addr.as_str())
+            .with_context(|| format!("bind master listener on {addr}"))?,
+        None => TcpListener::bind("127.0.0.1:0").context("bind master listener")?,
+    };
+    let addr = listener.local_addr()?;
+    if !spawn_workers {
+        println!("master listening on {addr}; waiting for {n} external workers …");
+    }
+
+    // ---- spawn in-process workers (unless external mode) -------------------
+    let mut worker_joins = Vec::with_capacity(n);
+    for w in 0..if spawn_workers { n } else { 0 } {
+        let injected = inject.as_ref().map(|kind| {
+            TaskDelaySampler::new(kind.build(n), n, w, seed ^ 0xD37A_u64 ^ (w as u64) << 17)
+        });
+        let opts = super::worker::WorkerOptions {
+            backend: if use_pjrt {
+                super::worker::Backend::Pjrt
+            } else {
+                super::worker::Backend::CpuOracle
+            },
+            injected,
+            artifact_dir: artifact_dir.clone(),
+        };
+        worker_joins.push(
+            std::thread::Builder::new()
+                .name(format!("worker{w}"))
+                .spawn(move || super::worker::run_worker(addr, opts))?,
+        );
+    }
+
+    // ---- accept + handshake ------------------------------------------------
+    let mut streams: Vec<TcpStream> = Vec::with_capacity(n);
+    let (res_tx, res_rx) = mpsc::channel::<Msg>();
+    for id in 0..n {
+        let (stream, _) = listener.accept().context("accepting worker")?;
+        stream.set_nodelay(true)?;
+        Msg::Welcome {
+            worker_id: id as u32,
+            profile: profile.clone(),
+        }
+        .write_to(&mut &stream)?;
+        // receiver thread: forward Results to the master channel
+        let mut rd = stream.try_clone()?;
+        let tx = res_tx.clone();
+        std::thread::Builder::new()
+            .name(format!("master-recv{id}"))
+            .spawn(move || loop {
+                match Msg::read_from(&mut rd) {
+                    Ok(msg) => {
+                        if tx.send(msg).is_err() {
+                            return;
+                        }
+                    }
+                    Err(_) => return,
+                }
+            })?;
+        streams.push(stream);
+    }
+
+    // ---- data distribution --------------------------------------------------
+    // fixed schedulers: ship only the batches in the worker's TO row;
+    // randomized (RA): ship everything.
+    let mut rng_sched = Rng::seed_from_u64(seed ^ 0x5C4ED);
+    let fixed_to = if scheduler.is_randomized() {
+        None
+    } else {
+        Some(scheduler.schedule(n, r, &mut rng_sched))
+    };
+    for (id, stream) in streams.iter().enumerate() {
+        let needed: Vec<usize> = match &fixed_to {
+            Some(to) => to.row(id).to_vec(),
+            None => (0..n).collect(),
+        };
+        let batches: Vec<(u32, Vec<f32>)> = needed
+            .iter()
+            .map(|&b| (b as u32, dataset.parts[b].to_f32()))
+            .collect();
+        Msg::LoadData {
+            d: dataset.d as u32,
+            b: dataset.b as u32,
+            batches,
+        }
+        .write_to(&mut &*stream)?;
+    }
+
+    // ---- round loop ----------------------------------------------------------
+    let mut master = UncodedMaster::new(&dataset, eta, k);
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut recorders = vec![DelayRecorder::default(); n];
+    let mut logs = Vec::with_capacity(rounds);
+
+    for round in 0..rounds {
+        let to = match &fixed_to {
+            Some(to) => to.clone(),
+            None => scheduler.schedule(n, r, &mut rng_sched),
+        };
+        let theta32: Vec<f32> = master.theta.iter().map(|&v| v as f32).collect();
+        let round_tag = round as u32;
+        let t0_us = now_us();
+        for (id, stream) in streams.iter().enumerate() {
+            let row = to.row(id);
+            Msg::Assign {
+                round: round_tag,
+                theta: theta32.clone(),
+                tasks: row.iter().map(|&t| t as u32).collect(),
+                // identity mapping in cluster mode (no Remark-3
+                // reshuffle — it would force data re-distribution)
+                batches: row.iter().map(|&t| t as u32).collect(),
+            }
+            .write_to(&mut &*stream)?;
+        }
+
+        // collect k distinct
+        let mut seen = HashSet::with_capacity(k);
+        let mut received: Vec<(usize, Vec<f64>)> = Vec::with_capacity(k);
+        let mut results_seen = 0usize;
+        let completion_ms;
+        loop {
+            let msg = res_rx
+                .recv_timeout(Duration::from_secs(60))
+                .context("master timed out waiting for results")?;
+            let Msg::Result {
+                round: rr,
+                worker_id,
+                task,
+                comp_us,
+                send_ts_us,
+                h,
+            } = msg
+            else {
+                continue;
+            };
+            if rr != round_tag {
+                continue; // stale result from a stopped round
+            }
+            let recv_us = now_us();
+            results_seen += 1;
+            recorders[worker_id as usize].record_comp(comp_us as f64 / 1e3);
+            recorders[worker_id as usize]
+                .record_comm((recv_us.saturating_sub(send_ts_us)) as f64 / 1e3);
+            if seen.insert(task) {
+                received.push((task as usize, h.into_iter().map(|v| v as f64).collect()));
+                if received.len() == k {
+                    completion_ms = (recv_us - t0_us) as f64 / 1e3;
+                    break;
+                }
+            }
+        }
+
+        // acknowledgement: stop all workers for this round (paper §II)
+        for stream in &streams {
+            Msg::Stop { round: round_tag }.write_to(&mut &*stream)?;
+        }
+
+        let winners: Vec<usize> = received.iter().map(|(t, _)| *t).collect();
+        master.apply_round(&received, n, dataset.padded_samples(), &mut rng);
+        let loss = if loss_every > 0 && (round + 1) % loss_every == 0 {
+            Some(dataset.loss(&master.theta))
+        } else {
+            None
+        };
+        logs.push(RoundLog {
+            round,
+            completion_ms,
+            winners,
+            results_seen,
+            loss,
+        });
+    }
+
+    // ---- teardown -----------------------------------------------------------
+    for stream in &streams {
+        let _ = Msg::Shutdown.write_to(&mut &*stream);
+        let _ = stream.shutdown(std::net::Shutdown::Both);
+    }
+    for j in worker_joins {
+        match j.join() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => eprintln!("worker exited with error: {e:#}"),
+            Err(_) => eprintln!("worker thread panicked"),
+        }
+    }
+
+    let final_loss = dataset.loss(&master.theta);
+    Ok(ClusterReport {
+        rounds: logs,
+        recorders,
+        final_theta: master.theta,
+        final_loss,
+    })
+}
+
+// `impl Write for &TcpStream` is used via `&mut &stream`; keep a local
+// assertion that the pattern stays valid if the protocol changes.
+#[allow(dead_code)]
+fn _assert_stream_write(stream: &TcpStream) {
+    let _ = (&mut &*stream).flush();
+}

@@ -1,0 +1,102 @@
+//! Master/worker cluster — the testbed that substitutes for the paper's
+//! Amazon EC2 deployment (DESIGN.md §2).
+//!
+//! Real sockets (localhost TCP), real framed protocol, real compute
+//! (PJRT on the AOT artifacts, or the f64 CPU oracle for tests), real
+//! streaming semantics: workers compute their assigned tasks
+//! *sequentially* and ship every result the moment it is ready; the
+//! master stops the round by acknowledgement as soon as it holds `k`
+//! distinct results (paper §II).  Communication delays are modeled by
+//! delaying *delivery* (not the worker's next computation) so eq. (1)'s
+//! overlap semantics hold: `t_{i,C(i,j)} = Σ_{m≤j} T⁽¹⁾ + T⁽²⁾_j`.
+//!
+//! Because the paper's t2.micro delays (ms-scale, comm ≫ comp) cannot
+//! arise naturally between threads of one process, workers accept an
+//! **injected delay sampler** driven by the same [`crate::delay`] models
+//! the Monte-Carlo engine uses; with injection disabled you measure the
+//! machine's true microsecond-scale delays instead (that mode feeds the
+//! Fig.-3-style histograms).
+
+pub mod master;
+pub mod protocol;
+pub mod worker;
+
+pub use master::{run_cluster, ClusterConfig, ClusterReport, RoundLog};
+pub use protocol::Msg;
+pub use worker::{run_worker, Backend, WorkerOptions};
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use crate::delay::{DelayModel, DelaySample};
+use crate::util::rng::Rng;
+
+/// Shared process clock: µs since the first call.  Master and in-proc
+/// workers share it, so one-way delays are directly measurable (the
+/// paper's MPI testbed has the same property within an instance; across
+/// instances it relies on EC2's clock sync — see DESIGN.md §2).
+pub fn now_us() -> u64 {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    let epoch = EPOCH.get_or_init(Instant::now);
+    epoch.elapsed().as_micros() as u64
+}
+
+/// Per-task delay sampler used by workers to inject straggling, adapted
+/// from any round-level [`DelayModel`] (draws 1×1 rounds).
+pub struct TaskDelaySampler {
+    model: Box<dyn DelayModel>,
+    rng: Rng,
+    buf: DelaySample,
+    /// which worker's marginal to draw (heterogeneous models)
+    worker: usize,
+    n_model: usize,
+}
+
+impl TaskDelaySampler {
+    pub fn new(model: Box<dyn DelayModel>, n_model: usize, worker: usize, seed: u64) -> Self {
+        Self {
+            model,
+            rng: Rng::seed_from_u64(seed ^ (worker as u64).wrapping_mul(0x9E37_79B9)),
+            buf: DelaySample::zeros(n_model, 1),
+            worker,
+            n_model,
+        }
+    }
+
+    /// Draw `(comp_ms, comm_ms)` for one task at this worker.
+    pub fn next(&mut self) -> (f64, f64) {
+        debug_assert!(self.worker < self.n_model);
+        self.model.sample_into(&mut self.buf, &mut self.rng);
+        (self.buf.comp(self.worker, 0), self.buf.comm(self.worker, 0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::delay::TruncatedGaussianModel;
+
+    #[test]
+    fn clock_is_monotone() {
+        let a = now_us();
+        let b = now_us();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn sampler_draws_worker_marginal() {
+        // scenario-2 workers have different means; sampler for worker w
+        // must track worker w's marginal
+        let n = 6;
+        let model = TruncatedGaussianModel::scenario2(n, 5);
+        let want = model.comp[3].mu;
+        let mut s = TaskDelaySampler::new(Box::new(model), n, 3, 1);
+        let mut acc = 0.0;
+        let trials = 5000;
+        for _ in 0..trials {
+            acc += s.next().0;
+        }
+        let got = acc / trials as f64;
+        assert!((got - want).abs() < 0.01, "{got} vs {want}");
+    }
+}

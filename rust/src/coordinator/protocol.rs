@@ -1,0 +1,378 @@
+//! Wire protocol of the master/worker cluster (the EC2 substitute).
+//!
+//! Length-prefixed binary frames over TCP: `u32-LE length` + payload,
+//! payload = `u8 tag` + little-endian fields.  Hand-rolled (no serde in
+//! the offline build, DESIGN.md §5) with exhaustive encode/decode tests.
+//!
+//! Message flow, mirroring paper §II exactly:
+//!
+//! ```text
+//! master → worker:  Welcome, LoadData (once), Assign (per round),
+//!                   Stop (ack — paper's "acknowledgement message"),
+//!                   Shutdown
+//! worker → master:  Result (one per completed task, sent immediately
+//!                   after the computation — the streaming model)
+//! ```
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+/// Maximum accepted frame: guards against corrupt length prefixes.
+pub const MAX_FRAME: u32 = 256 * 1024 * 1024;
+
+/// Protocol messages.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    /// master → worker on accept: your id and the artifact profile.
+    Welcome { worker_id: u32, profile: String },
+    /// master → worker once: the data batches this worker will hold.
+    /// Each entry is `(batch_id, x ∈ R^{d×b} row-major, y·X ∈ R^d)`.
+    LoadData {
+        d: u32,
+        b: u32,
+        batches: Vec<(u32, Vec<f32>)>,
+    },
+    /// master → worker, one per round: parameters + ordered task list
+    /// (the worker's TO-matrix row; `batches[j]` is the batch index the
+    /// `j`-th task maps to under the master's current task↔batch map).
+    Assign {
+        round: u32,
+        theta: Vec<f32>,
+        tasks: Vec<u32>,
+        batches: Vec<u32>,
+    },
+    /// worker → master after each task: the computed `h(X)` plus the
+    /// worker-measured computation time and the send timestamp (µs on
+    /// the shared process clock) so the master can measure comm delay.
+    Result {
+        round: u32,
+        worker_id: u32,
+        task: u32,
+        comp_us: u64,
+        send_ts_us: u64,
+        h: Vec<f32>,
+    },
+    /// master → worker: round complete, abandon remaining tasks
+    /// (the paper's acknowledgement).
+    Stop { round: u32 },
+    /// master → worker: tear down.
+    Shutdown,
+}
+
+impl Msg {
+    const TAG_WELCOME: u8 = 1;
+    const TAG_LOAD: u8 = 2;
+    const TAG_ASSIGN: u8 = 3;
+    const TAG_RESULT: u8 = 4;
+    const TAG_STOP: u8 = 5;
+    const TAG_SHUTDOWN: u8 = 6;
+
+    /// Serialize into a payload (without the length prefix).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(64);
+        match self {
+            Msg::Welcome { worker_id, profile } => {
+                out.push(Self::TAG_WELCOME);
+                put_u32(&mut out, *worker_id);
+                put_bytes(&mut out, profile.as_bytes());
+            }
+            Msg::LoadData { d, b, batches } => {
+                out.push(Self::TAG_LOAD);
+                put_u32(&mut out, *d);
+                put_u32(&mut out, *b);
+                put_u32(&mut out, batches.len() as u32);
+                for (id, x) in batches {
+                    put_u32(&mut out, *id);
+                    put_f32s(&mut out, x);
+                }
+            }
+            Msg::Assign {
+                round,
+                theta,
+                tasks,
+                batches,
+            } => {
+                out.push(Self::TAG_ASSIGN);
+                put_u32(&mut out, *round);
+                put_f32s(&mut out, theta);
+                put_u32s(&mut out, tasks);
+                put_u32s(&mut out, batches);
+            }
+            Msg::Result {
+                round,
+                worker_id,
+                task,
+                comp_us,
+                send_ts_us,
+                h,
+            } => {
+                out.push(Self::TAG_RESULT);
+                put_u32(&mut out, *round);
+                put_u32(&mut out, *worker_id);
+                put_u32(&mut out, *task);
+                put_u64(&mut out, *comp_us);
+                put_u64(&mut out, *send_ts_us);
+                put_f32s(&mut out, h);
+            }
+            Msg::Stop { round } => {
+                out.push(Self::TAG_STOP);
+                put_u32(&mut out, *round);
+            }
+            Msg::Shutdown => out.push(Self::TAG_SHUTDOWN),
+        }
+        out
+    }
+
+    /// Deserialize a payload.
+    pub fn decode(buf: &[u8]) -> Result<Msg> {
+        let mut c = Cursor { buf, pos: 0 };
+        let tag = c.u8()?;
+        let msg = match tag {
+            Self::TAG_WELCOME => Msg::Welcome {
+                worker_id: c.u32()?,
+                profile: String::from_utf8(c.bytes()?.to_vec()).context("profile utf8")?,
+            },
+            Self::TAG_LOAD => {
+                let d = c.u32()?;
+                let b = c.u32()?;
+                let count = c.u32()? as usize;
+                let mut batches = Vec::with_capacity(count);
+                for _ in 0..count {
+                    let id = c.u32()?;
+                    batches.push((id, c.f32s()?));
+                }
+                Msg::LoadData { d, b, batches }
+            }
+            Self::TAG_ASSIGN => Msg::Assign {
+                round: c.u32()?,
+                theta: c.f32s()?,
+                tasks: c.u32s()?,
+                batches: c.u32s()?,
+            },
+            Self::TAG_RESULT => Msg::Result {
+                round: c.u32()?,
+                worker_id: c.u32()?,
+                task: c.u32()?,
+                comp_us: c.u64()?,
+                send_ts_us: c.u64()?,
+                h: c.f32s()?,
+            },
+            Self::TAG_STOP => Msg::Stop { round: c.u32()? },
+            Self::TAG_SHUTDOWN => Msg::Shutdown,
+            t => bail!("unknown message tag {t}"),
+        };
+        if c.pos != buf.len() {
+            bail!("trailing bytes in frame (tag {tag})");
+        }
+        Ok(msg)
+    }
+
+    /// Write as a framed message.
+    pub fn write_to(&self, w: &mut impl Write) -> Result<()> {
+        let payload = self.encode();
+        anyhow::ensure!(payload.len() as u32 <= MAX_FRAME, "frame too large");
+        w.write_all(&(payload.len() as u32).to_le_bytes())?;
+        w.write_all(&payload)?;
+        w.flush()?;
+        Ok(())
+    }
+
+    /// Read one framed message (blocking).
+    pub fn read_from(r: &mut impl Read) -> Result<Msg> {
+        let mut len4 = [0u8; 4];
+        r.read_exact(&mut len4).context("reading frame length")?;
+        let len = u32::from_le_bytes(len4);
+        anyhow::ensure!(len <= MAX_FRAME, "oversized frame {len}");
+        let mut payload = vec![0u8; len as usize];
+        r.read_exact(&mut payload).context("reading frame body")?;
+        Msg::decode(&payload)
+    }
+}
+
+// ---- little-endian put/get helpers ----------------------------------------
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_bytes(out: &mut Vec<u8>, b: &[u8]) {
+    put_u32(out, b.len() as u32);
+    out.extend_from_slice(b);
+}
+
+fn put_u32s(out: &mut Vec<u8>, xs: &[u32]) {
+    put_u32(out, xs.len() as u32);
+    for &x in xs {
+        put_u32(out, x);
+    }
+}
+
+fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    put_u32(out, xs.len() as u32);
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("frame truncated at byte {}", self.pos);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn bytes(&mut self) -> Result<&'a [u8]> {
+        let len = self.u32()? as usize;
+        self.take(len)
+    }
+
+    fn u32s(&mut self) -> Result<Vec<u32>> {
+        let len = self.u32()? as usize;
+        anyhow::ensure!(len * 4 <= self.buf.len() - self.pos, "u32 array overruns frame");
+        (0..len).map(|_| self.u32()).collect()
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let len = self.u32()? as usize;
+        anyhow::ensure!(len * 4 <= self.buf.len() - self.pos, "f32 array overruns frame");
+        let mut v = Vec::with_capacity(len);
+        for _ in 0..len {
+            v.push(f32::from_le_bytes(self.take(4)?.try_into().unwrap()));
+        }
+        Ok(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(msg: Msg) {
+        let enc = msg.encode();
+        let dec = Msg::decode(&enc).expect("decode");
+        assert_eq!(dec, msg);
+    }
+
+    #[test]
+    fn all_messages_roundtrip() {
+        roundtrip(Msg::Welcome {
+            worker_id: 7,
+            profile: "fig5".into(),
+        });
+        roundtrip(Msg::LoadData {
+            d: 3,
+            b: 2,
+            batches: vec![(0, vec![1.0, -2.0, 3.5, 0.0, 9.25, -0.5]), (4, vec![0.0; 6])],
+        });
+        roundtrip(Msg::Assign {
+            round: 12,
+            theta: vec![0.5, -1.5],
+            tasks: vec![3, 1, 0],
+            batches: vec![3, 1, 0],
+        });
+        roundtrip(Msg::Result {
+            round: 12,
+            worker_id: 2,
+            task: 3,
+            comp_us: 1234,
+            send_ts_us: 999_999,
+            h: vec![f32::MIN, f32::MAX, 0.0],
+        });
+        roundtrip(Msg::Stop { round: 12 });
+        roundtrip(Msg::Shutdown);
+    }
+
+    #[test]
+    fn framed_stream_roundtrip() {
+        let msgs = vec![
+            Msg::Welcome {
+                worker_id: 0,
+                profile: "quickstart".into(),
+            },
+            Msg::Stop { round: 3 },
+            Msg::Shutdown,
+        ];
+        let mut wire = Vec::new();
+        for m in &msgs {
+            m.write_to(&mut wire).unwrap();
+        }
+        let mut r = &wire[..];
+        for m in &msgs {
+            assert_eq!(&Msg::read_from(&mut r).unwrap(), m);
+        }
+        // stream exhausted
+        assert!(Msg::read_from(&mut r).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_tag() {
+        assert!(Msg::decode(&[99]).is_err());
+    }
+
+    #[test]
+    fn rejects_trailing_bytes() {
+        let mut enc = Msg::Stop { round: 1 }.encode();
+        enc.push(0);
+        assert!(Msg::decode(&enc).is_err());
+    }
+
+    #[test]
+    fn rejects_truncation_everywhere() {
+        let enc = Msg::Result {
+            round: 1,
+            worker_id: 2,
+            task: 3,
+            comp_us: 4,
+            send_ts_us: 5,
+            h: vec![1.0, 2.0],
+        }
+        .encode();
+        for cut in 1..enc.len() {
+            assert!(Msg::decode(&enc[..cut]).is_err(), "cut at {cut} should fail");
+        }
+    }
+
+    #[test]
+    fn rejects_oversized_frame_header() {
+        let bogus = (MAX_FRAME + 1).to_le_bytes();
+        let mut stream: Vec<u8> = bogus.to_vec();
+        stream.extend_from_slice(&[0u8; 16]);
+        let mut r = &stream[..];
+        assert!(Msg::read_from(&mut r).is_err());
+    }
+
+    #[test]
+    fn rejects_lying_array_length() {
+        // Assign with a u32s length claiming more than the frame holds
+        let mut enc = vec![3u8]; // TAG_ASSIGN
+        enc.extend_from_slice(&1u32.to_le_bytes()); // round
+        enc.extend_from_slice(&0u32.to_le_bytes()); // theta len 0
+        enc.extend_from_slice(&1_000_000u32.to_le_bytes()); // tasks len lie
+        assert!(Msg::decode(&enc).is_err());
+    }
+}

@@ -1,0 +1,272 @@
+//! Worker node: sequential task execution with immediate streaming of
+//! results (paper §II).
+//!
+//! Thread layout per worker:
+//!
+//! * **reader** — drains the master connection, publishing the latest
+//!   `Stop` round into an atomic and forwarding `Assign`/`LoadData`
+//!   through a channel (so a Stop is seen *between tasks*, matching the
+//!   paper's "receives the acknowledgement … and stops computations");
+//! * **compute loop** (this thread) — runs tasks in TO-matrix order;
+//! * **delivery threads** — each result is handed to a short-lived
+//!   sender that sleeps out the injected communication delay before
+//!   writing the frame, so comm delays overlap the worker's subsequent
+//!   computations exactly as in eq. (1).
+
+use std::collections::HashMap;
+use std::io::Write as _;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicI64, AtomicU32, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::protocol::Msg;
+use super::{now_us, TaskDelaySampler};
+use crate::linalg::Mat;
+use crate::runtime::Runtime;
+
+/// Which engine computes `h(X) = X Xᵀ θ` on the worker.
+pub enum Backend {
+    /// PJRT executing the AOT artifact (`<profile>/task_gram`) — the
+    /// production path; python is *not* involved (HLO was lowered at
+    /// build time).
+    Pjrt,
+    /// f64 CPU oracle (`linalg::Mat`), for artifact-less test runs.
+    CpuOracle,
+}
+
+/// Worker-side options.
+pub struct WorkerOptions {
+    pub backend: Backend,
+    /// injected per-task (comp, comm) delays; `None` = measure reality
+    pub injected: Option<TaskDelaySampler>,
+    /// artifact directory override (defaults to $STRAGGLER_ARTIFACTS)
+    pub artifact_dir: Option<std::path::PathBuf>,
+}
+
+enum Work {
+    Load {
+        d: u32,
+        batches: Vec<(u32, Vec<f32>)>,
+    },
+    Assign {
+        round: u32,
+        theta: Vec<f32>,
+        tasks: Vec<u32>,
+        batches: Vec<u32>,
+    },
+    Shutdown,
+}
+
+/// Run one worker until the master sends `Shutdown`.
+pub fn run_worker(addr: std::net::SocketAddr, mut opts: WorkerOptions) -> Result<()> {
+    let stream = TcpStream::connect(addr).context("worker connect")?;
+    stream.set_nodelay(true)?;
+    let mut reader = stream.try_clone()?;
+    let writer = Arc::new(Mutex::new(stream));
+
+    // handshake
+    let (worker_id, profile) = match Msg::read_from(&mut reader)? {
+        Msg::Welcome { worker_id, profile } => (worker_id, profile),
+        other => anyhow::bail!("expected Welcome, got {other:?}"),
+    };
+
+    // latest acknowledged round (-1 = none): Stop(r) means "round r done"
+    let stopped_round = Arc::new(AtomicI64::new(-1));
+    let inflight = Arc::new(AtomicU32::new(0));
+    let (work_tx, work_rx) = mpsc::channel::<Work>();
+
+    // reader thread: route control messages
+    {
+        let stopped = Arc::clone(&stopped_round);
+        let tx = work_tx.clone();
+        std::thread::Builder::new()
+            .name(format!("worker{worker_id}-reader"))
+            .spawn(move || loop {
+                match Msg::read_from(&mut reader) {
+                    Ok(Msg::LoadData { d, b: _, batches }) => {
+                        let _ = tx.send(Work::Load { d, batches });
+                    }
+                    Ok(Msg::Assign {
+                        round,
+                        theta,
+                        tasks,
+                        batches,
+                    }) => {
+                        let _ = tx.send(Work::Assign {
+                            round,
+                            theta,
+                            tasks,
+                            batches,
+                        });
+                    }
+                    Ok(Msg::Stop { round }) => {
+                        stopped.fetch_max(round as i64, Ordering::SeqCst);
+                    }
+                    Ok(Msg::Shutdown) | Err(_) => {
+                        let _ = tx.send(Work::Shutdown);
+                        return;
+                    }
+                    Ok(other) => {
+                        eprintln!("worker {worker_id}: unexpected {other:?}");
+                    }
+                }
+            })?;
+    }
+
+    // compute state
+    #[allow(unused_assignments)]
+    let mut dim = 0usize;
+    let mut oracle_parts: HashMap<u32, Mat> = HashMap::new();
+    let mut pjrt_parts: HashMap<u32, Vec<f32>> = HashMap::new();
+    let mut runtime: Option<Runtime> = None;
+
+    loop {
+        let work = work_rx.recv().context("worker channel closed")?;
+        match work {
+            Work::Shutdown => return Ok(()),
+            Work::Load { d, batches } => {
+                dim = d as usize;
+                match opts.backend {
+                    Backend::CpuOracle => {
+                        for (id, x) in batches {
+                            let b = x.len() / dim;
+                            oracle_parts.insert(
+                                id,
+                                Mat::from_fn(dim, b, |i, j| x[i * b + j] as f64),
+                            );
+                        }
+                    }
+                    Backend::Pjrt => {
+                        if runtime.is_none() {
+                            let dir = opts
+                                .artifact_dir
+                                .clone()
+                                .unwrap_or_else(crate::runtime::default_artifact_dir);
+                            runtime = Some(Runtime::new(dir)?);
+                        }
+                        // upload each partition to the device once —
+                        // X is round-invariant, so the per-task hot
+                        // path only ships θ (§Perf)
+                        let rt = runtime.as_mut().unwrap();
+                        let meta = rt.manifest().get(&profile, "task_gram")?.clone();
+                        let shape = meta.arg_shapes[0].clone();
+                        for (id, x) in batches {
+                            rt.upload(&format!("x{id}"), &x, &shape)?;
+                            pjrt_parts.insert(id, x);
+                        }
+                    }
+                }
+            }
+            Work::Assign {
+                round,
+                theta,
+                tasks,
+                batches,
+            } => {
+                for (slot, (&task, &batch)) in tasks.iter().zip(&batches).enumerate() {
+                    // paper: stop as soon as the ack for *this* round lands
+                    if stopped_round.load(Ordering::SeqCst) >= round as i64 {
+                        break;
+                    }
+                    let _ = slot;
+                    // --- computation phase (eq. 1 first term) ---
+                    let t0 = now_us();
+                    let (inj_comp_ms, inj_comm_ms) = match opts.injected.as_mut() {
+                        Some(s) => s.next(),
+                        None => (0.0, 0.0),
+                    };
+                    if inj_comp_ms > 0.0 {
+                        spin_sleep(Duration::from_secs_f64(inj_comp_ms / 1e3));
+                    }
+                    let h: Vec<f32> = match opts.backend {
+                        Backend::CpuOracle => {
+                            let part = oracle_parts
+                                .get(&batch)
+                                .with_context(|| format!("batch {batch} not loaded"))?;
+                            let theta64: Vec<f64> =
+                                theta.iter().map(|&v| v as f64).collect();
+                            part.gram_matvec(&theta64)
+                                .into_iter()
+                                .map(|v| v as f32)
+                                .collect()
+                        }
+                        Backend::Pjrt => {
+                            let rt = runtime.as_mut().expect("runtime initialized on load");
+                            anyhow::ensure!(
+                                pjrt_parts.contains_key(&batch),
+                                "batch {batch} not loaded"
+                            );
+                            rt.task_gram_resident(&profile, &format!("x{batch}"), &theta)?
+                        }
+                    };
+                    let comp_us = now_us() - t0;
+
+                    // --- communication phase (eq. 1 second term) ---
+                    // delivery is delayed on a separate thread so the
+                    // next computation starts immediately
+                    let msg = Msg::Result {
+                        round,
+                        worker_id,
+                        task,
+                        comp_us,
+                        send_ts_us: now_us(),
+                        h,
+                    };
+                    let writer = Arc::clone(&writer);
+                    let inflight2 = Arc::clone(&inflight);
+                    inflight.fetch_add(1, Ordering::SeqCst);
+                    std::thread::Builder::new()
+                        .name(format!("worker{worker_id}-send"))
+                        .spawn(move || {
+                            if inj_comm_ms > 0.0 {
+                                spin_sleep(Duration::from_secs_f64(inj_comm_ms / 1e3));
+                            }
+                            let mut w = writer.lock().expect("writer poisoned");
+                            let payload = msg.encode();
+                            let _ = w.write_all(&(payload.len() as u32).to_le_bytes());
+                            let _ = w.write_all(&payload);
+                            let _ = w.flush();
+                            inflight2.fetch_sub(1, Ordering::SeqCst);
+                        })?;
+                }
+            }
+        }
+    }
+}
+
+/// Hybrid sleep: OS sleep for the bulk, spin for the tail — delays are
+/// fractions of a millisecond in the paper's scenarios, far below the
+/// scheduler's wakeup granularity.
+fn spin_sleep(d: Duration) {
+    let start = std::time::Instant::now();
+    if d > Duration::from_micros(300) {
+        std::thread::sleep(d - Duration::from_micros(200));
+    }
+    while start.elapsed() < d {
+        std::hint::spin_loop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spin_sleep_is_accurate_to_tens_of_us() {
+        for ms in [0.1f64, 0.5, 2.0] {
+            let d = Duration::from_secs_f64(ms / 1e3);
+            let t0 = std::time::Instant::now();
+            spin_sleep(d);
+            let elapsed = t0.elapsed();
+            assert!(elapsed >= d, "slept too little");
+            assert!(
+                elapsed < d + Duration::from_micros(900),
+                "{ms} ms sleep overshot: {elapsed:?}"
+            );
+        }
+    }
+}

@@ -1,0 +1,212 @@
+//! Synthetic linear-regression dataset — paper §VI-C.
+//!
+//! `X ∈ R^{N×d}` with i.i.d. `N(0,1)` entries, labels
+//! `y_i = (X_i + Z)ᵀ U` with noise `Z ~ N(0, 0.01)` elementwise and a
+//! ground-truth `U ~ U(0,1)^d`.  The dataset is split into `n`
+//! partitions `X_i ∈ R^{d×b}` (samples as columns, `b = ⌈N/n⌉`,
+//! zero-padded when `n ∤ N` exactly as the paper does for Fig. 6).
+
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+
+/// A partitioned regression dataset.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// number of partitions (= tasks = workers)
+    pub n: usize,
+    /// feature dimension
+    pub d: usize,
+    /// samples per partition (after padding)
+    pub b: usize,
+    /// true sample count before padding
+    pub n_samples: usize,
+    /// partitions `X_i ∈ R^{d×b}`
+    pub parts: Vec<Mat>,
+    /// labels per partition, `y_i ∈ R^b`
+    pub labels: Vec<Vec<f64>>,
+    /// ground-truth weight vector `U` (for oracle error tracking)
+    pub truth: Vec<f64>,
+}
+
+impl Dataset {
+    /// Generate per the paper's recipe.
+    pub fn synthesize(n: usize, d: usize, n_samples: usize, seed: u64) -> Self {
+        assert!(n >= 1 && d >= 1 && n_samples >= n, "degenerate dataset shape");
+        let mut rng = Rng::seed_from_u64(seed);
+        let b = n_samples.div_ceil(n);
+        let truth: Vec<f64> = (0..d).map(|_| rng.f64()).collect(); // U(0,1)
+
+        let mut parts = Vec::with_capacity(n);
+        let mut labels = Vec::with_capacity(n);
+        let mut produced = 0usize;
+        for _ in 0..n {
+            let mut x = Mat::zeros(d, b);
+            let mut y = vec![0.0; b];
+            for col in 0..b {
+                if produced >= n_samples {
+                    break; // zero-padded tail (paper Fig. 6 note)
+                }
+                produced += 1;
+                // sample x_col ~ N(0,1)^d ; y = (x + z)ᵀ U
+                let mut dot = 0.0;
+                for row in 0..d {
+                    let v = rng.normal();
+                    x[(row, col)] = v;
+                    let z = 0.1 * rng.normal(); // N(0, 0.01)
+                    dot += (v + z) * truth[row];
+                }
+                y[col] = dot;
+            }
+            parts.push(x);
+            labels.push(y);
+        }
+        Self {
+            n,
+            d,
+            b,
+            n_samples,
+            parts,
+            labels,
+            truth,
+        }
+    }
+
+    /// Total (padded) sample count `N = n·b`.
+    pub fn padded_samples(&self) -> usize {
+        self.n * self.b
+    }
+
+    /// Precomputed per-partition constants `b_i = X_i y_i` (computed
+    /// once by the master, paper §VI-A).
+    pub fn xy_vectors(&self) -> Vec<Vec<f64>> {
+        self.parts
+            .iter()
+            .zip(&self.labels)
+            .map(|(x, y)| x.matvec(y))
+            .collect()
+    }
+
+    /// Loss `F(θ) = 1/N ‖Xθ − y‖²` (eq. 47) over the padded dataset.
+    pub fn loss(&self, theta: &[f64]) -> f64 {
+        let mut total = 0.0;
+        for (x, y) in self.parts.iter().zip(&self.labels) {
+            let preds = x.matvec_t(theta);
+            for (p, yi) in preds.iter().zip(y) {
+                total += (p - yi) * (p - yi);
+            }
+        }
+        total / self.padded_samples() as f64
+    }
+
+    /// Full gradient `∇F(θ) = 2/N Σ (X_i X_iᵀ θ − X_i y_i)` (eq. 48).
+    pub fn full_gradient(&self, theta: &[f64]) -> Vec<f64> {
+        let mut g = vec![0.0; self.d];
+        for (x, y) in self.parts.iter().zip(&self.labels) {
+            let h = x.gram_matvec(theta);
+            let xy = x.matvec(y);
+            for i in 0..self.d {
+                g[i] += h[i] - xy[i];
+            }
+        }
+        let scale = 2.0 / self.padded_samples() as f64;
+        g.iter_mut().for_each(|v| *v *= scale);
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_padding() {
+        // Fig. 6 setting: N = 1000, n = 11 → b = ⌈1000/11⌉ = 91, padded
+        let ds = Dataset::synthesize(11, 20, 1000, 1);
+        assert_eq!(ds.b, 91);
+        assert_eq!(ds.padded_samples(), 1001);
+        assert_eq!(ds.parts.len(), 11);
+        assert_eq!(ds.parts[0].rows, 20);
+        assert_eq!(ds.parts[0].cols, 91);
+        // last partition's final column is padding (all zeros)
+        let last = &ds.parts[10];
+        let zeros = (0..20).all(|row| last[(row, 90)] == 0.0);
+        assert!(zeros, "tail must be zero-padded");
+        assert_eq!(ds.labels[10][90], 0.0);
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = Dataset::synthesize(4, 8, 64, 7);
+        let b = Dataset::synthesize(4, 8, 64, 7);
+        assert_eq!(a.parts[2].data(), b.parts[2].data());
+        let c = Dataset::synthesize(4, 8, 64, 8);
+        assert_ne!(a.parts[2].data(), c.parts[2].data());
+    }
+
+    #[test]
+    fn labels_follow_truth_up_to_noise() {
+        let ds = Dataset::synthesize(2, 30, 200, 3);
+        // loss at the truth should be near the noise floor:
+        // E[((x+z)ᵀU − xᵀU)²] = E[(zᵀU)²] = 0.01·‖U‖²
+        let noise_floor = 0.01 * ds.truth.iter().map(|u| u * u).sum::<f64>();
+        let at_truth = ds.loss(&ds.truth);
+        assert!(
+            at_truth < 3.0 * noise_floor + 0.05,
+            "loss at truth {at_truth} vs floor {noise_floor}"
+        );
+        // and far below the loss at zero
+        assert!(at_truth < 0.2 * ds.loss(&vec![0.0; 30]));
+    }
+
+    #[test]
+    fn full_gradient_matches_finite_differences() {
+        let ds = Dataset::synthesize(3, 6, 30, 5);
+        let theta: Vec<f64> = (0..6).map(|i| 0.1 * i as f64).collect();
+        let g = ds.full_gradient(&theta);
+        let eps = 1e-5;
+        for i in 0..6 {
+            let mut tp = theta.clone();
+            let mut tm = theta.clone();
+            tp[i] += eps;
+            tm[i] -= eps;
+            let fd = (ds.loss(&tp) - ds.loss(&tm)) / (2.0 * eps);
+            assert!(
+                (g[i] - fd).abs() < 1e-5 * (1.0 + fd.abs()),
+                "coord {i}: {} vs {fd}",
+                g[i]
+            );
+        }
+    }
+
+    #[test]
+    fn gradient_near_zero_at_least_squares_solution() {
+        // gradient descent long enough should reach tiny gradient
+        let ds = Dataset::synthesize(2, 5, 100, 9);
+        let mut theta = vec![0.0; 5];
+        for _ in 0..4000 {
+            let g = ds.full_gradient(&theta);
+            for (t, gi) in theta.iter_mut().zip(&g) {
+                *t -= 0.05 * gi;
+            }
+        }
+        let g = ds.full_gradient(&theta);
+        assert!(crate::linalg::norm2(&g) < 1e-6);
+        // and theta is close to truth (noise-limited)
+        let err: f64 = theta
+            .iter()
+            .zip(&ds.truth)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt();
+        assert!(err < 0.5, "recovered θ far from truth: {err}");
+    }
+
+    #[test]
+    fn xy_vectors_match_direct() {
+        let ds = Dataset::synthesize(3, 4, 12, 11);
+        let xy = ds.xy_vectors();
+        for i in 0..3 {
+            assert_eq!(xy[i], ds.parts[i].matvec(&ds.labels[i]));
+        }
+    }
+}

@@ -1,0 +1,173 @@
+//! Worker-correlated delay wrapper.
+//!
+//! The paper's statistical model (§II) explicitly allows the delays of
+//! different tasks *at the same worker* to be dependent (joint CDF
+//! `F_{i,[n]}`), while workers stay independent.  This wrapper induces
+//! exactly that: per round and worker it draws a log-normal slowdown
+//! multiplier `Z_i = exp(σ·G)` (mean-normalized) applied to every slot
+//! of that worker — the classic "machine is busy this round" effect.
+//! With `sigma = 0` it degenerates to the inner model (tested).
+
+use crate::util::rng::Rng;
+
+
+use super::{DelayModel, DelaySample};
+
+/// Wraps any [`DelayModel`] with a per-(round, worker) multiplicative
+/// log-normal slowdown of log-std `sigma`, normalized to mean 1 so the
+/// marginal means of the inner model are preserved.
+pub struct WorkerCorrelated<M> {
+    pub inner: M,
+    pub sigma: f64,
+    /// Apply the multiplier to communication delays too (a busy host
+    /// slows its NIC as well); default true.
+    pub affect_comm: bool,
+}
+
+impl<M: DelayModel> WorkerCorrelated<M> {
+    pub fn new(inner: M, sigma: f64) -> Self {
+        assert!(sigma >= 0.0, "sigma must be non-negative");
+        Self {
+            inner,
+            sigma,
+            affect_comm: true,
+        }
+    }
+
+    fn multiplier(&self, rng: &mut Rng) -> f64 {
+        if self.sigma == 0.0 {
+            return 1.0;
+        }
+        // Box–Muller standard normal
+        let u1: f64 = rng.f64().max(1e-300);
+        let u2 = rng.f64();
+        let g = (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+        // E[exp(σG)] = exp(σ²/2); divide it out to keep mean 1
+        (self.sigma * g - self.sigma * self.sigma / 2.0).exp()
+    }
+}
+
+impl<M: DelayModel> DelayModel for WorkerCorrelated<M> {
+    fn name(&self) -> String {
+        format!("correlated(σ={})/{}", self.sigma, self.inner.name())
+    }
+
+    fn sample_into(&self, out: &mut DelaySample, rng: &mut Rng) {
+        self.inner.sample_into(out, rng);
+        let (n, r) = (out.n, out.r);
+        for i in 0..n {
+            let z = self.multiplier(rng);
+            if z == 1.0 {
+                continue;
+            }
+            for j in 0..r {
+                out.comp_mut()[i * r + j] *= z;
+            }
+            if self.affect_comm {
+                for j in 0..r {
+                    out.comm_mut()[i * r + j] *= z;
+                }
+            }
+        }
+    }
+
+    fn mean_comp(&self, worker: usize) -> Option<f64> {
+        // multiplier is mean-1, so marginal means are unchanged
+        self.inner.mean_comp(worker)
+    }
+
+    fn mean_comm(&self, worker: usize) -> Option<f64> {
+        self.inner.mean_comm(worker)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::delay::ShiftedExponential;
+    use crate::util::stats::RunningStats;
+    
+
+    fn rng() -> Rng {
+        Rng::seed_from_u64(0xC088)
+    }
+
+    #[test]
+    fn sigma_zero_is_identity_in_distribution() {
+        let inner = ShiftedExponential::new(0.1, 5.0, 0.2, 3.0);
+        let wrapped = WorkerCorrelated::new(ShiftedExponential::new(0.1, 5.0, 0.2, 3.0), 0.0);
+        let mut r1 = Rng::seed_from_u64(5);
+        let mut r2 = Rng::seed_from_u64(5);
+        let a = inner.sample(3, 2, &mut r1);
+        let b = wrapped.sample(3, 2, &mut r2);
+        for i in 0..3 {
+            for j in 0..2 {
+                assert_eq!(a.comp(i, j), b.comp(i, j));
+                assert_eq!(a.comm(i, j), b.comm(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn preserves_marginal_mean() {
+        let wrapped = WorkerCorrelated::new(ShiftedExponential::new(0.0, 2.0, 0.0, 2.0), 0.5);
+        let mut r = rng();
+        let mut acc = RunningStats::new();
+        for _ in 0..100_000 {
+            acc.push(wrapped.sample(1, 1, &mut r).comp(0, 0));
+        }
+        let want = 0.5; // 1/rate
+        assert!(
+            (acc.mean() - want).abs() < 0.02,
+            "mean drifted: {}",
+            acc.mean()
+        );
+    }
+
+    #[test]
+    fn induces_positive_within_worker_correlation() {
+        let wrapped = WorkerCorrelated::new(ShiftedExponential::new(0.0, 2.0, 0.0, 2.0), 0.8);
+        let mut r = rng();
+        // correlation between slot 0 and slot 1 comp delays of worker 0
+        let (mut sx, mut sy, mut sxy, mut sxx, mut syy) = (0.0, 0.0, 0.0, 0.0, 0.0);
+        let n = 50_000;
+        for _ in 0..n {
+            let s = wrapped.sample(1, 2, &mut r);
+            let (x, y) = (s.comp(0, 0), s.comp(0, 1));
+            sx += x;
+            sy += y;
+            sxy += x * y;
+            sxx += x * x;
+            syy += y * y;
+        }
+        let nf = n as f64;
+        let cov = sxy / nf - (sx / nf) * (sy / nf);
+        let vx = sxx / nf - (sx / nf) * (sx / nf);
+        let vy = syy / nf - (sy / nf) * (sy / nf);
+        let rho = cov / (vx * vy).sqrt();
+        assert!(rho > 0.2, "expected strong positive correlation, got {rho}");
+    }
+
+    #[test]
+    fn workers_remain_independent() {
+        let wrapped = WorkerCorrelated::new(ShiftedExponential::new(0.0, 2.0, 0.0, 2.0), 0.8);
+        let mut r = rng();
+        let (mut sx, mut sy, mut sxy, mut sxx, mut syy) = (0.0, 0.0, 0.0, 0.0, 0.0);
+        let n = 50_000;
+        for _ in 0..n {
+            let s = wrapped.sample(2, 1, &mut r);
+            let (x, y) = (s.comp(0, 0), s.comp(1, 0));
+            sx += x;
+            sy += y;
+            sxy += x * y;
+            sxx += x * x;
+            syy += y * y;
+        }
+        let nf = n as f64;
+        let cov = sxy / nf - (sx / nf) * (sy / nf);
+        let vx = sxx / nf - (sx / nf) * (sx / nf);
+        let vy = syy / nf - (sy / nf) * (sy / nf);
+        let rho = cov / (vx * vy).sqrt();
+        assert!(rho.abs() < 0.05, "workers should be independent, got {rho}");
+    }
+}

@@ -1,0 +1,144 @@
+//! Shifted-exponential delay model.
+//!
+//! The workhorse model of the coded-computation literature (Lee et al.
+//! [3] and most follow-ups model worker latency as `shift + Exp(rate)`),
+//! included both as an ablation and because the r = 1 case admits a
+//! *closed-form* completion-time CDF (hypoexponential sums) that the
+//! [`crate::analysis`] module uses to validate the Monte-Carlo engine
+//! against exact numbers.
+
+use crate::util::rng::Rng;
+
+
+
+use super::{DelayModel, DelaySample};
+
+/// `T = shift + Exp(rate)`; rate in 1/ms, shift in ms.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ShiftedExp {
+    pub shift: f64,
+    pub rate: f64,
+}
+
+impl ShiftedExp {
+    pub fn new(shift: f64, rate: f64) -> Self {
+        assert!(rate > 0.0, "rate must be positive");
+        assert!(shift >= 0.0, "negative shift would allow negative delays");
+        Self { shift, rate }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        // inverse CDF; 1−U ∈ (0,1] avoids ln(0)
+        let u = rng.f64();
+        self.shift - (1.0 - u).max(1e-300).ln() / self.rate
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.shift + 1.0 / self.rate
+    }
+
+    /// Survival function `Pr{T > t}`.
+    pub fn sf(&self, t: f64) -> f64 {
+        if t <= self.shift {
+            1.0
+        } else {
+            (-(t - self.shift) * self.rate).exp()
+        }
+    }
+}
+
+/// All workers share `comp` and `comm` shifted exponentials, i.i.d.
+/// across slots.
+#[derive(Debug, Clone)]
+pub struct ShiftedExponential {
+    pub comp: ShiftedExp,
+    pub comm: ShiftedExp,
+}
+
+impl ShiftedExponential {
+    pub fn new(comp_shift: f64, comp_rate: f64, comm_shift: f64, comm_rate: f64) -> Self {
+        Self {
+            comp: ShiftedExp::new(comp_shift, comp_rate),
+            comm: ShiftedExp::new(comm_shift, comm_rate),
+        }
+    }
+}
+
+impl DelayModel for ShiftedExponential {
+    fn name(&self) -> String {
+        format!(
+            "shifted-exp/comp({:.3}+Exp({:.3}))/comm({:.3}+Exp({:.3}))",
+            self.comp.shift, self.comp.rate, self.comm.shift, self.comm.rate
+        )
+    }
+
+    fn sample_into(&self, out: &mut DelaySample, rng: &mut Rng) {
+        let total = out.n * out.r;
+        for idx in 0..total {
+            out.comp_mut()[idx] = self.comp.sample(rng);
+        }
+        for idx in 0..total {
+            out.comm_mut()[idx] = self.comm.sample(rng);
+        }
+    }
+
+    fn mean_comp(&self, _worker: usize) -> Option<f64> {
+        Some(self.comp.mean())
+    }
+
+    fn mean_comm(&self, _worker: usize) -> Option<f64> {
+        Some(self.comm.mean())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::RunningStats;
+    
+
+    #[test]
+    fn sample_mean_matches_analytic() {
+        let d = ShiftedExp::new(0.2, 4.0);
+        let mut rng = Rng::seed_from_u64(17);
+        let mut acc = RunningStats::new();
+        for _ in 0..200_000 {
+            acc.push(d.sample(&mut rng));
+        }
+        assert!((acc.mean() - d.mean()).abs() < 5.0 * acc.std_err());
+    }
+
+    #[test]
+    fn samples_at_least_shift() {
+        let d = ShiftedExp::new(0.5, 1.0);
+        let mut rng = Rng::seed_from_u64(3);
+        for _ in 0..10_000 {
+            assert!(d.sample(&mut rng) >= 0.5);
+        }
+    }
+
+    #[test]
+    fn survival_function() {
+        let d = ShiftedExp::new(1.0, 2.0);
+        assert_eq!(d.sf(0.5), 1.0);
+        assert_eq!(d.sf(1.0), 1.0);
+        assert!((d.sf(2.0) - (-2.0f64).exp()).abs() < 1e-15);
+    }
+
+    #[test]
+    #[should_panic(expected = "rate must be positive")]
+    fn rejects_bad_rate() {
+        ShiftedExp::new(0.0, 0.0);
+    }
+
+    #[test]
+    fn empirical_sf_matches() {
+        let d = ShiftedExp::new(0.1, 3.0);
+        let mut rng = Rng::seed_from_u64(99);
+        let t = 0.45;
+        let n = 100_000;
+        let over = (0..n).filter(|_| d.sample(&mut rng) > t).count();
+        let emp = over as f64 / n as f64;
+        assert!((emp - d.sf(t)).abs() < 0.01, "{emp} vs {}", d.sf(t));
+    }
+}

@@ -1,0 +1,268 @@
+//! Stochastic delay substrate (paper §II, §VI-C).
+//!
+//! A [`DelayModel`] produces, per round, a matrix of **per-slot** delays:
+//! `comp[i][j]` is the computation delay of the `j`-th *computation slot*
+//! of worker `i` and `comm[i][j]` the communication delay of shipping
+//! that slot's result to the master.  Sampling per slot rather than per
+//! `(worker, task)` pair is faithful to the paper: delay statistics do
+//! not depend on which task occupies the slot (Remark 6 — equal task
+//! size/complexity), and delays across workers are independent (§II).
+//! Correlation between slots *of the same worker* — explicitly allowed
+//! by the paper's model — is provided by [`correlated::WorkerCorrelated`].
+//!
+//! All delays are milliseconds.  The paper's `αEβ` notation means
+//! `α·10⁻ᵝ` seconds, so its §VI-C scenario constants convert as
+//! `1E4 → 0.1 ms`, `5E4 → 0.5 ms`, `3E5 → 0.03 ms`.
+
+pub mod correlated;
+pub mod empirical;
+pub mod exponential;
+pub mod scaled;
+pub mod truncated_gaussian;
+
+pub use correlated::WorkerCorrelated;
+pub use empirical::{Ec2LikeModel, EmpiricalModel, Trace};
+pub use exponential::ShiftedExponential;
+pub use scaled::Scaled;
+pub use truncated_gaussian::{TruncatedGaussian, TruncatedGaussianModel};
+
+use crate::util::rng::Rng;
+
+
+/// One round's worth of per-slot delays for `n` workers × `r` slots.
+///
+/// Flat row-major storage: slot `(i, j)` lives at `i * r + j`.
+#[derive(Debug, Clone)]
+pub struct DelaySample {
+    pub n: usize,
+    pub r: usize,
+    comp: Vec<f64>,
+    comm: Vec<f64>,
+}
+
+impl DelaySample {
+    pub fn zeros(n: usize, r: usize) -> Self {
+        Self {
+            n,
+            r,
+            comp: vec![0.0; n * r],
+            comm: vec![0.0; n * r],
+        }
+    }
+
+    /// Build from explicit matrices (tests, deterministic scenarios).
+    pub fn from_rows(comp: Vec<Vec<f64>>, comm: Vec<Vec<f64>>) -> Self {
+        let n = comp.len();
+        assert_eq!(n, comm.len(), "comp/comm worker counts differ");
+        let r = comp.first().map_or(0, Vec::len);
+        let mut flat_comp = Vec::with_capacity(n * r);
+        let mut flat_comm = Vec::with_capacity(n * r);
+        for (c1, c2) in comp.iter().zip(&comm) {
+            assert_eq!(c1.len(), r, "ragged comp row");
+            assert_eq!(c2.len(), r, "ragged comm row");
+            flat_comp.extend_from_slice(c1);
+            flat_comm.extend_from_slice(c2);
+        }
+        Self {
+            n,
+            r,
+            comp: flat_comp,
+            comm: flat_comm,
+        }
+    }
+
+    #[inline]
+    pub fn comp(&self, worker: usize, slot: usize) -> f64 {
+        self.comp[worker * self.r + slot]
+    }
+
+    #[inline]
+    pub fn comm(&self, worker: usize, slot: usize) -> f64 {
+        self.comm[worker * self.r + slot]
+    }
+
+    #[inline]
+    pub fn comp_row(&self, worker: usize) -> &[f64] {
+        &self.comp[worker * self.r..(worker + 1) * self.r]
+    }
+
+    #[inline]
+    pub fn comm_row(&self, worker: usize) -> &[f64] {
+        &self.comm[worker * self.r..(worker + 1) * self.r]
+    }
+
+    #[inline]
+    pub fn comp_mut(&mut self) -> &mut [f64] {
+        &mut self.comp
+    }
+
+    #[inline]
+    pub fn comm_mut(&mut self) -> &mut [f64] {
+        &mut self.comm
+    }
+
+    /// Arrival time at the master of worker `i`'s `j`-th slot (eq. 1/46):
+    /// prefix sum of its computation delays plus that slot's comm delay.
+    pub fn slot_arrival(&self, worker: usize, slot: usize) -> f64 {
+        let row = self.comp_row(worker);
+        let prefix: f64 = row[..=slot].iter().sum();
+        prefix + self.comm(worker, slot)
+    }
+}
+
+/// A source of per-round delay samples.
+///
+/// `sample_into` must fill **all** `n × r` slots.  Models are `Send +
+/// Sync` so Monte-Carlo sweeps can shard rounds across threads (each
+/// thread owns its RNG).
+pub trait DelayModel: Send + Sync {
+    /// Human-readable name used in reports.
+    fn name(&self) -> String;
+
+    /// Fill `out` (already shaped `n × r`) with fresh delays.
+    fn sample_into(&self, out: &mut DelaySample, rng: &mut Rng);
+
+    /// Convenience allocating wrapper.
+    fn sample(&self, n: usize, r: usize, rng: &mut Rng) -> DelaySample {
+        let mut out = DelaySample::zeros(n, r);
+        self.sample_into(&mut out, rng);
+        out
+    }
+
+    /// Mean computation delay of one slot at `worker` (for reports and
+    /// roofline sanity checks); `None` if unknown analytically.
+    fn mean_comp(&self, _worker: usize) -> Option<f64> {
+        None
+    }
+
+    /// Mean communication delay of one slot at `worker`.
+    fn mean_comm(&self, _worker: usize) -> Option<f64> {
+        None
+    }
+}
+
+/// Config-serializable delay-model description; the harness builds the
+/// trait object from this (single source of truth for CLI + configs).
+#[derive(Debug, Clone)]
+pub enum DelayModelKind {
+    /// Paper §VI-C scenario 1: homogeneous truncated Gaussians.
+    TruncatedGaussianScenario1,
+    /// Paper §VI-C scenario 2: heterogeneous (permuted means).
+    TruncatedGaussianScenario2 { seed: u64 },
+    /// Explicit truncated-Gaussian parameters, shared by all workers.
+    TruncatedGaussian {
+        comp: TruncatedGaussian,
+        comm: TruncatedGaussian,
+    },
+    /// Shifted exponential comp/comm (rate per ms).
+    ShiftedExponential {
+        comp_shift: f64,
+        comp_rate: f64,
+        comm_shift: f64,
+        comm_rate: f64,
+    },
+    /// EC2-like empirical traces (the paper's testbed substitute).
+    Ec2Like { seed: u64, hetero: f64 },
+}
+
+impl DelayModelKind {
+    /// Materialize the model for `n` workers.
+    pub fn build(&self, n: usize) -> Box<dyn DelayModel> {
+        match self {
+            DelayModelKind::TruncatedGaussianScenario1 => {
+                Box::new(TruncatedGaussianModel::scenario1(n))
+            }
+            DelayModelKind::TruncatedGaussianScenario2 { seed } => {
+                Box::new(TruncatedGaussianModel::scenario2(n, *seed))
+            }
+            DelayModelKind::TruncatedGaussian { comp, comm } => Box::new(
+                TruncatedGaussianModel::homogeneous(n, comp.clone(), comm.clone()),
+            ),
+            DelayModelKind::ShiftedExponential {
+                comp_shift,
+                comp_rate,
+                comm_shift,
+                comm_rate,
+            } => Box::new(ShiftedExponential::new(
+                *comp_shift,
+                *comp_rate,
+                *comm_shift,
+                *comm_rate,
+            )),
+            DelayModelKind::Ec2Like { seed, hetero } => {
+                Box::new(Ec2LikeModel::new(n, *seed, *hetero))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_layout_roundtrip() {
+        let s = DelaySample::from_rows(
+            vec![vec![1.0, 2.0], vec![3.0, 4.0]],
+            vec![vec![0.1, 0.2], vec![0.3, 0.4]],
+        );
+        assert_eq!(s.n, 2);
+        assert_eq!(s.r, 2);
+        assert_eq!(s.comp(0, 1), 2.0);
+        assert_eq!(s.comm(1, 0), 0.3);
+        assert_eq!(s.comp_row(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn slot_arrival_is_prefix_sum_plus_comm() {
+        // eq. (1): t_{i,C(i,j)} = Σ_{m≤j} T⁽¹⁾ + T⁽²⁾_j
+        let s = DelaySample::from_rows(
+            vec![vec![1.0, 2.0, 4.0]],
+            vec![vec![10.0, 10.0, 10.0]],
+        );
+        assert_eq!(s.slot_arrival(0, 0), 11.0);
+        assert_eq!(s.slot_arrival(0, 1), 13.0);
+        assert_eq!(s.slot_arrival(0, 2), 17.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn from_rows_rejects_ragged() {
+        DelaySample::from_rows(vec![vec![1.0], vec![1.0, 2.0]], vec![vec![0.0], vec![0.0, 0.0]]);
+    }
+
+    #[test]
+    fn kind_builds_all_variants() {
+        let kinds = [
+            DelayModelKind::TruncatedGaussianScenario1,
+            DelayModelKind::TruncatedGaussianScenario2 { seed: 7 },
+            DelayModelKind::ShiftedExponential {
+                comp_shift: 0.1,
+                comp_rate: 10.0,
+                comm_shift: 0.3,
+                comm_rate: 5.0,
+            },
+            DelayModelKind::Ec2Like { seed: 1, hetero: 0.3 },
+        ];
+        for kind in kinds {
+            let m = kind.build(4);
+            let mut rng = Rng::seed_from_u64(0);
+            let s = m.sample(4, 3, &mut rng);
+            for i in 0..4 {
+                for j in 0..3 {
+                    assert!(s.comp(i, j) > 0.0, "{}", m.name());
+                    assert!(s.comm(i, j) > 0.0, "{}", m.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kind_names_are_informative() {
+        let kind = DelayModelKind::Ec2Like { seed: 42, hetero: 0.25 };
+        let m = kind.build(3);
+        assert!(m.name().contains("ec2-like"));
+        let k2 = DelayModelKind::TruncatedGaussianScenario1.build(4);
+        assert!(k2.name().contains("scenario1"));
+    }
+}

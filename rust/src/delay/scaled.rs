@@ -1,0 +1,106 @@
+//! Task-size scaling wrapper.
+//!
+//! The paper's Fig. 6 sweeps the number of workers `n` at fixed dataset
+//! size `N`, so the per-task workload `b = N/n` — and with it the
+//! computation delay — *shrinks* as workers are added, while the
+//! communication delay (one `d`-vector per message) stays constant.
+//! [`Scaled`] applies exactly that: multiply the inner model's
+//! computation delays by `comp_scale` (= `(N/n) / (N/n₀)` relative to
+//! the calibration point `n₀`) and optionally the communication delays
+//! by `comm_scale`.
+
+use super::{DelayModel, DelaySample};
+use crate::util::rng::Rng;
+
+/// Multiplicatively scale an inner model's delays.
+pub struct Scaled<M> {
+    pub inner: M,
+    pub comp_scale: f64,
+    pub comm_scale: f64,
+}
+
+impl<M: DelayModel> Scaled<M> {
+    pub fn new(inner: M, comp_scale: f64, comm_scale: f64) -> Self {
+        assert!(comp_scale > 0.0 && comm_scale > 0.0, "scales must be positive");
+        Self {
+            inner,
+            comp_scale,
+            comm_scale,
+        }
+    }
+
+    /// Scaling for a Fig.-6-style sweep: workload per task is `N/n`,
+    /// model calibrated at `n0` workers.
+    pub fn for_worker_count(inner: M, n: usize, n0: usize) -> Self {
+        Self::new(inner, n0 as f64 / n as f64, 1.0)
+    }
+}
+
+impl<M: DelayModel> DelayModel for Scaled<M> {
+    fn name(&self) -> String {
+        format!(
+            "scaled(comp×{:.3}, comm×{:.3})/{}",
+            self.comp_scale,
+            self.comm_scale,
+            self.inner.name()
+        )
+    }
+
+    fn sample_into(&self, out: &mut DelaySample, rng: &mut Rng) {
+        self.inner.sample_into(out, rng);
+        if self.comp_scale != 1.0 {
+            for v in out.comp_mut() {
+                *v *= self.comp_scale;
+            }
+        }
+        if self.comm_scale != 1.0 {
+            for v in out.comm_mut() {
+                *v *= self.comm_scale;
+            }
+        }
+    }
+
+    fn mean_comp(&self, worker: usize) -> Option<f64> {
+        self.inner.mean_comp(worker).map(|m| m * self.comp_scale)
+    }
+
+    fn mean_comm(&self, worker: usize) -> Option<f64> {
+        self.inner.mean_comm(worker).map(|m| m * self.comm_scale)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::delay::ShiftedExponential;
+
+    #[test]
+    fn scales_comp_only_by_default_factory() {
+        let inner = ShiftedExponential::new(0.5, 2.0, 0.3, 3.0);
+        let s = Scaled::for_worker_count(inner, 10, 15);
+        assert!((s.comp_scale - 1.5).abs() < 1e-12);
+        assert_eq!(s.comm_scale, 1.0);
+        assert!((s.mean_comp(0).unwrap() - 1.5 * 1.0).abs() < 1e-12);
+        assert!((s.mean_comm(0).unwrap() - (0.3 + 1.0 / 3.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sampled_delays_are_scaled() {
+        let inner = ShiftedExponential::new(1.0, 1e9, 2.0, 1e9); // ≈ deterministic
+        let s = Scaled::new(inner, 3.0, 0.5);
+        let mut rng = Rng::seed_from_u64(1);
+        let d = s.sample(2, 2, &mut rng);
+        for i in 0..2 {
+            for j in 0..2 {
+                assert!((d.comp(i, j) - 3.0).abs() < 1e-6);
+                assert!((d.comm(i, j) - 1.0).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn rejects_zero_scale() {
+        Scaled::new(ShiftedExponential::new(0.1, 1.0, 0.1, 1.0), 0.0, 1.0);
+    }
+}

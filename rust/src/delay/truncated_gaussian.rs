@@ -1,0 +1,354 @@
+//! Truncated-Gaussian delay model — the paper's primary statistical
+//! model (eq. 66, Fig. 3 shows it fits the measured EC2 delays well).
+//!
+//! A delay is `T ~ N(μ, σ²)` conditioned on `T ∈ [μ − a, μ + b]`.  The
+//! paper uses symmetric truncation `a = b` in §VI-C; we support the
+//! general asymmetric form of eq. (66).  Sampling is exact inverse-CDF:
+//!
+//! `T = μ + σ·Φ⁻¹( Φ(−a/σ) + U·(Φ(b/σ) − Φ(−a/σ)) )`,  U ~ U(0,1).
+
+use crate::util::rng::Rng;
+
+
+
+use super::{DelayModel, DelaySample};
+use crate::util::math::{normal_cdf, normal_pdf, normal_quantile};
+
+/// Parameters of one truncated Gaussian (all in ms).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TruncatedGaussian {
+    pub mu: f64,
+    pub sigma: f64,
+    /// Lower truncation offset: support starts at `mu - a`.
+    pub a: f64,
+    /// Upper truncation offset: support ends at `mu + b`.
+    pub b: f64,
+}
+
+/// Sampling-ready truncated Gaussian with the inverse-CDF constants
+/// (`Φ(α)`, mass) precomputed — the Monte-Carlo hot path.  Rebuilding
+/// these per draw costs ~2 `erfc` evaluations per delay; hoisting them
+/// plus the no-refinement quantile cut 16×16 round sampling ~5×
+/// (EXPERIMENTS.md §Perf).
+#[derive(Debug, Clone)]
+pub struct PreparedTruncatedGaussian {
+    mu: f64,
+    sigma: f64,
+    lo: f64,
+    hi: f64,
+    p_lo: f64,
+    mass: f64,
+}
+
+impl PreparedTruncatedGaussian {
+    pub fn new(d: &TruncatedGaussian) -> Self {
+        Self {
+            mu: d.mu,
+            sigma: d.sigma,
+            lo: d.lo(),
+            hi: d.hi(),
+            p_lo: normal_cdf(-d.a / d.sigma),
+            mass: d.mass(),
+        }
+    }
+
+    /// Inverse-CDF draw via the fast (no-refinement) normal quantile —
+    /// Acklam's 1.15e-9 relative accuracy is far below MC noise.
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        let p = self.p_lo + rng.f64() * self.mass;
+        let z = crate::util::math::normal_quantile_fast(p.clamp(1e-16, 1.0 - 1e-16));
+        (self.mu + self.sigma * z).clamp(self.lo, self.hi)
+    }
+}
+
+impl TruncatedGaussian {
+    pub fn symmetric(mu: f64, sigma: f64, a: f64) -> Self {
+        Self { mu, sigma, a, b: a }
+    }
+
+    /// Precompute the inverse-CDF constants for repeated sampling.
+    pub fn prepared(&self) -> PreparedTruncatedGaussian {
+        PreparedTruncatedGaussian::new(self)
+    }
+
+    /// Lower support bound `μ − a`.
+    pub fn lo(&self) -> f64 {
+        self.mu - self.a
+    }
+
+    /// Upper support bound `μ + b`.
+    pub fn hi(&self) -> f64 {
+        self.mu + self.b
+    }
+
+    fn alpha(&self) -> f64 {
+        -self.a / self.sigma
+    }
+
+    fn beta(&self) -> f64 {
+        self.b / self.sigma
+    }
+
+    /// Normalizing mass `Φ(b/σ) − Φ(−a/σ)` (denominator of eq. 66a).
+    pub fn mass(&self) -> f64 {
+        normal_cdf(self.beta()) - normal_cdf(self.alpha())
+    }
+
+    /// PDF (paper eq. 66a).
+    pub fn pdf(&self, t: f64) -> f64 {
+        if t < self.lo() || t > self.hi() {
+            return 0.0;
+        }
+        normal_pdf((t - self.mu) / self.sigma) / (self.sigma * self.mass())
+    }
+
+    /// CDF.
+    pub fn cdf(&self, t: f64) -> f64 {
+        if t <= self.lo() {
+            return 0.0;
+        }
+        if t >= self.hi() {
+            return 1.0;
+        }
+        (normal_cdf((t - self.mu) / self.sigma) - normal_cdf(self.alpha())) / self.mass()
+    }
+
+    /// Exact mean of the truncated distribution:
+    /// `μ + σ (φ(α) − φ(β)) / mass`.
+    pub fn mean(&self) -> f64 {
+        let (al, be) = (self.alpha(), self.beta());
+        self.mu + self.sigma * (normal_pdf(al) - normal_pdf(be)) / self.mass()
+    }
+
+    /// Inverse-CDF draw.
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        let u = rng.f64();
+        let p_lo = normal_cdf(self.alpha());
+        let p = p_lo + u * self.mass();
+        // clamp: quantile is ±inf at the endpoints; the support bound is
+        // the correct limit value.
+        let z = normal_quantile(p.clamp(1e-16, 1.0 - 1e-16));
+        (self.mu + self.sigma * z).clamp(self.lo(), self.hi())
+    }
+}
+
+/// Per-worker truncated-Gaussian delays for computation and
+/// communication, i.i.d. across a worker's slots (the paper's §VI-C
+/// simplification `f_{i,[n]} = Π f_{i,j}`).
+#[derive(Debug, Clone)]
+pub struct TruncatedGaussianModel {
+    pub comp: Vec<TruncatedGaussian>,
+    pub comm: Vec<TruncatedGaussian>,
+    /// sampling-ready forms, built once (§Perf: hot-path constants)
+    prepared_comp: Vec<PreparedTruncatedGaussian>,
+    prepared_comm: Vec<PreparedTruncatedGaussian>,
+    label: String,
+}
+
+impl TruncatedGaussianModel {
+    pub fn new(comp: Vec<TruncatedGaussian>, comm: Vec<TruncatedGaussian>, label: &str) -> Self {
+        assert_eq!(comp.len(), comm.len(), "per-worker param counts differ");
+        assert!(!comp.is_empty(), "need at least one worker");
+        let prepared_comp = comp.iter().map(TruncatedGaussian::prepared).collect();
+        let prepared_comm = comm.iter().map(TruncatedGaussian::prepared).collect();
+        Self {
+            comp,
+            comm,
+            prepared_comp,
+            prepared_comm,
+            label: label.to_string(),
+        }
+    }
+
+    /// All workers share the same comp/comm distributions.
+    pub fn homogeneous(n: usize, comp: TruncatedGaussian, comm: TruncatedGaussian) -> Self {
+        Self::new(
+            vec![comp; n],
+            vec![comm; n],
+            "truncated-gaussian/homogeneous",
+        )
+    }
+
+    /// Paper §VI-C **Scenario 1**: μ⁽¹⁾ = 1E4 s = 0.1 ms, μ⁽²⁾ = 5E4 s
+    /// = 0.5 ms for every worker; a⁽¹⁾ = 0.03 ms, σ⁽¹⁾ = 0.1 ms,
+    /// a⁽²⁾ = σ⁽²⁾ = 0.2 ms.
+    pub fn scenario1(n: usize) -> Self {
+        let comp = TruncatedGaussian::symmetric(0.1, 0.1, 0.03);
+        let comm = TruncatedGaussian::symmetric(0.5, 0.2, 0.2);
+        let mut m = Self::homogeneous(n, comp, comm);
+        m.label = "truncated-gaussian/scenario1".into();
+        m
+    }
+
+    /// Paper §VI-C **Scenario 2**: heterogeneous means.
+    /// `{μ_i⁽¹⁾} = perm{(2+i)/3 · 0.1 ms : i ∈ [n]}` and
+    /// `{μ_i⁽²⁾} = perm{0.5, 0.55, …, (9+n)/2 · 0.1 ms}`; widths as in
+    /// scenario 1.
+    pub fn scenario2(n: usize, seed: u64) -> Self {
+        
+        
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut mu1: Vec<f64> = (1..=n).map(|i| (2.0 + i as f64) / 3.0 * 0.1).collect();
+        let mut mu2: Vec<f64> = (1..=n).map(|i| (9.0 + i as f64) / 2.0 * 0.1).collect();
+        rng.shuffle(&mut mu1);
+        rng.shuffle(&mut mu2);
+        let comp = mu1
+            .into_iter()
+            .map(|mu| TruncatedGaussian::symmetric(mu, 0.1, 0.03))
+            .collect();
+        let comm = mu2
+            .into_iter()
+            .map(|mu| TruncatedGaussian::symmetric(mu, 0.2, 0.2))
+            .collect();
+        Self::new(comp, comm, "truncated-gaussian/scenario2")
+    }
+}
+
+impl DelayModel for TruncatedGaussianModel {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn sample_into(&self, out: &mut DelaySample, rng: &mut Rng) {
+        let (n, r) = (out.n, out.r);
+        assert!(
+            n <= self.comp.len(),
+            "model built for {} workers, asked for {n}",
+            self.comp.len()
+        );
+        for i in 0..n {
+            let dc = &self.prepared_comp[i];
+            let dm = &self.prepared_comm[i];
+            for j in 0..r {
+                out.comp_mut()[i * r + j] = dc.sample(rng);
+                out.comm_mut()[i * r + j] = dm.sample(rng);
+            }
+        }
+    }
+
+    fn mean_comp(&self, worker: usize) -> Option<f64> {
+        self.comp.get(worker).map(TruncatedGaussian::mean)
+    }
+
+    fn mean_comm(&self, worker: usize) -> Option<f64> {
+        self.comm.get(worker).map(TruncatedGaussian::mean)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    
+
+    fn rng() -> Rng {
+        Rng::seed_from_u64(0xC0FFEE)
+    }
+
+    #[test]
+    fn pdf_integrates_to_one() {
+        let d = TruncatedGaussian::symmetric(0.5, 0.2, 0.2);
+        let integral =
+            crate::util::math::adaptive_simpson(&|t| d.pdf(t), d.lo() - 0.1, d.hi() + 0.1, 1e-10);
+        assert!((integral - 1.0).abs() < 1e-8, "{integral}");
+    }
+
+    #[test]
+    fn cdf_matches_pdf_integral() {
+        let d = TruncatedGaussian::symmetric(0.1, 0.1, 0.03);
+        for t in [0.08, 0.1, 0.12] {
+            let num = crate::util::math::adaptive_simpson(&|x| d.pdf(x), d.lo(), t, 1e-10);
+            assert!((d.cdf(t) - num).abs() < 1e-7, "t={t}");
+        }
+    }
+
+    #[test]
+    fn samples_respect_support() {
+        let d = TruncatedGaussian::symmetric(0.5, 0.2, 0.2);
+        let mut r = rng();
+        for _ in 0..20_000 {
+            let x = d.sample(&mut r);
+            assert!(x >= d.lo() - 1e-12 && x <= d.hi() + 1e-12, "{x}");
+        }
+    }
+
+    #[test]
+    fn sample_mean_matches_analytic_mean() {
+        // symmetric truncation: mean == μ; also test asymmetric
+        let sym = TruncatedGaussian::symmetric(0.5, 0.2, 0.2);
+        assert!((sym.mean() - 0.5).abs() < 1e-12);
+
+        let asym = TruncatedGaussian {
+            mu: 1.0,
+            sigma: 0.5,
+            a: 0.25,
+            b: 1.0,
+        };
+        let mut r = rng();
+        let mut acc = crate::util::stats::RunningStats::new();
+        for _ in 0..200_000 {
+            acc.push(asym.sample(&mut r));
+        }
+        assert!(
+            (acc.mean() - asym.mean()).abs() < 4.0 * acc.std_err() + 1e-4,
+            "MC {} vs analytic {}",
+            acc.mean(),
+            asym.mean()
+        );
+    }
+
+    #[test]
+    fn empirical_cdf_matches_analytic() {
+        let d = TruncatedGaussian::symmetric(0.1, 0.1, 0.03);
+        let mut r = rng();
+        let n = 100_000;
+        let mut below = 0u32;
+        let t = 0.095;
+        for _ in 0..n {
+            if d.sample(&mut r) <= t {
+                below += 1;
+            }
+        }
+        let emp = below as f64 / n as f64;
+        assert!((emp - d.cdf(t)).abs() < 0.01, "emp {emp} vs {}", d.cdf(t));
+    }
+
+    #[test]
+    fn scenario1_means_match_paper() {
+        let m = TruncatedGaussianModel::scenario1(16);
+        // μ⁽¹⁾ = 0.1 ms, μ⁽²⁾ = 0.5 ms (symmetric truncation keeps mean)
+        assert!((m.mean_comp(0).unwrap() - 0.1).abs() < 1e-12);
+        assert!((m.mean_comm(0).unwrap() - 0.5).abs() < 1e-12);
+        // communication dominates computation (paper Fig. 3 observation)
+        assert!(m.mean_comm(3).unwrap() > m.mean_comp(3).unwrap());
+    }
+
+    #[test]
+    fn scenario2_is_permutation_of_ladder() {
+        let m = TruncatedGaussianModel::scenario2(8, 3);
+        let mut mus: Vec<f64> = m.comp.iter().map(|d| d.mu).collect();
+        mus.sort_by(f64::total_cmp);
+        let want: Vec<f64> = (1..=8).map(|i| (2.0 + i as f64) / 3.0 * 0.1).collect();
+        for (a, b) in mus.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-12);
+        }
+        // deterministic in seed
+        let m2 = TruncatedGaussianModel::scenario2(8, 3);
+        for (a, b) in m.comp.iter().zip(&m2.comp) {
+            assert_eq!(a.mu, b.mu);
+        }
+    }
+
+    #[test]
+    fn model_fills_every_slot() {
+        let m = TruncatedGaussianModel::scenario1(4);
+        let mut r = rng();
+        let s = m.sample(4, 3, &mut r);
+        for i in 0..4 {
+            for j in 0..3 {
+                assert!(s.comp(i, j) >= 0.07 - 1e-9 && s.comp(i, j) <= 0.13 + 1e-9);
+                assert!(s.comm(i, j) >= 0.3 - 1e-9 && s.comm(i, j) <= 0.7 + 1e-9);
+            }
+        }
+    }
+}

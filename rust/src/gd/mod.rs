@@ -1,0 +1,308 @@
+//! Distributed gradient descent logic — the master-side update rules of
+//! paper §VI (Table I) shared by the simulator-backed and cluster-backed
+//! training paths.
+//!
+//! * uncoded (CS/SS/RA), target `k`:
+//!   `θ ← θ − η·(2n)/(kN) Σ_{i=1}^{k} (h(X_{p_i}) − X_{p_i} y_{p_i})`  (eq. 61)
+//! * coded (PC/PCMM), always full gradient:
+//!   `θ ← θ − η·(2/N) (XᵀXθ − Xᵀy)`                                   (eq. 49)
+//!
+//! Also implements the Remark-3 bias guard: tracking per-task completion
+//! frequencies and (optionally) re-shuffling the task↔batch mapping
+//! every `reshuffle_every` rounds.
+
+pub mod precomputed;
+
+pub use precomputed::{PrecomputedGram, PrecomputedMaster};
+
+use crate::data::Dataset;
+use crate::linalg::vec_axpy;
+use crate::util::rng::Rng;
+
+/// Master-side DGD state for the uncoded schemes.
+#[derive(Debug, Clone)]
+pub struct UncodedMaster {
+    pub theta: Vec<f64>,
+    pub eta: f64,
+    pub k: usize,
+    /// `b_i = X_i y_i`, precomputed once (paper §VI-A).
+    pub xy: Vec<Vec<f64>>,
+    /// per-**batch** completion counts (Remark-3 bias tracking: the
+    /// SGD bias lives in which *data* gets used, and the reshuffle
+    /// remaps tasks to batches precisely to even these out)
+    pub task_counts: Vec<u64>,
+    /// optional task↔batch permutation re-randomization period
+    pub reshuffle_every: Option<usize>,
+    /// current task→batch mapping
+    pub mapping: Vec<usize>,
+    rounds: usize,
+}
+
+impl UncodedMaster {
+    pub fn new(ds: &Dataset, eta: f64, k: usize) -> Self {
+        assert!(k >= 1 && k <= ds.n, "target must satisfy 1 ≤ k ≤ n");
+        Self {
+            theta: vec![0.0; ds.d],
+            eta,
+            k,
+            xy: ds.xy_vectors(),
+            task_counts: vec![0; ds.n],
+            reshuffle_every: None,
+            mapping: (0..ds.n).collect(),
+            rounds: 0,
+        }
+    }
+
+    pub fn with_reshuffle(mut self, every: usize) -> Self {
+        assert!(every >= 1);
+        self.reshuffle_every = Some(every);
+        self
+    }
+
+    /// Batch index computed by task `t` under the current mapping.
+    pub fn batch_of(&self, task: usize) -> usize {
+        self.mapping[task]
+    }
+
+    /// Apply one round given the `k` received `(task, h(X_batch))`
+    /// pairs, where `h = X Xᵀ θ` (eq. 50).  Returns the new θ.
+    ///
+    /// `n_padded` is the padded sample count `N` of eq. 61.
+    pub fn apply_round(
+        &mut self,
+        received: &[(usize, Vec<f64>)],
+        n_tasks: usize,
+        n_padded: usize,
+        rng: &mut Rng,
+    ) -> &[f64] {
+        assert_eq!(received.len(), self.k, "master must apply exactly k results");
+        let d = self.theta.len();
+        let mut agg = vec![0.0; d];
+        for (task, h) in received {
+            let batch = self.mapping[*task];
+            self.task_counts[batch] += 1;
+            vec_axpy(&mut agg, 1.0, h);
+            vec_axpy(&mut agg, -1.0, &self.xy[batch]);
+        }
+        // eq. 61 scale: η · 2n / (kN)
+        let scale = self.eta * 2.0 * n_tasks as f64 / (self.k as f64 * n_padded as f64);
+        vec_axpy(&mut self.theta, -scale, &agg);
+
+        self.rounds += 1;
+        if let Some(every) = self.reshuffle_every {
+            if self.rounds % every == 0 {
+                rng.shuffle(&mut self.mapping);
+            }
+        }
+        &self.theta
+    }
+
+    /// Empirical bias diagnostic (Remark 3): max/min per-batch usage
+    /// frequency ratio; 1.0 = perfectly uniform SGD sampling.
+    pub fn selection_skew(&self) -> f64 {
+        let max = *self.task_counts.iter().max().unwrap_or(&0);
+        let min = *self.task_counts.iter().min().unwrap_or(&0);
+        if min == 0 {
+            f64::INFINITY
+        } else {
+            max as f64 / min as f64
+        }
+    }
+}
+
+/// Master update for the coded schemes (eq. 49): takes the exact
+/// `XᵀXθ` reconstruction and the precomputed `Xᵀy`.
+pub fn coded_update(theta: &mut [f64], xxt_theta: &[f64], xty: &[f64], eta: f64, n_padded: usize) {
+    let scale = eta * 2.0 / n_padded as f64;
+    for i in 0..theta.len() {
+        theta[i] -= scale * (xxt_theta[i] - xty[i]);
+    }
+}
+
+/// Simulator-backed DGD driver: runs `rounds` iterations of the uncoded
+/// scheme with CPU-oracle numerics (the cluster-backed equivalent lives
+/// in [`crate::coordinator`]; both share this module's update rules).
+pub struct SimulatedTraining<'a> {
+    pub ds: &'a Dataset,
+    pub master: UncodedMaster,
+    pub rng: Rng,
+}
+
+impl<'a> SimulatedTraining<'a> {
+    pub fn new(ds: &'a Dataset, eta: f64, k: usize, seed: u64) -> Self {
+        Self {
+            ds,
+            master: UncodedMaster::new(ds, eta, k),
+            rng: Rng::seed_from_u64(seed),
+        }
+    }
+
+    /// Run one round: the winners (first k distinct tasks) are supplied
+    /// by the completion-time simulator; this computes their gram
+    /// mat-vecs with the CPU oracle and applies eq. 61.
+    pub fn apply_winners(&mut self, winners: &[usize]) -> f64 {
+        let received: Vec<(usize, Vec<f64>)> = winners
+            .iter()
+            .map(|&t| {
+                let batch = self.master.batch_of(t);
+                (t, self.ds.parts[batch].gram_matvec(&self.master.theta))
+            })
+            .collect();
+        self.master.apply_round(
+            &received,
+            self.ds.n,
+            self.ds.padded_samples(),
+            &mut self.rng,
+        );
+        self.ds.loss(&self.master.theta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::delay::{DelayModel, TruncatedGaussianModel};
+    use crate::scheduler::{CyclicScheduler, Scheduler};
+
+    #[test]
+    fn k_equals_n_round_is_exact_gd_step() {
+        // with k = n, eq. 61 reduces to eq. 62 = a full GD step
+        let ds = Dataset::synthesize(4, 6, 32, 2);
+        let mut m = UncodedMaster::new(&ds, 0.05, 4);
+        let mut rng = Rng::seed_from_u64(0);
+        let theta0 = m.theta.clone();
+        let received: Vec<(usize, Vec<f64>)> = (0..4)
+            .map(|t| (t, ds.parts[t].gram_matvec(&theta0)))
+            .collect();
+        m.apply_round(&received, ds.n, ds.padded_samples(), &mut rng);
+        // oracle step
+        let g = ds.full_gradient(&theta0);
+        for i in 0..6 {
+            let want = theta0[i] - 0.05 * g[i];
+            assert!((m.theta[i] - want).abs() < 1e-12, "coord {i}");
+        }
+    }
+
+    #[test]
+    fn partial_k_step_is_unbiased_direction_on_average() {
+        // averaged over many random k-subsets, the eq.-61 step equals
+        // the full-gradient step (that's the Remark-2 SGD argument)
+        let ds = Dataset::synthesize(6, 5, 60, 3);
+        let theta0: Vec<f64> = (0..5).map(|i| 0.2 * i as f64).collect();
+        let full_g = ds.full_gradient(&theta0);
+        let k = 2;
+        let mut rng = Rng::seed_from_u64(9);
+        let mut avg = vec![0.0; 5];
+        let trials = 20_000;
+        for _ in 0..trials {
+            // random k-subset of tasks
+            let mut tasks: Vec<usize> = (0..6).collect();
+            rng.shuffle(&mut tasks);
+            let mut m = UncodedMaster::new(&ds, 1.0, k);
+            m.theta = theta0.clone();
+            let received: Vec<(usize, Vec<f64>)> = tasks[..k]
+                .iter()
+                .map(|&t| (t, ds.parts[t].gram_matvec(&theta0)))
+                .collect();
+            m.apply_round(&received, ds.n, ds.padded_samples(), &mut rng);
+            for i in 0..5 {
+                avg[i] += (theta0[i] - m.theta[i]) / trials as f64; // = η·ĝ_i
+            }
+        }
+        for i in 0..5 {
+            assert!(
+                (avg[i] - full_g[i]).abs() < 0.02 * (1.0 + full_g[i].abs()),
+                "coord {i}: {} vs {}",
+                avg[i],
+                full_g[i]
+            );
+        }
+    }
+
+    #[test]
+    fn coded_update_matches_uncoded_full_step() {
+        let ds = Dataset::synthesize(3, 4, 18, 4);
+        let theta0: Vec<f64> = (0..4).map(|i| 0.3 - 0.1 * i as f64).collect();
+        // coded: XᵀXθ = Σ gram_i(θ), Xᵀy = Σ X_i y_i
+        let mut xxt = vec![0.0; 4];
+        let mut xty = vec![0.0; 4];
+        for i in 0..3 {
+            vec_axpy(&mut xxt, 1.0, &ds.parts[i].gram_matvec(&theta0));
+            vec_axpy(&mut xty, 1.0, &ds.parts[i].matvec(&ds.labels[i]));
+        }
+        let mut theta_coded = theta0.clone();
+        coded_update(&mut theta_coded, &xxt, &xty, 0.05, ds.padded_samples());
+
+        let g = ds.full_gradient(&theta0);
+        for i in 0..4 {
+            let want = theta0[i] - 0.05 * g[i];
+            assert!((theta_coded[i] - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn training_converges_full_target() {
+        let ds = Dataset::synthesize(5, 8, 100, 6);
+        let model = TruncatedGaussianModel::scenario1(5);
+        let mut rng = Rng::seed_from_u64(1);
+        let to = CyclicScheduler.schedule(5, 2, &mut rng);
+        let mut training = SimulatedTraining::new(&ds, 0.05, 5, 11);
+        let l0 = ds.loss(&training.master.theta);
+        let mut last = l0;
+        for _ in 0..300 {
+            let sample = model.sample(5, 2, &mut rng);
+            let round = crate::sim::simulate_round(&to, &sample, 5);
+            last = training.apply_winners(&round.winners);
+        }
+        assert!(
+            last < 0.05 * l0,
+            "loss should drop ≥ 20×: {l0} → {last}"
+        );
+    }
+
+    #[test]
+    fn training_converges_partial_target_k_lt_n() {
+        // Remark 2: SGD with k < n still converges (noisier)
+        let ds = Dataset::synthesize(6, 8, 120, 7);
+        let model = TruncatedGaussianModel::scenario1(6);
+        let mut rng = Rng::seed_from_u64(2);
+        let to = CyclicScheduler.schedule(6, 3, &mut rng);
+        let mut training = SimulatedTraining::new(&ds, 0.03, 3, 13);
+        let l0 = ds.loss(&training.master.theta);
+        let mut last = l0;
+        for _ in 0..600 {
+            let sample = model.sample(6, 3, &mut rng);
+            let round = crate::sim::simulate_round(&to, &sample, 3);
+            last = training.apply_winners(&round.winners);
+        }
+        assert!(last < 0.1 * l0, "partial-k training: {l0} → {last}");
+        // bias diagnostic exists and is finite after enough rounds
+        assert!(training.master.selection_skew().is_finite());
+    }
+
+    #[test]
+    fn reshuffle_changes_mapping_deterministically() {
+        let ds = Dataset::synthesize(8, 4, 64, 8);
+        let mut m = UncodedMaster::new(&ds, 0.01, 8).with_reshuffle(1);
+        let mut rng = Rng::seed_from_u64(3);
+        let before = m.mapping.clone();
+        let theta0 = m.theta.clone();
+        let received: Vec<(usize, Vec<f64>)> = (0..8)
+            .map(|t| (t, ds.parts[t].gram_matvec(&theta0)))
+            .collect();
+        m.apply_round(&received, ds.n, ds.padded_samples(), &mut rng);
+        assert_ne!(m.mapping, before, "mapping must re-randomize");
+        let mut sorted = m.mapping.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    #[should_panic(expected = "exactly k results")]
+    fn apply_rejects_wrong_count() {
+        let ds = Dataset::synthesize(4, 3, 16, 1);
+        let mut m = UncodedMaster::new(&ds, 0.01, 3);
+        let mut rng = Rng::seed_from_u64(0);
+        m.apply_round(&[(0, vec![0.0; 3])], 4, 16, &mut rng);
+    }
+}

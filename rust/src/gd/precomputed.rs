@@ -1,0 +1,248 @@
+//! Remark-7 variant: distributed matrix–vector DGD over the
+//! precomputed gram matrix.
+//!
+//! The paper's alternative formulation: besides `Xᵀy`, the master
+//! computes `W ≜ XᵀX ∈ R^{d×d}` **once**, after which each iteration
+//! only needs the distributed matrix–vector product `Wθ_l` and the
+//! update (eq. 65)
+//!
+//! ```text
+//! θ_{l+1} = θ_l − η·(2/N)(W θ_l − Xᵀy)
+//! ```
+//!
+//! Tasks become row-blocks of `W`: task `i` computes `W_i θ ∈ R^{d/n}`.
+//! The same TO matrices (CS/SS/RA) schedule these tasks unchanged — the
+//! completion-time analysis is formulation-agnostic — so this module
+//! only supplies the *compute* side: block partitioning, per-task
+//! matvec, and the assembling master.  For `k < n` the master reuses
+//! the **stale** block values from previous iterations (the natural
+//! partial-update semantics here, since unlike eq. 61 the blocks are
+//! disjoint coordinates of `Wθ`, not i.i.d. gradient summands).
+
+use crate::data::Dataset;
+use crate::linalg::Mat;
+
+/// Precomputed-gram workload: `W = XᵀX`, `Xᵀy`, and a row-block split.
+pub struct PrecomputedGram {
+    /// the gram matrix `W` (d × d)
+    pub w: Mat,
+    /// `Xᵀy`
+    pub xty: Vec<f64>,
+    /// padded sample count `N` of eq. 65
+    pub n_padded: usize,
+    /// `blocks[i] = (row_start, row_end)` of task i
+    pub blocks: Vec<(usize, usize)>,
+}
+
+impl PrecomputedGram {
+    /// One-time master-side setup (the paper's "computes W once at the
+    /// beginning of the learning task").
+    pub fn from_dataset(ds: &Dataset, n_blocks: usize) -> Self {
+        assert!(n_blocks >= 1 && n_blocks <= ds.d, "need 1 ≤ blocks ≤ d");
+        let d = ds.d;
+        // W = Σ_i X_i X_iᵀ, built column-by-column via gram mat-vecs of
+        // the basis vectors (O(d)·gram cost; setup path, not hot)
+        let mut w = Mat::zeros(d, d);
+        let mut e = vec![0.0; d];
+        for col in 0..d {
+            e[col] = 1.0;
+            for part in &ds.parts {
+                let h = part.gram_matvec(&e);
+                for row in 0..d {
+                    w[(row, col)] += h[row];
+                }
+            }
+            e[col] = 0.0;
+        }
+        let mut xty = vec![0.0; d];
+        for (x, y) in ds.parts.iter().zip(&ds.labels) {
+            let xy = x.matvec(y);
+            for i in 0..d {
+                xty[i] += xy[i];
+            }
+        }
+        // near-even row blocks
+        let base = d / n_blocks;
+        let extra = d % n_blocks;
+        let mut blocks = Vec::with_capacity(n_blocks);
+        let mut start = 0;
+        for i in 0..n_blocks {
+            let len = base + usize::from(i < extra);
+            blocks.push((start, start + len));
+            start += len;
+        }
+        Self {
+            w,
+            xty,
+            n_padded: ds.padded_samples(),
+            blocks,
+        }
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Worker task `i`: the row-block matvec `W_i θ`.
+    pub fn task(&self, block: usize, theta: &[f64]) -> Vec<f64> {
+        let (lo, hi) = self.blocks[block];
+        (lo..hi)
+            .map(|row| crate::linalg::dot(self.w.row(row), theta))
+            .collect()
+    }
+}
+
+/// Master state for the Remark-7 update: keeps the latest known value
+/// of every `Wθ` block so `k < n` rounds can proceed with stale blocks.
+pub struct PrecomputedMaster {
+    pub theta: Vec<f64>,
+    pub eta: f64,
+    /// cached `Wθ` blocks (stale entries persist across rounds)
+    wtheta: Vec<f64>,
+    /// rounds since each block was refreshed (staleness diagnostic)
+    pub block_age: Vec<u32>,
+}
+
+impl PrecomputedMaster {
+    pub fn new(d: usize, n_blocks: usize, eta: f64) -> Self {
+        Self {
+            theta: vec![0.0; d],
+            eta,
+            wtheta: vec![0.0; d],
+            block_age: vec![0; n_blocks],
+        }
+    }
+
+    /// Apply one round: `fresh` holds `(block_index, W_i θ)` results for
+    /// the k received blocks; remaining blocks use their cached value
+    /// (exact when k = n; stale-coordinate GD otherwise).
+    pub fn apply_round(&mut self, grams: &PrecomputedGram, fresh: &[(usize, Vec<f64>)]) -> &[f64] {
+        for age in &mut self.block_age {
+            *age += 1;
+        }
+        for (block, values) in fresh {
+            let (lo, hi) = grams.blocks[*block];
+            assert_eq!(values.len(), hi - lo, "block {block} shape mismatch");
+            self.wtheta[lo..hi].copy_from_slice(values);
+            self.block_age[*block] = 0;
+        }
+        // eq. 65: θ ← θ − η·2/N (Wθ − Xᵀy)
+        let scale = self.eta * 2.0 / grams.n_padded as f64;
+        for i in 0..self.theta.len() {
+            self.theta[i] -= scale * (self.wtheta[i] - grams.xty[i]);
+        }
+        &self.theta
+    }
+
+    pub fn max_staleness(&self) -> u32 {
+        self.block_age.iter().copied().max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::vec_axpy;
+    use crate::util::rng::Rng;
+
+    fn setup(n: usize, d: usize, samples: usize) -> (Dataset, PrecomputedGram) {
+        let ds = Dataset::synthesize(n, d, samples, 17);
+        let grams = PrecomputedGram::from_dataset(&ds, n);
+        (ds, grams)
+    }
+
+    #[test]
+    fn w_theta_matches_gram_sum() {
+        // assembled blocks of Wθ must equal Σ_i X_i X_iᵀ θ exactly
+        let (ds, grams) = setup(4, 10, 40);
+        let mut rng = Rng::seed_from_u64(3);
+        let theta: Vec<f64> = (0..10).map(|_| rng.normal()).collect();
+        let mut want = vec![0.0; 10];
+        for p in &ds.parts {
+            vec_axpy(&mut want, 1.0, &p.gram_matvec(&theta));
+        }
+        let mut got = Vec::new();
+        for b in 0..grams.n_blocks() {
+            got.extend(grams.task(b, &theta));
+        }
+        for i in 0..10 {
+            assert!(
+                (got[i] - want[i]).abs() < 1e-9 * (1.0 + want[i].abs()),
+                "row {i}: {} vs {}",
+                got[i],
+                want[i]
+            );
+        }
+    }
+
+    #[test]
+    fn blocks_partition_rows() {
+        let (_, grams) = setup(3, 11, 33); // 11 rows over 3 blocks: 4,4,3
+        assert_eq!(grams.blocks, vec![(0, 4), (4, 8), (8, 11)]);
+        let covered: usize = grams.blocks.iter().map(|(a, b)| b - a).sum();
+        assert_eq!(covered, 11);
+    }
+
+    #[test]
+    fn full_target_round_equals_eq65_exactly() {
+        // with k = n the Remark-7 update must equal the direct eq. 65
+        // step — and hence the eq. 62 full-gradient step
+        let (ds, grams) = setup(5, 8, 50);
+        let mut m = PrecomputedMaster::new(8, 5, 0.05);
+        let mut rng = Rng::seed_from_u64(9);
+        m.theta = (0..8).map(|_| rng.normal() * 0.1).collect();
+        let theta0 = m.theta.clone();
+        let fresh: Vec<(usize, Vec<f64>)> = (0..5).map(|b| (b, grams.task(b, &theta0))).collect();
+        m.apply_round(&grams, &fresh);
+        let g = ds.full_gradient(&theta0);
+        for i in 0..8 {
+            let want = theta0[i] - 0.05 * g[i];
+            assert!((m.theta[i] - want).abs() < 1e-9, "coord {i}");
+        }
+        assert_eq!(m.max_staleness(), 0);
+    }
+
+    #[test]
+    fn converges_with_full_target() {
+        let (ds, grams) = setup(4, 12, 64);
+        let mut m = PrecomputedMaster::new(12, 4, 0.04);
+        let l0 = ds.loss(&m.theta);
+        for _ in 0..800 {
+            let theta = m.theta.clone();
+            let fresh: Vec<(usize, Vec<f64>)> =
+                (0..4).map(|b| (b, grams.task(b, &theta))).collect();
+            m.apply_round(&grams, &fresh);
+        }
+        let l1 = ds.loss(&m.theta);
+        assert!(l1 < 0.05 * l0, "{l0} → {l1}");
+    }
+
+    #[test]
+    fn converges_with_stale_blocks_k_lt_n() {
+        // k = 2 of 4 blocks refreshed per round (rotating), rest stale:
+        // stale-coordinate GD still converges at a reduced rate
+        let (ds, grams) = setup(4, 12, 64);
+        let mut m = PrecomputedMaster::new(12, 4, 0.02);
+        let l0 = ds.loss(&m.theta);
+        for round in 0..2500 {
+            let theta = m.theta.clone();
+            let b0 = (2 * round) % 4;
+            let fresh: Vec<(usize, Vec<f64>)> = [b0, (b0 + 1) % 4]
+                .iter()
+                .map(|&b| (b, grams.task(b, &theta)))
+                .collect();
+            m.apply_round(&grams, &fresh);
+        }
+        assert!(m.max_staleness() <= 2, "rotation bounds staleness");
+        let l1 = ds.loss(&m.theta);
+        assert!(l1 < 0.1 * l0, "stale-block training: {l0} → {l1}");
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn rejects_wrong_block_shape() {
+        let (_, grams) = setup(3, 9, 27);
+        let mut m = PrecomputedMaster::new(9, 3, 0.01);
+        m.apply_round(&grams, &[(0, vec![0.0])]);
+    }
+}

@@ -1,0 +1,179 @@
+//! Lower bound on the minimum average completion time — paper §V.
+//!
+//! A genie that knows the delay realization `T` (eq. 42) in advance can
+//! schedule so that the first `k` results received are distinct, making
+//! the completion time exactly the k-th smallest **slot arrival time**
+//! `t̂_{T,(k)}` among all `n·r` slots (eq. 46 and the argument below it).
+//! Averaging over realizations (Monte Carlo, as in the paper — the
+//! order-statistic distribution is "analytically elusive") yields
+//! `t̄_LB(r,k) ≤ t̄*(r,k)`.
+//!
+//! [`lower_bound`] computes the bound; its constructive counterpart
+//! [`crate::scheduler::oracle_schedule`] is tested to *achieve* it
+//! realization-by-realization.
+
+use crate::util::rng::Rng;
+
+
+use crate::delay::{DelayModel, DelaySample};
+use crate::sim::CompletionEstimate;
+use crate::util::stats::{quantile_sorted, RunningStats};
+
+/// k-th smallest slot-arrival time of one realization (`t̂_{T,(k)}`).
+///
+/// Uses `select_nth_unstable` — O(n·r) average, no full sort — because
+/// this sits inside the Monte-Carlo hot loop.
+pub fn kth_slot_arrival(sample: &DelaySample, k: usize, scratch: &mut Vec<f64>) -> f64 {
+    let (n, r) = (sample.n, sample.r);
+    assert!(k >= 1 && k <= n * r, "need 1 ≤ k ≤ n·r slots");
+    scratch.clear();
+    for i in 0..n {
+        let comp = sample.comp_row(i);
+        let comm = sample.comm_row(i);
+        let mut prefix = 0.0;
+        for j in 0..r {
+            prefix += comp[j];
+            scratch.push(prefix + comm[j]);
+        }
+    }
+    let (_, kth, _) = scratch.select_nth_unstable_by(k - 1, |a, b| a.total_cmp(b));
+    *kth
+}
+
+/// Monte-Carlo estimate of `t̄_LB(r, k)` (eq. 44).
+pub fn lower_bound(
+    model: &dyn DelayModel,
+    n: usize,
+    r: usize,
+    k: usize,
+    trials: usize,
+    seed: u64,
+) -> CompletionEstimate {
+    assert!(k <= n, "computation target exceeds task count");
+    assert!(k <= n * r, "not enough slots to ever reach the target");
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut sample = DelaySample::zeros(n, r);
+    let mut scratch = Vec::with_capacity(n * r);
+    let mut acc = RunningStats::new();
+    let mut values = Vec::with_capacity(trials);
+    for _ in 0..trials {
+        model.sample_into(&mut sample, &mut rng);
+        let t = kth_slot_arrival(&sample, k, &mut scratch);
+        acc.push(t);
+        values.push(t);
+    }
+    values.sort_unstable_by(f64::total_cmp);
+    CompletionEstimate {
+        scheme: "LB".into(),
+        n,
+        r,
+        k,
+        trials,
+        mean: acc.mean(),
+        std_err: acc.std_err(),
+        std_dev: acc.std_dev(),
+        min: acc.min(),
+        max: acc.max(),
+        p50: quantile_sorted(&values, 0.5),
+        p95: quantile_sorted(&values, 0.95),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::delay::{DelayModel, ShiftedExponential, TruncatedGaussianModel};
+    use crate::scheduler::{CyclicScheduler, Scheduler, StaircaseScheduler};
+    use crate::sim::MonteCarlo;
+
+    #[test]
+    fn kth_arrival_on_fixture() {
+        let s = DelaySample::from_rows(
+            vec![vec![1.0, 2.0], vec![4.0, 1.0]],
+            vec![vec![10.0, 1.0], vec![1.0, 1.0]],
+        );
+        // slot arrivals: 11, 4, 5, 6 → sorted 4, 5, 6, 11
+        let mut scratch = Vec::new();
+        assert_eq!(kth_slot_arrival(&s, 1, &mut scratch), 4.0);
+        assert_eq!(kth_slot_arrival(&s, 2, &mut scratch), 5.0);
+        assert_eq!(kth_slot_arrival(&s, 4, &mut scratch), 11.0);
+    }
+
+    #[test]
+    fn lb_below_every_scheme() {
+        // eq. 45: the bound must sit below CS and SS for all (r, k)
+        let model = TruncatedGaussianModel::scenario1(8);
+        let mc = MonteCarlo::new(4000, 5);
+        for r in [1, 2, 4, 8] {
+            for k in [1, 4, 8] {
+                let lb = lower_bound(&model, 8, r, k, 4000, 5);
+                for sched in [
+                    &CyclicScheduler as &dyn Scheduler,
+                    &StaircaseScheduler,
+                ] {
+                    let est = mc.estimate(sched, &model, 8, r, k);
+                    assert!(
+                        lb.mean <= est.mean + 3.0 * (lb.std_err + est.std_err),
+                        "r={r} k={k} {}: LB {} vs {}",
+                        sched.name(),
+                        lb.mean,
+                        est.mean
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lb_tight_at_r1_k1_single_worker() {
+        // with n = r = k = 1 the genie has no freedom: LB == CS exactly
+        let model = ShiftedExponential::new(0.2, 3.0, 0.1, 4.0);
+        let lb = lower_bound(&model, 1, 1, 1, 50_000, 9);
+        let mc = MonteCarlo::new(50_000, 9).single_threaded();
+        let cs = mc.estimate(&CyclicScheduler, &model, 1, 1, 1);
+        assert!((lb.mean - cs.mean).abs() < 4.0 * (lb.std_err + cs.std_err));
+    }
+
+    #[test]
+    fn lb_per_realization_dominance() {
+        // t̂_{T,(k)} ≤ t_C(T, r, k) realization by realization, any C
+        let model = ShiftedExponential::new(0.1, 2.0, 0.2, 3.0);
+        let mut rng = Rng::seed_from_u64(31);
+        let to = {
+            let mut r2 = Rng::seed_from_u64(0);
+            StaircaseScheduler.schedule(7, 3, &mut r2)
+        };
+        let mut scratch = Vec::new();
+        for _ in 0..300 {
+            let s = model.sample(7, 3, &mut rng);
+            for k in 1..=7usize {
+                if k > 7 * 3 {
+                    continue;
+                }
+                let lb = kth_slot_arrival(&s, k, &mut scratch);
+                let sim = crate::sim::simulate_round(&to, &s, k);
+                assert!(
+                    lb <= sim.completion_time + 1e-12,
+                    "k={k}: {lb} > {}",
+                    sim.completion_time
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn oracle_achieves_the_bound() {
+        let model = ShiftedExponential::new(0.1, 2.0, 0.2, 3.0);
+        let mut rng = Rng::seed_from_u64(8);
+        let mut scratch = Vec::new();
+        for _ in 0..100 {
+            let s = model.sample(5, 4, &mut rng);
+            for k in 1..=5 {
+                let want = kth_slot_arrival(&s, k, &mut scratch);
+                let to = crate::scheduler::oracle_schedule(&s, k);
+                let got = crate::sim::simulate_round(&to, &s, k).completion_time;
+                assert!((want - got).abs() < 1e-12, "k={k}");
+            }
+        }
+    }
+}

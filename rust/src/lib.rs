@@ -1,0 +1,62 @@
+//! # straggler-sched
+//!
+//! Production reproduction of *"Computation Scheduling for Distributed
+//! Machine Learning with Straggling Workers"* (M. Mohammadi Amiri and
+//! D. Gündüz, IEEE Transactions on Signal Processing, 2019).
+//!
+//! A master distributes `n` mini-batch gradient tasks over `n` workers.
+//! Each worker receives up to `r` tasks (the **computation load**)
+//! together with an execution order — jointly a **task-ordering (TO)
+//! matrix** `C ∈ [n]^{n×r}` — computes them *sequentially*, and streams
+//! each result to the master the moment it finishes.  A round completes
+//! when the master holds `k` **distinct** results (the **computation
+//! target**).  Computation and communication delays are random; the goal
+//! is to pick `C` minimizing the average completion time.
+//!
+//! The crate provides, as first-class subsystems:
+//!
+//! * [`scheduler`] — TO-matrix construction: the paper's **cyclic (CS)**
+//!   and **staircase (SS)** schedules, the **random-assignment (RA)**
+//!   baseline, and the genie **oracle** schedule behind the lower bound;
+//! * [`delay`] — the stochastic delay substrate (truncated Gaussian of
+//!   paper eq. 66, shifted exponential, empirical EC2-like traces,
+//!   worker-correlated wrappers);
+//! * [`sim`] — a Monte-Carlo completion-time engine implementing the
+//!   arrival dynamics of paper eqs. (1)–(2);
+//! * [`analysis`] — an exact evaluator of Theorem 1's
+//!   inclusion–exclusion formula, used to cross-validate the simulator;
+//! * [`lb`] — the order-statistic lower bound of §V;
+//! * [`coded`] — the coded baselines **PC** and **PCMM** with *real*
+//!   polynomial encoding/decoding (not just timing models);
+//! * [`data`] / [`gd`] — the distributed linear-regression workload of
+//!   §VI (dataset synthesis, DGD update rules);
+//! * [`runtime`] — a PJRT executor that loads the AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`) and runs them on the hot path;
+//! * [`coordinator`] — a threaded TCP master/worker cluster (the EC2
+//!   testbed substitute) doing real compute over a real wire protocol;
+//! * [`harness`] / [`report`] / [`metrics`] — experiment sweeps that
+//!   regenerate every table and figure of the paper's evaluation.
+//!
+//! Conventions: worker indices `i ∈ [0, n)`, task indices `j ∈ [0, n)`
+//! (the paper is 1-based), all delays and times are **milliseconds** as
+//! `f64`.  The paper's `αEβ` notation means `α·10⁻ᵝ` **seconds**, so
+//! e.g. `1E4 = 0.1 ms`.
+
+pub mod analysis;
+pub mod coded;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod gd;
+pub mod delay;
+pub mod lb;
+pub mod linalg;
+pub mod harness;
+pub mod metrics;
+pub mod report;
+pub mod runtime;
+pub mod scheduler;
+pub mod sim;
+pub mod util;
+
+pub use scheduler::ToMatrix;

@@ -1,0 +1,230 @@
+//! Dense f64 linear algebra substrate.
+//!
+//! The coded baselines (polynomial encode/decode), the CPU-oracle
+//! gradient checks, and the master's bookkeeping need small dense
+//! matrix/vector ops.  This is intentionally simple row-major code —
+//! the *hot* numeric path runs through the PJRT runtime on the AOT
+//! artifacts; this module is the control-plane math and test oracle.
+
+/// Row-major dense matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_rows(rows: Vec<Vec<f64>>) -> Self {
+        let r = rows.len();
+        assert!(r > 0, "empty matrix");
+        let c = rows[0].len();
+        let mut data = Vec::with_capacity(r * c);
+        for row in &rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Self {
+            rows: r,
+            cols: c,
+            data,
+        }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m[(i, j)] = f(i, j);
+            }
+        }
+        m
+    }
+
+    pub fn identity(n: usize) -> Self {
+        Self::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// `y = A x`.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols, "matvec dimension mismatch");
+        (0..self.rows)
+            .map(|i| dot(self.row(i), x))
+            .collect()
+    }
+
+    /// `y = Aᵀ x`.
+    pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.rows, "matvec_t dimension mismatch");
+        let mut y = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            let xi = x[i];
+            if xi == 0.0 {
+                continue;
+            }
+            for (j, &a) in self.row(i).iter().enumerate() {
+                y[j] += a * xi;
+            }
+        }
+        y
+    }
+
+    /// `h = A Aᵀ x` — the paper's per-task computation (eq. 50) with
+    /// `A = X_i ∈ R^{d×b}`.
+    pub fn gram_matvec(&self, x: &[f64]) -> Vec<f64> {
+        self.matvec(&self.matvec_t(x))
+    }
+
+    /// `self += alpha · other`.
+    pub fn axpy(&mut self, alpha: f64, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    pub fn scale(&mut self, alpha: f64) {
+        for a in &mut self.data {
+            *a *= alpha;
+        }
+    }
+
+    /// Linear combination of matrices: `Σ coeffs[i] · mats[i]`.
+    pub fn linear_combination(coeffs: &[f64], mats: &[Mat]) -> Mat {
+        assert_eq!(coeffs.len(), mats.len());
+        assert!(!mats.is_empty());
+        let mut out = Mat::zeros(mats[0].rows, mats[0].cols);
+        for (&c, m) in coeffs.iter().zip(mats) {
+            if c != 0.0 {
+                out.axpy(c, m);
+            }
+        }
+        out
+    }
+
+    /// Cast to f32 (runtime buffers are f32, matching the artifacts).
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&x| x as f32).collect()
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// Dot product.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// `a += alpha · b` for vectors.
+pub fn vec_axpy(a: &mut [f64], alpha: f64, b: &[f64]) {
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter_mut().zip(b) {
+        *x += alpha * y;
+    }
+}
+
+/// Euclidean norm.
+pub fn norm2(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matvec_against_hand_computed() {
+        let a = Mat::from_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]]);
+        assert_eq!(a.matvec(&[1.0, -1.0]), vec![-1.0, -1.0, -1.0]);
+        assert_eq!(a.matvec_t(&[1.0, 0.0, 1.0]), vec![6.0, 8.0]);
+    }
+
+    #[test]
+    fn gram_is_matvec_composition() {
+        let a = Mat::from_fn(5, 3, |i, j| ((i * 7 + j * 3) % 11) as f64 - 5.0);
+        let x = [0.5, -1.0, 2.0, 0.0, 1.5];
+        let got = a.gram_matvec(&x);
+        let manual = a.matvec(&a.matvec_t(&x));
+        assert_eq!(got, manual);
+        // PSD: xᵀ A Aᵀ x ≥ 0
+        assert!(dot(&x, &got) >= -1e-12);
+    }
+
+    #[test]
+    fn identity_gram_is_identity() {
+        let i4 = Mat::identity(4);
+        let x = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(i4.gram_matvec(&x), x.to_vec());
+    }
+
+    #[test]
+    fn linear_combination_matches_elementwise() {
+        let a = Mat::from_rows(vec![vec![1.0, 0.0], vec![0.0, 1.0]]);
+        let b = Mat::from_rows(vec![vec![0.0, 2.0], vec![2.0, 0.0]]);
+        let c = Mat::linear_combination(&[3.0, 0.5], &[a, b]);
+        assert_eq!(c[(0, 0)], 3.0);
+        assert_eq!(c[(0, 1)], 1.0);
+        assert_eq!(c[(1, 0)], 1.0);
+        assert_eq!(c[(1, 1)], 3.0);
+    }
+
+    #[test]
+    fn axpy_scale_roundtrip() {
+        let mut a = Mat::identity(3);
+        let b = Mat::identity(3);
+        a.axpy(2.0, &b);
+        a.scale(1.0 / 3.0);
+        assert!((a[(0, 0)] - 1.0).abs() < 1e-15);
+        assert_eq!(a[(0, 1)], 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "dimension mismatch")]
+    fn matvec_rejects_bad_shape() {
+        Mat::zeros(2, 3).matvec(&[1.0, 2.0]);
+    }
+
+    #[test]
+    fn vector_helpers() {
+        let mut a = vec![1.0, 2.0];
+        vec_axpy(&mut a, 0.5, &[2.0, 4.0]);
+        assert_eq!(a, vec![2.0, 4.0]);
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-15);
+    }
+}

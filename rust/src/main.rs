@@ -1,0 +1,268 @@
+//! `straggler` — CLI for the straggler-scheduling reproduction.
+//!
+//! ```text
+//! straggler table1                              # Table I
+//! straggler fig3  [--trials 500] [--cluster]    # delay histograms (real cluster)
+//! straggler fig4  [--scenario 1|2] [--trials N] # t̄ vs r, truncated Gaussian
+//! straggler fig5  [--trials N] [--cluster]      # t̄ vs r, EC2-like (+ spot check)
+//! straggler fig6  [--trials N]                  # t̄ vs n
+//! straggler fig7  [--trials N]                  # t̄ vs k
+//! straggler sim   --n 16 --r 4 --k 16 [--model scenario1|scenario2|ec2|exp]
+//! straggler train [--rounds 300] [--k 8] [--no-pjrt]  # e2e distributed DGD
+//! straggler all   [--trials N]                  # every figure + table
+//! ```
+//!
+//! All figure commands write `results/<name>.{csv,json}` (override with
+//! `--out DIR`, suppress with `--no-out`).
+
+use anyhow::{bail, Result};
+
+use straggler_sched::delay::{
+    DelayModel, Ec2LikeModel, ShiftedExponential, TruncatedGaussianModel,
+};
+use straggler_sched::harness::{self, EvalPoint, Options};
+use straggler_sched::report::Table;
+use straggler_sched::scheduler::SchemeId;
+use straggler_sched::util::cli::Args;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn options(args: &Args) -> Result<Options> {
+    let mut opts = Options {
+        trials: args.usize_or("trials", 20_000)?,
+        seed: args.u64_or("seed", 0xF16)?,
+        scenario: args.usize_or("scenario", 1)? as u8,
+        cluster: args.flag("cluster"),
+        ..Options::default()
+    };
+    if args.flag("no-out") {
+        opts.out_dir = None;
+    } else {
+        opts.out_dir = Some(args.str_or("out", "results").into());
+    }
+    Ok(opts)
+}
+
+fn build_model(name: &str, n: usize, seed: u64) -> Result<Box<dyn DelayModel>> {
+    Ok(match name {
+        "scenario1" => Box::new(TruncatedGaussianModel::scenario1(n)),
+        "scenario2" => Box::new(TruncatedGaussianModel::scenario2(n, seed)),
+        "ec2" => Box::new(Ec2LikeModel::new(n, seed, 0.2)),
+        "exp" => Box::new(ShiftedExponential::new(0.05, 10.0, 0.3, 3.0)),
+        other => bail!("unknown delay model {other:?} (scenario1|scenario2|ec2|exp)"),
+    })
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    let sub = args.subcommand.clone().unwrap_or_else(|| "help".into());
+    match sub.as_str() {
+        "table1" => {
+            let opts = options(&args)?;
+            harness::table1(&opts)?;
+        }
+        "fig3" => {
+            let mut opts = options(&args)?;
+            if args.str_opt("trials").is_none() {
+                opts.trials = 500; // paper: 500 iterations
+            }
+            harness::fig3(&opts)?;
+        }
+        "fig4" => {
+            let opts = options(&args)?;
+            harness::fig4(&opts)?;
+        }
+        "fig5" => {
+            let opts = options(&args)?;
+            harness::fig5(&opts)?;
+        }
+        "fig6" => {
+            let opts = options(&args)?;
+            harness::fig6(&opts)?;
+        }
+        "fig7" => {
+            let opts = options(&args)?;
+            harness::fig7(&opts)?;
+        }
+        "all" => {
+            let mut opts = options(&args)?;
+            harness::table1(&opts)?;
+            harness::fig4(&Options {
+                scenario: 1,
+                ..opts.clone()
+            })?;
+            harness::fig4(&Options {
+                scenario: 2,
+                ..opts.clone()
+            })?;
+            harness::fig5(&opts)?;
+            harness::fig6(&opts)?;
+            harness::fig7(&opts)?;
+            opts.trials = 500;
+            harness::fig3(&opts)?;
+        }
+        "sim" => {
+            let opts = options(&args)?;
+            let n = args.usize_or("n", 16)?;
+            let r = args.usize_or("r", 4)?;
+            let k = args.usize_or("k", n)?;
+            let model_name = args.str_or("model", "scenario1");
+            let model = build_model(&model_name, n, opts.seed)?;
+            let point = EvalPoint::new(n, r, k, opts.trials, opts.seed);
+            let est = harness::evaluate(&point, model.as_ref());
+            let mut t = Table::new(
+                &format!(
+                    "t̄ (ms): n = {n}, r = {r}, k = {k}, model = {model_name}, {} trials",
+                    opts.trials
+                ),
+                &["scheme", "mean", "std_err", "p50", "p95", "min", "max"],
+            );
+            for e in &est {
+                t.push_row(vec![
+                    e.scheme.clone(),
+                    Table::fmt(e.mean),
+                    Table::fmt(e.std_err),
+                    Table::fmt(e.p50),
+                    Table::fmt(e.p95),
+                    Table::fmt(e.min),
+                    Table::fmt(e.max),
+                ]);
+            }
+            t.print();
+            let lb = est.iter().find(|e| e.scheme == SchemeId::Lb.to_string());
+            let ss = est.iter().find(|e| e.scheme == SchemeId::Ss.to_string());
+            if let (Some(lb), Some(ss)) = (lb, ss) {
+                println!("  SS-to-LB gap: {:.2}%", 100.0 * (ss.mean / lb.mean - 1.0));
+            }
+        }
+        "run" => {
+            let opts = options(&args)?;
+            let path = args
+                .str_opt("config")
+                .ok_or_else(|| anyhow::anyhow!("`run` needs --config FILE"))?;
+            let exp = straggler_sched::config::Experiment::from_file(std::path::Path::new(&path))?;
+            let table = exp.run();
+            table.print();
+            if let Some(dir) = &opts.out_dir {
+                for p in table.write(dir, &exp.name)? {
+                    println!("  wrote {}", p.display());
+                }
+            }
+        }
+        "ablations" => {
+            let opts = options(&args)?;
+            harness::ablations(&opts)?;
+        }
+        "worker" => {
+            // external worker process: `straggler worker --connect HOST:PORT
+            // [--oracle] [--inject scenario1|scenario2|ec2] [--n N --id I]`
+            let connect = args
+                .str_opt("connect")
+                .ok_or_else(|| anyhow::anyhow!("`worker` needs --connect HOST:PORT"))?;
+            let addr: std::net::SocketAddr = connect
+                .parse()
+                .map_err(|e| anyhow::anyhow!("bad --connect address {connect:?}: {e}"))?;
+            let inject = match args.str_opt("inject") {
+                None => None,
+                Some(name) => {
+                    let n = args.usize_or("n", 4)?;
+                    let id = args.usize_or("id", 0)?;
+                    let seed = args.u64_or("seed", 0xF16)?;
+                    let kind = match name.as_str() {
+                        "scenario1" => {
+                            straggler_sched::delay::DelayModelKind::TruncatedGaussianScenario1
+                        }
+                        "scenario2" => {
+                            straggler_sched::delay::DelayModelKind::TruncatedGaussianScenario2 {
+                                seed,
+                            }
+                        }
+                        "ec2" => straggler_sched::delay::DelayModelKind::Ec2Like {
+                            seed,
+                            hetero: 0.2,
+                        },
+                        other => bail!("unknown --inject model {other:?}"),
+                    };
+                    Some(straggler_sched::coordinator::TaskDelaySampler::new(
+                        kind.build(n),
+                        n,
+                        id,
+                        seed,
+                    ))
+                }
+            };
+            let opts = straggler_sched::coordinator::WorkerOptions {
+                backend: if args.flag("oracle") {
+                    straggler_sched::coordinator::Backend::CpuOracle
+                } else {
+                    straggler_sched::coordinator::Backend::Pjrt
+                },
+                injected: inject,
+                artifact_dir: args.str_opt("artifacts").map(Into::into),
+            };
+            println!("worker connecting to {addr} …");
+            straggler_sched::coordinator::run_worker(addr, opts)?;
+            println!("worker done");
+        }
+        "train" => {
+            let opts = options(&args)?;
+            let cfg = harness::E2eConfig {
+                n: args.usize_or("n", 10)?,
+                d: args.usize_or("d", 512)?,
+                n_samples: args.usize_or("samples", 10_240)?,
+                r: args.usize_or("r", 4)?,
+                k: args.usize_or("k", 8)?,
+                rounds: args.usize_or("rounds", 300)?,
+                eta: args.f64_or("eta", 0.05)?,
+                profile: args.str_or("profile", "e2e"),
+                use_pjrt: !args.flag("no-pjrt"),
+                seed: args.u64_or("data-seed", 2024)?,
+                listen: args.str_opt("listen"),
+                spawn_workers: !args.flag("external"),
+            };
+            let (report, curve) = harness::run_e2e(cfg, &opts)?;
+            curve.print();
+            println!(
+                "  mean completion {:.3} ms over {} rounds; final loss {:.6}",
+                report.mean_completion_ms(),
+                report.rounds.len(),
+                report.final_loss
+            );
+        }
+        _ => {
+            print!("{HELP}");
+        }
+    }
+    let unknown = args.unknown_keys();
+    if !unknown.is_empty() {
+        bail!("unknown arguments: {}", unknown.join(", "));
+    }
+    Ok(())
+}
+
+const HELP: &str = r#"straggler — computation scheduling with straggling workers (TSP 2019)
+
+subcommands:
+  table1            print/emit Table I (scheme characteristics)
+  fig3              measured delay histograms on the real cluster
+  fig4              t̄ vs computation load r (truncated Gaussian, --scenario 1|2)
+  fig5              t̄ vs r (EC2-like; --cluster adds a real-cluster spot check)
+  fig6              t̄ vs number of workers n
+  fig7              t̄ vs computation target k
+  sim               one (n, r, k) point across all schemes (--model ...)
+  run               run a JSON-described sweep: --config exp.json
+  ablations         design-choice studies (ingest, correlation, searched
+                    schedules, Remark-3 bias)
+  train             end-to-end distributed DGD over PJRT workers
+                    (--listen ADDR --external for multi-process mode)
+  worker            external worker process: --connect HOST:PORT
+                    [--oracle] [--inject ec2 --n N --id I]
+  all               regenerate every table and figure
+
+common flags: --trials N  --seed S  --out DIR  --no-out  --cluster
+"#;

@@ -1,0 +1,152 @@
+//! Measurement plumbing: histograms (Fig. 3), delay-trace recorders,
+//! and distribution fitting (the truncated-Gaussian overlay of Fig. 3).
+
+
+
+use crate::delay::TruncatedGaussian;
+use crate::util::stats::RunningStats;
+
+/// Fixed-bin histogram over `[lo, hi)`; under/overflow are clamped into
+/// the edge bins so mass is never silently dropped.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<u64>,
+    pub total: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(hi > lo, "empty support");
+        assert!(bins >= 1, "need at least one bin");
+        Self {
+            lo,
+            hi,
+            counts: vec![0; bins],
+            total: 0,
+        }
+    }
+
+    pub fn bins(&self) -> usize {
+        self.counts.len()
+    }
+
+    pub fn bin_width(&self) -> f64 {
+        (self.hi - self.lo) / self.bins() as f64
+    }
+
+    pub fn push(&mut self, x: f64) {
+        let idx = ((x - self.lo) / self.bin_width()).floor();
+        let idx = (idx.max(0.0) as usize).min(self.bins() - 1);
+        self.counts[idx] += 1;
+        self.total += 1;
+    }
+
+    /// Bin center of bin `i`.
+    pub fn center(&self, i: usize) -> f64 {
+        self.lo + (i as f64 + 0.5) * self.bin_width()
+    }
+
+    /// Empirical density at bin `i` (normalized so Σ density·width = 1).
+    pub fn density(&self, i: usize) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        self.counts[i] as f64 / (self.total as f64 * self.bin_width())
+    }
+}
+
+/// Per-worker delay recorder used by the cluster coordinator: feeds both
+/// Fig. 3 histograms and the empirical replay model.
+#[derive(Debug, Clone, Default)]
+pub struct DelayRecorder {
+    pub comp: Vec<f64>,
+    pub comm: Vec<f64>,
+}
+
+impl DelayRecorder {
+    pub fn record_comp(&mut self, ms: f64) {
+        self.comp.push(ms);
+    }
+
+    pub fn record_comm(&mut self, ms: f64) {
+        self.comm.push(ms);
+    }
+
+    pub fn comp_stats(&self) -> RunningStats {
+        let mut s = RunningStats::new();
+        self.comp.iter().for_each(|&x| s.push(x));
+        s
+    }
+
+    pub fn comm_stats(&self) -> RunningStats {
+        let mut s = RunningStats::new();
+        self.comm.iter().for_each(|&x| s.push(x));
+        s
+    }
+}
+
+/// Moment-fit a truncated Gaussian to samples, as the paper does for
+/// Fig. 3's overlay: center at the sample mean, width at the sample
+/// std-dev, support at the observed extremes (±(max−min)/2 around μ).
+pub fn fit_truncated_gaussian(samples: &[f64]) -> TruncatedGaussian {
+    assert!(samples.len() >= 2, "need ≥ 2 samples to fit");
+    let mut acc = RunningStats::new();
+    samples.iter().for_each(|&x| acc.push(x));
+    let mu = acc.mean();
+    let sigma = acc.std_dev().max(1e-12);
+    let a = (mu - acc.min()).max(1e-12);
+    let b = (acc.max() - mu).max(1e-12);
+    TruncatedGaussian { mu, sigma, a, b }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_bins_and_density() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for x in [0.5, 1.5, 1.7, 9.9, -5.0, 25.0] {
+            h.push(x);
+        }
+        assert_eq!(h.total, 6);
+        assert_eq!(h.counts[0], 2); // 0.5 and clamped −5.0
+        assert_eq!(h.counts[1], 2);
+        assert_eq!(h.counts[9], 2); // 9.9 and clamped 25.0
+        // densities integrate to 1
+        let integral: f64 = (0..10).map(|i| h.density(i) * h.bin_width()).sum();
+        assert!((integral - 1.0).abs() < 1e-12);
+        assert!((h.center(0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fit_recovers_gaussian_moments() {
+        use crate::util::rng::Rng;
+        let d = TruncatedGaussian::symmetric(5.0, 1.0, 3.0);
+        let mut rng = Rng::seed_from_u64(2);
+        let samples: Vec<f64> = (0..50_000).map(|_| d.sample(&mut rng)).collect();
+        let fit = fit_truncated_gaussian(&samples);
+        assert!((fit.mu - 5.0).abs() < 0.05, "mu {}", fit.mu);
+        // truncation at ±3σ barely changes σ
+        assert!((fit.sigma - 1.0).abs() < 0.05, "sigma {}", fit.sigma);
+    }
+
+    #[test]
+    fn recorder_stats() {
+        let mut r = DelayRecorder::default();
+        r.record_comp(1.0);
+        r.record_comp(3.0);
+        r.record_comm(10.0);
+        assert_eq!(r.comp_stats().count(), 2);
+        assert!((r.comp_stats().mean() - 2.0).abs() < 1e-12);
+        assert_eq!(r.comm_stats().count(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "need ≥ 2 samples")]
+    fn fit_rejects_tiny_input() {
+        fit_truncated_gaussian(&[1.0]);
+    }
+}

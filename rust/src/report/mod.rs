@@ -1,0 +1,191 @@
+//! Report emission: aligned console tables, CSV, and JSON result files
+//! under `results/` — every figure harness writes all three so the
+//! paper's plots can be regenerated with any plotting tool.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// A rectangular table with a title; the common output of every
+/// experiment harness.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push_row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Format a float with sensible experiment precision.
+    pub fn fmt(x: f64) -> String {
+        if x.is_nan() {
+            "-".into()
+        } else if x == 0.0 {
+            "0".into()
+        } else if x.abs() >= 100.0 {
+            format!("{x:.1}")
+        } else {
+            format!("{x:.4}")
+        }
+    }
+
+    /// Aligned plain-text rendering.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(String::len).collect();
+        for row in &self.rows {
+            for (w, cell) in widths.iter_mut().zip(row) {
+                *w = (*w).max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("── {} ──\n", self.title));
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            let mut s = String::from("  ");
+            for (cell, w) in cells.iter().zip(widths) {
+                s.push_str(&format!("{cell:>w$}  ", w = w));
+            }
+            s.trim_end().to_string() + "\n"
+        };
+        out.push_str(&line(&self.headers, &widths));
+        let total: usize = widths.iter().sum::<usize>() + 2 * widths.len() + 2;
+        out.push_str(&format!("  {}\n", "-".repeat(total.saturating_sub(2))));
+        for row in &self.rows {
+            out.push_str(&line(row, &widths));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    /// CSV rendering (header row + data rows, minimal quoting).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| -> String {
+            if s.contains(',') || s.contains('"') || s.contains('\n') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        out.push_str(
+            &self
+                .headers
+                .iter()
+                .map(|h| esc(h))
+                .collect::<Vec<_>>()
+                .join(","),
+        );
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// JSON rendering: `{title, headers, rows: [[...]]}`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("title", Json::Str(self.title.clone())),
+            (
+                "headers",
+                Json::Arr(self.headers.iter().cloned().map(Json::Str).collect()),
+            ),
+            (
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| Json::Arr(r.iter().cloned().map(Json::Str).collect()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Write `<out>/<name>.csv` and `<out>/<name>.json`; returns paths.
+    pub fn write(&self, out_dir: impl AsRef<Path>, name: &str) -> Result<Vec<PathBuf>> {
+        let dir = out_dir.as_ref();
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating results dir {}", dir.display()))?;
+        let csv = dir.join(format!("{name}.csv"));
+        std::fs::write(&csv, self.to_csv())?;
+        let json = dir.join(format!("{name}.json"));
+        std::fs::write(&json, self.to_json().to_string_pretty())?;
+        Ok(vec![csv, json])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Table {
+        let mut t = Table::new("fig-test", &["r", "CS", "SS"]);
+        t.push_row(vec!["2".into(), Table::fmt(0.86), Table::fmt(0.6923)]);
+        t.push_row(vec!["16".into(), Table::fmt(123.456), Table::fmt(f64::NAN)]);
+        t
+    }
+
+    #[test]
+    fn render_aligns_columns() {
+        let r = sample().render();
+        assert!(r.contains("fig-test"));
+        assert!(r.contains("0.8600"));
+        assert!(r.contains("123.5")); // ≥100 → 1 decimal
+        assert!(r.contains('-')); // NaN cell
+    }
+
+    #[test]
+    fn csv_roundtrips_through_commas() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.push_row(vec!["x,y".into(), "q\"q".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"x,y\""));
+        assert!(csv.contains("\"q\"\"q\""));
+    }
+
+    #[test]
+    fn json_parses_back() {
+        let j = sample().to_json();
+        let text = j.to_string_pretty();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.get("title").unwrap().as_str(), Some("fig-test"));
+        assert_eq!(back.get("rows").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn writes_files() {
+        let dir = std::env::temp_dir().join(format!("straggler-report-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let paths = sample().write(&dir, "fig_test").unwrap();
+        assert_eq!(paths.len(), 2);
+        for p in paths {
+            assert!(p.exists());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn rejects_ragged_rows() {
+        let mut t = Table::new("t", &["a"]);
+        t.push_row(vec!["1".into(), "2".into()]);
+    }
+}

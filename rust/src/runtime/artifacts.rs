@@ -1,0 +1,243 @@
+//! AOT artifact manifest — the contract between `python/compile/aot.py`
+//! and the rust runtime.
+//!
+//! `make artifacts` writes `artifacts/manifest.json` describing every
+//! lowered HLO module (entry point, profile, argument shapes, dims).
+//! The runtime is manifest-driven: it never hard-codes shapes, so adding
+//! a profile on the python side requires no rust change.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Metadata of one artifact (one HLO-text module).
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    /// manifest key, `"<profile>/<entry>"`
+    pub key: String,
+    /// file name within the artifact directory
+    pub file: String,
+    pub entry: String,
+    pub profile: String,
+    /// named dims (d, b, n, m) the module was lowered at
+    pub dims: HashMap<String, usize>,
+    /// per-argument shapes, in call order
+    pub arg_shapes: Vec<Vec<usize>>,
+    pub arg_names: Vec<String>,
+}
+
+impl ArtifactMeta {
+    /// Element count of argument `idx`.
+    pub fn arg_len(&self, idx: usize) -> usize {
+        self.arg_shapes[idx].iter().product::<usize>().max(1)
+    }
+
+    pub fn dim(&self, name: &str) -> Option<usize> {
+        self.dims.get(name).copied()
+    }
+}
+
+/// Parsed manifest plus the directory it lives in.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: HashMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        let root = Json::parse(&text).map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+        let format = root
+            .get("format")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("manifest missing `format`"))?;
+        if format != "hlo-text/v1" {
+            bail!("unsupported manifest format {format:?}");
+        }
+        let mut artifacts = HashMap::new();
+        let entries = root
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing `artifacts` object"))?;
+        for (key, meta) in entries {
+            let get_str = |field: &str| -> Result<String> {
+                meta.get(field)
+                    .and_then(Json::as_str)
+                    .map(str::to_string)
+                    .ok_or_else(|| anyhow!("artifact {key}: missing `{field}`"))
+            };
+            let arg_shapes = meta
+                .get("arg_shapes")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("artifact {key}: missing `arg_shapes`"))?
+                .iter()
+                .map(|shape| {
+                    shape
+                        .as_arr()
+                        .ok_or_else(|| anyhow!("artifact {key}: bad shape"))?
+                        .iter()
+                        .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                        .collect::<Result<Vec<usize>>>()
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let arg_names = meta
+                .get("arg_names")
+                .and_then(Json::as_arr)
+                .map(|names| {
+                    names
+                        .iter()
+                        .filter_map(Json::as_str)
+                        .map(str::to_string)
+                        .collect()
+                })
+                .unwrap_or_default();
+            let dims = meta
+                .get("dims")
+                .and_then(Json::as_obj)
+                .map(|pairs| {
+                    pairs
+                        .iter()
+                        .filter_map(|(k, v)| v.as_usize().map(|u| (k.clone(), u)))
+                        .collect()
+                })
+                .unwrap_or_default();
+            artifacts.insert(
+                key.clone(),
+                ArtifactMeta {
+                    key: key.clone(),
+                    file: get_str("file")?,
+                    entry: get_str("entry")?,
+                    profile: get_str("profile")?,
+                    dims,
+                    arg_shapes,
+                    arg_names,
+                },
+            );
+        }
+        Ok(Self { dir, artifacts })
+    }
+
+    /// Look up `"<profile>/<entry>"`.
+    pub fn get(&self, profile: &str, entry: &str) -> Result<&ArtifactMeta> {
+        let key = format!("{profile}/{entry}");
+        self.artifacts
+            .get(&key)
+            .ok_or_else(|| anyhow!("artifact {key} not in manifest ({} present)", self.artifacts.len()))
+    }
+
+    /// Absolute path of an artifact's HLO text.
+    pub fn path_of(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+
+    /// All profiles present.
+    pub fn profiles(&self) -> Vec<String> {
+        let mut p: Vec<String> = self
+            .artifacts
+            .values()
+            .map(|m| m.profile.clone())
+            .collect();
+        p.sort();
+        p.dedup();
+        p
+    }
+}
+
+/// Default artifact directory: `$STRAGGLER_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("STRAGGLER_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("straggler-manifest-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn loads_well_formed_manifest() {
+        let dir = tmpdir("ok");
+        write_manifest(
+            &dir,
+            r#"{
+              "format": "hlo-text/v1",
+              "artifacts": {
+                "quickstart/task_gram": {
+                  "file": "quickstart__task_gram.hlo.txt",
+                  "entry": "task_gram",
+                  "profile": "quickstart",
+                  "dims": {"d": 64, "b": 32, "n": 4, "m": 8},
+                  "arg_shapes": [[64, 32], [64]],
+                  "arg_names": ["x", "theta"]
+                }
+              }
+            }"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        let a = m.get("quickstart", "task_gram").unwrap();
+        assert_eq!(a.arg_shapes, vec![vec![64, 32], vec![64]]);
+        assert_eq!(a.arg_len(0), 2048);
+        assert_eq!(a.arg_len(1), 64);
+        assert_eq!(a.dim("d"), Some(64));
+        assert_eq!(a.arg_names, vec!["x", "theta"]);
+        assert_eq!(m.profiles(), vec!["quickstart"]);
+        assert!(m.path_of(a).ends_with("quickstart__task_gram.hlo.txt"));
+    }
+
+    #[test]
+    fn scalar_args_have_len_one() {
+        let dir = tmpdir("scalar");
+        write_manifest(
+            &dir,
+            r#"{"format": "hlo-text/v1", "artifacts": {
+                "p/master_update": {
+                  "file": "f.hlo.txt", "entry": "master_update", "profile": "p",
+                  "dims": {}, "arg_shapes": [[8], [8], []], "arg_names": ["theta","agg","eta"]
+                }}}"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        let a = m.get("p", "master_update").unwrap();
+        assert_eq!(a.arg_len(2), 1);
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful_error() {
+        let err = Manifest::load(tmpdir("missing")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        let dir = tmpdir("fmt");
+        write_manifest(&dir, r#"{"format": "hlo-bin/v9", "artifacts": {}}"#);
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn unknown_key_error_lists_count() {
+        let dir = tmpdir("unknown");
+        write_manifest(&dir, r#"{"format": "hlo-text/v1", "artifacts": {}}"#);
+        let m = Manifest::load(&dir).unwrap();
+        let err = m.get("nope", "task_gram").unwrap_err();
+        assert!(err.to_string().contains("nope/task_gram"));
+    }
+}

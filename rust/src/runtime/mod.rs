@@ -1,0 +1,283 @@
+//! PJRT runtime — loads the AOT-compiled JAX/Pallas artifacts and runs
+//! them on the request path.  Python never executes at runtime: the
+//! interchange is HLO **text** (see `python/compile/aot.py` and
+//! /opt/xla-example/README.md for why text, not serialized protos).
+//!
+//! One [`Runtime`] owns a PJRT CPU client plus a cache of compiled
+//! executables keyed by `"<profile>/<entry>"`.  PJRT handles are not
+//! `Send`, so each coordinator worker thread owns its own `Runtime`
+//! (compilation of these small modules is a few ms, amortized once at
+//! cluster start — measured in EXPERIMENTS.md §Perf).
+
+pub mod artifacts;
+
+pub use artifacts::{default_artifact_dir, ArtifactMeta, Manifest};
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+/// A loaded PJRT CPU runtime bound to one artifact directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// resident device buffers for round-invariant operands (worker
+    /// data partitions): uploading X once instead of per task removed
+    /// a 2 MB host copy from every e2e task execution — §Perf
+    buffers: HashMap<String, xla::PjRtBuffer>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and load the manifest from `dir`.
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            client,
+            manifest,
+            cache: HashMap::new(),
+            buffers: HashMap::new(),
+        })
+    }
+
+    /// Artifact directory from `$STRAGGLER_ARTIFACTS` / `./artifacts`.
+    pub fn from_default_dir() -> Result<Self> {
+        Self::new(default_artifact_dir())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) executable for `profile/entry`.
+    pub fn prepare(&mut self, profile: &str, entry: &str) -> Result<()> {
+        let key = format!("{profile}/{entry}");
+        if self.cache.contains_key(&key) {
+            return Ok(());
+        }
+        let meta = self.manifest.get(profile, entry)?.clone();
+        let path = self.manifest.path_of(&meta);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {key}"))?;
+        self.cache.insert(key, exe);
+        Ok(())
+    }
+
+    /// Execute `profile/entry` on f32 buffers (shapes validated against
+    /// the manifest) and return the flat f32 output.
+    ///
+    /// The AOT pipeline lowers with `return_tuple=True`, so every module
+    /// returns a 1-tuple; this unwraps it.
+    pub fn execute(&mut self, profile: &str, entry: &str, args: &[&[f32]]) -> Result<Vec<f32>> {
+        self.prepare(profile, entry)?;
+        let meta = self.manifest.get(profile, entry)?.clone();
+        anyhow::ensure!(
+            args.len() == meta.arg_shapes.len(),
+            "{}/{entry}: expected {} args, got {}",
+            profile,
+            meta.arg_shapes.len(),
+            args.len()
+        );
+        let mut literals = Vec::with_capacity(args.len());
+        for (idx, (arg, shape)) in args.iter().zip(&meta.arg_shapes).enumerate() {
+            anyhow::ensure!(
+                arg.len() == meta.arg_len(idx),
+                "{}/{entry}: arg {idx} ({}) has {} elements, manifest says {:?}",
+                profile,
+                meta.arg_names.get(idx).map(String::as_str).unwrap_or("?"),
+                arg.len(),
+                shape
+            );
+            let lit = if shape.is_empty() {
+                xla::Literal::from(arg[0])
+            } else {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(arg)
+                    .reshape(&dims)
+                    .with_context(|| format!("reshaping arg {idx} to {shape:?}"))?
+            };
+            literals.push(lit);
+        }
+        let key = format!("{profile}/{entry}");
+        let exe = self.cache.get(&key).expect("prepared above");
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {key}"))?[0][0]
+            .to_literal_sync()?;
+        let out = result
+            .to_tuple1()
+            .with_context(|| format!("{key}: unwrapping 1-tuple output"))?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Convenience: the paper's worker task `h(X) = X Xᵀ θ` (eq. 50).
+    pub fn task_gram(&mut self, profile: &str, x: &[f32], theta: &[f32]) -> Result<Vec<f32>> {
+        self.execute(profile, "task_gram", &[x, theta])
+    }
+
+    /// Upload a round-invariant operand to the device once, keyed.
+    pub fn upload(&mut self, key: &str, data: &[f32], shape: &[usize]) -> Result<()> {
+        if self.buffers.contains_key(key) {
+            return Ok(());
+        }
+        let buf = self
+            .client
+            .buffer_from_host_buffer::<f32>(data, shape, None)
+            .with_context(|| format!("uploading buffer {key}"))?;
+        self.buffers.insert(key.to_string(), buf);
+        Ok(())
+    }
+
+    pub fn has_buffer(&self, key: &str) -> bool {
+        self.buffers.contains_key(key)
+    }
+
+    /// `h(X) = X Xᵀ θ` with `X` resident on-device (uploaded via
+    /// [`Runtime::upload`]); only the small `θ` is copied per call.
+    pub fn task_gram_resident(
+        &mut self,
+        profile: &str,
+        x_key: &str,
+        theta: &[f32],
+    ) -> Result<Vec<f32>> {
+        self.prepare(profile, "task_gram")?;
+        let meta = self.manifest.get(profile, "task_gram")?;
+        anyhow::ensure!(
+            theta.len() == meta.arg_len(1),
+            "theta has {} elements, manifest says {:?}",
+            theta.len(),
+            meta.arg_shapes[1]
+        );
+        let theta_shape = meta.arg_shapes[1].clone();
+        let theta_buf = self
+            .client
+            .buffer_from_host_buffer::<f32>(theta, &theta_shape, None)?;
+        let x_buf = self
+            .buffers
+            .get(x_key)
+            .ok_or_else(|| anyhow!("no resident buffer {x_key}; call upload() first"))?;
+        let key = format!("{profile}/task_gram");
+        let exe = self.cache.get(&key).expect("prepared above");
+        let result = exe
+            .execute_b::<&xla::PjRtBuffer>(&[x_buf, &theta_buf])
+            .with_context(|| format!("executing {key} (resident)"))?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Master update `θ ← θ − η_eff · agg`.
+    pub fn master_update(
+        &mut self,
+        profile: &str,
+        theta: &[f32],
+        agg: &[f32],
+        eta_eff: f32,
+    ) -> Result<Vec<f32>> {
+        self.execute(profile, "master_update", &[theta, agg, &[eta_eff]])
+    }
+
+    /// Loss over stacked partitions (eq. 47); returns the scalar.
+    pub fn loss(
+        &mut self,
+        profile: &str,
+        x_parts: &[f32],
+        y_parts: &[f32],
+        theta: &[f32],
+    ) -> Result<f32> {
+        let v = self.execute(profile, "loss", &[x_parts, y_parts, theta])?;
+        Ok(v[0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! These compile-and-run the real AOT artifacts; they are skipped
+    //! (not failed) when `artifacts/` hasn't been built so that pure
+    //! rust iterations stay fast.  `make test` always builds artifacts
+    //! first, so CI exercises them.
+
+    use super::*;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = default_artifact_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping runtime test: no artifacts at {}", dir.display());
+            return None;
+        }
+        Some(Runtime::new(dir).expect("runtime construction"))
+    }
+
+    #[test]
+    fn loads_and_reports_platform() {
+        let Some(rt) = runtime() else { return };
+        assert_eq!(rt.platform_name().to_lowercase(), "cpu");
+        assert!(rt.manifest().profiles().contains(&"quickstart".to_string()));
+    }
+
+    #[test]
+    fn task_gram_matches_cpu_oracle() {
+        let Some(mut rt) = runtime() else { return };
+        let meta = rt.manifest().get("quickstart", "task_gram").unwrap().clone();
+        let (d, b) = (meta.dim("d").unwrap(), meta.dim("b").unwrap());
+        // deterministic pseudo-data
+        let x: Vec<f32> = (0..d * b).map(|i| ((i * 37 % 23) as f32 - 11.0) / 7.0).collect();
+        let theta: Vec<f32> = (0..d).map(|i| ((i * 13 % 17) as f32 - 8.0) / 5.0).collect();
+        let got = rt.task_gram("quickstart", &x, &theta).unwrap();
+        assert_eq!(got.len(), d);
+        // oracle: X (Xᵀ θ) in f64
+        let xm = crate::linalg::Mat::from_fn(d, b, |i, j| x[i * b + j] as f64);
+        let wanted = xm.gram_matvec(&theta.iter().map(|&v| v as f64).collect::<Vec<_>>());
+        for i in 0..d {
+            let w = wanted[i] as f32;
+            assert!(
+                (got[i] - w).abs() <= 1e-3 * (1.0 + w.abs()),
+                "lane {i}: {} vs {w}",
+                got[i]
+            );
+        }
+    }
+
+    #[test]
+    fn master_update_is_exact() {
+        let Some(mut rt) = runtime() else { return };
+        let meta = rt.manifest().get("quickstart", "master_update").unwrap().clone();
+        let d = meta.dim("d").unwrap();
+        let theta: Vec<f32> = (0..d).map(|i| i as f32 / 10.0).collect();
+        let agg: Vec<f32> = (0..d).map(|i| (d - i) as f32).collect();
+        let got = rt.master_update("quickstart", &theta, &agg, 0.5).unwrap();
+        for i in 0..d {
+            let want = theta[i] - 0.5 * agg[i];
+            assert!((got[i] - want).abs() < 1e-6, "lane {i}");
+        }
+    }
+
+    #[test]
+    fn wrong_arg_count_is_error() {
+        let Some(mut rt) = runtime() else { return };
+        let err = rt.execute("quickstart", "task_gram", &[&[0.0]]).unwrap_err();
+        assert!(err.to_string().contains("expected 2 args"), "{err}");
+    }
+
+    #[test]
+    fn wrong_arg_len_is_error() {
+        let Some(mut rt) = runtime() else { return };
+        let err = rt
+            .execute("quickstart", "task_gram", &[&[0.0f32; 3], &[0.0f32; 3]])
+            .unwrap_err();
+        assert!(err.to_string().contains("elements"), "{err}");
+    }
+}

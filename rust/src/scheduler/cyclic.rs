@@ -1,0 +1,97 @@
+//! Cyclic scheduling (CS) — paper §IV-A.
+//!
+//! `C_CS(i, j) = g(i + j − 1)` (eq. 21): worker `i` starts at task `i`
+//! and walks forward cyclically.  Every task therefore occupies a
+//! *different* slot position at each of the `r` workers that hold it —
+//! position `j` at exactly one worker for each `j ∈ [r]` — which is the
+//! structural property that makes partial computations useful: some
+//! worker always has any given task early in its queue.
+
+use crate::util::rng::Rng;
+
+use super::{wrap, Scheduler, ToMatrix};
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CyclicScheduler;
+
+impl Scheduler for CyclicScheduler {
+    fn name(&self) -> &'static str {
+        "CS"
+    }
+
+    fn schedule(&self, n: usize, r: usize, _rng: &mut Rng) -> ToMatrix {
+        let rows = (0..n)
+            .map(|i| (0..r).map(|j| wrap((i + j) as i64, n)).collect())
+            .collect();
+        ToMatrix::new(n, rows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    
+
+    fn build(n: usize, r: usize) -> ToMatrix {
+        let mut rng = Rng::seed_from_u64(0);
+        CyclicScheduler.schedule(n, r, &mut rng)
+    }
+
+    #[test]
+    fn matches_paper_example_2() {
+        // Example 2 (n = 4, r = 3), paper's 1-based C_CS:
+        //   [1 2 3; 2 3 4; 3 4 1; 4 1 2]
+        let c = build(4, 3);
+        assert_eq!(
+            c.rows(),
+            &[vec![0, 1, 2], vec![1, 2, 3], vec![2, 3, 0], vec![3, 0, 1]]
+        );
+    }
+
+    #[test]
+    fn rows_distinct_and_cyclic() {
+        for n in 1..=12 {
+            for r in 1..=n {
+                let c = build(n, r);
+                assert!(c.rows_distinct(), "n={n} r={r}");
+                // cyclic structure: row i is row 0 shifted by i
+                for i in 0..n {
+                    for j in 0..r {
+                        assert_eq!(c.task(i, j), (c.task(0, j) + i) % n);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_coverage_r_each() {
+        // every task is held by exactly r workers
+        for (n, r) in [(5, 1), (7, 3), (8, 8)] {
+            let cov = build(n, r).coverage();
+            assert!(cov.iter().all(|&c| c == r), "n={n} r={r}: {cov:?}");
+        }
+    }
+
+    #[test]
+    fn each_task_occupies_every_slot_once() {
+        // the defining CS property: task t sits at slot j for exactly one
+        // worker, for every j < r
+        let c = build(6, 4);
+        for t in 0..6 {
+            let mut slots: Vec<usize> = c.placements(t).into_iter().map(|(_, j)| j).collect();
+            slots.sort_unstable();
+            assert_eq!(slots, vec![0, 1, 2, 3], "task {t}");
+        }
+    }
+
+    #[test]
+    fn full_load_rows_are_rotations() {
+        let c = build(5, 5);
+        for i in 0..5 {
+            let mut expected: Vec<usize> = (0..5).map(|j| (i + j) % 5).collect();
+            assert_eq!(c.row(i), &expected[..]);
+            expected.rotate_left(1);
+        }
+    }
+}

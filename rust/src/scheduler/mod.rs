@@ -1,0 +1,259 @@
+//! Task-ordering (TO) matrices and schedulers (paper §II, §IV).
+//!
+//! A [`ToMatrix`] is the paper's `C ∈ [n]^{n×r}`: row `i` lists, in
+//! execution order, the task indices worker `i` computes (0-based here;
+//! the paper is 1-based).  A [`Scheduler`] builds one for given `(n, r)`.
+//!
+//! Provided schedulers:
+//! * [`CyclicScheduler`] — CS, eq. (21)–(23);
+//! * [`StaircaseScheduler`] — SS, eq. (29)–(30);
+//! * [`RandomAssignment`] — RA baseline of [18] (r = n, random order);
+//! * [`oracle`] — the genie schedule used by the §V lower bound.
+
+pub mod cyclic;
+pub mod oracle;
+pub mod random_assignment;
+pub mod search;
+pub mod staircase;
+
+pub use cyclic::CyclicScheduler;
+pub use oracle::oracle_schedule;
+pub use random_assignment::RandomAssignment;
+pub use search::{search, SearchConfig, SearchOutcome};
+pub use staircase::StaircaseScheduler;
+
+use crate::util::rng::Rng;
+
+
+/// Task-ordering matrix: `rows[i][j]` = index of the task worker `i`
+/// executes as its `j`-th computation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ToMatrix {
+    n: usize,
+    r: usize,
+    rows: Vec<Vec<usize>>,
+}
+
+impl ToMatrix {
+    /// Build from explicit rows, validating the TO-matrix invariants:
+    /// `n` rows, each of length `r ≤ n`, entries in `[0, n)`.  Distinct
+    /// entries per row are *recommended* (any repeat wastes a slot —
+    /// paper §II notes optimal matrices have distinct rows) but not
+    /// required; [`ToMatrix::rows_distinct`] reports it.
+    pub fn new(n: usize, rows: Vec<Vec<usize>>) -> Self {
+        assert_eq!(rows.len(), n, "need one row per worker");
+        assert!(n > 0, "need at least one worker");
+        let r = rows[0].len();
+        assert!(r >= 1 && r <= n, "computation load must satisfy 1 ≤ r ≤ n");
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), r, "row {i} has wrong length");
+            for &t in row {
+                assert!(t < n, "row {i} references task {t} ≥ n = {n}");
+            }
+        }
+        Self { n, r, rows }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn r(&self) -> usize {
+        self.r
+    }
+
+    /// Entry `C(i, j)` (0-based).
+    #[inline]
+    pub fn task(&self, worker: usize, slot: usize) -> usize {
+        self.rows[worker][slot]
+    }
+
+    #[inline]
+    pub fn row(&self, worker: usize) -> &[usize] {
+        &self.rows[worker]
+    }
+
+    pub fn rows(&self) -> &[Vec<usize>] {
+        &self.rows
+    }
+
+    /// Does every row consist of distinct tasks?
+    pub fn rows_distinct(&self) -> bool {
+        let mut seen = vec![false; self.n];
+        for row in &self.rows {
+            seen.iter_mut().for_each(|s| *s = false);
+            for &t in row {
+                if seen[t] {
+                    return false;
+                }
+                seen[t] = true;
+            }
+        }
+        true
+    }
+
+    /// How many workers are assigned each task (the task's replication).
+    pub fn coverage(&self) -> Vec<usize> {
+        let mut cov = vec![0usize; self.n];
+        for row in &self.rows {
+            for &t in row {
+                cov[t] += 1;
+            }
+        }
+        cov
+    }
+
+    /// Positions (slots) at which `task` appears across workers;
+    /// `(worker, slot)` pairs.  Empty if the task is unassigned.
+    pub fn placements(&self, task: usize) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        for (i, row) in self.rows.iter().enumerate() {
+            for (j, &t) in row.iter().enumerate() {
+                if t == task {
+                    out.push((i, j));
+                }
+            }
+        }
+        out
+    }
+
+    /// Is every task assigned to at least one worker?  (Necessary for a
+    /// computation target of k = n to ever complete.)
+    pub fn covers_all_tasks(&self) -> bool {
+        self.coverage().iter().all(|&c| c > 0)
+    }
+
+    /// Render with 1-based indices in the paper's bracket layout, e.g.
+    /// the `C_CS` of Example 2.
+    pub fn to_paper_string(&self) -> String {
+        let mut s = String::new();
+        for row in &self.rows {
+            s.push_str("  [");
+            for (j, &t) in row.iter().enumerate() {
+                if j > 0 {
+                    s.push(' ');
+                }
+                s.push_str(&(t + 1).to_string());
+            }
+            s.push_str("]\n");
+        }
+        s
+    }
+}
+
+/// Scheme identifier used across harness, reports and CLI.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SchemeId {
+    Cs,
+    Ss,
+    Ra,
+    Pc,
+    Pcmm,
+    Lb,
+}
+
+impl std::fmt::Display for SchemeId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            SchemeId::Cs => "CS",
+            SchemeId::Ss => "SS",
+            SchemeId::Ra => "RA",
+            SchemeId::Pc => "PC",
+            SchemeId::Pcmm => "PCMM",
+            SchemeId::Lb => "LB",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Builds TO matrices.  Stateless schedulers (CS/SS) ignore the RNG;
+/// RA redraws a fresh random order every call — matching the paper,
+/// where RA re-randomizes each DGD iteration while CS/SS are fixed.
+pub trait Scheduler: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Construct the TO matrix for `n` workers with computation load `r`.
+    fn schedule(&self, n: usize, r: usize, rng: &mut Rng) -> ToMatrix;
+
+    /// True if `schedule` depends on the RNG (must be re-invoked per
+    /// round in Monte-Carlo runs).
+    fn is_randomized(&self) -> bool {
+        false
+    }
+}
+
+/// The paper's cyclic-shift index helper `g(m)` (eq. 22), expressed
+/// 0-based: wraps any integer into `[0, n)`.
+#[inline]
+pub(crate) fn wrap(m: i64, n: usize) -> usize {
+    let n = n as i64;
+    (((m % n) + n) % n) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_example_1_matrix_is_valid() {
+        // Example 1's C (1-based) converted to 0-based
+        let c = ToMatrix::new(
+            4,
+            vec![vec![0, 1, 2], vec![2, 1, 0], vec![2, 3, 0], vec![3, 2, 0]],
+        );
+        assert_eq!(c.n(), 4);
+        assert_eq!(c.r(), 3);
+        assert!(c.rows_distinct());
+        assert!(c.covers_all_tasks());
+        // task 0 (paper's X_1) appears at every worker's last slot
+        assert_eq!(
+            c.placements(0),
+            vec![(0, 0), (1, 2), (2, 2), (3, 2)]
+        );
+        // coverage: task 1 twice, task 3 twice, tasks 0 and 2 four/ three
+        assert_eq!(c.coverage(), vec![4, 2, 4, 2]);
+    }
+
+    #[test]
+    fn wrap_matches_paper_g() {
+        // paper g (1-based): g(m) = m for 1≤m≤n, m−n above, m+n below.
+        // 0-based equivalence: wrap(m) = g(m+1) − 1 for m in −n..2n.
+        let n = 4;
+        assert_eq!(wrap(0, n), 0);
+        assert_eq!(wrap(3, n), 3);
+        assert_eq!(wrap(4, n), 0);
+        assert_eq!(wrap(7, n), 3);
+        assert_eq!(wrap(-1, n), 3);
+        assert_eq!(wrap(-4, n), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "computation load")]
+    fn rejects_r_greater_than_n() {
+        ToMatrix::new(2, vec![vec![0, 1, 0], vec![1, 0, 1]]);
+    }
+
+    #[test]
+    #[should_panic(expected = "references task")]
+    fn rejects_out_of_range_task() {
+        ToMatrix::new(2, vec![vec![0, 2], vec![1, 0]]);
+    }
+
+    #[test]
+    fn detects_non_distinct_rows() {
+        let c = ToMatrix::new(2, vec![vec![0, 0], vec![1, 0]]);
+        assert!(!c.rows_distinct());
+    }
+
+    #[test]
+    fn paper_string_is_one_based() {
+        let c = ToMatrix::new(2, vec![vec![0, 1], vec![1, 0]]);
+        assert_eq!(c.to_paper_string(), "  [1 2]\n  [2 1]\n");
+    }
+
+    #[test]
+    fn scheme_id_display() {
+        assert_eq!(SchemeId::Cs.to_string(), "CS");
+        assert_eq!(SchemeId::Pcmm.to_string(), "PCMM");
+    }
+}

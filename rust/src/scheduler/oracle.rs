@@ -1,0 +1,144 @@
+//! Genie (oracle) scheduling — the constructive half of the §V lower
+//! bound.
+//!
+//! Given the *realization* of all per-slot delays (the paper's `T`,
+//! eq. 42), one can pick a TO matrix whose completion time equals the
+//! k-th smallest slot-arrival time `t̂_{T,(k)}`: order all `n·r` slots by
+//! arrival (eq. 46) and make the first `k` of them carry `k` distinct
+//! tasks.  The paper uses this argument to show
+//! `t_LB(T, r, k) = t̂_{T,(k)}`; we implement the construction so a test
+//! can verify, realization by realization, that simulating the returned
+//! matrix really completes at the k-th order statistic.
+
+use crate::delay::DelaySample;
+use crate::scheduler::ToMatrix;
+
+/// Build a genie TO matrix for one delay realization and target `k`.
+///
+/// The first `k` slots in global arrival order receive tasks `0..k` (all
+/// distinct); remaining slots of each worker are filled with tasks not
+/// yet present in that row (preserving the distinct-row invariant).
+pub fn oracle_schedule(sample: &DelaySample, k: usize) -> ToMatrix {
+    let (n, r) = (sample.n, sample.r);
+    assert!(k >= 1 && k <= n, "target must satisfy 1 ≤ k ≤ n");
+    assert!(k <= n * r, "not enough slots for k distinct tasks");
+
+    // order all slots by arrival time (eq. 46)
+    let mut slots: Vec<(f64, usize, usize)> = Vec::with_capacity(n * r);
+    for i in 0..n {
+        let mut prefix = 0.0;
+        for j in 0..r {
+            prefix += sample.comp(i, j);
+            slots.push((prefix + sample.comm(i, j), i, j));
+        }
+    }
+    slots.sort_by(|a, b| a.0.total_cmp(&b.0));
+
+    // the first k slots carry k distinct tasks, in arrival order
+    let mut rows: Vec<Vec<Option<usize>>> = vec![vec![None; r]; n];
+    for (task, &(_, i, j)) in slots.iter().take(k).enumerate() {
+        rows[i][j] = Some(task);
+    }
+
+    // fill remaining slots with tasks unused in that row
+    let rows = rows
+        .into_iter()
+        .map(|row| {
+            let mut used = vec![false; n];
+            for t in row.iter().flatten() {
+                used[*t] = true;
+            }
+            let mut free = (0..n).filter(|&t| !used[t]);
+            row.into_iter()
+                .map(|slot| slot.unwrap_or_else(|| free.next().expect("n ≥ r spare tasks")))
+                .collect()
+        })
+        .collect();
+    ToMatrix::new(n, rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::delay::{DelayModel, ShiftedExponential};
+    use crate::util::rng::Rng;
+
+    fn kth_slot_arrival(sample: &DelaySample, k: usize) -> f64 {
+        let (n, r) = (sample.n, sample.r);
+        let mut times: Vec<f64> = Vec::with_capacity(n * r);
+        for i in 0..n {
+            let mut prefix = 0.0;
+            for j in 0..r {
+                prefix += sample.comp(i, j);
+                times.push(prefix + sample.comm(i, j));
+            }
+        }
+        times.sort_by(f64::total_cmp);
+        times[k - 1]
+    }
+
+    #[test]
+    fn oracle_rows_are_valid() {
+        let model = ShiftedExponential::new(0.1, 5.0, 0.2, 2.0);
+        let mut rng = Rng::seed_from_u64(11);
+        for (n, r, k) in [(4, 2, 3), (6, 6, 6), (5, 3, 1), (8, 4, 8)] {
+            let s = model.sample(n, r, &mut rng);
+            let c = oracle_schedule(&s, k);
+            assert_eq!(c.n(), n);
+            assert_eq!(c.r(), r);
+            assert!(c.rows_distinct(), "n={n} r={r} k={k}");
+        }
+    }
+
+    #[test]
+    fn first_k_slots_carry_distinct_tasks() {
+        let model = ShiftedExponential::new(0.0, 1.0, 0.0, 1.0);
+        let mut rng = Rng::seed_from_u64(3);
+        let (n, r, k) = (6, 3, 5);
+        let s = model.sample(n, r, &mut rng);
+        let c = oracle_schedule(&s, k);
+
+        // recompute slot order, collect the tasks of the first k slots
+        let mut slots: Vec<(f64, usize, usize)> = Vec::new();
+        for i in 0..n {
+            let mut prefix = 0.0;
+            for j in 0..r {
+                prefix += s.comp(i, j);
+                slots.push((prefix + s.comm(i, j), i, j));
+            }
+        }
+        slots.sort_by(|a, b| a.0.total_cmp(&b.0));
+        let mut tasks: Vec<usize> = slots[..k].iter().map(|&(_, i, j)| c.task(i, j)).collect();
+        tasks.sort_unstable();
+        tasks.dedup();
+        assert_eq!(tasks.len(), k, "first k slots must carry k distinct tasks");
+    }
+
+    #[test]
+    fn completion_equals_kth_order_statistic() {
+        // the constructive claim behind t_LB(T, r, k) = t̂_{T,(k)}
+        let model = ShiftedExponential::new(0.05, 3.0, 0.1, 1.5);
+        let mut rng = Rng::seed_from_u64(77);
+        for trial in 0..200 {
+            let (n, r) = (6, 4);
+            let k = 1 + trial % n;
+            let s = model.sample(n, r, &mut rng);
+            let c = oracle_schedule(&s, k);
+            let sim = crate::sim::simulate_round(&c, &s, k);
+            let want = kth_slot_arrival(&s, k);
+            assert!(
+                (sim.completion_time - want).abs() < 1e-9,
+                "trial {trial} k={k}: sim {} vs k-th stat {}",
+                sim.completion_time,
+                want
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "target must satisfy")]
+    fn rejects_zero_target(){
+        let s = DelaySample::zeros(3, 2);
+        oracle_schedule(&s, 0);
+    }
+}

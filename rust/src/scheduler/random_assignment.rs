@@ -1,0 +1,103 @@
+//! Random assignment (RA) — the uncoded baseline of [18] (paper §VI-B).
+//!
+//! Every worker holds the whole dataset (`r = n`) and picks tasks
+//! without replacement, independently and uniformly at random: each row
+//! of `C_RA` is an independent random permutation of `[n]` (Example 6).
+//! Re-randomized every round, mirroring the per-iteration randomness of
+//! the original scheme.  A generalized `r < n` variant (uniformly random
+//! r-subset in random order) is provided for ablations.
+
+use crate::util::rng::Rng;
+
+
+use super::{Scheduler, ToMatrix};
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RandomAssignment;
+
+impl Scheduler for RandomAssignment {
+    fn name(&self) -> &'static str {
+        "RA"
+    }
+
+    fn schedule(&self, n: usize, r: usize, rng: &mut Rng) -> ToMatrix {
+        let rows = (0..n)
+            .map(|_| {
+                let mut perm: Vec<usize> = (0..n).collect();
+                rng.shuffle(&mut perm);
+                perm.truncate(r);
+                perm
+            })
+            .collect();
+        ToMatrix::new(n, rows)
+    }
+
+    fn is_randomized(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    
+
+    #[test]
+    fn rows_are_permutations_at_full_load() {
+        let mut rng = Rng::seed_from_u64(42);
+        let c = RandomAssignment.schedule(10, 10, &mut rng);
+        for i in 0..10 {
+            let mut row = c.row(i).to_vec();
+            row.sort_unstable();
+            assert_eq!(row, (0..10).collect::<Vec<_>>(), "worker {i}");
+        }
+    }
+
+    #[test]
+    fn truncated_load_keeps_distinct_rows() {
+        let mut rng = Rng::seed_from_u64(7);
+        let c = RandomAssignment.schedule(9, 4, &mut rng);
+        assert_eq!(c.r(), 4);
+        assert!(c.rows_distinct());
+    }
+
+    #[test]
+    fn redraws_differ_across_calls() {
+        let mut rng = Rng::seed_from_u64(1);
+        let a = RandomAssignment.schedule(8, 8, &mut rng);
+        let b = RandomAssignment.schedule(8, 8, &mut rng);
+        assert_ne!(a, b, "consecutive draws should differ w.h.p.");
+        assert!(RandomAssignment.is_randomized());
+    }
+
+    #[test]
+    fn deterministic_under_same_seed() {
+        let mut r1 = Rng::seed_from_u64(5);
+        let mut r2 = Rng::seed_from_u64(5);
+        assert_eq!(
+            RandomAssignment.schedule(6, 6, &mut r1),
+            RandomAssignment.schedule(6, 6, &mut r2)
+        );
+    }
+
+    #[test]
+    fn first_slots_roughly_uniform() {
+        // over many draws, each task appears in slot 0 of worker 0 with
+        // probability 1/n — a χ²-style sanity bound
+        let mut rng = Rng::seed_from_u64(123);
+        let n = 8;
+        let trials = 8000;
+        let mut counts = vec![0usize; n];
+        for _ in 0..trials {
+            let c = RandomAssignment.schedule(n, n, &mut rng);
+            counts[c.task(0, 0)] += 1;
+        }
+        let expected = trials as f64 / n as f64;
+        for (t, &c) in counts.iter().enumerate() {
+            assert!(
+                (c as f64 - expected).abs() < 5.0 * expected.sqrt(),
+                "task {t}: {c} vs {expected}"
+            );
+        }
+    }
+}

@@ -1,0 +1,131 @@
+//! Staircase scheduling (SS) — paper §IV-B.
+//!
+//! `C_SS(i, j) = g(i + (−1)^{i−1}(j − 1))` (eq. 29): odd-indexed workers
+//! (paper numbering) walk *forward* from their start task, even-indexed
+//! workers walk *backward*.  Adjacent workers therefore sweep toward
+//! each other — the "staircase" — which spreads early slots differently
+//! from CS: a task that is late in one worker's queue is early in a
+//! *neighbouring* worker's queue in the opposite direction.  Remark 5:
+//! same step size as CS, alternating direction.
+
+use crate::util::rng::Rng;
+
+use super::{wrap, Scheduler, ToMatrix};
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StaircaseScheduler;
+
+impl Scheduler for StaircaseScheduler {
+    fn name(&self) -> &'static str {
+        "SS"
+    }
+
+    fn schedule(&self, n: usize, r: usize, _rng: &mut Rng) -> ToMatrix {
+        let rows = (0..n)
+            .map(|i| {
+                // paper worker index is i+1; (−1)^{(i+1)−1} = +1 for even
+                // 0-based i (ascending), −1 for odd (descending)
+                let dir: i64 = if i % 2 == 0 { 1 } else { -1 };
+                (0..r)
+                    .map(|j| wrap(i as i64 + dir * j as i64, n))
+                    .collect()
+            })
+            .collect();
+        ToMatrix::new(n, rows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    
+
+    fn build(n: usize, r: usize) -> ToMatrix {
+        let mut rng = Rng::seed_from_u64(0);
+        StaircaseScheduler.schedule(n, r, &mut rng)
+    }
+
+    #[test]
+    fn matches_paper_example_3() {
+        // Example 3 (n = 4, r = 3), paper's 1-based C_SS:
+        //   [1 2 3; 2 1 4; 3 4 1; 4 3 2]
+        let c = build(4, 3);
+        assert_eq!(
+            c.rows(),
+            &[vec![0, 1, 2], vec![1, 0, 3], vec![2, 3, 0], vec![3, 2, 1]]
+        );
+    }
+
+    #[test]
+    fn rows_distinct_for_all_loads() {
+        for n in 1..=12 {
+            for r in 1..=n {
+                let c = build(n, r);
+                assert!(c.rows_distinct(), "n={n} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn first_column_matches_cs() {
+        // both schemes start worker i at task i (the diagonal)
+        let c = build(9, 4);
+        for i in 0..9 {
+            assert_eq!(c.task(i, 0), i);
+        }
+    }
+
+    #[test]
+    fn alternating_directions() {
+        let c = build(8, 3);
+        for i in 0..8 {
+            let step =
+                (c.task(i, 1) as i64 - c.task(i, 0) as i64).rem_euclid(8);
+            if i % 2 == 0 {
+                assert_eq!(step, 1, "even worker {i} ascends");
+            } else {
+                assert_eq!(step, 7, "odd worker {i} descends");
+            }
+        }
+    }
+
+    #[test]
+    fn even_n_uniform_coverage() {
+        // for even n the ± directions tile tasks evenly: r per task
+        let c = build(8, 5);
+        assert!(c.covers_all_tasks());
+        let cov = c.coverage();
+        assert_eq!(cov.iter().sum::<usize>(), 8 * 5);
+        assert!(cov.iter().all(|&x| x == 5), "{cov:?}");
+    }
+
+    #[test]
+    fn odd_n_coverage_stays_within_one_of_r() {
+        // odd n leaves a direction imbalance: coverage ∈ {r−1, r, r+1}
+        for (n, r) in [(5usize, 3usize), (7, 4), (9, 2), (15, 6)] {
+            let c = build(n, r);
+            assert!(c.covers_all_tasks() || r == 1, "n={n} r={r}");
+            let cov = c.coverage();
+            assert_eq!(cov.iter().sum::<usize>(), n * r);
+            for (t, &x) in cov.iter().enumerate() {
+                assert!(
+                    (x as i64 - r as i64).abs() <= 1,
+                    "n={n} r={r} task {t} coverage {x}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn differs_from_cs_when_r_ge_2() {
+        use crate::scheduler::CyclicScheduler;
+        let mut rng = Rng::seed_from_u64(0);
+        for n in 3..=8 {
+            for r in 2..=n {
+                let ss = build(n, r);
+                let cs = CyclicScheduler.schedule(n, r, &mut rng);
+                assert_ne!(ss, cs, "n={n} r={r}");
+            }
+        }
+    }
+}

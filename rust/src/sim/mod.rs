@@ -1,0 +1,327 @@
+//! Monte-Carlo completion-time engine (paper §II dynamics, eq. 1–2, 5).
+//!
+//! [`simulate_round`] plays out one round: given a TO matrix and one
+//! delay realization it computes, per worker, the arrival time of every
+//! slot's result at the master (prefix-summed computation delays plus
+//! that slot's communication delay — eq. 1), then finds the earliest
+//! time at which `k` *distinct* tasks have arrived (eq. 2 + the
+//! computation-target stopping rule).
+//!
+//! [`montecarlo`] wraps this in a seeded, optionally multi-threaded
+//! estimator producing the paper's `t̄_C(r, k)` (eq. 5) with standard
+//! errors, and supports *coupled* evaluation of several schemes on the
+//! identical delay stream (variance-reduced comparisons, and the
+//! stochastic-dominance property tests).
+
+pub mod montecarlo;
+
+pub use montecarlo::{CompletionEstimate, MonteCarlo};
+
+use crate::delay::DelaySample;
+use crate::scheduler::ToMatrix;
+
+/// Result of one simulated round.
+#[derive(Debug, Clone)]
+pub struct RoundResult {
+    /// `t_C(r, k)` for this realization.
+    pub completion_time: f64,
+    /// The `k` distinct tasks the master held at completion, in arrival
+    /// order (the `p_1 … p_k` of update rule eq. 61).
+    pub winners: Vec<usize>,
+}
+
+/// Reusable scratch for the hot loop — avoids per-round allocation.
+/// One per thread; `simulate_round_with` writes into it.
+#[derive(Debug, Default)]
+pub struct SimScratch {
+    /// (arrival time, task) for every slot, filled per round.
+    arrivals: Vec<(f64, usize)>,
+    /// first-arrival marker per task.
+    seen: Vec<bool>,
+}
+
+impl SimScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn reset(&mut self, n: usize, cap: usize) {
+        self.arrivals.clear();
+        self.arrivals.reserve(cap);
+        self.seen.clear();
+        self.seen.resize(n, false);
+    }
+}
+
+/// Simulate one round, allocating scratch internally (tests/one-offs).
+pub fn simulate_round(to: &ToMatrix, sample: &DelaySample, k: usize) -> RoundResult {
+    let mut scratch = SimScratch::new();
+    simulate_round_with(to, sample, k, &mut scratch)
+}
+
+/// Simulate one round into caller-provided scratch (the hot path).
+///
+/// Complexity `O(n·r log(n·r))` from the arrival sort.  Early-exit
+/// optimizations (partial selection) are benchmarked in
+/// `rust/benches/hot_paths.rs`; the sort variant wins for the paper's
+/// `n ≤ 16` sizes.
+pub fn simulate_round_with(
+    to: &ToMatrix,
+    sample: &DelaySample,
+    k: usize,
+    scratch: &mut SimScratch,
+) -> RoundResult {
+    let (n, r) = (to.n(), to.r());
+    assert_eq!(sample.n, n, "delay sample shaped for different n");
+    assert_eq!(sample.r, r, "delay sample shaped for different r");
+    assert!(k >= 1 && k <= n, "computation target must satisfy 1 ≤ k ≤ n");
+
+    scratch.reset(n, n * r);
+
+    // eq. (1): worker i's j-th result arrives at
+    //   Σ_{m ≤ j} comp(i, m) + comm(i, j)
+    for i in 0..n {
+        let comp = sample.comp_row(i);
+        let comm = sample.comm_row(i);
+        let row = to.row(i);
+        let mut prefix = 0.0;
+        for j in 0..r {
+            prefix += comp[j];
+            scratch.arrivals.push((prefix + comm[j], row[j]));
+        }
+    }
+
+    // stopping rule: earliest t with k distinct tasks received
+    scratch
+        .arrivals
+        .sort_unstable_by(|a, b| a.0.total_cmp(&b.0));
+
+    let mut winners = Vec::with_capacity(k);
+    for &(t, task) in scratch.arrivals.iter() {
+        if !scratch.seen[task] {
+            scratch.seen[task] = true;
+            winners.push(task);
+            if winners.len() == k {
+                return RoundResult {
+                    completion_time: t,
+                    winners,
+                };
+            }
+        }
+    }
+
+    // unreachable when the TO matrix covers ≥ k distinct tasks; surface
+    // the configuration error loudly otherwise.
+    panic!(
+        "TO matrix covers only {} distinct tasks; target k = {k} unreachable",
+        scratch.seen.iter().filter(|&&s| s).count()
+    );
+}
+
+/// Completion time only — the Monte-Carlo hot path.
+///
+/// Identity: the round completes at the k-th smallest *per-task first
+/// arrival* `t_(k)` (each task's first arrival is `t_j` of eq. 2, and
+/// the k-th distinct arrival is exactly the k-th order statistic of the
+/// `t_j`).  That replaces the `O(n·r log(n·r))` arrival sort of
+/// [`simulate_round_with`] with an `O(n·r)` min-reduction plus an
+/// `O(n)` selection — ~7× faster at n = r = 16 (EXPERIMENTS.md §Perf).
+/// Use [`simulate_round_with`] when the *winner order* matters (the
+/// training path of eq. 61).
+pub fn completion_time_fast(
+    to: &ToMatrix,
+    sample: &DelaySample,
+    k: usize,
+    task_times: &mut Vec<f64>,
+) -> f64 {
+    let (n, r) = (to.n(), to.r());
+    debug_assert_eq!(sample.n, n);
+    debug_assert_eq!(sample.r, r);
+    assert!(k >= 1 && k <= n, "computation target must satisfy 1 ≤ k ≤ n");
+    task_times.clear();
+    task_times.resize(n, f64::INFINITY);
+    for i in 0..n {
+        let comp = sample.comp_row(i);
+        let comm = sample.comm_row(i);
+        let row = to.row(i);
+        let mut prefix = 0.0;
+        for j in 0..r {
+            prefix += comp[j];
+            let arrival = prefix + comm[j];
+            let task = row[j];
+            if arrival < task_times[task] {
+                task_times[task] = arrival;
+            }
+        }
+    }
+    let (_, kth, _) = task_times.select_nth_unstable_by(k - 1, |a, b| a.total_cmp(b));
+    let t = *kth;
+    assert!(
+        t.is_finite(),
+        "TO matrix covers fewer than k = {k} distinct tasks"
+    );
+    t
+}
+
+/// First-arrival time of every task (`t_j` of eq. 2), ∞ for unassigned
+/// tasks.  Used by the Theorem-1 analytic evaluator.
+pub fn task_arrival_times(to: &ToMatrix, sample: &DelaySample) -> Vec<f64> {
+    let (n, r) = (to.n(), to.r());
+    let mut t = vec![f64::INFINITY; n];
+    for i in 0..n {
+        let comp = sample.comp_row(i);
+        let comm = sample.comm_row(i);
+        let row = to.row(i);
+        let mut prefix = 0.0;
+        for j in 0..r {
+            prefix += comp[j];
+            let arrival = prefix + comm[j];
+            let task = row[j];
+            if arrival < t[task] {
+                t[task] = arrival;
+            }
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::delay::DelaySample;
+    use crate::scheduler::{CyclicScheduler, Scheduler, ToMatrix};
+    use crate::util::rng::Rng;
+
+    /// deterministic 2-worker fixture:
+    ///   C = [[0, 1], [1, 0]]
+    ///   worker 0: comp [1, 2], comm [10, 1]
+    ///   worker 1: comp [4, 1], comm [1, 1]
+    /// arrivals: w0 slot0 (task0) @ 1+10=11; w0 slot1 (task1) @ 3+1=4
+    ///           w1 slot0 (task1) @ 4+1=5;   w1 slot1 (task0) @ 5+1=6
+    fn fixture() -> (ToMatrix, DelaySample) {
+        let to = ToMatrix::new(2, vec![vec![0, 1], vec![1, 0]]);
+        let s = DelaySample::from_rows(
+            vec![vec![1.0, 2.0], vec![4.0, 1.0]],
+            vec![vec![10.0, 1.0], vec![1.0, 1.0]],
+        );
+        (to, s)
+    }
+
+    #[test]
+    fn arrival_times_follow_eq_1_and_2() {
+        let (to, s) = fixture();
+        let t = task_arrival_times(&to, &s);
+        // t_1 = min(11, 6) = 6; t_2 = min(4, 5) = 4
+        assert_eq!(t, vec![6.0, 4.0]);
+    }
+
+    #[test]
+    fn completion_k1_is_first_distinct() {
+        let (to, s) = fixture();
+        let r = simulate_round(&to, &s, 1);
+        assert_eq!(r.completion_time, 4.0);
+        assert_eq!(r.winners, vec![1]);
+    }
+
+    #[test]
+    fn completion_k2_needs_both_tasks() {
+        let (to, s) = fixture();
+        let r = simulate_round(&to, &s, 2);
+        assert_eq!(r.completion_time, 6.0);
+        assert_eq!(r.winners, vec![1, 0]);
+    }
+
+    #[test]
+    fn duplicate_arrivals_do_not_count_twice() {
+        // worker 1 re-delivers task 1 before anyone delivers task 0
+        let to = ToMatrix::new(2, vec![vec![1, 1], vec![1, 0]]);
+        let s = DelaySample::from_rows(
+            vec![vec![1.0, 1.0], vec![1.0, 5.0]],
+            vec![vec![0.5, 0.5], vec![0.5, 0.5]],
+        );
+        let r = simulate_round(&to, &s, 2);
+        // task1 @1.5 (w0) and @1.5 (w1), dup @2.5; task0 @6.5
+        assert_eq!(r.completion_time, 6.5);
+        assert_eq!(r.winners, vec![1, 0]);
+    }
+
+    #[test]
+    fn completion_monotone_in_k() {
+        let model = crate::delay::ShiftedExponential::new(0.1, 2.0, 0.1, 2.0);
+        use crate::delay::DelayModel;
+        let mut rng = Rng::seed_from_u64(9);
+        let to = CyclicScheduler.schedule(8, 4, &mut rng);
+        for _ in 0..100 {
+            let s = model.sample(8, 4, &mut rng);
+            let mut last = 0.0;
+            for k in 1..=8 {
+                let r = simulate_round(&to, &s, k);
+                assert!(r.completion_time >= last, "k={k}");
+                last = r.completion_time;
+            }
+        }
+    }
+
+    #[test]
+    fn completion_non_increasing_in_r_under_coupling() {
+        // adding a column to the TO matrix (same delays for shared
+        // prefix slots) can only help
+        use crate::delay::DelayModel;
+        let model = crate::delay::ShiftedExponential::new(0.1, 2.0, 0.1, 2.0);
+        let mut rng = Rng::seed_from_u64(33);
+        let n = 6;
+        for _ in 0..50 {
+            let big = model.sample(n, n, &mut rng);
+            let mut last = f64::INFINITY;
+            for r in 1..=n {
+                // truncate both schedule and delays to r slots
+                let to = {
+                    let mut rng2 = Rng::seed_from_u64(0);
+                    CyclicScheduler.schedule(n, r, &mut rng2)
+                };
+                let s = DelaySample::from_rows(
+                    (0..n).map(|i| big.comp_row(i)[..r].to_vec()).collect(),
+                    (0..n).map(|i| big.comm_row(i)[..r].to_vec()).collect(),
+                );
+                let res = simulate_round(&to, &s, n.min(2 * r));
+                if r > 1 {
+                    // completion for smaller target on more slots is
+                    // not directly comparable; instead fix k = 2
+                    let res2 = simulate_round(&to, &s, 2.min(n));
+                    assert!(res2.completion_time <= last + 1e-12, "r={r}");
+                    last = res2.completion_time;
+                } else {
+                    last = simulate_round(&to, &s, 2.min(n)).completion_time;
+                }
+                let _ = res;
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "unreachable")]
+    fn panics_when_target_uncoverable() {
+        // both workers only ever compute task 0 → k = 2 impossible
+        let to = ToMatrix::new(2, vec![vec![0, 0], vec![0, 0]]);
+        let s = DelaySample::from_rows(
+            vec![vec![1.0, 1.0], vec![1.0, 1.0]],
+            vec![vec![1.0, 1.0], vec![1.0, 1.0]],
+        );
+        simulate_round(&to, &s, 2);
+    }
+
+    #[test]
+    fn winners_match_task_arrival_order() {
+        use crate::delay::DelayModel;
+        let model = crate::delay::ShiftedExponential::new(0.0, 1.0, 0.0, 1.0);
+        let mut rng = Rng::seed_from_u64(4);
+        let to = CyclicScheduler.schedule(5, 3, &mut rng);
+        let s = model.sample(5, 3, &mut rng);
+        let res = simulate_round(&to, &s, 5.min(to.r() * 5));
+        let t = task_arrival_times(&to, &s);
+        // winners must be sorted by their first-arrival times
+        for w in res.winners.windows(2) {
+            assert!(t[w[0]] <= t[w[1]]);
+        }
+    }
+}

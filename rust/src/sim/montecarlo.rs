@@ -1,0 +1,328 @@
+//! Seeded, multi-threaded Monte-Carlo estimation of `t̄_C(r, k)`.
+//!
+//! Rounds are sharded across OS threads; each shard owns an RNG seeded
+//! from `(seed, shard)` so results are reproducible for a fixed
+//! `(trials, threads, seed)` triple regardless of scheduling.  The
+//! coupled estimator evaluates several schemes against the *same* delay
+//! stream, eliminating between-scheme sampling noise — that is what the
+//! figure harnesses use, mirroring the paper's "same dataset for all
+//! schemes" fairness note.
+
+use crate::util::rng::Rng;
+
+
+use crate::delay::{DelayModel, DelaySample};
+use crate::scheduler::Scheduler;
+use crate::util::stats::{quantile_sorted, RunningStats};
+
+use super::completion_time_fast;
+
+/// Point estimate of the average completion time plus dispersion.
+#[derive(Debug, Clone)]
+pub struct CompletionEstimate {
+    pub scheme: String,
+    pub n: usize,
+    pub r: usize,
+    pub k: usize,
+    pub trials: usize,
+    pub mean: f64,
+    pub std_err: f64,
+    pub std_dev: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+}
+
+impl CompletionEstimate {
+    fn from_values(
+        scheme: String,
+        n: usize,
+        r: usize,
+        k: usize,
+        mut values: Vec<f64>,
+    ) -> Self {
+        let mut acc = RunningStats::new();
+        for &v in &values {
+            acc.push(v);
+        }
+        values.sort_unstable_by(f64::total_cmp);
+        Self {
+            scheme,
+            n,
+            r,
+            k,
+            trials: values.len(),
+            mean: acc.mean(),
+            std_err: acc.std_err(),
+            std_dev: acc.std_dev(),
+            min: acc.min(),
+            max: acc.max(),
+            p50: quantile_sorted(&values, 0.5),
+            p95: quantile_sorted(&values, 0.95),
+        }
+    }
+}
+
+/// Monte-Carlo driver configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct MonteCarlo {
+    pub trials: usize,
+    pub seed: u64,
+    pub threads: usize,
+}
+
+impl Default for MonteCarlo {
+    fn default() -> Self {
+        Self {
+            trials: 10_000,
+            seed: 0x5EED,
+            threads: std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(1),
+        }
+    }
+}
+
+impl MonteCarlo {
+    pub fn new(trials: usize, seed: u64) -> Self {
+        Self {
+            trials,
+            seed,
+            ..Self::default()
+        }
+    }
+
+    pub fn single_threaded(mut self) -> Self {
+        self.threads = 1;
+        self
+    }
+
+    /// Estimate `t̄` for one scheme.
+    pub fn estimate(
+        &self,
+        scheduler: &dyn Scheduler,
+        model: &dyn DelayModel,
+        n: usize,
+        r: usize,
+        k: usize,
+    ) -> CompletionEstimate {
+        let values = self.run_coupled(&[scheduler], model, n, r, k).pop().unwrap();
+        CompletionEstimate::from_values(scheduler.name().to_string(), n, r, k, values)
+    }
+
+    /// Estimate several schemes against the identical delay stream.
+    pub fn estimate_coupled(
+        &self,
+        schedulers: &[&dyn Scheduler],
+        model: &dyn DelayModel,
+        n: usize,
+        r: usize,
+        k: usize,
+    ) -> Vec<CompletionEstimate> {
+        let all = self.run_coupled(schedulers, model, n, r, k);
+        schedulers
+            .iter()
+            .zip(all)
+            .map(|(s, values)| {
+                CompletionEstimate::from_values(s.name().to_string(), n, r, k, values)
+            })
+            .collect()
+    }
+
+    /// Raw per-round completion times, one vec per scheme, coupled on
+    /// the delay stream.  Exposed for dominance tests and custom stats.
+    pub fn run_coupled(
+        &self,
+        schedulers: &[&dyn Scheduler],
+        model: &dyn DelayModel,
+        n: usize,
+        r: usize,
+        k: usize,
+    ) -> Vec<Vec<f64>> {
+        assert!(!schedulers.is_empty());
+        assert!(self.trials > 0, "need at least one trial");
+        let threads = self.threads.clamp(1, self.trials);
+        let shard_sizes: Vec<usize> = (0..threads)
+            .map(|t| self.trials / threads + usize::from(t < self.trials % threads))
+            .collect();
+
+        let mut per_scheme: Vec<Vec<f64>> = vec![Vec::with_capacity(self.trials); schedulers.len()];
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = shard_sizes
+                .iter()
+                .enumerate()
+                .map(|(shard, &rounds)| {
+                    let schedulers = &schedulers;
+                    let seed = self.seed;
+                    scope.spawn(move || {
+                        shard_worker(*schedulers, model, n, r, k, rounds, seed, shard as u64)
+                    })
+                })
+                .collect();
+            for h in handles {
+                let shard_result = h.join().expect("MC shard panicked");
+                for (dst, src) in per_scheme.iter_mut().zip(shard_result) {
+                    dst.extend(src);
+                }
+            }
+        });
+        per_scheme
+    }
+}
+
+fn shard_worker(
+    schedulers: &[&dyn Scheduler],
+    model: &dyn DelayModel,
+    n: usize,
+    r: usize,
+    k: usize,
+    rounds: usize,
+    seed: u64,
+    shard: u64,
+) -> Vec<Vec<f64>> {
+    // distinct, deterministic streams per shard; scheduling randomness
+    // (RA redraws) is kept on a *separate* RNG so the delay stream is
+    // identical no matter which scheduler set is being evaluated —
+    // `estimate(CS)` and `estimate_coupled([CS, RA])` see the same
+    // delays for CS.
+    let base = seed ^ 0x9E3779B97F4A7C15u64.wrapping_mul(shard + 1);
+    let mut rng = Rng::seed_from_u64(base);
+    let mut rng_sched = Rng::seed_from_u64(base ^ 0x5C4ED);
+    let mut sample = DelaySample::zeros(n, r);
+    let mut scratch: Vec<f64> = Vec::with_capacity(n);
+
+    // fixed schedules built once; randomized ones rebuilt per round
+    let fixed: Vec<Option<crate::scheduler::ToMatrix>> = schedulers
+        .iter()
+        .map(|s| {
+            if s.is_randomized() {
+                None
+            } else {
+                Some(s.schedule(n, r, &mut rng_sched))
+            }
+        })
+        .collect();
+
+    let mut out: Vec<Vec<f64>> = vec![Vec::with_capacity(rounds); schedulers.len()];
+    for _ in 0..rounds {
+        model.sample_into(&mut sample, &mut rng);
+        for (idx, sched) in schedulers.iter().enumerate() {
+            let t = match &fixed[idx] {
+                Some(to) => completion_time_fast(to, &sample, k, &mut scratch),
+                None => {
+                    let to = sched.schedule(n, r, &mut rng_sched);
+                    completion_time_fast(&to, &sample, k, &mut scratch)
+                }
+            };
+            out[idx].push(t);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::delay::{ShiftedExponential, TruncatedGaussianModel};
+    use crate::scheduler::{CyclicScheduler, RandomAssignment, StaircaseScheduler};
+
+    #[test]
+    fn deterministic_given_seed_and_threads() {
+        let model = ShiftedExponential::new(0.1, 3.0, 0.2, 2.0);
+        let mc = MonteCarlo {
+            trials: 2000,
+            seed: 42,
+            threads: 4,
+        };
+        let a = mc.estimate(&CyclicScheduler, &model, 6, 3, 6);
+        let b = mc.estimate(&CyclicScheduler, &model, 6, 3, 6);
+        assert_eq!(a.mean, b.mean);
+        assert_eq!(a.p95, b.p95);
+    }
+
+    #[test]
+    fn thread_split_covers_all_trials() {
+        let model = ShiftedExponential::new(0.1, 3.0, 0.2, 2.0);
+        for threads in [1, 2, 3, 7] {
+            let mc = MonteCarlo {
+                trials: 100,
+                seed: 1,
+                threads,
+            };
+            let e = mc.estimate(&CyclicScheduler, &model, 4, 2, 3);
+            assert_eq!(e.trials, 100, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn r1_k1_mean_matches_analytic_minimum() {
+        // r = 1, k = 1, n = 1: completion = comp + comm of the single
+        // worker; mean must equal the sum of means.
+        let model = ShiftedExponential::new(0.1, 4.0, 0.3, 5.0);
+        let mc = MonteCarlo::new(200_000, 7);
+        let e = mc.estimate(&CyclicScheduler, &model, 1, 1, 1);
+        let want = 0.1 + 0.25 + 0.3 + 0.2;
+        assert!(
+            (e.mean - want).abs() < 5.0 * e.std_err,
+            "{} vs {want} (se {})",
+            e.mean,
+            e.std_err
+        );
+    }
+
+    #[test]
+    fn more_redundancy_helps_on_average() {
+        // at fixed k, larger computation load can only reduce t̄ (more
+        // slots per task) — checked on scenario-1 gaussians
+        let model = TruncatedGaussianModel::scenario1(8);
+        let mc = MonteCarlo::new(4000, 11);
+        let t_r1 = mc.estimate(&CyclicScheduler, &model, 8, 1, 6).mean;
+        let t_r4 = mc.estimate(&CyclicScheduler, &model, 8, 4, 6).mean;
+        let t_r8 = mc.estimate(&CyclicScheduler, &model, 8, 8, 6).mean;
+        assert!(t_r4 < t_r1, "{t_r4} !< {t_r1}");
+        assert!(t_r8 <= t_r4 + 2e-3, "{t_r8} !<= {t_r4}");
+    }
+
+    #[test]
+    fn coupled_schemes_share_delay_stream() {
+        // CS vs CS coupled must be *identical*, not just close
+        let model = ShiftedExponential::new(0.1, 3.0, 0.2, 2.0);
+        let mc = MonteCarlo::new(500, 3);
+        let out = mc.run_coupled(
+            &[&CyclicScheduler, &CyclicScheduler],
+            &model,
+            5,
+            2,
+            4,
+        );
+        assert_eq!(out[0], out[1]);
+    }
+
+    #[test]
+    fn scheduled_schemes_beat_ra_at_full_load() {
+        // the paper's headline uncoded comparison (Figs. 5–7): CS and SS
+        // dominate RA when r = n
+        let model = TruncatedGaussianModel::scenario1(10);
+        let mc = MonteCarlo::new(6000, 19);
+        let est = mc.estimate_coupled(
+            &[&CyclicScheduler, &StaircaseScheduler, &RandomAssignment],
+            &model,
+            10,
+            10,
+            10,
+        );
+        let (cs, ss, ra) = (&est[0], &est[1], &est[2]);
+        assert!(cs.mean < ra.mean, "CS {} !< RA {}", cs.mean, ra.mean);
+        assert!(ss.mean < ra.mean, "SS {} !< RA {}", ss.mean, ra.mean);
+    }
+
+    #[test]
+    fn estimate_quantiles_ordered() {
+        let model = ShiftedExponential::new(0.1, 3.0, 0.2, 2.0);
+        let mc = MonteCarlo::new(3000, 5);
+        let e = mc.estimate(&StaircaseScheduler, &model, 6, 2, 5);
+        assert!(e.min <= e.p50 && e.p50 <= e.p95 && e.p95 <= e.max);
+        assert!(e.std_dev > 0.0);
+    }
+}

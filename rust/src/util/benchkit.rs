@@ -1,0 +1,146 @@
+//! Micro-benchmark harness (offline substrate — DESIGN.md §5; criterion
+//! is unavailable in this build, and the `[[bench]]` targets use
+//! `harness = false` with this kit instead).
+//!
+//! Method: warmup, then adaptive batching until a target measurement
+//! window is filled; reports mean / std-dev / min across batches plus
+//! derived throughput.  Deterministic output layout so `cargo bench`
+//! logs diff cleanly between optimization iterations (EXPERIMENTS.md
+//! §Perf workflow).
+
+use std::time::{Duration, Instant};
+
+/// One benchmark's results, in nanoseconds per iteration.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub min_ns: f64,
+    pub iters: u64,
+}
+
+impl BenchResult {
+    pub fn per_second(&self) -> f64 {
+        1e9 / self.mean_ns
+    }
+
+    pub fn report_line(&self) -> String {
+        let (scaled, unit) = scale_ns(self.mean_ns);
+        format!(
+            "{:<44} {:>10.3} {}/iter  (±{:>5.1}%, min {:.3} {}, {:.2e} it/s)",
+            self.name,
+            scaled,
+            unit,
+            100.0 * self.std_ns / self.mean_ns.max(1e-12),
+            scale_ns(self.min_ns).0,
+            scale_ns(self.min_ns).1,
+            self.per_second()
+        )
+    }
+}
+
+fn scale_ns(ns: f64) -> (f64, &'static str) {
+    if ns < 1e3 {
+        (ns, "ns")
+    } else if ns < 1e6 {
+        (ns / 1e3, "µs")
+    } else if ns < 1e9 {
+        (ns / 1e6, "ms")
+    } else {
+        (ns / 1e9, "s")
+    }
+}
+
+/// Benchmark `f`, returning timing statistics.
+///
+/// `f` must do one logical iteration per call; use `std::hint::black_box`
+/// on inputs/outputs to defeat const-folding.
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
+    bench_with_budget(name, Duration::from_millis(300), &mut f)
+}
+
+/// Benchmark with an explicit measurement budget.
+pub fn bench_with_budget<F: FnMut()>(name: &str, budget: Duration, f: &mut F) -> BenchResult {
+    // warmup + batch sizing: aim for ≥ 30 batches within the budget
+    let t0 = Instant::now();
+    f();
+    let single = t0.elapsed().max(Duration::from_nanos(20));
+    let batch = ((budget.as_secs_f64() / 30.0 / single.as_secs_f64()).ceil() as u64).clamp(1, 1 << 22);
+
+    // warmup one batch
+    for _ in 0..batch.min(1000) {
+        f();
+    }
+
+    let mut samples_ns: Vec<f64> = Vec::new();
+    let mut iters = 0u64;
+    let start = Instant::now();
+    while start.elapsed() < budget || samples_ns.len() < 5 {
+        let t = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        samples_ns.push(t.elapsed().as_nanos() as f64 / batch as f64);
+        iters += batch;
+        if samples_ns.len() >= 200 {
+            break;
+        }
+    }
+    let mean = samples_ns.iter().sum::<f64>() / samples_ns.len() as f64;
+    let var = samples_ns
+        .iter()
+        .map(|s| (s - mean) * (s - mean))
+        .sum::<f64>()
+        / (samples_ns.len() - 1).max(1) as f64;
+    let min = samples_ns.iter().cloned().fold(f64::INFINITY, f64::min);
+    let result = BenchResult {
+        name: name.to_string(),
+        mean_ns: mean,
+        std_ns: var.sqrt(),
+        min_ns: min,
+        iters,
+    };
+    println!("{}", result.report_line());
+    result
+}
+
+/// Group header for bench output.
+pub fn group(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_a_known_busy_loop() {
+        let r = bench_with_budget(
+            "busy-50us",
+            Duration::from_millis(60),
+            &mut || {
+                let t = Instant::now();
+                while t.elapsed() < Duration::from_micros(50) {
+                    std::hint::spin_loop();
+                }
+            },
+        );
+        assert!(r.mean_ns > 45_000.0, "mean {}", r.mean_ns);
+        assert!(r.mean_ns < 250_000.0, "mean {}", r.mean_ns);
+        assert!(r.iters >= 5);
+    }
+
+    #[test]
+    fn report_line_scales_units() {
+        let r = BenchResult {
+            name: "x".into(),
+            mean_ns: 2_500_000.0,
+            std_ns: 10_000.0,
+            min_ns: 2_400_000.0,
+            iters: 100,
+        };
+        assert!(r.report_line().contains("ms/iter"));
+        assert!((r.per_second() - 400.0).abs() < 1.0);
+    }
+}

@@ -1,0 +1,160 @@
+//! Tiny command-line parser (offline substrate — DESIGN.md §5).
+//!
+//! Grammar: `prog <subcommand> [--key value]... [--flag]...`.
+//! Typed getters with defaults; unknown keys are collected so the
+//! binary can reject typos instead of silently ignoring them.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    values: HashMap<String, String>,
+    flags: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (no program name).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Self> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = Some(it.next().unwrap());
+            }
+        }
+        while let Some(arg) = it.next() {
+            let Some(key) = arg.strip_prefix("--") else {
+                bail!("unexpected positional argument {arg:?}");
+            };
+            if key.is_empty() {
+                bail!("bare `--` is not supported");
+            }
+            match it.peek() {
+                Some(v) if !v.starts_with("--") => {
+                    let v = it.next().unwrap();
+                    out.values.insert(key.to_string(), v);
+                }
+                _ => out.flags.push(key.to_string()),
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    fn mark(&self, key: &str) {
+        self.consumed.borrow_mut().push(key.to_string());
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.mark(key);
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<String> {
+        self.mark(key);
+        self.values.get(key).cloned()
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.str_opt(key).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects a number, got {v:?}")),
+        }
+    }
+
+    /// Keys provided by the user but never consumed by a getter — call
+    /// after all getters to catch typos.
+    pub fn unknown_keys(&self) -> Vec<String> {
+        let consumed = self.consumed.borrow();
+        self.values
+            .keys()
+            .chain(self.flags.iter())
+            .filter(|k| !consumed.contains(k))
+            .cloned()
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_values() {
+        let a = parse(&["fig4", "--trials", "500", "--scenario", "2", "--cluster"]);
+        assert_eq!(a.subcommand.as_deref(), Some("fig4"));
+        assert_eq!(a.usize_or("trials", 1).unwrap(), 500);
+        assert_eq!(a.usize_or("scenario", 1).unwrap(), 2);
+        assert!(a.flag("cluster"));
+        assert!(!a.flag("missing"));
+        assert!(a.unknown_keys().is_empty());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&["sim"]);
+        assert_eq!(a.usize_or("n", 16).unwrap(), 16);
+        assert_eq!(a.f64_or("eta", 0.01).unwrap(), 0.01);
+        assert_eq!(a.str_or("model", "scenario1"), "scenario1");
+    }
+
+    #[test]
+    fn negative_numbers_are_values() {
+        let a = parse(&["x", "--shift", "-0.5"]);
+        assert_eq!(a.f64_or("shift", 0.0).unwrap(), -0.5);
+    }
+
+    #[test]
+    fn unknown_keys_detected() {
+        let a = parse(&["fig4", "--trils", "5"]);
+        let _ = a.usize_or("trials", 1);
+        assert_eq!(a.unknown_keys(), vec!["trils".to_string()]);
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = parse(&["x", "--n", "lots"]);
+        assert!(a.usize_or("n", 1).is_err());
+    }
+
+    #[test]
+    fn rejects_stray_positional() {
+        assert!(Args::parse(["fig4".to_string(), "oops".to_string()]).is_err());
+    }
+}

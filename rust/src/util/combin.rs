@@ -1,0 +1,166 @@
+//! Combinatorics for the Theorem-1 inclusion–exclusion evaluator:
+//! binomial coefficients and subset enumeration.
+
+/// Binomial coefficient `C(n, k)` as f64 (exact for the n ≤ 40 range the
+/// analytic evaluator uses; f64 keeps the alternating sums stable).
+pub fn binomial_f64(n: u64, k: u64) -> f64 {
+    if k > n {
+        return 0.0;
+    }
+    let k = k.min(n - k);
+    let mut acc = 1.0_f64;
+    for i in 0..k {
+        acc = acc * (n - i) as f64 / (i + 1) as f64;
+    }
+    acc.round()
+}
+
+/// Visit every subset of `{0..n}` of exactly `size` elements.
+///
+/// Gosper's-hack-free lexicographic enumeration on an index vector:
+/// deterministic order, no allocation beyond the scratch vec.
+pub fn subsets_of_size<F: FnMut(&[usize])>(n: usize, size: usize, mut visit: F) {
+    if size > n {
+        return;
+    }
+    if size == 0 {
+        visit(&[]);
+        return;
+    }
+    let mut idx: Vec<usize> = (0..size).collect();
+    loop {
+        visit(&idx);
+        // advance to next combination in lexicographic order
+        let mut i = size;
+        loop {
+            if i == 0 {
+                return;
+            }
+            i -= 1;
+            if idx[i] != i + n - size {
+                break;
+            }
+            if i == 0 {
+                return;
+            }
+        }
+        idx[i] += 1;
+        for j in i + 1..size {
+            idx[j] = idx[j - 1] + 1;
+        }
+    }
+}
+
+/// Iterate subsets as bitmasks of fixed popcount via Gosper's hack.
+/// Usable for n ≤ 63; the Theorem-1 evaluator caps n ≤ 20 anyway.
+pub fn masks_of_popcount(n: usize, size: usize) -> MaskIter {
+    assert!(n < 64, "mask enumeration supports n < 64");
+    MaskIter {
+        n,
+        current: if size == 0 {
+            Some(0)
+        } else if size <= n {
+            Some((1u64 << size) - 1)
+        } else {
+            None
+        },
+        size,
+    }
+}
+
+pub struct MaskIter {
+    n: usize,
+    current: Option<u64>,
+    size: usize,
+}
+
+impl Iterator for MaskIter {
+    type Item = u64;
+
+    fn next(&mut self) -> Option<u64> {
+        let cur = self.current?;
+        // compute successor via Gosper's hack
+        self.current = if self.size == 0 {
+            None
+        } else {
+            let c = cur & cur.wrapping_neg();
+            let r = cur + c;
+            let next = (((r ^ cur) >> 2) / c) | r;
+            if next < (1u64 << self.n) {
+                Some(next)
+            } else {
+                None
+            }
+        };
+        Some(cur)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binomials() {
+        assert_eq!(binomial_f64(0, 0), 1.0);
+        assert_eq!(binomial_f64(5, 2), 10.0);
+        assert_eq!(binomial_f64(10, 5), 252.0);
+        assert_eq!(binomial_f64(16, 8), 12870.0);
+        assert_eq!(binomial_f64(3, 5), 0.0);
+        assert_eq!(binomial_f64(20, 0), 1.0);
+    }
+
+    #[test]
+    fn pascal_identity() {
+        for n in 1..25u64 {
+            for k in 1..n {
+                let lhs = binomial_f64(n, k);
+                let rhs = binomial_f64(n - 1, k - 1) + binomial_f64(n - 1, k);
+                assert_eq!(lhs, rhs, "C({n},{k})");
+            }
+        }
+    }
+
+    #[test]
+    fn subset_counts_match_binomial() {
+        for n in 0..10 {
+            for s in 0..=n {
+                let mut count = 0u64;
+                subsets_of_size(n, s, |_| count += 1);
+                assert_eq!(count as f64, binomial_f64(n as u64, s as u64), "n={n} s={s}");
+            }
+        }
+    }
+
+    #[test]
+    fn subsets_are_sorted_and_distinct() {
+        let mut seen = Vec::new();
+        subsets_of_size(6, 3, |s| {
+            assert!(s.windows(2).all(|w| w[0] < w[1]));
+            seen.push(s.to_vec());
+        });
+        let mut dedup = seen.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(seen.len(), dedup.len());
+        assert_eq!(seen.len(), 20);
+    }
+
+    #[test]
+    fn mask_iter_matches_subset_iter() {
+        for n in 0..12 {
+            for s in 0..=n {
+                let masks: Vec<u64> = masks_of_popcount(n, s).collect();
+                assert_eq!(
+                    masks.len() as f64,
+                    binomial_f64(n as u64, s as u64),
+                    "n={n} s={s}"
+                );
+                for m in &masks {
+                    assert_eq!(m.count_ones() as usize, s);
+                    assert!(*m < (1u64 << n.max(1)));
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! Numerical utilities shared across the crate: special functions,
+//! streaming statistics, and combinatorics.
+
+pub mod benchkit;
+pub mod cli;
+pub mod combin;
+pub mod json;
+pub mod math;
+pub mod rng;
+pub mod stats;
+
+pub use combin::{binomial_f64, subsets_of_size};
+pub use math::{erf, erf_inv, normal_cdf, normal_pdf, normal_quantile};
+pub use stats::{quantile_sorted, RunningStats};

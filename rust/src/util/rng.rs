@@ -1,0 +1,243 @@
+//! Deterministic pseudo-random generator for the Monte-Carlo engines.
+//!
+//! xoshiro256++ (Blackman & Vigna) seeded through SplitMix64 — the same
+//! construction `rand`'s small-rng uses.  Implemented in-tree because
+//! the build is fully offline (DESIGN.md §5): period 2²⁵⁶−1, passes
+//! BigCrush, and — crucially for reproducible experiments — the stream
+//! is a pure function of the `u64` seed, stable across platforms and
+//! crate versions.
+
+/// xoshiro256++ PRNG.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Seed via SplitMix64 so that low-entropy seeds (0, 1, 2, …) still
+    /// produce well-mixed initial states.
+    pub fn seed_from_u64(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut next_sm = || {
+            sm = sm.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        let s = [next_sm(), next_sm(), next_sm(), next_sm()];
+        Self { s }
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform f64 in `[0, 1)` (53-bit mantissa construction).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f64 in `(0, 1]` — safe for `ln()`.
+    #[inline]
+    pub fn f64_open_left(&mut self) -> f64 {
+        1.0 - self.f64()
+    }
+
+    /// Uniform integer in `[0, bound)` via Lemire's multiply-shift
+    /// rejection (unbiased).
+    #[inline]
+    pub fn below(&mut self, bound: usize) -> usize {
+        assert!(bound > 0, "below(0)");
+        let bound = bound as u64;
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(bound as u128);
+            let lo = m as u64;
+            if lo >= bound {
+                return (m >> 64) as usize;
+            }
+            // rejection zone check
+            let t = bound.wrapping_neg() % bound;
+            if lo >= t {
+                return (m >> 64) as usize;
+            }
+        }
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, slice: &mut [T]) {
+        for i in (1..slice.len()).rev() {
+            let j = self.below(i + 1);
+            slice.swap(i, j);
+        }
+    }
+
+    /// Standard normal via Box–Muller (cosine branch).
+    #[inline]
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.f64_open_left().max(1e-300);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Exponential with rate `lambda` (inverse CDF).
+    #[inline]
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        -self.f64_open_left().max(1e-300).ln() / lambda
+    }
+
+    /// Derive an independent child stream (for thread sharding).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::seed_from_u64(self.next_u64() ^ tag.wrapping_mul(0xA24BAED4963EE407))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Rng::seed_from_u64(7);
+        let mut b = Rng::seed_from_u64(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Rng::seed_from_u64(8);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::seed_from_u64(1);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn f64_mean_near_half() {
+        let mut r = Rng::seed_from_u64(2);
+        let n = 100_000;
+        let sum: f64 = (0..n).map(|_| r.f64()).sum();
+        assert!((sum / n as f64 - 0.5).abs() < 0.005);
+    }
+
+    #[test]
+    fn below_is_unbiased_chi_square() {
+        let mut r = Rng::seed_from_u64(3);
+        let bound = 7;
+        let trials = 70_000;
+        let mut counts = vec![0u32; bound];
+        for _ in 0..trials {
+            counts[r.below(bound)] += 1;
+        }
+        let expected = trials as f64 / bound as f64;
+        let chi2: f64 = counts
+            .iter()
+            .map(|&c| (c as f64 - expected).powi(2) / expected)
+            .sum();
+        // 6 dof, 99.9% critical value ≈ 22.5
+        assert!(chi2 < 22.5, "chi2 = {chi2}: {counts:?}");
+    }
+
+    #[test]
+    fn below_never_exceeds_bound() {
+        let mut r = Rng::seed_from_u64(4);
+        for bound in [1usize, 2, 3, 10, 1000] {
+            for _ in 0..1000 {
+                assert!(r.below(bound) < bound);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "below(0)")]
+    fn below_zero_panics() {
+        Rng::seed_from_u64(0).below(0);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::seed_from_u64(5);
+        let mut v: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+        assert_ne!(v, (0..50).collect::<Vec<_>>(), "w.h.p. shuffled");
+    }
+
+    #[test]
+    fn shuffle_uniform_first_element() {
+        let mut r = Rng::seed_from_u64(6);
+        let n = 5;
+        let trials = 50_000;
+        let mut counts = vec![0u32; n];
+        for _ in 0..trials {
+            let mut v: Vec<usize> = (0..n).collect();
+            r.shuffle(&mut v);
+            counts[v[0]] += 1;
+        }
+        let expected = trials as f64 / n as f64;
+        for &c in &counts {
+            assert!((c as f64 - expected).abs() < 5.0 * expected.sqrt());
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::seed_from_u64(7);
+        let n = 200_000;
+        let (mut sum, mut sum2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.normal();
+            sum += x;
+            sum2 += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sum2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = Rng::seed_from_u64(8);
+        let lambda = 4.0;
+        let n = 200_000;
+        let sum: f64 = (0..n).map(|_| r.exponential(lambda)).sum();
+        assert!((sum / n as f64 - 0.25).abs() < 0.005);
+    }
+
+    #[test]
+    fn fork_streams_decorrelated() {
+        let mut parent = Rng::seed_from_u64(9);
+        let mut a = parent.fork(0);
+        let mut b = parent.fork(1);
+        let matches = (0..1000).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(matches, 0);
+    }
+}

@@ -1,0 +1,124 @@
+//! End-to-end cluster integration: real sockets, real protocol, real
+//! compute, paper-§II round semantics.
+
+use straggler_sched::coordinator::{run_cluster, ClusterConfig};
+use straggler_sched::data::Dataset;
+use straggler_sched::delay::DelayModelKind;
+use straggler_sched::scheduler::{CyclicScheduler, RandomAssignment, StaircaseScheduler};
+
+fn base_config(n: usize, r: usize, k: usize, rounds: usize) -> ClusterConfig {
+    ClusterConfig {
+        n,
+        r,
+        k,
+        eta: 0.05,
+        rounds,
+        profile: "quickstart".into(),
+        scheduler: Box::new(CyclicScheduler),
+        dataset: Dataset::synthesize(n, 16, n * 8, 42),
+        inject: Some(DelayModelKind::TruncatedGaussianScenario1),
+        seed: 7,
+        use_pjrt: false,
+        artifact_dir: None,
+        loss_every: 1,
+        listen: None,
+        spawn_workers: true,
+    }
+}
+
+#[test]
+fn cluster_round_delivers_k_distinct_and_converges() {
+    let cfg = base_config(4, 2, 4, 60);
+    let ds = cfg.dataset.clone();
+    let l0 = ds.loss(&vec![0.0; ds.d]);
+    let report = run_cluster(cfg).expect("cluster run");
+    assert_eq!(report.rounds.len(), 60);
+    for log in &report.rounds {
+        // exactly k distinct winners
+        assert_eq!(log.winners.len(), 4, "round {}", log.round);
+        let mut w = log.winners.clone();
+        w.sort_unstable();
+        w.dedup();
+        assert_eq!(w.len(), 4, "winners must be distinct");
+        assert!(log.completion_ms > 0.0);
+    }
+    assert!(
+        report.final_loss < 0.2 * l0,
+        "loss should drop: {l0} → {}",
+        report.final_loss
+    );
+}
+
+#[test]
+fn cluster_completion_reflects_injected_delays() {
+    // scenario 1: comp ≈ 0.1 ms, comm ≈ 0.5 ms; a k = n round needs at
+    // least one full comp+comm ≈ 0.6 ms and should stay well under the
+    // several-ms mark on an unloaded box
+    let cfg = base_config(4, 4, 4, 40);
+    let report = run_cluster(cfg).expect("cluster run");
+    let mean = report.mean_completion_ms();
+    assert!(mean > 0.6, "mean completion {mean} ms below physical floor");
+    assert!(mean < 25.0, "mean completion {mean} ms implausibly high");
+    // measured comm should dominate measured comp (Fig. 3 shape);
+    // comp records include the injected sleep
+    let comp_mean = report.recorders[0].comp_stats().mean();
+    let comm_mean = report.recorders[0].comm_stats().mean();
+    assert!(comm_mean > comp_mean, "comm {comm_mean} !> comp {comp_mean}");
+}
+
+#[test]
+fn cluster_supports_all_uncoded_schedulers() {
+    for (name, sched) in [
+        ("CS", Box::new(CyclicScheduler) as Box<dyn straggler_sched::scheduler::Scheduler>),
+        ("SS", Box::new(StaircaseScheduler)),
+        ("RA", Box::new(RandomAssignment)),
+    ] {
+        let n = 4;
+        let mut cfg = base_config(n, n, 3, 10);
+        cfg.scheduler = sched;
+        let report = run_cluster(cfg).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        assert_eq!(report.rounds.len(), 10, "{name}");
+        for log in &report.rounds {
+            assert_eq!(log.winners.len(), 3, "{name}");
+        }
+    }
+}
+
+#[test]
+fn cluster_partial_target_sees_fewer_results_than_full_work() {
+    // with k = 2 of n = 4 the master acks early; workers should abandon
+    // the tail, so results_seen stays well below n·r on average
+    let cfg = base_config(4, 4, 2, 30);
+    let report = run_cluster(cfg).expect("cluster run");
+    let avg_results: f64 = report
+        .rounds
+        .iter()
+        .map(|l| l.results_seen as f64)
+        .sum::<f64>()
+        / 30.0;
+    assert!(
+        avg_results < 12.0,
+        "stop ack should curtail work: avg {avg_results} results/round of 16 max"
+    );
+}
+
+#[test]
+fn cluster_with_pjrt_backend_runs_if_artifacts_present() {
+    let dir = straggler_sched::runtime::default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping PJRT cluster test: artifacts not built");
+        return;
+    }
+    // quickstart profile: d = 64, b = 32, n = 4
+    let mut cfg = base_config(4, 2, 4, 15);
+    cfg.dataset = Dataset::synthesize(4, 64, 4 * 32, 5);
+    cfg.use_pjrt = true;
+    let ds = cfg.dataset.clone();
+    let l0 = ds.loss(&vec![0.0; ds.d]);
+    let report = run_cluster(cfg).expect("PJRT cluster run");
+    assert!(
+        report.final_loss < l0,
+        "PJRT-backed training must reduce loss: {l0} → {}",
+        report.final_loss
+    );
+}

@@ -1,0 +1,210 @@
+//! Cross-subsystem validation: the same quantity computed by
+//! independent code paths must agree.
+//!
+//! 1. Monte-Carlo simulator  ↔  Theorem-1 inclusion–exclusion evaluator
+//! 2. Monte-Carlo simulator  ↔  true closed-form (r = 1, shifted-exp)
+//! 3. Lower bound            ↔  constructive oracle schedule
+//! 4. Coded decode (PC/PCMM) ↔  uncoded gram sum on a real dataset
+//! 5. PJRT artifacts         ↔  f64 CPU oracle (full-gradient level)
+
+use straggler_sched::analysis::exact::mean_completion_r1_exp;
+use straggler_sched::analysis::{collect_task_times, empirical_mean, theorem1_mean};
+use straggler_sched::coded::{PcScheme, PcmmScheme};
+use straggler_sched::data::Dataset;
+use straggler_sched::delay::exponential::ShiftedExp;
+use straggler_sched::delay::{DelayModel, Ec2LikeModel, ShiftedExponential, TruncatedGaussianModel};
+use straggler_sched::harness::{evaluate, EvalPoint};
+use straggler_sched::lb;
+use straggler_sched::linalg::{norm2, vec_axpy};
+use straggler_sched::scheduler::{oracle_schedule, SchemeId};
+use straggler_sched::sim::{simulate_round, MonteCarlo};
+use straggler_sched::util::rng::Rng;
+
+#[test]
+fn simulator_matches_theorem1_for_every_k_and_scheme() {
+    // Theorem 1 holds for the empirical measure exactly, so the two
+    // estimators must agree to float precision on the same samples.
+    let model = Ec2LikeModel::new(8, 3, 0.3);
+    for sched in [
+        &straggler_sched::scheduler::CyclicScheduler
+            as &dyn straggler_sched::scheduler::Scheduler,
+        &straggler_sched::scheduler::StaircaseScheduler,
+        &straggler_sched::scheduler::RandomAssignment,
+    ] {
+        let samples = collect_task_times(sched, &model, 8, 8, 250, 77);
+        for k in 1..=8 {
+            let a = theorem1_mean(&samples, k);
+            let b = empirical_mean(&samples, k);
+            assert!(
+                (a - b).abs() < 1e-8 * (1.0 + b.abs()),
+                "{} k={k}: theorem1 {a} vs direct {b}",
+                sched.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn simulator_matches_true_closed_form() {
+    // independent ground truth: hypoexponential order statistics
+    let comp = ShiftedExp::new(0.08, 6.0);
+    let comm = ShiftedExp::new(0.25, 2.5);
+    let model = ShiftedExponential { comp, comm };
+    let mc = MonteCarlo::new(120_000, 41);
+    for (n, k) in [(5, 2), (5, 5), (12, 7)] {
+        let exact = mean_completion_r1_exp(n, k, comp, comm);
+        let est = mc.estimate(
+            &straggler_sched::scheduler::CyclicScheduler,
+            &model,
+            n,
+            1,
+            k,
+        );
+        assert!(
+            (exact - est.mean).abs() < 5.0 * est.std_err + 2e-4,
+            "n={n} k={k}: exact {exact} vs MC {} ± {}",
+            est.mean,
+            est.std_err
+        );
+    }
+}
+
+#[test]
+fn lower_bound_is_achieved_by_oracle_and_respected_by_harness() {
+    let model = TruncatedGaussianModel::scenario2(9, 4);
+    let mut rng = Rng::seed_from_u64(10);
+    let mut scratch = Vec::new();
+    // constructive: oracle achieves the k-th slot order statistic
+    for _ in 0..150 {
+        let s = model.sample(9, 3, &mut rng);
+        for k in [1usize, 4, 9] {
+            let bound = lb::kth_slot_arrival(&s, k, &mut scratch);
+            let to = oracle_schedule(&s, k);
+            let sim = simulate_round(&to, &s, k).completion_time;
+            assert!((bound - sim).abs() < 1e-12);
+        }
+    }
+    // statistical: harness LB sits below all schemes at every point
+    for r in [2usize, 5, 9] {
+        let point = EvalPoint::new(9, r, 9, 4000, 8);
+        let est = evaluate(&point, &model);
+        let lb_mean = est
+            .iter()
+            .find(|e| e.scheme == SchemeId::Lb.to_string())
+            .unwrap()
+            .mean;
+        for e in &est {
+            assert!(
+                lb_mean <= e.mean + 1e-9,
+                "r={r}: LB {lb_mean} above {} {}",
+                e.scheme,
+                e.mean
+            );
+        }
+    }
+}
+
+#[test]
+fn coded_decodes_match_uncoded_sum_on_real_dataset() {
+    let ds = Dataset::synthesize(6, 40, 6 * 12, 55);
+    let mut rng = Rng::seed_from_u64(2);
+    let theta: Vec<f64> = (0..40).map(|_| rng.normal()).collect();
+    let mut truth = vec![0.0; 40];
+    for p in &ds.parts {
+        vec_axpy(&mut truth, 1.0, &p.gram_matvec(&theta));
+    }
+
+    let pc = PcScheme::new(6, 3);
+    let resp: Vec<_> = (0..pc.recovery_threshold())
+        .map(|w| (w, pc.worker_compute(w, &ds.parts, &theta)))
+        .collect();
+    let mut err = pc.decode(&resp);
+    vec_axpy(&mut err, -1.0, &truth);
+    assert!(
+        norm2(&err) / norm2(&truth) < 1e-8,
+        "PC decode error {}",
+        norm2(&err) / norm2(&truth)
+    );
+
+    let pcmm = PcmmScheme::new(6, 2);
+    let mut resp = Vec::new();
+    'outer: for j in 0..2 {
+        for i in 0..6 {
+            resp.push(((i, j), pcmm.worker_compute(i, j, &ds.parts, &theta)));
+            if resp.len() == pcmm.recovery_threshold() {
+                break 'outer;
+            }
+        }
+    }
+    let mut err = pcmm.decode(&resp);
+    vec_axpy(&mut err, -1.0, &truth);
+    assert!(
+        norm2(&err) / norm2(&truth) < 1e-5,
+        "PCMM decode error {}",
+        norm2(&err) / norm2(&truth)
+    );
+}
+
+#[test]
+fn artifacts_full_gradient_matches_cpu_oracle() {
+    let dir = straggler_sched::runtime::default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut rt = straggler_sched::runtime::Runtime::new(dir).unwrap();
+    let meta = rt.manifest().get("quickstart", "task_gram").unwrap().clone();
+    let (n, d, b) = (
+        meta.dim("n").unwrap(),
+        meta.dim("d").unwrap(),
+        meta.dim("b").unwrap(),
+    );
+    let ds = Dataset::synthesize(n, d, n * b, 21);
+    let theta: Vec<f64> = (0..d).map(|i| (i as f64 * 0.37).sin() * 0.2).collect();
+    let theta32: Vec<f32> = theta.iter().map(|&v| v as f32).collect();
+
+    // gradient assembled from PJRT per-task grams (the production path)
+    let mut grad_rt = vec![0.0f64; d];
+    for i in 0..n {
+        let x32 = ds.parts[i].to_f32();
+        let h = rt.task_gram("quickstart", &x32, &theta32).unwrap();
+        let xy = ds.parts[i].matvec(&ds.labels[i]);
+        for lane in 0..d {
+            grad_rt[lane] += h[lane] as f64 - xy[lane];
+        }
+    }
+    let scale = 2.0 / ds.padded_samples() as f64;
+    grad_rt.iter_mut().for_each(|v| *v *= scale);
+
+    let want = ds.full_gradient(&theta);
+    let mut err = grad_rt.clone();
+    vec_axpy(&mut err, -1.0, &want);
+    assert!(
+        norm2(&err) / (norm2(&want) + 1e-12) < 1e-3,
+        "relative gradient error {}",
+        norm2(&err) / norm2(&want)
+    );
+}
+
+#[test]
+fn harness_matches_standalone_monte_carlo() {
+    // the coupled evaluator and the plain MonteCarlo driver implement
+    // the same estimator; means must agree within joint CI
+    let model = TruncatedGaussianModel::scenario1(8);
+    let point = EvalPoint::new(8, 4, 8, 30_000, 101).with_schemes(&[SchemeId::Cs]);
+    let a = evaluate(&point, &model).remove(0);
+    let mc = MonteCarlo::new(30_000, 202);
+    let b = mc.estimate(
+        &straggler_sched::scheduler::CyclicScheduler,
+        &model,
+        8,
+        4,
+        8,
+    );
+    assert!(
+        (a.mean - b.mean).abs() < 4.0 * (a.std_err + b.std_err),
+        "harness {} vs mc {}",
+        a.mean,
+        b.mean
+    );
+}

@@ -1,0 +1,218 @@
+//! Figure-harness smoke tests: run every table/figure generator at
+//! reduced trial counts and assert the paper's qualitative *shape*
+//! (who wins, monotonicity, crossovers) plus that result files land.
+
+use straggler_sched::harness::{self, Options};
+use straggler_sched::report::Table;
+
+fn opts(tag: &str, trials: usize) -> Options {
+    let dir = std::env::temp_dir().join(format!("straggler-figs-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    Options {
+        trials,
+        seed: 0xF16,
+        out_dir: Some(dir),
+        scenario: 1,
+        cluster: false,
+    }
+}
+
+fn col(table: &Table, name: &str) -> Vec<f64> {
+    let idx = table
+        .headers
+        .iter()
+        .position(|h| h == name)
+        .unwrap_or_else(|| panic!("no column {name}"));
+    table
+        .rows
+        .iter()
+        .map(|r| r[idx].parse::<f64>().unwrap_or(f64::NAN))
+        .collect()
+}
+
+#[test]
+fn table1_has_all_schemes() {
+    let t = harness::table1(&opts("t1", 1)).unwrap();
+    let schemes: Vec<&str> = t.rows.iter().map(|r| r[0].as_str()).collect();
+    assert_eq!(schemes, vec!["CS / SS", "RA", "PC", "PCMM"]);
+}
+
+#[test]
+fn fig4_scenario1_shape() {
+    let o = opts("fig4", 4000);
+    let t = harness::fig4(&o).unwrap();
+    assert_eq!(t.rows.len(), 15); // r = 2..=16
+    let (cs, ss, pc, pcmm, lb) = (
+        col(&t, "CS"),
+        col(&t, "SS"),
+        col(&t, "PC"),
+        col(&t, "PCMM"),
+        col(&t, "LB"),
+    );
+    for i in 0..t.rows.len() {
+        // paper Fig. 4: CS/SS below both coded schemes at every r
+        assert!(cs[i] < pc[i], "r-row {i}: CS {} !< PC {}", cs[i], pc[i]);
+        assert!(ss[i] < pc[i], "r-row {i}: SS !< PC");
+        assert!(cs[i] < pcmm[i] * 1.02, "r-row {i}: CS ≪ PCMM expected");
+        // LB below everything
+        assert!(lb[i] <= cs[i] && lb[i] <= ss[i] && lb[i] <= pcmm[i]);
+    }
+    // PC worsens as r grows (paper: "average completion time of PC
+    // increases with r"); compare ends
+    assert!(
+        pc[pc.len() - 1] > pc[1],
+        "PC should degrade with r: {:?}",
+        pc
+    );
+    // LB gap shrinks with r (paper: "reduces with r")
+    let gap_first = ss[1] / lb[1];
+    let gap_last = ss[ss.len() - 1] / lb[lb.len() - 1];
+    assert!(gap_last < gap_first, "SS/LB gap should shrink with r");
+    // files written
+    let dir = o.out_dir.unwrap();
+    assert!(dir.join("fig4_scenario1.csv").exists());
+    assert!(dir.join("fig4_scenario1.json").exists());
+}
+
+#[test]
+fn fig4_scenario2_still_orders_schemes() {
+    let o = Options {
+        scenario: 2,
+        ..opts("fig4s2", 3000)
+    };
+    let t = harness::fig4(&o).unwrap();
+    let (ss, pc, lb) = (col(&t, "SS"), col(&t, "PC"), col(&t, "LB"));
+    for i in 0..t.rows.len() {
+        assert!(ss[i] < pc[i], "row {i}");
+        assert!(lb[i] <= ss[i], "row {i}");
+    }
+}
+
+#[test]
+fn fig5_shape_and_ra_reduction() {
+    let o = opts("fig5", 4000);
+    let t = harness::fig5(&o).unwrap();
+    assert_eq!(t.rows.len(), 14); // r = 2..=15
+    let (cs, ss, pc, pcmm, lb) = (
+        col(&t, "CS"),
+        col(&t, "SS"),
+        col(&t, "PC"),
+        col(&t, "PCMM"),
+        col(&t, "LB"),
+    );
+    let last = t.rows.len() - 1;
+    // paper Fig. 5: CS and SS significantly beat PC and PCMM
+    for i in 0..=last {
+        assert!(cs[i] < pc[i] && ss[i] < pc[i], "row {i}");
+        assert!(cs[i] < pcmm[i] * 1.05 && ss[i] < pcmm[i] * 1.05, "row {i}");
+        assert!(lb[i] <= ss[i] + 1e-9, "row {i}");
+    }
+    // completion time non-increasing in r for the uncoded schemes
+    // (more redundancy can only help) — allow MC jitter
+    assert!(cs[last] <= cs[0] * 1.02);
+    assert!(ss[last] <= ss[0] * 1.02);
+}
+
+#[test]
+fn fig6_shape_vs_workers() {
+    let o = opts("fig6", 3000);
+    let t = harness::fig6(&o).unwrap();
+    assert_eq!(t.rows.len(), 6); // n = 10..=15
+    let (cs, ss, ra, pc, pcmm, lb) = (
+        col(&t, "CS"),
+        col(&t, "SS"),
+        col(&t, "RA"),
+        col(&t, "PC"),
+        col(&t, "PCMM"),
+        col(&t, "LB"),
+    );
+    for i in 0..6 {
+        // uncoded scheduling beats RA and both coded schemes (Fig. 6)
+        assert!(cs[i] < ra[i], "row {i}: CS {} !< RA {}", cs[i], ra[i]);
+        assert!(ss[i] < ra[i], "row {i}");
+        assert!(cs[i] < pc[i] && ss[i] < pc[i], "row {i}");
+        assert!(ss[i] < pcmm[i], "row {i}: SS {} !< PCMM {}", ss[i], pcmm[i]);
+        assert!(lb[i] <= cs[i].min(ss[i]), "row {i}");
+    }
+    // uncoded schemes improve as workers are added (paper: "the average
+    // completion time of different schemes reduce … with n")
+    assert!(cs[5] < cs[0], "CS should improve with n: {cs:?}");
+    assert!(ss[5] < ss[0], "SS should improve with n: {ss:?}");
+    assert!(lb[5] < lb[0], "LB should improve with n: {lb:?}");
+    // PCMM scales *worse* than the genie bound as n grows — its 2n−1
+    // communication requirement doubles per worker added (the paper's
+    // explanation for PCMM's growth in Fig. 6; see EXPERIMENTS.md for
+    // the documented direction deviation under the idealized model)
+    assert!(
+        pcmm[5] / lb[5] > pcmm[0] / lb[0],
+        "PCMM/LB ratio should grow with n: {:.4} vs {:.4}",
+        pcmm[0] / lb[0],
+        pcmm[5] / lb[5]
+    );
+}
+
+#[test]
+fn fig7_monotone_in_k_and_lb_tight_for_small_k() {
+    let o = opts("fig7", 4000);
+    let t = harness::fig7(&o).unwrap();
+    assert_eq!(t.rows.len(), 9); // k = 2..=10
+    let (cs, ss, ra, lb) = (col(&t, "CS"), col(&t, "SS"), col(&t, "RA"), col(&t, "LB"));
+    for i in 1..t.rows.len() {
+        // paper: "the average completion time increases with k"
+        assert!(cs[i] >= cs[i - 1] - 1e-9, "CS not monotone at row {i}");
+        assert!(ss[i] >= ss[i - 1] - 1e-9, "SS not monotone at row {i}");
+        assert!(lb[i] >= lb[i - 1] - 1e-9, "LB not monotone at row {i}");
+    }
+    for i in 0..t.rows.len() {
+        assert!(lb[i] <= ss[i] + 1e-9 && lb[i] <= cs[i] + 1e-9, "row {i}");
+        assert!(ss[i] <= ra[i] * 1.02, "row {i}: SS {} vs RA {}", ss[i], ra[i]);
+    }
+    // paper: SS ≈ LB for small/medium k (k ∈ [2:6]) — within 5%
+    for i in 0..4 {
+        assert!(
+            ss[i] / lb[i] < 1.05,
+            "SS should hug LB at small k: row {i}: {} vs {}",
+            ss[i],
+            lb[i]
+        );
+    }
+    // gap between schemes grows with k: RA−SS larger at k = n than k = 2
+    let gap_small = ra[0] - ss[0];
+    let gap_large = ra[ra.len() - 1] - ss[ss.len() - 1];
+    assert!(
+        gap_large > gap_small,
+        "scheduling advantage should grow with k: {gap_small} vs {gap_large}"
+    );
+}
+
+#[test]
+fn fig3_cluster_histograms() {
+    let mut o = opts("fig3", 120);
+    o.cluster = false; // CPU-oracle compute; still real sockets
+    let (summary, hist) = harness::fig3(&o).unwrap();
+    assert_eq!(summary.rows.len(), 3, "three workers");
+    // comm mean > comp mean per worker (Fig. 3 headline).  The comp
+    // measurement includes the *real* oracle gram compute on top of the
+    // injected delay; in unoptimized debug builds that compute alone
+    // exceeds the injected comm, so the ordering claim is only
+    // meaningful under release codegen (the `make test` path).
+    if cfg!(debug_assertions) {
+        eprintln!("skipping comm>comp ordering check in debug build");
+    } else {
+        let comp = col(&summary, "comp mean");
+        let comm = col(&summary, "comm mean");
+        for w in 0..3 {
+            assert!(
+                comm[w] > comp[w],
+                "worker {w}: comm {} !> comp {}",
+                comm[w],
+                comp[w]
+            );
+        }
+    }
+    // histogram table: 3 workers × 2 kinds × 24 bins
+    assert_eq!(hist.rows.len(), 3 * 2 * 24);
+    let dir = o.out_dir.unwrap();
+    assert!(dir.join("fig3_summary.csv").exists());
+    assert!(dir.join("fig3_histograms.json").exists());
+}

@@ -1,0 +1,315 @@
+//! Randomized property tests over the crate's core invariants.
+//!
+//! The offline build has no `proptest` crate, so this file drives a
+//! small in-tree property harness: each property is checked over a
+//! couple of hundred randomized configurations drawn from a seeded RNG;
+//! failures report the seed so the exact case can be replayed.
+
+use straggler_sched::coded::{PcScheme, PcmmScheme};
+use straggler_sched::coordinator::Msg;
+use straggler_sched::delay::{
+    DelayModel, DelaySample, Ec2LikeModel, ShiftedExponential, TruncatedGaussianModel,
+    WorkerCorrelated,
+};
+use straggler_sched::lb::kth_slot_arrival;
+use straggler_sched::scheduler::{
+    oracle_schedule, CyclicScheduler, RandomAssignment, Scheduler, StaircaseScheduler,
+};
+use straggler_sched::sim::{simulate_round, task_arrival_times};
+use straggler_sched::util::json::Json;
+use straggler_sched::util::rng::Rng;
+
+/// Run `prop` over `cases` seeded cases; panic with the failing seed.
+fn forall(name: &str, cases: u64, mut prop: impl FnMut(&mut Rng)) {
+    for seed in 0..cases {
+        let mut rng = Rng::seed_from_u64(0xFACADE ^ seed.wrapping_mul(0x9E3779B97F4A7C15));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property {name} FAILED at case seed {seed}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+fn random_model(rng: &mut Rng, n: usize) -> Box<dyn DelayModel> {
+    match rng.below(4) {
+        0 => Box::new(TruncatedGaussianModel::scenario1(n)),
+        1 => Box::new(TruncatedGaussianModel::scenario2(n, rng.next_u64())),
+        2 => Box::new(Ec2LikeModel::new(n, rng.next_u64(), 0.3)),
+        _ => Box::new(WorkerCorrelated::new(
+            ShiftedExponential::new(0.05 + rng.f64() * 0.2, 1.0 + rng.f64() * 8.0, 0.1, 2.0),
+            rng.f64(),
+        )),
+    }
+}
+
+fn random_scheduler(rng: &mut Rng) -> Box<dyn Scheduler> {
+    match rng.below(3) {
+        0 => Box::new(CyclicScheduler),
+        1 => Box::new(StaircaseScheduler),
+        _ => Box::new(RandomAssignment),
+    }
+}
+
+#[test]
+fn prop_to_matrices_are_valid_and_distinct() {
+    forall("to-matrix invariants", 300, |rng| {
+        let n = 1 + rng.below(16);
+        let r = 1 + rng.below(n);
+        let sched = random_scheduler(rng);
+        let to = sched.schedule(n, r, rng);
+        assert_eq!(to.n(), n);
+        assert_eq!(to.r(), r);
+        assert!(to.rows_distinct(), "{} n={n} r={r}", sched.name());
+        // coverage conservation: total slots = n·r
+        assert_eq!(to.coverage().iter().sum::<usize>(), n * r);
+    });
+}
+
+#[test]
+fn prop_completion_monotone_in_k() {
+    forall("t_C monotone in k", 150, |rng| {
+        let n = 2 + rng.below(10);
+        let r = 1 + rng.below(n);
+        let model = random_model(rng, n);
+        let sched = random_scheduler(rng);
+        let to = sched.schedule(n, r, rng);
+        let s = model.sample(n, r, rng);
+        let max_k = to
+            .coverage()
+            .iter()
+            .filter(|&&c| c > 0)
+            .count();
+        let mut last = 0.0;
+        for k in 1..=max_k {
+            let t = simulate_round(&to, &s, k).completion_time;
+            assert!(t >= last - 1e-12, "k={k}");
+            last = t;
+        }
+    });
+}
+
+#[test]
+fn prop_lb_below_any_schedule_every_realization() {
+    forall("LB ≤ t_C(T) pointwise", 150, |rng| {
+        let n = 2 + rng.below(10);
+        let r = 1 + rng.below(n);
+        let model = random_model(rng, n);
+        let sched = random_scheduler(rng);
+        let to = sched.schedule(n, r, rng);
+        let s = model.sample(n, r, rng);
+        let mut scratch = Vec::new();
+        let max_k = to.coverage().iter().filter(|&&c| c > 0).count();
+        for k in 1..=max_k {
+            let bound = kth_slot_arrival(&s, k, &mut scratch);
+            let t = simulate_round(&to, &s, k).completion_time;
+            assert!(bound <= t + 1e-12, "k={k}: {bound} > {t}");
+        }
+    });
+}
+
+#[test]
+fn prop_oracle_schedule_achieves_kth_order_stat() {
+    forall("oracle achieves LB", 150, |rng| {
+        let n = 2 + rng.below(8);
+        let r = 1 + rng.below(n);
+        let model = random_model(rng, n);
+        let s = model.sample(n, r, rng);
+        let k = 1 + rng.below(n.min(n * r));
+        let to = oracle_schedule(&s, k);
+        assert!(to.rows_distinct());
+        let mut scratch = Vec::new();
+        let want = kth_slot_arrival(&s, k, &mut scratch);
+        let got = simulate_round(&to, &s, k).completion_time;
+        assert!((want - got).abs() < 1e-9);
+    });
+}
+
+#[test]
+fn prop_task_arrivals_lower_bound_every_slot() {
+    // t_j = min over placements; every placement's arrival ≥ t_j
+    forall("task arrival is a min", 100, |rng| {
+        let n = 2 + rng.below(8);
+        let r = 1 + rng.below(n);
+        let model = random_model(rng, n);
+        let sched = random_scheduler(rng);
+        let to = sched.schedule(n, r, rng);
+        let s = model.sample(n, r, rng);
+        let t = task_arrival_times(&to, &s);
+        for task in 0..n {
+            for (i, j) in to.placements(task) {
+                let arrival = s.slot_arrival(i, j);
+                assert!(arrival >= t[task] - 1e-12);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_coded_thresholds_within_bounds() {
+    forall("coded thresholds", 200, |rng| {
+        let n = 2 + rng.below(14);
+        let r = 2 + rng.below(n.saturating_sub(1).max(1));
+        if r > n {
+            return;
+        }
+        let pc = PcScheme::new(n, r);
+        assert!(pc.recovery_threshold() >= 1);
+        assert!(
+            pc.recovery_threshold() <= n.div_ceil(r) * 2,
+            "PC threshold 2⌈n/r⌉−1 bound"
+        );
+        if n * r >= 2 * n - 1 {
+            let pcmm = PcmmScheme::new(n, r);
+            assert_eq!(pcmm.recovery_threshold(), 2 * n - 1);
+            // PCMM completion uses slots: must be ≥ LB at k=n and ≥ 0
+            let model = random_model(rng, n);
+            let s = model.sample(n, r, rng);
+            let mut scratch = Vec::new();
+            let t = pcmm.completion_time(&s, &mut scratch);
+            let lbv = kth_slot_arrival(&s, n, &mut scratch);
+            assert!(t >= lbv - 1e-12, "PCMM below k=n LB");
+        }
+    });
+}
+
+#[test]
+fn prop_pc_encode_decode_random_shapes() {
+    forall("PC decode exact", 25, |rng| {
+        let n = 2 + rng.below(6);
+        let r = 2.min(n) + rng.below(n.saturating_sub(1).max(1));
+        let r = r.min(n).max(2);
+        if r > n {
+            return;
+        }
+        let d = 3 + rng.below(8);
+        let b = 2 + rng.below(5);
+        let parts: Vec<_> = (0..n)
+            .map(|_| straggler_sched::linalg::Mat::from_fn(d, b, |_, _| rng.normal()))
+            .collect();
+        let theta: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let pc = PcScheme::new(n, r);
+        let resp: Vec<_> = (0..pc.recovery_threshold())
+            .map(|w| (w, pc.worker_compute(w, &parts, &theta)))
+            .collect();
+        let decoded = pc.decode(&resp);
+        let mut want = vec![0.0; d];
+        for p in &parts {
+            straggler_sched::linalg::vec_axpy(&mut want, 1.0, &p.gram_matvec(&theta));
+        }
+        for lane in 0..d {
+            assert!(
+                (decoded[lane] - want[lane]).abs() < 1e-5 * (1.0 + want[lane].abs()),
+                "n={n} r={r} lane {lane}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_delay_samples_positive_and_shaped() {
+    forall("delay samples valid", 200, |rng| {
+        let n = 1 + rng.below(16);
+        let r = 1 + rng.below(n);
+        let model = random_model(rng, n);
+        let s = model.sample(n, r, rng);
+        assert_eq!(s.n, n);
+        assert_eq!(s.r, r);
+        for i in 0..n {
+            for j in 0..r {
+                assert!(s.comp(i, j) > 0.0 && s.comp(i, j).is_finite());
+                assert!(s.comm(i, j) > 0.0 && s.comm(i, j).is_finite());
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_protocol_roundtrip_random_messages() {
+    forall("protocol roundtrip", 300, |rng| {
+        let msg = match rng.below(6) {
+            0 => Msg::Welcome {
+                worker_id: rng.next_u64() as u32,
+                profile: format!("p{}", rng.below(100)),
+            },
+            1 => Msg::LoadData {
+                d: rng.below(50) as u32 + 1,
+                b: rng.below(50) as u32 + 1,
+                batches: (0..rng.below(4))
+                    .map(|i| (i as u32, (0..rng.below(64)).map(|_| rng.normal() as f32).collect()))
+                    .collect(),
+            },
+            2 => Msg::Assign {
+                round: rng.next_u64() as u32,
+                theta: (0..rng.below(128)).map(|_| rng.normal() as f32).collect(),
+                tasks: (0..rng.below(16)).map(|_| rng.below(99) as u32).collect(),
+                batches: (0..rng.below(16)).map(|_| rng.below(99) as u32).collect(),
+            },
+            3 => Msg::Result {
+                round: rng.next_u64() as u32,
+                worker_id: rng.below(64) as u32,
+                task: rng.below(64) as u32,
+                comp_us: rng.next_u64(),
+                send_ts_us: rng.next_u64(),
+                h: (0..rng.below(256)).map(|_| rng.normal() as f32).collect(),
+            },
+            4 => Msg::Stop {
+                round: rng.next_u64() as u32,
+            },
+            _ => Msg::Shutdown,
+        };
+        let decoded = Msg::decode(&msg.encode()).expect("roundtrip");
+        assert_eq!(decoded, msg);
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 0),
+            2 => Json::Num((rng.normal() * 1e3).round() / 8.0),
+            3 => Json::Str(
+                (0..rng.below(12))
+                    .map(|_| char::from(b'a' + rng.below(26) as u8))
+                    .collect(),
+            ),
+            4 => Json::Arr((0..rng.below(5)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    forall("json roundtrip", 400, |rng| {
+        let v = random_json(rng, 3);
+        assert_eq!(Json::parse(&v.to_string_pretty()).unwrap(), v);
+        assert_eq!(Json::parse(&v.to_string_compact()).unwrap(), v);
+    });
+}
+
+#[test]
+fn prop_cs_ss_beat_or_match_ra_at_full_load() {
+    // statistical dominance at r = n (paper Figs. 5–7): averaged over a
+    // coupled batch, designed schedules beat random assignment
+    forall("CS/SS ≤ RA (batch mean)", 12, |rng| {
+        let n = 4 + rng.below(8);
+        let model = random_model(rng, n);
+        let trials = 1500;
+        let (mut cs_tot, mut ss_tot, mut ra_tot) = (0.0, 0.0, 0.0);
+        let cs = CyclicScheduler.schedule(n, n, rng);
+        let ss = StaircaseScheduler.schedule(n, n, rng);
+        for _ in 0..trials {
+            let s = model.sample(n, n, rng);
+            let ra = RandomAssignment.schedule(n, n, rng);
+            cs_tot += simulate_round(&cs, &s, n).completion_time;
+            ss_tot += simulate_round(&ss, &s, n).completion_time;
+            ra_tot += simulate_round(&ra, &s, n).completion_time;
+        }
+        // 3% slack for MC noise
+        assert!(cs_tot <= ra_tot * 1.03, "CS {cs_tot} vs RA {ra_tot} (n={n})");
+        assert!(ss_tot <= ra_tot * 1.03, "SS {ss_tot} vs RA {ra_tot} (n={n})");
+    });
+}
