@@ -1,6 +1,7 @@
 //! Hot-path micro-benchmarks — the §Perf measurement surface of
 //! EXPERIMENTS.md.  Every optimization iteration re-runs this target
-//! and diffs the report lines.
+//! and diffs the report lines; a machine-readable copy lands in
+//! `BENCH_hot_paths.json` so the perf trajectory is tracked across PRs.
 //!
 //! ```bash
 //! cargo bench --bench hot_paths
@@ -11,12 +12,17 @@ use std::hint::black_box;
 use straggler_sched::analysis::{collect_task_times, theorem1_mean};
 use straggler_sched::coded::{PcScheme, PcmmScheme};
 use straggler_sched::coordinator::Msg;
-use straggler_sched::delay::{DelayModel, DelaySample, TruncatedGaussianModel};
+use straggler_sched::delay::{DelayBatch, DelayModel, DelaySample, TruncatedGaussianModel};
 use straggler_sched::lb::kth_slot_arrival;
 use straggler_sched::linalg::Mat;
-use straggler_sched::scheduler::{CyclicScheduler, RandomAssignment, Scheduler, StaircaseScheduler};
-use straggler_sched::sim::{completion_time_fast, simulate_round_with, SimScratch};
-use straggler_sched::util::benchkit::{bench, group};
+use straggler_sched::scheduler::{
+    CyclicScheduler, RandomAssignment, Scheduler, StaircaseScheduler,
+};
+use straggler_sched::sim::{
+    completion_from_arrivals, completion_time_fast, simulate_round_with, slot_arrivals_batch,
+    FlatTasks, MonteCarlo, SimScratch, BATCH_ROUNDS,
+};
+use straggler_sched::util::benchkit::{bench, group, write_json_report, BenchResult};
 use straggler_sched::util::rng::Rng;
 
 fn main() {
@@ -25,14 +31,20 @@ fn main() {
     let mut rng = Rng::seed_from_u64(42);
     let to_cs = CyclicScheduler.schedule(n, r, &mut rng);
     let to_ss = StaircaseScheduler.schedule(n, r, &mut rng);
+    let mut all: Vec<BenchResult> = Vec::new();
 
     group("delay sampling");
     {
         let mut sample = DelaySample::zeros(n, r);
         let mut rng = Rng::seed_from_u64(1);
-        bench("truncated_gaussian/sample_round_16x16", || {
+        all.push(bench("truncated_gaussian/sample_round_16x16", || {
             model.sample_into(black_box(&mut sample), &mut rng);
-        });
+        }));
+        let mut batch = DelayBatch::zeros(BATCH_ROUNDS, n, r);
+        let mut rng = Rng::seed_from_u64(1);
+        all.push(bench("truncated_gaussian/sample_batch_256x16x16", || {
+            model.sample_batch_into(black_box(&mut batch), &mut rng);
+        }));
     }
 
     group("simulation round (paper eq. 1-2 + k-distinct stop)");
@@ -41,28 +53,132 @@ fn main() {
         let mut rng = Rng::seed_from_u64(2);
         model.sample_into(&mut sample, &mut rng);
         let mut scratch = SimScratch::new();
-        bench("simulate_round/cs_n16_r16_k16", || {
+        all.push(bench("simulate_round/cs_n16_r16_k16", || {
             black_box(simulate_round_with(&to_cs, &sample, 16, &mut scratch));
-        });
-        bench("simulate_round/ss_n16_r16_k8", || {
+        }));
+        all.push(bench("simulate_round/ss_n16_r16_k8", || {
             black_box(simulate_round_with(&to_ss, &sample, 8, &mut scratch));
-        });
+        }));
         let mut fast_scratch: Vec<f64> = Vec::with_capacity(n);
-        bench("simulate_round/fast_cs_n16_r16_k16", || {
+        all.push(bench("simulate_round/fast_cs_n16_r16_k16", || {
             black_box(completion_time_fast(&to_cs, &sample, 16, &mut fast_scratch));
-        });
+        }));
         let mut lbs = Vec::with_capacity(n * r);
-        bench("lower_bound/kth_slot_arrival_k16", || {
+        all.push(bench("lower_bound/kth_slot_arrival_k16", || {
             black_box(kth_slot_arrival(&sample, 16, &mut lbs));
-        });
+        }));
         let pc = PcScheme::new(n, r);
         let pcmm = PcmmScheme::new(n, r);
-        bench("coded/pc_completion", || {
+        all.push(bench("coded/pc_completion", || {
             black_box(pc.completion_time(&sample, &mut lbs));
-        });
-        bench("coded/pcmm_completion", || {
+        }));
+        all.push(bench("coded/pcmm_completion", || {
             black_box(pcmm.completion_time(&sample, &mut lbs));
+        }));
+    }
+
+    group("batched SoA kernels (per 256-round batch)");
+    {
+        let mut rng = Rng::seed_from_u64(7);
+        let batch = model.sample_batch(BATCH_ROUNDS, n, r, &mut rng);
+        let mut arrivals: Vec<f64> = Vec::new();
+        all.push(bench("batch/slot_arrivals_256x16x16", || {
+            slot_arrivals_batch(black_box(&batch), &mut arrivals);
+        }));
+        slot_arrivals_batch(&batch, &mut arrivals);
+        let cs_flat = FlatTasks::new(&to_cs);
+        let stride = batch.stride();
+        let mut task_times: Vec<f64> = Vec::with_capacity(n);
+        all.push(bench("batch/completions_cs_256rounds_k16", || {
+            let mut acc = 0.0;
+            for b in 0..BATCH_ROUNDS {
+                acc += completion_from_arrivals(
+                    &cs_flat,
+                    &arrivals[b * stride..(b + 1) * stride],
+                    16,
+                    &mut task_times,
+                );
+            }
+            black_box(acc);
+        }));
+    }
+
+    group("coupled 3-scheme round (CS + SS + RA): scalar vs batched");
+    let speedup = {
+        // scalar path: sample one round, evaluate all three schemes by
+        // re-walking the delays per scheme (the pre-batch engine)
+        let mut sample = DelaySample::zeros(n, r);
+        let mut rng = Rng::seed_from_u64(3);
+        let mut rng_sched = Rng::seed_from_u64(4);
+        let mut fast_scratch: Vec<f64> = Vec::with_capacity(n);
+        let scalar = bench("coupled3/scalar_per_round", || {
+            model.sample_into(&mut sample, &mut rng);
+            black_box(completion_time_fast(&to_cs, &sample, 16, &mut fast_scratch));
+            black_box(completion_time_fast(&to_ss, &sample, 16, &mut fast_scratch));
+            let ra = RandomAssignment.schedule(n, r, &mut rng_sched);
+            black_box(completion_time_fast(&ra, &sample, 16, &mut fast_scratch));
         });
+        // batched path: one 256-round batch per iteration, arrivals
+        // computed once and shared by all three schemes
+        let mut batch = DelayBatch::zeros(BATCH_ROUNDS, n, r);
+        let mut rng = Rng::seed_from_u64(3);
+        let mut rng_sched = Rng::seed_from_u64(4);
+        let mut arrivals: Vec<f64> = Vec::new();
+        let mut task_times: Vec<f64> = Vec::with_capacity(n);
+        let cs_flat = FlatTasks::new(&to_cs);
+        let ss_flat = FlatTasks::new(&to_ss);
+        let stride = n * r;
+        let batched = bench("coupled3/batched_per_256rounds", || {
+            model.sample_batch_into(&mut batch, &mut rng);
+            slot_arrivals_batch(&batch, &mut arrivals);
+            let mut acc = 0.0;
+            for b in 0..BATCH_ROUNDS {
+                let round = &arrivals[b * stride..(b + 1) * stride];
+                acc += completion_from_arrivals(&cs_flat, round, 16, &mut task_times);
+                acc += completion_from_arrivals(&ss_flat, round, 16, &mut task_times);
+                let ra = RandomAssignment.schedule(n, r, &mut rng_sched);
+                let ra_flat = FlatTasks::new(&ra);
+                acc += completion_from_arrivals(&ra_flat, round, 16, &mut task_times);
+            }
+            black_box(acc);
+        });
+        let scalar_rps = 1e9 / scalar.mean_ns;
+        let batched_rps = 1e9 / (batched.mean_ns / BATCH_ROUNDS as f64);
+        let speedup = batched_rps / scalar_rps;
+        println!(
+            "coupled3 rounds/s: scalar {scalar_rps:.0}, batched {batched_rps:.0}  \
+             →  {speedup:.2}× (target ≥ 3×)"
+        );
+        all.push(scalar);
+        all.push(batched);
+        speedup
+    };
+
+    group("full coupled estimator (20k trials, CS+SS+RA, n=r=k=16)");
+    {
+        let mc = MonteCarlo {
+            trials: 20_000,
+            seed: 0xBE7C4,
+            threads: std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(1),
+        };
+        let schemes: Vec<&dyn Scheduler> =
+            vec![&CyclicScheduler, &StaircaseScheduler, &RandomAssignment];
+        let scalar = bench("estimator/scalar_20k_3schemes", || {
+            black_box(mc.estimate_coupled_scalar(&schemes, &model, n, r, 16));
+        });
+        let batched = bench("estimator/batched_20k_3schemes", || {
+            black_box(mc.estimate_coupled(&schemes, &model, n, r, 16));
+        });
+        println!(
+            "estimator rounds/s: scalar {:.0}, batched {:.0}  →  {:.2}×",
+            mc.trials as f64 * 1e9 / scalar.mean_ns,
+            mc.trials as f64 * 1e9 / batched.mean_ns,
+            scalar.mean_ns / batched.mean_ns
+        );
+        all.push(scalar);
+        all.push(batched);
     }
 
     group("full monte-carlo round (sample + all schemes) — figure inner loop");
@@ -73,34 +189,34 @@ fn main() {
         let mut lbs = Vec::with_capacity(n * r);
         let pc = PcScheme::new(n, r);
         let pcmm = PcmmScheme::new(n, r);
-        bench("figure_inner_loop/n16_r16_all_schemes", || {
+        all.push(bench("figure_inner_loop/n16_r16_all_schemes", || {
             model.sample_into(&mut sample, &mut rng);
             black_box(completion_time_fast(&to_cs, &sample, 16, &mut fast_scratch));
             black_box(completion_time_fast(&to_ss, &sample, 16, &mut fast_scratch));
             black_box(pc.completion_time(&sample, &mut lbs));
             black_box(pcmm.completion_time(&sample, &mut lbs));
             black_box(kth_slot_arrival(&sample, 16, &mut lbs));
-        });
+        }));
     }
 
     group("schedulers");
     {
         let mut rng = Rng::seed_from_u64(4);
-        bench("schedule/cs_n16_r16", || {
+        all.push(bench("schedule/cs_n16_r16", || {
             black_box(CyclicScheduler.schedule(16, 16, &mut rng));
-        });
-        bench("schedule/ra_n16_r16", || {
+        }));
+        all.push(bench("schedule/ra_n16_r16", || {
             black_box(RandomAssignment.schedule(16, 16, &mut rng));
-        });
+        }));
     }
 
     group("analysis (theorem 1, n = 12)");
     {
         let model12 = TruncatedGaussianModel::scenario1(12);
         let samples = collect_task_times(&CyclicScheduler, &model12, 12, 4, 200, 5);
-        bench("theorem1_mean/n12_200rounds", || {
+        all.push(bench("theorem1_mean/n12_200rounds", || {
             black_box(theorem1_mean(&samples, 9));
-        });
+        }));
     }
 
     group("protocol codec");
@@ -113,13 +229,13 @@ fn main() {
             send_ts_us: 123_456,
             h: vec![1.25f32; 512],
         };
-        bench("protocol/encode_result_d512", || {
+        all.push(bench("protocol/encode_result_d512", || {
             black_box(msg.encode());
-        });
+        }));
         let enc = msg.encode();
-        bench("protocol/decode_result_d512", || {
+        all.push(bench("protocol/decode_result_d512", || {
             black_box(Msg::decode(&enc).unwrap());
-        });
+        }));
     }
 
     group("linalg oracle (d = 400, b = 60 — fig5 task shape)");
@@ -127,24 +243,34 @@ fn main() {
         let mut rng = Rng::seed_from_u64(6);
         let x = Mat::from_fn(400, 60, |_, _| rng.normal());
         let theta: Vec<f64> = (0..400).map(|_| rng.normal()).collect();
-        bench("linalg/gram_matvec_400x60", || {
+        all.push(bench("linalg/gram_matvec_400x60", || {
             black_box(x.gram_matvec(black_box(&theta)));
-        });
+        }));
     }
 
     group("pjrt runtime (quickstart artifact, d = 64, b = 32)");
     {
         let dir = straggler_sched::runtime::default_artifact_dir();
         if dir.join("manifest.json").exists() {
-            let mut rt = straggler_sched::runtime::Runtime::new(dir).expect("runtime");
-            let x: Vec<f32> = (0..64 * 32).map(|i| (i % 13) as f32 / 7.0).collect();
-            let theta: Vec<f32> = (0..64).map(|i| (i % 7) as f32 / 5.0).collect();
-            rt.prepare("quickstart", "task_gram").unwrap();
-            bench("runtime/task_gram_execute_64x32", || {
-                black_box(rt.task_gram("quickstart", &x, &theta).unwrap());
-            });
+            match straggler_sched::runtime::Runtime::new(dir) {
+                Ok(mut rt) => {
+                    let x: Vec<f32> = (0..64 * 32).map(|i| (i % 13) as f32 / 7.0).collect();
+                    let theta: Vec<f32> = (0..64).map(|i| (i % 7) as f32 / 5.0).collect();
+                    rt.prepare("quickstart", "task_gram").unwrap();
+                    all.push(bench("runtime/task_gram_execute_64x32", || {
+                        black_box(rt.task_gram("quickstart", &x, &theta).unwrap());
+                    }));
+                }
+                Err(e) => println!("runtime/task_gram_execute_64x32  SKIPPED ({e})"),
+            }
         } else {
             println!("runtime/task_gram_execute_64x32  SKIPPED (run `make artifacts`)");
         }
     }
+
+    match write_json_report("BENCH_hot_paths.json", "hot_paths", &all) {
+        Ok(()) => println!("\nwrote BENCH_hot_paths.json ({} benchmarks)", all.len()),
+        Err(e) => eprintln!("\ncould not write BENCH_hot_paths.json: {e}"),
+    }
+    println!("coupled3 batched-vs-scalar speedup: {speedup:.2}× (acceptance gate ≥ 3×)");
 }

@@ -11,7 +11,7 @@
 use crate::util::rng::Rng;
 
 
-use super::{DelayModel, DelaySample};
+use super::{DelayBatch, DelayModel, DelaySample};
 
 /// Wraps any [`DelayModel`] with a per-(round, worker) multiplicative
 /// log-normal slowdown of log-std `sigma`, normalized to mean 1 so the
@@ -66,6 +66,37 @@ impl<M: DelayModel> DelayModel for WorkerCorrelated<M> {
             if self.affect_comm {
                 for j in 0..r {
                     out.comm_mut()[i * r + j] *= z;
+                }
+            }
+        }
+    }
+
+    /// Batched sampling.  The per-(round, worker) multiplier draws must
+    /// interleave with the inner model's stream exactly as in sequential
+    /// sampling (bit-identity contract), so rounds stay sequential here;
+    /// the batch win is hoisting the inner virtual dispatch result into
+    /// one scratch sample and writing scaled rows straight into the
+    /// batch's contiguous storage.
+    fn sample_batch_into(&self, out: &mut DelayBatch, rng: &mut Rng) {
+        let (n, r) = (out.n, out.r);
+        let mut tmp = DelaySample::zeros(n, r);
+        for b in 0..out.rounds {
+            self.inner.sample_into(&mut tmp, rng);
+            let (comp, comm) = out.round_mut(b);
+            comp.copy_from_slice(tmp.comp_flat());
+            comm.copy_from_slice(tmp.comm_flat());
+            for i in 0..n {
+                let z = self.multiplier(rng);
+                if z == 1.0 {
+                    continue;
+                }
+                for v in &mut comp[i * r..(i + 1) * r] {
+                    *v *= z;
+                }
+                if self.affect_comm {
+                    for v in &mut comm[i * r..(i + 1) * r] {
+                        *v *= z;
+                    }
                 }
             }
         }

@@ -22,7 +22,7 @@ use crate::util::rng::Rng;
 
 
 
-use super::{DelayModel, DelaySample};
+use super::{DelayBatch, DelayModel, DelaySample};
 
 /// A bag of measured delays (ms) that can be resampled.
 #[derive(Debug, Clone)]
@@ -78,6 +78,27 @@ impl DelayModel for EmpiricalModel {
             for j in 0..r {
                 out.comp_mut()[i * r + j] = self.comp[i].resample(rng);
                 out.comm_mut()[i * r + j] = self.comm[i].resample(rng);
+            }
+        }
+    }
+
+    /// Batched bootstrap resampling: same `(comp, comm)`-interleaved
+    /// draw order per slot as [`EmpiricalModel::sample_into`]
+    /// (bit-identity contract), with the per-worker trace borrows and
+    /// the shape check hoisted out of the round loop.
+    fn sample_batch_into(&self, out: &mut DelayBatch, rng: &mut Rng) {
+        let (n, r) = (out.n, out.r);
+        assert!(n <= self.comp.len(), "trace set smaller than n");
+        let traces: Vec<(&Trace, &Trace)> =
+            (0..n).map(|i| (&self.comp[i], &self.comm[i])).collect();
+        for b in 0..out.rounds {
+            let (comp, comm) = out.round_mut(b);
+            for (i, &(tc, tm)) in traces.iter().enumerate() {
+                let base = i * r;
+                for j in 0..r {
+                    comp[base + j] = tc.resample(rng);
+                    comm[base + j] = tm.resample(rng);
+                }
             }
         }
     }
@@ -194,6 +215,33 @@ impl DelayModel for Ec2LikeModel {
                     self.base_comp[i] * sample_gamma(K_COMP, 1.0 / K_COMP, rng) * s;
                 out.comm_mut()[i * r + j] =
                     self.base_comm[i] * sample_gamma(K_COMM, 1.0 / K_COMM, rng) * s;
+            }
+        }
+    }
+
+    /// Batched sampling: identical draw order to
+    /// [`Ec2LikeModel::sample_into`] — per worker one straggle draw,
+    /// then `(comp, comm)` gamma pairs per slot — with base delays
+    /// hoisted and writes going into contiguous round slices.
+    fn sample_batch_into(&self, out: &mut DelayBatch, rng: &mut Rng) {
+        let (n, r) = (out.n, out.r);
+        assert!(n <= self.n_workers(), "model built for fewer workers");
+        const K_COMP: f64 = 12.0;
+        const K_COMM: f64 = 10.0;
+        for b in 0..out.rounds {
+            let (comp, comm) = out.round_mut(b);
+            for i in 0..n {
+                let s = if rng.f64() < self.straggle_prob {
+                    self.straggle_lo + rng.f64() * (self.straggle_hi - self.straggle_lo)
+                } else {
+                    1.0
+                };
+                let (base_comp, base_comm) = (self.base_comp[i], self.base_comm[i]);
+                let base = i * r;
+                for j in 0..r {
+                    comp[base + j] = base_comp * sample_gamma(K_COMP, 1.0 / K_COMP, rng) * s;
+                    comm[base + j] = base_comm * sample_gamma(K_COMM, 1.0 / K_COMM, rng) * s;
+                }
             }
         }
     }

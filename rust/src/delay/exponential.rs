@@ -11,7 +11,7 @@ use crate::util::rng::Rng;
 
 
 
-use super::{DelayModel, DelaySample};
+use super::{DelayBatch, DelayModel, DelaySample};
 
 /// `T = shift + Exp(rate)`; rate in 1/ms, shift in ms.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -79,6 +79,28 @@ impl DelayModel for ShiftedExponential {
         }
         for idx in 0..total {
             out.comm_mut()[idx] = self.comm.sample(rng);
+        }
+    }
+
+    /// Batched sampling: per round, all computation delays then all
+    /// communication delays — the same order as
+    /// [`ShiftedExponential::sample_into`] (bit-identity contract) —
+    /// with shift/rate hoisted into registers and the inverse-CDF
+    /// transform inlined over each round's contiguous slice.
+    fn sample_batch_into(&self, out: &mut DelayBatch, rng: &mut Rng) {
+        let (comp_shift, comp_rate) = (self.comp.shift, self.comp.rate);
+        let (comm_shift, comm_rate) = (self.comm.shift, self.comm.rate);
+        for b in 0..out.rounds {
+            let (comp, comm) = out.round_mut(b);
+            for v in comp.iter_mut() {
+                // identical expression to ShiftedExp::sample
+                let u = rng.f64();
+                *v = comp_shift - (1.0 - u).max(1e-300).ln() / comp_rate;
+            }
+            for v in comm.iter_mut() {
+                let u = rng.f64();
+                *v = comm_shift - (1.0 - u).max(1e-300).ln() / comm_rate;
+            }
         }
     }
 

@@ -101,12 +101,127 @@ impl DelaySample {
         &mut self.comm
     }
 
+    /// All `n × r` computation delays, row-major.
+    #[inline]
+    pub fn comp_flat(&self) -> &[f64] {
+        &self.comp
+    }
+
+    /// All `n × r` communication delays, row-major.
+    #[inline]
+    pub fn comm_flat(&self) -> &[f64] {
+        &self.comm
+    }
+
     /// Arrival time at the master of worker `i`'s `j`-th slot (eq. 1/46):
     /// prefix sum of its computation delays plus that slot's comm delay.
     pub fn slot_arrival(&self, worker: usize, slot: usize) -> f64 {
         let row = self.comp_row(worker);
         let prefix: f64 = row[..=slot].iter().sum();
         prefix + self.comm(worker, slot)
+    }
+}
+
+/// A batch of `rounds` independent delay realizations in
+/// structure-of-arrays form — the unit of work of the batched
+/// Monte-Carlo engine (`sim::batch`).
+///
+/// Flat round-major storage: round `b`'s slot `(i, j)` lives at
+/// `b·n·r + i·r + j` in both `comp` and `comm`, so one round is a
+/// single contiguous `n·r` slice and a whole batch is two contiguous
+/// allocations regardless of `rounds` — no per-round `Vec`s, no
+/// pointer chasing in the completion kernel.
+#[derive(Debug, Clone)]
+pub struct DelayBatch {
+    pub rounds: usize,
+    pub n: usize,
+    pub r: usize,
+    comp: Vec<f64>,
+    comm: Vec<f64>,
+}
+
+impl DelayBatch {
+    pub fn zeros(rounds: usize, n: usize, r: usize) -> Self {
+        Self {
+            rounds,
+            n,
+            r,
+            comp: vec![0.0; rounds * n * r],
+            comm: vec![0.0; rounds * n * r],
+        }
+    }
+
+    /// Slots per round (`n · r`).
+    #[inline]
+    pub fn stride(&self) -> usize {
+        self.n * self.r
+    }
+
+    /// Round `b`'s computation delays (`n · r` contiguous values).
+    #[inline]
+    pub fn comp_round(&self, b: usize) -> &[f64] {
+        let s = self.stride();
+        &self.comp[b * s..(b + 1) * s]
+    }
+
+    /// Round `b`'s communication delays.
+    #[inline]
+    pub fn comm_round(&self, b: usize) -> &[f64] {
+        let s = self.stride();
+        &self.comm[b * s..(b + 1) * s]
+    }
+
+    /// Mutable views of round `b`'s computation and communication delays.
+    #[inline]
+    pub fn round_mut(&mut self, b: usize) -> (&mut [f64], &mut [f64]) {
+        let s = self.stride();
+        (
+            &mut self.comp[b * s..(b + 1) * s],
+            &mut self.comm[b * s..(b + 1) * s],
+        )
+    }
+
+    /// The whole batch's computation delays (round-major).
+    #[inline]
+    pub fn comp_flat(&self) -> &[f64] {
+        &self.comp
+    }
+
+    /// The whole batch's communication delays (round-major).
+    #[inline]
+    pub fn comm_flat(&self) -> &[f64] {
+        &self.comm
+    }
+
+    #[inline]
+    pub fn comp_flat_mut(&mut self) -> &mut [f64] {
+        &mut self.comp
+    }
+
+    #[inline]
+    pub fn comm_flat_mut(&mut self) -> &mut [f64] {
+        &mut self.comm
+    }
+
+    /// Copy one round in from a [`DelaySample`] (the per-round fallback
+    /// bridge of [`DelayModel::sample_batch_into`]).
+    pub fn copy_round_from_sample(&mut self, b: usize, sample: &DelaySample) {
+        assert_eq!(sample.n, self.n, "sample shaped for different n");
+        assert_eq!(sample.r, self.r, "sample shaped for different r");
+        let (comp, comm) = self.round_mut(b);
+        comp.copy_from_slice(&sample.comp);
+        comm.copy_from_slice(&sample.comm);
+    }
+
+    /// Materialize round `b` as an owned [`DelaySample`] (tests and
+    /// slow paths; the hot kernels read the slices directly).
+    pub fn round_sample(&self, b: usize) -> DelaySample {
+        DelaySample {
+            n: self.n,
+            r: self.r,
+            comp: self.comp_round(b).to_vec(),
+            comm: self.comm_round(b).to_vec(),
+        }
     }
 }
 
@@ -126,6 +241,36 @@ pub trait DelayModel: Send + Sync {
     fn sample(&self, n: usize, r: usize, rng: &mut Rng) -> DelaySample {
         let mut out = DelaySample::zeros(n, r);
         self.sample_into(&mut out, rng);
+        out
+    }
+
+    /// Fill **all** `rounds × n × r` slots of a [`DelayBatch`].
+    ///
+    /// Contract (property-tested per model in
+    /// `rust/tests/batch_engine.rs`): the produced delays and the RNG
+    /// stream consumed must be **bit-identical** to `out.rounds`
+    /// sequential [`DelayModel::sample_into`] calls on a sample of the
+    /// same shape.  This is what lets the batched Monte-Carlo engine
+    /// reproduce the scalar engine exactly for a fixed
+    /// `(trials, threads, seed)` triple while chunking rounds freely.
+    ///
+    /// The default falls back to exactly that sequential loop; models
+    /// override it to hoist virtual dispatch and per-distribution
+    /// constants out of the round loop and write straight into the
+    /// batch's contiguous storage.
+    fn sample_batch_into(&self, out: &mut DelayBatch, rng: &mut Rng) {
+        let mut tmp = DelaySample::zeros(out.n, out.r);
+        for b in 0..out.rounds {
+            self.sample_into(&mut tmp, rng);
+            out.copy_round_from_sample(b, &tmp);
+        }
+    }
+
+    /// Convenience allocating wrapper around
+    /// [`DelayModel::sample_batch_into`].
+    fn sample_batch(&self, rounds: usize, n: usize, r: usize, rng: &mut Rng) -> DelayBatch {
+        let mut out = DelayBatch::zeros(rounds, n, r);
+        self.sample_batch_into(&mut out, rng);
         out
     }
 
@@ -254,6 +399,57 @@ mod tests {
                     assert!(s.comm(i, j) > 0.0, "{}", m.name());
                 }
             }
+        }
+    }
+
+    #[test]
+    fn batch_layout_roundtrip() {
+        let mut batch = DelayBatch::zeros(3, 2, 2);
+        assert_eq!(batch.stride(), 4);
+        let s = DelaySample::from_rows(
+            vec![vec![1.0, 2.0], vec![3.0, 4.0]],
+            vec![vec![0.1, 0.2], vec![0.3, 0.4]],
+        );
+        batch.copy_round_from_sample(1, &s);
+        assert_eq!(batch.comp_round(0), &[0.0; 4]);
+        assert_eq!(batch.comp_round(1), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(batch.comm_round(1), &[0.1, 0.2, 0.3, 0.4]);
+        let back = batch.round_sample(1);
+        assert_eq!(back.comp(1, 0), 3.0);
+        assert_eq!(back.comm(0, 1), 0.2);
+    }
+
+    #[test]
+    fn default_batch_fallback_matches_sequential_sampling() {
+        // the trait-default path must satisfy the bit-identity contract
+        let kinds = [
+            DelayModelKind::TruncatedGaussianScenario1,
+            DelayModelKind::Ec2Like { seed: 9, hetero: 0.2 },
+        ];
+        for kind in kinds {
+            let m = kind.build(5);
+            let (rounds, n, r) = (7usize, 5usize, 3usize);
+            let mut rng_a = Rng::seed_from_u64(0xBA7C4);
+            let mut rng_b = Rng::seed_from_u64(0xBA7C4);
+            let mut batch = DelayBatch::zeros(rounds, n, r);
+            // route through the *default* implementation explicitly
+            struct ForceDefault<'m>(&'m dyn DelayModel);
+            impl DelayModel for ForceDefault<'_> {
+                fn name(&self) -> String {
+                    self.0.name()
+                }
+                fn sample_into(&self, out: &mut DelaySample, rng: &mut Rng) {
+                    self.0.sample_into(out, rng);
+                }
+            }
+            ForceDefault(m.as_ref()).sample_batch_into(&mut batch, &mut rng_a);
+            let mut tmp = DelaySample::zeros(n, r);
+            for b in 0..rounds {
+                m.sample_into(&mut tmp, &mut rng_b);
+                assert_eq!(batch.comp_round(b), tmp.comp_flat(), "{} b={b}", m.name());
+                assert_eq!(batch.comm_round(b), tmp.comm_flat(), "{} b={b}", m.name());
+            }
+            assert_eq!(rng_a.next_u64(), rng_b.next_u64(), "RNG streams diverged");
         }
     }
 

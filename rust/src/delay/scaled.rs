@@ -9,7 +9,7 @@
 //! the calibration point `n₀`) and optionally the communication delays
 //! by `comm_scale`.
 
-use super::{DelayModel, DelaySample};
+use super::{DelayBatch, DelayModel, DelaySample};
 use crate::util::rng::Rng;
 
 /// Multiplicatively scale an inner model's delays.
@@ -55,6 +55,25 @@ impl<M: DelayModel> DelayModel for Scaled<M> {
         }
         if self.comm_scale != 1.0 {
             for v in out.comm_mut() {
+                *v *= self.comm_scale;
+            }
+        }
+    }
+
+    /// Batched sampling: delegate the whole batch to the inner model,
+    /// then scale the flat arrays in one pass.  Scaling consumes no
+    /// randomness and multiplies each slot by the same factor as the
+    /// per-round path, so the result is bit-identical to sequential
+    /// `sample_into` calls whenever the inner model's batch path is.
+    fn sample_batch_into(&self, out: &mut DelayBatch, rng: &mut Rng) {
+        self.inner.sample_batch_into(out, rng);
+        if self.comp_scale != 1.0 {
+            for v in out.comp_flat_mut() {
+                *v *= self.comp_scale;
+            }
+        }
+        if self.comm_scale != 1.0 {
+            for v in out.comm_flat_mut() {
                 *v *= self.comm_scale;
             }
         }

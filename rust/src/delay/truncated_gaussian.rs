@@ -11,7 +11,7 @@ use crate::util::rng::Rng;
 
 
 
-use super::{DelayModel, DelaySample};
+use super::{DelayBatch, DelayModel, DelaySample};
 use crate::util::math::{normal_cdf, normal_pdf, normal_quantile};
 
 /// Parameters of one truncated Gaussian (all in ms).
@@ -223,6 +223,33 @@ impl DelayModel for TruncatedGaussianModel {
             for j in 0..r {
                 out.comp_mut()[i * r + j] = dc.sample(rng);
                 out.comm_mut()[i * r + j] = dm.sample(rng);
+            }
+        }
+    }
+
+    /// Batched sampling: same `(comp, comm)`-interleaved draw order as
+    /// [`TruncatedGaussianModel::sample_into`] (the bit-identity
+    /// contract), with the virtual dispatch, shape checks and prepared
+    /// inverse-CDF constants hoisted out of the round loop and writes
+    /// going straight into the batch's contiguous per-round slices.
+    fn sample_batch_into(&self, out: &mut DelayBatch, rng: &mut Rng) {
+        let (n, r) = (out.n, out.r);
+        assert!(
+            n <= self.comp.len(),
+            "model built for {} workers, asked for {n}",
+            self.comp.len()
+        );
+        let prepared: Vec<(&PreparedTruncatedGaussian, &PreparedTruncatedGaussian)> = (0..n)
+            .map(|i| (&self.prepared_comp[i], &self.prepared_comm[i]))
+            .collect();
+        for b in 0..out.rounds {
+            let (comp, comm) = out.round_mut(b);
+            for (i, &(dc, dm)) in prepared.iter().enumerate() {
+                let base = i * r;
+                for j in 0..r {
+                    comp[base + j] = dc.sample(rng);
+                    comm[base + j] = dm.sample(rng);
+                }
             }
         }
     }

@@ -1,23 +1,34 @@
 //! Coupled multi-scheme evaluator: CS, SS, RA, PC, PCMM and LB against
 //! the *identical* delay stream — the engine behind every figure.
 //!
-//! Per round one `DelaySample` is drawn; every scheme's completion time
-//! is computed from it (uncoded via the §II dynamics, PC/PCMM via their
-//! Table-I criteria, LB as the k-th slot order statistic).  This is the
-//! paper's fairness discipline ("for fairness we use the same dataset
-//! for all the schemes") applied to the randomness itself, and it makes
+//! Per chunk of rounds one [`DelayBatch`] is drawn and every slot's
+//! arrival time is computed **once** ([`slot_arrivals_batch`]); every
+//! scheme's completion time is then derived from that shared array
+//! (uncoded via the §II dynamics, PCMM and LB directly as order
+//! statistics of the arrivals, PC from the per-worker comp/comm rows)
+//! without re-reading the delay stream per scheme.  This is the paper's
+//! fairness discipline ("for fairness we use the same dataset for all
+//! the schemes") applied to the randomness itself, and it makes
 //! ordering assertions (LB ≤ CS, …) hold per realization, not just in
 //! expectation.
+//!
+//! Shards run on the persistent [`WorkerPool`] with RNG streams from
+//! [`shard_rngs`] — the same shard-seeding invariant as the plain
+//! Monte-Carlo engine, so harness estimates can never decouple from
+//! `MonteCarlo` estimates for structural reasons.  Trial statistics
+//! stream into `RunningStats` + `StreamingQuantiles`, keeping memory
+//! O(schemes) at any trial count.
 
 use crate::coded::{PcScheme, PcmmScheme};
-use crate::delay::{DelayModel, DelaySample};
-use crate::lb;
+use crate::delay::{DelayBatch, DelayModel};
 use crate::scheduler::{
     CyclicScheduler, RandomAssignment, Scheduler, SchemeId, StaircaseScheduler,
 };
-use crate::sim::{completion_time_fast, CompletionEstimate};
-use crate::util::rng::Rng;
-use crate::util::stats::{quantile_sorted, RunningStats};
+use crate::sim::{
+    completion_from_arrivals, kth_arrival_from_arrivals, shard_layout, shard_rngs,
+    slot_arrivals_batch, CompletionEstimate, FlatTasks, WorkerPool, BATCH_ROUNDS,
+};
+use crate::util::stats::{RunningStats, StreamingQuantiles};
 
 /// Evaluation request for one `(n, r, k)` point.
 #[derive(Debug, Clone)]
@@ -28,6 +39,8 @@ pub struct EvalPoint {
     pub trials: usize,
     pub seed: u64,
     pub schemes: Vec<SchemeId>,
+    /// Number of deterministic shards (RNG streams).  OS concurrency is
+    /// clamped to `available_parallelism` by the persistent pool.
     pub threads: usize,
     /// Master-side per-message ingestion cost (ms).  `0` gives the
     /// paper's idealized eq. (1)–(2) dynamics (used for Fig. 4's pure
@@ -50,7 +63,14 @@ impl EvalPoint {
             k,
             trials,
             seed,
-            schemes: vec![SchemeId::Cs, SchemeId::Ss, SchemeId::Ra, SchemeId::Pc, SchemeId::Pcmm, SchemeId::Lb],
+            schemes: vec![
+                SchemeId::Cs,
+                SchemeId::Ss,
+                SchemeId::Ra,
+                SchemeId::Pc,
+                SchemeId::Pcmm,
+                SchemeId::Lb,
+            ],
             threads: std::thread::available_parallelism()
                 .map(|p| p.get())
                 .unwrap_or(1),
@@ -89,49 +109,39 @@ impl EvalPoint {
 pub fn evaluate(point: &EvalPoint, model: &dyn DelayModel) -> Vec<CompletionEstimate> {
     let schemes = point.applicable();
     assert!(!schemes.is_empty(), "no applicable schemes at this point");
-    let threads = point.threads.clamp(1, point.trials.max(1));
-    let shard_sizes: Vec<usize> = (0..threads)
-        .map(|t| point.trials / threads + usize::from(t < point.trials % threads))
-        .collect();
+    let shard_sizes = shard_layout(point.trials, point.threads);
 
-    let mut per_scheme: Vec<Vec<f64>> = vec![Vec::with_capacity(point.trials); schemes.len()];
-    std::thread::scope(|scope| {
-        let handles: Vec<_> = shard_sizes
-            .iter()
-            .enumerate()
-            .map(|(shard, &rounds)| {
-                let schemes = &schemes;
-                scope.spawn(move || shard_eval(point, model, schemes, rounds, shard as u64))
-            })
-            .collect();
-        for h in handles {
-            for (dst, src) in per_scheme.iter_mut().zip(h.join().expect("eval shard")) {
-                dst.extend(src);
-            }
+    let schemes_ref = &schemes;
+    let jobs: Vec<_> = shard_sizes
+        .into_iter()
+        .enumerate()
+        .map(|(shard, rounds)| {
+            move || shard_eval(point, model, schemes_ref, rounds, shard as u64)
+        })
+        .collect();
+    let per_shard = WorkerPool::global().scope_run(jobs);
+
+    let mut merged: Vec<(RunningStats, StreamingQuantiles)> =
+        vec![(RunningStats::new(), StreamingQuantiles::new()); schemes.len()];
+    for shard_acc in per_shard {
+        for (dst, src) in merged.iter_mut().zip(shard_acc) {
+            dst.0.merge(&src.0);
+            dst.1.merge(&src.1);
         }
-    });
+    }
 
     schemes
         .iter()
-        .zip(per_scheme)
-        .map(|(id, mut values)| {
-            let mut acc = RunningStats::new();
-            values.iter().for_each(|&v| acc.push(v));
-            values.sort_unstable_by(f64::total_cmp);
-            CompletionEstimate {
-                scheme: id.to_string(),
-                n: point.n,
-                r: point.r,
-                k: point.k,
-                trials: values.len(),
-                mean: acc.mean(),
-                std_err: acc.std_err(),
-                std_dev: acc.std_dev(),
-                min: acc.min(),
-                max: acc.max(),
-                p50: quantile_sorted(&values, 0.5),
-                p95: quantile_sorted(&values, 0.95),
-            }
+        .zip(merged)
+        .map(|(id, (stats, quantiles))| {
+            CompletionEstimate::from_streams(
+                id.to_string(),
+                point.n,
+                point.r,
+                point.k,
+                &stats,
+                &quantiles,
+            )
         })
         .collect()
 }
@@ -142,95 +152,140 @@ fn shard_eval(
     schemes: &[SchemeId],
     rounds: usize,
     shard: u64,
-) -> Vec<Vec<f64>> {
+) -> Vec<(RunningStats, StreamingQuantiles)> {
     let (n, r, k) = (point.n, point.r, point.k);
-    let base = point.seed ^ 0x9E3779B97F4A7C15u64.wrapping_mul(shard + 1);
-    let mut rng = Rng::seed_from_u64(base);
-    let mut rng_sched = Rng::seed_from_u64(base ^ 0x5C4ED);
+    let (mut rng, mut rng_sched) = shard_rngs(point.seed, shard);
 
-    let mut sample = DelaySample::zeros(n, r);
-    let mut scratch: Vec<f64> = Vec::with_capacity(n);
-    let mut lb_scratch: Vec<f64> = Vec::with_capacity(n * r);
-
-    // prebuilt fixed schedules and coded schemes
-    let cs = CyclicScheduler.schedule(n, r, &mut rng_sched);
-    let ss = StaircaseScheduler.schedule(n, r, &mut rng_sched);
+    // prebuilt fixed schedules (flattened once) and coded schemes
+    let cs = FlatTasks::new(&CyclicScheduler.schedule(n, r, &mut rng_sched));
+    let ss = FlatTasks::new(&StaircaseScheduler.schedule(n, r, &mut rng_sched));
     let pc = if r >= 2 { Some(PcScheme::new(n, r)) } else { None };
     let pcmm = if r >= 2 { Some(PcmmScheme::new(n, r)) } else { None };
 
     let s = point.ingest_ms;
-    let mut arrivals: Vec<(f64, usize)> = Vec::with_capacity(n * r);
-    let mut out: Vec<Vec<f64>> = vec![Vec::with_capacity(rounds); schemes.len()];
-    for _ in 0..rounds {
-        model.sample_into(&mut sample, &mut rng);
-        for (idx, scheme) in schemes.iter().enumerate() {
-            let t = if s == 0.0 {
-                // idealized eq. (1)–(2) dynamics
-                match scheme {
-                    SchemeId::Cs => completion_time_fast(&cs, &sample, k, &mut scratch),
-                    SchemeId::Ss => completion_time_fast(&ss, &sample, k, &mut scratch),
-                    SchemeId::Ra => {
-                        let to = RandomAssignment.schedule(n, r, &mut rng_sched);
-                        completion_time_fast(&to, &sample, k, &mut scratch)
-                    }
-                    SchemeId::Pc => pc
-                        .as_ref()
-                        .expect("PC applicable")
-                        .completion_time(&sample, &mut lb_scratch),
-                    SchemeId::Pcmm => pcmm
-                        .as_ref()
-                        .expect("PCMM applicable")
-                        .completion_time(&sample, &mut lb_scratch),
-                    SchemeId::Lb => lb::kth_slot_arrival(&sample, k, &mut lb_scratch),
-                }
-            } else {
-                // testbed model: serialized master ingestion queue
-                match scheme {
-                    SchemeId::Cs => ingest_uncoded(&cs, &sample, k, s, &mut arrivals),
-                    SchemeId::Ss => ingest_uncoded(&ss, &sample, k, s, &mut arrivals),
-                    SchemeId::Ra => {
-                        let to = RandomAssignment.schedule(n, r, &mut rng_sched);
-                        ingest_uncoded(&to, &sample, k, s, &mut arrivals)
-                    }
-                    SchemeId::Pc => {
-                        let pc = pc.as_ref().expect("PC applicable");
-                        arrivals.clear();
-                        for i in 0..n {
-                            let comp: f64 = sample.comp_row(i).iter().sum();
-                            arrivals.push((comp + sample.comm(i, r - 1), 0));
-                        }
-                        ingest_count(&mut arrivals, pc.recovery_threshold(), s)
-                    }
-                    SchemeId::Pcmm => {
-                        let pcmm = pcmm.as_ref().expect("PCMM applicable");
-                        slot_arrivals(&sample, &mut arrivals);
-                        ingest_count(&mut arrivals, pcmm.recovery_threshold(), s)
-                    }
-                    SchemeId::Lb => {
-                        // genie master ingests only the k useful messages
-                        slot_arrivals(&sample, &mut arrivals);
-                        ingest_count(&mut arrivals, k, s)
-                    }
-                }
-            };
-            out[idx].push(t);
+    let stride = n * r;
+    let mut acc: Vec<(RunningStats, StreamingQuantiles)> =
+        vec![(RunningStats::new(), StreamingQuantiles::new()); schemes.len()];
+
+    let mut batch = DelayBatch::zeros(BATCH_ROUNDS.min(rounds.max(1)), n, r);
+    let mut arrivals: Vec<f64> = Vec::new();
+    let mut task_times: Vec<f64> = Vec::with_capacity(n);
+    let mut scratch: Vec<f64> = Vec::with_capacity(stride);
+    let mut pairs: Vec<(f64, usize)> = Vec::with_capacity(stride);
+    // per-draw scratch for RA's fresh matrices, refilled in place
+    let mut ra_flat: Option<FlatTasks> = None;
+
+    let mut done = 0usize;
+    while done < rounds {
+        let chunk = BATCH_ROUNDS.min(rounds - done);
+        if batch.rounds != chunk {
+            batch = DelayBatch::zeros(chunk, n, r);
         }
+        model.sample_batch_into(&mut batch, &mut rng);
+        slot_arrivals_batch(&batch, &mut arrivals);
+        for b in 0..chunk {
+            let round_arrivals = &arrivals[b * stride..(b + 1) * stride];
+            let comp = batch.comp_round(b);
+            let comm = batch.comm_round(b);
+            for (idx, scheme) in schemes.iter().enumerate() {
+                let t = if s == 0.0 {
+                    // idealized eq. (1)–(2) dynamics, all from the
+                    // shared arrival array
+                    match scheme {
+                        SchemeId::Cs => {
+                            completion_from_arrivals(&cs, round_arrivals, k, &mut task_times)
+                        }
+                        SchemeId::Ss => {
+                            completion_from_arrivals(&ss, round_arrivals, k, &mut task_times)
+                        }
+                        SchemeId::Ra => {
+                            let to = RandomAssignment.schedule(n, r, &mut rng_sched);
+                            let flat = FlatTasks::refill_or_init(&mut ra_flat, &to);
+                            completion_from_arrivals(flat, round_arrivals, k, &mut task_times)
+                        }
+                        SchemeId::Pc => pc_completion(
+                            comp,
+                            comm,
+                            n,
+                            r,
+                            pc.as_ref().expect("PC applicable").recovery_threshold(),
+                            &mut scratch,
+                        ),
+                        SchemeId::Pcmm => kth_arrival_from_arrivals(
+                            round_arrivals,
+                            pcmm.as_ref().expect("PCMM applicable").recovery_threshold(),
+                            &mut scratch,
+                        ),
+                        SchemeId::Lb => {
+                            kth_arrival_from_arrivals(round_arrivals, k, &mut scratch)
+                        }
+                    }
+                } else {
+                    // testbed model: serialized master ingestion queue
+                    match scheme {
+                        SchemeId::Cs => {
+                            ingest_uncoded(&cs, round_arrivals, k, s, &mut pairs)
+                        }
+                        SchemeId::Ss => {
+                            ingest_uncoded(&ss, round_arrivals, k, s, &mut pairs)
+                        }
+                        SchemeId::Ra => {
+                            let to = RandomAssignment.schedule(n, r, &mut rng_sched);
+                            let flat = FlatTasks::refill_or_init(&mut ra_flat, &to);
+                            ingest_uncoded(flat, round_arrivals, k, s, &mut pairs)
+                        }
+                        SchemeId::Pc => {
+                            let pc = pc.as_ref().expect("PC applicable");
+                            pairs.clear();
+                            for i in 0..n {
+                                let comp_sum: f64 = comp[i * r..(i + 1) * r].iter().sum();
+                                pairs.push((comp_sum + comm[i * r + r - 1], 0));
+                            }
+                            ingest_count(&mut pairs, pc.recovery_threshold(), s)
+                        }
+                        SchemeId::Pcmm => {
+                            let pcmm = pcmm.as_ref().expect("PCMM applicable");
+                            pairs.clear();
+                            pairs.extend(round_arrivals.iter().map(|&t| (t, 0)));
+                            ingest_count(&mut pairs, pcmm.recovery_threshold(), s)
+                        }
+                        SchemeId::Lb => {
+                            // genie master ingests only the k useful messages
+                            pairs.clear();
+                            pairs.extend(round_arrivals.iter().map(|&t| (t, 0)));
+                            ingest_count(&mut pairs, k, s)
+                        }
+                    }
+                };
+                acc[idx].0.push(t);
+                acc[idx].1.push(t);
+            }
+        }
+        done += chunk;
     }
-    out
+    acc
 }
 
-/// All n·r slot arrival times (task tag unused).
-fn slot_arrivals(sample: &DelaySample, arrivals: &mut Vec<(f64, usize)>) {
-    arrivals.clear();
-    for i in 0..sample.n {
-        let comp = sample.comp_row(i);
-        let comm = sample.comm_row(i);
-        let mut prefix = 0.0;
-        for j in 0..sample.r {
-            prefix += comp[j];
-            arrivals.push((prefix + comm[j], 0));
-        }
+/// PC completion (eqs. 51–52) from one round's comp/comm rows: worker
+/// `i` finishes at `Σ_{j<r} comp(i,j) + comm(i, r−1)` (all `r` tasks,
+/// one message); the round completes at the threshold-th order
+/// statistic across workers.  Mirrors `PcScheme::completion_time` on
+/// the batch's flat storage.
+fn pc_completion(
+    comp: &[f64],
+    comm: &[f64],
+    n: usize,
+    r: usize,
+    threshold: usize,
+    scratch: &mut Vec<f64>,
+) -> f64 {
+    scratch.clear();
+    for i in 0..n {
+        let comp_sum: f64 = comp[i * r..(i + 1) * r].iter().sum();
+        scratch.push(comp_sum + comm[i * r + r - 1]);
     }
+    let (_, kth, _) = scratch.select_nth_unstable_by(threshold - 1, |a, b| a.total_cmp(b));
+    *kth
 }
 
 /// Completion under a serialized ingestion queue, stopping at the
@@ -250,31 +305,29 @@ fn ingest_count(arrivals: &mut [(f64, usize)], count: usize, s: f64) -> f64 {
 
 /// Uncoded completion with ingestion: the master processes *every*
 /// arriving message (duplicates included) in arrival order; the round
-/// ends when the k-th distinct task finishes ingestion.
+/// ends when the k-th distinct task finishes ingestion.  Message
+/// arrival times come from the shared per-round arrival array; the TO
+/// matrix only supplies the task tags.
 fn ingest_uncoded(
-    to: &crate::scheduler::ToMatrix,
-    sample: &DelaySample,
+    tasks: &FlatTasks,
+    round_arrivals: &[f64],
     k: usize,
     s: f64,
-    arrivals: &mut Vec<(f64, usize)>,
+    pairs: &mut Vec<(f64, usize)>,
 ) -> f64 {
-    let (n, r) = (to.n(), to.r());
-    arrivals.clear();
-    for i in 0..n {
-        let comp = sample.comp_row(i);
-        let comm = sample.comm_row(i);
-        let row = to.row(i);
-        let mut prefix = 0.0;
-        for j in 0..r {
-            prefix += comp[j];
-            arrivals.push((prefix + comm[j], row[j]));
-        }
-    }
-    arrivals.sort_unstable_by(|a, b| a.0.total_cmp(&b.0));
+    let n = tasks.n();
+    pairs.clear();
+    pairs.extend(
+        round_arrivals
+            .iter()
+            .zip(tasks.tasks())
+            .map(|(&t, &task)| (t, task)),
+    );
+    pairs.sort_unstable_by(|a, b| a.0.total_cmp(&b.0));
     let mut busy = 0.0f64;
     let mut seen = vec![false; n];
     let mut distinct = 0usize;
-    for &(t, task) in arrivals.iter() {
+    for &(t, task) in pairs.iter() {
         busy = busy.max(t) + s;
         if !seen[task] {
             seen[task] = true;
@@ -334,6 +387,54 @@ mod tests {
         let b = evaluate(&point, &model);
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.mean, y.mean, "{}", x.scheme);
+        }
+    }
+
+    #[test]
+    fn harness_couples_to_plain_monte_carlo_engine() {
+        // shard-seeding invariant across code paths: the harness and
+        // `MonteCarlo` must see bit-identical delay streams for the
+        // same (trials, threads, seed), so a CS-only evaluation agrees
+        // exactly, not just statistically
+        use crate::sim::MonteCarlo;
+        let model = TruncatedGaussianModel::scenario1(7);
+        let mut point = EvalPoint::new(7, 3, 7, 2000, 31).with_schemes(&[SchemeId::Cs]);
+        point.threads = 4;
+        let harness = evaluate(&point, &model).remove(0);
+        let mc = MonteCarlo {
+            trials: 2000,
+            seed: 31,
+            threads: 4,
+        };
+        let plain = mc.estimate(&CyclicScheduler, &model, 7, 3, 7);
+        assert_eq!(harness.mean.to_bits(), plain.mean.to_bits());
+        assert_eq!(harness.p95.to_bits(), plain.p95.to_bits());
+    }
+
+    #[test]
+    fn pc_completion_matches_coded_module_kernel() {
+        // the harness's slice-based PC kernel must stay bit-identical
+        // to PcScheme::completion_time, or figure PC curves silently
+        // drift from the coded module's ground truth
+        use crate::delay::{DelayModel, TruncatedGaussianModel};
+        let (n, r) = (9usize, 4usize);
+        let model = TruncatedGaussianModel::scenario2(n, 8);
+        let mut rng = crate::util::rng::Rng::seed_from_u64(2);
+        let pc = PcScheme::new(n, r);
+        let mut coded_scratch: Vec<f64> = Vec::new();
+        let mut flat_scratch: Vec<f64> = Vec::new();
+        for _ in 0..64 {
+            let sample = model.sample(n, r, &mut rng);
+            let coded = pc.completion_time(&sample, &mut coded_scratch);
+            let flat = pc_completion(
+                sample.comp_flat(),
+                sample.comm_flat(),
+                n,
+                r,
+                pc.recovery_threshold(),
+                &mut flat_scratch,
+            );
+            assert_eq!(coded.to_bits(), flat.to_bits());
         }
     }
 

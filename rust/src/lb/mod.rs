@@ -15,9 +15,9 @@
 use crate::util::rng::Rng;
 
 
-use crate::delay::{DelayModel, DelaySample};
-use crate::sim::CompletionEstimate;
-use crate::util::stats::{quantile_sorted, RunningStats};
+use crate::delay::{DelayBatch, DelayModel, DelaySample};
+use crate::sim::{kth_arrival_from_arrivals, slot_arrivals_batch, CompletionEstimate, BATCH_ROUNDS};
+use crate::util::stats::{RunningStats, StreamingQuantiles};
 
 /// k-th smallest slot-arrival time of one realization (`t̂_{T,(k)}`).
 ///
@@ -40,7 +40,12 @@ pub fn kth_slot_arrival(sample: &DelaySample, k: usize, scratch: &mut Vec<f64>) 
     *kth
 }
 
-/// Monte-Carlo estimate of `t̄_LB(r, k)` (eq. 44).
+/// Monte-Carlo estimate of `t̄_LB(r, k)` (eq. 44), on the batched
+/// engine: delays are sampled in [`DelayBatch`] chunks, slot arrivals
+/// are computed once per chunk and the k-th order statistic streams
+/// into `RunningStats` + `StreamingQuantiles` — memory O(1) in
+/// `trials`.  The delay stream and per-round values are bit-identical
+/// to the old per-round loop for a fixed seed.
 pub fn lower_bound(
     model: &dyn DelayModel,
     n: usize,
@@ -49,34 +54,36 @@ pub fn lower_bound(
     trials: usize,
     seed: u64,
 ) -> CompletionEstimate {
+    assert!(trials > 0, "need at least one trial");
     assert!(k <= n, "computation target exceeds task count");
-    assert!(k <= n * r, "not enough slots to ever reach the target");
+    assert!(k >= 1 && k <= n * r, "not enough slots to ever reach the target");
     let mut rng = Rng::seed_from_u64(seed);
-    let mut sample = DelaySample::zeros(n, r);
-    let mut scratch = Vec::with_capacity(n * r);
-    let mut acc = RunningStats::new();
-    let mut values = Vec::with_capacity(trials);
-    for _ in 0..trials {
-        model.sample_into(&mut sample, &mut rng);
-        let t = kth_slot_arrival(&sample, k, &mut scratch);
-        acc.push(t);
-        values.push(t);
+    let stride = n * r;
+    let mut batch = DelayBatch::zeros(BATCH_ROUNDS.min(trials), n, r);
+    let mut arrivals: Vec<f64> = Vec::new();
+    let mut scratch: Vec<f64> = Vec::with_capacity(stride);
+    let mut stats = RunningStats::new();
+    let mut quantiles = StreamingQuantiles::new();
+    let mut done = 0usize;
+    while done < trials {
+        let chunk = BATCH_ROUNDS.min(trials - done);
+        if batch.rounds != chunk {
+            batch = DelayBatch::zeros(chunk, n, r);
+        }
+        model.sample_batch_into(&mut batch, &mut rng);
+        slot_arrivals_batch(&batch, &mut arrivals);
+        for b in 0..chunk {
+            let t = kth_arrival_from_arrivals(
+                &arrivals[b * stride..(b + 1) * stride],
+                k,
+                &mut scratch,
+            );
+            stats.push(t);
+            quantiles.push(t);
+        }
+        done += chunk;
     }
-    values.sort_unstable_by(f64::total_cmp);
-    CompletionEstimate {
-        scheme: "LB".into(),
-        n,
-        r,
-        k,
-        trials,
-        mean: acc.mean(),
-        std_err: acc.std_err(),
-        std_dev: acc.std_dev(),
-        min: acc.min(),
-        max: acc.max(),
-        p50: quantile_sorted(&values, 0.5),
-        p95: quantile_sorted(&values, 0.95),
-    }
+    CompletionEstimate::from_streams("LB".into(), n, r, k, &stats, &quantiles)
 }
 
 #[cfg(test)]
@@ -122,6 +129,27 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn batched_lower_bound_matches_scalar_reference() {
+        // per-round values (and hence the mean) must reproduce the old
+        // sample-per-round loop bit-for-bit for a fixed seed
+        let model = TruncatedGaussianModel::scenario2(6, 2);
+        let (n, r, k, trials, seed) = (6usize, 3usize, 4usize, 700usize, 13u64);
+        let est = lower_bound(&model, n, r, k, trials, seed);
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut sample = DelaySample::zeros(n, r);
+        let mut scratch = Vec::new();
+        let mut acc = crate::util::stats::RunningStats::new();
+        for _ in 0..trials {
+            model.sample_into(&mut sample, &mut rng);
+            acc.push(kth_slot_arrival(&sample, k, &mut scratch));
+        }
+        assert_eq!(est.trials, trials);
+        assert_eq!(est.mean.to_bits(), acc.mean().to_bits());
+        assert_eq!(est.min.to_bits(), acc.min().to_bits());
+        assert_eq!(est.max.to_bits(), acc.max().to_bits());
     }
 
     #[test]

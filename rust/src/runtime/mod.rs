@@ -8,202 +8,313 @@
 //! `Send`, so each coordinator worker thread owns its own `Runtime`
 //! (compilation of these small modules is a few ms, amortized once at
 //! cluster start — measured in EXPERIMENTS.md §Perf).
+//!
+//! **Build gating:** the PJRT execution path needs the `xla` (xla-rs)
+//! bindings, which are not vendored in this offline tree.  The real
+//! implementation compiles only with `--features pjrt`; the default
+//! build substitutes an API-compatible stub whose constructor returns an
+//! error, so callers (the coordinator's `Backend::Pjrt`, benches, tests)
+//! compile unchanged and fall back or skip at runtime.
 
 pub mod artifacts;
 
 pub use artifacts::{default_artifact_dir, ArtifactMeta, Manifest};
 
-use std::collections::HashMap;
-use std::path::Path;
+#[cfg(feature = "pjrt")]
+mod backend {
+    use super::{default_artifact_dir, Manifest};
+    use std::collections::HashMap;
+    use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
+    use anyhow::{anyhow, Context, Result};
 
-/// A loaded PJRT CPU runtime bound to one artifact directory.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    manifest: Manifest,
-    cache: HashMap<String, xla::PjRtLoadedExecutable>,
-    /// resident device buffers for round-invariant operands (worker
-    /// data partitions): uploading X once instead of per task removed
-    /// a 2 MB host copy from every e2e task execution — §Perf
-    buffers: HashMap<String, xla::PjRtBuffer>,
-}
-
-impl Runtime {
-    /// Create a CPU PJRT client and load the manifest from `dir`.
-    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
-        let manifest = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Self {
-            client,
-            manifest,
-            cache: HashMap::new(),
-            buffers: HashMap::new(),
-        })
+    /// A loaded PJRT CPU runtime bound to one artifact directory.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        manifest: Manifest,
+        cache: HashMap<String, xla::PjRtLoadedExecutable>,
+        /// resident device buffers for round-invariant operands (worker
+        /// data partitions): uploading X once instead of per task removed
+        /// a 2 MB host copy from every e2e task execution — §Perf
+        buffers: HashMap<String, xla::PjRtBuffer>,
     }
 
-    /// Artifact directory from `$STRAGGLER_ARTIFACTS` / `./artifacts`.
-    pub fn from_default_dir() -> Result<Self> {
-        Self::new(default_artifact_dir())
-    }
-
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    pub fn platform_name(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Compile (or fetch cached) executable for `profile/entry`.
-    pub fn prepare(&mut self, profile: &str, entry: &str) -> Result<()> {
-        let key = format!("{profile}/{entry}");
-        if self.cache.contains_key(&key) {
-            return Ok(());
+    impl Runtime {
+        /// Create a CPU PJRT client and load the manifest from `dir`.
+        pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+            let manifest = Manifest::load(dir)?;
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(Self {
+                client,
+                manifest,
+                cache: HashMap::new(),
+                buffers: HashMap::new(),
+            })
         }
-        let meta = self.manifest.get(profile, entry)?.clone();
-        let path = self.manifest.path_of(&meta);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {key}"))?;
-        self.cache.insert(key, exe);
-        Ok(())
-    }
 
-    /// Execute `profile/entry` on f32 buffers (shapes validated against
-    /// the manifest) and return the flat f32 output.
-    ///
-    /// The AOT pipeline lowers with `return_tuple=True`, so every module
-    /// returns a 1-tuple; this unwraps it.
-    pub fn execute(&mut self, profile: &str, entry: &str, args: &[&[f32]]) -> Result<Vec<f32>> {
-        self.prepare(profile, entry)?;
-        let meta = self.manifest.get(profile, entry)?.clone();
-        anyhow::ensure!(
-            args.len() == meta.arg_shapes.len(),
-            "{}/{entry}: expected {} args, got {}",
-            profile,
-            meta.arg_shapes.len(),
-            args.len()
-        );
-        let mut literals = Vec::with_capacity(args.len());
-        for (idx, (arg, shape)) in args.iter().zip(&meta.arg_shapes).enumerate() {
+        /// Artifact directory from `$STRAGGLER_ARTIFACTS` / `./artifacts`.
+        pub fn from_default_dir() -> Result<Self> {
+            Self::new(default_artifact_dir())
+        }
+
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        pub fn platform_name(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Compile (or fetch cached) executable for `profile/entry`.
+        pub fn prepare(&mut self, profile: &str, entry: &str) -> Result<()> {
+            let key = format!("{profile}/{entry}");
+            if self.cache.contains_key(&key) {
+                return Ok(());
+            }
+            let meta = self.manifest.get(profile, entry)?.clone();
+            let path = self.manifest.path_of(&meta);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {key}"))?;
+            self.cache.insert(key, exe);
+            Ok(())
+        }
+
+        /// Execute `profile/entry` on f32 buffers (shapes validated against
+        /// the manifest) and return the flat f32 output.
+        ///
+        /// The AOT pipeline lowers with `return_tuple=True`, so every module
+        /// returns a 1-tuple; this unwraps it.
+        pub fn execute(&mut self, profile: &str, entry: &str, args: &[&[f32]]) -> Result<Vec<f32>> {
+            self.prepare(profile, entry)?;
+            let meta = self.manifest.get(profile, entry)?.clone();
             anyhow::ensure!(
-                arg.len() == meta.arg_len(idx),
-                "{}/{entry}: arg {idx} ({}) has {} elements, manifest says {:?}",
+                args.len() == meta.arg_shapes.len(),
+                "{}/{entry}: expected {} args, got {}",
                 profile,
-                meta.arg_names.get(idx).map(String::as_str).unwrap_or("?"),
-                arg.len(),
-                shape
+                meta.arg_shapes.len(),
+                args.len()
             );
-            let lit = if shape.is_empty() {
-                xla::Literal::from(arg[0])
-            } else {
-                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-                xla::Literal::vec1(arg)
-                    .reshape(&dims)
-                    .with_context(|| format!("reshaping arg {idx} to {shape:?}"))?
-            };
-            literals.push(lit);
+            let mut literals = Vec::with_capacity(args.len());
+            for (idx, (arg, shape)) in args.iter().zip(&meta.arg_shapes).enumerate() {
+                anyhow::ensure!(
+                    arg.len() == meta.arg_len(idx),
+                    "{}/{entry}: arg {idx} ({}) has {} elements, manifest says {:?}",
+                    profile,
+                    meta.arg_names.get(idx).map(String::as_str).unwrap_or("?"),
+                    arg.len(),
+                    shape
+                );
+                let lit = if shape.is_empty() {
+                    xla::Literal::from(arg[0])
+                } else {
+                    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                    xla::Literal::vec1(arg)
+                        .reshape(&dims)
+                        .with_context(|| format!("reshaping arg {idx} to {shape:?}"))?
+                };
+                literals.push(lit);
+            }
+            let key = format!("{profile}/{entry}");
+            let exe = self.cache.get(&key).expect("prepared above");
+            let result = exe
+                .execute::<xla::Literal>(&literals)
+                .with_context(|| format!("executing {key}"))?[0][0]
+                .to_literal_sync()?;
+            let out = result
+                .to_tuple1()
+                .with_context(|| format!("{key}: unwrapping 1-tuple output"))?;
+            Ok(out.to_vec::<f32>()?)
         }
-        let key = format!("{profile}/{entry}");
-        let exe = self.cache.get(&key).expect("prepared above");
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .with_context(|| format!("executing {key}"))?[0][0]
-            .to_literal_sync()?;
-        let out = result
-            .to_tuple1()
-            .with_context(|| format!("{key}: unwrapping 1-tuple output"))?;
-        Ok(out.to_vec::<f32>()?)
-    }
 
-    /// Convenience: the paper's worker task `h(X) = X Xᵀ θ` (eq. 50).
-    pub fn task_gram(&mut self, profile: &str, x: &[f32], theta: &[f32]) -> Result<Vec<f32>> {
-        self.execute(profile, "task_gram", &[x, theta])
-    }
-
-    /// Upload a round-invariant operand to the device once, keyed.
-    pub fn upload(&mut self, key: &str, data: &[f32], shape: &[usize]) -> Result<()> {
-        if self.buffers.contains_key(key) {
-            return Ok(());
+        /// Convenience: the paper's worker task `h(X) = X Xᵀ θ` (eq. 50).
+        pub fn task_gram(&mut self, profile: &str, x: &[f32], theta: &[f32]) -> Result<Vec<f32>> {
+            self.execute(profile, "task_gram", &[x, theta])
         }
-        let buf = self
-            .client
-            .buffer_from_host_buffer::<f32>(data, shape, None)
-            .with_context(|| format!("uploading buffer {key}"))?;
-        self.buffers.insert(key.to_string(), buf);
-        Ok(())
-    }
 
-    pub fn has_buffer(&self, key: &str) -> bool {
-        self.buffers.contains_key(key)
-    }
+        /// Upload a round-invariant operand to the device once, keyed.
+        pub fn upload(&mut self, key: &str, data: &[f32], shape: &[usize]) -> Result<()> {
+            if self.buffers.contains_key(key) {
+                return Ok(());
+            }
+            let buf = self
+                .client
+                .buffer_from_host_buffer::<f32>(data, shape, None)
+                .with_context(|| format!("uploading buffer {key}"))?;
+            self.buffers.insert(key.to_string(), buf);
+            Ok(())
+        }
 
-    /// `h(X) = X Xᵀ θ` with `X` resident on-device (uploaded via
-    /// [`Runtime::upload`]); only the small `θ` is copied per call.
-    pub fn task_gram_resident(
-        &mut self,
-        profile: &str,
-        x_key: &str,
-        theta: &[f32],
-    ) -> Result<Vec<f32>> {
-        self.prepare(profile, "task_gram")?;
-        let meta = self.manifest.get(profile, "task_gram")?;
-        anyhow::ensure!(
-            theta.len() == meta.arg_len(1),
-            "theta has {} elements, manifest says {:?}",
-            theta.len(),
-            meta.arg_shapes[1]
-        );
-        let theta_shape = meta.arg_shapes[1].clone();
-        let theta_buf = self
-            .client
-            .buffer_from_host_buffer::<f32>(theta, &theta_shape, None)?;
-        let x_buf = self
-            .buffers
-            .get(x_key)
-            .ok_or_else(|| anyhow!("no resident buffer {x_key}; call upload() first"))?;
-        let key = format!("{profile}/task_gram");
-        let exe = self.cache.get(&key).expect("prepared above");
-        let result = exe
-            .execute_b::<&xla::PjRtBuffer>(&[x_buf, &theta_buf])
-            .with_context(|| format!("executing {key} (resident)"))?[0][0]
-            .to_literal_sync()?;
-        let out = result.to_tuple1()?;
-        Ok(out.to_vec::<f32>()?)
-    }
+        pub fn has_buffer(&self, key: &str) -> bool {
+            self.buffers.contains_key(key)
+        }
 
-    /// Master update `θ ← θ − η_eff · agg`.
-    pub fn master_update(
-        &mut self,
-        profile: &str,
-        theta: &[f32],
-        agg: &[f32],
-        eta_eff: f32,
-    ) -> Result<Vec<f32>> {
-        self.execute(profile, "master_update", &[theta, agg, &[eta_eff]])
-    }
+        /// `h(X) = X Xᵀ θ` with `X` resident on-device (uploaded via
+        /// [`Runtime::upload`]); only the small `θ` is copied per call.
+        pub fn task_gram_resident(
+            &mut self,
+            profile: &str,
+            x_key: &str,
+            theta: &[f32],
+        ) -> Result<Vec<f32>> {
+            self.prepare(profile, "task_gram")?;
+            let meta = self.manifest.get(profile, "task_gram")?;
+            anyhow::ensure!(
+                theta.len() == meta.arg_len(1),
+                "theta has {} elements, manifest says {:?}",
+                theta.len(),
+                meta.arg_shapes[1]
+            );
+            let theta_shape = meta.arg_shapes[1].clone();
+            let theta_buf = self
+                .client
+                .buffer_from_host_buffer::<f32>(theta, &theta_shape, None)?;
+            let x_buf = self
+                .buffers
+                .get(x_key)
+                .ok_or_else(|| anyhow!("no resident buffer {x_key}; call upload() first"))?;
+            let key = format!("{profile}/task_gram");
+            let exe = self.cache.get(&key).expect("prepared above");
+            let result = exe
+                .execute_b::<&xla::PjRtBuffer>(&[x_buf, &theta_buf])
+                .with_context(|| format!("executing {key} (resident)"))?[0][0]
+                .to_literal_sync()?;
+            let out = result.to_tuple1()?;
+            Ok(out.to_vec::<f32>()?)
+        }
 
-    /// Loss over stacked partitions (eq. 47); returns the scalar.
-    pub fn loss(
-        &mut self,
-        profile: &str,
-        x_parts: &[f32],
-        y_parts: &[f32],
-        theta: &[f32],
-    ) -> Result<f32> {
-        let v = self.execute(profile, "loss", &[x_parts, y_parts, theta])?;
-        Ok(v[0])
+        /// Master update `θ ← θ − η_eff · agg`.
+        pub fn master_update(
+            &mut self,
+            profile: &str,
+            theta: &[f32],
+            agg: &[f32],
+            eta_eff: f32,
+        ) -> Result<Vec<f32>> {
+            self.execute(profile, "master_update", &[theta, agg, &[eta_eff]])
+        }
+
+        /// Loss over stacked partitions (eq. 47); returns the scalar.
+        pub fn loss(
+            &mut self,
+            profile: &str,
+            x_parts: &[f32],
+            y_parts: &[f32],
+            theta: &[f32],
+        ) -> Result<f32> {
+            let v = self.execute(profile, "loss", &[x_parts, y_parts, theta])?;
+            Ok(v[0])
+        }
     }
 }
 
-#[cfg(test)]
+#[cfg(not(feature = "pjrt"))]
+mod backend {
+    use super::{default_artifact_dir, Manifest};
+    use std::path::Path;
+
+    use anyhow::{bail, Result};
+
+    const DISABLED: &str = "straggler-sched was built without the `pjrt` feature; \
+         rebuild with `--features pjrt` in an environment providing the xla-rs \
+         bindings, or use the CPU-oracle backend (`--oracle`)";
+
+    /// API-compatible stand-in for the PJRT runtime.  [`Runtime::new`]
+    /// always fails with an explanatory error, so no instance can exist;
+    /// the methods are present only so callers compile unchanged.
+    pub struct Runtime {
+        manifest: Manifest,
+    }
+
+    impl Runtime {
+        pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+            // validate the manifest anyway so error messages stay useful
+            let _ = Manifest::load(dir)?;
+            bail!("{DISABLED}")
+        }
+
+        pub fn from_default_dir() -> Result<Self> {
+            Self::new(default_artifact_dir())
+        }
+
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        pub fn platform_name(&self) -> String {
+            "stub (pjrt feature disabled)".into()
+        }
+
+        pub fn prepare(&mut self, _profile: &str, _entry: &str) -> Result<()> {
+            bail!("{DISABLED}")
+        }
+
+        pub fn execute(
+            &mut self,
+            _profile: &str,
+            _entry: &str,
+            _args: &[&[f32]],
+        ) -> Result<Vec<f32>> {
+            bail!("{DISABLED}")
+        }
+
+        pub fn task_gram(
+            &mut self,
+            _profile: &str,
+            _x: &[f32],
+            _theta: &[f32],
+        ) -> Result<Vec<f32>> {
+            bail!("{DISABLED}")
+        }
+
+        pub fn upload(&mut self, _key: &str, _data: &[f32], _shape: &[usize]) -> Result<()> {
+            bail!("{DISABLED}")
+        }
+
+        pub fn has_buffer(&self, _key: &str) -> bool {
+            false
+        }
+
+        pub fn task_gram_resident(
+            &mut self,
+            _profile: &str,
+            _x_key: &str,
+            _theta: &[f32],
+        ) -> Result<Vec<f32>> {
+            bail!("{DISABLED}")
+        }
+
+        pub fn master_update(
+            &mut self,
+            _profile: &str,
+            _theta: &[f32],
+            _agg: &[f32],
+            _eta_eff: f32,
+        ) -> Result<Vec<f32>> {
+            bail!("{DISABLED}")
+        }
+
+        pub fn loss(
+            &mut self,
+            _profile: &str,
+            _x_parts: &[f32],
+            _y_parts: &[f32],
+            _theta: &[f32],
+        ) -> Result<f32> {
+            bail!("{DISABLED}")
+        }
+    }
+}
+
+pub use backend::Runtime;
+
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     //! These compile-and-run the real AOT artifacts; they are skipped
     //! (not failed) when `artifacts/` hasn't been built so that pure
@@ -279,5 +390,27 @@ mod tests {
             .execute("quickstart", "task_gram", &[&[0.0f32; 3], &[0.0f32; 3]])
             .unwrap_err();
         assert!(err.to_string().contains("elements"), "{err}");
+    }
+
+}
+
+#[cfg(all(test, not(feature = "pjrt")))]
+mod stub_tests {
+    use super::*;
+
+    #[test]
+    fn stub_runtime_fails_with_actionable_error() {
+        let dir = default_artifact_dir();
+        let err = match Runtime::new(&dir) {
+            Err(e) => e,
+            Ok(_) => panic!("stub Runtime must never construct"),
+        };
+        let msg = err.to_string();
+        // either the manifest is missing (no artifacts built) or the
+        // feature gate fires; both must point the user somewhere useful
+        assert!(
+            msg.contains("pjrt") || msg.contains("make artifacts"),
+            "unhelpful error: {msg}"
+        );
     }
 }

@@ -16,9 +16,9 @@
 //! headroom CS/SS leave on the table (answer in EXPERIMENTS.md: little —
 //! supporting the paper's design).
 
-use crate::delay::{DelayModel, DelaySample};
+use crate::delay::DelayModel;
 use crate::scheduler::{CyclicScheduler, Scheduler, ToMatrix};
-use crate::sim::completion_time_fast;
+use crate::sim::{completion_from_arrivals, slot_arrivals_batch, FlatTasks};
 use crate::util::rng::Rng;
 
 /// Configuration of the local search.
@@ -53,13 +53,58 @@ pub struct SearchOutcome {
     pub evaluations: usize,
 }
 
-/// Score a TO matrix on fixed realizations.
-fn score(to: &ToMatrix, crn: &[DelaySample], k: usize, scratch: &mut Vec<f64>) -> f64 {
-    let mut total = 0.0;
-    for s in crn {
-        total += completion_time_fast(to, s, k, scratch);
+/// CRN scorer: the common random numbers live as **one** [`DelayBatch`]
+/// whose slot-arrival times are precomputed a single time — candidate
+/// TO matrices only change the slot→task mapping, never the arrivals,
+/// so each of the search's hundreds of evaluations is a flat min-reduce
+/// + selection over the cached arrival array instead of a fresh pass
+/// over the delays.
+struct CrnScorer {
+    rounds: usize,
+    stride: usize,
+    k: usize,
+    arrivals: Vec<f64>,
+    flat: FlatTasks,
+    task_times: Vec<f64>,
+}
+
+impl CrnScorer {
+    fn new(
+        model: &dyn DelayModel,
+        n: usize,
+        r: usize,
+        k: usize,
+        rounds: usize,
+        rng: &mut Rng,
+    ) -> Self {
+        let batch = model.sample_batch(rounds, n, r, rng);
+        let mut arrivals = Vec::new();
+        slot_arrivals_batch(&batch, &mut arrivals);
+        Self {
+            rounds,
+            stride: n * r,
+            k,
+            arrivals,
+            flat: FlatTasks::new(&ToMatrix::new(n, vec![(0..r).collect(); n])),
+            task_times: Vec::with_capacity(n),
+        }
     }
-    total / crn.len() as f64
+
+    /// CRN-estimated `t̄` of one candidate (bit-identical to scoring it
+    /// with `completion_time_fast` over the same realizations).
+    fn score(&mut self, to: &ToMatrix) -> f64 {
+        self.flat.refill(to);
+        let mut total = 0.0;
+        for b in 0..self.rounds {
+            total += completion_from_arrivals(
+                &self.flat,
+                &self.arrivals[b * self.stride..(b + 1) * self.stride],
+                self.k,
+                &mut self.task_times,
+            );
+        }
+        total / self.rounds as f64
+    }
 }
 
 /// Run the local search for `(n, r, k)` under `model`.
@@ -72,15 +117,13 @@ pub fn search(
 ) -> SearchOutcome {
     assert!(k >= 1 && k <= n);
     let mut rng = Rng::seed_from_u64(cfg.seed);
-    // common random numbers
-    let crn: Vec<DelaySample> = (0..cfg.crn_rounds)
-        .map(|_| model.sample(n, r, &mut rng))
-        .collect();
-    let mut scratch: Vec<f64> = Vec::with_capacity(n);
+    // common random numbers, sampled once as a batch (same RNG stream
+    // as the old per-round sampling) and reduced to arrivals once
+    let mut scorer = CrnScorer::new(model, n, r, k, cfg.crn_rounds, &mut rng);
     let mut evaluations = 0usize;
 
     let cs = CyclicScheduler.schedule(n, r, &mut rng);
-    let cs_score = score(&cs, &crn, k, &mut scratch);
+    let cs_score = scorer.score(&cs);
     evaluations += 1;
 
     let mut best_rows = cs.rows().to_vec();
@@ -104,7 +147,7 @@ pub fn search(
             rng.shuffle(&mut rows);
             rows
         };
-        let mut cur = score(&ToMatrix::new(n, rows.clone()), &crn, k, &mut scratch);
+        let mut cur = scorer.score(&ToMatrix::new(n, rows.clone()));
         evaluations += 1;
 
         for _sweep in 0..cfg.max_sweeps {
@@ -114,7 +157,7 @@ pub fn search(
                 for a in 0..r {
                     for b in a + 1..r {
                         rows[i].swap(a, b);
-                        let cand = score(&ToMatrix::new(n, rows.clone()), &crn, k, &mut scratch);
+                        let cand = scorer.score(&ToMatrix::new(n, rows.clone()));
                         evaluations += 1;
                         if cand + 1e-12 < cur {
                             cur = cand;
@@ -153,7 +196,7 @@ pub fn search(
                             continue;
                         }
                         rows[i][slot] = t;
-                        let cand = score(&ToMatrix::new(n, rows.clone()), &crn, k, &mut scratch);
+                        let cand = scorer.score(&ToMatrix::new(n, rows.clone()));
                         evaluations += 1;
                         if cand + 1e-12 < cur {
                             cur = cand;

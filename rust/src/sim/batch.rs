@@ -1,0 +1,275 @@
+//! Batched structure-of-arrays completion kernels — the inner loops of
+//! the batched Monte-Carlo engine.
+//!
+//! The scalar hot path ([`super::completion_time_fast`]) recomputes the
+//! per-slot arrival times `Σ_{m≤j} comp(i,m) + comm(i,j)` (eq. 1) for
+//! **every scheme** it evaluates, and chases `Vec<Vec<usize>>` rows of
+//! the TO matrix in its inner loop.  The batched kernels here fix both:
+//!
+//! * [`slot_arrivals_batch`] computes the arrival times of **all**
+//!   `B × n × r` slots of a [`DelayBatch`] once — arrivals depend only
+//!   on the delays, not on the schedule, so every coupled scheme (and
+//!   the §V lower bound) reuses the same array without re-reading the
+//!   delay stream;
+//! * [`FlatTasks`] hoists a TO matrix's row indices into one contiguous
+//!   `n·r` array once per batch, turning the per-round task lookup into
+//!   a linear walk of a flat slice;
+//! * [`completion_from_arrivals`] is the per-round min-reduce + k-th
+//!   order-statistic selection over one precomputed arrival slice.
+//!
+//! **Bit-identity contract** (tested in `rust/tests/batch_engine.rs`):
+//! for any TO matrix, delays and `k`, [`completion_times_batch`]
+//! produces exactly the bits of [`super::completion_time_fast`] on the
+//! per-round samples — same prefix-sum order, same min comparisons,
+//! same `select_nth_unstable_by` — so the batched engine reproduces the
+//! scalar engine's estimates exactly.
+
+use crate::delay::DelayBatch;
+use crate::scheduler::ToMatrix;
+
+/// A TO matrix's row indices flattened into one contiguous array:
+/// slot `(i, j)` at `i·r + j`.  Built once per batch (or per search)
+/// so the completion kernel never touches the nested `Vec`s.
+#[derive(Debug, Clone)]
+pub struct FlatTasks {
+    n: usize,
+    r: usize,
+    tasks: Vec<usize>,
+}
+
+impl FlatTasks {
+    pub fn new(to: &ToMatrix) -> Self {
+        let (n, r) = (to.n(), to.r());
+        let mut tasks = Vec::with_capacity(n * r);
+        for i in 0..n {
+            tasks.extend_from_slice(to.row(i));
+        }
+        Self { n, r, tasks }
+    }
+
+    /// Rebuild in place from a (possibly different) matrix of the same
+    /// shape — the local-search hot path mutates candidates per move.
+    pub fn refill(&mut self, to: &ToMatrix) {
+        assert_eq!(to.n(), self.n, "shape change requires FlatTasks::new");
+        assert_eq!(to.r(), self.r, "shape change requires FlatTasks::new");
+        self.tasks.clear();
+        for i in 0..self.n {
+            self.tasks.extend_from_slice(to.row(i));
+        }
+    }
+
+    /// Refill a reusable scratch slot in place (creating it on first
+    /// use) — the per-draw pattern of the randomized-scheme hot loops,
+    /// which would otherwise allocate a fresh `FlatTasks` every round.
+    pub fn refill_or_init<'a>(slot: &'a mut Option<FlatTasks>, to: &ToMatrix) -> &'a FlatTasks {
+        if let Some(flat) = slot.as_mut() {
+            flat.refill(to);
+        } else {
+            *slot = Some(FlatTasks::new(to));
+        }
+        slot.as_ref().expect("filled above")
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn r(&self) -> usize {
+        self.r
+    }
+
+    #[inline]
+    pub fn tasks(&self) -> &[usize] {
+        &self.tasks
+    }
+}
+
+/// Arrival time of every slot of every round of `batch`, written as one
+/// flat round-major array (`out[b·n·r + i·r + j]`).  Identical
+/// arithmetic to the scalar path: running prefix over a worker's
+/// computation delays plus that slot's communication delay.
+pub fn slot_arrivals_batch(batch: &DelayBatch, out: &mut Vec<f64>) {
+    let (n, r) = (batch.n, batch.r);
+    let stride = batch.stride();
+    // every element is unconditionally written below, so only touch the
+    // length when it changes — no per-chunk zero-fill on the hot path
+    if out.len() != batch.rounds * stride {
+        out.clear();
+        out.resize(batch.rounds * stride, 0.0);
+    }
+    for b in 0..batch.rounds {
+        let comp = batch.comp_round(b);
+        let comm = batch.comm_round(b);
+        let dst = &mut out[b * stride..(b + 1) * stride];
+        for i in 0..n {
+            let base = i * r;
+            let mut prefix = 0.0;
+            for j in 0..r {
+                prefix += comp[base + j];
+                dst[base + j] = prefix + comm[base + j];
+            }
+        }
+    }
+}
+
+/// Completion time of one round from its precomputed arrival slice
+/// (`n·r` values): per-task first arrival (min-reduce over the flat
+/// task indices), then the k-th order statistic.
+///
+/// Bit-identical to [`super::completion_time_fast`] on the same round.
+#[inline]
+pub fn completion_from_arrivals(
+    tasks: &FlatTasks,
+    arrivals: &[f64],
+    k: usize,
+    task_times: &mut Vec<f64>,
+) -> f64 {
+    let n = tasks.n;
+    debug_assert_eq!(arrivals.len(), tasks.tasks.len());
+    assert!(k >= 1 && k <= n, "computation target must satisfy 1 ≤ k ≤ n");
+    task_times.clear();
+    task_times.resize(n, f64::INFINITY);
+    for (slot, &task) in tasks.tasks.iter().enumerate() {
+        let arrival = arrivals[slot];
+        if arrival < task_times[task] {
+            task_times[task] = arrival;
+        }
+    }
+    let (_, kth, _) = task_times.select_nth_unstable_by(k - 1, |a, b| a.total_cmp(b));
+    let t = *kth;
+    assert!(
+        t.is_finite(),
+        "TO matrix covers fewer than k = {k} distinct tasks"
+    );
+    t
+}
+
+/// k-th smallest slot arrival of one round from its precomputed arrival
+/// slice — the §V lower bound (`t̂_{T,(k)}`), sharing the arrival array
+/// with the uncoded schemes instead of re-deriving it from the delays.
+///
+/// Bit-identical to [`crate::lb::kth_slot_arrival`] on the same round.
+#[inline]
+pub fn kth_arrival_from_arrivals(arrivals: &[f64], k: usize, scratch: &mut Vec<f64>) -> f64 {
+    assert!(k >= 1 && k <= arrivals.len(), "need 1 ≤ k ≤ n·r slots");
+    scratch.clear();
+    scratch.extend_from_slice(arrivals);
+    let (_, kth, _) = scratch.select_nth_unstable_by(k - 1, |a, b| a.total_cmp(b));
+    *kth
+}
+
+/// Completion times of every round of `batch` for one TO matrix —
+/// the public one-scheme batched kernel.  For coupled multi-scheme
+/// evaluation, precompute [`slot_arrivals_batch`] once and call
+/// [`completion_from_arrivals`] per scheme instead (what the
+/// Monte-Carlo engine does).
+pub fn completion_times_batch(to: &ToMatrix, batch: &DelayBatch, k: usize, out: &mut Vec<f64>) {
+    assert_eq!(batch.n, to.n(), "delay batch shaped for different n");
+    assert_eq!(batch.r, to.r(), "delay batch shaped for different r");
+    let tasks = FlatTasks::new(to);
+    let stride = batch.stride();
+    let mut arrivals = Vec::new();
+    slot_arrivals_batch(batch, &mut arrivals);
+    let mut task_times: Vec<f64> = Vec::with_capacity(to.n());
+    out.clear();
+    out.reserve(batch.rounds);
+    for b in 0..batch.rounds {
+        out.push(completion_from_arrivals(
+            &tasks,
+            &arrivals[b * stride..(b + 1) * stride],
+            k,
+            &mut task_times,
+        ));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::delay::{DelayModel, TruncatedGaussianModel};
+    use crate::scheduler::{CyclicScheduler, Scheduler, StaircaseScheduler};
+    use crate::sim::completion_time_fast;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn flat_tasks_mirror_matrix_rows() {
+        let mut rng = Rng::seed_from_u64(1);
+        let to = CyclicScheduler.schedule(5, 3, &mut rng);
+        let flat = FlatTasks::new(&to);
+        assert_eq!(flat.n(), 5);
+        assert_eq!(flat.r(), 3);
+        for i in 0..5 {
+            for j in 0..3 {
+                assert_eq!(flat.tasks()[i * 3 + j], to.task(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn batch_kernel_bit_identical_to_scalar_fast_path() {
+        let (n, r) = (8usize, 5usize);
+        let model = TruncatedGaussianModel::scenario2(n, 3);
+        let mut rng = Rng::seed_from_u64(77);
+        let batch = model.sample_batch(32, n, r, &mut rng);
+        for sched in [
+            &CyclicScheduler as &dyn Scheduler,
+            &StaircaseScheduler,
+        ] {
+            let mut rng2 = Rng::seed_from_u64(0);
+            let to = sched.schedule(n, r, &mut rng2);
+            for k in [1usize, 3, n] {
+                let mut batched = Vec::new();
+                completion_times_batch(&to, &batch, k, &mut batched);
+                let mut scratch: Vec<f64> = Vec::new();
+                for b in 0..batch.rounds {
+                    let sample = batch.round_sample(b);
+                    let scalar = completion_time_fast(&to, &sample, k, &mut scratch);
+                    assert_eq!(
+                        batched[b].to_bits(),
+                        scalar.to_bits(),
+                        "{} k={k} round {b}",
+                        sched.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kth_arrival_matches_lb_kernel() {
+        let (n, r) = (6usize, 4usize);
+        let model = TruncatedGaussianModel::scenario1(n);
+        let mut rng = Rng::seed_from_u64(5);
+        let batch = model.sample_batch(16, n, r, &mut rng);
+        let mut arrivals = Vec::new();
+        slot_arrivals_batch(&batch, &mut arrivals);
+        let stride = batch.stride();
+        let mut scratch = Vec::new();
+        let mut lb_scratch = Vec::new();
+        for b in 0..batch.rounds {
+            let sample = batch.round_sample(b);
+            for k in [1usize, n, n * r] {
+                let batched = kth_arrival_from_arrivals(
+                    &arrivals[b * stride..(b + 1) * stride],
+                    k,
+                    &mut scratch,
+                );
+                let scalar = crate::lb::kth_slot_arrival(&sample, k, &mut lb_scratch);
+                assert_eq!(batched.to_bits(), scalar.to_bits(), "k={k} round {b}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "fewer than k")]
+    fn uncoverable_target_panics() {
+        let to = ToMatrix::new(2, vec![vec![0, 0], vec![0, 0]]);
+        let mut batch = DelayBatch::zeros(1, 2, 2);
+        batch.comp_flat_mut().fill(1.0);
+        batch.comm_flat_mut().fill(1.0);
+        let mut out = Vec::new();
+        completion_times_batch(&to, &batch, 2, &mut out);
+    }
+}

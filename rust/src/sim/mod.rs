@@ -12,10 +12,25 @@
 //! errors, and supports *coupled* evaluation of several schemes on the
 //! identical delay stream (variance-reduced comparisons, and the
 //! stochastic-dominance property tests).
+//!
+//! [`batch`] holds the structure-of-arrays kernels the estimator runs
+//! on (shared per-batch arrival pass, flat TO-row completion reduce),
+//! and [`pool`] the persistent worker pool the shards execute on; both
+//! are public so the scheduler search, the lower bound and the figure
+//! harness drive the same hot loops.
 
+pub mod batch;
 pub mod montecarlo;
+pub mod pool;
 
-pub use montecarlo::{CompletionEstimate, MonteCarlo};
+pub use batch::{
+    completion_from_arrivals, completion_times_batch, kth_arrival_from_arrivals,
+    slot_arrivals_batch, FlatTasks,
+};
+pub use montecarlo::{
+    shard_layout, shard_rngs, CompletionEstimate, Engine, MonteCarlo, BATCH_ROUNDS,
+};
+pub use pool::WorkerPool;
 
 use crate::delay::DelaySample;
 use crate::scheduler::ToMatrix;

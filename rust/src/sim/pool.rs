@@ -1,0 +1,250 @@
+//! Persistent worker pool for Monte-Carlo sharding.
+//!
+//! The scalar engine spawned fresh OS threads (`thread::scope`) for
+//! **every** `estimate`/`estimate_coupled` call; a figure sweep makes
+//! hundreds of such calls, so thread creation and teardown sat on the
+//! hot path.  This pool spawns `available_parallelism` threads once per
+//! process ([`WorkerPool::global`]) and feeds them shard closures over a
+//! channel; sweeps reuse the same threads for every point.
+//!
+//! Determinism: results are returned **indexed by shard**, so the
+//! caller's output order never depends on which worker thread ran which
+//! shard or in what order shards finished.  Seeding stays a pure
+//! function of `(seed, shard)` (see `montecarlo::shard_rngs`), so the
+//! estimates are identical to the old per-call-spawn engine.
+//!
+//! Safety: [`WorkerPool::scope_run`] erases the closure lifetimes to
+//! queue borrowed work on `'static` threads (the standard scoped-pool
+//! construction).  Soundness rests on the completion barrier: the call
+//! does not return until every queued job has finished (or panicked —
+//! panics are caught per job and re-raised in the caller), so borrowed
+//! data outlives every access.
+
+use std::cell::Cell;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Mutex, OnceLock};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+thread_local! {
+    /// True on pool worker threads — lets [`WorkerPool::scope_run`]
+    /// detect re-entrant use (a job that itself fans out on the pool)
+    /// and fall back to inline execution instead of deadlocking: with
+    /// every worker blocked in a nested `scope_run`, no thread would
+    /// remain to drain the nested jobs.
+    static IS_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// A fixed set of worker threads consuming jobs from a shared queue.
+pub struct WorkerPool {
+    sender: Sender<Job>,
+    size: usize,
+}
+
+impl WorkerPool {
+    /// Spawn a pool with `size` threads (clamped to ≥ 1).
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let (sender, receiver) = channel::<Job>();
+        let receiver = std::sync::Arc::new(Mutex::new(receiver));
+        for idx in 0..size {
+            let receiver = std::sync::Arc::clone(&receiver);
+            thread::Builder::new()
+                .name(format!("mc-pool-{idx}"))
+                .spawn(move || worker_loop(&receiver))
+                .expect("spawning Monte-Carlo pool thread");
+        }
+        Self { sender, size }
+    }
+
+    /// The process-wide pool, created on first use with
+    /// `available_parallelism` threads.  All Monte-Carlo engines share
+    /// it, which also acts as the global concurrency clamp: an engine
+    /// may be configured with more *shards* than the machine has cores
+    /// (shard count controls RNG streams, hence reproducibility), but
+    /// at most `size()` of them ever run at once.
+    pub fn global() -> &'static WorkerPool {
+        static POOL: OnceLock<WorkerPool> = OnceLock::new();
+        POOL.get_or_init(|| {
+            WorkerPool::new(
+                thread::available_parallelism()
+                    .map(|p| p.get())
+                    .unwrap_or(1),
+            )
+        })
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Run `jobs` on the pool and return their results **in job order**,
+    /// blocking until all complete.  A panicking job does not kill the
+    /// pool; the panic is re-raised here after every other job has
+    /// drained, so borrowed data is never freed under a running job.
+    ///
+    /// Re-entrant calls (a job fanning out on the pool it runs on) are
+    /// detected and executed inline on the calling thread — results and
+    /// determinism are unchanged, only the extra parallelism is lost.
+    pub fn scope_run<'scope, R, F>(&self, jobs: Vec<F>) -> Vec<R>
+    where
+        R: Send + 'scope,
+        F: FnOnce() -> R + Send + 'scope,
+    {
+        if IS_POOL_WORKER.with(Cell::get) {
+            // nested use: every worker may already be occupied by an
+            // outer job, so queueing would deadlock — run inline
+            return jobs.into_iter().map(|job| job()).collect();
+        }
+        let n_jobs = jobs.len();
+        let (tx, rx) = channel::<(usize, thread::Result<R>)>();
+        for (idx, job) in jobs.into_iter().enumerate() {
+            let tx = tx.clone();
+            let boxed: Box<dyn FnOnce() + Send + 'scope> = Box::new(move || {
+                let result = catch_unwind(AssertUnwindSafe(job));
+                // receiver alive until all results collected; a send
+                // failure is unreachable while the barrier below holds
+                let _ = tx.send((idx, result));
+            });
+            // SAFETY: the job only borrows data live for 'scope, and the
+            // barrier below blocks until every job has signalled
+            // completion, so no borrow escapes this call.  Box<dyn
+            // FnOnce> has the same layout regardless of its lifetime
+            // bound.
+            let boxed: Job = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + 'scope>, Job>(boxed)
+            };
+            self.sender.send(boxed).expect("worker pool shut down");
+        }
+        drop(tx);
+
+        let mut results: Vec<Option<thread::Result<R>>> = Vec::new();
+        results.resize_with(n_jobs, || None);
+        for _ in 0..n_jobs {
+            let (idx, result) = rx
+                .recv()
+                .expect("pool worker vanished with jobs in flight");
+            results[idx] = Some(result);
+        }
+        // completion barrier passed: every job has run to completion
+        results
+            .into_iter()
+            .map(|slot| match slot.expect("every index filled") {
+                Ok(value) => value,
+                Err(panic) => resume_unwind(panic),
+            })
+            .collect()
+    }
+}
+
+fn worker_loop(receiver: &Mutex<Receiver<Job>>) {
+    IS_POOL_WORKER.with(|flag| flag.set(true));
+    loop {
+        // hold the lock only while dequeuing so workers drain in parallel
+        let job = match receiver.lock() {
+            Ok(guard) => guard.recv(),
+            Err(_) => return,
+        };
+        match job {
+            Ok(job) => job(),
+            Err(_) => return, // pool dropped
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn results_come_back_in_job_order() {
+        let pool = WorkerPool::new(4);
+        let jobs: Vec<_> = (0..64)
+            .map(|i| {
+                move || {
+                    // stagger so completion order differs from job order
+                    if i % 7 == 0 {
+                        std::thread::sleep(std::time::Duration::from_millis(2));
+                    }
+                    i * i
+                }
+            })
+            .collect();
+        let out = pool.scope_run(jobs);
+        assert_eq!(out, (0..64).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn jobs_can_borrow_stack_data() {
+        let pool = WorkerPool::new(3);
+        let data: Vec<u64> = (0..1000).collect();
+        let chunks: Vec<&[u64]> = data.chunks(100).collect();
+        let jobs: Vec<_> = chunks
+            .iter()
+            .map(|chunk| move || chunk.iter().sum::<u64>())
+            .collect();
+        let sums = pool.scope_run(jobs);
+        assert_eq!(sums.iter().sum::<u64>(), data.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn pool_survives_a_panicking_job() {
+        let pool = WorkerPool::new(2);
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> = vec![
+                Box::new(|| 1),
+                Box::new(|| panic!("job boom")),
+                Box::new(|| 3),
+            ];
+            pool.scope_run(jobs)
+        }));
+        assert!(caught.is_err(), "panic must propagate to the caller");
+        // the pool must still work afterwards
+        let out = pool.scope_run(vec![
+            (|| 5usize) as fn() -> usize,
+            (|| 6usize) as fn() -> usize,
+        ]);
+        assert_eq!(out, vec![5, 6]);
+    }
+
+    #[test]
+    fn nested_scope_run_executes_inline_instead_of_deadlocking() {
+        // size-1 pool: a single level of nesting would deadlock without
+        // the re-entrancy fallback
+        let pool = WorkerPool::new(1);
+        let outer: Vec<_> = (0..3)
+            .map(|i| {
+                let pool = &pool;
+                move || {
+                    let inner = pool.scope_run(vec![
+                        Box::new(move || i * 10) as Box<dyn FnOnce() -> usize + Send>,
+                        Box::new(move || i * 10 + 1),
+                    ]);
+                    inner.iter().sum::<usize>()
+                }
+            })
+            .collect();
+        let sums = pool.scope_run(outer);
+        assert_eq!(sums, vec![1, 21, 41]);
+    }
+
+    #[test]
+    fn global_pool_is_shared_and_reused() {
+        let a = WorkerPool::global() as *const _;
+        let b = WorkerPool::global() as *const _;
+        assert_eq!(a, b);
+        let counter = AtomicUsize::new(0);
+        let jobs: Vec<_> = (0..10)
+            .map(|_| {
+                let c = &counter;
+                move || c.fetch_add(1, Ordering::SeqCst)
+            })
+            .collect();
+        WorkerPool::global().scope_run(jobs);
+        assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+}

@@ -66,7 +66,8 @@ pub fn bench_with_budget<F: FnMut()>(name: &str, budget: Duration, f: &mut F) ->
     let t0 = Instant::now();
     f();
     let single = t0.elapsed().max(Duration::from_nanos(20));
-    let batch = ((budget.as_secs_f64() / 30.0 / single.as_secs_f64()).ceil() as u64).clamp(1, 1 << 22);
+    let batch =
+        ((budget.as_secs_f64() / 30.0 / single.as_secs_f64()).ceil() as u64).clamp(1, 1 << 22);
 
     // warmup one batch
     for _ in 0..batch.min(1000) {
@@ -110,6 +111,38 @@ pub fn group(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// Write a machine-readable JSON report of bench results (the
+/// `BENCH_<target>.json` files EXPERIMENTS.md §Perf tracks across PRs).
+///
+/// Schema: `{ "target": ..., "benchmarks": [ { name, mean_ns, std_ns,
+/// min_ns, iters, per_second }, ... ] }` — key order fixed so reports
+/// diff cleanly between optimization iterations.
+pub fn write_json_report(
+    path: impl AsRef<std::path::Path>,
+    target: &str,
+    results: &[BenchResult],
+) -> std::io::Result<()> {
+    use crate::util::json::Json;
+    let benchmarks: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            Json::Obj(vec![
+                ("name".into(), Json::Str(r.name.clone())),
+                ("mean_ns".into(), Json::Num(r.mean_ns)),
+                ("std_ns".into(), Json::Num(r.std_ns)),
+                ("min_ns".into(), Json::Num(r.min_ns)),
+                ("iters".into(), Json::Num(r.iters as f64)),
+                ("per_second".into(), Json::Num(r.per_second())),
+            ])
+        })
+        .collect();
+    let root = Json::Obj(vec![
+        ("target".into(), Json::Str(target.to_string())),
+        ("benchmarks".into(), Json::Arr(benchmarks)),
+    ]);
+    std::fs::write(path, root.to_string_pretty())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -129,6 +162,30 @@ mod tests {
         assert!(r.mean_ns > 45_000.0, "mean {}", r.mean_ns);
         assert!(r.mean_ns < 250_000.0, "mean {}", r.mean_ns);
         assert!(r.iters >= 5);
+    }
+
+    #[test]
+    fn json_report_roundtrips() {
+        use crate::util::json::Json;
+        let r = BenchResult {
+            name: "kernel/x".into(),
+            mean_ns: 120.5,
+            std_ns: 3.0,
+            min_ns: 110.0,
+            iters: 5000,
+        };
+        let path = std::env::temp_dir().join(format!("benchkit-test-{}.json", std::process::id()));
+        write_json_report(&path, "hot_paths", &[r]).unwrap();
+        let parsed = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(parsed.get("target").unwrap().as_str().unwrap(), "hot_paths");
+        let benches = match parsed.get("benchmarks") {
+            Some(Json::Arr(a)) => a,
+            other => panic!("benchmarks not an array: {other:?}"),
+        };
+        assert_eq!(benches.len(), 1);
+        assert_eq!(benches[0].get("name").unwrap().as_str().unwrap(), "kernel/x");
+        assert_eq!(benches[0].get("mean_ns").unwrap().as_f64().unwrap(), 120.5);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -100,6 +100,238 @@ impl RunningStats {
     }
 }
 
+/// Streaming quantile estimator with a deterministic, mergeable state —
+/// the memory-O(1) replacement for the Monte-Carlo engine's old
+/// buffer-everything-then-sort quantiles.
+///
+/// Strategy (the "fixed-grid" estimator of EXPERIMENTS.md §Perf):
+///
+/// * up to [`StreamingQuantiles::EXACT_CAP`] observations are buffered
+///   and quantiles are **exact** (sort + type-7 interpolation — covers
+///   every small/medium experiment bit-for-bit);
+/// * past the cap the buffer collapses into a fixed grid of
+///   [`StreamingQuantiles::GRID_BINS`] bins spanning the range observed
+///   *so far* plus 25 % margin; further values cost O(1) and quantiles
+///   interpolate within a bin, so for quantiles that fall inside the
+///   grid span the absolute error is around one bin width
+///   (tolerance-tested in `rust/tests/batch_engine.rs`).  Values beyond
+///   the frozen span clamp into the edge bins, so extreme quantiles of
+///   heavy-tailed streams (far outside the first
+///   [`StreamingQuantiles::EXACT_CAP`] observations' range) degrade to
+///   "edge bin, clamped to the true observed min/max" — fine for the
+///   engine's p50/p95 on unimodal completion times, not a
+///   general-purpose tail estimator.
+///
+/// Merging (used for per-shard → global reduction) is deterministic for
+/// a fixed merge order, which the engine guarantees by always folding
+/// shards in shard-index order.
+#[derive(Debug, Clone)]
+pub struct StreamingQuantiles {
+    count: u64,
+    min: f64,
+    max: f64,
+    mode: QuantileMode,
+}
+
+#[derive(Debug, Clone)]
+enum QuantileMode {
+    Exact(Vec<f64>),
+    Grid {
+        lo: f64,
+        width: f64,
+        bins: Vec<u64>,
+    },
+}
+
+impl Default for StreamingQuantiles {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl StreamingQuantiles {
+    /// Observations kept exactly before degrading to the grid.
+    pub const EXACT_CAP: usize = 4096;
+    /// Grid resolution after degradation.
+    pub const GRID_BINS: usize = 2048;
+
+    pub fn new() -> Self {
+        Self {
+            count: 0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            mode: QuantileMode::Exact(Vec::new()),
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// True while quantiles are still exact order statistics.
+    pub fn is_exact(&self) -> bool {
+        matches!(self.mode, QuantileMode::Exact(_))
+    }
+
+    /// Fold one observation in.
+    pub fn push(&mut self, x: f64) {
+        self.count += 1;
+        if x < self.min {
+            self.min = x;
+        }
+        if x > self.max {
+            self.max = x;
+        }
+        match &mut self.mode {
+            QuantileMode::Exact(buf) => {
+                buf.push(x);
+                if buf.len() > Self::EXACT_CAP {
+                    self.degrade_to_grid();
+                }
+            }
+            QuantileMode::Grid { lo, width, bins } => {
+                let idx = grid_index(x, *lo, *width, bins.len());
+                bins[idx] += 1;
+            }
+        }
+    }
+
+    /// Collapse the exact buffer into the fixed grid.
+    fn degrade_to_grid(&mut self) {
+        let buf = match &self.mode {
+            QuantileMode::Exact(buf) => buf.clone(),
+            QuantileMode::Grid { .. } => return,
+        };
+        // a degenerate (constant) stream still needs a nonzero bin
+        // width; scale the floor to the data so it never underflows
+        let mut span = self.max - self.min;
+        if !(span > 0.0) {
+            span = self.max.abs().max(1.0) * 1e-9;
+        }
+        let lo = self.min - 0.25 * span;
+        let width = 1.5 * span / Self::GRID_BINS as f64;
+        let mut bins = vec![0u64; Self::GRID_BINS];
+        for &v in &buf {
+            bins[grid_index(v, lo, width, Self::GRID_BINS)] += 1;
+        }
+        self.mode = QuantileMode::Grid { lo, width, bins };
+    }
+
+    /// Estimated `q`-quantile (`q ∈ [0, 1]`); exact while in buffer
+    /// mode, about one grid-bin width of error afterwards for
+    /// quantiles inside the grid span (see the type docs for the
+    /// heavy-tail caveat), always clamped to the true observed
+    /// `[min, max]`.
+    pub fn quantile(&self, q: f64) -> f64 {
+        assert!(self.count > 0, "quantile of empty estimator");
+        assert!((0.0..=1.0).contains(&q), "quantile level must be in [0,1]");
+        match &self.mode {
+            QuantileMode::Exact(buf) => {
+                let mut sorted = buf.clone();
+                sorted.sort_unstable_by(f64::total_cmp);
+                quantile_sorted(&sorted, q)
+            }
+            QuantileMode::Grid { lo, width, bins } => {
+                let target = q * (self.count - 1) as f64;
+                let mut before = 0u64;
+                for (i, &c) in bins.iter().enumerate() {
+                    if c == 0 {
+                        continue;
+                    }
+                    let last_rank = (before + c - 1) as f64;
+                    if target <= last_rank {
+                        // interpolate at mid-offsets within the bin
+                        let p = (target - before as f64 + 0.5) / c as f64;
+                        let v = lo + (i as f64 + p) * width;
+                        return v.clamp(self.min, self.max);
+                    }
+                    before += c;
+                }
+                self.max
+            }
+        }
+    }
+
+    /// Several quantiles at once — in exact mode the buffer is cloned
+    /// and sorted a single time instead of once per level (the
+    /// `CompletionEstimate` path asks for p50 and p95 together).
+    /// Bit-identical to calling [`StreamingQuantiles::quantile`] per
+    /// level.
+    pub fn quantiles(&self, levels: &[f64]) -> Vec<f64> {
+        match &self.mode {
+            QuantileMode::Exact(buf) => {
+                assert!(self.count > 0, "quantile of empty estimator");
+                let mut sorted = buf.clone();
+                sorted.sort_unstable_by(f64::total_cmp);
+                levels.iter().map(|&q| quantile_sorted(&sorted, q)).collect()
+            }
+            QuantileMode::Grid { .. } => levels.iter().map(|&q| self.quantile(q)).collect(),
+        }
+    }
+
+    /// Merge another estimator (per-shard reduction).  Deterministic
+    /// for a fixed merge order; the engine folds shards in index order.
+    pub fn merge(&mut self, other: &StreamingQuantiles) {
+        if other.count == 0 {
+            return;
+        }
+        if self.count == 0 {
+            *self = other.clone();
+            return;
+        }
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        self.count += other.count;
+        // fast path: both exact and still under the cap
+        if let (QuantileMode::Exact(a), QuantileMode::Exact(b)) = (&mut self.mode, &other.mode) {
+            if a.len() + b.len() <= Self::EXACT_CAP {
+                a.extend_from_slice(b);
+                return;
+            }
+        }
+        if self.is_exact() {
+            self.degrade_to_grid();
+        }
+        let (lo, width, bins) = match &mut self.mode {
+            QuantileMode::Grid { lo, width, bins } => (*lo, *width, bins),
+            QuantileMode::Exact(_) => unreachable!("degraded above"),
+        };
+        match &other.mode {
+            QuantileMode::Exact(buf) => {
+                for &v in buf {
+                    bins[grid_index(v, lo, width, Self::GRID_BINS)] += 1;
+                }
+            }
+            QuantileMode::Grid {
+                lo: olo,
+                width: owidth,
+                bins: obins,
+            } => {
+                // fold the other grid's mass in at its bin centers
+                for (i, &c) in obins.iter().enumerate() {
+                    if c == 0 {
+                        continue;
+                    }
+                    let center = olo + (i as f64 + 0.5) * owidth;
+                    bins[grid_index(center, lo, width, Self::GRID_BINS)] += c;
+                }
+            }
+        }
+    }
+}
+
+#[inline]
+fn grid_index(x: f64, lo: f64, width: f64, n_bins: usize) -> usize {
+    let idx = ((x - lo) / width).floor();
+    if idx < 0.0 {
+        0
+    } else if idx >= n_bins as f64 {
+        n_bins - 1
+    } else {
+        idx as usize
+    }
+}
+
 /// Linear-interpolated quantile of an **ascending-sorted** slice
 /// (type-7 / numpy default).
 pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
@@ -192,5 +424,91 @@ mod tests {
     #[should_panic(expected = "empty")]
     fn quantile_empty_panics() {
         quantile_sorted(&[], 0.5);
+    }
+
+    #[test]
+    fn streaming_quantiles_exact_below_cap() {
+        let mut sq = StreamingQuantiles::new();
+        let mut values: Vec<f64> = (0..1000).map(|i| ((i * 7919) % 1000) as f64).collect();
+        for &v in &values {
+            sq.push(v);
+        }
+        assert!(sq.is_exact());
+        values.sort_unstable_by(f64::total_cmp);
+        for q in [0.0, 0.25, 0.5, 0.95, 1.0] {
+            assert_eq!(sq.quantile(q), quantile_sorted(&values, q), "q={q}");
+        }
+    }
+
+    #[test]
+    fn streaming_quantiles_grid_within_one_bin_width() {
+        let mut sq = StreamingQuantiles::new();
+        let n: u64 = 50_000;
+        let mut values: Vec<f64> = (0..n)
+            .map(|i| {
+                // deterministic skewed positive values in (0, ~8)
+                let u = ((i.wrapping_mul(2_654_435_761) % n) as f64 + 0.5) / n as f64;
+                -(1.0 - u).ln() * 2.0
+            })
+            .collect();
+        for &v in &values {
+            sq.push(v);
+        }
+        assert!(!sq.is_exact());
+        values.sort_unstable_by(f64::total_cmp);
+        let span = values[values.len() - 1] - values[0];
+        let tol = 1.5 * span / StreamingQuantiles::GRID_BINS as f64 * 2.0;
+        for q in [0.05, 0.5, 0.95] {
+            let exact = quantile_sorted(&values, q);
+            let approx = sq.quantile(q);
+            assert!(
+                (approx - exact).abs() <= tol,
+                "q={q}: approx {approx} vs exact {exact} (tol {tol})"
+            );
+        }
+        // monotone in q and clamped to the observed range
+        assert!(sq.quantile(0.1) <= sq.quantile(0.9));
+        assert!(sq.quantile(0.0) >= values[0] && sq.quantile(1.0) <= values[values.len() - 1]);
+    }
+
+    #[test]
+    fn streaming_quantiles_merge_matches_single_stream_when_exact() {
+        let values: Vec<f64> = (0..2000).map(|i| ((i * 31) % 997) as f64).collect();
+        let mut whole = StreamingQuantiles::new();
+        values.iter().for_each(|&v| whole.push(v));
+        let mut a = StreamingQuantiles::new();
+        let mut b = StreamingQuantiles::new();
+        values[..700].iter().for_each(|&v| a.push(v));
+        values[700..].iter().for_each(|&v| b.push(v));
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        for q in [0.1, 0.5, 0.95] {
+            assert_eq!(a.quantile(q), whole.quantile(q), "q={q}");
+        }
+    }
+
+    #[test]
+    fn streaming_quantiles_merge_with_empty_and_into_empty() {
+        let mut a = StreamingQuantiles::new();
+        a.push(1.0);
+        a.push(2.0);
+        let before = a.quantile(0.5);
+        a.merge(&StreamingQuantiles::new());
+        assert_eq!(a.quantile(0.5), before);
+
+        let mut e = StreamingQuantiles::new();
+        e.merge(&a);
+        assert_eq!(e.count(), 2);
+        assert_eq!(e.quantile(0.5), before);
+    }
+
+    #[test]
+    fn streaming_quantiles_constant_stream() {
+        let mut sq = StreamingQuantiles::new();
+        for _ in 0..10_000 {
+            sq.push(3.25);
+        }
+        assert_eq!(sq.quantile(0.5), 3.25);
+        assert_eq!(sq.quantile(0.99), 3.25);
     }
 }
