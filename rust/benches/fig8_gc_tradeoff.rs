@@ -1,0 +1,30 @@
+//! Figure 8 regeneration bench: the GC(s) grouped multi-message
+//! communication–computation tradeoff (n = 12, r = n, k = n, EC2-like
+//! delays + serialized master ingestion), swept through the unified
+//! scheme layer.
+//!
+//! ```bash
+//! cargo bench --bench fig8_gc_tradeoff
+//! ```
+
+use std::time::Instant;
+
+use straggler_sched::harness::{fig8_gc, Options};
+
+fn main() -> anyhow::Result<()> {
+    let opts = Options {
+        trials: 20_000,
+        seed: 0xF16,
+        out_dir: Some("results".into()),
+        scenario: 1,
+        cluster: false,
+    };
+    let t0 = Instant::now();
+    fig8_gc(&opts)?;
+    println!(
+        "fig8: regenerated in {:.2} s ({} trials/point, 6 group sizes)",
+        t0.elapsed().as_secs_f64(),
+        opts.trials
+    );
+    Ok(())
+}

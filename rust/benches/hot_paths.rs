@@ -18,6 +18,7 @@ use straggler_sched::linalg::Mat;
 use straggler_sched::scheduler::{
     CyclicScheduler, RandomAssignment, Scheduler, StaircaseScheduler,
 };
+use straggler_sched::scheme::{RoundView, SchemeEvaluator as _, SchemeId, SchemeRegistry};
 use straggler_sched::sim::{
     completion_from_arrivals, completion_time_fast, simulate_round_with, slot_arrivals_batch,
     FlatTasks, MonteCarlo, SimScratch, BATCH_ROUNDS,
@@ -101,6 +102,66 @@ fn main() {
             }
             black_box(acc);
         }));
+    }
+
+    group("scheme layer: registry dispatch vs direct kernel (per 256-round chunk)");
+    {
+        // the acceptance bar of the PR-2 refactor: preparing evaluators
+        // once per chunk must leave ZERO per-round overhead beyond one
+        // virtual call — the completion kernel itself is unchanged
+        let mut rng = Rng::seed_from_u64(7);
+        let batch = model.sample_batch(BATCH_ROUNDS, n, r, &mut rng);
+        let mut arrivals: Vec<f64> = Vec::new();
+        slot_arrivals_batch(&batch, &mut arrivals);
+        let stride = batch.stride();
+        let cs_flat = FlatTasks::new(&to_cs);
+        let mut task_times: Vec<f64> = Vec::with_capacity(n);
+        let direct = bench("scheme/direct_cs_256rounds_k16", || {
+            let mut acc = 0.0;
+            for b in 0..BATCH_ROUNDS {
+                acc += completion_from_arrivals(
+                    &cs_flat,
+                    &arrivals[b * stride..(b + 1) * stride],
+                    16,
+                    &mut task_times,
+                );
+            }
+            black_box(acc);
+        });
+        let mut rng_sched = Rng::seed_from_u64(0);
+        let mut ev = SchemeRegistry::build(SchemeId::Cs).prepare(n, r, 16, &mut rng_sched);
+        let registry = bench("scheme/registry_cs_256rounds_k16", || {
+            let mut acc = 0.0;
+            for b in 0..BATCH_ROUNDS {
+                let view = RoundView {
+                    arrivals: &arrivals[b * stride..(b + 1) * stride],
+                    comp: batch.comp_round(b),
+                    comm: batch.comm_round(b),
+                };
+                acc += ev.completion(&view, &mut rng_sched);
+            }
+            black_box(acc);
+        });
+        println!(
+            "registry-vs-direct per-round dispatch overhead: {:+.1}% (target ~0%)",
+            100.0 * (registry.mean_ns / direct.mean_ns - 1.0)
+        );
+        let mut ev_gc = SchemeRegistry::build(SchemeId::Gc(4)).prepare(n, r, 16, &mut rng_sched);
+        let gc = bench("scheme/registry_gc4_256rounds_k16", || {
+            let mut acc = 0.0;
+            for b in 0..BATCH_ROUNDS {
+                let view = RoundView {
+                    arrivals: &arrivals[b * stride..(b + 1) * stride],
+                    comp: batch.comp_round(b),
+                    comm: batch.comm_round(b),
+                };
+                acc += ev_gc.completion(&view, &mut rng_sched);
+            }
+            black_box(acc);
+        });
+        all.push(direct);
+        all.push(registry);
+        all.push(gc);
     }
 
     group("coupled 3-scheme round (CS + SS + RA): scalar vs batched");
@@ -224,7 +285,7 @@ fn main() {
         let msg = Msg::Result {
             round: 7,
             worker_id: 3,
-            task: 11,
+            tasks: vec![11],
             comp_us: 1500,
             send_ts_us: 123_456,
             h: vec![1.25f32; 512],
@@ -271,6 +332,15 @@ fn main() {
     match write_json_report("BENCH_hot_paths.json", "hot_paths", &all) {
         Ok(()) => println!("\nwrote BENCH_hot_paths.json ({} benchmarks)", all.len()),
         Err(e) => eprintln!("\ncould not write BENCH_hot_paths.json: {e}"),
+    }
+    // cargo sets a bench binary's CWD to the package root (rust/); also
+    // refresh the committed in-tree baseline at the workspace root so
+    // the perf trajectory is tracked by git (EXPERIMENTS.md §Perf)
+    if std::path::Path::new("../Cargo.toml").exists() {
+        match write_json_report("../BENCH_hot_paths.json", "hot_paths", &all) {
+            Ok(()) => println!("refreshed workspace baseline ../BENCH_hot_paths.json"),
+            Err(e) => eprintln!("could not refresh workspace baseline: {e}"),
+        }
     }
     println!("coupled3 batched-vs-scalar speedup: {speedup:.2}× (acceptance gate ≥ 3×)");
 }

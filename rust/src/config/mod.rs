@@ -12,10 +12,17 @@
 //!   "trials": 10000,
 //!   "seed": 7,
 //!   "ingest_ms": 0.0,
-//!   "schemes": ["CS", "SS", "RA", "PC", "PCMM", "LB"],
+//!   "schemes": ["CS", "SS", "RA", "PC", "PCMM", "LB", "GC(2)"],
 //!   "model": {"kind": "ec2_like", "seed": 3, "hetero": 0.2}
 //! }
 //! ```
+//!
+//! Scheme names are parsed by [`SchemeRegistry::parse`] — the same
+//! grammar the CLI's `--schemes` flag uses, including the grouped
+//! multi-message `GC(s)` family.  A scheme inapplicable at *every*
+//! sweep point is rejected up front; one applicable at only some
+//! points (e.g. PC with mixed `ks`) renders `NaN` cells at the
+//! excluded points.
 //!
 //! Model kinds: `scenario1`, `scenario2 {seed}`, `ec2_like {seed,
 //! hetero}`, `shifted_exp {comp_shift, comp_rate, comm_shift,
@@ -27,7 +34,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::delay::{DelayModelKind, TruncatedGaussian};
 use crate::harness::{evaluate, EvalPoint};
 use crate::report::Table;
-use crate::scheduler::SchemeId;
+use crate::scheme::{SchemeId, SchemeRegistry};
 use crate::util::json::Json;
 
 /// A declarative experiment sweep.
@@ -90,18 +97,32 @@ impl Experiment {
             }
         }
         let schemes = match root.get("schemes") {
-            None => vec![
-                SchemeId::Cs,
-                SchemeId::Ss,
-                SchemeId::Ra,
-                SchemeId::Pc,
-                SchemeId::Pcmm,
-                SchemeId::Lb,
-            ],
-            Some(Json::Arr(items)) => items
-                .iter()
-                .map(|v| parse_scheme(v.as_str().unwrap_or("")))
-                .collect::<Result<Vec<_>>>()?,
+            // the default set filters silently per point — figure-sweep
+            // semantics (RA only shows up at r = n, etc.)
+            None => SchemeRegistry::default_schemes(),
+            Some(Json::Arr(items)) => {
+                let ids = items
+                    .iter()
+                    .map(|v| SchemeRegistry::parse(v.as_str().unwrap_or("")))
+                    .collect::<Result<Vec<_>>>()?;
+                // an explicitly listed scheme inapplicable at *every*
+                // sweep point is a config error, not a table of NaNs;
+                // partial applicability (e.g. PC only at the k = n
+                // points) renders NaN cells at the excluded points
+                for &s in &ids {
+                    let somewhere = rs
+                        .iter()
+                        .any(|&r| ks.iter().any(|&k| SchemeRegistry::applicable(s, n, r, k)));
+                    if !somewhere {
+                        bail!(
+                            "scheme {s} is not applicable at any (r, k) point of this \
+                             sweep — paper Table I (PC/PCMM need r ≥ 2 and k = n; RA \
+                             needs r = n; GC(s) needs s ≤ r)"
+                        );
+                    }
+                }
+                ids
+            }
             Some(_) => bail!("`schemes` must be an array of scheme names"),
         };
         Ok(Self {
@@ -118,7 +139,13 @@ impl Experiment {
                 .get("seed")
                 .map(|v| v.as_f64().unwrap_or(0.0) as u64)
                 .unwrap_or(0xF16),
-            ingest_ms: root.get("ingest_ms").and_then(Json::as_f64).unwrap_or(0.0),
+            ingest_ms: {
+                let v = root.get("ingest_ms").and_then(Json::as_f64).unwrap_or(0.0);
+                if v.is_nan() || v < 0.0 {
+                    bail!("`ingest_ms` must be a non-negative ms/message cost, got {v}");
+                }
+                v
+            },
             schemes,
             model: parse_model(
                 root.get("model")
@@ -162,18 +189,6 @@ impl Experiment {
         }
         table
     }
-}
-
-fn parse_scheme(name: &str) -> Result<SchemeId> {
-    Ok(match name.to_uppercase().as_str() {
-        "CS" => SchemeId::Cs,
-        "SS" => SchemeId::Ss,
-        "RA" => SchemeId::Ra,
-        "PC" => SchemeId::Pc,
-        "PCMM" => SchemeId::Pcmm,
-        "LB" => SchemeId::Lb,
-        other => bail!("unknown scheme {other:?}"),
-    })
 }
 
 fn parse_model(v: &Json) -> Result<DelayModelKind> {
@@ -288,6 +303,24 @@ mod tests {
     }
 
     #[test]
+    fn gc_schemes_parse_and_run_in_config() {
+        let exp = Experiment::from_json_str(
+            r#"{"n": 6, "trials": 300, "schemes": ["CS", "GC(2)", "gc3"],
+                "ingest_ms": 0.1, "model": {"kind": "scenario1"}}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            exp.schemes,
+            vec![SchemeId::Cs, SchemeId::Gc(2), SchemeId::Gc(3)]
+        );
+        let table = exp.run();
+        assert_eq!(table.headers, vec!["r", "k", "CS", "GC(2)", "GC(3)"]);
+        for cell in &table.rows[0][2..] {
+            assert!(cell.parse::<f64>().unwrap() > 0.0);
+        }
+    }
+
+    #[test]
     fn rejects_bad_configs() {
         for bad in [
             r#"{"rs": [2], "model": {"kind": "scenario1"}}"#, // no n
@@ -296,6 +329,12 @@ mod tests {
             r#"{"n": 4}"#,                                    // no model
             r#"{"n": 4, "model": {"kind": "wat"}}"#,          // bad kind
             r#"{"n": 4, "schemes": ["XX"], "model": {"kind": "scenario1"}}"#,
+            r#"{"n": 4, "schemes": ["GC(0)"], "model": {"kind": "scenario1"}}"#,
+            r#"{"n": 4, "ingest_ms": -0.1, "model": {"kind": "scenario1"}}"#,
+            // GC(4) needs s ≤ r but the sweep only visits r = 2
+            r#"{"n": 4, "rs": [2], "schemes": ["GC(4)"], "model": {"kind": "scenario1"}}"#,
+            // RA needs r = n, never reached by this sweep
+            r#"{"n": 4, "rs": [1, 2], "schemes": ["RA"], "model": {"kind": "scenario1"}}"#,
         ] {
             assert!(Experiment::from_json_str(bad).is_err(), "{bad}");
         }

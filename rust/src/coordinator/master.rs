@@ -16,6 +16,7 @@ use crate::delay::DelayModelKind;
 use crate::gd::UncodedMaster;
 use crate::metrics::DelayRecorder;
 use crate::scheduler::Scheduler;
+use crate::scheme::CompletionRule;
 use crate::util::rng::Rng;
 
 /// Cluster configuration.
@@ -42,18 +43,34 @@ pub struct ClusterConfig {
     /// spawn the n workers in-process (false = wait for external
     /// `straggler worker --connect` processes — real multi-process mode)
     pub spawn_workers: bool,
+    /// workers flush one result message per `group` completed tasks
+    /// (1 = the paper's immediate streaming; `s` executes GC(s), `r`
+    /// executes PC's one-message-per-worker — see
+    /// [`crate::scheme::SchemeRegistry::cluster_plan`])
+    pub group: usize,
+    /// round-completion rule the master enforces.  `DistinctTasks`
+    /// (uncoded §II: stop at `k` distinct results, apply the DGD
+    /// update) or `Messages { threshold }` (coded order-statistic
+    /// timing: stop at the threshold-th received message; θ is left
+    /// untouched — the polynomial decode lives in [`crate::coded`])
+    pub rule: CompletionRule,
 }
 
 /// Per-round record.
 #[derive(Debug, Clone)]
 pub struct RoundLog {
     pub round: usize,
-    /// wall-clock ms from round start to k-th distinct result
+    /// wall-clock ms from round start to completion (k-th distinct
+    /// result, or the threshold-th message under a `Messages` rule)
     pub completion_ms: f64,
-    /// the k distinct tasks, in arrival order
+    /// the distinct tasks held at completion, in arrival order (`k` of
+    /// them under `DistinctTasks`; possibly fewer under `Messages`)
     pub winners: Vec<usize>,
-    /// total results received (incl. duplicates/destroyed-by-stop tail)
+    /// total task results received (incl. duplicates)
     pub results_seen: usize,
+    /// result messages received — `results_seen / group` up to the
+    /// stop-ack tail; the GC(s) communication saving shows up here
+    pub messages_seen: usize,
     pub loss: Option<f64>,
 }
 
@@ -92,10 +109,20 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
         loss_every,
         listen,
         spawn_workers,
+        group,
+        rule,
     } = cfg;
     anyhow::ensure!(dataset.n == n, "dataset partitions must equal n");
     anyhow::ensure!(k >= 1 && k <= n, "need 1 ≤ k ≤ n");
     anyhow::ensure!(r >= 1 && r <= n, "need 1 ≤ r ≤ n");
+    anyhow::ensure!(group >= 1 && group <= r, "need 1 ≤ group ≤ r");
+    if let CompletionRule::Messages { threshold } = rule {
+        let max_messages = n * r.div_ceil(group);
+        anyhow::ensure!(
+            threshold >= 1 && threshold <= max_messages,
+            "message threshold {threshold} unreachable: at most {max_messages} messages/round"
+        );
+    }
 
     let listener = match &listen {
         Some(addr) => TcpListener::bind(addr.as_str())
@@ -136,6 +163,7 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
         let (stream, _) = listener.accept().context("accepting worker")?;
         stream.set_nodelay(true)?;
         Msg::Welcome {
+            proto: super::protocol::PROTO_VERSION,
             worker_id: id as u32,
             profile: profile.clone(),
         }
@@ -207,14 +235,18 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
                 // identity mapping in cluster mode (no Remark-3
                 // reshuffle — it would force data re-distribution)
                 batches: row.iter().map(|&t| t as u32).collect(),
+                group: group as u32,
             }
             .write_to(&mut &*stream)?;
         }
 
-        // collect k distinct
+        // collect until the completion rule fires: k distinct task
+        // results (uncoded), or the threshold-th message (coded timing)
         let mut seen = HashSet::with_capacity(k);
         let mut received: Vec<(usize, Vec<f64>)> = Vec::with_capacity(k);
         let mut results_seen = 0usize;
+        let mut messages_seen = 0usize;
+        let d = dataset.d;
         let completion_ms;
         loop {
             let msg = res_rx
@@ -223,7 +255,7 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
             let Msg::Result {
                 round: rr,
                 worker_id,
-                task,
+                tasks,
                 comp_us,
                 send_ts_us,
                 h,
@@ -234,17 +266,42 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
             if rr != round_tag {
                 continue; // stale result from a stopped round
             }
+            if h.len() != tasks.len() * d {
+                eprintln!(
+                    "master: dropping malformed result from worker {worker_id} \
+                     ({} tasks, {} h values, d = {d})",
+                    tasks.len(),
+                    h.len()
+                );
+                continue;
+            }
             let recv_us = now_us();
-            results_seen += 1;
+            messages_seen += 1;
+            results_seen += tasks.len();
             recorders[worker_id as usize].record_comp(comp_us as f64 / 1e3);
             recorders[worker_id as usize]
                 .record_comm((recv_us.saturating_sub(send_ts_us)) as f64 / 1e3);
-            if seen.insert(task) {
-                received.push((task as usize, h.into_iter().map(|v| v as f64).collect()));
-                if received.len() == k {
-                    completion_ms = (recv_us - t0_us) as f64 / 1e3;
-                    break;
+            let mut complete = false;
+            for (i, &task) in tasks.iter().enumerate() {
+                if seen.insert(task) {
+                    received.push((
+                        task as usize,
+                        h[i * d..(i + 1) * d].iter().map(|&v| v as f64).collect(),
+                    ));
+                    if rule == CompletionRule::DistinctTasks && received.len() == k {
+                        // remaining tasks of this message are beyond the
+                        // target; the whole group arrived at recv time
+                        complete = true;
+                        break;
+                    }
                 }
+            }
+            if let CompletionRule::Messages { threshold } = rule {
+                complete = messages_seen == threshold;
+            }
+            if complete {
+                completion_ms = (recv_us - t0_us) as f64 / 1e3;
+                break;
             }
         }
 
@@ -254,7 +311,11 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
         }
 
         let winners: Vec<usize> = received.iter().map(|(t, _)| *t).collect();
-        master.apply_round(&received, n, dataset.padded_samples(), &mut rng);
+        if rule == CompletionRule::DistinctTasks {
+            master.apply_round(&received, n, dataset.padded_samples(), &mut rng);
+        }
+        // Messages-rule rounds are timing rounds: θ stays frozen (the
+        // uncoded h blocks cannot stand in for a polynomial decode)
         let loss = if loss_every > 0 && (round + 1) % loss_every == 0 {
             Some(dataset.loss(&master.theta))
         } else {
@@ -265,6 +326,7 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
             completion_ms,
             winners,
             results_seen,
+            messages_seen,
             loss,
         });
     }

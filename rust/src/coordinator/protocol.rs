@@ -10,8 +10,10 @@
 //! master → worker:  Welcome, LoadData (once), Assign (per round),
 //!                   Stop (ack — paper's "acknowledgement message"),
 //!                   Shutdown
-//! worker → master:  Result (one per completed task, sent immediately
-//!                   after the computation — the streaming model)
+//! worker → master:  Result (one per completed task *group*; group
+//!                   size 1 is the paper's immediate streaming, larger
+//!                   groups are the GC(s) grouped-flush schemes — see
+//!                   `crate::scheme::ClusterPlan`)
 //! ```
 
 use std::io::{Read, Write};
@@ -21,11 +23,22 @@ use anyhow::{bail, Context, Result};
 /// Maximum accepted frame: guards against corrupt length prefixes.
 pub const MAX_FRAME: u32 = 256 * 1024 * 1024;
 
+/// Wire-protocol version, bumped on every incompatible frame change
+/// (v2: grouped `Result` frames + `Assign.group`, PR 2).  Sent in
+/// `Welcome` so a version-skewed worker fails the handshake with a
+/// clear message instead of mis-decoding result frames.
+pub const PROTO_VERSION: u32 = 2;
+
 /// Protocol messages.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Msg {
-    /// master → worker on accept: your id and the artifact profile.
-    Welcome { worker_id: u32, profile: String },
+    /// master → worker on accept: protocol version, your id and the
+    /// artifact profile.
+    Welcome {
+        proto: u32,
+        worker_id: u32,
+        profile: String,
+    },
     /// master → worker once: the data batches this worker will hold.
     /// Each entry is `(batch_id, x ∈ R^{d×b} row-major, y·X ∈ R^d)`.
     LoadData {
@@ -36,19 +49,24 @@ pub enum Msg {
     /// master → worker, one per round: parameters + ordered task list
     /// (the worker's TO-matrix row; `batches[j]` is the batch index the
     /// `j`-th task maps to under the master's current task↔batch map).
+    /// `group` is the flush size: send one `Result` per `group`
+    /// completed tasks (1 = immediate streaming).
     Assign {
         round: u32,
         theta: Vec<f32>,
         tasks: Vec<u32>,
         batches: Vec<u32>,
+        group: u32,
     },
-    /// worker → master after each task: the computed `h(X)` plus the
-    /// worker-measured computation time and the send timestamp (µs on
-    /// the shared process clock) so the master can measure comm delay.
+    /// worker → master after each flushed group: the computed `h(X)`
+    /// blocks of the group's tasks (concatenated, `tasks.len() · d`
+    /// values in task order) plus the worker-measured computation time
+    /// of the whole group and the send timestamp (µs on the shared
+    /// process clock) so the master can measure comm delay.
     Result {
         round: u32,
         worker_id: u32,
-        task: u32,
+        tasks: Vec<u32>,
         comp_us: u64,
         send_ts_us: u64,
         h: Vec<f32>,
@@ -72,8 +90,13 @@ impl Msg {
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(64);
         match self {
-            Msg::Welcome { worker_id, profile } => {
+            Msg::Welcome {
+                proto,
+                worker_id,
+                profile,
+            } => {
                 out.push(Self::TAG_WELCOME);
+                put_u32(&mut out, *proto);
                 put_u32(&mut out, *worker_id);
                 put_bytes(&mut out, profile.as_bytes());
             }
@@ -92,17 +115,19 @@ impl Msg {
                 theta,
                 tasks,
                 batches,
+                group,
             } => {
                 out.push(Self::TAG_ASSIGN);
                 put_u32(&mut out, *round);
                 put_f32s(&mut out, theta);
                 put_u32s(&mut out, tasks);
                 put_u32s(&mut out, batches);
+                put_u32(&mut out, *group);
             }
             Msg::Result {
                 round,
                 worker_id,
-                task,
+                tasks,
                 comp_us,
                 send_ts_us,
                 h,
@@ -110,7 +135,7 @@ impl Msg {
                 out.push(Self::TAG_RESULT);
                 put_u32(&mut out, *round);
                 put_u32(&mut out, *worker_id);
-                put_u32(&mut out, *task);
+                put_u32s(&mut out, tasks);
                 put_u64(&mut out, *comp_us);
                 put_u64(&mut out, *send_ts_us);
                 put_f32s(&mut out, h);
@@ -130,6 +155,7 @@ impl Msg {
         let tag = c.u8()?;
         let msg = match tag {
             Self::TAG_WELCOME => Msg::Welcome {
+                proto: c.u32()?,
                 worker_id: c.u32()?,
                 profile: String::from_utf8(c.bytes()?.to_vec()).context("profile utf8")?,
             },
@@ -149,11 +175,12 @@ impl Msg {
                 theta: c.f32s()?,
                 tasks: c.u32s()?,
                 batches: c.u32s()?,
+                group: c.u32()?,
             },
             Self::TAG_RESULT => Msg::Result {
                 round: c.u32()?,
                 worker_id: c.u32()?,
-                task: c.u32()?,
+                tasks: c.u32s()?,
                 comp_us: c.u64()?,
                 send_ts_us: c.u64()?,
                 h: c.f32s()?,
@@ -281,6 +308,7 @@ mod tests {
     #[test]
     fn all_messages_roundtrip() {
         roundtrip(Msg::Welcome {
+            proto: PROTO_VERSION,
             worker_id: 7,
             profile: "fig5".into(),
         });
@@ -294,14 +322,24 @@ mod tests {
             theta: vec![0.5, -1.5],
             tasks: vec![3, 1, 0],
             batches: vec![3, 1, 0],
+            group: 2,
         });
         roundtrip(Msg::Result {
             round: 12,
             worker_id: 2,
-            task: 3,
+            tasks: vec![3],
             comp_us: 1234,
             send_ts_us: 999_999,
             h: vec![f32::MIN, f32::MAX, 0.0],
+        });
+        // grouped flush: two tasks, concatenated h blocks
+        roundtrip(Msg::Result {
+            round: 13,
+            worker_id: 0,
+            tasks: vec![1, 2],
+            comp_us: 2048,
+            send_ts_us: 1_000_001,
+            h: vec![1.0, 2.0, 3.0, 4.0],
         });
         roundtrip(Msg::Stop { round: 12 });
         roundtrip(Msg::Shutdown);
@@ -311,6 +349,7 @@ mod tests {
     fn framed_stream_roundtrip() {
         let msgs = vec![
             Msg::Welcome {
+                proto: PROTO_VERSION,
                 worker_id: 0,
                 profile: "quickstart".into(),
             },
@@ -346,7 +385,7 @@ mod tests {
         let enc = Msg::Result {
             round: 1,
             worker_id: 2,
-            task: 3,
+            tasks: vec![3, 7],
             comp_us: 4,
             send_ts_us: 5,
             h: vec![1.0, 2.0],

@@ -7,11 +7,17 @@
 //!   `Stop` round into an atomic and forwarding `Assign`/`LoadData`
 //!   through a channel (so a Stop is seen *between tasks*, matching the
 //!   paper's "receives the acknowledgement … and stops computations");
-//! * **compute loop** (this thread) — runs tasks in TO-matrix order;
-//! * **delivery threads** — each result is handed to a short-lived
-//!   sender that sleeps out the injected communication delay before
-//!   writing the frame, so comm delays overlap the worker's subsequent
-//!   computations exactly as in eq. (1).
+//! * **compute loop** (this thread) — runs tasks in TO-matrix order,
+//!   buffering finished results and **flushing one message per
+//!   `group` completed tasks** (`group = 1` is the paper's immediate
+//!   streaming; larger groups execute the GC(s) schemes of
+//!   `crate::scheme::gc` — the flushed message carries the whole
+//!   group's `h` blocks and rides the flush task's comm delay, matching
+//!   the simulator's flush-slot arrival model);
+//! * **delivery threads** — each flushed message is handed to a
+//!   short-lived sender that sleeps out the injected communication
+//!   delay before writing the frame, so comm delays overlap the
+//!   worker's subsequent computations exactly as in eq. (1).
 
 use std::collections::HashMap;
 use std::io::Write as _;
@@ -57,6 +63,7 @@ enum Work {
         theta: Vec<f32>,
         tasks: Vec<u32>,
         batches: Vec<u32>,
+        group: u32,
     },
     Shutdown,
 }
@@ -68,9 +75,22 @@ pub fn run_worker(addr: std::net::SocketAddr, mut opts: WorkerOptions) -> Result
     let mut reader = stream.try_clone()?;
     let writer = Arc::new(Mutex::new(stream));
 
-    // handshake
+    // handshake (incl. protocol-version check — a skewed peer must
+    // fail here, not mis-decode grouped result frames later)
     let (worker_id, profile) = match Msg::read_from(&mut reader)? {
-        Msg::Welcome { worker_id, profile } => (worker_id, profile),
+        Msg::Welcome {
+            proto,
+            worker_id,
+            profile,
+        } => {
+            anyhow::ensure!(
+                proto == super::protocol::PROTO_VERSION,
+                "protocol version mismatch: master speaks v{proto}, \
+                 this worker speaks v{}",
+                super::protocol::PROTO_VERSION
+            );
+            (worker_id, profile)
+        }
         other => anyhow::bail!("expected Welcome, got {other:?}"),
     };
 
@@ -95,12 +115,14 @@ pub fn run_worker(addr: std::net::SocketAddr, mut opts: WorkerOptions) -> Result
                         theta,
                         tasks,
                         batches,
+                        group,
                     }) => {
                         let _ = tx.send(Work::Assign {
                             round,
                             theta,
                             tasks,
                             batches,
+                            group,
                         });
                     }
                     Ok(Msg::Stop { round }) => {
@@ -166,13 +188,21 @@ pub fn run_worker(addr: std::net::SocketAddr, mut opts: WorkerOptions) -> Result
                 theta,
                 tasks,
                 batches,
+                group,
             } => {
+                let group = (group.max(1) as usize).min(tasks.len().max(1));
+                // grouped-flush buffers (GC(s)); group = 1 flushes every
+                // task, i.e. the paper's immediate streaming
+                let mut buf_tasks: Vec<u32> = Vec::with_capacity(group);
+                let mut buf_h: Vec<f32> = Vec::new();
+                let mut buf_comp_us: u64 = 0;
                 for (slot, (&task, &batch)) in tasks.iter().zip(&batches).enumerate() {
-                    // paper: stop as soon as the ack for *this* round lands
+                    // paper: stop as soon as the ack for *this* round
+                    // lands; a partially filled group is abandoned with
+                    // the round (its results are no longer needed)
                     if stopped_round.load(Ordering::SeqCst) >= round as i64 {
                         break;
                     }
-                    let _ = slot;
                     // --- computation phase (eq. 1 first term) ---
                     let t0 = now_us();
                     let (inj_comp_ms, inj_comm_ms) = match opts.injected.as_mut() {
@@ -203,18 +233,26 @@ pub fn run_worker(addr: std::net::SocketAddr, mut opts: WorkerOptions) -> Result
                             rt.task_gram_resident(&profile, &format!("x{batch}"), &theta)?
                         }
                     };
-                    let comp_us = now_us() - t0;
+                    buf_comp_us += now_us() - t0;
+                    buf_tasks.push(task);
+                    buf_h.extend_from_slice(&h);
 
                     // --- communication phase (eq. 1 second term) ---
-                    // delivery is delayed on a separate thread so the
-                    // next computation starts immediately
+                    // flush one message per `group` finished tasks (plus
+                    // the row's ragged tail); delivery is delayed on a
+                    // separate thread riding the *flush* task's comm
+                    // delay, so the next computation starts immediately
+                    // — the simulator's flush-slot arrival model
+                    if buf_tasks.len() < group && slot + 1 != tasks.len() {
+                        continue;
+                    }
                     let msg = Msg::Result {
                         round,
                         worker_id,
-                        task,
-                        comp_us,
+                        tasks: std::mem::take(&mut buf_tasks),
+                        comp_us: std::mem::take(&mut buf_comp_us),
                         send_ts_us: now_us(),
-                        h,
+                        h: std::mem::take(&mut buf_h),
                     };
                     let writer = Arc::clone(&writer);
                     let inflight2 = Arc::clone(&inflight);

@@ -1,33 +1,27 @@
-//! Coupled multi-scheme evaluator: CS, SS, RA, PC, PCMM and LB against
-//! the *identical* delay stream — the engine behind every figure.
+//! Coupled multi-scheme evaluator: every scheme the registry knows
+//! (CS, SS, RA, PC, PCMM, LB, GC(s), …) against the *identical* delay
+//! stream — the engine behind every figure.
 //!
-//! Per chunk of rounds one [`DelayBatch`] is drawn and every slot's
-//! arrival time is computed **once** ([`slot_arrivals_batch`]); every
-//! scheme's completion time is then derived from that shared array
-//! (uncoded via the §II dynamics, PCMM and LB directly as order
-//! statistics of the arrivals, PC from the per-worker comp/comm rows)
-//! without re-reading the delay stream per scheme.  This is the paper's
-//! fairness discipline ("for fairness we use the same dataset for all
-//! the schemes") applied to the randomness itself, and it makes
-//! ordering assertions (LB ≤ CS, …) hold per realization, not just in
-//! expectation.
+//! Per chunk of rounds one `DelayBatch` is drawn and every slot's
+//! arrival time is computed **once**; every scheme's completion time is
+//! then derived from that shared array by its registry-built evaluator
+//! ([`crate::scheme`]) without re-reading the delay stream per scheme.
+//! This is the paper's fairness discipline ("for fairness we use the
+//! same dataset for all the schemes") applied to the randomness itself,
+//! and it makes ordering assertions (LB ≤ CS, …) hold per realization,
+//! not just in expectation.
 //!
 //! Shards run on the persistent [`WorkerPool`] with RNG streams from
 //! [`shard_rngs`] — the same shard-seeding invariant as the plain
-//! Monte-Carlo engine, so harness estimates can never decouple from
-//! `MonteCarlo` estimates for structural reasons.  Trial statistics
-//! stream into `RunningStats` + `StreamingQuantiles`, keeping memory
-//! O(schemes) at any trial count.
+//! Monte-Carlo engine, and since PR 2 literally the same chunk loop
+//! ([`crate::scheme::run_rounds`]), so harness estimates can never
+//! decouple from `MonteCarlo` estimates for structural reasons.  Trial
+//! statistics stream into `RunningStats` + `StreamingQuantiles`,
+//! keeping memory O(schemes) at any trial count.
 
-use crate::coded::{PcScheme, PcmmScheme};
-use crate::delay::{DelayBatch, DelayModel};
-use crate::scheduler::{
-    CyclicScheduler, RandomAssignment, Scheduler, SchemeId, StaircaseScheduler,
-};
-use crate::sim::{
-    completion_from_arrivals, kth_arrival_from_arrivals, shard_layout, shard_rngs,
-    slot_arrivals_batch, CompletionEstimate, FlatTasks, WorkerPool, BATCH_ROUNDS,
-};
+use crate::delay::DelayModel;
+use crate::scheme::{run_rounds, SchemeId, SchemeRegistry};
+use crate::sim::{shard_layout, shard_rngs, CompletionEstimate, WorkerPool};
 use crate::util::stats::{RunningStats, StreamingQuantiles};
 
 /// Evaluation request for one `(n, r, k)` point.
@@ -50,8 +44,8 @@ pub struct EvalPoint {
     /// `ingest_ms` to process.  This is what makes multi-message
     /// schemes (PCMM's `2n − 1` receptions) pay for their extra
     /// communication — the effect the paper invokes to explain PCMM's
-    /// growth with `n` in Fig. 6 ("the increase in the number of
-    /// communications required by a factor of two").
+    /// growth with `n` in Fig. 6 — and what grouped flushing (GC(s))
+    /// trades computation lateness against.
     pub ingest_ms: f64,
 }
 
@@ -63,14 +57,7 @@ impl EvalPoint {
             k,
             trials,
             seed,
-            schemes: vec![
-                SchemeId::Cs,
-                SchemeId::Ss,
-                SchemeId::Ra,
-                SchemeId::Pc,
-                SchemeId::Pcmm,
-                SchemeId::Lb,
-            ],
+            schemes: SchemeRegistry::default_schemes(),
             threads: std::thread::available_parallelism()
                 .map(|p| p.get())
                 .unwrap_or(1),
@@ -89,17 +76,14 @@ impl EvalPoint {
         self
     }
 
-    /// Schemes actually evaluable at this point (PC/PCMM need r ≥ 2 and
-    /// k = n; RA needs r = n).
+    /// Schemes actually evaluable at this point, per the registry's
+    /// paper-Table-I rules (PC/PCMM need r ≥ 2 and k = n; RA needs
+    /// r = n; GC(s) needs s ≤ r).
     pub fn applicable(&self) -> Vec<SchemeId> {
         self.schemes
             .iter()
             .copied()
-            .filter(|s| match s {
-                SchemeId::Pc | SchemeId::Pcmm => self.r >= 2 && self.k == self.n,
-                SchemeId::Ra => self.r == self.n,
-                _ => true,
-            })
+            .filter(|&s| SchemeRegistry::applicable(s, self.n, self.r, self.k))
             .collect()
     }
 }
@@ -146,6 +130,9 @@ pub fn evaluate(point: &EvalPoint, model: &dyn DelayModel) -> Vec<CompletionEsti
         .collect()
 }
 
+/// One shard: prepare every scheme's evaluator once (consuming the
+/// scheduling RNG in scheme order — the bit-identity contract), then
+/// drive the shared chunk loop.
 fn shard_eval(
     point: &EvalPoint,
     model: &dyn DelayModel,
@@ -156,188 +143,28 @@ fn shard_eval(
     let (n, r, k) = (point.n, point.r, point.k);
     let (mut rng, mut rng_sched) = shard_rngs(point.seed, shard);
 
-    // prebuilt fixed schedules (flattened once) and coded schemes
-    let cs = FlatTasks::new(&CyclicScheduler.schedule(n, r, &mut rng_sched));
-    let ss = FlatTasks::new(&StaircaseScheduler.schedule(n, r, &mut rng_sched));
-    let pc = if r >= 2 { Some(PcScheme::new(n, r)) } else { None };
-    let pcmm = if r >= 2 { Some(PcmmScheme::new(n, r)) } else { None };
+    let mut evaluators: Vec<_> = schemes
+        .iter()
+        .map(|&id| SchemeRegistry::build(id).prepare(n, r, k, &mut rng_sched))
+        .collect();
 
-    let s = point.ingest_ms;
-    let stride = n * r;
     let mut acc: Vec<(RunningStats, StreamingQuantiles)> =
         vec![(RunningStats::new(), StreamingQuantiles::new()); schemes.len()];
-
-    let mut batch = DelayBatch::zeros(BATCH_ROUNDS.min(rounds.max(1)), n, r);
-    let mut arrivals: Vec<f64> = Vec::new();
-    let mut task_times: Vec<f64> = Vec::with_capacity(n);
-    let mut scratch: Vec<f64> = Vec::with_capacity(stride);
-    let mut pairs: Vec<(f64, usize)> = Vec::with_capacity(stride);
-    // per-draw scratch for RA's fresh matrices, refilled in place
-    let mut ra_flat: Option<FlatTasks> = None;
-
-    let mut done = 0usize;
-    while done < rounds {
-        let chunk = BATCH_ROUNDS.min(rounds - done);
-        if batch.rounds != chunk {
-            batch = DelayBatch::zeros(chunk, n, r);
-        }
-        model.sample_batch_into(&mut batch, &mut rng);
-        slot_arrivals_batch(&batch, &mut arrivals);
-        for b in 0..chunk {
-            let round_arrivals = &arrivals[b * stride..(b + 1) * stride];
-            let comp = batch.comp_round(b);
-            let comm = batch.comm_round(b);
-            for (idx, scheme) in schemes.iter().enumerate() {
-                let t = if s == 0.0 {
-                    // idealized eq. (1)–(2) dynamics, all from the
-                    // shared arrival array
-                    match scheme {
-                        SchemeId::Cs => {
-                            completion_from_arrivals(&cs, round_arrivals, k, &mut task_times)
-                        }
-                        SchemeId::Ss => {
-                            completion_from_arrivals(&ss, round_arrivals, k, &mut task_times)
-                        }
-                        SchemeId::Ra => {
-                            let to = RandomAssignment.schedule(n, r, &mut rng_sched);
-                            let flat = FlatTasks::refill_or_init(&mut ra_flat, &to);
-                            completion_from_arrivals(flat, round_arrivals, k, &mut task_times)
-                        }
-                        SchemeId::Pc => pc_completion(
-                            comp,
-                            comm,
-                            n,
-                            r,
-                            pc.as_ref().expect("PC applicable").recovery_threshold(),
-                            &mut scratch,
-                        ),
-                        SchemeId::Pcmm => kth_arrival_from_arrivals(
-                            round_arrivals,
-                            pcmm.as_ref().expect("PCMM applicable").recovery_threshold(),
-                            &mut scratch,
-                        ),
-                        SchemeId::Lb => {
-                            kth_arrival_from_arrivals(round_arrivals, k, &mut scratch)
-                        }
-                    }
-                } else {
-                    // testbed model: serialized master ingestion queue
-                    match scheme {
-                        SchemeId::Cs => {
-                            ingest_uncoded(&cs, round_arrivals, k, s, &mut pairs)
-                        }
-                        SchemeId::Ss => {
-                            ingest_uncoded(&ss, round_arrivals, k, s, &mut pairs)
-                        }
-                        SchemeId::Ra => {
-                            let to = RandomAssignment.schedule(n, r, &mut rng_sched);
-                            let flat = FlatTasks::refill_or_init(&mut ra_flat, &to);
-                            ingest_uncoded(flat, round_arrivals, k, s, &mut pairs)
-                        }
-                        SchemeId::Pc => {
-                            let pc = pc.as_ref().expect("PC applicable");
-                            pairs.clear();
-                            for i in 0..n {
-                                let comp_sum: f64 = comp[i * r..(i + 1) * r].iter().sum();
-                                pairs.push((comp_sum + comm[i * r + r - 1], 0));
-                            }
-                            ingest_count(&mut pairs, pc.recovery_threshold(), s)
-                        }
-                        SchemeId::Pcmm => {
-                            let pcmm = pcmm.as_ref().expect("PCMM applicable");
-                            pairs.clear();
-                            pairs.extend(round_arrivals.iter().map(|&t| (t, 0)));
-                            ingest_count(&mut pairs, pcmm.recovery_threshold(), s)
-                        }
-                        SchemeId::Lb => {
-                            // genie master ingests only the k useful messages
-                            pairs.clear();
-                            pairs.extend(round_arrivals.iter().map(|&t| (t, 0)));
-                            ingest_count(&mut pairs, k, s)
-                        }
-                    }
-                };
-                acc[idx].0.push(t);
-                acc[idx].1.push(t);
-            }
-        }
-        done += chunk;
-    }
-    acc
-}
-
-/// PC completion (eqs. 51–52) from one round's comp/comm rows: worker
-/// `i` finishes at `Σ_{j<r} comp(i,j) + comm(i, r−1)` (all `r` tasks,
-/// one message); the round completes at the threshold-th order
-/// statistic across workers.  Mirrors `PcScheme::completion_time` on
-/// the batch's flat storage.
-fn pc_completion(
-    comp: &[f64],
-    comm: &[f64],
-    n: usize,
-    r: usize,
-    threshold: usize,
-    scratch: &mut Vec<f64>,
-) -> f64 {
-    scratch.clear();
-    for i in 0..n {
-        let comp_sum: f64 = comp[i * r..(i + 1) * r].iter().sum();
-        scratch.push(comp_sum + comm[i * r + r - 1]);
-    }
-    let (_, kth, _) = scratch.select_nth_unstable_by(threshold - 1, |a, b| a.total_cmp(b));
-    *kth
-}
-
-/// Completion under a serialized ingestion queue, stopping at the
-/// `count`-th processed message.  For LB the queue only sees the useful
-/// messages, so sort first and sweep the earliest `count`.
-fn ingest_count(arrivals: &mut [(f64, usize)], count: usize, s: f64) -> f64 {
-    arrivals.sort_unstable_by(|a, b| a.0.total_cmp(&b.0));
-    let mut busy = 0.0f64;
-    for (idx, &(t, _)) in arrivals.iter().enumerate() {
-        busy = busy.max(t) + s;
-        if idx + 1 == count {
-            return busy;
-        }
-    }
-    unreachable!("count exceeds message stream")
-}
-
-/// Uncoded completion with ingestion: the master processes *every*
-/// arriving message (duplicates included) in arrival order; the round
-/// ends when the k-th distinct task finishes ingestion.  Message
-/// arrival times come from the shared per-round arrival array; the TO
-/// matrix only supplies the task tags.
-fn ingest_uncoded(
-    tasks: &FlatTasks,
-    round_arrivals: &[f64],
-    k: usize,
-    s: f64,
-    pairs: &mut Vec<(f64, usize)>,
-) -> f64 {
-    let n = tasks.n();
-    pairs.clear();
-    pairs.extend(
-        round_arrivals
-            .iter()
-            .zip(tasks.tasks())
-            .map(|(&t, &task)| (t, task)),
+    run_rounds(
+        &mut evaluators,
+        model,
+        n,
+        r,
+        rounds,
+        point.ingest_ms,
+        &mut rng,
+        &mut rng_sched,
+        &mut |idx, t| {
+            acc[idx].0.push(t);
+            acc[idx].1.push(t);
+        },
     );
-    pairs.sort_unstable_by(|a, b| a.0.total_cmp(&b.0));
-    let mut busy = 0.0f64;
-    let mut seen = vec![false; n];
-    let mut distinct = 0usize;
-    for &(t, task) in pairs.iter() {
-        busy = busy.max(t) + s;
-        if !seen[task] {
-            seen[task] = true;
-            distinct += 1;
-            if distinct == k {
-                return busy;
-            }
-        }
-    }
-    panic!("TO matrix covers fewer than k distinct tasks");
+    acc
 }
 
 #[cfg(test)]
@@ -361,6 +188,11 @@ mod tests {
         let p = EvalPoint::new(8, 8, 5, 10, 0);
         assert!(!p.applicable().contains(&SchemeId::Pc));
         assert!(p.applicable().contains(&SchemeId::Ra));
+
+        // GC groups are bounded by the row length
+        let p = EvalPoint::new(8, 4, 8, 10, 0)
+            .with_schemes(&[SchemeId::Gc(4), SchemeId::Gc(5)]);
+        assert_eq!(p.applicable(), vec![SchemeId::Gc(4)]);
     }
 
     #[test]
@@ -396,6 +228,7 @@ mod tests {
         // `MonteCarlo` must see bit-identical delay streams for the
         // same (trials, threads, seed), so a CS-only evaluation agrees
         // exactly, not just statistically
+        use crate::scheduler::CyclicScheduler;
         use crate::sim::MonteCarlo;
         let model = TruncatedGaussianModel::scenario1(7);
         let mut point = EvalPoint::new(7, 3, 7, 2000, 31).with_schemes(&[SchemeId::Cs]);
@@ -409,33 +242,6 @@ mod tests {
         let plain = mc.estimate(&CyclicScheduler, &model, 7, 3, 7);
         assert_eq!(harness.mean.to_bits(), plain.mean.to_bits());
         assert_eq!(harness.p95.to_bits(), plain.p95.to_bits());
-    }
-
-    #[test]
-    fn pc_completion_matches_coded_module_kernel() {
-        // the harness's slice-based PC kernel must stay bit-identical
-        // to PcScheme::completion_time, or figure PC curves silently
-        // drift from the coded module's ground truth
-        use crate::delay::{DelayModel, TruncatedGaussianModel};
-        let (n, r) = (9usize, 4usize);
-        let model = TruncatedGaussianModel::scenario2(n, 8);
-        let mut rng = crate::util::rng::Rng::seed_from_u64(2);
-        let pc = PcScheme::new(n, r);
-        let mut coded_scratch: Vec<f64> = Vec::new();
-        let mut flat_scratch: Vec<f64> = Vec::new();
-        for _ in 0..64 {
-            let sample = model.sample(n, r, &mut rng);
-            let coded = pc.completion_time(&sample, &mut coded_scratch);
-            let flat = pc_completion(
-                sample.comp_flat(),
-                sample.comm_flat(),
-                n,
-                r,
-                pc.recovery_threshold(),
-                &mut flat_scratch,
-            );
-            assert_eq!(coded.to_bits(), flat.to_bits());
-        }
     }
 
     #[test]

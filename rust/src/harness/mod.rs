@@ -21,6 +21,7 @@ use crate::delay::{DelayModel, DelayModelKind, Ec2LikeModel, TruncatedGaussianMo
 use crate::metrics::{fit_truncated_gaussian, Histogram};
 use crate::report::Table;
 use crate::scheduler::{CyclicScheduler, SchemeId};
+use crate::scheme::{CompletionRule, SchemeRegistry};
 use crate::sim::CompletionEstimate;
 
 /// Common harness options.
@@ -194,6 +195,8 @@ fn fig5_cluster_spotcheck(opts: &Options) -> Result<Table> {
                 loss_every: 0,
                 listen: None,
                 spawn_workers: true,
+                group: 1,
+                rule: CompletionRule::DistinctTasks,
             })?;
             row.push(Table::fmt(report.mean_completion_ms()));
         }
@@ -264,6 +267,107 @@ pub fn fig7(opts: &Options) -> Result<Table> {
     Ok(table)
 }
 
+/// **Fig. 8** (beyond the paper) — the GC(s) communication–computation
+/// tradeoff: grouped multi-message cyclic schedules (one partial-sum
+/// message per `s` completed tasks, arXiv:2004.04948-style) against
+/// CS (≡ GC(1)) and the genie bound, under the testbed
+/// master-ingestion model.  Larger `s` delays deliveries to the flush
+/// slot but cuts the master's message load `s×` — the sweep shows
+/// where each effect wins.  The first scheme to ship end-to-end
+/// through the unified scheme layer ([`crate::scheme`]).
+pub fn fig8_gc(opts: &Options) -> Result<Table> {
+    let n = 12;
+    let r = n;
+    let model = Ec2LikeModel::new(n, opts.seed ^ 0xEC2, 0.2);
+    let mut table = Table::new(
+        &format!(
+            "Fig. 8: t̄ (ms) vs GC group size s — n = {n}, r = n, k = n, \
+             EC2-like, ingest {EC2_INGEST_MS} ms/message"
+        ),
+        &["s", "GC(s)", "CS", "LB", "GC/CS", "messages/round"],
+    );
+    // one coupled pass: every group size plus CS and LB share the
+    // identical delay stream, so the whole sweep is a single evaluate
+    const GROUPS: [usize; 6] = [1, 2, 3, 4, 6, 12];
+    let mut schemes: Vec<SchemeId> = GROUPS.iter().map(|&s| SchemeId::Gc(s as u32)).collect();
+    schemes.push(SchemeId::Cs);
+    schemes.push(SchemeId::Lb);
+    let point = EvalPoint::new(n, r, n, opts.trials, opts.seed)
+        .with_ingest(EC2_INGEST_MS)
+        .with_schemes(&schemes);
+    let est = evaluate(&point, &model);
+    let (cs, lb) = (mean_of(&est, SchemeId::Cs), mean_of(&est, SchemeId::Lb));
+    for s in GROUPS {
+        let g = mean_of(&est, SchemeId::Gc(s as u32));
+        table.push_row(vec![
+            s.to_string(),
+            Table::fmt(g),
+            Table::fmt(cs),
+            Table::fmt(lb),
+            format!("{:.3}", g / cs),
+            (n * r.div_ceil(s)).to_string(),
+        ]);
+    }
+    table.print();
+    opts.write(&table, "fig8_gc")?;
+
+    if opts.cluster {
+        let spot = fig8_cluster_spotcheck(opts)?;
+        spot.print();
+        opts.write(&spot, "fig8_cluster_spotcheck")?;
+    }
+    Ok(table)
+}
+
+/// Real-cluster spot check for Fig. 8: execute GC(s) rounds on the
+/// socketed coordinator through the registry's [`ClusterPlan`] and
+/// report measured completion + message counts next to GC(1) ≡ CS.
+///
+/// [`ClusterPlan`]: crate::scheme::ClusterPlan
+fn fig8_cluster_spotcheck(opts: &Options) -> Result<Table> {
+    let n = 6;
+    let rounds = 100.min(opts.trials.max(1));
+    let mut table = Table::new(
+        "Fig. 8 cluster spot check: measured GC(s), real sockets + compute",
+        &["s", "mean t (ms)", "avg messages/round", "avg results/round"],
+    );
+    for s in [1usize, 2, 3] {
+        let plan = SchemeRegistry::cluster_plan(SchemeId::Gc(s as u32), n, n, n)?;
+        let report = run_cluster(ClusterConfig {
+            n,
+            r: n,
+            k: n,
+            eta: 0.01,
+            rounds,
+            profile: "fig8".into(),
+            scheduler: plan.scheduler,
+            dataset: Dataset::synthesize(n, 64, n * 16, opts.seed),
+            inject: Some(DelayModelKind::Ec2Like {
+                seed: opts.seed ^ 0xEC2,
+                hetero: 0.2,
+            }),
+            seed: opts.seed,
+            use_pjrt: false,
+            artifact_dir: None,
+            loss_every: 0,
+            listen: None,
+            spawn_workers: true,
+            group: plan.group,
+            rule: plan.rule,
+        })?;
+        let rounds_f = report.rounds.len().max(1) as f64;
+        let msgs: usize = report.rounds.iter().map(|l| l.messages_seen).sum();
+        let results: usize = report.rounds.iter().map(|l| l.results_seen).sum();
+        table.push_row(vec![
+            s.to_string(),
+            Table::fmt(report.mean_completion_ms()),
+            format!("{:.1}", msgs as f64 / rounds_f),
+            format!("{:.1}", results as f64 / rounds_f),
+        ]);
+    }
+    Ok(table)
+}
+
 /// **Fig. 3** — histograms of per-task computation and communication
 /// delays of the first three workers, measured on the *real* cluster
 /// (sockets + compute) with EC2-like injection, plus truncated-Gaussian
@@ -291,6 +395,8 @@ pub fn fig3(opts: &Options) -> Result<(Table, Table)> {
         loss_every: 0,
         listen: None,
         spawn_workers: true,
+        group: 1,
+        rule: CompletionRule::DistinctTasks,
     })?;
 
     let mut summary = Table::new(
@@ -452,6 +558,8 @@ pub fn run_e2e(cfg: E2eConfig, opts: &Options) -> Result<(ClusterReport, Table)>
         loss_every: 10,
         listen: cfg.listen.clone(),
         spawn_workers: cfg.spawn_workers,
+        group: 1,
+        rule: CompletionRule::DistinctTasks,
     })?;
     let mut curve = Table::new(
         &format!(

@@ -15,8 +15,9 @@
 use crate::util::rng::Rng;
 
 
-use crate::delay::{DelayBatch, DelayModel, DelaySample};
-use crate::sim::{kth_arrival_from_arrivals, slot_arrivals_batch, CompletionEstimate, BATCH_ROUNDS};
+use crate::delay::{DelayModel, DelaySample};
+use crate::scheme::{run_rounds, SchemeId, SchemeRegistry};
+use crate::sim::CompletionEstimate;
 use crate::util::stats::{RunningStats, StreamingQuantiles};
 
 /// k-th smallest slot-arrival time of one realization (`t̂_{T,(k)}`).
@@ -41,11 +42,13 @@ pub fn kth_slot_arrival(sample: &DelaySample, k: usize, scratch: &mut Vec<f64>) 
 }
 
 /// Monte-Carlo estimate of `t̄_LB(r, k)` (eq. 44), on the batched
-/// engine: delays are sampled in [`DelayBatch`] chunks, slot arrivals
-/// are computed once per chunk and the k-th order statistic streams
-/// into `RunningStats` + `StreamingQuantiles` — memory O(1) in
-/// `trials`.  The delay stream and per-round values are bit-identical
-/// to the old per-round loop for a fixed seed.
+/// engine: the registry's genie scheme driven through the shared
+/// [`run_rounds`] chunk loop — delays sampled in `DelayBatch` chunks,
+/// slot arrivals computed once per chunk, the k-th order statistic
+/// streaming into `RunningStats` + `StreamingQuantiles` (memory O(1)
+/// in `trials`).  The delay stream and per-round values are
+/// bit-identical to the pre-registry per-round loop for a fixed seed
+/// (pinned by `batched_lower_bound_matches_scalar_reference` below).
 pub fn lower_bound(
     model: &dyn DelayModel,
     n: usize,
@@ -58,31 +61,27 @@ pub fn lower_bound(
     assert!(k <= n, "computation target exceeds task count");
     assert!(k >= 1 && k <= n * r, "not enough slots to ever reach the target");
     let mut rng = Rng::seed_from_u64(seed);
-    let stride = n * r;
-    let mut batch = DelayBatch::zeros(BATCH_ROUNDS.min(trials), n, r);
-    let mut arrivals: Vec<f64> = Vec::new();
-    let mut scratch: Vec<f64> = Vec::with_capacity(stride);
+    // the genie consumes no scheduling randomness; this stream exists
+    // only to satisfy the shared driver's signature
+    let mut rng_sched = Rng::seed_from_u64(seed ^ 0x1B);
+    let mut evaluators =
+        vec![SchemeRegistry::build(SchemeId::Lb).prepare(n, r, k, &mut rng_sched)];
     let mut stats = RunningStats::new();
     let mut quantiles = StreamingQuantiles::new();
-    let mut done = 0usize;
-    while done < trials {
-        let chunk = BATCH_ROUNDS.min(trials - done);
-        if batch.rounds != chunk {
-            batch = DelayBatch::zeros(chunk, n, r);
-        }
-        model.sample_batch_into(&mut batch, &mut rng);
-        slot_arrivals_batch(&batch, &mut arrivals);
-        for b in 0..chunk {
-            let t = kth_arrival_from_arrivals(
-                &arrivals[b * stride..(b + 1) * stride],
-                k,
-                &mut scratch,
-            );
+    run_rounds(
+        &mut evaluators,
+        model,
+        n,
+        r,
+        trials,
+        0.0,
+        &mut rng,
+        &mut rng_sched,
+        &mut |_, t| {
             stats.push(t);
             quantiles.push(t);
-        }
-        done += chunk;
-    }
+        },
+    );
     CompletionEstimate::from_streams("LB".into(), n, r, k, &stats, &quantiles)
 }
 

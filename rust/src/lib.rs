@@ -18,6 +18,11 @@
 //! * [`scheduler`] — TO-matrix construction: the paper's **cyclic (CS)**
 //!   and **staircase (SS)** schedules, the **random-assignment (RA)**
 //!   baseline, and the genie **oracle** schedule behind the lower bound;
+//! * [`scheme`] — the unified scheme-execution layer: a `Scheme` trait
+//!   (assignment + execution order + completion rule) with prepared
+//!   per-chunk evaluators, a `SchemeRegistry` owning applicability and
+//!   parsing, and the grouped multi-message **GC(s)** family; every
+//!   batched engine and the live cluster dispatch through it;
 //! * [`delay`] — the stochastic delay substrate (truncated Gaussian of
 //!   paper eq. 66, shifted exponential, empirical EC2-like traces,
 //!   worker-correlated wrappers);
@@ -56,6 +61,7 @@ pub mod metrics;
 pub mod report;
 pub mod runtime;
 pub mod scheduler;
+pub mod scheme;
 pub mod sim;
 pub mod util;
 

@@ -7,7 +7,9 @@
 //! straggler fig5  [--trials N] [--cluster]      # t̄ vs r, EC2-like (+ spot check)
 //! straggler fig6  [--trials N]                  # t̄ vs n
 //! straggler fig7  [--trials N]                  # t̄ vs k
+//! straggler fig8  [--trials N] [--cluster]      # GC(s) tradeoff sweep
 //! straggler sim   --n 16 --r 4 --k 16 [--model scenario1|scenario2|ec2|exp]
+//!                 [--schemes CS,SS,GC2,LB] [--ingest 0.15]
 //! straggler train [--rounds 300] [--k 8] [--no-pjrt]  # e2e distributed DGD
 //! straggler all   [--trials N]                  # every figure + table
 //! ```
@@ -22,7 +24,7 @@ use straggler_sched::delay::{
 };
 use straggler_sched::harness::{self, EvalPoint, Options};
 use straggler_sched::report::Table;
-use straggler_sched::scheduler::SchemeId;
+use straggler_sched::scheme::{SchemeId, SchemeRegistry};
 use straggler_sched::util::cli::Args;
 
 fn main() {
@@ -89,6 +91,10 @@ fn run() -> Result<()> {
             let opts = options(&args)?;
             harness::fig7(&opts)?;
         }
+        "fig8" => {
+            let opts = options(&args)?;
+            harness::fig8_gc(&opts)?;
+        }
         "all" => {
             let mut opts = options(&args)?;
             harness::table1(&opts)?;
@@ -103,6 +109,7 @@ fn run() -> Result<()> {
             harness::fig5(&opts)?;
             harness::fig6(&opts)?;
             harness::fig7(&opts)?;
+            harness::fig8_gc(&opts)?;
             opts.trials = 500;
             harness::fig3(&opts)?;
         }
@@ -113,7 +120,35 @@ fn run() -> Result<()> {
             let k = args.usize_or("k", n)?;
             let model_name = args.str_or("model", "scenario1");
             let model = build_model(&model_name, n, opts.seed)?;
-            let point = EvalPoint::new(n, r, k, opts.trials, opts.seed);
+            let schemes = match args.str_opt("schemes") {
+                None => SchemeRegistry::default_schemes(),
+                Some(list) => {
+                    let ids = list
+                        .split(',')
+                        .map(SchemeRegistry::parse)
+                        .collect::<Result<Vec<_>>>()?;
+                    // explicitly named schemes must be runnable here —
+                    // the default set filters silently (figure-sweep
+                    // semantics), an explicit request must not
+                    for &id in &ids {
+                        if !SchemeRegistry::applicable(id, n, r, k) {
+                            bail!(
+                                "{id} is not applicable at (n = {n}, r = {r}, k = {k}) — \
+                                 paper Table I (PC/PCMM need r ≥ 2 and k = n; RA needs \
+                                 r = n; GC(s) needs s ≤ r)"
+                            );
+                        }
+                    }
+                    ids
+                }
+            };
+            let ingest = args.f64_or("ingest", 0.0)?;
+            if ingest.is_nan() || ingest < 0.0 {
+                bail!("--ingest must be a non-negative ms/message cost, got {ingest}");
+            }
+            let point = EvalPoint::new(n, r, k, opts.trials, opts.seed)
+                .with_schemes(&schemes)
+                .with_ingest(ingest);
             let est = harness::evaluate(&point, model.as_ref());
             let mut t = Table::new(
                 &format!(
@@ -254,7 +289,10 @@ subcommands:
   fig5              t̄ vs r (EC2-like; --cluster adds a real-cluster spot check)
   fig6              t̄ vs number of workers n
   fig7              t̄ vs computation target k
-  sim               one (n, r, k) point across all schemes (--model ...)
+  fig8              GC(s) grouped multi-message tradeoff sweep
+                    (--cluster adds a real-cluster spot check)
+  sim               one (n, r, k) point (--model ..., --ingest MS,
+                    --schemes CS,SS,RA,PC,PCMM,LB,GC(s))
   run               run a JSON-described sweep: --config exp.json
   ablations         design-choice studies (ingest, correlation, searched
                     schedules, Remark-3 bias)

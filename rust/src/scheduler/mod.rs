@@ -9,6 +9,12 @@
 //! * [`StaircaseScheduler`] — SS, eq. (29)–(30);
 //! * [`RandomAssignment`] — RA baseline of [18] (r = n, random order);
 //! * [`oracle`] — the genie schedule used by the §V lower bound.
+//!
+//! Schedulers build *assignments*; full **schemes** (assignment +
+//! execution order + completion rule, with applicability and display
+//! names) live in [`crate::scheme`] — its `SchemeRegistry` wraps these
+//! schedulers for the uncoded schemes and is re-exported here as
+//! [`SchemeId`] for backward compatibility.
 
 pub mod cyclic;
 pub mod oracle;
@@ -21,6 +27,10 @@ pub use oracle::oracle_schedule;
 pub use random_assignment::RandomAssignment;
 pub use search::{search, SearchConfig, SearchOutcome};
 pub use staircase::StaircaseScheduler;
+
+// SchemeId moved into the unified scheme layer (PR 2); re-exported here
+// because harness/config/tests historically import it from `scheduler`.
+pub use crate::scheme::SchemeId;
 
 use crate::util::rng::Rng;
 
@@ -141,31 +151,6 @@ impl ToMatrix {
     }
 }
 
-/// Scheme identifier used across harness, reports and CLI.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub enum SchemeId {
-    Cs,
-    Ss,
-    Ra,
-    Pc,
-    Pcmm,
-    Lb,
-}
-
-impl std::fmt::Display for SchemeId {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        let s = match self {
-            SchemeId::Cs => "CS",
-            SchemeId::Ss => "SS",
-            SchemeId::Ra => "RA",
-            SchemeId::Pc => "PC",
-            SchemeId::Pcmm => "PCMM",
-            SchemeId::Lb => "LB",
-        };
-        f.write_str(s)
-    }
-}
-
 /// Builds TO matrices.  Stateless schedulers (CS/SS) ignore the RNG;
 /// RA redraws a fresh random order every call — matching the paper,
 /// where RA re-randomizes each DGD iteration while CS/SS are fixed.
@@ -179,6 +164,23 @@ pub trait Scheduler: Send + Sync {
     /// round in Monte-Carlo runs).
     fn is_randomized(&self) -> bool {
         false
+    }
+}
+
+// Let borrowed trait objects act as schedulers, so engines holding
+// `&[&dyn Scheduler]` can feed the generic scheme-layer adapters
+// (`scheme::evaluator_for_scheduler`) without boxing or cloning.
+impl Scheduler for &dyn Scheduler {
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+
+    fn schedule(&self, n: usize, r: usize, rng: &mut Rng) -> ToMatrix {
+        (**self).schedule(n, r, rng)
+    }
+
+    fn is_randomized(&self) -> bool {
+        (**self).is_randomized()
     }
 }
 
@@ -205,12 +207,14 @@ mod tests {
         assert_eq!(c.r(), 3);
         assert!(c.rows_distinct());
         assert!(c.covers_all_tasks());
-        // task 0 (paper's X_1) appears at every worker's last slot
+        // task 0 (paper's X_1) opens worker 0's row and closes the
+        // other three workers' rows
         assert_eq!(
             c.placements(0),
             vec![(0, 0), (1, 2), (2, 2), (3, 2)]
         );
-        // coverage: task 1 twice, task 3 twice, tasks 0 and 2 four/ three
+        // coverage: tasks 0 and 2 at all four workers, tasks 1 and 3
+        // at two workers each
         assert_eq!(c.coverage(), vec![4, 2, 4, 2]);
     }
 
@@ -252,8 +256,10 @@ mod tests {
     }
 
     #[test]
-    fn scheme_id_display() {
-        assert_eq!(SchemeId::Cs.to_string(), "CS");
-        assert_eq!(SchemeId::Pcmm.to_string(), "PCMM");
+    fn scheme_id_reexport_still_resolves() {
+        // SchemeId moved to crate::scheme; the historical
+        // `scheduler::SchemeId` path must keep working
+        let id: SchemeId = SchemeId::Cs;
+        assert_eq!(id.to_string(), "CS");
     }
 }

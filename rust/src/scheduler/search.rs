@@ -18,7 +18,8 @@
 
 use crate::delay::DelayModel;
 use crate::scheduler::{CyclicScheduler, Scheduler, ToMatrix};
-use crate::sim::{completion_from_arrivals, slot_arrivals_batch, FlatTasks};
+use crate::scheme::ToEvaluator;
+use crate::sim::slot_arrivals_batch;
 use crate::util::rng::Rng;
 
 /// Configuration of the local search.
@@ -53,19 +54,20 @@ pub struct SearchOutcome {
     pub evaluations: usize,
 }
 
-/// CRN scorer: the common random numbers live as **one** [`DelayBatch`]
+/// CRN scorer: the common random numbers live as **one** `DelayBatch`
 /// whose slot-arrival times are precomputed a single time — candidate
 /// TO matrices only change the slot→task mapping, never the arrivals,
 /// so each of the search's hundreds of evaluations is a flat min-reduce
 /// + selection over the cached arrival array instead of a fresh pass
-/// over the delays.
+/// over the delays.  Scoring dispatches through the scheme layer's
+/// [`ToEvaluator`] (its `refill` + per-round kernel are exactly the old
+/// `FlatTasks` + `completion_from_arrivals` pair), so search scores and
+/// Monte-Carlo estimates share one completion kernel.
 struct CrnScorer {
     rounds: usize,
     stride: usize,
-    k: usize,
     arrivals: Vec<f64>,
-    flat: FlatTasks,
-    task_times: Vec<f64>,
+    eval: ToEvaluator,
 }
 
 impl CrnScorer {
@@ -83,25 +85,20 @@ impl CrnScorer {
         Self {
             rounds,
             stride: n * r,
-            k,
             arrivals,
-            flat: FlatTasks::new(&ToMatrix::new(n, vec![(0..r).collect(); n])),
-            task_times: Vec::with_capacity(n),
+            eval: ToEvaluator::new(&ToMatrix::new(n, vec![(0..r).collect(); n]), k),
         }
     }
 
     /// CRN-estimated `t̄` of one candidate (bit-identical to scoring it
     /// with `completion_time_fast` over the same realizations).
     fn score(&mut self, to: &ToMatrix) -> f64 {
-        self.flat.refill(to);
+        self.eval.refill(to);
         let mut total = 0.0;
         for b in 0..self.rounds {
-            total += completion_from_arrivals(
-                &self.flat,
-                &self.arrivals[b * self.stride..(b + 1) * self.stride],
-                self.k,
-                &mut self.task_times,
-            );
+            total += self
+                .eval
+                .completion_round(&self.arrivals[b * self.stride..(b + 1) * self.stride]);
         }
         total / self.rounds as f64
     }

@@ -1,0 +1,365 @@
+//! Scheme evaluators for the paper's six baseline schemes, plus the
+//! completion kernels they share.
+//!
+//! The kernels (`pc_completion`, `ingest_count`, `ingest_uncoded`)
+//! moved here verbatim from the pre-refactor `harness/eval.rs` — every
+//! floating-point operation, comparison and selection is unchanged, so
+//! registry-dispatched estimates reproduce the old evaluator bit for
+//! bit (`rust/tests/scheme_registry.rs`).
+
+use crate::scheduler::{Scheduler, ToMatrix};
+use crate::sim::{completion_from_arrivals, kth_arrival_from_arrivals, FlatTasks};
+use crate::util::rng::Rng;
+
+use super::{RoundView, SchemeEvaluator};
+
+/// Evaluator for a **fixed** TO matrix (CS, SS, searched schedules):
+/// rows flattened once, per round one min-reduce + selection over the
+/// shared arrival array.  Also the CRN scorer of
+/// [`crate::scheduler::search`] — `refill` swaps the candidate matrix
+/// without touching the arrivals.
+pub struct ToEvaluator {
+    k: usize,
+    flat: FlatTasks,
+    task_times: Vec<f64>,
+    pairs: Vec<(f64, usize)>,
+    seen: Vec<bool>,
+}
+
+impl ToEvaluator {
+    pub fn new(to: &ToMatrix, k: usize) -> Self {
+        let flat = FlatTasks::new(to);
+        let (n, r) = (flat.n(), flat.r());
+        Self {
+            k,
+            flat,
+            task_times: Vec::with_capacity(n),
+            pairs: Vec::with_capacity(n * r),
+            seen: Vec::with_capacity(n),
+        }
+    }
+
+    /// Swap in a different matrix of the same shape (search hot path).
+    pub fn refill(&mut self, to: &ToMatrix) {
+        self.flat.refill(to);
+    }
+
+    /// Idealized completion of one round from its arrival slice.
+    #[inline]
+    pub fn completion_round(&mut self, arrivals: &[f64]) -> f64 {
+        completion_from_arrivals(&self.flat, arrivals, self.k, &mut self.task_times)
+    }
+
+    /// Completion of one round under serialized master ingestion.
+    pub fn completion_round_ingest(&mut self, arrivals: &[f64], ingest_ms: f64) -> f64 {
+        ingest_uncoded(
+            &self.flat,
+            arrivals,
+            self.k,
+            ingest_ms,
+            &mut self.pairs,
+            &mut self.seen,
+        )
+    }
+}
+
+impl SchemeEvaluator for ToEvaluator {
+    fn completion(&mut self, round: &RoundView<'_>, _rng_sched: &mut Rng) -> f64 {
+        self.completion_round(round.arrivals)
+    }
+
+    fn completion_ingest(
+        &mut self,
+        round: &RoundView<'_>,
+        ingest_ms: f64,
+        _rng_sched: &mut Rng,
+    ) -> f64 {
+        self.completion_round_ingest(round.arrivals, ingest_ms)
+    }
+}
+
+/// Evaluator for **randomized** schedulers (RA): a fresh TO matrix is
+/// drawn from `rng_sched` every round (matching the paper, where RA
+/// re-randomizes each DGD iteration) and refilled into an inner
+/// [`ToEvaluator`], which supplies both completion kernels — one
+/// implementation of the uncoded dynamics, not two.
+pub struct RedrawEvaluator<S: Scheduler> {
+    scheduler: S,
+    n: usize,
+    r: usize,
+    k: usize,
+    inner: Option<ToEvaluator>,
+}
+
+impl<S: Scheduler> RedrawEvaluator<S> {
+    /// Draw this round's matrix into the reusable inner evaluator.
+    fn redraw(&mut self, rng_sched: &mut Rng) -> &mut ToEvaluator {
+        let to = self.scheduler.schedule(self.n, self.r, rng_sched);
+        if let Some(ev) = self.inner.as_mut() {
+            ev.refill(&to);
+        } else {
+            self.inner = Some(ToEvaluator::new(&to, self.k));
+        }
+        self.inner.as_mut().expect("filled above")
+    }
+}
+
+impl<S: Scheduler> SchemeEvaluator for RedrawEvaluator<S> {
+    fn completion(&mut self, round: &RoundView<'_>, rng_sched: &mut Rng) -> f64 {
+        self.redraw(rng_sched).completion_round(round.arrivals)
+    }
+
+    fn completion_ingest(
+        &mut self,
+        round: &RoundView<'_>,
+        ingest_ms: f64,
+        rng_sched: &mut Rng,
+    ) -> f64 {
+        self.redraw(rng_sched)
+            .completion_round_ingest(round.arrivals, ingest_ms)
+    }
+}
+
+/// Build the right evaluator for any [`Scheduler`] — fixed schedules
+/// are drawn from `rng_sched` once **here** (in caller order, exactly
+/// like the pre-refactor engines), randomized ones redraw per round.
+/// This is the adapter [`crate::sim::MonteCarlo`] drives its
+/// `&dyn Scheduler` slices through.
+pub fn evaluator_for_scheduler<'a, S: Scheduler + 'a>(
+    scheduler: S,
+    n: usize,
+    r: usize,
+    k: usize,
+    rng_sched: &mut Rng,
+) -> Box<dyn SchemeEvaluator + 'a> {
+    if scheduler.is_randomized() {
+        Box::new(RedrawEvaluator {
+            scheduler,
+            n,
+            r,
+            k,
+            inner: None,
+        })
+    } else {
+        Box::new(ToEvaluator::new(&scheduler.schedule(n, r, rng_sched), k))
+    }
+}
+
+/// Evaluator for PC's single-message timing (eqs. 51–52): per worker
+/// the comp-row sum plus the last slot's comm delay, completed at the
+/// `2⌈n/r⌉ − 1`-th order statistic.
+pub struct PcEvaluator {
+    n: usize,
+    r: usize,
+    threshold: usize,
+    scratch: Vec<f64>,
+    pairs: Vec<(f64, usize)>,
+}
+
+impl PcEvaluator {
+    pub fn new(n: usize, r: usize) -> Self {
+        assert!(r >= 2, "PC requires computation load r ≥ 2 (paper Table I)");
+        Self {
+            n,
+            r,
+            threshold: 2 * n.div_ceil(r) - 1,
+            scratch: Vec::with_capacity(n),
+            pairs: Vec::with_capacity(n),
+        }
+    }
+}
+
+impl SchemeEvaluator for PcEvaluator {
+    fn completion(&mut self, round: &RoundView<'_>, _rng_sched: &mut Rng) -> f64 {
+        pc_completion(
+            round.comp,
+            round.comm,
+            self.n,
+            self.r,
+            self.threshold,
+            &mut self.scratch,
+        )
+    }
+
+    fn completion_ingest(
+        &mut self,
+        round: &RoundView<'_>,
+        ingest_ms: f64,
+        _rng_sched: &mut Rng,
+    ) -> f64 {
+        let (n, r) = (self.n, self.r);
+        self.pairs.clear();
+        for i in 0..n {
+            let comp_sum: f64 = round.comp[i * r..(i + 1) * r].iter().sum();
+            self.pairs.push((comp_sum + round.comm[i * r + r - 1], 0));
+        }
+        ingest_count(&mut self.pairs, self.threshold, ingest_ms)
+    }
+}
+
+/// Evaluator completing at the `threshold`-th smallest **slot arrival**
+/// over all `n·r` slots — PCMM (`threshold = 2n − 1`, eqs. 56–57) and
+/// the §V genie bound (`threshold = k`, eq. 46) are both this kernel.
+pub struct SlotOrderStatEvaluator {
+    threshold: usize,
+    scratch: Vec<f64>,
+    pairs: Vec<(f64, usize)>,
+}
+
+impl SlotOrderStatEvaluator {
+    pub fn new(threshold: usize) -> Self {
+        assert!(threshold >= 1, "order-statistic threshold must be ≥ 1");
+        Self {
+            threshold,
+            scratch: Vec::new(),
+            pairs: Vec::new(),
+        }
+    }
+}
+
+impl SchemeEvaluator for SlotOrderStatEvaluator {
+    fn completion(&mut self, round: &RoundView<'_>, _rng_sched: &mut Rng) -> f64 {
+        kth_arrival_from_arrivals(round.arrivals, self.threshold, &mut self.scratch)
+    }
+
+    fn completion_ingest(
+        &mut self,
+        round: &RoundView<'_>,
+        ingest_ms: f64,
+        _rng_sched: &mut Rng,
+    ) -> f64 {
+        self.pairs.clear();
+        self.pairs.extend(round.arrivals.iter().map(|&t| (t, 0)));
+        ingest_count(&mut self.pairs, self.threshold, ingest_ms)
+    }
+}
+
+/// PC completion (eqs. 51–52) from one round's comp/comm rows: worker
+/// `i` finishes at `Σ_{j<r} comp(i,j) + comm(i, r−1)` (all `r` tasks,
+/// one message); the round completes at the threshold-th order
+/// statistic across workers.  Mirrors `PcScheme::completion_time` on
+/// the batch's flat storage.
+pub fn pc_completion(
+    comp: &[f64],
+    comm: &[f64],
+    n: usize,
+    r: usize,
+    threshold: usize,
+    scratch: &mut Vec<f64>,
+) -> f64 {
+    scratch.clear();
+    for i in 0..n {
+        let comp_sum: f64 = comp[i * r..(i + 1) * r].iter().sum();
+        scratch.push(comp_sum + comm[i * r + r - 1]);
+    }
+    let (_, kth, _) = scratch.select_nth_unstable_by(threshold - 1, |a, b| a.total_cmp(b));
+    *kth
+}
+
+/// Completion under a serialized ingestion queue, stopping at the
+/// `count`-th processed message.  For LB the queue only sees the useful
+/// messages, so sort first and sweep the earliest `count`.
+pub fn ingest_count(arrivals: &mut [(f64, usize)], count: usize, s: f64) -> f64 {
+    arrivals.sort_unstable_by(|a, b| a.0.total_cmp(&b.0));
+    let mut busy = 0.0f64;
+    for (idx, &(t, _)) in arrivals.iter().enumerate() {
+        busy = busy.max(t) + s;
+        if idx + 1 == count {
+            return busy;
+        }
+    }
+    unreachable!("count exceeds message stream")
+}
+
+/// Uncoded completion with ingestion: the master processes *every*
+/// arriving message (duplicates included) in arrival order; the round
+/// ends when the k-th distinct task finishes ingestion.  Message
+/// arrival times come from the shared per-round arrival array; the TO
+/// matrix only supplies the task tags.  `pairs` and `seen` are
+/// caller-owned scratch (this sits in the per-round ingestion loop —
+/// no allocation here).
+pub fn ingest_uncoded(
+    tasks: &FlatTasks,
+    round_arrivals: &[f64],
+    k: usize,
+    s: f64,
+    pairs: &mut Vec<(f64, usize)>,
+    seen: &mut Vec<bool>,
+) -> f64 {
+    let n = tasks.n();
+    pairs.clear();
+    pairs.extend(
+        round_arrivals
+            .iter()
+            .zip(tasks.tasks())
+            .map(|(&t, &task)| (t, task)),
+    );
+    pairs.sort_unstable_by(|a, b| a.0.total_cmp(&b.0));
+    let mut busy = 0.0f64;
+    seen.clear();
+    seen.resize(n, false);
+    let mut distinct = 0usize;
+    for &(t, task) in pairs.iter() {
+        busy = busy.max(t) + s;
+        if !seen[task] {
+            seen[task] = true;
+            distinct += 1;
+            if distinct == k {
+                return busy;
+            }
+        }
+    }
+    panic!("TO matrix covers fewer than k distinct tasks");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coded::PcScheme;
+    use crate::delay::{DelayModel, TruncatedGaussianModel};
+
+    #[test]
+    fn pc_completion_matches_coded_module_kernel() {
+        // the scheme layer's slice-based PC kernel must stay
+        // bit-identical to PcScheme::completion_time, or figure PC
+        // curves silently drift from the coded module's ground truth
+        let (n, r) = (9usize, 4usize);
+        let model = TruncatedGaussianModel::scenario2(n, 8);
+        let mut rng = crate::util::rng::Rng::seed_from_u64(2);
+        let pc = PcScheme::new(n, r);
+        let mut coded_scratch: Vec<f64> = Vec::new();
+        let mut flat_scratch: Vec<f64> = Vec::new();
+        for _ in 0..64 {
+            let sample = model.sample(n, r, &mut rng);
+            let coded = pc.completion_time(&sample, &mut coded_scratch);
+            let flat = pc_completion(
+                sample.comp_flat(),
+                sample.comm_flat(),
+                n,
+                r,
+                pc.recovery_threshold(),
+                &mut flat_scratch,
+            );
+            assert_eq!(coded.to_bits(), flat.to_bits());
+        }
+    }
+
+    #[test]
+    fn pc_evaluator_threshold_matches_coded_module() {
+        for (n, r) in [(4usize, 2usize), (8, 4), (15, 15), (9, 3)] {
+            let ev = PcEvaluator::new(n, r);
+            assert_eq!(ev.threshold, PcScheme::new(n, r).recovery_threshold());
+        }
+    }
+
+    #[test]
+    fn ingest_count_serializes_queue() {
+        // three messages at t = 1, 1, 5 with 2 ms ingestion: the second
+        // queues behind the first (3 + 2 = 5), the third starts at its
+        // own arrival
+        let mut q = vec![(5.0, 0), (1.0, 0), (1.0, 0)];
+        assert_eq!(ingest_count(&mut q.clone(), 1, 2.0), 3.0);
+        assert_eq!(ingest_count(&mut q.clone(), 2, 2.0), 5.0);
+        assert_eq!(ingest_count(&mut q, 3, 2.0), 7.0);
+    }
+}

@@ -1,0 +1,323 @@
+//! Grouped multi-message cyclic scheduling — `GC(s)`.
+//!
+//! The multi-message gradient-coding literature (Ozfatura, Ulukus &
+//! Gündüz, arXiv:2004.04948) trades communication for computation by
+//! letting each worker send a **partial sum every `s` completed tasks**
+//! instead of one message per task.  `GC(s)` brings that family into
+//! this codebase's uncoded-task framework:
+//!
+//! * assignment/order: the cyclic TO matrix (CS, eq. 21) — every task
+//!   sits early in *some* worker's queue, so partial flushes stay
+//!   useful;
+//! * communication: worker `i` flushes one message after slots
+//!   `s−1, 2s−1, …` (and a final flush at slot `r−1` for the ragged
+//!   tail).  A flushed message delivers the **group** of tasks computed
+//!   since the previous flush, and arrives at the flush slot's arrival
+//!   time `Σ_{m ≤ j_f} T⁽¹⁾ + T⁽²⁾_{j_f}` (eq. 1 applied to the flush
+//!   slot — the worker holds finished results until the flush, and the
+//!   message rides the flush slot's communication delay);
+//! * completion: unchanged §II rule — earliest time `k` distinct tasks
+//!   have been delivered.
+//!
+//! `GC(1)` flushes every slot and is **bit-identical** to CS (pinned by
+//! `rust/tests/scheme_registry.rs` and a proptest).  Larger `s` delays
+//! deliveries (stochastically — a group's tasks all ride the flush
+//! slot's comm draw) but cuts the master's message load by `s×`, which
+//! pays off under the serialized-ingestion testbed model
+//! ([`crate::harness::EC2_INGEST_MS`]): fewer queue slots per round.
+//! `straggler fig8` sweeps the tradeoff.
+
+use crate::scheduler::{CyclicScheduler, Scheduler, ToMatrix};
+use crate::sim::FlatTasks;
+use crate::util::rng::Rng;
+
+use super::{RoundView, Scheme, SchemeEvaluator, SchemeId};
+
+/// The `GC(s)` scheme descriptor: cyclic assignment, one message per
+/// `s` completed tasks.
+#[derive(Debug, Clone, Copy)]
+pub struct GcScheme {
+    /// Group size `s ≥ 1`; `s = 1` degenerates to CS.
+    pub s: usize,
+}
+
+impl GcScheme {
+    /// `s = 0` is constructible (so `applicable` can report it invalid
+    /// instead of panicking) but rejected by `applicable`/`prepare`.
+    pub fn new(s: usize) -> Self {
+        Self { s }
+    }
+}
+
+impl Scheme for GcScheme {
+    fn id(&self) -> SchemeId {
+        SchemeId::Gc(self.s as u32)
+    }
+
+    fn applicable(&self, _n: usize, r: usize, _k: usize) -> bool {
+        // a group larger than the row never flushes mid-row and is just
+        // a mislabeled GC(r); reject it so sweeps stay unambiguous
+        self.s >= 1 && self.s <= r
+    }
+
+    fn prepare(
+        &self,
+        n: usize,
+        r: usize,
+        k: usize,
+        rng_sched: &mut Rng,
+    ) -> Box<dyn SchemeEvaluator> {
+        let to = CyclicScheduler.schedule(n, r, rng_sched);
+        Box::new(GcEvaluator::new(&to, self.s, k))
+    }
+}
+
+/// Prepared `GC(s)` evaluator: the cyclic rows flattened once, plus a
+/// per-slot map to the (global index of the) flush slot that delivers
+/// each slot's result.  Per round this is the same min-reduce +
+/// selection as the CS kernel, just reading each slot's arrival through
+/// the flush map — at `s = 1` the map is the identity and the kernel
+/// reproduces [`crate::sim::completion_from_arrivals`] bit for bit.
+pub struct GcEvaluator {
+    n: usize,
+    k: usize,
+    tasks: FlatTasks,
+    /// global slot index of the message delivering each slot's result
+    flush_of: Vec<usize>,
+    /// start slot (global) of each flush group, in flush-arrival layout
+    groups: Vec<usize>,
+    task_times: Vec<f64>,
+    pairs: Vec<(f64, usize)>,
+    seen: Vec<bool>,
+}
+
+impl GcEvaluator {
+    pub fn new(to: &ToMatrix, s: usize, k: usize) -> Self {
+        let (n, r) = (to.n(), to.r());
+        assert!(s >= 1 && s <= r, "GC group size must satisfy 1 ≤ s ≤ r");
+        assert!(k >= 1 && k <= n, "computation target must satisfy 1 ≤ k ≤ n");
+        let tasks = FlatTasks::new(to);
+        let mut flush_of = Vec::with_capacity(n * r);
+        let mut groups = Vec::with_capacity(n * r.div_ceil(s));
+        for i in 0..n {
+            let base = i * r;
+            let mut start = 0usize;
+            while start < r {
+                let end = (start + s).min(r);
+                groups.push(base + start);
+                for _ in start..end {
+                    flush_of.push(base + end - 1);
+                }
+                start = end;
+            }
+        }
+        debug_assert_eq!(flush_of.len(), n * r);
+        Self {
+            n,
+            k,
+            tasks,
+            flush_of,
+            groups,
+            task_times: Vec::with_capacity(n),
+            pairs: Vec::with_capacity(n * r),
+            seen: Vec::with_capacity(n),
+        }
+    }
+
+    /// Messages per round (`n · ⌈r/s⌉` — the `s×` communication saving).
+    pub fn messages_per_round(&self) -> usize {
+        self.groups.len()
+    }
+}
+
+impl SchemeEvaluator for GcEvaluator {
+    fn completion(&mut self, round: &RoundView<'_>, _rng_sched: &mut Rng) -> f64 {
+        // identical loop shape to `completion_from_arrivals`, with each
+        // slot's arrival read through the flush map
+        let (n, k) = (self.n, self.k);
+        let arrivals = round.arrivals;
+        debug_assert_eq!(arrivals.len(), self.flush_of.len());
+        self.task_times.clear();
+        self.task_times.resize(n, f64::INFINITY);
+        for (slot, &task) in self.tasks.tasks().iter().enumerate() {
+            let arrival = arrivals[self.flush_of[slot]];
+            if arrival < self.task_times[task] {
+                self.task_times[task] = arrival;
+            }
+        }
+        let (_, kth, _) = self
+            .task_times
+            .select_nth_unstable_by(k - 1, |a, b| a.total_cmp(b));
+        let t = *kth;
+        assert!(
+            t.is_finite(),
+            "TO matrix covers fewer than k = {k} distinct tasks"
+        );
+        t
+    }
+
+    fn completion_ingest(
+        &mut self,
+        round: &RoundView<'_>,
+        ingest_ms: f64,
+        _rng_sched: &mut Rng,
+    ) -> f64 {
+        // the master's queue sees one entry per *message*; each message
+        // delivers its whole group when processed.  The group layout is
+        // read back from the precomputed flush map: a group spans
+        // `start ..= flush_of[start]`.
+        let (n, k) = (self.n, self.k);
+        let arrivals = round.arrivals;
+        self.pairs.clear();
+        for &start in &self.groups {
+            self.pairs.push((arrivals[self.flush_of[start]], start));
+        }
+        self.pairs.sort_unstable_by(|a, b| a.0.total_cmp(&b.0));
+        let mut busy = 0.0f64;
+        self.seen.clear();
+        self.seen.resize(n, false);
+        let mut distinct = 0usize;
+        for &(t, start) in self.pairs.iter() {
+            busy = busy.max(t) + ingest_ms;
+            for slot in start..=self.flush_of[start] {
+                let task = self.tasks.tasks()[slot];
+                if !self.seen[task] {
+                    self.seen[task] = true;
+                    distinct += 1;
+                    if distinct == k {
+                        return busy;
+                    }
+                }
+            }
+        }
+        panic!("TO matrix covers fewer than k distinct tasks");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::delay::{DelayModel, TruncatedGaussianModel};
+    use crate::scheme::exec::ToEvaluator;
+    use crate::sim::slot_arrivals_batch;
+
+    fn round_views(
+        batch: &crate::delay::DelayBatch,
+        arrivals: &[f64],
+        b: usize,
+    ) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+        let stride = batch.stride();
+        (
+            arrivals[b * stride..(b + 1) * stride].to_vec(),
+            batch.comp_round(b).to_vec(),
+            batch.comm_round(b).to_vec(),
+        )
+    }
+
+    #[test]
+    fn flush_map_layout() {
+        let mut rng = Rng::seed_from_u64(0);
+        let to = CyclicScheduler.schedule(5, 5, &mut rng);
+        let ev = GcEvaluator::new(&to, 2, 3);
+        // r = 5, s = 2: groups [0,1], [2,3], [4]; flush slots 1, 3, 4
+        assert_eq!(&ev.flush_of[0..5], &[1, 1, 3, 3, 4]);
+        assert_eq!(&ev.flush_of[5..10], &[6, 6, 8, 8, 9]);
+        assert_eq!(ev.messages_per_round(), 5 * 3);
+        let ev1 = GcEvaluator::new(&to, 1, 3);
+        assert_eq!(ev1.flush_of, (0..25).collect::<Vec<_>>());
+        assert_eq!(ev1.messages_per_round(), 25);
+    }
+
+    #[test]
+    fn gc1_bit_identical_to_cs_kernel_both_modes() {
+        let (n, r, k) = (7usize, 5usize, 6usize);
+        let model = TruncatedGaussianModel::scenario2(n, 4);
+        let mut rng = Rng::seed_from_u64(11);
+        let batch = model.sample_batch(24, n, r, &mut rng);
+        let mut arrivals = Vec::new();
+        slot_arrivals_batch(&batch, &mut arrivals);
+        let mut rng_sched = Rng::seed_from_u64(0);
+        let to = CyclicScheduler.schedule(n, r, &mut rng_sched);
+        let mut cs = ToEvaluator::new(&to, k);
+        let mut gc = GcEvaluator::new(&to, 1, k);
+        let mut dummy = Rng::seed_from_u64(0);
+        for b in 0..batch.rounds {
+            let (arr, comp, comm) = round_views(&batch, &arrivals, b);
+            let view = RoundView {
+                arrivals: &arr,
+                comp: &comp,
+                comm: &comm,
+            };
+            let a = cs.completion(&view, &mut dummy);
+            let g = gc.completion(&view, &mut dummy);
+            assert_eq!(a.to_bits(), g.to_bits(), "round {b}");
+            let ai = cs.completion_ingest(&view, 0.15, &mut dummy);
+            let gi = gc.completion_ingest(&view, 0.15, &mut dummy);
+            assert_eq!(ai.to_bits(), gi.to_bits(), "ingest round {b}");
+        }
+    }
+
+    /// n = 4, r = 4, cyclic rows; worker 0 is fast (comp 1, comm 0.5
+    /// → arrivals 1.5, 2.5, 3.5, 4.5), workers 1–3 are very slow, so
+    /// with k = 1 only worker 0's flush schedule matters.
+    fn fast_worker_fixture() -> (ToMatrix, Vec<f64>, Vec<f64>, Vec<f64>) {
+        let mut rng = Rng::seed_from_u64(0);
+        let to = CyclicScheduler.schedule(4, 4, &mut rng);
+        let mut comp = vec![100.0; 16];
+        let mut comm = vec![0.5; 16];
+        comp[0..4].copy_from_slice(&[1.0; 4]);
+        comm[0..4].copy_from_slice(&[0.5; 4]);
+        let mut arrivals = Vec::with_capacity(16);
+        for i in 0..4 {
+            let mut prefix = 0.0;
+            for j in 0..4 {
+                prefix += comp[i * 4 + j];
+                arrivals.push(prefix + comm[i * 4 + j]);
+            }
+        }
+        (to, arrivals, comp, comm)
+    }
+
+    #[test]
+    fn grouping_defers_deliveries_on_fixture() {
+        // CS delivers worker 0's first task at 1.5; GC(2) holds it
+        // until slot 1 flushes at 2 + 0.5 = 2.5; GC(4) until slot 3
+        // flushes at 4.5.
+        let (to, arrivals, comp, comm) = fast_worker_fixture();
+        let view = RoundView {
+            arrivals: &arrivals,
+            comp: &comp,
+            comm: &comm,
+        };
+        let mut dummy = Rng::seed_from_u64(0);
+        for (s, want) in [(1usize, 1.5f64), (2, 2.5), (3, 3.5), (4, 4.5)] {
+            let mut ev = GcEvaluator::new(&to, s, 1);
+            assert_eq!(ev.completion(&view, &mut dummy), want, "s = {s}");
+        }
+    }
+
+    #[test]
+    fn ingest_charges_per_message_not_per_task() {
+        // ingest 10 ms dominates; with k = 1 the first processed
+        // message decides.  GC(1): worker 0's slot-0 message at 1.5 →
+        // 11.5.  GC(4): worker 0's single 4-task message at 4.5 → 14.5.
+        let (to, arrivals, comp, comm) = fast_worker_fixture();
+        let view = RoundView {
+            arrivals: &arrivals,
+            comp: &comp,
+            comm: &comm,
+        };
+        let mut dummy = Rng::seed_from_u64(0);
+        let mut gc1 = GcEvaluator::new(&to, 1, 1);
+        let mut gc4 = GcEvaluator::new(&to, 4, 1);
+        assert_eq!(gc1.completion_ingest(&view, 10.0, &mut dummy), 11.5);
+        assert_eq!(gc4.completion_ingest(&view, 10.0, &mut dummy), 14.5);
+    }
+
+    #[test]
+    fn applicability_bounds_group_by_row_length() {
+        assert!(GcScheme::new(1).applicable(8, 1, 8));
+        assert!(GcScheme::new(4).applicable(8, 4, 8));
+        assert!(!GcScheme::new(5).applicable(8, 4, 8));
+    }
+}

@@ -1,0 +1,238 @@
+//! Unified scheme-execution layer — the paper's "scheme" as a
+//! first-class, pluggable object.
+//!
+//! A *scheme* is an assignment + execution order + completion rule
+//! (paper Table I).  Before this layer existed, each scheme was a set
+//! of hardcoded `SchemeId` match arms scattered across the harness, the
+//! Monte-Carlo engine, the search, the lower bound and the coordinator,
+//! with completion semantics re-implemented per call site.  This module
+//! collapses all of that into one contract:
+//!
+//! * [`Scheme`] — constructor + paper-Table-I applicability; its
+//!   [`Scheme::prepare`] returns a reusable per-chunk evaluator, so all
+//!   setup (TO-matrix construction, `FlatTasks` flattening, coded
+//!   order-statistic thresholds, group layouts) happens **once**, never
+//!   in the per-round hot loop;
+//! * [`SchemeEvaluator`] — "given the precomputed `slot_arrivals` of a
+//!   [`DelayBatch`] chunk, produce per-round completion times",
+//!   preserving the bit-identity contract of [`crate::sim::batch`]
+//!   (same prefix-sum order, same min comparisons, same
+//!   `select_nth_unstable_by`);
+//! * [`run_rounds`] — the single chunked shard loop every batched
+//!   engine drives (harness evaluator, `MonteCarlo`, the §V lower
+//!   bound), so the delay-stream layout can never drift between them;
+//! * [`registry::SchemeRegistry`] — construction, applicability rules,
+//!   display names, CLI parsing, and the live-cluster execution plan
+//!   ([`ClusterPlan`]) consumed by [`crate::coordinator`].
+//!
+//! Adding a scheme is now one `impl Scheme` (see `EXPERIMENTS.md`
+//! §Schemes for the walkthrough); the grouped multi-message family
+//! [`gc::GcScheme`] is the reference example.
+
+pub mod exec;
+pub mod gc;
+pub mod registry;
+
+pub use exec::{
+    evaluator_for_scheduler, PcEvaluator, RedrawEvaluator, SlotOrderStatEvaluator, ToEvaluator,
+};
+pub use gc::GcScheme;
+pub use registry::SchemeRegistry;
+
+use crate::delay::{DelayBatch, DelayModel};
+use crate::scheduler::Scheduler;
+use crate::sim::{slot_arrivals_batch, BATCH_ROUNDS};
+use crate::util::rng::Rng;
+
+/// Scheme identifier used across harness, reports, configs and CLI — a
+/// thin name/ordering type; all behavior lives behind
+/// [`SchemeRegistry::build`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SchemeId {
+    /// Cyclic scheduling (paper §IV-A).
+    Cs,
+    /// Staircase scheduling (paper §IV-B).
+    Ss,
+    /// Random assignment baseline of [18] (r = n).
+    Ra,
+    /// Polynomially coded regression timing (Li et al. [13]).
+    Pc,
+    /// Polynomially coded multi-message timing (Ozfatura et al. [17]).
+    Pcmm,
+    /// The §V genie lower bound.
+    Lb,
+    /// Grouped multi-message cyclic: one partial-sum message every `s`
+    /// completed tasks (arXiv:2004.04948-style communication–
+    /// computation tradeoff); degenerates to CS at `s = 1`.
+    Gc(u32),
+}
+
+impl std::fmt::Display for SchemeId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SchemeId::Cs => f.write_str("CS"),
+            SchemeId::Ss => f.write_str("SS"),
+            SchemeId::Ra => f.write_str("RA"),
+            SchemeId::Pc => f.write_str("PC"),
+            SchemeId::Pcmm => f.write_str("PCMM"),
+            SchemeId::Lb => f.write_str("LB"),
+            SchemeId::Gc(s) => write!(f, "GC({s})"),
+        }
+    }
+}
+
+/// One round's view of a sampled [`DelayBatch`] chunk: the precomputed
+/// slot-arrival times (`n·r` values — [`slot_arrivals_batch`]) plus the
+/// raw per-slot delay rows the arrivals were derived from (PC's
+/// single-message timing needs the comp sums directly).
+pub struct RoundView<'a> {
+    /// Arrival time of every slot, `i·r + j` layout (eq. 1).
+    pub arrivals: &'a [f64],
+    /// Computation delays of every slot, same layout.
+    pub comp: &'a [f64],
+    /// Communication delays of every slot, same layout.
+    pub comm: &'a [f64],
+}
+
+/// A scheme constructor + its paper-Table-I applicability rules.
+///
+/// Implementations are cheap, stateless descriptors; all per-run state
+/// lives in the evaluator returned by [`Scheme::prepare`].
+pub trait Scheme: Send + Sync {
+    /// The thin identifier (also the display name via `Display`).
+    fn id(&self) -> SchemeId;
+
+    /// Paper-Table-I applicability at an `(n, r, k)` point — e.g.
+    /// `PC ⇒ r ≥ 2, k = n`; `RA ⇒ r = n`; `GC(s) ⇒ s ≤ r`.
+    fn applicable(&self, n: usize, r: usize, k: usize) -> bool;
+
+    /// Build a reusable per-chunk evaluator for this `(n, r, k)` point.
+    ///
+    /// All construction-time randomness (fixed schedules) must be drawn
+    /// from `rng_sched` **here**, in the order schemes are prepared —
+    /// that is what keeps registry-dispatched runs bit-identical to the
+    /// pre-refactor engines (randomized schemes draw per round inside
+    /// the evaluator instead).
+    fn prepare(&self, n: usize, r: usize, k: usize, rng_sched: &mut Rng)
+        -> Box<dyn SchemeEvaluator>;
+}
+
+/// The per-round completion kernel of a prepared scheme.
+///
+/// Contract: given one round's [`RoundView`] over the shared arrival
+/// array, produce the round's completion time with **exactly** the
+/// floating-point operations of the pre-refactor kernels (bit-identity
+/// is pinned by `rust/tests/scheme_registry.rs` and
+/// `rust/tests/batch_engine.rs`).  Dispatch cost is one virtual call
+/// per round per scheme; everything else was hoisted into `prepare`.
+pub trait SchemeEvaluator {
+    /// Idealized eq. (1)–(2) completion from the shared arrival array.
+    fn completion(&mut self, round: &RoundView<'_>, rng_sched: &mut Rng) -> f64;
+
+    /// Completion under the serialized master-ingestion queue
+    /// (`ingest_ms` per processed message — the testbed model of
+    /// [`crate::harness::EC2_INGEST_MS`]).
+    fn completion_ingest(
+        &mut self,
+        round: &RoundView<'_>,
+        ingest_ms: f64,
+        rng_sched: &mut Rng,
+    ) -> f64;
+}
+
+/// The shared chunked shard loop of every batched engine: sample delays
+/// in [`DelayBatch`] chunks, compute every slot's arrival **once** per
+/// chunk, evaluate all prepared schemes against that shared array, and
+/// emit `(scheme_idx, t)` per round per scheme in scheme order.
+///
+/// `rng` drives delay sampling; `rng_sched` drives per-round scheduling
+/// randomness (RA redraws).  Chunking, reallocation and RNG consumption
+/// mirror the pre-refactor loops exactly, so the delay stream seen for
+/// a fixed `(rounds, seed)` is unchanged.
+#[allow(clippy::too_many_arguments)]
+pub fn run_rounds<'a>(
+    evaluators: &mut [Box<dyn SchemeEvaluator + 'a>],
+    model: &dyn DelayModel,
+    n: usize,
+    r: usize,
+    rounds: usize,
+    ingest_ms: f64,
+    rng: &mut Rng,
+    rng_sched: &mut Rng,
+    emit: &mut dyn FnMut(usize, f64),
+) {
+    let stride = n * r;
+    let mut batch = DelayBatch::zeros(BATCH_ROUNDS.min(rounds.max(1)), n, r);
+    let mut arrivals: Vec<f64> = Vec::new();
+    let mut done = 0usize;
+    while done < rounds {
+        let chunk = BATCH_ROUNDS.min(rounds - done);
+        if batch.rounds != chunk {
+            batch = DelayBatch::zeros(chunk, n, r);
+        }
+        model.sample_batch_into(&mut batch, rng);
+        slot_arrivals_batch(&batch, &mut arrivals);
+        for b in 0..chunk {
+            let view = RoundView {
+                arrivals: &arrivals[b * stride..(b + 1) * stride],
+                comp: batch.comp_round(b),
+                comm: batch.comm_round(b),
+            };
+            for (idx, ev) in evaluators.iter_mut().enumerate() {
+                let t = if ingest_ms == 0.0 {
+                    ev.completion(&view, rng_sched)
+                } else {
+                    ev.completion_ingest(&view, ingest_ms, rng_sched)
+                };
+                emit(idx, t);
+            }
+        }
+        done += chunk;
+    }
+}
+
+/// How the live cluster master decides a round is complete.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CompletionRule {
+    /// Stop at `k` distinct task results (uncoded §II rule; `k` is the
+    /// cluster config's computation target).
+    DistinctTasks,
+    /// Stop after `threshold` received messages (the coded
+    /// order-statistic rule — PC's `2⌈n/r⌉ − 1`, PCMM's `2n − 1`).
+    Messages { threshold: usize },
+}
+
+/// How the live cluster executes a scheme — the coordinator-side
+/// counterpart of [`Scheme::prepare`], built by
+/// [`SchemeRegistry::cluster_plan`] so the socketed master/worker and
+/// the simulator consume one source of truth.
+pub struct ClusterPlan {
+    /// TO-matrix builder for per-round assignments.
+    pub scheduler: Box<dyn Scheduler>,
+    /// Workers flush one result message per `group` completed tasks
+    /// (1 = the paper's immediate streaming; `s` for GC(s); `r` for
+    /// PC's single message per worker).
+    pub group: usize,
+    /// Round-completion rule the master enforces.
+    pub rule: CompletionRule,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scheme_id_display() {
+        assert_eq!(SchemeId::Cs.to_string(), "CS");
+        assert_eq!(SchemeId::Pcmm.to_string(), "PCMM");
+        assert_eq!(SchemeId::Gc(1).to_string(), "GC(1)");
+        assert_eq!(SchemeId::Gc(12).to_string(), "GC(12)");
+    }
+
+    #[test]
+    fn gc_ids_compare_by_group() {
+        assert_eq!(SchemeId::Gc(2), SchemeId::Gc(2));
+        assert_ne!(SchemeId::Gc(2), SchemeId::Gc(3));
+        assert_ne!(SchemeId::Gc(1), SchemeId::Cs, "GC(1) ≡ CS in law, not in name");
+    }
+}

@@ -1,0 +1,335 @@
+//! The scheme registry: one place that owns scheme construction,
+//! paper-Table-I applicability, display names, CLI/config parsing, and
+//! the live-cluster execution plan.
+//!
+//! Everything that used to be a `SchemeId` match arm scattered across
+//! `harness/`, `config/`, `main.rs` and `coordinator/` now dispatches
+//! through here, so adding a scheme is: implement [`Scheme`] in one
+//! file, add one `build` arm (and a `parse` spelling), done — the
+//! Monte-Carlo engines, figures, CLI, configs and cluster pick it up.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::scheduler::{CyclicScheduler, RandomAssignment, Scheduler, StaircaseScheduler};
+use crate::util::rng::Rng;
+
+use super::exec::{evaluator_for_scheduler, PcEvaluator, SlotOrderStatEvaluator};
+use super::gc::GcScheme;
+use super::{ClusterPlan, CompletionRule, Scheme, SchemeEvaluator, SchemeId};
+
+/// Namespace for scheme construction and lookup (stateless — schemes
+/// are cheap descriptors built on demand from their [`SchemeId`]).
+pub struct SchemeRegistry;
+
+impl SchemeRegistry {
+    /// Construct the scheme behind an id.
+    pub fn build(id: SchemeId) -> Box<dyn Scheme> {
+        match id {
+            SchemeId::Cs => Box::new(CsScheme),
+            SchemeId::Ss => Box::new(SsScheme),
+            SchemeId::Ra => Box::new(RaScheme),
+            SchemeId::Pc => Box::new(PcTimingScheme),
+            SchemeId::Pcmm => Box::new(PcmmTimingScheme),
+            SchemeId::Lb => Box::new(GenieScheme),
+            SchemeId::Gc(s) => Box::new(GcScheme::new(s as usize)),
+        }
+    }
+
+    /// Paper-Table-I applicability of `id` at an `(n, r, k)` point.
+    pub fn applicable(id: SchemeId, n: usize, r: usize, k: usize) -> bool {
+        Self::build(id).applicable(n, r, k)
+    }
+
+    /// The paper's six baseline schemes, in figure order.
+    pub fn default_schemes() -> Vec<SchemeId> {
+        vec![
+            SchemeId::Cs,
+            SchemeId::Ss,
+            SchemeId::Ra,
+            SchemeId::Pc,
+            SchemeId::Pcmm,
+            SchemeId::Lb,
+        ]
+    }
+
+    /// Parse a scheme name as spelled in configs and on the CLI:
+    /// `CS | SS | RA | PC | PCMM | LB | GC(s) | GCs` (case-insensitive).
+    pub fn parse(name: &str) -> Result<SchemeId> {
+        let upper = name.trim().to_uppercase();
+        Ok(match upper.as_str() {
+            "CS" => SchemeId::Cs,
+            "SS" => SchemeId::Ss,
+            "RA" => SchemeId::Ra,
+            "PC" => SchemeId::Pc,
+            "PCMM" => SchemeId::Pcmm,
+            "LB" => SchemeId::Lb,
+            other => {
+                let Some(rest) = other.strip_prefix("GC") else {
+                    bail!("unknown scheme {name:?} (CS|SS|RA|PC|PCMM|LB|GC(s))");
+                };
+                // exactly `GCs` or `GC(s)` — unbalanced/doubled parens
+                // are user errors, not group sizes
+                let digits = match rest.strip_prefix('(') {
+                    Some(inner) => inner
+                        .strip_suffix(')')
+                        .filter(|d| !d.contains('(') && !d.contains(')'))
+                        .ok_or_else(|| anyhow!("malformed GC spelling {name:?}; want GC(s)"))?,
+                    None => rest,
+                };
+                let s: u32 = digits
+                    .parse()
+                    .map_err(|_| anyhow!("bad GC group size in {name:?}; want GC(s), s ≥ 1"))?;
+                if s == 0 {
+                    bail!("GC group size must be ≥ 1, got {name:?}");
+                }
+                SchemeId::Gc(s)
+            }
+        })
+    }
+
+    /// Build the live-cluster execution plan for a scheme at `(n, r, k)`
+    /// — the coordinator-side counterpart of [`Scheme::prepare`].
+    ///
+    /// Coded schemes (PC/PCMM) map to *timing rounds*: cyclic order,
+    /// PC's single flush per worker / PCMM's immediate streaming, and a
+    /// message-count completion rule; the master measures completion at
+    /// the recovery threshold but leaves θ untouched (the real
+    /// polynomial encode/decode lives in [`crate::coded`] — see
+    /// EXPERIMENTS.md §Schemes).  The genie bound has no constructive
+    /// live execution.
+    pub fn cluster_plan(id: SchemeId, n: usize, r: usize, k: usize) -> Result<ClusterPlan> {
+        if !Self::applicable(id, n, r, k) {
+            bail!("{id} is not applicable at (n = {n}, r = {r}, k = {k}) — paper Table I");
+        }
+        Ok(match id {
+            SchemeId::Cs => uncoded_plan(Box::new(CyclicScheduler), 1),
+            SchemeId::Ss => uncoded_plan(Box::new(StaircaseScheduler), 1),
+            SchemeId::Ra => uncoded_plan(Box::new(RandomAssignment), 1),
+            SchemeId::Gc(s) => uncoded_plan(Box::new(CyclicScheduler), s as usize),
+            SchemeId::Pc => ClusterPlan {
+                scheduler: Box::new(CyclicScheduler),
+                group: r,
+                rule: CompletionRule::Messages {
+                    threshold: 2 * n.div_ceil(r) - 1,
+                },
+            },
+            SchemeId::Pcmm => ClusterPlan {
+                scheduler: Box::new(CyclicScheduler),
+                group: 1,
+                rule: CompletionRule::Messages { threshold: 2 * n - 1 },
+            },
+            SchemeId::Lb => bail!(
+                "LB is a genie bound with no live execution; replay \
+                 scheduler::oracle_schedule offline instead"
+            ),
+        })
+    }
+}
+
+fn uncoded_plan(scheduler: Box<dyn Scheduler>, group: usize) -> ClusterPlan {
+    ClusterPlan {
+        scheduler,
+        group,
+        rule: CompletionRule::DistinctTasks,
+    }
+}
+
+/// Cyclic scheduling, any `1 ≤ r, k ≤ n` (paper Table I row 1).
+struct CsScheme;
+
+impl Scheme for CsScheme {
+    fn id(&self) -> SchemeId {
+        SchemeId::Cs
+    }
+
+    fn applicable(&self, _n: usize, _r: usize, _k: usize) -> bool {
+        true
+    }
+
+    fn prepare(
+        &self,
+        n: usize,
+        r: usize,
+        k: usize,
+        rng_sched: &mut Rng,
+    ) -> Box<dyn SchemeEvaluator> {
+        evaluator_for_scheduler(CyclicScheduler, n, r, k, rng_sched)
+    }
+}
+
+/// Staircase scheduling, any `1 ≤ r, k ≤ n`.
+struct SsScheme;
+
+impl Scheme for SsScheme {
+    fn id(&self) -> SchemeId {
+        SchemeId::Ss
+    }
+
+    fn applicable(&self, _n: usize, _r: usize, _k: usize) -> bool {
+        true
+    }
+
+    fn prepare(
+        &self,
+        n: usize,
+        r: usize,
+        k: usize,
+        rng_sched: &mut Rng,
+    ) -> Box<dyn SchemeEvaluator> {
+        evaluator_for_scheduler(StaircaseScheduler, n, r, k, rng_sched)
+    }
+}
+
+/// Random assignment — the [18] baseline requires the full dataset at
+/// every worker (`r = n`).
+struct RaScheme;
+
+impl Scheme for RaScheme {
+    fn id(&self) -> SchemeId {
+        SchemeId::Ra
+    }
+
+    fn applicable(&self, n: usize, r: usize, _k: usize) -> bool {
+        r == n
+    }
+
+    fn prepare(
+        &self,
+        n: usize,
+        r: usize,
+        k: usize,
+        rng_sched: &mut Rng,
+    ) -> Box<dyn SchemeEvaluator> {
+        evaluator_for_scheduler(RandomAssignment, n, r, k, rng_sched)
+    }
+}
+
+/// PC timing — `r ≥ 2`, full-gradient only (`k = n`), paper Table I.
+struct PcTimingScheme;
+
+impl Scheme for PcTimingScheme {
+    fn id(&self) -> SchemeId {
+        SchemeId::Pc
+    }
+
+    fn applicable(&self, n: usize, r: usize, k: usize) -> bool {
+        r >= 2 && k == n
+    }
+
+    fn prepare(
+        &self,
+        n: usize,
+        r: usize,
+        _k: usize,
+        _rng_sched: &mut Rng,
+    ) -> Box<dyn SchemeEvaluator> {
+        Box::new(PcEvaluator::new(n, r))
+    }
+}
+
+/// PCMM timing — `r ≥ 2`, `k = n`; completes at the `(2n − 1)`-th slot
+/// arrival.
+struct PcmmTimingScheme;
+
+impl Scheme for PcmmTimingScheme {
+    fn id(&self) -> SchemeId {
+        SchemeId::Pcmm
+    }
+
+    fn applicable(&self, n: usize, r: usize, k: usize) -> bool {
+        // n·r ≥ 2n − 1 evaluation slots are needed to ever decode;
+        // implied by r ≥ 2 for n ≥ 1
+        r >= 2 && k == n
+    }
+
+    fn prepare(
+        &self,
+        n: usize,
+        _r: usize,
+        _k: usize,
+        _rng_sched: &mut Rng,
+    ) -> Box<dyn SchemeEvaluator> {
+        Box::new(SlotOrderStatEvaluator::new(2 * n - 1))
+    }
+}
+
+/// The §V genie lower bound: the k-th smallest slot arrival.
+struct GenieScheme;
+
+impl Scheme for GenieScheme {
+    fn id(&self) -> SchemeId {
+        SchemeId::Lb
+    }
+
+    fn applicable(&self, _n: usize, _r: usize, _k: usize) -> bool {
+        true
+    }
+
+    fn prepare(
+        &self,
+        _n: usize,
+        _r: usize,
+        k: usize,
+        _rng_sched: &mut Rng,
+    ) -> Box<dyn SchemeEvaluator> {
+        Box::new(SlotOrderStatEvaluator::new(k))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_all_spellings() {
+        assert_eq!(SchemeRegistry::parse("cs").unwrap(), SchemeId::Cs);
+        assert_eq!(SchemeRegistry::parse("PCMM").unwrap(), SchemeId::Pcmm);
+        assert_eq!(SchemeRegistry::parse(" lb ").unwrap(), SchemeId::Lb);
+        assert_eq!(SchemeRegistry::parse("GC(3)").unwrap(), SchemeId::Gc(3));
+        assert_eq!(SchemeRegistry::parse("gc4").unwrap(), SchemeId::Gc(4));
+    }
+
+    #[test]
+    fn parse_rejects_junk() {
+        for bad in [
+            "", "XX", "GC", "GC(0)", "GC(-1)", "GC(two)", "GC(2", "GC2)", "GC((2))", "GC()",
+        ] {
+            assert!(SchemeRegistry::parse(bad).is_err(), "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn display_roundtrips_through_parse() {
+        let mut ids = SchemeRegistry::default_schemes();
+        ids.push(SchemeId::Gc(1));
+        ids.push(SchemeId::Gc(7));
+        for id in ids {
+            assert_eq!(SchemeRegistry::parse(&id.to_string()).unwrap(), id);
+        }
+    }
+
+    #[test]
+    fn cluster_plan_rules_match_table1() {
+        let p = SchemeRegistry::cluster_plan(SchemeId::Gc(2), 4, 4, 4).unwrap();
+        assert_eq!(p.group, 2);
+        assert_eq!(p.rule, CompletionRule::DistinctTasks);
+
+        let p = SchemeRegistry::cluster_plan(SchemeId::Pcmm, 4, 2, 4).unwrap();
+        assert_eq!(p.group, 1);
+        assert_eq!(p.rule, CompletionRule::Messages { threshold: 7 });
+
+        let p = SchemeRegistry::cluster_plan(SchemeId::Pc, 8, 4, 8).unwrap();
+        assert_eq!(p.group, 4, "PC sends one message per worker");
+        assert_eq!(p.rule, CompletionRule::Messages { threshold: 3 });
+
+        assert!(SchemeRegistry::cluster_plan(SchemeId::Lb, 4, 2, 4).is_err());
+        assert!(
+            SchemeRegistry::cluster_plan(SchemeId::Ra, 4, 3, 4).is_err(),
+            "RA needs r = n"
+        );
+        assert!(
+            SchemeRegistry::cluster_plan(SchemeId::Pc, 4, 4, 2).is_err(),
+            "coded schemes are k = n only"
+        );
+    }
+}

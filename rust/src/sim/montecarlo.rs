@@ -11,12 +11,16 @@
 //! higher explicitly — `threads` only controls the (deterministic)
 //! shard/RNG-stream layout, never oversubscription.
 //!
-//! Per shard the engine samples delays in [`DelayBatch`] chunks,
-//! computes every slot's arrival time **once** per chunk
-//! ([`slot_arrivals_batch`]), and evaluates all coupled schemes against
-//! that shared arrival array — the coupled estimator's "same delay
-//! stream for every scheme" fairness discipline, now also meaning the
-//! delays are *read* once per round instead of once per round × scheme.
+//! Per shard the engine samples delays in [`crate::delay::DelayBatch`]
+//! chunks, computes every slot's arrival time **once** per chunk
+//! ([`super::batch::slot_arrivals_batch`]), and evaluates all coupled
+//! schemes against that shared arrival array — the coupled estimator's
+//! "same delay stream for every scheme" fairness discipline, now also
+//! meaning the delays are *read* once per round instead of once per
+//! round × scheme.  Since PR 2 the batched arm is literally the figure
+//! harness's loop: schedulers are wrapped into prepared scheme-layer
+//! evaluators ([`crate::scheme::evaluator_for_scheduler`]) and driven
+//! by [`crate::scheme::run_rounds`].
 //! Trial statistics stream into `RunningStats` + `StreamingQuantiles`
 //! accumulators, so memory is O(schemes), not O(schemes × trials); the
 //! raw per-round values remain available through the opt-in
@@ -35,12 +39,12 @@
 //! the harness evaluator derive their streams through [`shard_rngs`] so
 //! the invariant cannot drift silently between code paths.
 
-use crate::delay::{DelayBatch, DelayModel, DelaySample};
+use crate::delay::{DelayModel, DelaySample};
 use crate::scheduler::{Scheduler, ToMatrix};
+use crate::scheme::{evaluator_for_scheduler, run_rounds, SchemeEvaluator};
 use crate::util::rng::Rng;
 use crate::util::stats::{RunningStats, StreamingQuantiles};
 
-use super::batch::{completion_from_arrivals, slot_arrivals_batch, FlatTasks};
 use super::completion_time_fast;
 use super::pool::WorkerPool;
 
@@ -348,6 +352,14 @@ impl MonteCarlo {
 /// round per scheme.  Fixed schedules are built once (consuming the
 /// scheduling RNG identically under both engines); randomized schemes
 /// redraw per round in round-major scheme order.
+///
+/// The batched arm dispatches through the unified scheme layer
+/// ([`crate::scheme`]): each scheduler is wrapped in a prepared
+/// evaluator and the shared [`run_rounds`] chunk loop does the rest —
+/// the same code path the figure harness runs, so the two engines
+/// cannot drift.  The scalar arm stays a hand-rolled per-round loop on
+/// purpose: it is the independent reference the bit-identity tests
+/// compare against.
 #[allow(clippy::too_many_arguments)]
 fn run_shard(
     schedulers: &[&dyn Scheduler],
@@ -363,20 +375,19 @@ fn run_shard(
 ) {
     let (mut rng, mut rng_sched) = shard_rngs(seed, shard);
 
-    // fixed schedules built once; randomized ones rebuilt per round
-    let fixed: Vec<Option<ToMatrix>> = schedulers
-        .iter()
-        .map(|s| {
-            if s.is_randomized() {
-                None
-            } else {
-                Some(s.schedule(n, r, &mut rng_sched))
-            }
-        })
-        .collect();
-
     match engine {
         Engine::Scalar => {
+            // fixed schedules built once; randomized ones rebuilt per round
+            let fixed: Vec<Option<ToMatrix>> = schedulers
+                .iter()
+                .map(|s| {
+                    if s.is_randomized() {
+                        None
+                    } else {
+                        Some(s.schedule(n, r, &mut rng_sched))
+                    }
+                })
+                .collect();
             let mut sample = DelaySample::zeros(n, r);
             let mut scratch: Vec<f64> = Vec::with_capacity(n);
             for _ in 0..rounds {
@@ -394,42 +405,23 @@ fn run_shard(
             }
         }
         Engine::Batched => {
-            let fixed_flat: Vec<Option<FlatTasks>> = fixed
+            // prepare consumes rng_sched in scheduler order, exactly
+            // like the scalar arm's fixed-schedule pass
+            let mut evaluators: Vec<Box<dyn SchemeEvaluator + '_>> = schedulers
                 .iter()
-                .map(|to| to.as_ref().map(FlatTasks::new))
+                .map(|s| evaluator_for_scheduler(*s, n, r, k, &mut rng_sched))
                 .collect();
-            let mut batch = DelayBatch::zeros(BATCH_ROUNDS.min(rounds.max(1)), n, r);
-            let mut arrivals: Vec<f64> = Vec::new();
-            let mut task_times: Vec<f64> = Vec::with_capacity(n);
-            // per-draw scratch for randomized schemes, refilled in place
-            let mut random_flat: Option<FlatTasks> = None;
-            let stride = n * r;
-            let mut done = 0usize;
-            while done < rounds {
-                let chunk = BATCH_ROUNDS.min(rounds - done);
-                if batch.rounds != chunk {
-                    batch = DelayBatch::zeros(chunk, n, r);
-                }
-                model.sample_batch_into(&mut batch, &mut rng);
-                slot_arrivals_batch(&batch, &mut arrivals);
-                for b in 0..chunk {
-                    let round_arrivals = &arrivals[b * stride..(b + 1) * stride];
-                    for (idx, sched) in schedulers.iter().enumerate() {
-                        let t = match &fixed_flat[idx] {
-                            Some(flat) => {
-                                completion_from_arrivals(flat, round_arrivals, k, &mut task_times)
-                            }
-                            None => {
-                                let to = sched.schedule(n, r, &mut rng_sched);
-                                let flat = FlatTasks::refill_or_init(&mut random_flat, &to);
-                                completion_from_arrivals(flat, round_arrivals, k, &mut task_times)
-                            }
-                        };
-                        emit(idx, t);
-                    }
-                }
-                done += chunk;
-            }
+            run_rounds(
+                &mut evaluators,
+                model,
+                n,
+                r,
+                rounds,
+                0.0,
+                &mut rng,
+                &mut rng_sched,
+                emit,
+            );
         }
     }
 }

@@ -5,6 +5,7 @@ use straggler_sched::coordinator::{run_cluster, ClusterConfig};
 use straggler_sched::data::Dataset;
 use straggler_sched::delay::DelayModelKind;
 use straggler_sched::scheduler::{CyclicScheduler, RandomAssignment, StaircaseScheduler};
+use straggler_sched::scheme::{CompletionRule, SchemeId, SchemeRegistry};
 
 fn base_config(n: usize, r: usize, k: usize, rounds: usize) -> ClusterConfig {
     ClusterConfig {
@@ -23,6 +24,8 @@ fn base_config(n: usize, r: usize, k: usize, rounds: usize) -> ClusterConfig {
         loss_every: 1,
         listen: None,
         spawn_workers: true,
+        group: 1,
+        rule: CompletionRule::DistinctTasks,
     }
 }
 
@@ -99,6 +102,72 @@ fn cluster_partial_target_sees_fewer_results_than_full_work() {
     assert!(
         avg_results < 12.0,
         "stop ack should curtail work: avg {avg_results} results/round of 16 max"
+    );
+}
+
+#[test]
+fn cluster_executes_gc_grouped_scheme_through_registry_plan() {
+    // GC(2) via the registry's ClusterPlan: workers flush one message
+    // per 2 completed tasks; training still converges and the message
+    // economy is visible in the round logs
+    let n = 4;
+    let plan = SchemeRegistry::cluster_plan(SchemeId::Gc(2), n, n, n).unwrap();
+    let mut cfg = base_config(n, n, n, 60);
+    cfg.scheduler = plan.scheduler;
+    cfg.group = plan.group;
+    cfg.rule = plan.rule;
+    let ds = cfg.dataset.clone();
+    let l0 = ds.loss(&vec![0.0; ds.d]);
+    let report = run_cluster(cfg).expect("GC cluster run");
+    assert_eq!(report.rounds.len(), 60);
+    for log in &report.rounds {
+        assert_eq!(log.winners.len(), n, "round {}", log.round);
+        let mut w = log.winners.clone();
+        w.sort_unstable();
+        w.dedup();
+        assert_eq!(w.len(), n, "winners must be distinct");
+        // every message carries exactly group = 2 results (r divisible
+        // by s, and partially-filled groups are abandoned on stop)
+        assert_eq!(
+            log.results_seen,
+            2 * log.messages_seen,
+            "round {}",
+            log.round
+        );
+        assert!(log.messages_seen >= n / 2, "round {}", log.round);
+    }
+    assert!(
+        report.final_loss < 0.2 * l0,
+        "GC training should converge: {l0} → {}",
+        report.final_loss
+    );
+}
+
+#[test]
+fn cluster_messages_rule_runs_timing_rounds_with_frozen_theta() {
+    // PCMM's plan: immediate streaming, completion at the 2n − 1-th
+    // received message; the master measures timing but must not touch θ
+    // (the uncoded h blocks cannot stand in for a polynomial decode)
+    let n = 4;
+    let plan = SchemeRegistry::cluster_plan(SchemeId::Pcmm, n, 2, n).unwrap();
+    assert_eq!(plan.rule, CompletionRule::Messages { threshold: 7 });
+    let mut cfg = base_config(n, 2, n, 10);
+    cfg.scheduler = plan.scheduler;
+    cfg.group = plan.group;
+    cfg.rule = plan.rule;
+    let ds = cfg.dataset.clone();
+    let l0 = ds.loss(&vec![0.0; ds.d]);
+    let report = run_cluster(cfg).expect("PCMM timing run");
+    assert_eq!(report.rounds.len(), 10);
+    for log in &report.rounds {
+        assert_eq!(log.messages_seen, 7, "round {}", log.round);
+        assert!(log.completion_ms > 0.0);
+        assert!(log.winners.len() <= n);
+    }
+    assert!(
+        (report.final_loss - l0).abs() < 1e-12,
+        "timing rounds must leave θ frozen: {l0} vs {}",
+        report.final_loss
     );
 }
 

@@ -229,6 +229,7 @@ fn prop_protocol_roundtrip_random_messages() {
     forall("protocol roundtrip", 300, |rng| {
         let msg = match rng.below(6) {
             0 => Msg::Welcome {
+                proto: rng.next_u64() as u32,
                 worker_id: rng.next_u64() as u32,
                 profile: format!("p{}", rng.below(100)),
             },
@@ -244,11 +245,12 @@ fn prop_protocol_roundtrip_random_messages() {
                 theta: (0..rng.below(128)).map(|_| rng.normal() as f32).collect(),
                 tasks: (0..rng.below(16)).map(|_| rng.below(99) as u32).collect(),
                 batches: (0..rng.below(16)).map(|_| rng.below(99) as u32).collect(),
+                group: 1 + rng.below(8) as u32,
             },
             3 => Msg::Result {
                 round: rng.next_u64() as u32,
                 worker_id: rng.below(64) as u32,
-                task: rng.below(64) as u32,
+                tasks: (1..=1 + rng.below(4)).map(|_| rng.below(64) as u32).collect(),
                 comp_us: rng.next_u64(),
                 send_ts_us: rng.next_u64(),
                 h: (0..rng.below(256)).map(|_| rng.normal() as f32).collect(),
@@ -287,6 +289,42 @@ fn prop_json_roundtrip_random_values() {
         let v = random_json(rng, 3);
         assert_eq!(Json::parse(&v.to_string_pretty()).unwrap(), v);
         assert_eq!(Json::parse(&v.to_string_compact()).unwrap(), v);
+    });
+}
+
+#[test]
+fn prop_gc1_bit_identical_to_cs_and_gc_groups_defer() {
+    // the scheme layer's grouped multi-message family must degenerate
+    // to CS exactly at s = 1 (both idealized and ingestion dynamics),
+    // for every shape and delay model
+    use straggler_sched::scheme::{RoundView, SchemeEvaluator as _, SchemeId, SchemeRegistry};
+    use straggler_sched::sim::slot_arrivals_batch;
+    forall("GC(1) ≡ CS pointwise", 60, |rng| {
+        let n = 2 + rng.below(10);
+        let r = 1 + rng.below(n);
+        let k = 1 + rng.below(n);
+        let model = random_model(rng, n);
+        let batch = model.sample_batch(6, n, r, rng);
+        let mut arrivals = Vec::new();
+        slot_arrivals_batch(&batch, &mut arrivals);
+        let stride = batch.stride();
+        let mut sched_a = Rng::seed_from_u64(0);
+        let mut sched_b = Rng::seed_from_u64(0);
+        let mut cs = SchemeRegistry::build(SchemeId::Cs).prepare(n, r, k, &mut sched_a);
+        let mut gc1 = SchemeRegistry::build(SchemeId::Gc(1)).prepare(n, r, k, &mut sched_b);
+        for b in 0..batch.rounds {
+            let view = RoundView {
+                arrivals: &arrivals[b * stride..(b + 1) * stride],
+                comp: batch.comp_round(b),
+                comm: batch.comm_round(b),
+            };
+            let a = cs.completion(&view, &mut sched_a);
+            let g = gc1.completion(&view, &mut sched_b);
+            assert_eq!(a.to_bits(), g.to_bits(), "n={n} r={r} k={k} round {b}");
+            let ai = cs.completion_ingest(&view, 0.15, &mut sched_a);
+            let gi = gc1.completion_ingest(&view, 0.15, &mut sched_b);
+            assert_eq!(ai.to_bits(), gi.to_bits(), "ingest n={n} r={r} k={k} round {b}");
+        }
     });
 }
 
