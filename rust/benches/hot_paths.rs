@@ -299,6 +299,58 @@ fn main() {
         }));
     }
 
+    group("protocol v3 wire economy (aggregated GC flush frames, d = 512)");
+    {
+        // a v3 GC(s) flush ships ONE d-block regardless of s; the PR-2
+        // wire shipped s concatenated per-task blocks.  Counter: frame
+        // bytes for an s = 4 flush, and the full-round totals at
+        // n = r = 16 (64 flush messages vs 256 per-task messages)
+        let d = 512usize;
+        let s = 4usize;
+        let flush = Msg::Result {
+            round: 1,
+            worker_id: 0,
+            tasks: (8..8 + s as u32).collect(),
+            comp_us: 1500,
+            send_ts_us: 123_456,
+            h: vec![1.25f32; d],
+        };
+        let v3_frame = 4 + flush.encode().len(); // + length prefix
+        let v2_frame = v3_frame + 4 * d * (s - 1); // s blocks, not one
+        let per_task = Msg::Result {
+            round: 1,
+            worker_id: 0,
+            tasks: vec![8],
+            comp_us: 1500,
+            send_ts_us: 123_456,
+            h: vec![1.25f32; d],
+        };
+        let single_frame = 4 + per_task.encode().len();
+        let (n_w, r_w) = (16usize, 16usize);
+        let v3_round = n_w * (r_w / s) * v3_frame;
+        let v2_round = n_w * (r_w / s) * v2_frame;
+        let cs_round = n_w * r_w * single_frame;
+        println!(
+            "wire/gc{s}_flush_d{d}: v3 {v3_frame} B vs PR-2 {v2_frame} B  \
+             →  {:.2}× frame shrink",
+            v2_frame as f64 / v3_frame as f64
+        );
+        println!(
+            "wire/full_round_n16_r16: GC({s}) v3 {v3_round} B, GC({s}) PR-2 \
+             {v2_round} B, CS per-task {cs_round} B  →  {:.2}× vs PR-2, \
+             {:.2}× vs CS",
+            v2_round as f64 / v3_round as f64,
+            cs_round as f64 / v3_round as f64
+        );
+        all.push(bench("wire/encode_gc4_aggregated_d512", || {
+            black_box(flush.encode());
+        }));
+        let enc = flush.encode();
+        all.push(bench("wire/decode_gc4_aggregated_d512", || {
+            black_box(Msg::decode(&enc).unwrap());
+        }));
+    }
+
     group("linalg oracle (d = 400, b = 60 — fig5 task shape)");
     {
         let mut rng = Rng::seed_from_u64(6);

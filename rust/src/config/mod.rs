@@ -140,7 +140,12 @@ impl Experiment {
                 .map(|v| v.as_f64().unwrap_or(0.0) as u64)
                 .unwrap_or(0xF16),
             ingest_ms: {
-                let v = root.get("ingest_ms").and_then(Json::as_f64).unwrap_or(0.0);
+                let v = match root.get("ingest_ms") {
+                    None => 0.0,
+                    Some(j) => j
+                        .as_f64()
+                        .ok_or_else(|| anyhow!("`ingest_ms` must be a number"))?,
+                };
                 if v.is_nan() || v < 0.0 {
                     bail!("`ingest_ms` must be a non-negative ms/message cost, got {v}");
                 }
@@ -305,16 +310,21 @@ mod tests {
     #[test]
     fn gc_schemes_parse_and_run_in_config() {
         let exp = Experiment::from_json_str(
-            r#"{"n": 6, "trials": 300, "schemes": ["CS", "GC(2)", "gc3"],
+            r#"{"n": 6, "trials": 300, "schemes": ["CS", "GC(2)", "gc3", "GCH(3,1)"],
                 "ingest_ms": 0.1, "model": {"kind": "scenario1"}}"#,
         )
         .unwrap();
         assert_eq!(
             exp.schemes,
-            vec![SchemeId::Cs, SchemeId::Gc(2), SchemeId::Gc(3)]
+            vec![
+                SchemeId::Cs,
+                SchemeId::Gc(2),
+                SchemeId::Gc(3),
+                SchemeId::GcHet(3, 1)
+            ]
         );
         let table = exp.run();
-        assert_eq!(table.headers, vec!["r", "k", "CS", "GC(2)", "GC(3)"]);
+        assert_eq!(table.headers, vec!["r", "k", "CS", "GC(2)", "GC(3)", "GCH(3,1)"]);
         for cell in &table.rows[0][2..] {
             assert!(cell.parse::<f64>().unwrap() > 0.0);
         }
@@ -331,6 +341,8 @@ mod tests {
             r#"{"n": 4, "schemes": ["XX"], "model": {"kind": "scenario1"}}"#,
             r#"{"n": 4, "schemes": ["GC(0)"], "model": {"kind": "scenario1"}}"#,
             r#"{"n": 4, "ingest_ms": -0.1, "model": {"kind": "scenario1"}}"#,
+            // wrong-typed ingest_ms must error, not coerce to 0
+            r#"{"n": 4, "ingest_ms": "0.2", "model": {"kind": "scenario1"}}"#,
             // GC(4) needs s ≤ r but the sweep only visits r = 2
             r#"{"n": 4, "rs": [2], "schemes": ["GC(4)"], "model": {"kind": "scenario1"}}"#,
             // RA needs r = n, never reached by this sweep

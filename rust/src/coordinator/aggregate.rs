@@ -1,0 +1,288 @@
+//! Duplicate-safe master-side aggregation of partial-sum result blocks
+//! (protocol v3, uncoded `DistinctTasks` schemes).
+//!
+//! A v3 `Result` frame carries one aggregated block `Σ_t h(X_t)` over a
+//! contiguous task range — the range is the block's *id*.  Because the
+//! sum is irreversible, the master can only combine blocks whose ranges
+//! are **disjoint**; this module is the state machine that decides, per
+//! incoming range, whether it is fresh information, a duplicate, or an
+//! unusable partial overlap — and guarantees a late straggler's
+//! duplicate flush can never double-count a task into θ.
+//!
+//! Structure: task space `[0, n)` is partitioned into canonical blocks
+//! of `s` tasks (`s` = the scheme's flush group; the last block is
+//! ragged when `s ∤ n`).  Workers flush at canonical boundaries
+//! (`Assign.align`), so **every received range lies inside exactly one
+//! canonical block** — cross-worker merging reduces to interval
+//! bookkeeping per block, never across blocks.  Within a block the
+//! rules are:
+//!
+//! * disjoint from everything accepted → accept;
+//! * fully covered by accepted ranges → duplicate, drop (the
+//!   duplicate-safety guarantee);
+//! * partial overlap → accept only if the incoming range is strictly
+//!   longer than the accepted ranges it intersects (replacing them —
+//!   coverage grows strictly, so acceptance is monotone); otherwise
+//!   drop it as stranded.
+//!
+//! Liveness: with the cyclic assignment the registry pairs GC(s) with,
+//! worker `i`'s row decomposes into a head suffix and a tail prefix of
+//! the *same* canonical block plus full middle blocks (for `r = n`), so
+//! any single worker that finishes its row completes every block — the
+//! round can always terminate, exactly like CS.  For `r < n` every task
+//! is still covered by `r` workers at `r` different alignments; the
+//! stranded-overlap case only delays (never prevents) the `k`-distinct
+//! rule in the paper's regimes.
+//!
+//! Determinism: [`RoundAggregator::finish`] emits winners and the
+//! gradient partial-sum in **canonical task order** (blocks ascending,
+//! ranges ascending within a block), independent of arrival order —
+//! the property `rust/tests/partial_sum.rs` pins (bit-identical θ
+//! across `s` and arrival orders on exactly-representable values).
+
+use crate::linalg::vec_axpy;
+
+/// Verdict on one offered result block.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Offer {
+    /// Fresh coverage: `new_distinct` tasks newly counted (a
+    /// strict-growth replacement reports the net gain).
+    Accepted { new_distinct: usize },
+    /// Every task of the range was already covered — dropped whole.
+    Duplicate,
+    /// Partial overlap with no strict coverage growth — dropped whole
+    /// (its sum cannot be split).
+    Stranded,
+    /// Not a contiguous in-bounds range inside one canonical block.
+    Malformed,
+}
+
+/// An accepted range: `[start, start + len)` plus its `d`-length sum.
+struct AccRange {
+    start: usize,
+    len: usize,
+    sum: Vec<f64>,
+}
+
+/// Per-round aggregation state for the uncoded `DistinctTasks` rule:
+/// one list of accepted, pairwise-disjoint ranges per canonical block.
+pub struct RoundAggregator {
+    n: usize,
+    d: usize,
+    s: usize,
+    k: usize,
+    blocks: Vec<Vec<AccRange>>,
+    distinct: usize,
+}
+
+impl RoundAggregator {
+    /// `n` tasks, `d`-dimensional blocks, flush group `s`, target `k`.
+    pub fn new(n: usize, d: usize, s: usize, k: usize) -> Self {
+        assert!(n >= 1 && d >= 1, "degenerate round shape");
+        assert!(s >= 1, "flush group must be ≥ 1");
+        assert!(k >= 1 && k <= n, "need 1 ≤ k ≤ n");
+        Self {
+            n,
+            d,
+            s,
+            k,
+            blocks: (0..n.div_ceil(s)).map(|_| Vec::new()).collect(),
+            distinct: 0,
+        }
+    }
+
+    /// Offer one received block: a contiguous ascending task range and
+    /// its aggregated `d`-length sum.
+    pub fn offer(&mut self, tasks: &[usize], sum: &[f64]) -> Offer {
+        if tasks.is_empty() || sum.len() != self.d {
+            return Offer::Malformed;
+        }
+        let (start, len) = (tasks[0], tasks.len());
+        if start + len > self.n || tasks.windows(2).any(|w| w[1] != w[0] + 1) {
+            return Offer::Malformed;
+        }
+        if (start / self.s) != ((start + len - 1) / self.s) {
+            return Offer::Malformed; // straddles a canonical boundary
+        }
+        let ranges = &mut self.blocks[start / self.s];
+        let end = start + len;
+        // `inter` measures the covered part of the incoming range (for
+        // duplicate detection); `dropped_len` is the *full* length of
+        // every accepted range it touches — those are what a
+        // replacement would evict whole, so strict coverage growth
+        // requires `len > dropped_len`, not merely `len > inter`
+        let (mut inter, mut dropped_len) = (0usize, 0usize);
+        for r in ranges.iter() {
+            let ov = end.min(r.start + r.len).saturating_sub(start.max(r.start));
+            if ov > 0 {
+                inter += ov;
+                dropped_len += r.len;
+            }
+        }
+        if inter == len {
+            return Offer::Duplicate;
+        }
+        if inter == 0 {
+            ranges.push(AccRange {
+                start,
+                len,
+                sum: sum.to_vec(),
+            });
+            self.distinct += len;
+            return Offer::Accepted { new_distinct: len };
+        }
+        // partial overlap: replace the intersecting ranges only if the
+        // swap strictly grows coverage (monotone acceptance)
+        if len > dropped_len {
+            ranges.retain(|r| r.start + r.len <= start || r.start >= end);
+            ranges.push(AccRange {
+                start,
+                len,
+                sum: sum.to_vec(),
+            });
+            let gained = len - dropped_len;
+            self.distinct += gained;
+            Offer::Accepted {
+                new_distinct: gained,
+            }
+        } else {
+            Offer::Stranded
+        }
+    }
+
+    /// Distinct tasks covered so far.
+    pub fn distinct(&self) -> usize {
+        self.distinct
+    }
+
+    /// Has the `k`-distinct completion rule fired?
+    pub fn complete(&self) -> bool {
+        self.distinct >= self.k
+    }
+
+    /// Emit the winners (canonical task order) and the gradient
+    /// partial-sum `Σ_{t ∈ winners} h(X_t)`, accumulated in canonical
+    /// order so the result is independent of arrival order.
+    pub fn finish(mut self) -> (Vec<usize>, Vec<f64>) {
+        let mut winners = Vec::with_capacity(self.distinct);
+        let mut total = vec![0.0f64; self.d];
+        for ranges in &mut self.blocks {
+            ranges.sort_unstable_by_key(|r| r.start);
+            for range in ranges.iter() {
+                winners.extend(range.start..range.start + range.len);
+                vec_axpy(&mut total, 1.0, &range.sum);
+            }
+        }
+        (winners, total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sum_of(tasks: &[usize], d: usize) -> Vec<f64> {
+        // task t contributes the vector [t+1, t+1, …] — integer-exact
+        (0..d)
+            .map(|_| tasks.iter().map(|&t| (t + 1) as f64).sum())
+            .collect()
+    }
+
+    fn offer_range(agg: &mut RoundAggregator, lo: usize, hi: usize, d: usize) -> Offer {
+        let tasks: Vec<usize> = (lo..hi).collect();
+        agg.offer(&tasks, &sum_of(&tasks, d))
+    }
+
+    #[test]
+    fn singleton_groups_reproduce_k_distinct_dedup() {
+        let mut agg = RoundAggregator::new(4, 2, 1, 3);
+        assert_eq!(offer_range(&mut agg, 1, 2, 2), Offer::Accepted { new_distinct: 1 });
+        assert_eq!(offer_range(&mut agg, 1, 2, 2), Offer::Duplicate);
+        assert_eq!(offer_range(&mut agg, 3, 4, 2), Offer::Accepted { new_distinct: 1 });
+        assert!(!agg.complete());
+        assert_eq!(offer_range(&mut agg, 0, 1, 2), Offer::Accepted { new_distinct: 1 });
+        assert!(agg.complete());
+        let (winners, total) = agg.finish();
+        assert_eq!(winners, vec![0, 1, 3]);
+        assert_eq!(total, vec![6.0, 6.0]); // 1 + 2 + 4
+    }
+
+    #[test]
+    fn complementary_suffix_and_prefix_tile_a_block() {
+        // block [0, 3): suffix {1, 2} then prefix {0}
+        let mut agg = RoundAggregator::new(6, 1, 3, 6);
+        assert_eq!(offer_range(&mut agg, 1, 3, 1), Offer::Accepted { new_distinct: 2 });
+        assert_eq!(offer_range(&mut agg, 0, 1, 1), Offer::Accepted { new_distinct: 1 });
+        // full block now duplicates the tiled pair
+        assert_eq!(offer_range(&mut agg, 0, 3, 1), Offer::Duplicate);
+        assert_eq!(agg.distinct(), 3);
+    }
+
+    #[test]
+    fn partial_overlap_is_stranded_unless_strictly_longer() {
+        let mut agg = RoundAggregator::new(4, 1, 4, 4);
+        assert_eq!(offer_range(&mut agg, 1, 3, 1), Offer::Accepted { new_distinct: 2 });
+        // {2, 3} overlaps {1, 2} and is not longer → stranded whole
+        assert_eq!(offer_range(&mut agg, 2, 4, 1), Offer::Stranded);
+        assert_eq!(agg.distinct(), 2);
+        // the full block is strictly longer → replaces the pair
+        assert_eq!(offer_range(&mut agg, 0, 4, 1), Offer::Accepted { new_distinct: 2 });
+        assert_eq!(agg.distinct(), 4);
+        let (winners, total) = agg.finish();
+        assert_eq!(winners, vec![0, 1, 2, 3]);
+        assert_eq!(total, vec![10.0]); // the replacement's own sum, once
+    }
+
+    #[test]
+    fn replacement_never_double_counts() {
+        // accept {0}, then the longer {0, 1, 2} replaces it: coverage
+        // goes 1 → 3 and the finish sum holds each task exactly once
+        let mut agg = RoundAggregator::new(3, 1, 3, 3);
+        assert_eq!(offer_range(&mut agg, 0, 1, 1), Offer::Accepted { new_distinct: 1 });
+        assert_eq!(offer_range(&mut agg, 0, 3, 1), Offer::Accepted { new_distinct: 2 });
+        let (winners, total) = agg.finish();
+        assert_eq!(winners, vec![0, 1, 2]);
+        assert_eq!(total, vec![6.0]);
+    }
+
+    #[test]
+    fn replacement_that_would_shrink_coverage_is_stranded() {
+        // accepted {0,1} and {3,4} (coverage 4); incoming {1,2,3} is
+        // longer than its *intersection* (2) but would evict 4 covered
+        // tasks for 3 — it must be stranded, not swapped in
+        let mut agg = RoundAggregator::new(5, 1, 5, 5);
+        assert_eq!(offer_range(&mut agg, 0, 2, 1), Offer::Accepted { new_distinct: 2 });
+        assert_eq!(offer_range(&mut agg, 3, 5, 1), Offer::Accepted { new_distinct: 2 });
+        assert_eq!(offer_range(&mut agg, 1, 4, 1), Offer::Stranded);
+        assert_eq!(agg.distinct(), 4);
+        // the exact gap filler is still welcome
+        assert_eq!(offer_range(&mut agg, 2, 3, 1), Offer::Accepted { new_distinct: 1 });
+        let (winners, total) = agg.finish();
+        assert_eq!(winners, vec![0, 1, 2, 3, 4]);
+        assert_eq!(total, vec![15.0]);
+    }
+
+    #[test]
+    fn rejects_malformed_ranges() {
+        let mut agg = RoundAggregator::new(8, 2, 2, 8);
+        assert_eq!(agg.offer(&[], &[0.0, 0.0]), Offer::Malformed);
+        assert_eq!(agg.offer(&[1], &[0.0]), Offer::Malformed); // wrong d
+        assert_eq!(agg.offer(&[3, 5], &[0.0, 0.0]), Offer::Malformed); // gap
+        assert_eq!(agg.offer(&[7, 8], &[0.0, 0.0]), Offer::Malformed); // oob
+        assert_eq!(agg.offer(&[1, 2], &[0.0, 0.0]), Offer::Malformed); // straddle
+        assert_eq!(agg.offer(&[2, 3], &[0.0, 0.0]), Offer::Accepted { new_distinct: 2 });
+    }
+
+    #[test]
+    fn ragged_last_block_accepts_short_range() {
+        // n = 5, s = 2 → blocks [0,2) [2,4) [4,5)
+        let mut agg = RoundAggregator::new(5, 1, 2, 5);
+        assert_eq!(offer_range(&mut agg, 4, 5, 1), Offer::Accepted { new_distinct: 1 });
+        assert_eq!(offer_range(&mut agg, 0, 2, 1), Offer::Accepted { new_distinct: 2 });
+        assert_eq!(offer_range(&mut agg, 2, 4, 1), Offer::Accepted { new_distinct: 2 });
+        assert!(agg.complete());
+        let (winners, total) = agg.finish();
+        assert_eq!(winners, vec![0, 1, 2, 3, 4]);
+        assert_eq!(total, vec![15.0]);
+    }
+}

@@ -1,5 +1,19 @@
 //! Cluster master (leader): schedules, distributes, collects, stops,
 //! updates — the paper's §II protocol over real sockets.
+//!
+//! Since protocol v3 the master speaks every scheme natively
+//! ([`crate::scheme::WirePlan`]):
+//!
+//! * **uncoded** (CS/SS/RA/GC(s)) — workers stream aggregated
+//!   partial-sum blocks; the master merges them duplicate-safe by task
+//!   range ([`super::aggregate::RoundAggregator`]) and applies the
+//!   eq. 61 update from the merged sum — a GC(s) flush costs one
+//!   `d`-vector on the wire instead of `s`;
+//! * **coded** (PC/PCMM) — the master encodes each worker's matrices
+//!   with [`crate::coded`] at load time, collects polynomial
+//!   evaluations, and at the recovery threshold *decodes* the exact
+//!   full gradient and steps θ (eq. 49) — Messages-rule rounds are no
+//!   longer timing-only.
 
 use std::collections::HashSet;
 use std::io::Write as _;
@@ -9,14 +23,17 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
+use super::aggregate::{Offer, RoundAggregator};
 use super::protocol::Msg;
 use super::{now_us, TaskDelaySampler};
+use crate::coded::{PcScheme, PcmmScheme};
 use crate::data::Dataset;
 use crate::delay::DelayModelKind;
-use crate::gd::UncodedMaster;
+use crate::gd::{coded_update, UncodedMaster};
+use crate::linalg::{vec_axpy, Mat};
 use crate::metrics::DelayRecorder;
-use crate::scheduler::Scheduler;
-use crate::scheme::CompletionRule;
+use crate::scheduler::Scheduler as _;
+use crate::scheme::{ClusterPlan, CompletionRule, WirePlan};
 use crate::util::rng::Rng;
 
 /// Cluster configuration.
@@ -28,7 +45,10 @@ pub struct ClusterConfig {
     pub rounds: usize,
     /// artifact profile the workers execute (`task_gram` entry)
     pub profile: String,
-    pub scheduler: Box<dyn Scheduler>,
+    /// how the scheme executes on the wire — scheduler, flush group,
+    /// completion rule and payload semantics, built by
+    /// [`crate::scheme::SchemeRegistry::cluster_plan`]
+    pub plan: ClusterPlan,
     pub dataset: Dataset,
     /// injected straggling; `None` measures bare-metal delays
     pub inject: Option<DelayModelKind>,
@@ -43,34 +63,28 @@ pub struct ClusterConfig {
     /// spawn the n workers in-process (false = wait for external
     /// `straggler worker --connect` processes — real multi-process mode)
     pub spawn_workers: bool,
-    /// workers flush one result message per `group` completed tasks
-    /// (1 = the paper's immediate streaming; `s` executes GC(s), `r`
-    /// executes PC's one-message-per-worker — see
-    /// [`crate::scheme::SchemeRegistry::cluster_plan`])
-    pub group: usize,
-    /// round-completion rule the master enforces.  `DistinctTasks`
-    /// (uncoded §II: stop at `k` distinct results, apply the DGD
-    /// update) or `Messages { threshold }` (coded order-statistic
-    /// timing: stop at the threshold-th received message; θ is left
-    /// untouched — the polynomial decode lives in [`crate::coded`])
-    pub rule: CompletionRule,
 }
 
 /// Per-round record.
 #[derive(Debug, Clone)]
 pub struct RoundLog {
     pub round: usize,
-    /// wall-clock ms from round start to completion (k-th distinct
-    /// result, or the threshold-th message under a `Messages` rule)
+    /// wall-clock ms from round start to completion (k distinct tasks,
+    /// or the threshold-th message under a `Messages` rule)
     pub completion_ms: f64,
-    /// the distinct tasks held at completion, in arrival order (`k` of
-    /// them under `DistinctTasks`; possibly fewer under `Messages`)
+    /// the distinct winners held at completion — task ids in canonical
+    /// order for the uncoded wire; evaluation keys (worker ids for PC,
+    /// global slot ids for PCMM) in arrival order for the coded wires
     pub winners: Vec<usize>,
     /// total task results received (incl. duplicates)
     pub results_seen: usize,
-    /// result messages received — `results_seen / group` up to the
-    /// stop-ack tail; the GC(s) communication saving shows up here
+    /// result messages received — the GC(s) communication saving in
+    /// message count
     pub messages_seen: usize,
+    /// total wire bytes of the received result frames (length prefix +
+    /// payload) — the GC(s) payload saving: one aggregated block per
+    /// flush, so bytes/round shrink ≈ s× vs per-task blocks
+    pub wire_bytes: usize,
     pub loss: Option<f64>,
 }
 
@@ -88,6 +102,17 @@ impl ClusterReport {
         let s: f64 = self.rounds.iter().map(|r| r.completion_ms).sum();
         s / self.rounds.len().max(1) as f64
     }
+
+    pub fn mean_wire_bytes(&self) -> f64 {
+        let s: usize = self.rounds.iter().map(|r| r.wire_bytes).sum();
+        s as f64 / self.rounds.len().max(1) as f64
+    }
+}
+
+/// Which coded construction the master encodes/decodes with.
+enum Coded {
+    Pc(PcScheme),
+    Pcmm(PcmmScheme),
 }
 
 /// Run a full cluster experiment: spawns `n` in-process workers over
@@ -100,7 +125,7 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
         eta,
         rounds,
         profile,
-        scheduler,
+        plan,
         dataset,
         inject,
         seed,
@@ -109,20 +134,70 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
         loss_every,
         listen,
         spawn_workers,
+    } = cfg;
+    let ClusterPlan {
+        scheduler,
         group,
         rule,
-    } = cfg;
+        wire,
+    } = plan;
     anyhow::ensure!(dataset.n == n, "dataset partitions must equal n");
     anyhow::ensure!(k >= 1 && k <= n, "need 1 ≤ k ≤ n");
     anyhow::ensure!(r >= 1 && r <= n, "need 1 ≤ r ≤ n");
     anyhow::ensure!(group >= 1 && group <= r, "need 1 ≤ group ≤ r");
     if let CompletionRule::Messages { threshold } = rule {
-        let max_messages = n * r.div_ceil(group);
+        // aligned flushing can split a worker's row into up to two
+        // extra frames (misaligned head block + the mod-n wrap break)
+        // beyond the ⌈r/group⌉ of plain grouped flushing
+        let extra = match wire {
+            WirePlan::Uncoded { align: true } => 2,
+            _ => 0,
+        };
+        let max_messages = n * (r.div_ceil(group) + extra);
         anyhow::ensure!(
             threshold >= 1 && threshold <= max_messages,
             "message threshold {threshold} unreachable: at most {max_messages} messages/round"
         );
     }
+    let coded = match wire {
+        WirePlan::Uncoded { align } => {
+            // alignment is what keeps every flushed range inside one
+            // canonical block, which both the duplicate-safe θ merge
+            // (DistinctTasks) and the message accounting of timing
+            // rounds (Messages) rely on — unaligned multi-task ranges
+            // would be dropped as out-of-plan and stall the round
+            anyhow::ensure!(
+                align || group == 1,
+                "grouped uncoded flushes must be aligned \
+                 (WirePlan::Uncoded {{ align: true }}) for duplicate-safe \
+                 range aggregation"
+            );
+            None
+        }
+        WirePlan::Pc => {
+            let pc = PcScheme::new(n, r);
+            let want = CompletionRule::Messages {
+                threshold: pc.recovery_threshold(),
+            };
+            anyhow::ensure!(
+                rule == want && group == r,
+                "PC wire needs group = r and the Messages rule at its recovery threshold"
+            );
+            Some(Coded::Pc(pc))
+        }
+        WirePlan::Pcmm => {
+            let pcmm = PcmmScheme::new(n, r);
+            let want = CompletionRule::Messages {
+                threshold: pcmm.recovery_threshold(),
+            };
+            anyhow::ensure!(
+                rule == want && group == 1,
+                "PCMM wire needs group = 1 and the Messages rule at its recovery threshold"
+            );
+            Some(Coded::Pcmm(pcmm))
+        }
+    };
+    let align = matches!(wire, WirePlan::Uncoded { align: true });
 
     let listener = match &listen {
         Some(addr) => TcpListener::bind(addr.as_str())
@@ -158,7 +233,7 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
 
     // ---- accept + handshake ------------------------------------------------
     let mut streams: Vec<TcpStream> = Vec::with_capacity(n);
-    let (res_tx, res_rx) = mpsc::channel::<Msg>();
+    let (res_tx, res_rx) = mpsc::channel::<(Msg, usize)>();
     for id in 0..n {
         let (stream, _) = listener.accept().context("accepting worker")?;
         stream.set_nodelay(true)?;
@@ -168,15 +243,16 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
             profile: profile.clone(),
         }
         .write_to(&mut &stream)?;
-        // receiver thread: forward Results to the master channel
+        // receiver thread: forward Results (plus frame size) to the
+        // master channel
         let mut rd = stream.try_clone()?;
         let tx = res_tx.clone();
         std::thread::Builder::new()
             .name(format!("master-recv{id}"))
             .spawn(move || loop {
-                match Msg::read_from(&mut rd) {
-                    Ok(msg) => {
-                        if tx.send(msg).is_err() {
+                match Msg::read_frame(&mut rd) {
+                    Ok(framed) => {
+                        if tx.send(framed).is_err() {
                             return;
                         }
                     }
@@ -187,23 +263,47 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
     }
 
     // ---- data distribution --------------------------------------------------
-    // fixed schedulers: ship only the batches in the worker's TO row;
-    // randomized (RA): ship everything.
+    // uncoded, fixed schedulers: ship only the batches in the worker's
+    // TO row; randomized (RA): ship everything; coded: encode each
+    // worker's matrices here (the worker grams them obliviously —
+    // coding is invisible below the master)
     let mut rng_sched = Rng::seed_from_u64(seed ^ 0x5C4ED);
-    let fixed_to = if scheduler.is_randomized() {
-        None
-    } else {
+    let fixed_to = if coded.is_none() && !scheduler.is_randomized() {
         Some(scheduler.schedule(n, r, &mut rng_sched))
+    } else {
+        None
     };
     for (id, stream) in streams.iter().enumerate() {
-        let needed: Vec<usize> = match &fixed_to {
-            Some(to) => to.row(id).to_vec(),
-            None => (0..n).collect(),
+        let batches: Vec<(u32, Vec<f32>)> = match &coded {
+            Some(Coded::Pc(pc)) => pc
+                .encode_coeffs(id)
+                .iter()
+                .enumerate()
+                .map(|(j, row)| {
+                    (
+                        (id * r + j) as u32,
+                        Mat::linear_combination(row, &dataset.parts).to_f32(),
+                    )
+                })
+                .collect(),
+            Some(Coded::Pcmm(pcmm)) => (0..r)
+                .map(|j| {
+                    (
+                        (id * r + j) as u32,
+                        Mat::linear_combination(&pcmm.encode_coeffs(id, j), &dataset.parts)
+                            .to_f32(),
+                    )
+                })
+                .collect(),
+            None => match &fixed_to {
+                Some(to) => to
+                    .row(id)
+                    .iter()
+                    .map(|&b| (b as u32, dataset.parts[b].to_f32()))
+                    .collect(),
+                None => (0..n).map(|b| (b as u32, dataset.parts[b].to_f32())).collect(),
+            },
         };
-        let batches: Vec<(u32, Vec<f32>)> = needed
-            .iter()
-            .map(|&b| (b as u32, dataset.parts[b].to_f32()))
-            .collect();
         Msg::LoadData {
             d: dataset.d as u32,
             b: dataset.b as u32,
@@ -214,42 +314,66 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
 
     // ---- round loop ----------------------------------------------------------
     let mut master = UncodedMaster::new(&dataset, eta, k);
+    // coded decode target: Xᵀy = Σ_i X_i y_i, precomputed once (eq. 49)
+    let xty_total: Option<Vec<f64>> = coded.as_ref().map(|_| {
+        let mut total = vec![0.0; dataset.d];
+        for xy in &master.xy {
+            vec_axpy(&mut total, 1.0, xy);
+        }
+        total
+    });
     let mut rng = Rng::seed_from_u64(seed);
     let mut recorders = vec![DelayRecorder::default(); n];
     let mut logs = Vec::with_capacity(rounds);
+    let d = dataset.d;
 
     for round in 0..rounds {
-        let to = match &fixed_to {
-            Some(to) => to.clone(),
-            None => scheduler.schedule(n, r, &mut rng_sched),
+        let to = if coded.is_none() {
+            Some(match &fixed_to {
+                Some(to) => to.clone(),
+                None => scheduler.schedule(n, r, &mut rng_sched),
+            })
+        } else {
+            None
         };
         let theta32: Vec<f32> = master.theta.iter().map(|&v| v as f32).collect();
         let round_tag = round as u32;
         let t0_us = now_us();
         for (id, stream) in streams.iter().enumerate() {
-            let row = to.row(id);
+            // uncoded: the worker's TO row (identity task↔batch map in
+            // cluster mode — no Remark-3 reshuffle, it would force data
+            // re-distribution); coded: the worker's fixed global slots
+            let tasks: Vec<u32> = match &to {
+                Some(to) => to.row(id).iter().map(|&t| t as u32).collect(),
+                None => (id * r..(id + 1) * r).map(|s| s as u32).collect(),
+            };
             Msg::Assign {
                 round: round_tag,
                 theta: theta32.clone(),
-                tasks: row.iter().map(|&t| t as u32).collect(),
-                // identity mapping in cluster mode (no Remark-3
-                // reshuffle — it would force data re-distribution)
-                batches: row.iter().map(|&t| t as u32).collect(),
+                tasks: tasks.clone(),
+                batches: tasks,
                 group: group as u32,
+                align,
             }
             .write_to(&mut &*stream)?;
         }
 
-        // collect until the completion rule fires: k distinct task
-        // results (uncoded), or the threshold-th message (coded timing)
-        let mut seen = HashSet::with_capacity(k);
-        let mut received: Vec<(usize, Vec<f64>)> = Vec::with_capacity(k);
+        // collect until the completion rule fires: k distinct tasks
+        // (uncoded, duplicate-safe range merge) or the threshold-th
+        // evaluation (coded)
+        let mut agg = if coded.is_none() {
+            Some(RoundAggregator::new(n, d, group, k))
+        } else {
+            None
+        };
+        let mut responses: Vec<(usize, Vec<f64>)> = Vec::new();
+        let mut seen_keys: HashSet<usize> = HashSet::new();
         let mut results_seen = 0usize;
         let mut messages_seen = 0usize;
-        let d = dataset.d;
+        let mut wire_bytes = 0usize;
         let completion_ms;
         loop {
-            let msg = res_rx
+            let (msg, frame_len) = res_rx
                 .recv_timeout(Duration::from_secs(60))
                 .context("master timed out waiting for results")?;
             let Msg::Result {
@@ -266,7 +390,8 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
             if rr != round_tag {
                 continue; // stale result from a stopped round
             }
-            if h.len() != tasks.len() * d {
+            // v3 invariant: one aggregated d-length block per message
+            if h.len() != d || tasks.is_empty() || worker_id as usize >= n {
                 eprintln!(
                     "master: dropping malformed result from worker {worker_id} \
                      ({} tasks, {} h values, d = {d})",
@@ -276,29 +401,80 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
                 continue;
             }
             let recv_us = now_us();
+            let h64: Vec<f64> = h.iter().map(|&v| v as f64).collect();
+            let task_ids: Vec<usize> = tasks.iter().map(|&t| t as usize).collect();
+            let complete = match (&coded, agg.as_mut()) {
+                (None, Some(agg)) => {
+                    match agg.offer(&task_ids, &h64) {
+                        Offer::Malformed => {
+                            eprintln!(
+                                "master: dropping out-of-plan range {task_ids:?} \
+                                 from worker {worker_id}"
+                            );
+                            continue;
+                        }
+                        // duplicates and stranded overlaps still count
+                        // as received traffic (results_seen includes
+                        // duplicates, as in §II) — they just cannot
+                        // reach θ
+                        Offer::Accepted { .. } | Offer::Duplicate | Offer::Stranded => {}
+                    }
+                    match rule {
+                        CompletionRule::DistinctTasks => agg.complete(),
+                        CompletionRule::Messages { threshold } => {
+                            messages_seen + 1 == threshold
+                        }
+                    }
+                }
+                (Some(c), _) => {
+                    let key = match c {
+                        // PC: one flush per worker, keyed by worker
+                        Coded::Pc(_) => {
+                            if task_ids.len() != r {
+                                eprintln!(
+                                    "master: dropping partial PC flush from \
+                                     worker {worker_id}"
+                                );
+                                continue;
+                            }
+                            worker_id as usize
+                        }
+                        // PCMM: one evaluation per message, keyed by
+                        // the global slot id
+                        Coded::Pcmm(_) => {
+                            let slot = task_ids[0];
+                            if task_ids.len() != 1 || slot / r != worker_id as usize {
+                                eprintln!(
+                                    "master: dropping malformed PCMM evaluation \
+                                     {task_ids:?} from worker {worker_id}"
+                                );
+                                continue;
+                            }
+                            slot
+                        }
+                    };
+                    // a duplicate evaluation adds nothing to the decode
+                    // but is still received traffic — it must reach the
+                    // messages/wire-bytes accounting below, like uncoded
+                    // duplicates
+                    if seen_keys.insert(key) {
+                        responses.push((key, h64));
+                    }
+                    match rule {
+                        CompletionRule::Messages { threshold } => {
+                            responses.len() == threshold
+                        }
+                        CompletionRule::DistinctTasks => unreachable!("validated above"),
+                    }
+                }
+                (None, None) => unreachable!("uncoded wire always has an aggregator"),
+            };
             messages_seen += 1;
-            results_seen += tasks.len();
+            results_seen += task_ids.len();
+            wire_bytes += frame_len;
             recorders[worker_id as usize].record_comp(comp_us as f64 / 1e3);
             recorders[worker_id as usize]
                 .record_comm((recv_us.saturating_sub(send_ts_us)) as f64 / 1e3);
-            let mut complete = false;
-            for (i, &task) in tasks.iter().enumerate() {
-                if seen.insert(task) {
-                    received.push((
-                        task as usize,
-                        h[i * d..(i + 1) * d].iter().map(|&v| v as f64).collect(),
-                    ));
-                    if rule == CompletionRule::DistinctTasks && received.len() == k {
-                        // remaining tasks of this message are beyond the
-                        // target; the whole group arrived at recv time
-                        complete = true;
-                        break;
-                    }
-                }
-            }
-            if let CompletionRule::Messages { threshold } = rule {
-                complete = messages_seen == threshold;
-            }
             if complete {
                 completion_ms = (recv_us - t0_us) as f64 / 1e3;
                 break;
@@ -310,12 +486,47 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
             Msg::Stop { round: round_tag }.write_to(&mut &*stream)?;
         }
 
-        let winners: Vec<usize> = received.iter().map(|(t, _)| *t).collect();
-        if rule == CompletionRule::DistinctTasks {
-            master.apply_round(&received, n, dataset.padded_samples(), &mut rng);
-        }
-        // Messages-rule rounds are timing rounds: θ stays frozen (the
-        // uncoded h blocks cannot stand in for a polynomial decode)
+        // ---- the scheme's master update ------------------------------------
+        let winners: Vec<usize> = match &coded {
+            None => {
+                let (winners, h_sum) = agg.take().expect("uncoded aggregator").finish();
+                if rule == CompletionRule::DistinctTasks {
+                    master.apply_aggregate(
+                        &winners,
+                        &h_sum,
+                        n,
+                        dataset.padded_samples(),
+                        &mut rng,
+                    );
+                }
+                // an uncoded Messages rule (hand-built configs only) is
+                // a pure timing round: θ stays frozen
+                winners
+            }
+            Some(c) => {
+                // decode input is key-shaped per construction; the
+                // update and winner bookkeeping are shared
+                let xxt = match c {
+                    Coded::Pc(pc) => pc.decode(&responses[..pc.recovery_threshold()]),
+                    Coded::Pcmm(pcmm) => {
+                        let take = pcmm.recovery_threshold();
+                        let pairs: Vec<((usize, usize), Vec<f64>)> = responses[..take]
+                            .iter()
+                            .map(|(key, v)| ((key / r, key % r), v.clone()))
+                            .collect();
+                        pcmm.decode(&pairs)
+                    }
+                };
+                coded_update(
+                    &mut master.theta,
+                    &xxt,
+                    xty_total.as_ref().expect("coded xty"),
+                    eta,
+                    dataset.padded_samples(),
+                );
+                responses.iter().map(|(key, _)| *key).collect()
+            }
+        };
         let loss = if loss_every > 0 && (round + 1) % loss_every == 0 {
             Some(dataset.loss(&master.theta))
         } else {
@@ -327,6 +538,7 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
             winners,
             results_seen,
             messages_seen,
+            wire_bytes,
             loss,
         });
     }

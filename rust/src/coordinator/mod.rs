@@ -17,10 +17,12 @@
 //! machine's true microsecond-scale delays instead (that mode feeds the
 //! Fig.-3-style histograms).
 
+pub mod aggregate;
 pub mod master;
 pub mod protocol;
 pub mod worker;
 
+pub use aggregate::{Offer, RoundAggregator};
 pub use master::{run_cluster, ClusterConfig, ClusterReport, RoundLog};
 pub use protocol::Msg;
 pub use worker::{run_worker, Backend, WorkerOptions};

@@ -10,11 +10,24 @@
 //! master → worker:  Welcome, LoadData (once), Assign (per round),
 //!                   Stop (ack — paper's "acknowledgement message"),
 //!                   Shutdown
-//! worker → master:  Result (one per completed task *group*; group
+//! worker → master:  Result (one per flushed task *group*; group
 //!                   size 1 is the paper's immediate streaming, larger
 //!                   groups are the GC(s) grouped-flush schemes — see
 //!                   `crate::scheme::ClusterPlan`)
 //! ```
+//!
+//! Since protocol v3 a `Result` frame is **scheme-native**: it carries
+//! one *aggregated* `d`-length partial-sum block — `Σ_t h(X_t)` over
+//! the flushed tasks — instead of the flushed tasks' concatenated
+//! per-task blocks, so a GC(s) flush costs the same wire bytes as a
+//! single-task message (the `s×` payload saving the scheme promises).
+//! The task ids still travel with the frame; they are the block's
+//! *range id*, which the master's duplicate-safe aggregation keys on
+//! (see `crate::coordinator::aggregate`).  For the coded schemes the
+//! aggregated block **is** the scheme's message: PC's per-worker sum
+//! `φ(x_i)` and PCMM's per-slot evaluation `ψ(β_{i,j})`, which the
+//! master decodes with [`crate::coded`] instead of treating as raw
+//! task gradients.
 
 use std::io::{Read, Write};
 
@@ -24,10 +37,11 @@ use anyhow::{bail, Context, Result};
 pub const MAX_FRAME: u32 = 256 * 1024 * 1024;
 
 /// Wire-protocol version, bumped on every incompatible frame change
-/// (v2: grouped `Result` frames + `Assign.group`, PR 2).  Sent in
+/// (v2: grouped `Result` frames + `Assign.group`, PR 2; v3: aggregated
+/// partial-sum `Result` blocks + `Assign.align`, PR 3).  Sent in
 /// `Welcome` so a version-skewed worker fails the handshake with a
 /// clear message instead of mis-decoding result frames.
-pub const PROTO_VERSION: u32 = 2;
+pub const PROTO_VERSION: u32 = 3;
 
 /// Protocol messages.
 #[derive(Debug, Clone, PartialEq)]
@@ -50,19 +64,26 @@ pub enum Msg {
     /// (the worker's TO-matrix row; `batches[j]` is the batch index the
     /// `j`-th task maps to under the master's current task↔batch map).
     /// `group` is the flush size: send one `Result` per `group`
-    /// completed tasks (1 = immediate streaming).
+    /// completed tasks (1 = immediate streaming).  With `align` set the
+    /// worker instead flushes at task-space boundaries (after task `t`
+    /// with `(t+1) % group == 0`, and whenever the next task is not
+    /// `t + 1`), so every flushed range lies inside one canonical
+    /// `group`-sized block and the master's duplicate-safe range
+    /// aggregation can merge blocks across workers.
     Assign {
         round: u32,
         theta: Vec<f32>,
         tasks: Vec<u32>,
         batches: Vec<u32>,
         group: u32,
+        align: bool,
     },
-    /// worker → master after each flushed group: the computed `h(X)`
-    /// blocks of the group's tasks (concatenated, `tasks.len() · d`
-    /// values in task order) plus the worker-measured computation time
-    /// of the whole group and the send timestamp (µs on the shared
-    /// process clock) so the master can measure comm delay.
+    /// worker → master after each flushed group: **one aggregated
+    /// `d`-length block** `Σ_t h(X_t)` over the group's tasks (protocol
+    /// v3 — per-task blocks no longer travel), plus the worker-measured
+    /// computation time of the whole group and the send timestamp (µs
+    /// on the shared process clock) so the master can measure comm
+    /// delay.  `tasks` is the range id the master aggregates by.
     Result {
         round: u32,
         worker_id: u32,
@@ -116,6 +137,7 @@ impl Msg {
                 tasks,
                 batches,
                 group,
+                align,
             } => {
                 out.push(Self::TAG_ASSIGN);
                 put_u32(&mut out, *round);
@@ -123,6 +145,7 @@ impl Msg {
                 put_u32s(&mut out, tasks);
                 put_u32s(&mut out, batches);
                 put_u32(&mut out, *group);
+                out.push(u8::from(*align));
             }
             Msg::Result {
                 round,
@@ -176,6 +199,11 @@ impl Msg {
                 tasks: c.u32s()?,
                 batches: c.u32s()?,
                 group: c.u32()?,
+                align: match c.u8()? {
+                    0 => false,
+                    1 => true,
+                    b => bail!("bad align byte {b} in Assign frame"),
+                },
             },
             Self::TAG_RESULT => Msg::Result {
                 round: c.u32()?,
@@ -207,13 +235,19 @@ impl Msg {
 
     /// Read one framed message (blocking).
     pub fn read_from(r: &mut impl Read) -> Result<Msg> {
+        Ok(Self::read_frame(r)?.0)
+    }
+
+    /// Read one framed message plus its total wire size (length prefix
+    /// + payload) — feeds the master's per-round wire-bytes accounting.
+    pub fn read_frame(r: &mut impl Read) -> Result<(Msg, usize)> {
         let mut len4 = [0u8; 4];
         r.read_exact(&mut len4).context("reading frame length")?;
         let len = u32::from_le_bytes(len4);
         anyhow::ensure!(len <= MAX_FRAME, "oversized frame {len}");
         let mut payload = vec![0u8; len as usize];
         r.read_exact(&mut payload).context("reading frame body")?;
-        Msg::decode(&payload)
+        Ok((Msg::decode(&payload)?, 4 + len as usize))
     }
 }
 
@@ -323,6 +357,15 @@ mod tests {
             tasks: vec![3, 1, 0],
             batches: vec![3, 1, 0],
             group: 2,
+            align: false,
+        });
+        roundtrip(Msg::Assign {
+            round: 13,
+            theta: vec![],
+            tasks: vec![0, 1, 2, 3],
+            batches: vec![0, 1, 2, 3],
+            group: 2,
+            align: true,
         });
         roundtrip(Msg::Result {
             round: 12,
@@ -332,14 +375,14 @@ mod tests {
             send_ts_us: 999_999,
             h: vec![f32::MIN, f32::MAX, 0.0],
         });
-        // grouped flush: two tasks, concatenated h blocks
+        // grouped flush: two tasks, one aggregated d = 2 sum block (v3)
         roundtrip(Msg::Result {
             round: 13,
             worker_id: 0,
             tasks: vec![1, 2],
             comp_us: 2048,
             send_ts_us: 1_000_001,
-            h: vec![1.0, 2.0, 3.0, 4.0],
+            h: vec![4.0, 6.0],
         });
         roundtrip(Msg::Stop { round: 12 });
         roundtrip(Msg::Shutdown);
@@ -371,6 +414,21 @@ mod tests {
     #[test]
     fn rejects_unknown_tag() {
         assert!(Msg::decode(&[99]).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_align_byte() {
+        let mut enc = Msg::Assign {
+            round: 1,
+            theta: vec![],
+            tasks: vec![0],
+            batches: vec![0],
+            group: 1,
+            align: false,
+        }
+        .encode();
+        *enc.last_mut().unwrap() = 7; // align byte is the final field
+        assert!(Msg::decode(&enc).is_err());
     }
 
     #[test]

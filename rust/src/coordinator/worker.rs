@@ -11,9 +11,13 @@
 //!   buffering finished results and **flushing one message per
 //!   `group` completed tasks** (`group = 1` is the paper's immediate
 //!   streaming; larger groups execute the GC(s) schemes of
-//!   `crate::scheme::gc` — the flushed message carries the whole
-//!   group's `h` blocks and rides the flush task's comm delay, matching
-//!   the simulator's flush-slot arrival model);
+//!   `crate::scheme::gc` — the flushed message carries **one
+//!   aggregated `d`-length partial sum** over the group, protocol v3,
+//!   and rides the flush task's comm delay, matching the simulator's
+//!   flush-slot arrival model).  Under `Assign.align` the flush points
+//!   move to task-space boundaries so every flushed range lies inside
+//!   one canonical block of the master's duplicate-safe aggregation
+//!   (`crate::coordinator::aggregate`);
 //! * **delivery threads** — each flushed message is handed to a
 //!   short-lived sender that sleeps out the injected communication
 //!   delay before writing the frame, so comm delays overlap the
@@ -64,6 +68,7 @@ enum Work {
         tasks: Vec<u32>,
         batches: Vec<u32>,
         group: u32,
+        align: bool,
     },
     Shutdown,
 }
@@ -116,6 +121,7 @@ pub fn run_worker(addr: std::net::SocketAddr, mut opts: WorkerOptions) -> Result
                         tasks,
                         batches,
                         group,
+                        align,
                     }) => {
                         let _ = tx.send(Work::Assign {
                             round,
@@ -123,6 +129,7 @@ pub fn run_worker(addr: std::net::SocketAddr, mut opts: WorkerOptions) -> Result
                             tasks,
                             batches,
                             group,
+                            align,
                         });
                     }
                     Ok(Msg::Stop { round }) => {
@@ -189,12 +196,15 @@ pub fn run_worker(addr: std::net::SocketAddr, mut opts: WorkerOptions) -> Result
                 tasks,
                 batches,
                 group,
+                align,
             } => {
                 let group = (group.max(1) as usize).min(tasks.len().max(1));
                 // grouped-flush buffers (GC(s)); group = 1 flushes every
-                // task, i.e. the paper's immediate streaming
+                // task, i.e. the paper's immediate streaming.  The
+                // buffer holds one f64 running sum, not per-task blocks
+                // — protocol v3 ships the aggregate only.
                 let mut buf_tasks: Vec<u32> = Vec::with_capacity(group);
-                let mut buf_h: Vec<f32> = Vec::new();
+                let mut buf_sum: Vec<f64> = Vec::new();
                 let mut buf_comp_us: u64 = 0;
                 for (slot, (&task, &batch)) in tasks.iter().zip(&batches).enumerate() {
                     // paper: stop as soon as the ack for *this* round
@@ -212,7 +222,7 @@ pub fn run_worker(addr: std::net::SocketAddr, mut opts: WorkerOptions) -> Result
                     if inj_comp_ms > 0.0 {
                         spin_sleep(Duration::from_secs_f64(inj_comp_ms / 1e3));
                     }
-                    let h: Vec<f32> = match opts.backend {
+                    let h: Vec<f64> = match opts.backend {
                         Backend::CpuOracle => {
                             let part = oracle_parts
                                 .get(&batch)
@@ -220,9 +230,6 @@ pub fn run_worker(addr: std::net::SocketAddr, mut opts: WorkerOptions) -> Result
                             let theta64: Vec<f64> =
                                 theta.iter().map(|&v| v as f64).collect();
                             part.gram_matvec(&theta64)
-                                .into_iter()
-                                .map(|v| v as f32)
-                                .collect()
                         }
                         Backend::Pjrt => {
                             let rt = runtime.as_mut().expect("runtime initialized on load");
@@ -231,19 +238,37 @@ pub fn run_worker(addr: std::net::SocketAddr, mut opts: WorkerOptions) -> Result
                                 "batch {batch} not loaded"
                             );
                             rt.task_gram_resident(&profile, &format!("x{batch}"), &theta)?
+                                .into_iter()
+                                .map(f64::from)
+                                .collect()
                         }
                     };
                     buf_comp_us += now_us() - t0;
                     buf_tasks.push(task);
-                    buf_h.extend_from_slice(&h);
+                    if buf_sum.is_empty() {
+                        buf_sum = h;
+                    } else {
+                        crate::linalg::vec_axpy(&mut buf_sum, 1.0, &h);
+                    }
 
                     // --- communication phase (eq. 1 second term) ---
                     // flush one message per `group` finished tasks (plus
-                    // the row's ragged tail); delivery is delayed on a
+                    // the row's ragged tail) — or, in aligned mode, at
+                    // canonical task-space boundaries and contiguity
+                    // breaks, so every flushed range sits inside one
+                    // canonical block.  Delivery is delayed on a
                     // separate thread riding the *flush* task's comm
                     // delay, so the next computation starts immediately
                     // — the simulator's flush-slot arrival model
-                    if buf_tasks.len() < group && slot + 1 != tasks.len() {
+                    let last_slot = slot + 1 == tasks.len();
+                    let flush = if align {
+                        last_slot
+                            || (task as usize + 1) % group == 0
+                            || tasks[slot + 1] != task.wrapping_add(1)
+                    } else {
+                        last_slot || buf_tasks.len() == group
+                    };
+                    if !flush {
                         continue;
                     }
                     let msg = Msg::Result {
@@ -252,7 +277,10 @@ pub fn run_worker(addr: std::net::SocketAddr, mut opts: WorkerOptions) -> Result
                         tasks: std::mem::take(&mut buf_tasks),
                         comp_us: std::mem::take(&mut buf_comp_us),
                         send_ts_us: now_us(),
-                        h: std::mem::take(&mut buf_h),
+                        h: std::mem::take(&mut buf_sum)
+                            .into_iter()
+                            .map(|v| v as f32)
+                            .collect(),
                     };
                     let writer = Arc::clone(&writer);
                     let inflight2 = Arc::clone(&inflight);

@@ -84,8 +84,46 @@ impl UncodedMaster {
             vec_axpy(&mut agg, 1.0, h);
             vec_axpy(&mut agg, -1.0, &self.xy[batch]);
         }
-        // eq. 61 scale: η · 2n / (kN)
-        let scale = self.eta * 2.0 * n_tasks as f64 / (self.k as f64 * n_padded as f64);
+        self.step(agg, received.len(), n_tasks, n_padded, rng)
+    }
+
+    /// Apply one round from an already-aggregated partial sum
+    /// `h_sum = Σ_{t ∈ winners} h(X_t)` — the protocol-v3 cluster path,
+    /// where per-task blocks never reach the master
+    /// ([`crate::coordinator::aggregate`]).  `winners` may exceed `k`
+    /// when an aligned GC(s) block straddles the target: eq. 61's
+    /// `k` becomes the actual winner count `m` (still an unbiased
+    /// partial-gradient step, Remark 2).
+    pub fn apply_aggregate(
+        &mut self,
+        winners: &[usize],
+        h_sum: &[f64],
+        n_tasks: usize,
+        n_padded: usize,
+        rng: &mut Rng,
+    ) -> &[f64] {
+        assert!(!winners.is_empty(), "master must apply ≥ 1 results");
+        assert_eq!(h_sum.len(), self.theta.len());
+        let mut agg = h_sum.to_vec();
+        for &task in winners {
+            let batch = self.mapping[task];
+            self.task_counts[batch] += 1;
+            vec_axpy(&mut agg, -1.0, &self.xy[batch]);
+        }
+        self.step(agg, winners.len(), n_tasks, n_padded, rng)
+    }
+
+    /// Shared eq.-61 step: `θ ← θ − η·2n/(mN) · agg` with `m` received
+    /// results, plus the Remark-3 reshuffle bookkeeping.
+    fn step(
+        &mut self,
+        agg: Vec<f64>,
+        m: usize,
+        n_tasks: usize,
+        n_padded: usize,
+        rng: &mut Rng,
+    ) -> &[f64] {
+        let scale = self.eta * 2.0 * n_tasks as f64 / (m as f64 * n_padded as f64);
         vec_axpy(&mut self.theta, -scale, &agg);
 
         self.rounds += 1;
@@ -295,6 +333,71 @@ mod tests {
         let mut sorted = m.mapping.clone();
         sorted.sort_unstable();
         assert_eq!(sorted, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn aggregate_path_matches_per_task_path() {
+        // the v3 cluster feeds apply_aggregate; it must take the same
+        // eq.-61 step as the per-task path up to summation order
+        let ds = Dataset::synthesize(5, 6, 40, 12);
+        let theta0: Vec<f64> = (0..6).map(|i| 0.1 * i as f64 - 0.2).collect();
+        let winners = [1usize, 2, 4];
+        let received: Vec<(usize, Vec<f64>)> = winners
+            .iter()
+            .map(|&t| (t, ds.parts[t].gram_matvec(&theta0)))
+            .collect();
+        let mut per_task = UncodedMaster::new(&ds, 0.05, 3);
+        per_task.theta = theta0.clone();
+        let mut rng = Rng::seed_from_u64(0);
+        per_task.apply_round(&received, ds.n, ds.padded_samples(), &mut rng);
+
+        let mut h_sum = vec![0.0; ds.d];
+        for (_, h) in &received {
+            vec_axpy(&mut h_sum, 1.0, h);
+        }
+        let mut agg = UncodedMaster::new(&ds, 0.05, 3);
+        agg.theta = theta0.clone();
+        let mut rng = Rng::seed_from_u64(0);
+        agg.apply_aggregate(&winners, &h_sum, ds.n, ds.padded_samples(), &mut rng);
+        for i in 0..ds.d {
+            assert!(
+                (per_task.theta[i] - agg.theta[i]).abs() < 1e-12,
+                "coord {i}: {} vs {}",
+                per_task.theta[i],
+                agg.theta[i]
+            );
+        }
+        assert_eq!(per_task.task_counts, agg.task_counts);
+    }
+
+    #[test]
+    fn aggregate_scales_by_actual_winner_count() {
+        // m = 4 winners with k = 3 configured: the step must scale by
+        // m (the straddled-block overshoot case), i.e. equal a k = 4
+        // per-task round
+        let ds = Dataset::synthesize(6, 4, 36, 3);
+        let theta0 = vec![0.3; 4];
+        let winners = [0usize, 2, 3, 5];
+        let received: Vec<(usize, Vec<f64>)> = winners
+            .iter()
+            .map(|&t| (t, ds.parts[t].gram_matvec(&theta0)))
+            .collect();
+        let mut want = UncodedMaster::new(&ds, 0.05, 4);
+        want.theta = theta0.clone();
+        let mut rng = Rng::seed_from_u64(1);
+        want.apply_round(&received, ds.n, ds.padded_samples(), &mut rng);
+
+        let mut h_sum = vec![0.0; ds.d];
+        for (_, h) in &received {
+            vec_axpy(&mut h_sum, 1.0, h);
+        }
+        let mut got = UncodedMaster::new(&ds, 0.05, 3); // k = 3 configured
+        got.theta = theta0.clone();
+        let mut rng = Rng::seed_from_u64(1);
+        got.apply_aggregate(&winners, &h_sum, ds.n, ds.padded_samples(), &mut rng);
+        for i in 0..ds.d {
+            assert!((want.theta[i] - got.theta[i]).abs() < 1e-12, "coord {i}");
+        }
     }
 
     #[test]

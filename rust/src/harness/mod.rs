@@ -20,8 +20,8 @@ use crate::data::Dataset;
 use crate::delay::{DelayModel, DelayModelKind, Ec2LikeModel, TruncatedGaussianModel};
 use crate::metrics::{fit_truncated_gaussian, Histogram};
 use crate::report::Table;
-use crate::scheduler::{CyclicScheduler, SchemeId};
-use crate::scheme::{CompletionRule, SchemeRegistry};
+use crate::scheduler::SchemeId;
+use crate::scheme::SchemeRegistry;
 use crate::sim::CompletionEstimate;
 
 /// Common harness options.
@@ -171,11 +171,7 @@ fn fig5_cluster_spotcheck(opts: &Options) -> Result<Table> {
     );
     for r in [2usize, 8, n] {
         let mut row = vec![r.to_string()];
-        for scheme in ["CS", "SS"] {
-            let scheduler: Box<dyn crate::scheduler::Scheduler> = match scheme {
-                "CS" => Box::new(CyclicScheduler),
-                _ => Box::new(crate::scheduler::StaircaseScheduler),
-            };
+        for id in [SchemeId::Cs, SchemeId::Ss] {
             let report = run_cluster(ClusterConfig {
                 n,
                 r,
@@ -183,7 +179,7 @@ fn fig5_cluster_spotcheck(opts: &Options) -> Result<Table> {
                 eta: 0.01,
                 rounds,
                 profile: "fig5".into(),
-                scheduler,
+                plan: SchemeRegistry::cluster_plan(id, n, r, n)?,
                 dataset: Dataset::synthesize(n, 400, 900, opts.seed),
                 inject: Some(DelayModelKind::Ec2Like {
                     seed: opts.seed ^ 0xEC2,
@@ -195,8 +191,6 @@ fn fig5_cluster_spotcheck(opts: &Options) -> Result<Table> {
                 loss_every: 0,
                 listen: None,
                 spawn_workers: true,
-                group: 1,
-                rule: CompletionRule::DistinctTasks,
             })?;
             row.push(Table::fmt(report.mean_completion_ms()));
         }
@@ -329,10 +323,15 @@ fn fig8_cluster_spotcheck(opts: &Options) -> Result<Table> {
     let rounds = 100.min(opts.trials.max(1));
     let mut table = Table::new(
         "Fig. 8 cluster spot check: measured GC(s), real sockets + compute",
-        &["s", "mean t (ms)", "avg messages/round", "avg results/round"],
+        &[
+            "s",
+            "mean t (ms)",
+            "avg messages/round",
+            "avg results/round",
+            "avg wire KiB/round",
+        ],
     );
     for s in [1usize, 2, 3] {
-        let plan = SchemeRegistry::cluster_plan(SchemeId::Gc(s as u32), n, n, n)?;
         let report = run_cluster(ClusterConfig {
             n,
             r: n,
@@ -340,7 +339,7 @@ fn fig8_cluster_spotcheck(opts: &Options) -> Result<Table> {
             eta: 0.01,
             rounds,
             profile: "fig8".into(),
-            scheduler: plan.scheduler,
+            plan: SchemeRegistry::cluster_plan(SchemeId::Gc(s as u32), n, n, n)?,
             dataset: Dataset::synthesize(n, 64, n * 16, opts.seed),
             inject: Some(DelayModelKind::Ec2Like {
                 seed: opts.seed ^ 0xEC2,
@@ -352,8 +351,6 @@ fn fig8_cluster_spotcheck(opts: &Options) -> Result<Table> {
             loss_every: 0,
             listen: None,
             spawn_workers: true,
-            group: plan.group,
-            rule: plan.rule,
         })?;
         let rounds_f = report.rounds.len().max(1) as f64;
         let msgs: usize = report.rounds.iter().map(|l| l.messages_seen).sum();
@@ -363,6 +360,7 @@ fn fig8_cluster_spotcheck(opts: &Options) -> Result<Table> {
             Table::fmt(report.mean_completion_ms()),
             format!("{:.1}", msgs as f64 / rounds_f),
             format!("{:.1}", results as f64 / rounds_f),
+            format!("{:.2}", report.mean_wire_bytes() / 1024.0),
         ]);
     }
     Ok(table)
@@ -383,7 +381,7 @@ pub fn fig3(opts: &Options) -> Result<(Table, Table)> {
         eta: 0.01,
         rounds,
         profile: "fig3".into(),
-        scheduler: Box::new(CyclicScheduler),
+        plan: SchemeRegistry::cluster_plan(SchemeId::Cs, n, 1, n)?,
         dataset: Dataset::synthesize(n, 500, 900, opts.seed),
         inject: Some(DelayModelKind::Ec2Like {
             seed: opts.seed ^ 0xF163,
@@ -395,8 +393,6 @@ pub fn fig3(opts: &Options) -> Result<(Table, Table)> {
         loss_every: 0,
         listen: None,
         spawn_workers: true,
-        group: 1,
-        rule: CompletionRule::DistinctTasks,
     })?;
 
     let mut summary = Table::new(
@@ -498,7 +494,10 @@ pub fn table1(opts: &Options) -> Result<Table> {
 
 /// End-to-end distributed training on the real cluster — the e2e driver
 /// behind `examples/train_distributed.rs` (kept in the library so tests
-/// and the CLI share it).
+/// and the CLI share it).  The scheme is registry-dispatched
+/// ([`SchemeRegistry::cluster_plan`]): uncoded schemes run the eq. 61
+/// partial-gradient update, GC(s) additionally aggregates partial sums
+/// on the wire, and PC/PCMM decode the full gradient on the master.
 pub struct E2eConfig {
     pub n: usize,
     pub d: usize,
@@ -507,6 +506,9 @@ pub struct E2eConfig {
     pub k: usize,
     pub rounds: usize,
     pub eta: f64,
+    /// the scheme to execute (`CS | SS | RA | GC(s) | PC | PCMM`) —
+    /// resolved through the registry, no hardcoded scheduler
+    pub scheme: SchemeId,
     pub profile: String,
     pub use_pjrt: bool,
     pub seed: u64,
@@ -528,6 +530,7 @@ impl Default for E2eConfig {
             k: 8,
             rounds: 300,
             eta: 0.05,
+            scheme: SchemeId::Ss,
             profile: "e2e".into(),
             use_pjrt: true,
             seed: 2024,
@@ -539,6 +542,7 @@ impl Default for E2eConfig {
 
 pub fn run_e2e(cfg: E2eConfig, opts: &Options) -> Result<(ClusterReport, Table)> {
     let dataset = Dataset::synthesize(cfg.n, cfg.d, cfg.n_samples, cfg.seed);
+    let plan = SchemeRegistry::cluster_plan(cfg.scheme, cfg.n, cfg.r, cfg.k)?;
     let report = run_cluster(ClusterConfig {
         n: cfg.n,
         r: cfg.r,
@@ -546,7 +550,7 @@ pub fn run_e2e(cfg: E2eConfig, opts: &Options) -> Result<(ClusterReport, Table)>
         eta: cfg.eta,
         rounds: cfg.rounds,
         profile: cfg.profile.clone(),
-        scheduler: Box::new(crate::scheduler::StaircaseScheduler),
+        plan,
         dataset,
         inject: Some(DelayModelKind::Ec2Like {
             seed: cfg.seed ^ 0xEC2,
@@ -558,13 +562,11 @@ pub fn run_e2e(cfg: E2eConfig, opts: &Options) -> Result<(ClusterReport, Table)>
         loss_every: 10,
         listen: cfg.listen.clone(),
         spawn_workers: cfg.spawn_workers,
-        group: 1,
-        rule: CompletionRule::DistinctTasks,
     })?;
     let mut curve = Table::new(
         &format!(
-            "e2e training: n = {}, d = {}, N = {}, r = {}, k = {} (SS schedule)",
-            cfg.n, cfg.d, cfg.n_samples, cfg.r, cfg.k
+            "e2e training: n = {}, d = {}, N = {}, r = {}, k = {} ({} scheme)",
+            cfg.n, cfg.d, cfg.n_samples, cfg.r, cfg.k, cfg.scheme
         ),
         &["round", "loss", "completion_ms"],
     );

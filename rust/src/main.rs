@@ -9,8 +9,9 @@
 //! straggler fig7  [--trials N]                  # t̄ vs k
 //! straggler fig8  [--trials N] [--cluster]      # GC(s) tradeoff sweep
 //! straggler sim   --n 16 --r 4 --k 16 [--model scenario1|scenario2|ec2|exp]
-//!                 [--schemes CS,SS,GC2,LB] [--ingest 0.15]
-//! straggler train [--rounds 300] [--k 8] [--no-pjrt]  # e2e distributed DGD
+//!                 [--schemes CS,SS,GC2,GCH(4,1),LB] [--ingest 0.15]
+//! straggler train --scheme CS|SS|RA|GC(s)|PC|PCMM [--rounds 300] [--k 8]
+//!                 [--no-pjrt]                   # e2e distributed DGD
 //! straggler all   [--trials N]                  # every figure + table
 //! ```
 //!
@@ -123,10 +124,8 @@ fn run() -> Result<()> {
             let schemes = match args.str_opt("schemes") {
                 None => SchemeRegistry::default_schemes(),
                 Some(list) => {
-                    let ids = list
-                        .split(',')
-                        .map(SchemeRegistry::parse)
-                        .collect::<Result<Vec<_>>>()?;
+                    // paren-aware split: GCH(4,1) keeps its inner comma
+                    let ids = SchemeRegistry::parse_list(&list)?;
                     // explicitly named schemes must be runnable here —
                     // the default set filters silently (figure-sweep
                     // semantics), an explicit request must not
@@ -135,7 +134,7 @@ fn run() -> Result<()> {
                             bail!(
                                 "{id} is not applicable at (n = {n}, r = {r}, k = {k}) — \
                                  paper Table I (PC/PCMM need r ≥ 2 and k = n; RA needs \
-                                 r = n; GC(s) needs s ≤ r)"
+                                 r = n; GC(s) needs s ≤ r; GCH(a,b) needs a,b ≤ r)"
                             );
                         }
                     }
@@ -246,6 +245,13 @@ fn run() -> Result<()> {
         }
         "train" => {
             let opts = options(&args)?;
+            let scheme_name = args.str_or("scheme", "SS");
+            let scheme = SchemeRegistry::parse(&scheme_name).map_err(|e| {
+                anyhow::anyhow!(
+                    "--scheme {scheme_name:?}: {e}. Spellings: CS, SS, RA, PC, PCMM, \
+                     GC(s) or GCs with s ≥ 1 (e.g. --scheme \"GC(2)\" or --scheme GC2)"
+                )
+            })?;
             let cfg = harness::E2eConfig {
                 n: args.usize_or("n", 10)?,
                 d: args.usize_or("d", 512)?,
@@ -254,6 +260,7 @@ fn run() -> Result<()> {
                 k: args.usize_or("k", 8)?,
                 rounds: args.usize_or("rounds", 300)?,
                 eta: args.f64_or("eta", 0.05)?,
+                scheme,
                 profile: args.str_or("profile", "e2e"),
                 use_pjrt: !args.flag("no-pjrt"),
                 seed: args.u64_or("data-seed", 2024)?,
@@ -263,10 +270,12 @@ fn run() -> Result<()> {
             let (report, curve) = harness::run_e2e(cfg, &opts)?;
             curve.print();
             println!(
-                "  mean completion {:.3} ms over {} rounds; final loss {:.6}",
+                "  mean completion {:.3} ms over {} rounds; final loss {:.6}; \
+                 avg wire {:.1} KiB/round",
                 report.mean_completion_ms(),
                 report.rounds.len(),
-                report.final_loss
+                report.final_loss,
+                report.mean_wire_bytes() / 1024.0
             );
         }
         _ => {
@@ -292,15 +301,22 @@ subcommands:
   fig8              GC(s) grouped multi-message tradeoff sweep
                     (--cluster adds a real-cluster spot check)
   sim               one (n, r, k) point (--model ..., --ingest MS,
-                    --schemes CS,SS,RA,PC,PCMM,LB,GC(s))
+                    --schemes CS,SS,RA,PC,PCMM,LB,GC(s),GCH(a,b))
   run               run a JSON-described sweep: --config exp.json
   ablations         design-choice studies (ingest, correlation, searched
                     schedules, Remark-3 bias)
-  train             end-to-end distributed DGD over PJRT workers
+  train             end-to-end distributed DGD over PJRT workers,
+                    scheme-dispatched via the registry:
+                    --scheme CS|SS|RA|GC(s)|PC|PCMM  (default SS;
+                    GC(s) spells as "GC(2)" or GC2 and aggregates one
+                    partial-sum block per flush; PC/PCMM decode the
+                    coded gradient on the master, k = n required)
                     (--listen ADDR --external for multi-process mode)
   worker            external worker process: --connect HOST:PORT
                     [--oracle] [--inject ec2 --n N --id I]
   all               regenerate every table and figure
 
 common flags: --trials N  --seed S  --out DIR  --no-out  --cluster
+scheme grammar (sim/run/train): CS SS RA PC PCMM LB GC(s)|GCs GCH(a,b)
+  — case-insensitive; malformed spellings fail with the expected form
 "#;

@@ -93,13 +93,24 @@ pub struct GcEvaluator {
 
 impl GcEvaluator {
     pub fn new(to: &ToMatrix, s: usize, k: usize) -> Self {
+        Self::with_sizes(to, &vec![s; to.n()], k)
+    }
+
+    /// Per-worker flush sizes `sizes[i]` — the heterogeneity-aware
+    /// generalization ([`super::gc_het::GcHetScheme`]); uniform sizes
+    /// reproduce [`GcEvaluator::new`] exactly.
+    pub fn with_sizes(to: &ToMatrix, sizes: &[usize], k: usize) -> Self {
         let (n, r) = (to.n(), to.r());
-        assert!(s >= 1 && s <= r, "GC group size must satisfy 1 ≤ s ≤ r");
+        assert_eq!(sizes.len(), n, "need one flush size per worker");
+        assert!(
+            sizes.iter().all(|&s| s >= 1 && s <= r),
+            "GC group size must satisfy 1 ≤ s ≤ r"
+        );
         assert!(k >= 1 && k <= n, "computation target must satisfy 1 ≤ k ≤ n");
         let tasks = FlatTasks::new(to);
         let mut flush_of = Vec::with_capacity(n * r);
-        let mut groups = Vec::with_capacity(n * r.div_ceil(s));
-        for i in 0..n {
+        let mut groups = Vec::new();
+        for (i, &s) in sizes.iter().enumerate() {
             let base = i * r;
             let mut start = 0usize;
             while start < r {
@@ -312,6 +323,22 @@ mod tests {
         let mut gc4 = GcEvaluator::new(&to, 4, 1);
         assert_eq!(gc1.completion_ingest(&view, 10.0, &mut dummy), 11.5);
         assert_eq!(gc4.completion_ingest(&view, 10.0, &mut dummy), 14.5);
+    }
+
+    #[test]
+    fn per_worker_sizes_generalize_uniform() {
+        let mut rng = Rng::seed_from_u64(0);
+        let to = CyclicScheduler.schedule(4, 4, &mut rng);
+        let het = GcEvaluator::with_sizes(&to, &[1, 2, 2, 4], 2);
+        // worker 0 flushes every slot; worker 3 once at the row end
+        assert_eq!(&het.flush_of[0..4], &[0, 1, 2, 3]);
+        assert_eq!(&het.flush_of[4..8], &[5, 5, 7, 7]);
+        assert_eq!(&het.flush_of[12..16], &[15, 15, 15, 15]);
+        assert_eq!(het.messages_per_round(), 4 + 2 + 2 + 1);
+        let uni = GcEvaluator::with_sizes(&to, &[2; 4], 3);
+        let direct = GcEvaluator::new(&to, 2, 3);
+        assert_eq!(uni.flush_of, direct.flush_of);
+        assert_eq!(uni.groups, direct.groups);
     }
 
     #[test]

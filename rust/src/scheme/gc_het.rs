@@ -1,0 +1,154 @@
+//! Heterogeneity-aware grouped cyclic scheduling — `GCH(s_fast,
+//! s_slow)`.
+//!
+//! The uniform `GC(s)` family flushes every worker at the same cadence,
+//! but on a heterogeneous cluster that is the wrong trade at both ends:
+//! a fast worker's groups fill quickly, so batching them further
+//! (larger `s`) cuts the master's ingestion load at almost no added
+//! latency, while a straggler's half-filled group strands the few
+//! results it *did* finish behind a flush that may never come — it
+//! should stream eagerly (smaller `s`).  This mirrors the
+//! service-rate-proportional task-allocation intuition of Behrouzi-Far
+//! & Soljanin (arXiv:1808.02838): match each worker's communication
+//! pattern to its speed rather than treating the fleet as exchangeable.
+//!
+//! `GCH(s_fast, s_slow)` assigns worker `i` the flush size linearly
+//! interpolated from `s_fast` at worker 0 down (or up) to `s_slow` at
+//! worker `n − 1`, under the convention that **lower worker indices
+//! are faster** — sort workers by measured service rate before mapping
+//! them onto indices (the delay models here are exchangeable-per-index,
+//! so the convention is a labeling, not a constraint).  Assignment and
+//! completion are unchanged cyclic / `k`-distinct; only the per-worker
+//! flush cadence varies, so the scheme rides the same
+//! [`GcEvaluator`](super::gc::GcEvaluator) kernel via
+//! [`GcEvaluator::with_sizes`](super::gc::GcEvaluator::with_sizes).
+//!
+//! `GCH(s, s)` is exactly `GC(s)`; `straggler sim --schemes
+//! "GCH(4,1)"` sweeps it against the uniform family.
+
+use crate::scheduler::{CyclicScheduler, Scheduler};
+use crate::util::rng::Rng;
+
+use super::gc::GcEvaluator;
+use super::{Scheme, SchemeEvaluator, SchemeId};
+
+/// The `GCH(s_fast, s_slow)` scheme descriptor.
+#[derive(Debug, Clone, Copy)]
+pub struct GcHetScheme {
+    /// Flush size of worker 0 (the fastest, by convention).
+    pub s_fast: usize,
+    /// Flush size of worker `n − 1` (the slowest).
+    pub s_slow: usize,
+}
+
+impl GcHetScheme {
+    /// Like `GC(s)`, out-of-range sizes are constructible so
+    /// `applicable` can report them invalid instead of panicking.
+    pub fn new(s_fast: usize, s_slow: usize) -> Self {
+        Self { s_fast, s_slow }
+    }
+
+    /// Per-worker flush sizes: the rounded linear ramp from `s_fast`
+    /// (worker 0) to `s_slow` (worker `n − 1`).
+    pub fn sizes(&self, n: usize) -> Vec<usize> {
+        assert!(n >= 1);
+        if n == 1 {
+            return vec![self.s_fast];
+        }
+        let (a, b) = (self.s_fast as f64, self.s_slow as f64);
+        (0..n)
+            .map(|i| {
+                let t = i as f64 / (n - 1) as f64;
+                (a + (b - a) * t).round() as usize
+            })
+            .collect()
+    }
+}
+
+impl Scheme for GcHetScheme {
+    fn id(&self) -> SchemeId {
+        SchemeId::GcHet(self.s_fast as u32, self.s_slow as u32)
+    }
+
+    fn applicable(&self, _n: usize, r: usize, _k: usize) -> bool {
+        // both endpoints in [1, r] keeps every interpolated size in
+        // range (the ramp is monotone between its endpoints)
+        self.s_fast >= 1 && self.s_slow >= 1 && self.s_fast <= r && self.s_slow <= r
+    }
+
+    fn prepare(
+        &self,
+        n: usize,
+        r: usize,
+        k: usize,
+        rng_sched: &mut Rng,
+    ) -> Box<dyn SchemeEvaluator> {
+        let to = CyclicScheduler.schedule(n, r, rng_sched);
+        Box::new(GcEvaluator::with_sizes(&to, &self.sizes(n), k))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ramp_interpolates_inclusive_endpoints() {
+        let s = GcHetScheme::new(4, 1);
+        assert_eq!(s.sizes(4), vec![4, 3, 2, 1]);
+        assert_eq!(s.sizes(2), vec![4, 1]);
+        assert_eq!(s.sizes(1), vec![4]);
+        // ascending ramps work too (slow workers batching more);
+        // f64::round ties go away from zero: 1.5 → 2, 2.5 → 3
+        assert_eq!(GcHetScheme::new(1, 3).sizes(5), vec![1, 2, 2, 3, 3]);
+        // degenerate ramp = uniform GC(s)
+        assert_eq!(GcHetScheme::new(2, 2).sizes(6), vec![2; 6]);
+    }
+
+    #[test]
+    fn applicability_bounds_both_endpoints() {
+        assert!(GcHetScheme::new(4, 1).applicable(8, 4, 8));
+        assert!(GcHetScheme::new(1, 1).applicable(8, 1, 8));
+        assert!(!GcHetScheme::new(5, 1).applicable(8, 4, 8));
+        assert!(!GcHetScheme::new(1, 5).applicable(8, 4, 8));
+        assert!(!GcHetScheme::new(0, 2).applicable(8, 4, 8));
+    }
+
+    #[test]
+    fn degenerate_ramp_matches_uniform_gc_kernel() {
+        use super::super::gc::GcScheme;
+        use super::super::RoundView;
+        use crate::delay::{DelayModel, TruncatedGaussianModel};
+        use crate::sim::slot_arrivals_batch;
+
+        let (n, r, k) = (6usize, 4usize, 5usize);
+        let model = TruncatedGaussianModel::scenario2(n, 9);
+        let mut rng = Rng::seed_from_u64(17);
+        let batch = model.sample_batch(16, n, r, &mut rng);
+        let mut arrivals = Vec::new();
+        slot_arrivals_batch(&batch, &mut arrivals);
+        let mut rng_a = Rng::seed_from_u64(1);
+        let mut rng_b = Rng::seed_from_u64(1);
+        let mut het = GcHetScheme::new(2, 2).prepare(n, r, k, &mut rng_a);
+        let mut uni = GcScheme::new(2).prepare(n, r, k, &mut rng_b);
+        let stride = n * r;
+        let mut dummy = Rng::seed_from_u64(0);
+        for b in 0..batch.rounds {
+            let view = RoundView {
+                arrivals: &arrivals[b * stride..(b + 1) * stride],
+                comp: batch.comp_round(b),
+                comm: batch.comm_round(b),
+            };
+            assert_eq!(
+                het.completion(&view, &mut dummy).to_bits(),
+                uni.completion(&view, &mut dummy).to_bits(),
+                "round {b}"
+            );
+            assert_eq!(
+                het.completion_ingest(&view, 0.15, &mut dummy).to_bits(),
+                uni.completion_ingest(&view, 0.15, &mut dummy).to_bits(),
+                "ingest round {b}"
+            );
+        }
+    }
+}

@@ -31,12 +31,14 @@
 
 pub mod exec;
 pub mod gc;
+pub mod gc_het;
 pub mod registry;
 
 pub use exec::{
     evaluator_for_scheduler, PcEvaluator, RedrawEvaluator, SlotOrderStatEvaluator, ToEvaluator,
 };
 pub use gc::GcScheme;
+pub use gc_het::GcHetScheme;
 pub use registry::SchemeRegistry;
 
 use crate::delay::{DelayBatch, DelayModel};
@@ -65,6 +67,10 @@ pub enum SchemeId {
     /// completed tasks (arXiv:2004.04948-style communication–
     /// computation tradeoff); degenerates to CS at `s = 1`.
     Gc(u32),
+    /// Heterogeneity-aware grouped cyclic: per-worker flush sizes
+    /// ramping from `s_fast` (worker 0) to `s_slow` (worker n−1) —
+    /// see [`gc_het::GcHetScheme`].
+    GcHet(u32, u32),
 }
 
 impl std::fmt::Display for SchemeId {
@@ -77,6 +83,7 @@ impl std::fmt::Display for SchemeId {
             SchemeId::Pcmm => f.write_str("PCMM"),
             SchemeId::Lb => f.write_str("LB"),
             SchemeId::Gc(s) => write!(f, "GC({s})"),
+            SchemeId::GcHet(a, b) => write!(f, "GCH({a},{b})"),
         }
     }
 }
@@ -202,12 +209,36 @@ pub enum CompletionRule {
     Messages { threshold: usize },
 }
 
+/// What travels on the wire and how the master consumes it — the
+/// scheme-native data-plane half of a [`ClusterPlan`] (protocol v3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WirePlan {
+    /// Plain partitions; each flushed message carries the aggregated
+    /// partial sum of its task range, merged duplicate-safe by
+    /// [`crate::coordinator::aggregate::RoundAggregator`].  `align`
+    /// moves worker flush points to canonical task-space boundaries so
+    /// ranges from different workers can tile (required whenever
+    /// `group > 1`).
+    Uncoded { align: bool },
+    /// Master-encoded PC matrices (Li et al. [13]): one aggregated
+    /// message per worker is the polynomial evaluation `φ(x_i)`; the
+    /// master interpolates at the recovery threshold with
+    /// [`crate::coded::PcScheme::decode`] and applies the full-gradient
+    /// update.
+    Pc,
+    /// Master-encoded PCMM matrices (Ozfatura et al. [17]): each
+    /// streamed message is one evaluation `ψ(β_{i,j})`; decoded at
+    /// `2n − 1` with [`crate::coded::PcmmScheme::decode`].
+    Pcmm,
+}
+
 /// How the live cluster executes a scheme — the coordinator-side
 /// counterpart of [`Scheme::prepare`], built by
 /// [`SchemeRegistry::cluster_plan`] so the socketed master/worker and
 /// the simulator consume one source of truth.
 pub struct ClusterPlan {
-    /// TO-matrix builder for per-round assignments.
+    /// TO-matrix builder for per-round assignments (uncoded wire; the
+    /// coded wires fix their own slot assignment).
     pub scheduler: Box<dyn Scheduler>,
     /// Workers flush one result message per `group` completed tasks
     /// (1 = the paper's immediate streaming; `s` for GC(s); `r` for
@@ -215,6 +246,8 @@ pub struct ClusterPlan {
     pub group: usize,
     /// Round-completion rule the master enforces.
     pub rule: CompletionRule,
+    /// Payload semantics of the result stream.
+    pub wire: WirePlan,
 }
 
 #[cfg(test)]

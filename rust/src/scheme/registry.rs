@@ -15,7 +15,8 @@ use crate::util::rng::Rng;
 
 use super::exec::{evaluator_for_scheduler, PcEvaluator, SlotOrderStatEvaluator};
 use super::gc::GcScheme;
-use super::{ClusterPlan, CompletionRule, Scheme, SchemeEvaluator, SchemeId};
+use super::gc_het::GcHetScheme;
+use super::{ClusterPlan, CompletionRule, Scheme, SchemeEvaluator, SchemeId, WirePlan};
 
 /// Namespace for scheme construction and lookup (stateless — schemes
 /// are cheap descriptors built on demand from their [`SchemeId`]).
@@ -32,6 +33,7 @@ impl SchemeRegistry {
             SchemeId::Pcmm => Box::new(PcmmTimingScheme),
             SchemeId::Lb => Box::new(GenieScheme),
             SchemeId::Gc(s) => Box::new(GcScheme::new(s as usize)),
+            SchemeId::GcHet(a, b) => Box::new(GcHetScheme::new(a as usize, b as usize)),
         }
     }
 
@@ -53,7 +55,8 @@ impl SchemeRegistry {
     }
 
     /// Parse a scheme name as spelled in configs and on the CLI:
-    /// `CS | SS | RA | PC | PCMM | LB | GC(s) | GCs` (case-insensitive).
+    /// `CS | SS | RA | PC | PCMM | LB | GC(s) | GCs | GCH(a,b)`
+    /// (case-insensitive).
     pub fn parse(name: &str) -> Result<SchemeId> {
         let upper = name.trim().to_uppercase();
         Ok(match upper.as_str() {
@@ -64,8 +67,31 @@ impl SchemeRegistry {
             "PCMM" => SchemeId::Pcmm,
             "LB" => SchemeId::Lb,
             other => {
+                // GCH before GC — "GCH(…)" also starts with "GC"
+                if let Some(rest) = other.strip_prefix("GCH") {
+                    let inner = rest
+                        .strip_prefix('(')
+                        .and_then(|s| s.strip_suffix(')'))
+                        .filter(|s| !s.contains('(') && !s.contains(')'))
+                        .ok_or_else(|| {
+                            anyhow!("malformed GCH spelling {name:?}; want GCH(s_fast,s_slow)")
+                        })?;
+                    let (a, b) = inner.split_once(',').ok_or_else(|| {
+                        anyhow!("GCH needs two sizes, GCH(s_fast,s_slow); got {name:?}")
+                    })?;
+                    let parse_size = |d: &str| -> Result<u32> {
+                        let s: u32 = d.trim().parse().map_err(|_| {
+                            anyhow!("bad GCH group size in {name:?}; want GCH(a,b), a,b ≥ 1")
+                        })?;
+                        if s == 0 {
+                            bail!("GCH group sizes must be ≥ 1, got {name:?}");
+                        }
+                        Ok(s)
+                    };
+                    return Ok(SchemeId::GcHet(parse_size(a)?, parse_size(b)?));
+                }
                 let Some(rest) = other.strip_prefix("GC") else {
-                    bail!("unknown scheme {name:?} (CS|SS|RA|PC|PCMM|LB|GC(s))");
+                    bail!("unknown scheme {name:?} (CS|SS|RA|PC|PCMM|LB|GC(s)|GCH(a,b))");
                 };
                 // exactly `GCs` or `GC(s)` — unbalanced/doubled parens
                 // are user errors, not group sizes
@@ -87,16 +113,39 @@ impl SchemeRegistry {
         })
     }
 
+    /// Parse a comma-separated scheme list (the CLI's `--schemes`
+    /// grammar), keeping commas *inside parentheses* intact so
+    /// `CS,GCH(4,1),LB` splits into three schemes, not four fragments.
+    pub fn parse_list(list: &str) -> Result<Vec<SchemeId>> {
+        let mut segments: Vec<String> = vec![String::new()];
+        let mut depth = 0usize;
+        for ch in list.chars() {
+            match ch {
+                ',' if depth == 0 => segments.push(String::new()),
+                _ => {
+                    match ch {
+                        '(' => depth += 1,
+                        ')' => depth = depth.saturating_sub(1),
+                        _ => {}
+                    }
+                    segments.last_mut().expect("nonempty").push(ch);
+                }
+            }
+        }
+        segments.iter().map(|s| Self::parse(s)).collect()
+    }
+
     /// Build the live-cluster execution plan for a scheme at `(n, r, k)`
     /// — the coordinator-side counterpart of [`Scheme::prepare`].
     ///
-    /// Coded schemes (PC/PCMM) map to *timing rounds*: cyclic order,
-    /// PC's single flush per worker / PCMM's immediate streaming, and a
-    /// message-count completion rule; the master measures completion at
-    /// the recovery threshold but leaves θ untouched (the real
-    /// polynomial encode/decode lives in [`crate::coded`] — see
-    /// EXPERIMENTS.md §Schemes).  The genie bound has no constructive
-    /// live execution.
+    /// Since protocol v3 the plan is fully scheme-native: uncoded
+    /// schemes aggregate partial sums on the wire (GC(s) additionally
+    /// aligns flushes to canonical blocks so the master can merge
+    /// ranges across workers), and the coded schemes (PC/PCMM) ship
+    /// master-encoded polynomial evaluations that the master *decodes*
+    /// with [`crate::coded`] at the recovery threshold, updating θ —
+    /// no more timing-only rounds (see EXPERIMENTS.md §Schemes).  The
+    /// genie bound has no constructive live execution.
     pub fn cluster_plan(id: SchemeId, n: usize, r: usize, k: usize) -> Result<ClusterPlan> {
         if !Self::applicable(id, n, r, k) {
             bail!("{id} is not applicable at (n = {n}, r = {r}, k = {k}) — paper Table I");
@@ -106,17 +155,24 @@ impl SchemeRegistry {
             SchemeId::Ss => uncoded_plan(Box::new(StaircaseScheduler), 1),
             SchemeId::Ra => uncoded_plan(Box::new(RandomAssignment), 1),
             SchemeId::Gc(s) => uncoded_plan(Box::new(CyclicScheduler), s as usize),
+            SchemeId::GcHet(..) => bail!(
+                "{id} has no live-cluster plan yet: per-worker flush sizes \
+                 break the master's canonical-block aggregation; run it \
+                 through the Monte-Carlo engines (`straggler sim`)"
+            ),
             SchemeId::Pc => ClusterPlan {
                 scheduler: Box::new(CyclicScheduler),
                 group: r,
                 rule: CompletionRule::Messages {
                     threshold: 2 * n.div_ceil(r) - 1,
                 },
+                wire: WirePlan::Pc,
             },
             SchemeId::Pcmm => ClusterPlan {
                 scheduler: Box::new(CyclicScheduler),
                 group: 1,
                 rule: CompletionRule::Messages { threshold: 2 * n - 1 },
+                wire: WirePlan::Pcmm,
             },
             SchemeId::Lb => bail!(
                 "LB is a genie bound with no live execution; replay \
@@ -131,6 +187,9 @@ fn uncoded_plan(scheduler: Box<dyn Scheduler>, group: usize) -> ClusterPlan {
         scheduler,
         group,
         rule: CompletionRule::DistinctTasks,
+        // flushes larger than one task must align to canonical blocks
+        // for the master's duplicate-safe range merge
+        wire: WirePlan::Uncoded { align: group > 1 },
     }
 }
 
@@ -287,14 +346,38 @@ mod tests {
         assert_eq!(SchemeRegistry::parse(" lb ").unwrap(), SchemeId::Lb);
         assert_eq!(SchemeRegistry::parse("GC(3)").unwrap(), SchemeId::Gc(3));
         assert_eq!(SchemeRegistry::parse("gc4").unwrap(), SchemeId::Gc(4));
+        assert_eq!(SchemeRegistry::parse("GCH(4,1)").unwrap(), SchemeId::GcHet(4, 1));
+        assert_eq!(SchemeRegistry::parse("gch(2, 3)").unwrap(), SchemeId::GcHet(2, 3));
     }
 
     #[test]
     fn parse_rejects_junk() {
         for bad in [
             "", "XX", "GC", "GC(0)", "GC(-1)", "GC(two)", "GC(2", "GC2)", "GC((2))", "GC()",
+            "GCH", "GCH2", "GCH(2)", "GCH(2,)", "GCH(,2)", "GCH(0,2)", "GCH(2,0)",
+            "GCH(2,3", "GCH((2,3))", "GCH(2;3)",
         ] {
             assert!(SchemeRegistry::parse(bad).is_err(), "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn parse_list_is_paren_aware() {
+        assert_eq!(
+            SchemeRegistry::parse_list("CS,GCH(4,1),GC(2),LB").unwrap(),
+            vec![
+                SchemeId::Cs,
+                SchemeId::GcHet(4, 1),
+                SchemeId::Gc(2),
+                SchemeId::Lb
+            ]
+        );
+        assert_eq!(
+            SchemeRegistry::parse_list("pcmm").unwrap(),
+            vec![SchemeId::Pcmm]
+        );
+        for bad in ["", "CS,,LB", "CS,GCH(4,1", "GCH(4,1),"] {
+            assert!(SchemeRegistry::parse_list(bad).is_err(), "{bad:?}");
         }
     }
 
@@ -303,6 +386,8 @@ mod tests {
         let mut ids = SchemeRegistry::default_schemes();
         ids.push(SchemeId::Gc(1));
         ids.push(SchemeId::Gc(7));
+        ids.push(SchemeId::GcHet(4, 1));
+        ids.push(SchemeId::GcHet(2, 2));
         for id in ids {
             assert_eq!(SchemeRegistry::parse(&id.to_string()).unwrap(), id);
         }
@@ -313,16 +398,34 @@ mod tests {
         let p = SchemeRegistry::cluster_plan(SchemeId::Gc(2), 4, 4, 4).unwrap();
         assert_eq!(p.group, 2);
         assert_eq!(p.rule, CompletionRule::DistinctTasks);
+        assert_eq!(p.wire, WirePlan::Uncoded { align: true });
+
+        let p = SchemeRegistry::cluster_plan(SchemeId::Gc(1), 4, 4, 4).unwrap();
+        assert_eq!(
+            p.wire,
+            WirePlan::Uncoded { align: false },
+            "single-task flushes need no alignment"
+        );
+
+        let p = SchemeRegistry::cluster_plan(SchemeId::Ss, 4, 2, 3).unwrap();
+        assert_eq!(p.group, 1);
+        assert_eq!(p.wire, WirePlan::Uncoded { align: false });
 
         let p = SchemeRegistry::cluster_plan(SchemeId::Pcmm, 4, 2, 4).unwrap();
         assert_eq!(p.group, 1);
         assert_eq!(p.rule, CompletionRule::Messages { threshold: 7 });
+        assert_eq!(p.wire, WirePlan::Pcmm);
 
         let p = SchemeRegistry::cluster_plan(SchemeId::Pc, 8, 4, 8).unwrap();
         assert_eq!(p.group, 4, "PC sends one message per worker");
         assert_eq!(p.rule, CompletionRule::Messages { threshold: 3 });
+        assert_eq!(p.wire, WirePlan::Pc);
 
         assert!(SchemeRegistry::cluster_plan(SchemeId::Lb, 4, 2, 4).is_err());
+        assert!(
+            SchemeRegistry::cluster_plan(SchemeId::GcHet(2, 1), 4, 4, 4).is_err(),
+            "GCH is Monte-Carlo-only for now"
+        );
         assert!(
             SchemeRegistry::cluster_plan(SchemeId::Ra, 4, 3, 4).is_err(),
             "RA needs r = n"

@@ -1,13 +1,16 @@
-//! End-to-end cluster integration: real sockets, real protocol, real
-//! compute, paper-§II round semantics.
+//! End-to-end cluster integration: real sockets, real protocol v3
+//! (aggregated partial-sum frames), real compute, paper-§II round
+//! semantics, registry-dispatched scheme plans — including coded
+//! PC/PCMM rounds that decode on the master and update θ.
 
-use straggler_sched::coordinator::{run_cluster, ClusterConfig};
+use std::net::TcpListener;
+
+use straggler_sched::coordinator::{run_cluster, run_worker, ClusterConfig, WorkerOptions};
 use straggler_sched::data::Dataset;
 use straggler_sched::delay::DelayModelKind;
-use straggler_sched::scheduler::{CyclicScheduler, RandomAssignment, StaircaseScheduler};
 use straggler_sched::scheme::{CompletionRule, SchemeId, SchemeRegistry};
 
-fn base_config(n: usize, r: usize, k: usize, rounds: usize) -> ClusterConfig {
+fn base_config(scheme: SchemeId, n: usize, r: usize, k: usize, rounds: usize) -> ClusterConfig {
     ClusterConfig {
         n,
         r,
@@ -15,7 +18,8 @@ fn base_config(n: usize, r: usize, k: usize, rounds: usize) -> ClusterConfig {
         eta: 0.05,
         rounds,
         profile: "quickstart".into(),
-        scheduler: Box::new(CyclicScheduler),
+        plan: SchemeRegistry::cluster_plan(scheme, n, r, k)
+            .unwrap_or_else(|e| panic!("{scheme} plan at (n={n}, r={r}, k={k}): {e:#}")),
         dataset: Dataset::synthesize(n, 16, n * 8, 42),
         inject: Some(DelayModelKind::TruncatedGaussianScenario1),
         seed: 7,
@@ -24,14 +28,12 @@ fn base_config(n: usize, r: usize, k: usize, rounds: usize) -> ClusterConfig {
         loss_every: 1,
         listen: None,
         spawn_workers: true,
-        group: 1,
-        rule: CompletionRule::DistinctTasks,
     }
 }
 
 #[test]
 fn cluster_round_delivers_k_distinct_and_converges() {
-    let cfg = base_config(4, 2, 4, 60);
+    let cfg = base_config(SchemeId::Cs, 4, 2, 4, 60);
     let ds = cfg.dataset.clone();
     let l0 = ds.loss(&vec![0.0; ds.d]);
     let report = run_cluster(cfg).expect("cluster run");
@@ -44,6 +46,7 @@ fn cluster_round_delivers_k_distinct_and_converges() {
         w.dedup();
         assert_eq!(w.len(), 4, "winners must be distinct");
         assert!(log.completion_ms > 0.0);
+        assert!(log.wire_bytes > 0);
     }
     assert!(
         report.final_loss < 0.2 * l0,
@@ -57,7 +60,7 @@ fn cluster_completion_reflects_injected_delays() {
     // scenario 1: comp ≈ 0.1 ms, comm ≈ 0.5 ms; a k = n round needs at
     // least one full comp+comm ≈ 0.6 ms and should stay well under the
     // several-ms mark on an unloaded box
-    let cfg = base_config(4, 4, 4, 40);
+    let cfg = base_config(SchemeId::Cs, 4, 4, 4, 40);
     let report = run_cluster(cfg).expect("cluster run");
     let mean = report.mean_completion_ms();
     assert!(mean > 0.6, "mean completion {mean} ms below physical floor");
@@ -70,19 +73,14 @@ fn cluster_completion_reflects_injected_delays() {
 }
 
 #[test]
-fn cluster_supports_all_uncoded_schedulers() {
-    for (name, sched) in [
-        ("CS", Box::new(CyclicScheduler) as Box<dyn straggler_sched::scheduler::Scheduler>),
-        ("SS", Box::new(StaircaseScheduler)),
-        ("RA", Box::new(RandomAssignment)),
-    ] {
+fn cluster_supports_all_uncoded_schemes_through_registry() {
+    for id in [SchemeId::Cs, SchemeId::Ss, SchemeId::Ra] {
         let n = 4;
-        let mut cfg = base_config(n, n, 3, 10);
-        cfg.scheduler = sched;
-        let report = run_cluster(cfg).unwrap_or_else(|e| panic!("{name}: {e:#}"));
-        assert_eq!(report.rounds.len(), 10, "{name}");
+        let cfg = base_config(id, n, n, 3, 10);
+        let report = run_cluster(cfg).unwrap_or_else(|e| panic!("{id}: {e:#}"));
+        assert_eq!(report.rounds.len(), 10, "{id}");
         for log in &report.rounds {
-            assert_eq!(log.winners.len(), 3, "{name}");
+            assert_eq!(log.winners.len(), 3, "{id}");
         }
     }
 }
@@ -91,7 +89,7 @@ fn cluster_supports_all_uncoded_schedulers() {
 fn cluster_partial_target_sees_fewer_results_than_full_work() {
     // with k = 2 of n = 4 the master acks early; workers should abandon
     // the tail, so results_seen stays well below n·r on average
-    let cfg = base_config(4, 4, 2, 30);
+    let cfg = base_config(SchemeId::Cs, 4, 4, 2, 30);
     let report = run_cluster(cfg).expect("cluster run");
     let avg_results: f64 = report
         .rounds
@@ -107,35 +105,34 @@ fn cluster_partial_target_sees_fewer_results_than_full_work() {
 
 #[test]
 fn cluster_executes_gc_grouped_scheme_through_registry_plan() {
-    // GC(2) via the registry's ClusterPlan: workers flush one message
-    // per 2 completed tasks; training still converges and the message
-    // economy is visible in the round logs
+    // GC(2) via the registry's ClusterPlan: workers flush one
+    // aggregated partial-sum block per canonical 2-task range; training
+    // still converges and the message economy is visible in the logs
     let n = 4;
-    let plan = SchemeRegistry::cluster_plan(SchemeId::Gc(2), n, n, n).unwrap();
-    let mut cfg = base_config(n, n, n, 60);
-    cfg.scheduler = plan.scheduler;
-    cfg.group = plan.group;
-    cfg.rule = plan.rule;
+    let cfg = base_config(SchemeId::Gc(2), n, n, n, 60);
     let ds = cfg.dataset.clone();
     let l0 = ds.loss(&vec![0.0; ds.d]);
     let report = run_cluster(cfg).expect("GC cluster run");
     assert_eq!(report.rounds.len(), 60);
+    let (mut total_msgs, mut total_results) = (0usize, 0usize);
     for log in &report.rounds {
         assert_eq!(log.winners.len(), n, "round {}", log.round);
         let mut w = log.winners.clone();
         w.sort_unstable();
         w.dedup();
         assert_eq!(w.len(), n, "winners must be distinct");
-        // every message carries exactly group = 2 results (r divisible
-        // by s, and partially-filled groups are abandoned on stop)
-        assert_eq!(
-            log.results_seen,
-            2 * log.messages_seen,
-            "round {}",
-            log.round
-        );
-        assert!(log.messages_seen >= n / 2, "round {}", log.round);
+        // aligned flushing: workers starting on a block boundary send
+        // 2-task ranges, the others send 1-2-1; never more than r tasks
+        assert!(log.results_seen <= n * n, "round {}", log.round);
+        assert!(log.results_seen >= log.messages_seen, "round {}", log.round);
+        total_msgs += log.messages_seen;
+        total_results += log.results_seen;
     }
+    assert!(
+        total_results as f64 > 1.2 * total_msgs as f64,
+        "grouping must deliver >1 task/message on average: \
+         {total_results} results over {total_msgs} messages"
+    );
     assert!(
         report.final_loss < 0.2 * l0,
         "GC training should converge: {l0} → {}",
@@ -144,31 +141,158 @@ fn cluster_executes_gc_grouped_scheme_through_registry_plan() {
 }
 
 #[test]
-fn cluster_messages_rule_runs_timing_rounds_with_frozen_theta() {
-    // PCMM's plan: immediate streaming, completion at the 2n − 1-th
-    // received message; the master measures timing but must not touch θ
-    // (the uncoded h blocks cannot stand in for a polynomial decode)
+fn gc_wire_bytes_shrink_versus_immediate_streaming() {
+    // the v3 acceptance bar: a GC(s) flush ships ONE d-block no matter
+    // how many tasks it aggregates, so wire bytes *per delivered
+    // result* must drop materially below GC(1)'s one-frame-per-task
+    // cost (the s× payload shrink vs the PR-2 concatenated-block wire,
+    // measured; see EXPERIMENTS.md §Schemes for the frame arithmetic)
     let n = 4;
-    let plan = SchemeRegistry::cluster_plan(SchemeId::Pcmm, n, 2, n).unwrap();
-    assert_eq!(plan.rule, CompletionRule::Messages { threshold: 7 });
-    let mut cfg = base_config(n, 2, n, 10);
-    cfg.scheduler = plan.scheduler;
-    cfg.group = plan.group;
-    cfg.rule = plan.rule;
+    let run = |s: u32| {
+        let cfg = base_config(SchemeId::Gc(s), n, n, n, 40);
+        run_cluster(cfg).expect("gc run")
+    };
+    let gc1 = run(1);
+    let gc2 = run(2);
+    let per_result = |rep: &straggler_sched::coordinator::ClusterReport| {
+        let bytes: usize = rep.rounds.iter().map(|l| l.wire_bytes).sum();
+        let results: usize = rep.rounds.iter().map(|l| l.results_seen).sum();
+        bytes as f64 / results.max(1) as f64
+    };
+    let (b1, b2) = (per_result(&gc1), per_result(&gc2));
+    assert!(
+        b2 < 0.8 * b1,
+        "GC(2) must ship materially fewer bytes per result than GC(1): {b2} vs {b1}"
+    );
+    // and θ still reaches a comparable optimum (exactness across s is
+    // pinned bit-level by tests/partial_sum.rs; the live wire adds only
+    // f32 rounding)
+    assert!(gc2.final_loss < 1.5 * gc1.final_loss + 1e-3);
+}
+
+/// Oracle reference: `rounds` full-gradient GD steps (eq. 48/49).
+fn oracle_gd(ds: &Dataset, eta: f64, rounds: usize) -> Vec<f64> {
+    let mut theta = vec![0.0; ds.d];
+    for _ in 0..rounds {
+        let g = ds.full_gradient(&theta);
+        for (t, gi) in theta.iter_mut().zip(&g) {
+            *t -= eta * gi;
+        }
+    }
+    theta
+}
+
+#[test]
+fn pc_rounds_decode_on_master_and_match_uncoded_gradient() {
+    // PC wire: the master encodes each worker's r Lagrange-mixed
+    // matrices, collects one φ(x_i) evaluation per worker, decodes at
+    // 2⌈n/r⌉ − 1 and steps θ with the exact full gradient — so the
+    // trajectory must track plain full-gradient descent up to f32 wire
+    // rounding (the exact-recovery property of coded::pc, live)
+    let (n, r, rounds) = (4usize, 2usize, 15usize);
+    let cfg = base_config(SchemeId::Pc, n, r, n, rounds);
+    assert_eq!(
+        cfg.plan.rule,
+        CompletionRule::Messages { threshold: 3 },
+        "PC recovery threshold at n=4, r=2"
+    );
     let ds = cfg.dataset.clone();
+    let eta = cfg.eta;
     let l0 = ds.loss(&vec![0.0; ds.d]);
-    let report = run_cluster(cfg).expect("PCMM timing run");
-    assert_eq!(report.rounds.len(), 10);
+    let report = run_cluster(cfg).expect("PC cluster run");
+    assert_eq!(report.rounds.len(), rounds);
     for log in &report.rounds {
-        assert_eq!(log.messages_seen, 7, "round {}", log.round);
-        assert!(log.completion_ms > 0.0);
-        assert!(log.winners.len() <= n);
+        assert_eq!(log.messages_seen, 3, "round {}", log.round);
+        // winners are worker keys under the coded wire
+        assert!(log.winners.iter().all(|&w| w < n));
+    }
+    let want = oracle_gd(&ds, eta, rounds);
+    for i in 0..ds.d {
+        assert!(
+            (report.final_theta[i] - want[i]).abs() < 5e-3 * (1.0 + want[i].abs()),
+            "coord {i}: decoded trajectory {} vs oracle {}",
+            report.final_theta[i],
+            want[i]
+        );
     }
     assert!(
-        (report.final_loss - l0).abs() < 1e-12,
-        "timing rounds must leave θ frozen: {l0} vs {}",
+        report.final_loss < 0.5 * l0,
+        "PC training must reduce loss: {l0} → {}",
         report.final_loss
     );
+}
+
+#[test]
+fn pcmm_rounds_decode_on_master_and_match_uncoded_gradient() {
+    // PCMM wire: immediate streaming of ψ(β_{i,j}) evaluations, decode
+    // at 2n − 1 — θ updates every round instead of staying frozen
+    let (n, r, rounds) = (4usize, 2usize, 15usize);
+    let cfg = base_config(SchemeId::Pcmm, n, r, n, rounds);
+    assert_eq!(cfg.plan.rule, CompletionRule::Messages { threshold: 7 });
+    let ds = cfg.dataset.clone();
+    let eta = cfg.eta;
+    let l0 = ds.loss(&vec![0.0; ds.d]);
+    let report = run_cluster(cfg).expect("PCMM cluster run");
+    assert_eq!(report.rounds.len(), rounds);
+    for log in &report.rounds {
+        assert_eq!(log.messages_seen, 7, "round {}", log.round);
+        // winners are global slot ids under the PCMM wire
+        assert!(log.winners.iter().all(|&slot| slot < n * r));
+        let mut w = log.winners.clone();
+        w.sort_unstable();
+        w.dedup();
+        assert_eq!(w.len(), 7, "evaluation points must be distinct");
+    }
+    let want = oracle_gd(&ds, eta, rounds);
+    for i in 0..ds.d {
+        assert!(
+            (report.final_theta[i] - want[i]).abs() < 5e-3 * (1.0 + want[i].abs()),
+            "coord {i}: decoded trajectory {} vs oracle {}",
+            report.final_theta[i],
+            want[i]
+        );
+    }
+    assert!(
+        report.final_loss < 0.5 * l0,
+        "PCMM training must reduce loss: {l0} → {}",
+        report.final_loss
+    );
+}
+
+#[test]
+fn worker_rejects_protocol_version_skew() {
+    // regression for the v2 → v3 bump: a version-skewed peer must fail
+    // the handshake with a clear message, never mis-decode frames
+    use straggler_sched::coordinator::protocol::{Msg, PROTO_VERSION};
+
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().unwrap();
+    let master = std::thread::spawn(move || {
+        let (stream, _) = listener.accept().expect("accept");
+        Msg::Welcome {
+            proto: PROTO_VERSION - 1,
+            worker_id: 0,
+            profile: "quickstart".into(),
+        }
+        .write_to(&mut &stream)
+        .expect("send stale welcome");
+        stream
+    });
+    let err = run_worker(
+        addr,
+        WorkerOptions {
+            backend: straggler_sched::coordinator::Backend::CpuOracle,
+            injected: None,
+            artifact_dir: None,
+        },
+    )
+    .expect_err("v2 handshake must be rejected");
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("protocol version mismatch"),
+        "unexpected error: {msg}"
+    );
+    drop(master.join().expect("master thread"));
 }
 
 #[test]
@@ -179,7 +303,7 @@ fn cluster_with_pjrt_backend_runs_if_artifacts_present() {
         return;
     }
     // quickstart profile: d = 64, b = 32, n = 4
-    let mut cfg = base_config(4, 2, 4, 15);
+    let mut cfg = base_config(SchemeId::Cs, 4, 2, 4, 15);
     cfg.dataset = Dataset::synthesize(4, 64, 4 * 32, 5);
     cfg.use_pjrt = true;
     let ds = cfg.dataset.clone();

@@ -1,0 +1,228 @@
+//! Property tests for the protocol-v3 duplicate-safe partial-sum
+//! aggregation (`coordinator::aggregate`): GC(s) wire blocks must
+//! reconstruct the exact full gradient under arbitrary arrival order,
+//! duplicate flushes and any group size `s` — with a θ trajectory
+//! **bit-identical** to `s = 1`.
+//!
+//! The h-vectors are drawn integer-valued, so every grouping of the
+//! sums is exact in f64 and bit-identity is a set property (no task
+//! dropped, none double-counted), not a floating-point accident — the
+//! live wire adds only f32 rounding on top of the same set semantics.
+//!
+//! No `proptest` crate in the offline build; this drives the same
+//! in-tree seeded-case harness as `tests/proptests.rs`.
+
+use straggler_sched::coordinator::{Offer, RoundAggregator};
+use straggler_sched::data::Dataset;
+use straggler_sched::gd::UncodedMaster;
+use straggler_sched::util::rng::Rng;
+
+/// Run `prop` over `cases` seeded cases; panic with the failing seed.
+fn forall(name: &str, cases: u64, mut prop: impl FnMut(&mut Rng)) {
+    for seed in 0..cases {
+        let mut rng = Rng::seed_from_u64(0x5A6E ^ seed.wrapping_mul(0x9E3779B97F4A7C15));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property {name} FAILED at case seed {seed}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Integer-valued per-task h vectors: exactly representable, so sums
+/// are associative in f64.
+fn integer_h_table(rng: &mut Rng, n: usize, d: usize) -> Vec<Vec<f64>> {
+    (0..n)
+        .map(|_| (0..d).map(|_| rng.below(17) as f64 - 8.0).collect())
+        .collect()
+}
+
+fn range_sum(h: &[Vec<f64>], lo: usize, hi: usize, d: usize) -> Vec<f64> {
+    let mut sum = vec![0.0; d];
+    for t in lo..hi {
+        for (acc, v) in sum.iter_mut().zip(&h[t]) {
+            *acc += v;
+        }
+    }
+    sum
+}
+
+/// Decompose worker `w`'s cyclic row (r = n) into its aligned v3 flush
+/// ranges: flush after task `t` when `(t+1) % s == 0`, at contiguity
+/// breaks (the mod-n wrap), and at the row end — exactly the worker
+/// loop in `coordinator/worker.rs`.
+fn aligned_flush_ranges(w: usize, n: usize, s: usize) -> Vec<(usize, usize)> {
+    let row: Vec<usize> = (0..n).map(|j| (w + j) % n).collect();
+    let mut ranges = Vec::new();
+    let mut start = 0usize;
+    for (slot, &t) in row.iter().enumerate() {
+        let last = slot + 1 == row.len();
+        let flush = last || (t + 1) % s == 0 || row[slot + 1] != t + 1;
+        if flush {
+            ranges.push((row[start], t + 1)); // [first, last+1) in task space
+            start = slot + 1;
+        }
+    }
+    ranges
+}
+
+#[test]
+fn prop_gc_partial_sums_reconstruct_exact_full_gradient() {
+    forall("gc reconstruction", 150, |rng| {
+        let n = 2 + rng.below(11); // 2..=12 tasks, r = n (the GC regime)
+        let d = 1 + rng.below(6);
+        let k = n;
+        let h = integer_h_table(rng, n, d);
+        let full_sum = range_sum(&h, 0, n, d);
+
+        // the s = 1 reference winners/sum: all n tasks in task order
+        for s in 1..=n {
+            // every worker's aligned flush decomposition …
+            let mut offers: Vec<(usize, usize)> = Vec::new();
+            for w in 0..n {
+                offers.extend(aligned_flush_ranges(w, n, s));
+            }
+            // … plus duplicate flushes from lagging stragglers …
+            for _ in 0..rng.below(1 + n) {
+                let dup = offers[rng.below(offers.len())];
+                offers.push(dup);
+            }
+            // … in arbitrary arrival order
+            rng.shuffle(&mut offers);
+
+            let mut agg = RoundAggregator::new(n, d, s, k);
+            for &(lo, hi) in &offers {
+                let tasks: Vec<usize> = (lo..hi).collect();
+                let verdict = agg.offer(&tasks, &range_sum(&h, lo, hi, d));
+                assert_ne!(verdict, Offer::Malformed, "range {lo}..{hi} at s={s}");
+            }
+            assert!(
+                agg.complete(),
+                "full offer set must cover all {n} tasks at s = {s}"
+            );
+            let (winners, sum) = agg.finish();
+            assert_eq!(winners, (0..n).collect::<Vec<_>>(), "s = {s}");
+            for lane in 0..d {
+                assert_eq!(
+                    sum[lane].to_bits(),
+                    full_sum[lane].to_bits(),
+                    "s = {s} lane {lane}: {} vs {}",
+                    sum[lane],
+                    full_sum[lane]
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_theta_trajectory_bit_identical_across_s_and_arrival_order() {
+    forall("theta bit-identity", 60, |rng| {
+        let n = 2 + rng.below(9); // 2..=10
+        let d = 1 + rng.below(5);
+        let ds = Dataset::synthesize(n, d, n * 4, rng.next_u64());
+        let eta = 0.05;
+        let rounds = 3;
+
+        // reference: s = 1, in-order singleton delivery
+        let mut reference = UncodedMaster::new(&ds, eta, n);
+        // candidates: a few group sizes, each with its own shuffled,
+        // duplicated arrival stream per round
+        let sizes: Vec<usize> = (2..=n).filter(|&s| s <= 4 || s == n).collect();
+        let mut candidates: Vec<(usize, UncodedMaster)> = sizes
+            .iter()
+            .map(|&s| (s, UncodedMaster::new(&ds, eta, n)))
+            .collect();
+        let mut rng_step = Rng::seed_from_u64(1);
+
+        for round in 0..rounds {
+            let h = integer_h_table(rng, n, d);
+            // reference round
+            let mut agg = RoundAggregator::new(n, d, 1, n);
+            for t in 0..n {
+                agg.offer(&[t], &range_sum(&h, t, t + 1, d));
+            }
+            let (w_ref, sum_ref) = agg.finish();
+            reference.apply_aggregate(&w_ref, &sum_ref, n, ds.padded_samples(), &mut rng_step);
+
+            for (s, master) in candidates.iter_mut() {
+                let mut offers: Vec<(usize, usize)> = Vec::new();
+                for w in 0..n {
+                    offers.extend(aligned_flush_ranges(w, n, *s));
+                }
+                for _ in 0..rng.below(1 + n) {
+                    let dup = offers[rng.below(offers.len())];
+                    offers.push(dup);
+                }
+                rng.shuffle(&mut offers);
+                let mut agg = RoundAggregator::new(n, d, *s, n);
+                for &(lo, hi) in &offers {
+                    let tasks: Vec<usize> = (lo..hi).collect();
+                    agg.offer(&tasks, &range_sum(&h, lo, hi, d));
+                }
+                assert!(agg.complete(), "s = {s} round {round}");
+                let (w, sum) = agg.finish();
+                let mut rng_s = Rng::seed_from_u64(1); // no reshuffle drawn anyway
+                master.apply_aggregate(&w, &sum, n, ds.padded_samples(), &mut rng_s);
+                for i in 0..d {
+                    assert_eq!(
+                        master.theta[i].to_bits(),
+                        reference.theta[i].to_bits(),
+                        "θ[{i}] diverged at s = {s}, round {round}"
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_no_double_count_under_adversarial_ranges() {
+    // beyond worker-shaped streams: throw arbitrary valid in-block
+    // ranges (any sub-range of any canonical block) at the aggregator
+    // in any order; whatever it accepts, the finished sum must equal
+    // the per-task sum over exactly the reported winners — no task
+    // counted twice, none smuggled in
+    forall("no double count", 200, |rng| {
+        let n = 2 + rng.below(15); // 2..=16
+        let s = 1 + rng.below(n);
+        let d = 1 + rng.below(4);
+        let k = 1 + rng.below(n);
+        let h = integer_h_table(rng, n, d);
+
+        let mut agg = RoundAggregator::new(n, d, s, k);
+        for _ in 0..rng.below(40) {
+            // a random sub-range of a random canonical block
+            let block = rng.below(n.div_ceil(s));
+            let b_lo = block * s;
+            let b_hi = (b_lo + s).min(n);
+            let lo = b_lo + rng.below(b_hi - b_lo);
+            let hi = lo + 1 + rng.below(b_hi - lo);
+            let tasks: Vec<usize> = (lo..hi).collect();
+            let verdict = agg.offer(&tasks, &range_sum(&h, lo, hi, d));
+            assert_ne!(verdict, Offer::Malformed, "{lo}..{hi} (block {block})");
+        }
+        let distinct = agg.distinct();
+        let (winners, sum) = agg.finish();
+        assert_eq!(winners.len(), distinct);
+        let mut sorted = winners.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), winners.len(), "winners must be distinct");
+        let mut want = vec![0.0; d];
+        for &t in &winners {
+            for (acc, v) in want.iter_mut().zip(&h[t]) {
+                *acc += v;
+            }
+        }
+        for lane in 0..d {
+            assert_eq!(
+                sum[lane].to_bits(),
+                want[lane].to_bits(),
+                "lane {lane}: {} vs {}",
+                sum[lane],
+                want[lane]
+            );
+        }
+    });
+}

@@ -246,6 +246,7 @@ fn prop_protocol_roundtrip_random_messages() {
                 tasks: (0..rng.below(16)).map(|_| rng.below(99) as u32).collect(),
                 batches: (0..rng.below(16)).map(|_| rng.below(99) as u32).collect(),
                 group: 1 + rng.below(8) as u32,
+                align: rng.below(2) == 0,
             },
             3 => Msg::Result {
                 round: rng.next_u64() as u32,

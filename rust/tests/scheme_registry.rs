@@ -45,6 +45,13 @@ fn applicability_matrix_matches_paper_table1() {
         (Gc(2), 2, 5, true),
         (Gc(8), 8, 8, true),
         (Gc(9), 8, 8, false),
+        // heterogeneous flush sizes: both ramp endpoints in [1, r]
+        (GcHet(4, 1), 4, 8, true),
+        (GcHet(1, 4), 4, 8, true),
+        (GcHet(2, 2), 2, 5, true),
+        (GcHet(5, 1), 4, 8, false),
+        (GcHet(1, 5), 4, 8, false),
+        (GcHet(0, 2), 4, 8, false),
     ];
     for &(id, r, k, want) in cases {
         assert_eq!(
@@ -216,6 +223,27 @@ fn gc_grouping_trades_lateness_for_messages() {
         est[1].mean,
         est[0].mean
     );
+}
+
+#[test]
+fn gch_runs_coupled_and_degenerates_to_uniform_gc() {
+    // the heterogeneity-aware family dispatches through the same
+    // registry/evaluator path: a flat ramp is bit-identical to GC(s),
+    // and a real ramp produces a sane coupled estimate
+    let model = TruncatedGaussianModel::scenario1(8);
+    for ingest in [0.0, 0.15] {
+        let point = EvalPoint::new(8, 4, 8, 1500, 3)
+            .with_ingest(ingest)
+            .with_schemes(&[SchemeId::Gc(3), SchemeId::GcHet(3, 3), SchemeId::GcHet(4, 1)]);
+        let est = evaluate(&point, &model);
+        assert_eq!(
+            est[0].mean.to_bits(),
+            est[1].mean.to_bits(),
+            "GCH(s,s) ≡ GC(s), ingest {ingest}"
+        );
+        assert_eq!(est[0].p95.to_bits(), est[1].p95.to_bits());
+        assert!(est[2].mean.is_finite() && est[2].mean > 0.0);
+    }
 }
 
 #[test]
