@@ -351,6 +351,56 @@ fn main() {
         }));
     }
 
+    group("policy replan (adaptive subsystem, n = 64) — must stay off the per-task hot path");
+    {
+        // the adaptive contract: estimator update + re-plan + evaluator
+        // rebuild happen once per ROUND boundary, so their combined cost
+        // must stay well under 1 ms at fleet scale (n = 64) — otherwise
+        // re-planning would eat the very straggler slack it recovers
+        use straggler_sched::adaptive::{PolicyEngine, PolicyKind};
+        use straggler_sched::scheme::gc::GcEvaluator;
+
+        let (n_f, r_f, k_f, block) = (64usize, 64usize, 48usize, 4usize);
+        let mut rng_obs = Rng::seed_from_u64(21);
+        let mut engine = PolicyEngine::new(PolicyKind::AdaptiveOrder, n_f, r_f, block);
+        let est_update = bench("adaptive/estimator_update_64workers", || {
+            for w in 0..n_f {
+                engine.observe(w, 0.1 + 0.3 * rng_obs.f64(), 0.5);
+            }
+        });
+        let mut rng_plan = Rng::seed_from_u64(3);
+        let mut round = 0usize;
+        let order_plan = bench("adaptive/replan_order_n64", || {
+            round += 1;
+            black_box(engine.plan(round, &mut rng_plan));
+        });
+        let mut load_engine = PolicyEngine::new(PolicyKind::AdaptiveLoad, n_f, r_f, block);
+        for w in 0..n_f {
+            load_engine.observe(w, 0.1 + 0.01 * w as f64, 0.5);
+        }
+        let load_plan = bench("adaptive/replan_load_n64", || {
+            round += 1;
+            black_box(load_engine.plan(round, &mut rng_plan));
+        });
+        let base = CyclicScheduler.schedule(n_f, r_f, &mut rng_plan);
+        let plan = engine.plan(round + 1, &mut rng_plan);
+        let rebuild = bench("adaptive/rebuild_evaluator_n64_r64", || {
+            let to = plan.materialize(&base);
+            black_box(GcEvaluator::with_sizes(&to, &plan.sizes, k_f));
+        });
+        let per_round_ns =
+            est_update.mean_ns + order_plan.mean_ns.max(load_plan.mean_ns) + rebuild.mean_ns;
+        println!(
+            "adaptive replan cycle (estimate + plan + rebuild): {:.1} µs/round \
+             (target < 1000 µs at n = 64)",
+            per_round_ns / 1e3
+        );
+        all.push(est_update);
+        all.push(order_plan);
+        all.push(load_plan);
+        all.push(rebuild);
+    }
+
     group("linalg oracle (d = 400, b = 60 — fig5 task shape)");
     {
         let mut rng = Rng::seed_from_u64(6);

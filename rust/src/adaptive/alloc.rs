@@ -1,0 +1,122 @@
+//! Non-cyclic task-allocation schedulers — the Behrouzi-Far & Soljanin
+//! (arXiv:1808.02838) *allocation* axis, orthogonal to flush cadence.
+//!
+//! The paper's CS/SS fix a cyclic allocation; [18]'s RA randomizes it
+//! uniformly.  Behrouzi-Far & Soljanin study the middle ground: how
+//! tasks are *grouped onto* workers changes straggler tolerance even
+//! with the execution order fixed.  Two variants ship here as
+//! [`crate::scheduler::Scheduler`]s, reachable through the
+//! `alloc-group` / `alloc-random` policies of [`super::policy`]:
+//!
+//! * [`GroupAllocation`] — workers are partitioned into `n / r` groups
+//!   of `r`; every member of a group holds the *same* `r`-task batch,
+//!   staggered cyclically within the group so the group's members start
+//!   on different tasks (in-group replication = straggler diversity per
+//!   batch, zero diversity across batches — the contrast CS is designed
+//!   to avoid, which is exactly why it belongs in the comparison set);
+//! * random-batch — every worker draws an independent uniformly random
+//!   `r`-subset in random order each round; this is
+//!   [`crate::scheduler::RandomAssignment`]'s generalized `r < n` form,
+//!   so the policy layer reuses that scheduler rather than duplicating
+//!   it here.
+
+use crate::scheduler::{Scheduler, ToMatrix};
+use crate::util::rng::Rng;
+
+/// Group allocation: `n / r` disjoint worker groups, each replicating
+/// one `r`-task batch with in-group cyclic stagger.  Requires `r | n`
+/// (enforced by [`GroupAllocation::applicable`]; `schedule` asserts).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct GroupAllocation;
+
+impl GroupAllocation {
+    /// Group allocation partitions both workers and tasks into `n / r`
+    /// blocks, so it needs `r | n`.
+    pub fn applicable(n: usize, r: usize) -> bool {
+        r >= 1 && r <= n && n % r == 0
+    }
+}
+
+impl Scheduler for GroupAllocation {
+    fn name(&self) -> &'static str {
+        "ALLOC-G"
+    }
+
+    fn schedule(&self, n: usize, r: usize, _rng: &mut Rng) -> ToMatrix {
+        assert!(
+            Self::applicable(n, r),
+            "group allocation needs r | n (got n = {n}, r = {r})"
+        );
+        let rows = (0..n)
+            .map(|w| {
+                let (group, member) = (w / r, w % r);
+                // batch `group` = tasks [group·r, (group+1)·r), walked
+                // cyclically from an in-group stagger offset
+                (0..r).map(|j| group * r + (member + j) % r).collect()
+            })
+            .collect();
+        ToMatrix::new(n, rows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn group_structure_matches_construction() {
+        let mut rng = Rng::seed_from_u64(0);
+        let to = GroupAllocation.schedule(6, 3, &mut rng);
+        // group 0 = workers 0..3 on tasks {0,1,2}, staggered
+        assert_eq!(to.row(0), &[0, 1, 2]);
+        assert_eq!(to.row(1), &[1, 2, 0]);
+        assert_eq!(to.row(2), &[2, 0, 1]);
+        // group 1 = workers 3..6 on tasks {3,4,5}
+        assert_eq!(to.row(3), &[3, 4, 5]);
+        assert_eq!(to.row(5), &[5, 3, 4]);
+        assert!(to.rows_distinct());
+        assert!(to.covers_all_tasks());
+        // every task replicated exactly r times, all inside its group
+        assert!(to.coverage().iter().all(|&c| c == 3));
+    }
+
+    #[test]
+    fn stagger_puts_each_batch_task_first_somewhere() {
+        // in-group diversity: each task of a batch opens exactly one
+        // member's row — the straggler-tolerance property of the scheme
+        let mut rng = Rng::seed_from_u64(0);
+        let to = GroupAllocation.schedule(8, 4, &mut rng);
+        for group in 0..2 {
+            let mut firsts: Vec<usize> =
+                (0..4).map(|m| to.task(group * 4 + m, 0)).collect();
+            firsts.sort_unstable();
+            assert_eq!(firsts, (group * 4..group * 4 + 4).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn applicability_requires_divisibility() {
+        assert!(GroupAllocation::applicable(12, 4));
+        assert!(GroupAllocation::applicable(6, 6));
+        assert!(GroupAllocation::applicable(5, 1));
+        assert!(!GroupAllocation::applicable(12, 5));
+        assert!(!GroupAllocation::applicable(4, 8));
+        assert!(!GroupAllocation::applicable(4, 0));
+    }
+
+    #[test]
+    #[should_panic(expected = "group allocation needs r | n")]
+    fn schedule_rejects_ragged_groups() {
+        let mut rng = Rng::seed_from_u64(0);
+        GroupAllocation.schedule(7, 3, &mut rng);
+    }
+
+    #[test]
+    fn full_load_degenerates_to_one_group() {
+        let mut rng = Rng::seed_from_u64(0);
+        let to = GroupAllocation.schedule(4, 4, &mut rng);
+        // one group of everyone = the cyclic matrix
+        let cs = crate::scheduler::CyclicScheduler.schedule(4, 4, &mut rng);
+        assert_eq!(to.rows(), cs.rows());
+    }
+}

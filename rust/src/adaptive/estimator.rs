@@ -1,0 +1,210 @@
+//! Streaming per-worker delay estimation.
+//!
+//! One [`DelayEstimator`] tracks, per worker, the per-task computation
+//! delay (EWMA mean/variance + empirical quantiles) and the per-message
+//! communication delay (EWMA mean).  EWMA — not a uniform average — is
+//! the point: when a worker's service rate *shifts* mid-run (the
+//! shifting-straggler scenario of [`super::sim`]), the estimate
+//! re-centers within `O(1/α)` observations instead of being anchored to
+//! stale history, which is what lets [`super::PolicyEngine`] re-rank
+//! workers while the shift is still happening.
+//!
+//! Feeding is caller-driven and **causal**: the cluster master calls
+//! [`DelayEstimator::observe_flush`] per received `Result` frame (the
+//! same `comp_us`/receive-timestamp measurements that populate
+//! `RoundLog` and `DelayRecorder`), and the Monte-Carlo arm feeds each
+//! round's simulated slot delays *after* evaluating the round, censored
+//! at the round's completion time (per-slot — a slightly richer view
+//! than the master's flush-grouped one; see the censoring note in
+//! [`super::sim`]).
+
+use crate::util::stats::{Ewma, StreamingQuantiles};
+
+/// Default EWMA weight: re-centers an estimate within ~15 observations
+/// of a rate shift while smoothing per-task noise.
+pub const DEFAULT_EWMA_ALPHA: f64 = 0.2;
+
+/// Snapshot of one worker's current delay model.
+#[derive(Debug, Clone)]
+pub struct WorkerEstimate {
+    pub worker: usize,
+    /// EWMA per-task computation delay (ms); `NaN` if unobserved.
+    pub comp_mean_ms: f64,
+    /// EW standard deviation of the per-task computation delay.
+    pub comp_std_ms: f64,
+    /// EWMA per-message communication delay (ms); `NaN` if unobserved.
+    pub comm_mean_ms: f64,
+    /// Empirical median of the per-task computation delay.
+    pub comp_p50_ms: f64,
+    /// Empirical 95th percentile of the per-task computation delay.
+    pub comp_p95_ms: f64,
+    /// Computation observations folded in so far.
+    pub samples: u64,
+}
+
+/// Per-worker streaming delay models for an `n`-worker fleet.
+#[derive(Debug, Clone)]
+pub struct DelayEstimator {
+    comp: Vec<Ewma>,
+    comm: Vec<Ewma>,
+    comp_q: Vec<StreamingQuantiles>,
+}
+
+impl DelayEstimator {
+    pub fn new(n: usize) -> Self {
+        Self::with_alpha(n, DEFAULT_EWMA_ALPHA)
+    }
+
+    pub fn with_alpha(n: usize, alpha: f64) -> Self {
+        assert!(n >= 1, "need at least one worker");
+        Self {
+            comp: vec![Ewma::new(alpha); n],
+            comm: vec![Ewma::new(alpha); n],
+            comp_q: vec![StreamingQuantiles::new(); n],
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.comp.len()
+    }
+
+    /// Fold in one task's observed delays: `comp_ms` to compute it,
+    /// `comm_ms` to deliver the message it rode on.
+    pub fn observe(&mut self, worker: usize, comp_ms: f64, comm_ms: f64) {
+        self.comp[worker].push(comp_ms);
+        self.comp_q[worker].push(comp_ms);
+        self.comm[worker].push(comm_ms);
+    }
+
+    /// Fold in one flushed result group as measured by the cluster
+    /// master: `tasks` tasks computed in `comp_total_ms` (the frame's
+    /// `comp_us`), delivered with `comm_ms` of wire delay.  The group's
+    /// computation time is attributed evenly across its tasks.
+    pub fn observe_flush(&mut self, worker: usize, tasks: usize, comp_total_ms: f64, comm_ms: f64) {
+        assert!(tasks >= 1, "a flush delivers at least one task");
+        let per_task = comp_total_ms / tasks as f64;
+        for _ in 0..tasks {
+            self.comp[worker].push(per_task);
+            self.comp_q[worker].push(per_task);
+        }
+        self.comm[worker].push(comm_ms);
+    }
+
+    /// Computation observations folded in for `worker`.
+    pub fn samples(&self, worker: usize) -> u64 {
+        self.comp[worker].count()
+    }
+
+    /// Current snapshot for one worker.
+    pub fn estimate(&self, worker: usize) -> WorkerEstimate {
+        let q = &self.comp_q[worker];
+        let (p50, p95) = if q.count() > 0 {
+            let qs = q.quantiles(&[0.5, 0.95]);
+            (qs[0], qs[1])
+        } else {
+            (f64::NAN, f64::NAN)
+        };
+        WorkerEstimate {
+            worker,
+            comp_mean_ms: self.comp[worker].mean(),
+            comp_std_ms: self.comp[worker].std_dev(),
+            comm_mean_ms: self.comm[worker].mean(),
+            comp_p50_ms: p50,
+            comp_p95_ms: p95,
+            samples: self.comp[worker].count(),
+        }
+    }
+
+    /// Snapshots for the whole fleet, worker order.
+    pub fn estimates(&self) -> Vec<WorkerEstimate> {
+        (0..self.n()).map(|w| self.estimate(w)).collect()
+    }
+
+    /// Workers sorted fastest-first by estimated per-task computation
+    /// delay.  Unobserved workers sort last, in index order, so a fresh
+    /// estimator yields the identity ranking (round 0 is always the
+    /// static plan) and the output is deterministic for any estimator
+    /// state — the policy-determinism contract.
+    pub fn speed_ranking(&self) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..self.n()).collect();
+        idx.sort_by(|&a, &b| {
+            let (ma, mb) = (self.score(a), self.score(b));
+            ma.total_cmp(&mb).then(a.cmp(&b))
+        });
+        idx
+    }
+
+    /// Ranking score: EWMA per-task computation delay; `+∞` when the
+    /// worker has never been observed (ranks behind every observed one;
+    /// `total_cmp` keeps `∞` ties resolved by index).
+    fn score(&self, worker: usize) -> f64 {
+        if self.comp[worker].count() == 0 {
+            f64::INFINITY
+        } else {
+            self.comp[worker].mean()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_estimator_ranks_identity() {
+        let est = DelayEstimator::new(5);
+        assert_eq!(est.speed_ranking(), vec![0, 1, 2, 3, 4]);
+        assert!(est.estimate(0).comp_mean_ms.is_nan());
+        assert_eq!(est.estimate(0).samples, 0);
+    }
+
+    #[test]
+    fn ranking_orders_by_observed_means() {
+        let mut est = DelayEstimator::new(4);
+        for _ in 0..20 {
+            est.observe(0, 0.3, 0.5);
+            est.observe(1, 0.1, 0.5);
+            est.observe(3, 0.2, 0.5);
+        }
+        // worker 2 unobserved → last; others fastest-first
+        assert_eq!(est.speed_ranking(), vec![1, 3, 0, 2]);
+    }
+
+    #[test]
+    fn ranking_tracks_a_speed_shift() {
+        let mut est = DelayEstimator::new(2);
+        for _ in 0..50 {
+            est.observe(0, 0.1, 0.5);
+            est.observe(1, 0.3, 0.5);
+        }
+        assert_eq!(est.speed_ranking(), vec![0, 1]);
+        // worker 0 becomes the straggler; EWMA re-ranks in ~15 obs
+        for _ in 0..15 {
+            est.observe(0, 0.3, 0.5);
+            est.observe(1, 0.1, 0.5);
+        }
+        assert_eq!(est.speed_ranking(), vec![1, 0]);
+    }
+
+    #[test]
+    fn flush_attributes_comp_evenly() {
+        let mut est = DelayEstimator::new(1);
+        est.observe_flush(0, 4, 2.0, 0.7);
+        let e = est.estimate(0);
+        assert_eq!(e.samples, 4);
+        assert!((e.comp_mean_ms - 0.5).abs() < 1e-12);
+        assert!((e.comm_mean_ms - 0.7).abs() < 1e-12);
+        assert!((e.comp_p50_ms - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantiles_reflect_the_stream() {
+        let mut est = DelayEstimator::new(1);
+        for i in 0..100 {
+            est.observe(0, i as f64, 0.0);
+        }
+        let e = est.estimate(0);
+        assert!((e.comp_p50_ms - 49.5).abs() < 1.0, "p50 {}", e.comp_p50_ms);
+        assert!((e.comp_p95_ms - 94.05).abs() < 1.5, "p95 {}", e.comp_p95_ms);
+    }
+}

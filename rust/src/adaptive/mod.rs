@@ -1,0 +1,66 @@
+//! Online adaptive scheduling — per-worker delay estimation and
+//! round-by-round re-planning, the fourth pillar next to
+//! [`crate::scheme`], the engines ([`crate::sim`]) and the cluster data
+//! plane ([`crate::coordinator`]).
+//!
+//! The paper fixes the computation schedule before the first round, yet
+//! its whole premise is that worker delays are random — and on real
+//! clusters they *drift* (§VI's EC2 measurements).  Egger, Kas Hanna &
+//! Bitar (arXiv:2304.08589) show that adapting each worker's
+//! computation load online to its estimated straggling behavior beats
+//! any static assignment, and Behrouzi-Far & Soljanin (arXiv:1808.02838)
+//! show the task-to-worker *allocation* itself is a live design axis.
+//! This module makes every uncoded scheme re-plannable between rounds,
+//! on the Monte-Carlo engines and the live cluster alike:
+//!
+//! * [`estimator`] — streaming per-worker delay models: EWMA
+//!   mean/variance ([`crate::util::stats::Ewma`]) plus
+//!   empirical quantiles ([`crate::util::stats::StreamingQuantiles`]),
+//!   fed from the cluster's measured `Result` timestamps (the same
+//!   measurements that populate `RoundLog`/`DelayRecorder`) and from
+//!   simulated arrivals in the Monte-Carlo arm — causally: round `t`'s
+//!   decisions only see arrivals from rounds `< t`;
+//! * [`policy`] — the [`Policy`] decision rules behind a
+//!   [`PolicyEngine`]: at each round boundary the engine consumes the
+//!   estimator state and emits a fresh [`RoundPlan`] (worker order,
+//!   per-worker flush sizes, optional assignment override).  Shipped
+//!   policies: `static` (frozen plan, bit-identical to the registry
+//!   path), `order` (re-rank the cyclic/staircase worker order by
+//!   estimated speed, spreading the currently-fast workers' rows evenly
+//!   over task space), `load` (re-split per-worker flush sizes `s_i` à
+//!   la GCH, constrained to divisors of the canonical block so partial
+//!   sums stay mergeable), and the Behrouzi-Far & Soljanin allocation
+//!   variants `alloc-group` / `alloc-random` as static allocation
+//!   policies;
+//! * [`alloc`] — the non-cyclic allocation schedulers those variants
+//!   build on;
+//! * [`sim`] — the sequential multi-round re-planning Monte-Carlo arm
+//!   ([`sim::run_policy_rounds`], also reachable as
+//!   `MonteCarlo::estimate_policy`) plus the shifting-straggler
+//!   scenario ([`sim::ShiftingStraggler`], [`sim::two_tier_model`]) —
+//!   worker speeds change mid-run, the exact case static schemes lose.
+//!
+//! The live-cluster side enters through
+//! [`crate::scheme::SchemeRegistry::adaptive_plan`] and
+//! `ClusterConfig::policy`: the master re-issues per-round `Assign`
+//! frames from the engine's plan (protocol stays v3 — assignment was
+//! always per-round; only the plan's *source* changes).
+//!
+//! Determinism contract: every policy decision is a pure function of
+//! `(round, estimator state)` (plus the scheduling RNG for
+//! `alloc-random`, which redraws like RA), so a fixed seed + arrival
+//! trace reproduces the decision sequence exactly — pinned by
+//! `rust/tests/adaptive.rs` via [`sim::PolicyOutcome::decision_digest`].
+
+pub mod alloc;
+pub mod estimator;
+pub mod policy;
+pub mod sim;
+
+pub use alloc::GroupAllocation;
+pub use estimator::{DelayEstimator, WorkerEstimate, DEFAULT_EWMA_ALPHA};
+pub use policy::{snap_divisor, spread_offsets, PolicyEngine, PolicyKind, RoundPlan};
+pub use sim::{
+    run_policy_rounds, two_tier_model, PerRound, PolicyOutcome, PolicyRunConfig,
+    RoundDelayModel, ShiftingStraggler,
+};

@@ -1,0 +1,554 @@
+//! Re-planning policies and the engine that drives them.
+//!
+//! A policy is a decision rule: given the current
+//! [`DelayEstimator`](super::DelayEstimator) state, emit a
+//! [`RoundPlan`] for the next round — which base TO-matrix row each
+//! worker executes, each worker's flush size, and (for the allocation
+//! variants) an outright assignment override.  The
+//! [`PolicyEngine`] owns the estimator + policy state and is the one
+//! object both execution paths drive: the Monte-Carlo arm
+//! ([`super::sim`]) and the cluster master
+//! ([`crate::coordinator::run_cluster`]).
+//!
+//! Decisions are pure functions of `(round, estimator state)` — plus
+//! the scheduling RNG for `alloc-random`, which redraws per round
+//! exactly like RA — so a fixed seed + arrival trace reproduces the
+//! decision sequence bit for bit ([`PolicyEngine::decision_digest`]).
+
+use anyhow::{bail, ensure, Result};
+
+use crate::scheduler::{RandomAssignment, Scheduler, ToMatrix};
+use crate::scheme::SchemeId;
+use crate::util::rng::Rng;
+
+use super::alloc::GroupAllocation;
+use super::estimator::DelayEstimator;
+
+/// Which re-planning rule runs between rounds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PolicyKind {
+    /// Frozen plan — today's registry path, bit-identical (pinned by
+    /// `rust/tests/scheme_registry.rs`).
+    Static,
+    /// Re-rank the cyclic/staircase worker order by estimated speed:
+    /// the `j`-th fastest worker gets base row [`spread_offsets`]`[j]`,
+    /// so the currently-fast workers' rows tile task space evenly and
+    /// their early slots cover *disjoint* tasks.
+    AdaptiveOrder,
+    /// Re-split per-worker flush sizes `s_i` à la GCH: the fastest
+    /// worker keeps the full canonical block, slower workers ramp down
+    /// to 1, every size [`snap_divisor`]-constrained to divide the
+    /// canonical block so the master's range merge stays duplicate-safe.
+    AdaptiveLoad,
+    /// Behrouzi-Far & Soljanin group allocation (static assignment
+    /// override; needs `r | n`).
+    AllocGroup,
+    /// Behrouzi-Far & Soljanin random-batch allocation: an independent
+    /// random `r`-subset per worker, redrawn every round.
+    AllocRandom,
+}
+
+impl PolicyKind {
+    /// Parse the CLI/config spelling (case-insensitive):
+    /// `static | order | load | alloc-group | alloc-random`.
+    pub fn parse(name: &str) -> Result<PolicyKind> {
+        Ok(match name.trim().to_lowercase().as_str() {
+            "static" => PolicyKind::Static,
+            "order" | "adaptive-order" => PolicyKind::AdaptiveOrder,
+            "load" | "adaptive-load" => PolicyKind::AdaptiveLoad,
+            "alloc-group" | "group" => PolicyKind::AllocGroup,
+            "alloc-random" | "random" => PolicyKind::AllocRandom,
+            other => bail!(
+                "unknown policy {other:?} (static|order|load|alloc-group|alloc-random)"
+            ),
+        })
+    }
+
+    /// Does the policy consume estimator state between rounds?
+    pub fn is_adaptive(self) -> bool {
+        matches!(self, PolicyKind::AdaptiveOrder | PolicyKind::AdaptiveLoad)
+    }
+
+    /// Does the policy change *which tasks a worker holds*?  On the
+    /// live cluster this forces full-dataset distribution (like RA) —
+    /// `load` keeps assignments fixed and ships rows only.
+    pub fn reassigns_rows(self) -> bool {
+        matches!(
+            self,
+            PolicyKind::AdaptiveOrder | PolicyKind::AllocGroup | PolicyKind::AllocRandom
+        )
+    }
+
+    /// The one policy × scheme × shape gate, shared by the Monte-Carlo
+    /// arm ([`super::sim::run_policy_rounds`]) and the registry's
+    /// cluster entry (`SchemeRegistry::adaptive_plan`): non-static
+    /// policies need a fixed uncoded base plan to re-plan (CS, SS or
+    /// GC(s) — GCH is itself a static load layout, RA/alloc-random
+    /// re-randomize, and the coded wires fix their own assignment),
+    /// `alloc-group` needs `r | n`, and `alloc-random` needs `r = n`
+    /// (random batches may leave the k-distinct target uncoverable
+    /// otherwise).
+    pub fn validate_base(self, scheme: SchemeId, n: usize, r: usize) -> Result<()> {
+        if self == PolicyKind::Static {
+            return Ok(());
+        }
+        ensure!(
+            matches!(scheme, SchemeId::Cs | SchemeId::Ss | SchemeId::Gc(_)),
+            "policy {self} needs a fixed uncoded base plan to re-plan; \
+             {scheme} has none — use --policy static, or a CS/SS/GC(s) \
+             base (GCH is itself a static load layout: adapt it as \
+             --policy load over GC(s))"
+        );
+        if self == PolicyKind::AllocGroup {
+            ensure!(
+                GroupAllocation::applicable(n, r),
+                "alloc-group needs r | n (got n = {n}, r = {r})"
+            );
+        }
+        if self == PolicyKind::AllocRandom {
+            ensure!(
+                r == n,
+                "alloc-random needs r = n (random batches may leave the \
+                 k-distinct target uncoverable otherwise)"
+            );
+        }
+        Ok(())
+    }
+}
+
+impl std::fmt::Display for PolicyKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            PolicyKind::Static => "static",
+            PolicyKind::AdaptiveOrder => "order",
+            PolicyKind::AdaptiveLoad => "load",
+            PolicyKind::AllocGroup => "alloc-group",
+            PolicyKind::AllocRandom => "alloc-random",
+        })
+    }
+}
+
+/// One round's plan, as emitted by [`PolicyEngine::plan`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoundPlan {
+    /// `order[w]` = index of the base TO-matrix row worker `w`
+    /// executes (identity when the policy does not reorder).
+    pub order: Vec<usize>,
+    /// Per-worker flush sizes; every entry divides the canonical block.
+    pub sizes: Vec<usize>,
+    /// Assignment override (allocation policies) — replaces the base
+    /// matrix outright; `order` is identity when set.
+    pub to: Option<ToMatrix>,
+}
+
+impl RoundPlan {
+    /// The frozen identity plan at a given shape.
+    pub fn identity(n: usize, block: usize) -> Self {
+        Self {
+            order: (0..n).collect(),
+            sizes: vec![block; n],
+            to: None,
+        }
+    }
+
+    /// The concrete TO matrix this plan executes over `base`: the
+    /// assignment override when present, else `base`'s rows permuted so
+    /// worker `w` runs row `order[w]` — the single materialization
+    /// every consumer (MC arm, cluster master, benches) shares.
+    pub fn materialize(&self, base: &ToMatrix) -> ToMatrix {
+        match &self.to {
+            Some(to) => to.clone(),
+            None => ToMatrix::new(
+                base.n(),
+                (0..base.n())
+                    .map(|w| base.row(self.order[w]).to_vec())
+                    .collect(),
+            ),
+        }
+    }
+}
+
+/// Offsets that spread `n` ranked items around the cyclic ring so that
+/// every *prefix* of the ranking is (near-)maximally spaced: greedy
+/// max–min cyclic distance, ties to the smallest offset.  `[0, n/2,
+/// n/4, 3n/4, …]` — bit-reversal order for powers of two.  This is what
+/// lets the `j` currently-fastest workers' cyclic rows cover `≈ j·r`
+/// *distinct* tasks early instead of overlapping windows.
+pub fn spread_offsets(n: usize) -> Vec<usize> {
+    assert!(n >= 1);
+    let mut offs = Vec::with_capacity(n);
+    offs.push(0usize);
+    let mut used = vec![false; n];
+    used[0] = true;
+    for _ in 1..n {
+        let (mut best, mut best_d) = (usize::MAX, 0usize);
+        for c in 0..n {
+            if used[c] {
+                continue;
+            }
+            let d = offs
+                .iter()
+                .map(|&o| {
+                    let fwd = (c + n - o) % n;
+                    fwd.min(n - fwd)
+                })
+                .min()
+                .expect("offs nonempty");
+            if d > best_d {
+                best = c;
+                best_d = d;
+            }
+        }
+        offs.push(best);
+        used[best] = true;
+    }
+    offs
+}
+
+/// Largest divisor of `block` that is `≤ max(v, 1)` — the mergeability
+/// constraint on per-worker flush sizes: a worker flushing at
+/// boundaries of a divisor of the canonical block always produces
+/// ranges nested inside one canonical block, so the master's
+/// duplicate-safe range merge ([`crate::coordinator::aggregate`])
+/// keeps working across workers with *different* cadences.
+pub fn snap_divisor(block: usize, v: usize) -> usize {
+    assert!(block >= 1, "canonical block must be ≥ 1");
+    let v = v.clamp(1, block);
+    (1..=v).rev().find(|d| block % d == 0).expect("1 divides")
+}
+
+/// Policy + estimator state, driven at every round boundary.
+pub struct PolicyEngine {
+    kind: PolicyKind,
+    n: usize,
+    r: usize,
+    /// Canonical flush block of the base scheme (`s` for GC(s),
+    /// `max(s_fast, s_slow)` for GCH, 1 for per-task streaming).
+    block: usize,
+    pub estimator: DelayEstimator,
+    last: Option<RoundPlan>,
+    replans: usize,
+    digest: u64,
+}
+
+impl PolicyEngine {
+    pub fn new(kind: PolicyKind, n: usize, r: usize, block: usize) -> Self {
+        assert!(n >= 1 && r >= 1 && r <= n, "degenerate fleet shape");
+        assert!(block >= 1 && block <= r, "canonical block must satisfy 1 ≤ block ≤ r");
+        Self {
+            kind,
+            n,
+            r,
+            block,
+            estimator: DelayEstimator::new(n),
+            last: None,
+            replans: 0,
+            digest: 0xcbf29ce484222325, // FNV-1a offset basis
+        }
+    }
+
+    pub fn kind(&self) -> PolicyKind {
+        self.kind
+    }
+
+    /// Feed one task observation (Monte-Carlo arm).
+    pub fn observe(&mut self, worker: usize, comp_ms: f64, comm_ms: f64) {
+        self.estimator.observe(worker, comp_ms, comm_ms);
+    }
+
+    /// Feed one flushed result group (cluster master).
+    pub fn observe_flush(
+        &mut self,
+        worker: usize,
+        tasks: usize,
+        comp_total_ms: f64,
+        comm_ms: f64,
+    ) {
+        self.estimator.observe_flush(worker, tasks, comp_total_ms, comm_ms);
+    }
+
+    /// Decide round `round`'s plan from the current estimator state.
+    /// `rng_sched` is consumed only by `alloc-random` (per-round
+    /// redraw, RA-style).
+    pub fn plan(&mut self, round: usize, rng_sched: &mut Rng) -> RoundPlan {
+        let n = self.n;
+        // no evidence yet → the static plan (the estimator-driven
+        // policies must not impose an uninformed bias on round 0; the
+        // allocation overrides are evidence-free by design)
+        let unobserved = self.kind.is_adaptive()
+            && (0..n).all(|w| self.estimator.samples(w) == 0);
+        let plan = match self.kind {
+            _ if unobserved => RoundPlan::identity(n, self.block),
+            PolicyKind::Static => RoundPlan::identity(n, self.block),
+            PolicyKind::AdaptiveOrder => {
+                let ranking = self.estimator.speed_ranking();
+                let offsets = spread_offsets(n);
+                let mut order = vec![0usize; n];
+                for (j, &w) in ranking.iter().enumerate() {
+                    order[w] = offsets[j];
+                }
+                RoundPlan {
+                    order,
+                    sizes: vec![self.block; n],
+                    to: None,
+                }
+            }
+            PolicyKind::AdaptiveLoad => {
+                let ranking = self.estimator.speed_ranking();
+                let mut sizes = vec![0usize; n];
+                for (j, &w) in ranking.iter().enumerate() {
+                    // linear ramp block → 1 across the speed ranking,
+                    // snapped to divisors of the canonical block
+                    let t = if n == 1 { 0.0 } else { j as f64 / (n - 1) as f64 };
+                    let raw = self.block as f64 + (1.0 - self.block as f64) * t;
+                    sizes[w] = snap_divisor(self.block, raw.round() as usize);
+                }
+                RoundPlan {
+                    order: (0..n).collect(),
+                    sizes,
+                    to: None,
+                }
+            }
+            PolicyKind::AllocGroup => RoundPlan {
+                order: (0..n).collect(),
+                sizes: vec![self.block; n],
+                to: Some(GroupAllocation.schedule(n, self.r, rng_sched)),
+            },
+            PolicyKind::AllocRandom => RoundPlan {
+                order: (0..n).collect(),
+                sizes: vec![self.block; n],
+                to: Some(RandomAssignment.schedule(n, self.r, rng_sched)),
+            },
+        };
+        if self.last.as_ref() != Some(&plan) {
+            self.replans += 1;
+        }
+        self.fold_digest(round, &plan);
+        self.last = Some(plan.clone());
+        plan
+    }
+
+    /// How many rounds changed the plan (round 0 counts as the first).
+    pub fn replans(&self) -> usize {
+        self.replans
+    }
+
+    /// FNV-1a fold of every decision so far — the determinism pin:
+    /// identical seeds + arrival traces must yield identical digests.
+    pub fn decision_digest(&self) -> u64 {
+        self.digest
+    }
+
+    fn fold_digest(&mut self, round: usize, plan: &RoundPlan) {
+        const PRIME: u64 = 0x100000001b3;
+        let mut h = self.digest;
+        let mut fold = |v: u64| {
+            h ^= v;
+            h = h.wrapping_mul(PRIME);
+        };
+        fold(round as u64);
+        for &o in &plan.order {
+            fold(o as u64);
+        }
+        for &s in &plan.sizes {
+            fold(s as u64);
+        }
+        if let Some(to) = &plan.to {
+            for row in to.rows() {
+                for &t in row {
+                    fold(t as u64 ^ 0x5A5A);
+                }
+            }
+        }
+        self.digest = h;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_spellings_and_display_roundtrip() {
+        for (s, want) in [
+            ("static", PolicyKind::Static),
+            ("ORDER", PolicyKind::AdaptiveOrder),
+            ("adaptive-load", PolicyKind::AdaptiveLoad),
+            (" alloc-group ", PolicyKind::AllocGroup),
+            ("alloc-random", PolicyKind::AllocRandom),
+        ] {
+            assert_eq!(PolicyKind::parse(s).unwrap(), want, "{s:?}");
+        }
+        for kind in [
+            PolicyKind::Static,
+            PolicyKind::AdaptiveOrder,
+            PolicyKind::AdaptiveLoad,
+            PolicyKind::AllocGroup,
+            PolicyKind::AllocRandom,
+        ] {
+            assert_eq!(PolicyKind::parse(&kind.to_string()).unwrap(), kind);
+        }
+        assert!(PolicyKind::parse("wat").is_err());
+    }
+
+    #[test]
+    fn spread_offsets_is_a_spread_permutation() {
+        assert_eq!(spread_offsets(8), vec![0, 4, 2, 6, 1, 3, 5, 7]);
+        assert_eq!(spread_offsets(1), vec![0]);
+        for n in 1..=17 {
+            let offs = spread_offsets(n);
+            let mut sorted = offs.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, (0..n).collect::<Vec<_>>(), "n={n}");
+        }
+        // the defining property: early prefixes are maximally spaced —
+        // at n = 12 the first four offsets sit pairwise ≥ 3 apart
+        // cyclically (after that the gaps necessarily shrink to 1)
+        let offs = spread_offsets(12);
+        assert_eq!(&offs[..4], &[0, 6, 3, 9]);
+        for i in 0..4 {
+            for j in 0..i {
+                let d = (offs[i] + 12 - offs[j]) % 12;
+                assert!(d.min(12 - d) >= 3, "offsets {} and {}", offs[j], offs[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn snap_divisor_picks_largest_dividing() {
+        assert_eq!(snap_divisor(4, 4), 4);
+        assert_eq!(snap_divisor(4, 3), 2);
+        assert_eq!(snap_divisor(4, 2), 2);
+        assert_eq!(snap_divisor(4, 1), 1);
+        assert_eq!(snap_divisor(6, 5), 3);
+        assert_eq!(snap_divisor(6, 4), 3);
+        assert_eq!(snap_divisor(1, 9), 1);
+        assert_eq!(snap_divisor(5, 0), 1, "clamps up to 1");
+        assert_eq!(snap_divisor(3, 7), 3, "clamps down to block");
+    }
+
+    #[test]
+    fn order_policy_spreads_the_fast_prefix() {
+        let mut eng = PolicyEngine::new(PolicyKind::AdaptiveOrder, 8, 8, 1);
+        let mut rng = Rng::seed_from_u64(0);
+        // no observations yet → round 0 is the static identity plan
+        let p0 = eng.plan(0, &mut rng);
+        assert_eq!(p0, RoundPlan::identity(8, 1));
+        // make workers 5 and 6 the fast pair → they get offsets 0 and 4
+        for _ in 0..30 {
+            for w in 0..8 {
+                let ms = if w == 5 || w == 6 { 0.1 } else { 0.4 };
+                eng.observe(w, ms, 0.5);
+            }
+        }
+        let p1 = eng.plan(1, &mut rng);
+        let d = (p1.order[5] + 8 - p1.order[6]) % 8;
+        assert_eq!(d.min(8 - d), 4, "fast pair must sit opposite: {:?}", p1.order);
+        assert!(eng.replans() >= 2);
+    }
+
+    #[test]
+    fn load_policy_sizes_divide_block_and_ramp_by_rank() {
+        let mut eng = PolicyEngine::new(PolicyKind::AdaptiveLoad, 6, 6, 4);
+        let mut rng = Rng::seed_from_u64(0);
+        for _ in 0..30 {
+            for w in 0..6 {
+                eng.observe(w, 0.1 * (w + 1) as f64, 0.5);
+            }
+        }
+        let p = eng.plan(1, &mut rng);
+        assert_eq!(p.order, (0..6).collect::<Vec<_>>(), "load does not reorder");
+        assert!(p.sizes.iter().all(|&s| 4 % s == 0), "{:?}", p.sizes);
+        // worker 0 is fastest → full block; worker 5 slowest → 1
+        assert_eq!(p.sizes[0], 4);
+        assert_eq!(p.sizes[5], 1);
+        for w in 0..5 {
+            assert!(p.sizes[w] >= p.sizes[w + 1], "monotone ramp: {:?}", p.sizes);
+        }
+    }
+
+    #[test]
+    fn unobserved_adaptive_policies_emit_the_static_plan() {
+        let mut rng = Rng::seed_from_u64(0);
+        for kind in [PolicyKind::AdaptiveOrder, PolicyKind::AdaptiveLoad] {
+            let mut eng = PolicyEngine::new(kind, 6, 6, 3);
+            assert_eq!(
+                eng.plan(0, &mut rng),
+                RoundPlan::identity(6, 3),
+                "{kind}: round 0 must be static"
+            );
+        }
+    }
+
+    #[test]
+    fn materialize_permutes_rows_or_applies_override() {
+        let mut rng = Rng::seed_from_u64(0);
+        let base = crate::scheduler::CyclicScheduler.schedule(4, 2, &mut rng);
+        let plan = RoundPlan {
+            order: vec![2, 0, 3, 1],
+            sizes: vec![1; 4],
+            to: None,
+        };
+        let to = plan.materialize(&base);
+        for w in 0..4 {
+            assert_eq!(to.row(w), base.row(plan.order[w]), "worker {w}");
+        }
+        assert_eq!(RoundPlan::identity(4, 1).materialize(&base).rows(), base.rows());
+        let with_override = RoundPlan {
+            to: Some(base.clone()),
+            ..RoundPlan::identity(4, 1)
+        };
+        assert_eq!(with_override.materialize(&base).rows(), base.rows());
+    }
+
+    #[test]
+    fn validate_base_gates_policy_scheme_shapes() {
+        use SchemeId::*;
+        let v = |p: PolicyKind, s, n, r| p.validate_base(s, n, r).is_ok();
+        assert!(v(PolicyKind::Static, Pc, 6, 3), "static allows everything");
+        assert!(v(PolicyKind::AdaptiveOrder, Cs, 6, 3));
+        assert!(v(PolicyKind::AdaptiveLoad, Gc(2), 6, 4));
+        assert!(!v(PolicyKind::AdaptiveOrder, Pc, 6, 3), "coded");
+        assert!(!v(PolicyKind::AdaptiveLoad, GcHet(2, 1), 6, 4), "GCH");
+        assert!(!v(PolicyKind::AdaptiveOrder, Ra, 6, 6), "randomized");
+        assert!(!v(PolicyKind::AllocGroup, Cs, 6, 4), "needs r | n");
+        assert!(v(PolicyKind::AllocGroup, Cs, 6, 3));
+        assert!(!v(PolicyKind::AllocRandom, Cs, 6, 3), "needs r = n");
+        assert!(v(PolicyKind::AllocRandom, Cs, 6, 6));
+    }
+
+    #[test]
+    fn alloc_policies_override_assignment() {
+        let mut rng = Rng::seed_from_u64(1);
+        let mut eng = PolicyEngine::new(PolicyKind::AllocGroup, 6, 3, 1);
+        let p = eng.plan(0, &mut rng);
+        let to = p.to.expect("group allocation overrides");
+        assert_eq!(to.row(0), &[0, 1, 2]);
+        // deterministic: second round identical, no replan counted
+        let p2 = eng.plan(1, &mut rng);
+        assert_eq!(p.to, p2.to);
+        assert_eq!(eng.replans(), 1);
+
+        let mut eng = PolicyEngine::new(PolicyKind::AllocRandom, 6, 3, 1);
+        let a = eng.plan(0, &mut rng).to.unwrap();
+        let b = eng.plan(1, &mut rng).to.unwrap();
+        assert_ne!(a, b, "random-batch redraws per round");
+    }
+
+    #[test]
+    fn digest_is_deterministic_and_decision_sensitive() {
+        let run = |obs: f64| {
+            let mut eng = PolicyEngine::new(PolicyKind::AdaptiveOrder, 4, 4, 1);
+            let mut rng = Rng::seed_from_u64(0);
+            for round in 0..5 {
+                for w in 0..4 {
+                    eng.observe(w, if w == 0 { obs } else { 0.4 }, 0.5);
+                }
+                eng.plan(round, &mut rng);
+            }
+            eng.decision_digest()
+        };
+        assert_eq!(run(0.1), run(0.1), "same trace → same digest");
+        assert_ne!(run(0.1), run(0.9), "different ranking → different digest");
+    }
+}

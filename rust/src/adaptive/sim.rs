@@ -1,0 +1,463 @@
+//! The multi-round re-planning Monte-Carlo arm, and the
+//! shifting-straggler scenario it exists to win.
+//!
+//! The coupled engines ([`crate::scheme::run_rounds`]) treat rounds as
+//! exchangeable — correct for static schemes, where nothing carries
+//! across rounds.  An adaptive policy is *sequential by construction*:
+//! round `t`'s plan depends on what rounds `< t` revealed about worker
+//! speeds.  [`run_policy_rounds`] is therefore a single-stream driver:
+//! same chunked [`DelayBatch`] sampling, same shared-arrival pass, same
+//! completion kernels as `run_rounds` (the `static` policy is
+//! bit-identical to the registry path — pinned in
+//! `rust/tests/scheme_registry.rs`), plus a decide → evaluate → observe
+//! cycle per round for the adaptive policies.
+//!
+//! The scenario: [`ShiftingStraggler`] rotates which workers are slow
+//! every `shift_every` rounds (over any base model — use
+//! [`two_tier_model`] for a crisp fast/slow fleet).  Static schemes
+//! must commit to one layout, so whichever layout they pick is wrong
+//! after the next shift; the adaptive policies re-estimate and re-plan
+//! within `O(1/α)` rounds of each shift (`straggler adaptive` prints
+//! the comparison table; EXPERIMENTS.md §Adaptive has the numbers).
+
+use anyhow::{ensure, Result};
+
+use crate::delay::{DelayBatch, DelayModel, DelaySample, TruncatedGaussian, TruncatedGaussianModel};
+use crate::scheduler::{CyclicScheduler, Scheduler, StaircaseScheduler, ToMatrix};
+use crate::scheme::gc::GcEvaluator;
+use crate::scheme::{RoundView, SchemeEvaluator, SchemeId, SchemeRegistry};
+use crate::sim::{shard_rngs, slot_arrivals_batch, CompletionEstimate, MonteCarlo, BATCH_ROUNDS};
+use crate::util::rng::Rng;
+use crate::util::stats::{RunningStats, StreamingQuantiles};
+
+use super::policy::{PolicyEngine, PolicyKind, RoundPlan};
+
+/// A delay source that may depend on the round index — the hook the
+/// shifting-straggler scenario plugs into.  Round-stationary models
+/// enter through [`PerRound`].
+pub trait RoundDelayModel: Send + Sync {
+    fn name(&self) -> String;
+
+    /// Fill all `n × r` slots with round `round`'s delays.  For a fixed
+    /// RNG stream the result must be a deterministic function of
+    /// `(round, rng state)`.
+    fn sample_round_into(&self, round: usize, out: &mut DelaySample, rng: &mut Rng);
+}
+
+/// Adapter: any stationary [`DelayModel`] as a [`RoundDelayModel`]
+/// (ignores the round index; consumes the identical RNG stream as the
+/// model's own batched sampling — the bit-identity contract of
+/// [`DelayModel::sample_batch_into`]).
+pub struct PerRound<'a>(pub &'a dyn DelayModel);
+
+impl RoundDelayModel for PerRound<'_> {
+    fn name(&self) -> String {
+        self.0.name()
+    }
+
+    fn sample_round_into(&self, _round: usize, out: &mut DelaySample, rng: &mut Rng) {
+        self.0.sample_into(out, rng);
+    }
+}
+
+/// Shifting stragglers: every `shift_every` rounds the fleet's
+/// per-worker delay profiles rotate by `rotate` positions, so *which*
+/// workers are slow changes mid-run while the fleet's aggregate
+/// capacity stays constant — the controlled drift that separates
+/// adaptive from static scheduling.
+pub struct ShiftingStraggler<'a> {
+    base: &'a dyn DelayModel,
+    shift_every: usize,
+    rotate: usize,
+}
+
+impl<'a> ShiftingStraggler<'a> {
+    pub fn new(base: &'a dyn DelayModel, shift_every: usize, rotate: usize) -> Self {
+        assert!(shift_every >= 1, "shift period must be ≥ 1 round");
+        Self {
+            base,
+            shift_every,
+            rotate,
+        }
+    }
+
+    /// Worker-row rotation in effect at `round`.
+    pub fn offset_at(&self, round: usize, n: usize) -> usize {
+        (round / self.shift_every * self.rotate) % n
+    }
+}
+
+impl RoundDelayModel for ShiftingStraggler<'_> {
+    fn name(&self) -> String {
+        format!(
+            "shifting({}, every {} rot {})",
+            self.base.name(),
+            self.shift_every,
+            self.rotate
+        )
+    }
+
+    fn sample_round_into(&self, round: usize, out: &mut DelaySample, rng: &mut Rng) {
+        self.base.sample_into(out, rng);
+        let (n, r) = (out.n, out.r);
+        let off = self.offset_at(round, n);
+        if off > 0 {
+            // worker w takes the base model's row (w + off) mod n: the
+            // per-worker profiles rotate, the RNG stream does not
+            out.comp_mut().rotate_left(off * r);
+            out.comm_mut().rotate_left(off * r);
+        }
+    }
+}
+
+/// A crisp two-tier fleet for the scenario: workers `0..n_slow` have
+/// their per-task computation mean scaled by `slow_factor`, the rest
+/// run at the §VI-C scenario-1 baseline (comp μ 0.1 ms, comm μ 0.5 ms);
+/// wrap in [`ShiftingStraggler`] to move the slow block around.
+pub fn two_tier_model(n: usize, n_slow: usize, slow_factor: f64) -> TruncatedGaussianModel {
+    assert!(n_slow <= n, "slow tier larger than the fleet");
+    assert!(slow_factor >= 1.0, "slow factor scales the mean up");
+    let comp = (0..n)
+        .map(|w| {
+            let mu = if w < n_slow { 0.1 * slow_factor } else { 0.1 };
+            TruncatedGaussian::symmetric(mu, 0.1, 0.03)
+        })
+        .collect();
+    let comm = (0..n)
+        .map(|_| TruncatedGaussian::symmetric(0.5, 0.2, 0.2))
+        .collect();
+    TruncatedGaussianModel::new(comp, comm, "two-tier")
+}
+
+/// One policy run's shape: which scheme's base plan the policy
+/// re-plans, at which `(n, r, k)` point, for how many rounds.
+#[derive(Debug, Clone, Copy)]
+pub struct PolicyRunConfig {
+    pub scheme: SchemeId,
+    pub policy: PolicyKind,
+    pub n: usize,
+    pub r: usize,
+    pub k: usize,
+    pub rounds: usize,
+    /// Master-side serialized ingestion cost (ms/message); 0 = the
+    /// idealized eq. (1)–(2) dynamics.
+    pub ingest_ms: f64,
+    pub seed: u64,
+}
+
+/// What a policy run produces.
+#[derive(Debug, Clone)]
+pub struct PolicyOutcome {
+    pub estimate: CompletionEstimate,
+    /// Rounds whose plan differed from the previous round's (0 for the
+    /// static policy, 1 for a static allocation override).
+    pub replans: usize,
+    /// FNV fold of every decision — the determinism pin: same seed +
+    /// arrival trace ⇒ same digest.
+    pub decision_digest: u64,
+}
+
+/// Canonical flush block of a scheme's uncoded base plan.
+fn scheme_block(id: SchemeId) -> usize {
+    match id {
+        SchemeId::Gc(s) => s as usize,
+        SchemeId::GcHet(a, b) => (a.max(b)) as usize,
+        _ => 1,
+    }
+}
+
+/// The base TO-matrix builder a policy permutes. `None` = the scheme
+/// has no fixed uncoded base (randomized or coded) and only `static`
+/// applies.
+fn base_scheduler(id: SchemeId) -> Option<Box<dyn Scheduler>> {
+    match id {
+        SchemeId::Cs | SchemeId::Gc(_) => Some(Box::new(CyclicScheduler)),
+        SchemeId::Ss => Some(Box::new(StaircaseScheduler)),
+        _ => None,
+    }
+}
+
+/// Run `cfg.rounds` sequential rounds of `scheme` under `policy`,
+/// re-planning at every round boundary, and stream per-round completion
+/// times into the estimate (and `emit`, when given).
+///
+/// The `static` policy takes the exact code path of the coupled engines
+/// — same `shard_rngs(seed, 0)` streams, same chunked sampling, same
+/// kernels — so its estimate is bit-identical to
+/// `harness::evaluate` at `threads = 1` for every scheme.  Adaptive
+/// policies additionally: ask the [`PolicyEngine`] for a [`RoundPlan`]
+/// before each round (rebuilding the evaluator only when the plan
+/// changed), and afterwards feed the estimator every slot whose
+/// arrival precedes the round's completion time — causal like the live
+/// master's feed, though slightly better informed (see the censoring
+/// note at the feedback loop).
+pub fn run_policy_rounds(
+    cfg: &PolicyRunConfig,
+    model: &dyn RoundDelayModel,
+    mut emit: Option<&mut dyn FnMut(usize, f64)>,
+) -> Result<PolicyOutcome> {
+    let PolicyRunConfig {
+        scheme: scheme_id,
+        policy,
+        n,
+        r,
+        k,
+        rounds,
+        ingest_ms,
+        seed,
+    } = *cfg;
+    ensure!(rounds >= 1, "need at least one round");
+    ensure!(
+        SchemeRegistry::applicable(scheme_id, n, r, k),
+        "{scheme_id} is not applicable at (n = {n}, r = {r}, k = {k}) — paper Table I"
+    );
+    ensure!(
+        !(ingest_ms.is_nan() || ingest_ms < 0.0),
+        "ingest cost must be a non-negative ms/message"
+    );
+
+    let (mut rng, mut rng_sched) = shard_rngs(seed, 0);
+    let scheme = SchemeRegistry::build(scheme_id);
+    // prepare consumes rng_sched exactly like the coupled engines — the
+    // static-policy bit-identity contract
+    let mut evaluator: Box<dyn SchemeEvaluator> = scheme.prepare(n, r, k, &mut rng_sched);
+
+    policy.validate_base(scheme_id, n, r)?;
+    let mut engine: Option<PolicyEngine> = match policy {
+        PolicyKind::Static => None,
+        _ => Some(PolicyEngine::new(policy, n, r, scheme_block(scheme_id))),
+    };
+    // the base matrix adaptive plans permute (fixed; drawn outside the
+    // round loop so the delay stream is untouched — CS/SS ignore the
+    // RNG, so the throwaway stream is inert)
+    let base_to: Option<ToMatrix> = engine
+        .as_ref()
+        .and_then(|_| base_scheduler(scheme_id))
+        .map(|s| s.schedule(n, r, &mut Rng::seed_from_u64(0)));
+
+    let mut stats = RunningStats::new();
+    let mut quantiles = StreamingQuantiles::new();
+    let mut last_plan: Option<RoundPlan> = None;
+
+    let stride = n * r;
+    let mut batch = DelayBatch::zeros(BATCH_ROUNDS.min(rounds), n, r);
+    let mut tmp = DelaySample::zeros(n, r);
+    let mut arrivals: Vec<f64> = Vec::new();
+    let mut done = 0usize;
+    while done < rounds {
+        let chunk = BATCH_ROUNDS.min(rounds - done);
+        if batch.rounds != chunk {
+            batch = DelayBatch::zeros(chunk, n, r);
+        }
+        for b in 0..chunk {
+            model.sample_round_into(done + b, &mut tmp, &mut rng);
+            batch.copy_round_from_sample(b, &tmp);
+        }
+        slot_arrivals_batch(&batch, &mut arrivals);
+        for b in 0..chunk {
+            let round = done + b;
+            if let Some(engine) = engine.as_mut() {
+                let plan = engine.plan(round, &mut rng_sched);
+                if last_plan.as_ref() != Some(&plan) {
+                    let to = plan.materialize(base_to.as_ref().expect("adaptive base plan"));
+                    evaluator = Box::new(GcEvaluator::with_sizes(&to, &plan.sizes, k));
+                    last_plan = Some(plan);
+                }
+            }
+            let view = RoundView {
+                arrivals: &arrivals[b * stride..(b + 1) * stride],
+                comp: batch.comp_round(b),
+                comm: batch.comm_round(b),
+            };
+            let t = if ingest_ms == 0.0 {
+                evaluator.completion(&view, &mut rng_sched)
+            } else {
+                evaluator.completion_ingest(&view, ingest_ms, &mut rng_sched)
+            };
+            if let Some(engine) = engine.as_mut() {
+                // causal feedback, censored at the round's completion
+                // time.  Censoring uses per-task slot arrivals — a
+                // slightly better-informed view than the live master's
+                // flush-grouped feed (a partially-filled group's slots
+                // count here but never reach a real master); the
+                // policies only consume the resulting speed *ranking*,
+                // which both views agree on
+                for i in 0..n {
+                    for j in 0..r {
+                        let slot = i * r + j;
+                        if view.arrivals[slot] <= t {
+                            engine.observe(i, view.comp[slot], view.comm[slot]);
+                        }
+                    }
+                }
+            }
+            stats.push(t);
+            quantiles.push(t);
+            if let Some(f) = emit.as_mut() {
+                (*f)(round, t);
+            }
+        }
+        done += chunk;
+    }
+
+    let label = match policy {
+        PolicyKind::Static => scheme_id.to_string(),
+        _ => format!("{scheme_id}+{policy}"),
+    };
+    Ok(PolicyOutcome {
+        estimate: CompletionEstimate::from_streams(label, n, r, k, &stats, &quantiles),
+        replans: engine.as_ref().map_or(0, |e| e.replans()),
+        decision_digest: engine.as_ref().map_or(0, |e| e.decision_digest()),
+    })
+}
+
+impl MonteCarlo {
+    /// The re-planning arm on the Monte-Carlo driver: `trials`
+    /// sequential rounds of `scheme` under `policy`.  Adaptation is
+    /// causal and therefore single-stream — `threads` is ignored here
+    /// (shard 0's RNG streams are used), so estimates are deterministic
+    /// in `(trials, seed)` alone.
+    #[allow(clippy::too_many_arguments)]
+    pub fn estimate_policy(
+        &self,
+        scheme: SchemeId,
+        policy: PolicyKind,
+        model: &dyn RoundDelayModel,
+        n: usize,
+        r: usize,
+        k: usize,
+        ingest_ms: f64,
+    ) -> Result<PolicyOutcome> {
+        run_policy_rounds(
+            &PolicyRunConfig {
+                scheme,
+                policy,
+                n,
+                r,
+                k,
+                rounds: self.trials,
+                ingest_ms,
+                seed: self.seed,
+            },
+            model,
+            None,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shifting_rotation_moves_the_slow_block() {
+        let base = two_tier_model(6, 2, 4.0);
+        let shifting = ShiftingStraggler::new(&base, 10, 2);
+        assert_eq!(shifting.offset_at(0, 6), 0);
+        assert_eq!(shifting.offset_at(9, 6), 0);
+        assert_eq!(shifting.offset_at(10, 6), 2);
+        assert_eq!(shifting.offset_at(35, 6), 0, "wraps mod n");
+        // segment 0: workers 0,1 slow; after one shift the block moved
+        let mut rng = Rng::seed_from_u64(3);
+        let mut s = DelaySample::zeros(6, 4);
+        let mut mean_of = |round: usize, w: usize, rng: &mut Rng| {
+            let mut acc = 0.0;
+            for _ in 0..200 {
+                shifting.sample_round_into(round, &mut s, rng);
+                acc += s.comp_row(w).iter().sum::<f64>() / 4.0;
+            }
+            acc / 200.0
+        };
+        assert!(mean_of(0, 0, &mut rng) > 0.3);
+        assert!(mean_of(0, 3, &mut rng) < 0.2);
+        // after the shift, base rows rotate left by 2: slow rows 0,1
+        // now land on workers 4,5
+        assert!(mean_of(10, 4, &mut rng) > 0.3);
+        assert!(mean_of(10, 0, &mut rng) < 0.2);
+    }
+
+    #[test]
+    fn per_round_adapter_matches_model_stream() {
+        // PerRound must consume the base model's RNG stream verbatim
+        let model = two_tier_model(4, 1, 2.0);
+        let mut a = Rng::seed_from_u64(5);
+        let mut b = Rng::seed_from_u64(5);
+        let mut s1 = DelaySample::zeros(4, 3);
+        let mut s2 = DelaySample::zeros(4, 3);
+        let adapter = PerRound(&model);
+        for round in 0..7 {
+            adapter.sample_round_into(round, &mut s1, &mut a);
+            model.sample_into(&mut s2, &mut b);
+            assert_eq!(s1.comp_flat(), s2.comp_flat(), "round {round}");
+            assert_eq!(s1.comm_flat(), s2.comm_flat(), "round {round}");
+        }
+    }
+
+    #[test]
+    fn policy_runs_reject_impossible_combinations() {
+        let model = two_tier_model(6, 3, 3.0);
+        let run = |scheme, policy, n, r| {
+            run_policy_rounds(
+                &PolicyRunConfig {
+                    scheme,
+                    policy,
+                    n,
+                    r,
+                    k: n,
+                    rounds: 4,
+                    ingest_ms: 0.0,
+                    seed: 1,
+                },
+                &PerRound(&model),
+                None,
+            )
+        };
+        assert!(run(SchemeId::Pc, PolicyKind::AdaptiveOrder, 6, 3).is_err());
+        assert!(run(SchemeId::Lb, PolicyKind::AdaptiveLoad, 6, 3).is_err());
+        assert!(
+            run(SchemeId::Ra, PolicyKind::AdaptiveOrder, 6, 3).is_err(),
+            "RA needs r = n anyway"
+        );
+        assert!(run(SchemeId::GcHet(2, 1), PolicyKind::AdaptiveLoad, 6, 2).is_err());
+        assert!(
+            run(SchemeId::Cs, PolicyKind::AllocGroup, 6, 4).is_err(),
+            "alloc-group needs r | n"
+        );
+        // and the valid shapes run
+        assert!(run(SchemeId::Gc(2), PolicyKind::AdaptiveLoad, 6, 4).is_ok());
+        assert!(run(SchemeId::Ss, PolicyKind::AdaptiveOrder, 6, 3).is_ok());
+        assert!(run(SchemeId::Cs, PolicyKind::AllocGroup, 6, 3).is_ok());
+        assert!(run(SchemeId::Pcmm, PolicyKind::Static, 6, 3).is_ok());
+    }
+
+    #[test]
+    fn alloc_random_matches_ra_at_full_load() {
+        // alloc-random over CS at r = n is RA by another name; their
+        // estimates should agree statistically on the same model
+        let model = TruncatedGaussianModel::scenario1(6);
+        let mc = MonteCarlo {
+            trials: 3000,
+            seed: 11,
+            threads: 1,
+        };
+        let alloc = mc
+            .estimate_policy(
+                SchemeId::Cs,
+                PolicyKind::AllocRandom,
+                &PerRound(&model),
+                6,
+                6,
+                5,
+                0.0,
+            )
+            .unwrap();
+        let ra = mc.estimate(&crate::scheduler::RandomAssignment, &model, 6, 6, 5);
+        let slack = 4.0 * (alloc.estimate.std_err + ra.std_err);
+        assert!(
+            (alloc.estimate.mean - ra.mean).abs() < slack,
+            "alloc-random {} vs RA {} (slack {slack})",
+            alloc.estimate.mean,
+            ra.mean
+        );
+    }
+}

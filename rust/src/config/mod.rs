@@ -28,9 +28,15 @@
 //! hetero}`, `shifted_exp {comp_shift, comp_rate, comm_shift,
 //! comm_rate}`, `truncated_gaussian {comp: {...}, comm: {...}}` —
 //! the same space as [`crate::delay::DelayModelKind`].
+//!
+//! An optional `"policy"` field (`static | order | load | alloc-group
+//! | alloc-random`) switches the sweep onto the sequential re-planning
+//! arm of [`crate::adaptive`]; non-static policies require CS/SS/GC(s)
+//! bases.
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::adaptive::{run_policy_rounds, PerRound, PolicyKind, PolicyRunConfig};
 use crate::delay::{DelayModelKind, TruncatedGaussian};
 use crate::harness::{evaluate, EvalPoint};
 use crate::report::Table;
@@ -48,6 +54,11 @@ pub struct Experiment {
     pub seed: u64,
     pub ingest_ms: f64,
     pub schemes: Vec<SchemeId>,
+    /// Round-boundary re-planning policy (`"policy"` field, default
+    /// `static`).  Non-static sweeps run the sequential re-planning arm
+    /// of [`crate::adaptive`] per point instead of the coupled batch
+    /// evaluator — every scheme still sees the identical delay stream.
+    pub policy: PolicyKind,
     pub model: DelayModelKind,
 }
 
@@ -125,6 +136,31 @@ impl Experiment {
             }
             Some(_) => bail!("`schemes` must be an array of scheme names"),
         };
+        let policy = match root.get("policy") {
+            None => PolicyKind::Static,
+            Some(v) => {
+                let name = v
+                    .as_str()
+                    .ok_or_else(|| anyhow!("`policy` must be a string"))?;
+                let p = PolicyKind::parse(name)?;
+                if p != PolicyKind::Static {
+                    // the shared policy × scheme gate, with sweep
+                    // semantics: a scheme the policy cannot re-plan at
+                    // ANY (r) point is a config error up front; partial
+                    // applicability renders NaN cells at run time
+                    for &s in &schemes {
+                        if rs.iter().all(|&r| p.validate_base(s, n, r).is_err()) {
+                            let err = p.validate_base(s, n, rs[0]).expect_err("all err");
+                            bail!(
+                                "policy {p} cannot re-plan scheme {s} at any sweep \
+                                 point: {err}"
+                            );
+                        }
+                    }
+                }
+                p
+            }
+        };
         Ok(Self {
             name: root
                 .get("name")
@@ -152,6 +188,7 @@ impl Experiment {
                 v
             },
             schemes,
+            policy,
             model: parse_model(
                 root.get("model")
                     .ok_or_else(|| anyhow!("config missing `model`"))?,
@@ -166,28 +203,57 @@ impl Experiment {
         headers.extend(self.schemes.iter().map(|s| s.to_string()));
         let mut table = Table::new(
             &format!(
-                "{}: n = {}, {} trials, model = {}",
+                "{}: n = {}, {} trials, model = {}{}",
                 self.name,
                 self.n,
                 self.trials,
-                model.name()
+                model.name(),
+                if self.policy == PolicyKind::Static {
+                    String::new()
+                } else {
+                    format!(", policy = {}", self.policy)
+                }
             ),
             &headers.iter().map(String::as_str).collect::<Vec<_>>(),
         );
         for &r in &self.rs {
             for &k in &self.ks {
-                let point = EvalPoint::new(self.n, r, k, self.trials, self.seed)
-                    .with_schemes(&self.schemes)
-                    .with_ingest(self.ingest_ms);
-                let est = evaluate(&point, model.as_ref());
                 let mut row = vec![r.to_string(), k.to_string()];
-                for s in &self.schemes {
-                    let mean = est
-                        .iter()
-                        .find(|e| e.scheme == s.to_string())
-                        .map(|e| e.mean)
+                if self.policy == PolicyKind::Static {
+                    let point = EvalPoint::new(self.n, r, k, self.trials, self.seed)
+                        .with_schemes(&self.schemes)
+                        .with_ingest(self.ingest_ms);
+                    let est = evaluate(&point, model.as_ref());
+                    for s in &self.schemes {
+                        let mean = est
+                            .iter()
+                            .find(|e| e.scheme == s.to_string())
+                            .map(|e| e.mean)
+                            .unwrap_or(f64::NAN);
+                        row.push(Table::fmt(mean));
+                    }
+                } else {
+                    // the sequential re-planning arm, one run per
+                    // scheme; identical seeds couple the delay streams
+                    for &s in &self.schemes {
+                        let mean = run_policy_rounds(
+                            &PolicyRunConfig {
+                                scheme: s,
+                                policy: self.policy,
+                                n: self.n,
+                                r,
+                                k,
+                                rounds: self.trials,
+                                ingest_ms: self.ingest_ms,
+                                seed: self.seed,
+                            },
+                            &PerRound(model.as_ref()),
+                            None,
+                        )
+                        .map(|o| o.estimate.mean)
                         .unwrap_or(f64::NAN);
-                    row.push(Table::fmt(mean));
+                        row.push(Table::fmt(mean));
+                    }
                 }
                 table.push_row(row);
             }
@@ -331,6 +397,28 @@ mod tests {
     }
 
     #[test]
+    fn policy_field_runs_the_replanning_arm() {
+        let exp = Experiment::from_json_str(
+            r#"{"n": 6, "trials": 200, "schemes": ["CS", "GC(2)"],
+                "policy": "order", "ingest_ms": 0.05,
+                "model": {"kind": "scenario2", "seed": 4}}"#,
+        )
+        .unwrap();
+        assert_eq!(exp.policy, PolicyKind::AdaptiveOrder);
+        let table = exp.run();
+        assert!(table.title.contains("policy = order"));
+        for cell in &table.rows[0][2..] {
+            assert!(cell.parse::<f64>().unwrap() > 0.0);
+        }
+        // default remains static
+        let exp = Experiment::from_json_str(
+            r#"{"n": 4, "model": {"kind": "scenario1"}}"#,
+        )
+        .unwrap();
+        assert_eq!(exp.policy, PolicyKind::Static);
+    }
+
+    #[test]
     fn rejects_bad_configs() {
         for bad in [
             r#"{"rs": [2], "model": {"kind": "scenario1"}}"#, // no n
@@ -347,6 +435,12 @@ mod tests {
             r#"{"n": 4, "rs": [2], "schemes": ["GC(4)"], "model": {"kind": "scenario1"}}"#,
             // RA needs r = n, never reached by this sweep
             r#"{"n": 4, "rs": [1, 2], "schemes": ["RA"], "model": {"kind": "scenario1"}}"#,
+            // unknown policy spelling
+            r#"{"n": 4, "policy": "wat", "model": {"kind": "scenario1"}}"#,
+            // re-planning policies need an uncoded fixed base
+            r#"{"n": 4, "schemes": ["PC"], "policy": "order", "model": {"kind": "scenario1"}}"#,
+            r#"{"n": 4, "schemes": ["GCH(2,1)"], "policy": "load",
+                "model": {"kind": "scenario1"}}"#,
         ] {
             assert!(Experiment::from_json_str(bad).is_err(), "{bad}");
         }

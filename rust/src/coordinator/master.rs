@@ -14,6 +14,14 @@
 //!   evaluations, and at the recovery threshold *decodes* the exact
 //!   full gradient and steps θ (eq. 49) — Messages-rule rounds are no
 //!   longer timing-only.
+//!
+//! On the uncoded plane the per-round `Assign` plan can come from an
+//! adaptive [`PolicyEngine`] instead of the frozen registry plan
+//! ([`ClusterConfig::policy`]): the engine eats the same measured
+//! `comp_us`/receive-timestamp stream the `RoundLog` is built from and
+//! re-emits worker order / per-worker flush sizes / assignment between
+//! rounds.  Protocol stays v3 — assignment was always per-round; only
+//! the plan's source changes.
 
 use std::collections::HashSet;
 use std::io::Write as _;
@@ -26,6 +34,7 @@ use anyhow::{Context, Result};
 use super::aggregate::{Offer, RoundAggregator};
 use super::protocol::Msg;
 use super::{now_us, TaskDelaySampler};
+use crate::adaptive::{GroupAllocation, PolicyEngine, PolicyKind, WorkerEstimate};
 use crate::coded::{PcScheme, PcmmScheme};
 use crate::data::Dataset;
 use crate::delay::DelayModelKind;
@@ -47,8 +56,15 @@ pub struct ClusterConfig {
     pub profile: String,
     /// how the scheme executes on the wire — scheduler, flush group,
     /// completion rule and payload semantics, built by
-    /// [`crate::scheme::SchemeRegistry::cluster_plan`]
+    /// [`crate::scheme::SchemeRegistry::cluster_plan`] (or
+    /// [`crate::scheme::SchemeRegistry::adaptive_plan`] when a policy
+    /// re-plans it)
     pub plan: ClusterPlan,
+    /// round-boundary re-planning policy ([`crate::adaptive`]):
+    /// `static` freezes the plan (the pre-adaptive behavior), the
+    /// others consume measured per-worker delays and re-issue each
+    /// round's `Assign` frames from a fresh [`crate::adaptive::RoundPlan`]
+    pub policy: PolicyKind,
     pub dataset: Dataset,
     /// injected straggling; `None` measures bare-metal delays
     pub inject: Option<DelayModelKind>,
@@ -85,6 +101,9 @@ pub struct RoundLog {
     /// payload) — the GC(s) payload saving: one aggregated block per
     /// flush, so bytes/round shrink ≈ s× vs per-task blocks
     pub wire_bytes: usize,
+    /// did the policy change the plan for this round? (always false
+    /// under the `static` policy; the first planned round counts)
+    pub replanned: bool,
     pub loss: Option<f64>,
 }
 
@@ -93,6 +112,10 @@ pub struct ClusterReport {
     pub rounds: Vec<RoundLog>,
     /// per-worker measured delays (ms) — feeds Fig. 3 + empirical replay
     pub recorders: Vec<DelayRecorder>,
+    /// the policy engine's final per-worker delay estimates (empty
+    /// under the `static` policy) — the estimator state the last
+    /// round's plan was derived from
+    pub worker_estimates: Vec<WorkerEstimate>,
     pub final_theta: Vec<f64>,
     pub final_loss: f64,
 }
@@ -126,6 +149,7 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
         rounds,
         profile,
         plan,
+        policy,
         dataset,
         inject,
         seed,
@@ -138,6 +162,7 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
     let ClusterPlan {
         scheduler,
         group,
+        groups,
         rule,
         wire,
     } = plan;
@@ -145,15 +170,49 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
     anyhow::ensure!(k >= 1 && k <= n, "need 1 ≤ k ≤ n");
     anyhow::ensure!(r >= 1 && r <= n, "need 1 ≤ r ≤ n");
     anyhow::ensure!(group >= 1 && group <= r, "need 1 ≤ group ≤ r");
+    // per-worker flush sizes (GCH / the `load` policy): every cadence
+    // must divide the canonical block so each worker's aligned ranges
+    // nest inside one block of the master's duplicate-safe merge
+    let base_sizes: Vec<usize> = groups.unwrap_or_else(|| vec![group; n]);
+    anyhow::ensure!(base_sizes.len() == n, "need one flush size per worker");
+    anyhow::ensure!(
+        base_sizes.iter().all(|&s| s >= 1 && group % s == 0),
+        "per-worker flush sizes must divide the canonical block {group}: {base_sizes:?}"
+    );
+    if policy != PolicyKind::Static {
+        anyhow::ensure!(
+            matches!(wire, WirePlan::Uncoded { .. }),
+            "policy {policy} drives the uncoded data plane only"
+        );
+        anyhow::ensure!(
+            !scheduler.is_randomized(),
+            "policy {policy} has nothing fixed to re-plan over a randomized scheduler"
+        );
+        if policy == PolicyKind::AllocGroup {
+            anyhow::ensure!(
+                GroupAllocation::applicable(n, r),
+                "alloc-group needs r | n (got n = {n}, r = {r})"
+            );
+        }
+        if policy == PolicyKind::AllocRandom {
+            anyhow::ensure!(
+                r == n,
+                "alloc-random needs r = n (random batches may leave the \
+                 k-distinct target uncoverable otherwise)"
+            );
+        }
+    }
+    let mut engine = (policy != PolicyKind::Static)
+        .then(|| PolicyEngine::new(policy, n, r, group));
     if let CompletionRule::Messages { threshold } = rule {
         // aligned flushing can split a worker's row into up to two
         // extra frames (misaligned head block + the mod-n wrap break)
-        // beyond the ⌈r/group⌉ of plain grouped flushing
+        // beyond the ⌈r/sᵢ⌉ of plain grouped flushing
         let extra = match wire {
             WirePlan::Uncoded { align: true } => 2,
             _ => 0,
         };
-        let max_messages = n * (r.div_ceil(group) + extra);
+        let max_messages: usize = base_sizes.iter().map(|&s| r.div_ceil(s) + extra).sum();
         anyhow::ensure!(
             threshold >= 1 && threshold <= max_messages,
             "message threshold {threshold} unreachable: at most {max_messages} messages/round"
@@ -167,7 +226,7 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
             // rounds (Messages) rely on — unaligned multi-task ranges
             // would be dropped as out-of-plan and stall the round
             anyhow::ensure!(
-                align || group == 1,
+                align || base_sizes.iter().all(|&s| s == 1),
                 "grouped uncoded flushes must be aligned \
                  (WirePlan::Uncoded {{ align: true }}) for duplicate-safe \
                  range aggregation"
@@ -180,7 +239,7 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
                 threshold: pc.recovery_threshold(),
             };
             anyhow::ensure!(
-                rule == want && group == r,
+                rule == want && group == r && base_sizes.iter().all(|&s| s == r),
                 "PC wire needs group = r and the Messages rule at its recovery threshold"
             );
             Some(Coded::Pc(pc))
@@ -191,7 +250,7 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
                 threshold: pcmm.recovery_threshold(),
             };
             anyhow::ensure!(
-                rule == want && group == 1,
+                rule == want && group == 1 && base_sizes.iter().all(|&s| s == 1),
                 "PCMM wire needs group = 1 and the Messages rule at its recovery threshold"
             );
             Some(Coded::Pcmm(pcmm))
@@ -264,10 +323,13 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
 
     // ---- data distribution --------------------------------------------------
     // uncoded, fixed schedulers: ship only the batches in the worker's
-    // TO row; randomized (RA): ship everything; coded: encode each
-    // worker's matrices here (the worker grams them obliviously —
-    // coding is invisible below the master)
+    // TO row; randomized (RA) and row-reassigning policies (order /
+    // alloc-*): ship everything, since next round's assignment is
+    // unknown at load time; coded: encode each worker's matrices here
+    // (the worker grams them obliviously — coding is invisible below
+    // the master).  `load` keeps assignments fixed and ships rows only.
     let mut rng_sched = Rng::seed_from_u64(seed ^ 0x5C4ED);
+    let ship_all = scheduler.is_randomized() || policy.reassigns_rows();
     let fixed_to = if coded.is_none() && !scheduler.is_randomized() {
         Some(scheduler.schedule(n, r, &mut rng_sched))
     } else {
@@ -296,12 +358,12 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
                 })
                 .collect(),
             None => match &fixed_to {
-                Some(to) => to
+                Some(to) if !ship_all => to
                     .row(id)
                     .iter()
                     .map(|&b| (b as u32, dataset.parts[b].to_f32()))
                     .collect(),
-                None => (0..n).map(|b| (b as u32, dataset.parts[b].to_f32())).collect(),
+                _ => (0..n).map(|b| (b as u32, dataset.parts[b].to_f32())).collect(),
             },
         };
         Msg::LoadData {
@@ -328,10 +390,29 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
     let d = dataset.d;
 
     for round in 0..rounds {
+        // ---- the policy's round-boundary re-plan ---------------------------
+        // protocol stays v3: assignment was always per-round; only the
+        // plan's *source* changes (frozen vs engine-emitted)
+        let decision = engine.as_mut().map(|e| {
+            let before = e.replans();
+            let plan = e.plan(round, &mut rng_sched);
+            (plan, e.replans() != before)
+        });
+        let replanned = decision.as_ref().is_some_and(|(_, changed)| *changed);
+        let sizes: &[usize] = decision
+            .as_ref()
+            .map_or(&base_sizes, |(plan, _)| &plan.sizes);
         let to = if coded.is_none() {
-            Some(match &fixed_to {
-                Some(to) => to.clone(),
-                None => scheduler.schedule(n, r, &mut rng_sched),
+            Some(match &decision {
+                // allocation override, or order/load permuting the
+                // fixed base plan's rows — one shared materialization
+                Some((plan, _)) => {
+                    plan.materialize(fixed_to.as_ref().expect("policy base plan"))
+                }
+                None => match &fixed_to {
+                    Some(to) => to.clone(),
+                    None => scheduler.schedule(n, r, &mut rng_sched),
+                },
             })
         } else {
             None
@@ -352,8 +433,8 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
                 theta: theta32.clone(),
                 tasks: tasks.clone(),
                 batches: tasks,
-                group: group as u32,
-                align,
+                group: sizes[id] as u32,
+                align: align && sizes[id] > 1,
             }
             .write_to(&mut &*stream)?;
         }
@@ -472,9 +553,16 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
             messages_seen += 1;
             results_seen += task_ids.len();
             wire_bytes += frame_len;
-            recorders[worker_id as usize].record_comp(comp_us as f64 / 1e3);
-            recorders[worker_id as usize]
-                .record_comm((recv_us.saturating_sub(send_ts_us)) as f64 / 1e3);
+            let comp_ms = comp_us as f64 / 1e3;
+            let comm_ms = (recv_us.saturating_sub(send_ts_us)) as f64 / 1e3;
+            recorders[worker_id as usize].record_comp(comp_ms);
+            recorders[worker_id as usize].record_comm(comm_ms);
+            if let Some(e) = engine.as_mut() {
+                // the estimator eats the same measurements RoundLog and
+                // the recorders are built from — causal by construction
+                // (these results precede the next round's plan)
+                e.observe_flush(worker_id as usize, task_ids.len(), comp_ms, comm_ms);
+            }
             if complete {
                 completion_ms = (recv_us - t0_us) as f64 / 1e3;
                 break;
@@ -539,6 +627,7 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
             results_seen,
             messages_seen,
             wire_bytes,
+            replanned,
             loss,
         });
     }
@@ -560,6 +649,10 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
     Ok(ClusterReport {
         rounds: logs,
         recorders,
+        worker_estimates: engine
+            .as_ref()
+            .map(|e| e.estimator.estimates())
+            .unwrap_or_default(),
         final_theta: master.theta,
         final_loss,
     })

@@ -15,6 +15,9 @@ pub use eval::{evaluate, EvalPoint};
 
 use anyhow::Result;
 
+use crate::adaptive::{
+    run_policy_rounds, two_tier_model, PolicyKind, PolicyRunConfig, ShiftingStraggler,
+};
 use crate::coordinator::{run_cluster, ClusterConfig, ClusterReport};
 use crate::data::Dataset;
 use crate::delay::{DelayModel, DelayModelKind, Ec2LikeModel, TruncatedGaussianModel};
@@ -180,6 +183,7 @@ fn fig5_cluster_spotcheck(opts: &Options) -> Result<Table> {
                 rounds,
                 profile: "fig5".into(),
                 plan: SchemeRegistry::cluster_plan(id, n, r, n)?,
+                policy: PolicyKind::Static,
                 dataset: Dataset::synthesize(n, 400, 900, opts.seed),
                 inject: Some(DelayModelKind::Ec2Like {
                     seed: opts.seed ^ 0xEC2,
@@ -340,6 +344,7 @@ fn fig8_cluster_spotcheck(opts: &Options) -> Result<Table> {
             rounds,
             profile: "fig8".into(),
             plan: SchemeRegistry::cluster_plan(SchemeId::Gc(s as u32), n, n, n)?,
+            policy: PolicyKind::Static,
             dataset: Dataset::synthesize(n, 64, n * 16, opts.seed),
             inject: Some(DelayModelKind::Ec2Like {
                 seed: opts.seed ^ 0xEC2,
@@ -366,6 +371,77 @@ fn fig8_cluster_spotcheck(opts: &Options) -> Result<Table> {
     Ok(table)
 }
 
+/// **Adaptive** (beyond the paper) — the shifting-straggler comparison
+/// of EXPERIMENTS.md §Adaptive: a two-tier fleet (half the workers 3×
+/// slower) whose slow block rotates every 250 rounds, evaluated at the
+/// scarce-coverage point `n = 12, r = 4, k = n` with a 0.05 ms/message
+/// master.  Static schemes must commit to one layout and are wrong
+/// after every shift; the `order` and `load` policies re-estimate and
+/// re-plan.  Every run shares the identical delay stream (the policy
+/// engines only consume the scheduling RNG), so the deltas are
+/// variance-reduced.
+pub fn adaptive_shift_table(opts: &Options) -> Result<Table> {
+    let (n, r, k) = (12usize, 4usize, 12usize);
+    let (ingest_ms, shift_every, rotate) = (0.05, 250usize, 5usize);
+    let (n_slow, slow_factor) = (6usize, 3.0);
+    let rounds = opts.trials.clamp(500, 20_000);
+    let base = two_tier_model(n, n_slow, slow_factor);
+    let model = ShiftingStraggler::new(&base, shift_every, rotate);
+
+    let runs: Vec<(SchemeId, PolicyKind)> = vec![
+        (SchemeId::Cs, PolicyKind::Static),
+        (SchemeId::Gc(4), PolicyKind::Static),
+        (SchemeId::GcHet(4, 1), PolicyKind::Static),
+        (SchemeId::Gc(4), PolicyKind::AdaptiveOrder),
+        (SchemeId::Gc(4), PolicyKind::AdaptiveLoad),
+    ];
+    let mut table = Table::new(
+        &format!(
+            "Adaptive: shifting stragglers (two-tier ×{slow_factor}, {n_slow}/{n} slow, \
+             shift every {shift_every} rot {rotate}) — n = {n}, r = {r}, k = {k}, \
+             ingest {ingest_ms} ms, {rounds} rounds"
+        ),
+        &["scheme", "policy", "mean", "std_err", "p95", "replans", "vs best static"],
+    );
+    let mut outcomes = Vec::new();
+    for &(scheme, policy) in &runs {
+        let out = run_policy_rounds(
+            &PolicyRunConfig {
+                scheme,
+                policy,
+                n,
+                r,
+                k,
+                rounds,
+                ingest_ms,
+                seed: opts.seed,
+            },
+            &model,
+            None,
+        )?;
+        outcomes.push((scheme, policy, out));
+    }
+    let best_static = outcomes
+        .iter()
+        .filter(|(_, p, _)| *p == PolicyKind::Static)
+        .map(|(_, _, o)| o.estimate.mean)
+        .fold(f64::INFINITY, f64::min);
+    for (scheme, policy, out) in &outcomes {
+        table.push_row(vec![
+            scheme.to_string(),
+            policy.to_string(),
+            Table::fmt(out.estimate.mean),
+            Table::fmt(out.estimate.std_err),
+            Table::fmt(out.estimate.p95),
+            out.replans.to_string(),
+            format!("{:+.1}%", 100.0 * (out.estimate.mean / best_static - 1.0)),
+        ]);
+    }
+    table.print();
+    opts.write(&table, "adaptive_shift")?;
+    Ok(table)
+}
+
 /// **Fig. 3** — histograms of per-task computation and communication
 /// delays of the first three workers, measured on the *real* cluster
 /// (sockets + compute) with EC2-like injection, plus truncated-Gaussian
@@ -382,6 +458,7 @@ pub fn fig3(opts: &Options) -> Result<(Table, Table)> {
         rounds,
         profile: "fig3".into(),
         plan: SchemeRegistry::cluster_plan(SchemeId::Cs, n, 1, n)?,
+        policy: PolicyKind::Static,
         dataset: Dataset::synthesize(n, 500, 900, opts.seed),
         inject: Some(DelayModelKind::Ec2Like {
             seed: opts.seed ^ 0xF163,
@@ -506,9 +583,12 @@ pub struct E2eConfig {
     pub k: usize,
     pub rounds: usize,
     pub eta: f64,
-    /// the scheme to execute (`CS | SS | RA | GC(s) | PC | PCMM`) —
-    /// resolved through the registry, no hardcoded scheduler
+    /// the scheme to execute (`CS | SS | RA | GC(s) | GCH(a,b) | PC |
+    /// PCMM`) — resolved through the registry, no hardcoded scheduler
     pub scheme: SchemeId,
+    /// round-boundary re-planning policy
+    /// (`static | order | load | alloc-group | alloc-random`)
+    pub policy: PolicyKind,
     pub profile: String,
     pub use_pjrt: bool,
     pub seed: u64,
@@ -531,6 +611,7 @@ impl Default for E2eConfig {
             rounds: 300,
             eta: 0.05,
             scheme: SchemeId::Ss,
+            policy: PolicyKind::Static,
             profile: "e2e".into(),
             use_pjrt: true,
             seed: 2024,
@@ -542,7 +623,7 @@ impl Default for E2eConfig {
 
 pub fn run_e2e(cfg: E2eConfig, opts: &Options) -> Result<(ClusterReport, Table)> {
     let dataset = Dataset::synthesize(cfg.n, cfg.d, cfg.n_samples, cfg.seed);
-    let plan = SchemeRegistry::cluster_plan(cfg.scheme, cfg.n, cfg.r, cfg.k)?;
+    let plan = SchemeRegistry::adaptive_plan(cfg.scheme, cfg.policy, cfg.n, cfg.r, cfg.k)?;
     let report = run_cluster(ClusterConfig {
         n: cfg.n,
         r: cfg.r,
@@ -551,6 +632,7 @@ pub fn run_e2e(cfg: E2eConfig, opts: &Options) -> Result<(ClusterReport, Table)>
         rounds: cfg.rounds,
         profile: cfg.profile.clone(),
         plan,
+        policy: cfg.policy,
         dataset,
         inject: Some(DelayModelKind::Ec2Like {
             seed: cfg.seed ^ 0xEC2,
@@ -565,8 +647,8 @@ pub fn run_e2e(cfg: E2eConfig, opts: &Options) -> Result<(ClusterReport, Table)>
     })?;
     let mut curve = Table::new(
         &format!(
-            "e2e training: n = {}, d = {}, N = {}, r = {}, k = {} ({} scheme)",
-            cfg.n, cfg.d, cfg.n_samples, cfg.r, cfg.k, cfg.scheme
+            "e2e training: n = {}, d = {}, N = {}, r = {}, k = {} ({} scheme, {} policy)",
+            cfg.n, cfg.d, cfg.n_samples, cfg.r, cfg.k, cfg.scheme, cfg.policy
         ),
         &["round", "loss", "completion_ms"],
     );

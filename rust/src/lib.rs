@@ -39,6 +39,11 @@
 //!   artifacts (`artifacts/*.hlo.txt`) and runs them on the hot path;
 //! * [`coordinator`] — a threaded TCP master/worker cluster (the EC2
 //!   testbed substitute) doing real compute over a real wire protocol;
+//! * [`adaptive`] — online per-worker delay estimation (EWMA +
+//!   streaming quantiles) and round-by-round re-planning policies that
+//!   re-rank the worker order, re-split per-worker flush sizes, or swap
+//!   the task allocation — on the Monte-Carlo engines and the live
+//!   cluster alike;
 //! * [`harness`] / [`report`] / [`metrics`] — experiment sweeps that
 //!   regenerate every table and figure of the paper's evaluation.
 //!
@@ -47,6 +52,7 @@
 //! `f64`.  The paper's `αEβ` notation means `α·10⁻ᵝ` **seconds**, so
 //! e.g. `1E4 = 0.1 ms`.
 
+pub mod adaptive;
 pub mod analysis;
 pub mod coded;
 pub mod config;

@@ -10,8 +10,11 @@
 //! straggler fig8  [--trials N] [--cluster]      # GC(s) tradeoff sweep
 //! straggler sim   --n 16 --r 4 --k 16 [--model scenario1|scenario2|ec2|exp]
 //!                 [--schemes CS,SS,GC2,GCH(4,1),LB] [--ingest 0.15]
-//! straggler train --scheme CS|SS|RA|GC(s)|PC|PCMM [--rounds 300] [--k 8]
-//!                 [--no-pjrt]                   # e2e distributed DGD
+//!                 [--policy order [--shift 250 --rotate 5]]  # re-planning arm
+//! straggler train --scheme CS|SS|RA|GC(s)|GCH(a,b)|PC|PCMM
+//!                 [--policy static|order|load|alloc-group|alloc-random]
+//!                 [--rounds 300] [--k 8] [--no-pjrt]  # e2e distributed DGD
+//! straggler adaptive [--trials N]               # shifting-straggler table
 //! straggler all   [--trials N]                  # every figure + table
 //! ```
 //!
@@ -20,6 +23,9 @@
 
 use anyhow::{bail, Result};
 
+use straggler_sched::adaptive::{
+    run_policy_rounds, PerRound, PolicyKind, PolicyRunConfig, RoundDelayModel, ShiftingStraggler,
+};
 use straggler_sched::delay::{
     DelayModel, Ec2LikeModel, ShiftedExponential, TruncatedGaussianModel,
 };
@@ -111,6 +117,7 @@ fn run() -> Result<()> {
             harness::fig6(&opts)?;
             harness::fig7(&opts)?;
             harness::fig8_gc(&opts)?;
+            harness::adaptive_shift_table(&opts)?;
             opts.trials = 500;
             harness::fig3(&opts)?;
         }
@@ -144,6 +151,85 @@ fn run() -> Result<()> {
             let ingest = args.f64_or("ingest", 0.0)?;
             if ingest.is_nan() || ingest < 0.0 {
                 bail!("--ingest must be a non-negative ms/message cost, got {ingest}");
+            }
+            if let Some(pname) = args.str_opt("policy") {
+                // re-planning arm: every scheme runs twice on the same
+                // delay stream — frozen (static) and under the policy
+                let policy = PolicyKind::parse(&pname).map_err(|e| {
+                    anyhow::anyhow!("--policy {pname:?}: {e}")
+                })?;
+                let shift = args.usize_or("shift", 0)?;
+                let rotate = args.usize_or("rotate", n / 2)?;
+                let bases: Vec<SchemeId> = if args.str_opt("schemes").is_some() {
+                    schemes.clone()
+                } else {
+                    // policy-mode default: CS plus a grouped base the
+                    // load policy can re-split
+                    let s = r.min(4) as u32;
+                    if s > 1 {
+                        vec![SchemeId::Cs, SchemeId::Gc(s)]
+                    } else {
+                        vec![SchemeId::Cs]
+                    }
+                };
+                let shifting;
+                let per_round;
+                let round_model: &dyn RoundDelayModel = if shift > 0 {
+                    shifting = ShiftingStraggler::new(model.as_ref(), shift, rotate);
+                    &shifting
+                } else {
+                    per_round = PerRound(model.as_ref());
+                    &per_round
+                };
+                let mut t = Table::new(
+                    &format!(
+                        "re-planning: n = {n}, r = {r}, k = {k}, model = {model_name}\
+                         {}, ingest {ingest} ms, {} rounds",
+                        if shift > 0 {
+                            format!(" (shift every {shift} rot {rotate})")
+                        } else {
+                            String::new()
+                        },
+                        opts.trials
+                    ),
+                    &["scheme", "static", &policy.to_string(), "delta", "replans"],
+                );
+                for &scheme in &bases {
+                    let run = |p: PolicyKind| {
+                        run_policy_rounds(
+                            &PolicyRunConfig {
+                                scheme,
+                                policy: p,
+                                n,
+                                r,
+                                k,
+                                rounds: opts.trials,
+                                ingest_ms: ingest,
+                                seed: opts.seed,
+                            },
+                            round_model,
+                            None,
+                        )
+                    };
+                    let frozen = run(PolicyKind::Static)?;
+                    let adaptive = run(policy)?;
+                    t.push_row(vec![
+                        scheme.to_string(),
+                        Table::fmt(frozen.estimate.mean),
+                        Table::fmt(adaptive.estimate.mean),
+                        format!(
+                            "{:+.2}%",
+                            100.0 * (adaptive.estimate.mean / frozen.estimate.mean - 1.0)
+                        ),
+                        adaptive.replans.to_string(),
+                    ]);
+                }
+                t.print();
+                let unknown = args.unknown_keys();
+                if !unknown.is_empty() {
+                    bail!("unknown arguments: {}", unknown.join(", "));
+                }
+                return Ok(());
             }
             let point = EvalPoint::new(n, r, k, opts.trials, opts.seed)
                 .with_schemes(&schemes)
@@ -249,9 +335,13 @@ fn run() -> Result<()> {
             let scheme = SchemeRegistry::parse(&scheme_name).map_err(|e| {
                 anyhow::anyhow!(
                     "--scheme {scheme_name:?}: {e}. Spellings: CS, SS, RA, PC, PCMM, \
-                     GC(s) or GCs with s ≥ 1 (e.g. --scheme \"GC(2)\" or --scheme GC2)"
+                     GC(s) or GCs with s ≥ 1 (e.g. --scheme \"GC(2)\" or --scheme GC2), \
+                     GCH(a,b) with per-worker flush sizes (e.g. --scheme \"GCH(4,1)\")"
                 )
             })?;
+            let policy_name = args.str_or("policy", "static");
+            let policy = PolicyKind::parse(&policy_name)
+                .map_err(|e| anyhow::anyhow!("--policy {policy_name:?}: {e}"))?;
             let cfg = harness::E2eConfig {
                 n: args.usize_or("n", 10)?,
                 d: args.usize_or("d", 512)?,
@@ -261,6 +351,7 @@ fn run() -> Result<()> {
                 rounds: args.usize_or("rounds", 300)?,
                 eta: args.f64_or("eta", 0.05)?,
                 scheme,
+                policy,
                 profile: args.str_or("profile", "e2e"),
                 use_pjrt: !args.flag("no-pjrt"),
                 seed: args.u64_or("data-seed", 2024)?,
@@ -277,6 +368,23 @@ fn run() -> Result<()> {
                 report.final_loss,
                 report.mean_wire_bytes() / 1024.0
             );
+            if !report.worker_estimates.is_empty() {
+                let replans = report.rounds.iter().filter(|l| l.replanned).count();
+                println!(
+                    "  policy {policy}: {replans} replanned rounds; \
+                     estimated per-task comp (ms):"
+                );
+                for e in &report.worker_estimates {
+                    println!(
+                        "    worker {:2}: mean {:.3}  p95 {:.3}  ({} samples)",
+                        e.worker, e.comp_mean_ms, e.comp_p95_ms, e.samples
+                    );
+                }
+            }
+        }
+        "adaptive" => {
+            let opts = options(&args)?;
+            harness::adaptive_shift_table(&opts)?;
         }
         _ => {
             print!("{HELP}");
@@ -301,16 +409,30 @@ subcommands:
   fig8              GC(s) grouped multi-message tradeoff sweep
                     (--cluster adds a real-cluster spot check)
   sim               one (n, r, k) point (--model ..., --ingest MS,
-                    --schemes CS,SS,RA,PC,PCMM,LB,GC(s),GCH(a,b))
+                    --schemes CS,SS,RA,PC,PCMM,LB,GC(s),GCH(a,b));
+                    with --policy P it instead runs the sequential
+                    re-planning arm, each scheme frozen vs under P
+                    (--shift R rotates the worker delay profiles every
+                    R rounds by --rotate positions — the
+                    shifting-straggler scenario)
   run               run a JSON-described sweep: --config exp.json
+                    (optional "policy" field runs the re-planning arm)
   ablations         design-choice studies (ingest, correlation, searched
                     schedules, Remark-3 bias)
+  adaptive          the shifting-straggler comparison table: static
+                    CS/GC/GCH vs the order/load policies on the same
+                    delay stream (EXPERIMENTS.md §Adaptive)
   train             end-to-end distributed DGD over PJRT workers,
                     scheme-dispatched via the registry:
-                    --scheme CS|SS|RA|GC(s)|PC|PCMM  (default SS;
-                    GC(s) spells as "GC(2)" or GC2 and aggregates one
-                    partial-sum block per flush; PC/PCMM decode the
-                    coded gradient on the master, k = n required)
+                    --scheme CS|SS|RA|GC(s)|GCH(a,b)|PC|PCMM
+                    (default SS; GC(s) spells as "GC(2)" or GC2 and
+                    aggregates one partial-sum block per flush;
+                    GCH(a,b) ramps per-worker flush sizes, snapped to
+                    divisors of max(a,b) on the cluster; PC/PCMM decode
+                    the coded gradient on the master, k = n required)
+                    --policy static|order|load|alloc-group|alloc-random
+                    re-plans the assignment between rounds from measured
+                    per-worker delays (uncoded schemes only)
                     (--listen ADDR --external for multi-process mode)
   worker            external worker process: --connect HOST:PORT
                     [--oracle] [--inject ec2 --n N --id I]
@@ -319,4 +441,7 @@ subcommands:
 common flags: --trials N  --seed S  --out DIR  --no-out  --cluster
 scheme grammar (sim/run/train): CS SS RA PC PCMM LB GC(s)|GCs GCH(a,b)
   — case-insensitive; malformed spellings fail with the expected form
+policy grammar (sim/run/train): static order load alloc-group alloc-random
+  — order/load re-plan from EWMA delay estimates; alloc-* are the
+  Behrouzi-Far & Soljanin allocation variants (alloc-group needs r | n)
 "#;

@@ -63,6 +63,27 @@ impl GcHetScheme {
             })
             .collect()
     }
+
+    /// Live-cluster flush layout: `(canonical block, per-worker
+    /// sizes)`.  The canonical block is `max(s_fast, s_slow)` — the
+    /// block size of the master's duplicate-safe range merge — and
+    /// every ramp size is snapped **down** to its largest divisor
+    /// ([`crate::adaptive::snap_divisor`]), so each worker's aligned
+    /// flush ranges nest inside one canonical block and
+    /// [`crate::coordinator::aggregate::RoundAggregator`] can merge
+    /// them across workers.  The Monte-Carlo engines keep the exact
+    /// (unsnapped) ramp; the restriction is the price of mergeable
+    /// partial sums on the wire and is documented in EXPERIMENTS.md
+    /// §Adaptive.
+    pub fn cluster_sizes(&self, n: usize) -> (usize, Vec<usize>) {
+        let canonical = self.s_fast.max(self.s_slow).max(1);
+        let sizes = self
+            .sizes(n)
+            .into_iter()
+            .map(|s| crate::adaptive::snap_divisor(canonical, s))
+            .collect();
+        (canonical, sizes)
+    }
 }
 
 impl Scheme for GcHetScheme {
@@ -103,6 +124,23 @@ mod tests {
         assert_eq!(GcHetScheme::new(1, 3).sizes(5), vec![1, 2, 2, 3, 3]);
         // degenerate ramp = uniform GC(s)
         assert_eq!(GcHetScheme::new(2, 2).sizes(6), vec![2; 6]);
+    }
+
+    #[test]
+    fn cluster_sizes_are_divisors_of_the_canonical_block() {
+        // GCH(4,1) at n = 4: exact ramp [4, 3, 2, 1]; 3 ∤ 4 snaps to 2
+        let (canonical, sizes) = GcHetScheme::new(4, 1).cluster_sizes(4);
+        assert_eq!(canonical, 4);
+        assert_eq!(sizes, vec![4, 2, 2, 1]);
+        // ascending ramps snap too, canonical is the larger endpoint
+        let (canonical, sizes) = GcHetScheme::new(1, 6).cluster_sizes(4);
+        assert_eq!(canonical, 6);
+        assert!(sizes.iter().all(|&s| 6 % s == 0), "{sizes:?}");
+        assert_eq!(*sizes.first().unwrap(), 1);
+        assert_eq!(*sizes.last().unwrap(), 6);
+        // a flat ramp is untouched
+        let (canonical, sizes) = GcHetScheme::new(3, 3).cluster_sizes(5);
+        assert_eq!((canonical, sizes), (3, vec![3; 5]));
     }
 
     #[test]

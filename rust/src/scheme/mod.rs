@@ -21,6 +21,9 @@
 //! * [`run_rounds`] — the single chunked shard loop every batched
 //!   engine drives (harness evaluator, `MonteCarlo`, the §V lower
 //!   bound), so the delay-stream layout can never drift between them;
+//!   its sequential re-planning counterpart is
+//!   [`crate::adaptive::run_policy_rounds`], which keeps the same
+//!   sampling layout and kernels but re-plans between rounds;
 //! * [`registry::SchemeRegistry`] — construction, applicability rules,
 //!   display names, CLI parsing, and the live-cluster execution plan
 //!   ([`ClusterPlan`]) consumed by [`crate::coordinator`].
@@ -240,10 +243,18 @@ pub struct ClusterPlan {
     /// TO-matrix builder for per-round assignments (uncoded wire; the
     /// coded wires fix their own slot assignment).
     pub scheduler: Box<dyn Scheduler>,
-    /// Workers flush one result message per `group` completed tasks
-    /// (1 = the paper's immediate streaming; `s` for GC(s); `r` for
-    /// PC's single message per worker).
+    /// Canonical flush block: workers flush one result message per
+    /// `group` completed tasks (1 = the paper's immediate streaming;
+    /// `s` for GC(s); `r` for PC's single message per worker).  This is
+    /// also the canonical block size of the master's duplicate-safe
+    /// range merge ([`crate::coordinator::aggregate`]).
     pub group: usize,
+    /// Per-worker flush sizes (heterogeneous cadence — GCH and the
+    /// `load` policy); `None` = every worker uses `group`.  Every entry
+    /// must divide `group`, so each worker's aligned flush ranges nest
+    /// inside one canonical block and cross-worker merging stays
+    /// duplicate-safe.
+    pub groups: Option<Vec<usize>>,
     /// Round-completion rule the master enforces.
     pub rule: CompletionRule,
     /// Payload semantics of the result stream.

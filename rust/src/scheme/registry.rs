@@ -10,6 +10,7 @@
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::adaptive::PolicyKind;
 use crate::scheduler::{CyclicScheduler, RandomAssignment, Scheduler, StaircaseScheduler};
 use crate::util::rng::Rng;
 
@@ -155,14 +156,28 @@ impl SchemeRegistry {
             SchemeId::Ss => uncoded_plan(Box::new(StaircaseScheduler), 1),
             SchemeId::Ra => uncoded_plan(Box::new(RandomAssignment), 1),
             SchemeId::Gc(s) => uncoded_plan(Box::new(CyclicScheduler), s as usize),
-            SchemeId::GcHet(..) => bail!(
-                "{id} has no live-cluster plan yet: per-worker flush sizes \
-                 break the master's canonical-block aggregation; run it \
-                 through the Monte-Carlo engines (`straggler sim`)"
-            ),
+            SchemeId::GcHet(a, b) => {
+                // per-worker flush sizes, snapped to divisors of the
+                // canonical block so every aligned flush range nests
+                // inside one block and the master's duplicate-safe
+                // range merge works across cadences (the restriction
+                // that unlocked GCH on the live cluster)
+                let (canonical, sizes) =
+                    GcHetScheme::new(a as usize, b as usize).cluster_sizes(n);
+                ClusterPlan {
+                    scheduler: Box::new(CyclicScheduler),
+                    group: canonical,
+                    groups: Some(sizes),
+                    rule: CompletionRule::DistinctTasks,
+                    wire: WirePlan::Uncoded {
+                        align: canonical > 1,
+                    },
+                }
+            }
             SchemeId::Pc => ClusterPlan {
                 scheduler: Box::new(CyclicScheduler),
                 group: r,
+                groups: None,
                 rule: CompletionRule::Messages {
                     threshold: 2 * n.div_ceil(r) - 1,
                 },
@@ -171,6 +186,7 @@ impl SchemeRegistry {
             SchemeId::Pcmm => ClusterPlan {
                 scheduler: Box::new(CyclicScheduler),
                 group: 1,
+                groups: None,
                 rule: CompletionRule::Messages { threshold: 2 * n - 1 },
                 wire: WirePlan::Pcmm,
             },
@@ -180,12 +196,34 @@ impl SchemeRegistry {
             ),
         })
     }
+
+    /// Build the live-cluster plan for `(scheme, policy)` — the entry
+    /// point of the adaptive subsystem's cluster side
+    /// ([`crate::adaptive`]).  `static` defers to
+    /// [`SchemeRegistry::cluster_plan`] unchanged; the re-planning
+    /// policies are restricted to the uncoded data plane (the coded
+    /// wires fix their own assignment and decode threshold) and to
+    /// schemes with a fixed base plan the policy can permute.
+    pub fn adaptive_plan(
+        id: SchemeId,
+        policy: PolicyKind,
+        n: usize,
+        r: usize,
+        k: usize,
+    ) -> Result<ClusterPlan> {
+        let plan = Self::cluster_plan(id, n, r, k)?;
+        // one shared gate with the Monte-Carlo arm: uncoded fixed base,
+        // alloc-group r | n, alloc-random r = n
+        policy.validate_base(id, n, r)?;
+        Ok(plan)
+    }
 }
 
 fn uncoded_plan(scheduler: Box<dyn Scheduler>, group: usize) -> ClusterPlan {
     ClusterPlan {
         scheduler,
         group,
+        groups: None,
         rule: CompletionRule::DistinctTasks,
         // flushes larger than one task must align to canonical blocks
         // for the master's duplicate-safe range merge
@@ -423,16 +461,67 @@ mod tests {
 
         assert!(SchemeRegistry::cluster_plan(SchemeId::Lb, 4, 2, 4).is_err());
         assert!(
-            SchemeRegistry::cluster_plan(SchemeId::GcHet(2, 1), 4, 4, 4).is_err(),
-            "GCH is Monte-Carlo-only for now"
-        );
-        assert!(
             SchemeRegistry::cluster_plan(SchemeId::Ra, 4, 3, 4).is_err(),
             "RA needs r = n"
         );
         assert!(
             SchemeRegistry::cluster_plan(SchemeId::Pc, 4, 4, 2).is_err(),
             "coded schemes are k = n only"
+        );
+    }
+
+    #[test]
+    fn gch_cluster_plan_is_unlocked_with_divisor_sizes() {
+        let p = SchemeRegistry::cluster_plan(SchemeId::GcHet(4, 1), 4, 4, 4).unwrap();
+        assert_eq!(p.group, 4, "canonical block is the larger endpoint");
+        assert_eq!(p.rule, CompletionRule::DistinctTasks);
+        assert_eq!(p.wire, WirePlan::Uncoded { align: true });
+        let sizes = p.groups.expect("per-worker sizes");
+        assert_eq!(sizes, vec![4, 2, 2, 1], "ramp snapped to divisors of 4");
+
+        // degenerate flat ramp = uniform GC(s): same canonical block
+        let p = SchemeRegistry::cluster_plan(SchemeId::GcHet(2, 2), 6, 4, 6).unwrap();
+        assert_eq!(p.group, 2);
+        assert_eq!(p.groups, Some(vec![2; 6]));
+
+        // applicability unchanged: endpoints must fit the row
+        assert!(SchemeRegistry::cluster_plan(SchemeId::GcHet(5, 1), 4, 4, 4).is_err());
+    }
+
+    #[test]
+    fn adaptive_plan_gates_policies_by_wire_and_base() {
+        use crate::adaptive::PolicyKind;
+        // static defers to cluster_plan for every scheme
+        let p = SchemeRegistry::adaptive_plan(SchemeId::Pcmm, PolicyKind::Static, 4, 2, 4);
+        assert!(p.is_ok());
+        // re-planning policies: uncoded fixed-base schemes only
+        for policy in [PolicyKind::AdaptiveOrder, PolicyKind::AdaptiveLoad] {
+            assert!(SchemeRegistry::adaptive_plan(SchemeId::Gc(2), policy, 6, 6, 6).is_ok());
+            assert!(SchemeRegistry::adaptive_plan(SchemeId::Ss, policy, 6, 3, 6).is_ok());
+            assert!(
+                SchemeRegistry::adaptive_plan(SchemeId::Pc, policy, 6, 3, 6).is_err(),
+                "coded wire rejects {policy}"
+            );
+            assert!(
+                SchemeRegistry::adaptive_plan(SchemeId::Ra, policy, 6, 6, 6).is_err(),
+                "randomized base rejects {policy}"
+            );
+            assert!(
+                SchemeRegistry::adaptive_plan(SchemeId::GcHet(2, 1), policy, 6, 6, 6).is_err(),
+                "GCH is a static load layout"
+            );
+        }
+        assert!(
+            SchemeRegistry::adaptive_plan(SchemeId::Cs, PolicyKind::AllocGroup, 6, 4, 6).is_err(),
+            "alloc-group needs r | n"
+        );
+        let ok = SchemeRegistry::adaptive_plan(SchemeId::Cs, PolicyKind::AllocGroup, 6, 3, 6);
+        assert!(ok.is_ok());
+        let ok = SchemeRegistry::adaptive_plan(SchemeId::Cs, PolicyKind::AllocRandom, 6, 6, 6);
+        assert!(ok.is_ok());
+        assert!(
+            SchemeRegistry::adaptive_plan(SchemeId::Cs, PolicyKind::AllocRandom, 6, 3, 6).is_err(),
+            "alloc-random needs r = n"
         );
     }
 }

@@ -100,6 +100,73 @@ impl RunningStats {
     }
 }
 
+/// Exponentially-weighted moving average of a delay stream, with the
+/// matching exponentially-weighted variance (West 1979 incremental
+/// form) — the drift-tracking estimator of [`crate::adaptive`]: unlike
+/// [`RunningStats`], old observations decay at rate `1 − α`, so a
+/// worker whose service rate *changes* mid-run is re-estimated within
+/// `O(1/α)` observations instead of being averaged against its past.
+#[derive(Debug, Clone)]
+pub struct Ewma {
+    alpha: f64,
+    mean: f64,
+    var: f64,
+    count: u64,
+}
+
+impl Ewma {
+    /// `alpha ∈ (0, 1]`: weight of the newest observation.
+    pub fn new(alpha: f64) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0, "EWMA weight must be in (0, 1]");
+        Self {
+            alpha,
+            mean: 0.0,
+            var: 0.0,
+            count: 0,
+        }
+    }
+
+    /// Fold one observation in.  The first observation initializes the
+    /// mean exactly (no bias toward zero).
+    pub fn push(&mut self, x: f64) {
+        self.count += 1;
+        if self.count == 1 {
+            self.mean = x;
+            self.var = 0.0;
+            return;
+        }
+        let delta = x - self.mean;
+        self.mean += self.alpha * delta;
+        self.var = (1.0 - self.alpha) * (self.var + self.alpha * delta * delta);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Current mean estimate; `NaN` before the first observation.
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.mean
+        }
+    }
+
+    /// Current exponentially-weighted variance estimate.
+    pub fn variance(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.var
+        }
+    }
+
+    pub fn std_dev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
 /// Streaming quantile estimator with a deterministic, mergeable state —
 /// the memory-O(1) replacement for the Monte-Carlo engine's old
 /// buffer-everything-then-sort quantiles.
@@ -351,6 +418,68 @@ pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn ewma_first_observation_initializes_exactly() {
+        let mut e = Ewma::new(0.2);
+        assert!(e.mean().is_nan());
+        e.push(3.5);
+        assert_eq!(e.mean(), 3.5);
+        assert_eq!(e.variance(), 0.0);
+    }
+
+    #[test]
+    fn ewma_converges_to_constant_stream() {
+        let mut e = Ewma::new(0.2);
+        for _ in 0..200 {
+            e.push(2.0);
+        }
+        assert!((e.mean() - 2.0).abs() < 1e-12);
+        assert!(e.variance() < 1e-12);
+    }
+
+    #[test]
+    fn ewma_tracks_a_level_shift_within_1_over_alpha() {
+        // the drift-tracking property the adaptive estimator relies on:
+        // after a mean shift, ~3/α observations re-center the estimate
+        let mut e = Ewma::new(0.2);
+        for _ in 0..100 {
+            e.push(1.0);
+        }
+        for _ in 0..15 {
+            e.push(4.0);
+        }
+        assert!(e.mean() > 3.5, "mean {} should have re-centered", e.mean());
+        let mut slow = RunningStats::new();
+        for _ in 0..100 {
+            slow.push(1.0);
+        }
+        for _ in 0..15 {
+            slow.push(4.0);
+        }
+        assert!(
+            slow.mean() < 1.5,
+            "uniform average {} stays anchored — the contrast EWMA exists for",
+            slow.mean()
+        );
+    }
+
+    #[test]
+    fn ewma_variance_reflects_spread() {
+        let mut e = Ewma::new(0.1);
+        for i in 0..2000 {
+            e.push(if i % 2 == 0 { 0.0 } else { 2.0 });
+        }
+        // alternating ±1 around mean 1: EW variance settles near 1
+        assert!((e.mean() - 1.0).abs() < 0.2, "mean {}", e.mean());
+        assert!(e.variance() > 0.5 && e.variance() < 2.0, "var {}", e.variance());
+    }
+
+    #[test]
+    #[should_panic(expected = "EWMA weight")]
+    fn ewma_rejects_zero_alpha() {
+        Ewma::new(0.0);
+    }
 
     #[test]
     fn running_stats_matches_batch() {

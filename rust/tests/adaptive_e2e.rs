@@ -1,0 +1,139 @@
+//! Live-cluster integration of the adaptive subsystem: real sockets,
+//! protocol v3 frames, policy-driven per-round `Assign` plans, and the
+//! GCH per-worker-cadence unlock (divisor-snapped flush sizes merging
+//! duplicate-safe on the master).
+
+use straggler_sched::adaptive::PolicyKind;
+use straggler_sched::coordinator::{run_cluster, ClusterConfig};
+use straggler_sched::data::Dataset;
+use straggler_sched::delay::DelayModelKind;
+use straggler_sched::scheme::{SchemeId, SchemeRegistry};
+
+fn config(
+    scheme: SchemeId,
+    policy: PolicyKind,
+    n: usize,
+    r: usize,
+    k: usize,
+    rounds: usize,
+) -> ClusterConfig {
+    ClusterConfig {
+        n,
+        r,
+        k,
+        eta: 0.05,
+        rounds,
+        profile: "quickstart".into(),
+        plan: SchemeRegistry::adaptive_plan(scheme, policy, n, r, k)
+            .unwrap_or_else(|e| panic!("{scheme}+{policy} plan: {e:#}")),
+        policy,
+        dataset: Dataset::synthesize(n, 16, n * 8, 42),
+        inject: Some(DelayModelKind::Ec2Like {
+            seed: 11,
+            hetero: 0.3,
+        }),
+        seed: 7,
+        use_pjrt: false,
+        artifact_dir: None,
+        loss_every: 1,
+        listen: None,
+        spawn_workers: true,
+    }
+}
+
+#[test]
+fn gch_runs_live_with_heterogeneous_cadences() {
+    // the unlocked GCH cluster plan: per-worker flush sizes [2, 2, 1, 1]
+    // (ramp 2→1 snapped to divisors of 2) must merge duplicate-safe and
+    // converge exactly like the uniform schemes
+    let cfg = config(SchemeId::GcHet(2, 1), PolicyKind::Static, 4, 4, 4, 60);
+    let sizes = cfg.plan.groups.clone().expect("per-worker sizes");
+    assert_eq!(sizes, vec![2, 2, 1, 1]);
+    let ds = cfg.dataset.clone();
+    let l0 = ds.loss(&vec![0.0; ds.d]);
+    let report = run_cluster(cfg).expect("GCH cluster run");
+    assert_eq!(report.rounds.len(), 60);
+    for log in &report.rounds {
+        // k = n: every task delivered exactly once into θ
+        assert_eq!(log.winners.len(), 4, "round {}", log.round);
+        let mut w = log.winners.clone();
+        w.sort_unstable();
+        assert_eq!(w, vec![0, 1, 2, 3], "round {}", log.round);
+        assert!(!log.replanned, "static policy never replans");
+    }
+    assert!(
+        report.final_loss < 0.2 * l0,
+        "GCH training must converge: {l0} → {}",
+        report.final_loss
+    );
+    assert!(report.worker_estimates.is_empty(), "static runs carry no estimator");
+}
+
+#[test]
+fn order_policy_replans_live_rounds_and_reports_estimates() {
+    let cfg = config(SchemeId::Gc(2), PolicyKind::AdaptiveOrder, 4, 4, 4, 50);
+    let ds = cfg.dataset.clone();
+    let l0 = ds.loss(&vec![0.0; ds.d]);
+    let report = run_cluster(cfg).expect("order-policy cluster run");
+    assert_eq!(report.rounds.len(), 50);
+    assert!(
+        report.rounds.iter().any(|l| l.replanned),
+        "the order policy must re-plan at least once over 50 measured rounds"
+    );
+    // every worker was measured and estimated
+    assert_eq!(report.worker_estimates.len(), 4);
+    for e in &report.worker_estimates {
+        assert!(e.samples > 0, "worker {} unobserved", e.worker);
+        assert!(e.comp_mean_ms.is_finite() && e.comp_mean_ms > 0.0);
+        assert!(e.comm_mean_ms.is_finite() && e.comm_mean_ms > 0.0);
+    }
+    assert!(
+        report.final_loss < 0.2 * l0,
+        "re-planned training must still converge: {l0} → {}",
+        report.final_loss
+    );
+}
+
+#[test]
+fn load_policy_resizes_cadences_without_corrupting_theta() {
+    let cfg = config(SchemeId::Gc(2), PolicyKind::AdaptiveLoad, 4, 4, 4, 50);
+    let ds = cfg.dataset.clone();
+    let l0 = ds.loss(&vec![0.0; ds.d]);
+    let report = run_cluster(cfg).expect("load-policy cluster run");
+    // k = n + duplicate-safe merge ⇒ every round applies the exact
+    // full gradient regardless of the cadence re-splits
+    for log in &report.rounds {
+        let mut w = log.winners.clone();
+        w.sort_unstable();
+        assert_eq!(w, vec![0, 1, 2, 3], "round {}", log.round);
+    }
+    assert!(
+        report.final_loss < 0.2 * l0,
+        "load-policy training must converge: {l0} → {}",
+        report.final_loss
+    );
+    assert!(report.rounds.iter().any(|l| l.replanned));
+}
+
+#[test]
+fn alloc_group_policy_partitions_the_live_fleet() {
+    // group allocation at n = 4, r = 2: two worker pairs, each
+    // replicating a 2-task batch; k = 2 completes on the faster pair
+    let cfg = config(SchemeId::Cs, PolicyKind::AllocGroup, 4, 2, 2, 40);
+    let report = run_cluster(cfg).expect("alloc-group cluster run");
+    assert_eq!(report.rounds.len(), 40);
+    for log in &report.rounds {
+        let mut w = log.winners.clone();
+        w.sort_unstable();
+        w.dedup();
+        assert_eq!(w.len(), log.winners.len(), "winners distinct");
+        // CS base ⇒ singleton flushes ⇒ the round stops at exactly k
+        assert_eq!(log.winners.len(), 2, "round {}", log.round);
+    }
+    // the one-shot override plans exactly once
+    assert_eq!(
+        report.rounds.iter().filter(|l| l.replanned).count(),
+        1,
+        "alloc-group is a frozen override after round 0"
+    );
+}

@@ -5,6 +5,7 @@
 
 use std::net::TcpListener;
 
+use straggler_sched::adaptive::PolicyKind;
 use straggler_sched::coordinator::{run_cluster, run_worker, ClusterConfig, WorkerOptions};
 use straggler_sched::data::Dataset;
 use straggler_sched::delay::DelayModelKind;
@@ -20,6 +21,7 @@ fn base_config(scheme: SchemeId, n: usize, r: usize, k: usize, rounds: usize) ->
         profile: "quickstart".into(),
         plan: SchemeRegistry::cluster_plan(scheme, n, r, k)
             .unwrap_or_else(|e| panic!("{scheme} plan at (n={n}, r={r}, k={k}): {e:#}")),
+        policy: PolicyKind::Static,
         dataset: Dataset::synthesize(n, 16, n * 8, 42),
         inject: Some(DelayModelKind::TruncatedGaussianScenario1),
         seed: 7,

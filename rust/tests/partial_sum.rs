@@ -52,14 +52,20 @@ fn range_sum(h: &[Vec<f64>], lo: usize, hi: usize, d: usize) -> Vec<f64> {
 /// breaks (the mod-n wrap), and at the row end — exactly the worker
 /// loop in `coordinator/worker.rs`.
 fn aligned_flush_ranges(w: usize, n: usize, s: usize) -> Vec<(usize, usize)> {
-    let row: Vec<usize> = (0..n).map(|j| (w + j) % n).collect();
+    aligned_flush_ranges_rows(&(0..n).map(|j| (w + j) % n).collect::<Vec<_>>(), s)
+}
+
+/// Same decomposition for an arbitrary row and per-worker flush size —
+/// the shape the adaptive `load` policy produces (each worker has its
+/// own `s_i`, a divisor of the canonical block).
+fn aligned_flush_ranges_rows(row: &[usize], s: usize) -> Vec<(usize, usize)> {
     let mut ranges = Vec::new();
     let mut start = 0usize;
     for (slot, &t) in row.iter().enumerate() {
         let last = slot + 1 == row.len();
         let flush = last || (t + 1) % s == 0 || row[slot + 1] != t + 1;
         if flush {
-            ranges.push((row[start], t + 1)); // [first, last+1) in task space
+            ranges.push((row[start], t + 1));
             start = slot + 1;
         }
     }
@@ -171,6 +177,77 @@ fn prop_theta_trajectory_bit_identical_across_s_and_arrival_order() {
                         "θ[{i}] diverged at s = {s}, round {round}"
                     );
                 }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_replanned_flush_sizes_never_double_count_theta() {
+    // the adaptive `load` policy's safety property: per-worker flush
+    // sizes may be re-split at EVERY round boundary (each worker's s_i
+    // a divisor of the canonical block, as the policy guarantees) and
+    // the θ trajectory must stay bit-identical to an oracle s = 1
+    // in-order run on integer blocks — no task dropped, none counted
+    // twice, across rounds, duplicates and arbitrary arrival order
+    forall("replan theta bit-identity", 50, |rng| {
+        let n = 3 + rng.below(8); // 3..=10, r = n cyclic
+        let d = 1 + rng.below(4);
+        let canonical = 2 + rng.below(n - 1); // 2..=n
+        let divisors: Vec<usize> = (1..=canonical).filter(|s| canonical % s == 0).collect();
+        let ds = Dataset::synthesize(n, d, n * 4, rng.next_u64());
+        let eta = 0.05;
+        let rounds = 5;
+
+        let mut reference = UncodedMaster::new(&ds, eta, n);
+        let mut replanned = UncodedMaster::new(&ds, eta, n);
+
+        for round in 0..rounds {
+            let h = integer_h_table(rng, n, d);
+
+            // oracle: one worker, s = 1, in task order
+            let mut agg = RoundAggregator::new(n, d, 1, n);
+            for t in 0..n {
+                agg.offer(&[t], &range_sum(&h, t, t + 1, d));
+            }
+            let (w_ref, sum_ref) = agg.finish();
+            let mut rng_step = Rng::seed_from_u64(1);
+            reference.apply_aggregate(&w_ref, &sum_ref, n, ds.padded_samples(), &mut rng_step);
+
+            // replanned round: fresh per-worker sizes drawn THIS round
+            let sizes: Vec<usize> =
+                (0..n).map(|_| divisors[rng.below(divisors.len())]).collect();
+            let mut offers: Vec<(usize, usize)> = Vec::new();
+            for w in 0..n {
+                let row: Vec<usize> = (0..n).map(|j| (w + j) % n).collect();
+                offers.extend(aligned_flush_ranges_rows(&row, sizes[w]));
+            }
+            for _ in 0..rng.below(1 + n) {
+                let dup = offers[rng.below(offers.len())];
+                offers.push(dup);
+            }
+            rng.shuffle(&mut offers);
+            let mut agg = RoundAggregator::new(n, d, canonical, n);
+            for &(lo, hi) in &offers {
+                let tasks: Vec<usize> = (lo..hi).collect();
+                let verdict = agg.offer(&tasks, &range_sum(&h, lo, hi, d));
+                assert_ne!(
+                    verdict,
+                    Offer::Malformed,
+                    "round {round}: {lo}..{hi} with sizes {sizes:?} (canonical {canonical})"
+                );
+            }
+            assert!(agg.complete(), "round {round} covers all tasks");
+            let (w, sum) = agg.finish();
+            let mut rng_step = Rng::seed_from_u64(1);
+            replanned.apply_aggregate(&w, &sum, n, ds.padded_samples(), &mut rng_step);
+
+            for i in 0..d {
+                assert_eq!(
+                    replanned.theta[i].to_bits(),
+                    reference.theta[i].to_bits(),
+                    "θ[{i}] diverged at round {round} (sizes {sizes:?}, canonical {canonical})"
+                );
             }
         }
     });

@@ -4,6 +4,7 @@
 //! `(trials, threads, seed)` triple, and the GC(s) family's contract
 //! (`GC(1)` ≡ CS; grouping trades arrival lateness for message count).
 
+use straggler_sched::adaptive::{run_policy_rounds, PerRound, PolicyKind, PolicyRunConfig};
 use straggler_sched::coded::{PcScheme, PcmmScheme};
 use straggler_sched::delay::{DelayModel, TruncatedGaussianModel};
 use straggler_sched::harness::{evaluate, EvalPoint};
@@ -271,6 +272,57 @@ fn lb_statistically_bounds_gc_family() {
             e.scheme,
             e.mean
         );
+    }
+}
+
+#[test]
+fn static_policy_bit_identical_to_registry_path_for_every_scheme() {
+    // the adaptive subsystem's ground rule: `--policy static` IS the
+    // pre-adaptive engine — same shard-0 RNG streams, same chunked
+    // sampling, same kernels — for every scheme the registry knows,
+    // under both the idealized and the ingestion dynamics
+    let (n, trials, seed) = (8usize, 700usize, 23u64);
+    let model = TruncatedGaussianModel::scenario2(n, 9);
+    let cases: &[(SchemeId, usize, usize)] = &[
+        (SchemeId::Cs, 4, 6),
+        (SchemeId::Ss, 4, 6),
+        (SchemeId::Ra, 8, 5), // randomized redraws must consume rng_sched identically
+        (SchemeId::Gc(3), 4, 6),
+        (SchemeId::GcHet(3, 1), 4, 6),
+        (SchemeId::Pc, 4, 8),
+        (SchemeId::Pcmm, 4, 8),
+        (SchemeId::Lb, 4, 6),
+    ];
+    for &(id, r, k) in cases {
+        for ingest in [0.0, 0.15] {
+            let mut point = EvalPoint::new(n, r, k, trials, seed)
+                .with_schemes(&[id])
+                .with_ingest(ingest);
+            point.threads = 1; // the policy arm is single-stream (shard 0)
+            let want = evaluate(&point, &model).remove(0);
+            let got = run_policy_rounds(
+                &PolicyRunConfig {
+                    scheme: id,
+                    policy: PolicyKind::Static,
+                    n,
+                    r,
+                    k,
+                    rounds: trials,
+                    ingest_ms: ingest,
+                    seed,
+                },
+                &PerRound(&model),
+                None,
+            )
+            .unwrap();
+            assert_eq!(got.replans, 0, "{id} static never replans");
+            let e = &got.estimate;
+            assert_eq!(e.mean.to_bits(), want.mean.to_bits(), "{id} ingest {ingest} mean");
+            assert_eq!(e.p50.to_bits(), want.p50.to_bits(), "{id} ingest {ingest} p50");
+            assert_eq!(e.p95.to_bits(), want.p95.to_bits(), "{id} ingest {ingest} p95");
+            assert_eq!(e.min.to_bits(), want.min.to_bits(), "{id} ingest {ingest} min");
+            assert_eq!(e.max.to_bits(), want.max.to_bits(), "{id} ingest {ingest} max");
+        }
     }
 }
 
