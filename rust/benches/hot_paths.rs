@@ -401,6 +401,49 @@ fn main() {
         all.push(rebuild);
     }
 
+    group("trace fit (fleet calibration, n = 64 workers)");
+    {
+        // the trace subsystem's budget: fitting a whole 64-worker fleet
+        // (shifted-exp MLE + truncated-Gaussian moments + KS per
+        // channel) must stay under 5 ms so `trace fit` and fitted
+        // replay feel instant even on operational traces
+        use straggler_sched::trace::{fit_traces, TraceRecorder, TraceStore};
+        let mut rec = TraceRecorder::with_fleet("GC(2)", 64);
+        let mut rng = Rng::seed_from_u64(0x7124CE);
+        for round in 0..128 {
+            for w in 0..64usize {
+                let base = 1.6 * (1.0 + 0.3 * (w as f64 / 63.0));
+                rec.push_flush(
+                    round,
+                    w,
+                    0,
+                    2,
+                    base * (1.8 + 0.4 * rng.f64()),
+                    5.5 * (0.8 + 0.4 * rng.f64()),
+                    2088,
+                    false,
+                );
+            }
+        }
+        let store: TraceStore = rec.into_store();
+        let fit = bench("trace/fit_fleet_64workers", || {
+            black_box(fit_traces(black_box(&store)).unwrap());
+        });
+        println!(
+            "trace fit at n = 64 ({} events): {:.3} ms/fit (target < 5 ms)",
+            store.len(),
+            fit.mean_ns / 1e6
+        );
+        all.push(fit);
+        let bin = store.to_binary();
+        all.push(bench("trace/encode_binary_8192events", || {
+            black_box(store.to_binary());
+        }));
+        all.push(bench("trace/decode_binary_8192events", || {
+            black_box(TraceStore::from_binary(black_box(&bin)).unwrap());
+        }));
+    }
+
     group("linalg oracle (d = 400, b = 60 — fig5 task shape)");
     {
         let mut rng = Rng::seed_from_u64(6);

@@ -95,6 +95,14 @@ impl DelayEstimator {
         self.comp[worker].count()
     }
 
+    /// EWMA per-task computation delay of `worker` (ms); `NaN` if
+    /// unobserved.  The O(1) accessor the per-round policies read —
+    /// [`DelayEstimator::estimate`] additionally sorts the quantile
+    /// state and is for reports.
+    pub fn comp_mean_ms(&self, worker: usize) -> f64 {
+        self.comp[worker].mean()
+    }
+
     /// Current snapshot for one worker.
     pub fn estimate(&self, worker: usize) -> WorkerEstimate {
         let q = &self.comp_q[worker];
@@ -143,6 +151,33 @@ impl DelayEstimator {
         } else {
             self.comp[worker].mean()
         }
+    }
+
+    /// Workers sorted fastest-first by the empirical `q`-quantile of
+    /// their per-task computation delay (the
+    /// [`StreamingQuantiles`] state behind `comp_p50/p95`) — the
+    /// heavy-tail-robust ranking of the `order@pQQ` policy: a worker
+    /// whose *mean* is good but whose tail occasionally stalls a round
+    /// ranks behind a steady one, which the EWMA mean cannot see.
+    /// Unobserved workers rank last in index order, so the fresh-state
+    /// identity and determinism contracts of
+    /// [`DelayEstimator::speed_ranking`] carry over.
+    pub fn speed_ranking_quantile(&self, q: f64) -> Vec<usize> {
+        assert!((0.0..=1.0).contains(&q), "quantile level must be in [0,1]");
+        // quantile() re-sorts the observation buffer in exact mode —
+        // evaluate it once per worker, never inside the comparator
+        let scores: Vec<f64> = (0..self.n())
+            .map(|w| {
+                if self.comp_q[w].count() == 0 {
+                    f64::INFINITY
+                } else {
+                    self.comp_q[w].quantile(q)
+                }
+            })
+            .collect();
+        let mut idx: Vec<usize> = (0..self.n()).collect();
+        idx.sort_by(|&a, &b| scores[a].total_cmp(&scores[b]).then(a.cmp(&b)));
+        idx
     }
 }
 
@@ -195,6 +230,31 @@ mod tests {
         assert!((e.comp_mean_ms - 0.5).abs() < 1e-12);
         assert!((e.comm_mean_ms - 0.7).abs() < 1e-12);
         assert!((e.comp_p50_ms - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantile_ranking_sees_the_tail_the_mean_hides() {
+        let mut est = DelayEstimator::new(2);
+        // worker 0: steady 0.3 ms; worker 1: usually 0.1 ms but every
+        // 10th task stalls 3 ms — better EWMA mean, far worse p95
+        for i in 0..200 {
+            est.observe(0, 0.3, 0.5);
+            est.observe(1, if i % 10 == 0 { 3.0 } else { 0.1 }, 0.5);
+        }
+        assert_eq!(est.speed_ranking(), vec![1, 0], "mean prefers the spiky worker");
+        assert_eq!(
+            est.speed_ranking_quantile(0.95),
+            vec![0, 1],
+            "p95 prefers the steady worker"
+        );
+        // low quantiles agree with the typical case again
+        assert_eq!(est.speed_ranking_quantile(0.5), vec![1, 0]);
+    }
+
+    #[test]
+    fn quantile_ranking_fresh_state_is_identity() {
+        let est = DelayEstimator::new(4);
+        assert_eq!(est.speed_ranking_quantile(0.95), vec![0, 1, 2, 3]);
     }
 
     #[test]

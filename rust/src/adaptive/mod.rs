@@ -27,11 +27,16 @@
 //!   policies: `static` (frozen plan, bit-identical to the registry
 //!   path), `order` (re-rank the cyclic/staircase worker order by
 //!   estimated speed, spreading the currently-fast workers' rows evenly
-//!   over task space), `load` (re-split per-worker flush sizes `s_i` à
-//!   la GCH, constrained to divisors of the canonical block so partial
-//!   sums stay mergeable), and the Behrouzi-Far & Soljanin allocation
-//!   variants `alloc-group` / `alloc-random` as static allocation
-//!   policies;
+//!   over task space), `order@pQQ` (the same re-ranking by the
+//!   empirical QQ-th-percentile delay — heavy-tailed fleets, where a
+//!   good mean can hide a round-stalling tail), `load` (re-split
+//!   per-worker flush sizes `s_i` à la GCH on a rank ramp, constrained
+//!   to divisors of the canonical block so partial sums stay
+//!   mergeable), `load-rate` (re-split proportionally to estimated
+//!   *service-rate ratios* instead of ranks — the response is sized by
+//!   how much slower a worker actually is), and the Behrouzi-Far &
+//!   Soljanin allocation variants `alloc-group` / `alloc-random` as
+//!   static allocation policies;
 //! * [`alloc`] — the non-cyclic allocation schedulers those variants
 //!   build on;
 //! * [`sim`] — the sequential multi-round re-planning Monte-Carlo arm

@@ -19,6 +19,7 @@ use anyhow::{bail, ensure, Result};
 
 use crate::scheduler::{RandomAssignment, Scheduler, ToMatrix};
 use crate::scheme::SchemeId;
+use crate::util::fnv::Fnv1a;
 use crate::util::rng::Rng;
 
 use super::alloc::GroupAllocation;
@@ -35,11 +36,25 @@ pub enum PolicyKind {
     /// so the currently-fast workers' rows tile task space evenly and
     /// their early slots cover *disjoint* tasks.
     AdaptiveOrder,
+    /// [`PolicyKind::AdaptiveOrder`] ranked by the empirical
+    /// `q`-quantile of the per-task computation delay instead of the
+    /// EWMA mean (`q` stored in percent, e.g. `95` for `order@p95`) —
+    /// the heavy-tailed-fleet variant: a worker whose mean looks fast
+    /// but whose tail stalls rounds ranks where its tail puts it.
+    AdaptiveOrderQuantile(u16),
     /// Re-split per-worker flush sizes `s_i` à la GCH: the fastest
     /// worker keeps the full canonical block, slower workers ramp down
     /// to 1, every size [`snap_divisor`]-constrained to divide the
     /// canonical block so the master's range merge stays duplicate-safe.
     AdaptiveLoad,
+    /// Re-split flush sizes **proportional to estimated service
+    /// rates** (`1 / mean per-task delay`), replacing
+    /// [`PolicyKind::AdaptiveLoad`]'s rank ramp: a worker half as fast
+    /// as the fleet's fastest flushes blocks half as large (still
+    /// [`snap_divisor`]-constrained, floor 1).  Rank only orders
+    /// workers; rate ratios *size* the response to how much slower
+    /// they actually are.
+    LoadRate,
     /// Behrouzi-Far & Soljanin group allocation (static assignment
     /// override; needs `r | n`).
     AllocGroup,
@@ -50,32 +65,59 @@ pub enum PolicyKind {
 
 impl PolicyKind {
     /// Parse the CLI/config spelling (case-insensitive):
-    /// `static | order | load | alloc-group | alloc-random`.
+    /// `static | order | order@pQQ | load | load-rate | alloc-group |
+    /// alloc-random` — `order@p95` ranks by the empirical 95th
+    /// percentile (any `QQ ∈ [1, 99]`).
     pub fn parse(name: &str) -> Result<PolicyKind> {
-        Ok(match name.trim().to_lowercase().as_str() {
+        let lower = name.trim().to_lowercase();
+        if let Some(q) = lower
+            .strip_prefix("order@p")
+            .or_else(|| lower.strip_prefix("adaptive-order@p"))
+        {
+            let q: u16 = q.parse().map_err(|_| {
+                anyhow::anyhow!("bad quantile in {name:?}; want order@pQQ with QQ ∈ [1, 99]")
+            })?;
+            ensure!(
+                (1..=99).contains(&q),
+                "order@p quantile must be in [1, 99], got {q}"
+            );
+            return Ok(PolicyKind::AdaptiveOrderQuantile(q));
+        }
+        Ok(match lower.as_str() {
             "static" => PolicyKind::Static,
             "order" | "adaptive-order" => PolicyKind::AdaptiveOrder,
             "load" | "adaptive-load" => PolicyKind::AdaptiveLoad,
+            "load-rate" | "adaptive-load-rate" | "rate" => PolicyKind::LoadRate,
             "alloc-group" | "group" => PolicyKind::AllocGroup,
             "alloc-random" | "random" => PolicyKind::AllocRandom,
             other => bail!(
-                "unknown policy {other:?} (static|order|load|alloc-group|alloc-random)"
+                "unknown policy {other:?} \
+                 (static|order|order@pQQ|load|load-rate|alloc-group|alloc-random)"
             ),
         })
     }
 
     /// Does the policy consume estimator state between rounds?
     pub fn is_adaptive(self) -> bool {
-        matches!(self, PolicyKind::AdaptiveOrder | PolicyKind::AdaptiveLoad)
+        matches!(
+            self,
+            PolicyKind::AdaptiveOrder
+                | PolicyKind::AdaptiveOrderQuantile(_)
+                | PolicyKind::AdaptiveLoad
+                | PolicyKind::LoadRate
+        )
     }
 
     /// Does the policy change *which tasks a worker holds*?  On the
     /// live cluster this forces full-dataset distribution (like RA) —
-    /// `load` keeps assignments fixed and ships rows only.
+    /// the load policies keep assignments fixed and ship rows only.
     pub fn reassigns_rows(self) -> bool {
         matches!(
             self,
-            PolicyKind::AdaptiveOrder | PolicyKind::AllocGroup | PolicyKind::AllocRandom
+            PolicyKind::AdaptiveOrder
+                | PolicyKind::AdaptiveOrderQuantile(_)
+                | PolicyKind::AllocGroup
+                | PolicyKind::AllocRandom
         )
     }
 
@@ -118,13 +160,15 @@ impl PolicyKind {
 
 impl std::fmt::Display for PolicyKind {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.write_str(match self {
-            PolicyKind::Static => "static",
-            PolicyKind::AdaptiveOrder => "order",
-            PolicyKind::AdaptiveLoad => "load",
-            PolicyKind::AllocGroup => "alloc-group",
-            PolicyKind::AllocRandom => "alloc-random",
-        })
+        match self {
+            PolicyKind::Static => f.write_str("static"),
+            PolicyKind::AdaptiveOrder => f.write_str("order"),
+            PolicyKind::AdaptiveOrderQuantile(q) => write!(f, "order@p{q}"),
+            PolicyKind::AdaptiveLoad => f.write_str("load"),
+            PolicyKind::LoadRate => f.write_str("load-rate"),
+            PolicyKind::AllocGroup => f.write_str("alloc-group"),
+            PolicyKind::AllocRandom => f.write_str("alloc-random"),
+        }
     }
 }
 
@@ -228,7 +272,7 @@ pub struct PolicyEngine {
     pub estimator: DelayEstimator,
     last: Option<RoundPlan>,
     replans: usize,
-    digest: u64,
+    digest: Fnv1a,
 }
 
 impl PolicyEngine {
@@ -243,7 +287,7 @@ impl PolicyEngine {
             estimator: DelayEstimator::new(n),
             last: None,
             replans: 0,
-            digest: 0xcbf29ce484222325, // FNV-1a offset basis
+            digest: Fnv1a::new(),
         }
     }
 
@@ -280,8 +324,13 @@ impl PolicyEngine {
         let plan = match self.kind {
             _ if unobserved => RoundPlan::identity(n, self.block),
             PolicyKind::Static => RoundPlan::identity(n, self.block),
-            PolicyKind::AdaptiveOrder => {
-                let ranking = self.estimator.speed_ranking();
+            PolicyKind::AdaptiveOrder | PolicyKind::AdaptiveOrderQuantile(_) => {
+                let ranking = match self.kind {
+                    PolicyKind::AdaptiveOrderQuantile(q) => {
+                        self.estimator.speed_ranking_quantile(q as f64 / 100.0)
+                    }
+                    _ => self.estimator.speed_ranking(),
+                };
                 let offsets = spread_offsets(n);
                 let mut order = vec![0usize; n];
                 for (j, &w) in ranking.iter().enumerate() {
@@ -290,6 +339,34 @@ impl PolicyEngine {
                 RoundPlan {
                     order,
                     sizes: vec![self.block; n],
+                    to: None,
+                }
+            }
+            PolicyKind::LoadRate => {
+                // service-rate-proportional flush sizes: the fastest
+                // estimated worker keeps the full canonical block,
+                // everyone else scales by their rate ratio (unobserved
+                // workers have rate 0 → the floor of 1), snapped to
+                // divisors of the block so the master's range merge
+                // stays duplicate-safe
+                let rate = |w: usize| {
+                    let e = &self.estimator;
+                    if e.samples(w) == 0 {
+                        0.0
+                    } else {
+                        1.0 / e.comp_mean_ms(w).max(1e-12)
+                    }
+                };
+                let max_rate = (0..n).map(rate).fold(0.0f64, f64::max).max(1e-12);
+                let sizes: Vec<usize> = (0..n)
+                    .map(|w| {
+                        let raw = (self.block as f64 * rate(w) / max_rate).round() as usize;
+                        snap_divisor(self.block, raw)
+                    })
+                    .collect();
+                RoundPlan {
+                    order: (0..n).collect(),
+                    sizes,
                     to: None,
                 }
             }
@@ -333,34 +410,29 @@ impl PolicyEngine {
         self.replans
     }
 
-    /// FNV-1a fold of every decision so far — the determinism pin:
-    /// identical seeds + arrival traces must yield identical digests.
+    /// FNV-1a fold ([`Fnv1a`]) of every decision so far — the
+    /// determinism pin: identical seeds + arrival traces must yield
+    /// identical digests.
     pub fn decision_digest(&self) -> u64 {
-        self.digest
+        self.digest.digest()
     }
 
     fn fold_digest(&mut self, round: usize, plan: &RoundPlan) {
-        const PRIME: u64 = 0x100000001b3;
-        let mut h = self.digest;
-        let mut fold = |v: u64| {
-            h ^= v;
-            h = h.wrapping_mul(PRIME);
-        };
-        fold(round as u64);
+        let h = &mut self.digest;
+        h.fold(round as u64);
         for &o in &plan.order {
-            fold(o as u64);
+            h.fold(o as u64);
         }
         for &s in &plan.sizes {
-            fold(s as u64);
+            h.fold(s as u64);
         }
         if let Some(to) = &plan.to {
             for row in to.rows() {
                 for &t in row {
-                    fold(t as u64 ^ 0x5A5A);
+                    h.fold(t as u64 ^ 0x5A5A);
                 }
             }
         }
-        self.digest = h;
     }
 }
 
@@ -373,7 +445,10 @@ mod tests {
         for (s, want) in [
             ("static", PolicyKind::Static),
             ("ORDER", PolicyKind::AdaptiveOrder),
+            ("order@p95", PolicyKind::AdaptiveOrderQuantile(95)),
+            ("ORDER@P50", PolicyKind::AdaptiveOrderQuantile(50)),
             ("adaptive-load", PolicyKind::AdaptiveLoad),
+            ("load-rate", PolicyKind::LoadRate),
             (" alloc-group ", PolicyKind::AllocGroup),
             ("alloc-random", PolicyKind::AllocRandom),
         ] {
@@ -382,13 +457,17 @@ mod tests {
         for kind in [
             PolicyKind::Static,
             PolicyKind::AdaptiveOrder,
+            PolicyKind::AdaptiveOrderQuantile(95),
             PolicyKind::AdaptiveLoad,
+            PolicyKind::LoadRate,
             PolicyKind::AllocGroup,
             PolicyKind::AllocRandom,
         ] {
             assert_eq!(PolicyKind::parse(&kind.to_string()).unwrap(), kind);
         }
-        assert!(PolicyKind::parse("wat").is_err());
+        for bad in ["wat", "order@p0", "order@p100", "order@p", "order@pxx"] {
+            assert!(PolicyKind::parse(bad).is_err(), "{bad:?}");
+        }
     }
 
     #[test]
@@ -470,7 +549,12 @@ mod tests {
     #[test]
     fn unobserved_adaptive_policies_emit_the_static_plan() {
         let mut rng = Rng::seed_from_u64(0);
-        for kind in [PolicyKind::AdaptiveOrder, PolicyKind::AdaptiveLoad] {
+        for kind in [
+            PolicyKind::AdaptiveOrder,
+            PolicyKind::AdaptiveOrderQuantile(95),
+            PolicyKind::AdaptiveLoad,
+            PolicyKind::LoadRate,
+        ] {
             let mut eng = PolicyEngine::new(kind, 6, 6, 3);
             assert_eq!(
                 eng.plan(0, &mut rng),
@@ -478,6 +562,65 @@ mod tests {
                 "{kind}: round 0 must be static"
             );
         }
+    }
+
+    #[test]
+    fn order_quantile_ranks_by_the_tail() {
+        let mut eng = PolicyEngine::new(PolicyKind::AdaptiveOrderQuantile(95), 2, 2, 1);
+        let mut rng = Rng::seed_from_u64(0);
+        // worker 0 steady 0.3; worker 1 usually faster but spiky
+        for i in 0..100 {
+            eng.observe(0, 0.3, 0.5);
+            eng.observe(1, if i % 10 == 0 { 3.0 } else { 0.1 }, 0.5);
+        }
+        let p = eng.plan(1, &mut rng);
+        // the steady worker is ranked fastest → offset 0
+        assert_eq!(p.order[0], 0, "{:?}", p.order);
+        // the plain mean ranking would have flipped it
+        let mut mean_eng = PolicyEngine::new(PolicyKind::AdaptiveOrder, 2, 2, 1);
+        for i in 0..100 {
+            mean_eng.observe(0, 0.3, 0.5);
+            mean_eng.observe(1, if i % 10 == 0 { 3.0 } else { 0.1 }, 0.5);
+        }
+        let pm = mean_eng.plan(1, &mut rng);
+        assert_eq!(pm.order[1], 0, "{:?}", pm.order);
+    }
+
+    #[test]
+    fn load_rate_sizes_follow_service_rate_ratios() {
+        // block 4; worker rates 1 : 1/2 : 1/4 : unobserved
+        let mut eng = PolicyEngine::new(PolicyKind::LoadRate, 4, 4, 4);
+        let mut rng = Rng::seed_from_u64(0);
+        for _ in 0..30 {
+            eng.observe(0, 0.1, 0.5);
+            eng.observe(1, 0.2, 0.5);
+            eng.observe(2, 0.4, 0.5);
+        }
+        let p = eng.plan(1, &mut rng);
+        assert_eq!(p.order, (0..4).collect::<Vec<_>>(), "load-rate does not reorder");
+        assert_eq!(p.sizes[0], 4, "fastest keeps the full block");
+        assert_eq!(p.sizes[1], 2, "half the rate → half the block");
+        assert_eq!(p.sizes[2], 1, "quarter rate → 1");
+        assert_eq!(p.sizes[3], 1, "unobserved floors at 1");
+        assert!(p.sizes.iter().all(|&s| 4 % s == 0));
+        // contrast with the rank ramp: `load` at these shapes gives the
+        // 2nd-ranked worker a size from its *rank*, not its rate
+        let mut ramp = PolicyEngine::new(PolicyKind::AdaptiveLoad, 4, 4, 4);
+        for _ in 0..30 {
+            ramp.observe(0, 0.1, 0.5);
+            ramp.observe(1, 0.11, 0.5); // nearly as fast as worker 0
+            ramp.observe(2, 0.4, 0.5);
+        }
+        let mut rate = PolicyEngine::new(PolicyKind::LoadRate, 4, 4, 4);
+        for _ in 0..30 {
+            rate.observe(0, 0.1, 0.5);
+            rate.observe(1, 0.11, 0.5);
+            rate.observe(2, 0.4, 0.5);
+        }
+        let pr = ramp.plan(1, &mut rng);
+        let pv = rate.plan(1, &mut rng);
+        assert!(pr.sizes[1] < 4, "rank ramp demotes the near-tied worker");
+        assert_eq!(pv.sizes[1], 4, "rate ratio keeps the near-tied worker at full block");
     }
 
     #[test]

@@ -27,6 +27,7 @@ use crate::scheduler::{CyclicScheduler, Scheduler, StaircaseScheduler, ToMatrix}
 use crate::scheme::gc::GcEvaluator;
 use crate::scheme::{RoundView, SchemeEvaluator, SchemeId, SchemeRegistry};
 use crate::sim::{shard_rngs, slot_arrivals_batch, CompletionEstimate, MonteCarlo, BATCH_ROUNDS};
+use crate::trace::TraceRecorder;
 use crate::util::rng::Rng;
 use crate::util::stats::{RunningStats, StreamingQuantiles};
 
@@ -191,10 +192,18 @@ fn base_scheduler(id: SchemeId) -> Option<Box<dyn Scheduler>> {
 /// arrival precedes the round's completion time — causal like the live
 /// master's feed, though slightly better informed (see the censoring
 /// note at the feedback loop).
+///
+/// A [`TraceRecorder`] in `trace` captures the same **censored** slot
+/// view the estimator sees (one per-slot event per delivery the master
+/// witnessed before completion) — the simulator-side tap of the trace
+/// subsystem ([`crate::trace`]); recording never touches the RNG
+/// streams, so a recorded run's estimate is bit-identical to an
+/// unrecorded one.
 pub fn run_policy_rounds(
     cfg: &PolicyRunConfig,
     model: &dyn RoundDelayModel,
     mut emit: Option<&mut dyn FnMut(usize, f64)>,
+    mut trace: Option<&mut TraceRecorder>,
 ) -> Result<PolicyOutcome> {
     let PolicyRunConfig {
         scheme: scheme_id,
@@ -256,12 +265,14 @@ pub fn run_policy_rounds(
         slot_arrivals_batch(&batch, &mut arrivals);
         for b in 0..chunk {
             let round = done + b;
+            let mut replanned = false;
             if let Some(engine) = engine.as_mut() {
                 let plan = engine.plan(round, &mut rng_sched);
                 if last_plan.as_ref() != Some(&plan) {
                     let to = plan.materialize(base_to.as_ref().expect("adaptive base plan"));
                     evaluator = Box::new(GcEvaluator::with_sizes(&to, &plan.sizes, k));
                     last_plan = Some(plan);
+                    replanned = true;
                 }
             }
             let view = RoundView {
@@ -274,19 +285,33 @@ pub fn run_policy_rounds(
             } else {
                 evaluator.completion_ingest(&view, ingest_ms, &mut rng_sched)
             };
-            if let Some(engine) = engine.as_mut() {
+            if engine.is_some() || trace.is_some() {
                 // causal feedback, censored at the round's completion
                 // time.  Censoring uses per-task slot arrivals — a
                 // slightly better-informed view than the live master's
                 // flush-grouped feed (a partially-filled group's slots
                 // count here but never reach a real master); the
                 // policies only consume the resulting speed *ranking*,
-                // which both views agree on
+                // which both views agree on.  The trace recorder eats
+                // the identical censored stream, so recorded simulator
+                // traces match what a replaying estimator would see.
                 for i in 0..n {
                     for j in 0..r {
                         let slot = i * r + j;
                         if view.arrivals[slot] <= t {
-                            engine.observe(i, view.comp[slot], view.comm[slot]);
+                            if let Some(engine) = engine.as_mut() {
+                                engine.observe(i, view.comp[slot], view.comm[slot]);
+                            }
+                            if let Some(rec) = trace.as_deref_mut() {
+                                rec.push_slot(
+                                    round,
+                                    i,
+                                    j,
+                                    view.comp[slot],
+                                    view.comm[slot],
+                                    replanned,
+                                );
+                            }
                         }
                     }
                 }
@@ -340,6 +365,7 @@ impl MonteCarlo {
                 seed: self.seed,
             },
             model,
+            None,
             None,
         )
     }
@@ -409,6 +435,7 @@ mod tests {
                     seed: 1,
                 },
                 &PerRound(&model),
+                None,
                 None,
             )
         };

@@ -29,10 +29,10 @@
 //! comm_rate}`, `truncated_gaussian {comp: {...}, comm: {...}}` —
 //! the same space as [`crate::delay::DelayModelKind`].
 //!
-//! An optional `"policy"` field (`static | order | load | alloc-group
-//! | alloc-random`) switches the sweep onto the sequential re-planning
-//! arm of [`crate::adaptive`]; non-static policies require CS/SS/GC(s)
-//! bases.
+//! An optional `"policy"` field (`static | order | order@pQQ | load |
+//! load-rate | alloc-group | alloc-random`) switches the sweep onto
+//! the sequential re-planning arm of [`crate::adaptive`]; non-static
+//! policies require CS/SS/GC(s) bases.
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -55,9 +55,11 @@ pub struct Experiment {
     pub ingest_ms: f64,
     pub schemes: Vec<SchemeId>,
     /// Round-boundary re-planning policy (`"policy"` field, default
-    /// `static`).  Non-static sweeps run the sequential re-planning arm
-    /// of [`crate::adaptive`] per point instead of the coupled batch
-    /// evaluator — every scheme still sees the identical delay stream.
+    /// `static`; grammar `static | order | order@pQQ | load |
+    /// load-rate | alloc-group | alloc-random`).  Non-static sweeps
+    /// run the sequential re-planning arm of [`crate::adaptive`] per
+    /// point instead of the coupled batch evaluator — every scheme
+    /// still sees the identical delay stream.
     pub policy: PolicyKind,
     pub model: DelayModelKind,
 }
@@ -248,6 +250,7 @@ impl Experiment {
                                 seed: self.seed,
                             },
                             &PerRound(model.as_ref()),
+                            None,
                             None,
                         )
                         .map(|o| o.estimate.mean)

@@ -43,6 +43,7 @@ use crate::linalg::{vec_axpy, Mat};
 use crate::metrics::DelayRecorder;
 use crate::scheduler::Scheduler as _;
 use crate::scheme::{ClusterPlan, CompletionRule, WirePlan};
+use crate::trace::{TraceRecorder, TraceStore};
 use crate::util::rng::Rng;
 
 /// Cluster configuration.
@@ -112,6 +113,12 @@ pub struct ClusterReport {
     pub rounds: Vec<RoundLog>,
     /// per-worker measured delays (ms) — feeds Fig. 3 + empirical replay
     pub recorders: Vec<DelayRecorder>,
+    /// the canonical per-event delay trace ([`crate::trace`]): one
+    /// event per received `Result` frame (real socket timings, frame
+    /// bytes, flush sizes) — save with `train --record PATH`, then
+    /// `straggler trace fit` / `sim --from-trace` close the
+    /// record → fit → replay loop
+    pub trace: TraceStore,
     /// the policy engine's final per-worker delay estimates (empty
     /// under the `static` policy) — the estimator state the last
     /// round's plan was derived from
@@ -386,6 +393,24 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
     });
     let mut rng = Rng::seed_from_u64(seed);
     let mut recorders = vec![DelayRecorder::default(); n];
+    // the trace tap: one event per received Result frame.  The
+    // registry id is not in scope here — the plan is — so the scheme
+    // label is reconstructed from the wire + flush layout
+    let trace_label = match wire {
+        WirePlan::Pc => "PC".to_string(),
+        WirePlan::Pcmm => "PCMM".to_string(),
+        WirePlan::Uncoded { .. } => {
+            if base_sizes.iter().any(|&s| s != group) {
+                format!("GCH/g{group}")
+            } else if group > 1 {
+                format!("GC({group})")
+            } else {
+                scheduler.name().to_string()
+            }
+        }
+    };
+    let mut trace_rec = TraceRecorder::with_fleet(trace_label, n);
+    let mut trace_msgs = vec![0usize; n];
     let mut logs = Vec::with_capacity(rounds);
     let d = dataset.d;
 
@@ -449,6 +474,7 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
         };
         let mut responses: Vec<(usize, Vec<f64>)> = Vec::new();
         let mut seen_keys: HashSet<usize> = HashSet::new();
+        trace_msgs.fill(0);
         let mut results_seen = 0usize;
         let mut messages_seen = 0usize;
         let mut wire_bytes = 0usize;
@@ -557,6 +583,21 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
             let comm_ms = (recv_us.saturating_sub(send_ts_us)) as f64 / 1e3;
             recorders[worker_id as usize].record_comp(comp_ms);
             recorders[worker_id as usize].record_comm(comm_ms);
+            // duplicates and stranded overlaps are real fleet
+            // measurements — the trace records every well-formed frame,
+            // exactly what the recorders and the estimator see
+            let msg_idx = trace_msgs[worker_id as usize];
+            trace_msgs[worker_id as usize] += 1;
+            trace_rec.push_flush(
+                round,
+                worker_id as usize,
+                msg_idx,
+                task_ids.len(),
+                comp_ms,
+                comm_ms,
+                frame_len,
+                replanned,
+            );
             if let Some(e) = engine.as_mut() {
                 // the estimator eats the same measurements RoundLog and
                 // the recorders are built from — causal by construction
@@ -649,6 +690,7 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
     Ok(ClusterReport {
         rounds: logs,
         recorders,
+        trace: trace_rec.into_store(),
         worker_estimates: engine
             .as_ref()
             .map(|e| e.estimator.estimates())

@@ -113,11 +113,85 @@ impl DelayModel for ShiftedExponential {
     }
 }
 
+/// Per-worker shifted-exponential delays, i.i.d. across a worker's
+/// slots — the parametric fleet model the trace subsystem's fitting
+/// layer emits ([`crate::trace::FleetFit::shifted_exp_model`]): worker
+/// `i` draws computation delays from `comp[i]` and communication
+/// delays from `comm[i]`.
+#[derive(Debug, Clone)]
+pub struct PerWorkerShiftedExp {
+    pub comp: Vec<ShiftedExp>,
+    pub comm: Vec<ShiftedExp>,
+    label: String,
+}
+
+impl PerWorkerShiftedExp {
+    pub fn new(comp: Vec<ShiftedExp>, comm: Vec<ShiftedExp>, label: &str) -> Self {
+        assert_eq!(comp.len(), comm.len(), "per-worker param counts differ");
+        assert!(!comp.is_empty(), "need at least one worker");
+        Self {
+            comp,
+            comm,
+            label: label.to_string(),
+        }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.comp.len()
+    }
+}
+
+impl DelayModel for PerWorkerShiftedExp {
+    fn name(&self) -> String {
+        format!("{}/{}-workers", self.label, self.n_workers())
+    }
+
+    fn sample_into(&self, out: &mut DelaySample, rng: &mut Rng) {
+        let (n, r) = (out.n, out.r);
+        assert!(n <= self.n_workers(), "model built for fewer workers");
+        for i in 0..n {
+            let (dc, dm) = (self.comp[i], self.comm[i]);
+            for j in 0..r {
+                out.comp_mut()[i * r + j] = dc.sample(rng);
+                out.comm_mut()[i * r + j] = dm.sample(rng);
+            }
+        }
+    }
+
+    /// Batched sampling: identical `(comp, comm)`-interleaved draw
+    /// order per slot as [`PerWorkerShiftedExp::sample_into`] (the
+    /// bit-identity contract), writing into contiguous round slices.
+    fn sample_batch_into(&self, out: &mut DelayBatch, rng: &mut Rng) {
+        let (n, r) = (out.n, out.r);
+        assert!(n <= self.n_workers(), "model built for fewer workers");
+        let params: Vec<(ShiftedExp, ShiftedExp)> =
+            (0..n).map(|i| (self.comp[i], self.comm[i])).collect();
+        for b in 0..out.rounds {
+            let (comp, comm) = out.round_mut(b);
+            for (i, &(dc, dm)) in params.iter().enumerate() {
+                let base = i * r;
+                for j in 0..r {
+                    comp[base + j] = dc.sample(rng);
+                    comm[base + j] = dm.sample(rng);
+                }
+            }
+        }
+    }
+
+    fn mean_comp(&self, worker: usize) -> Option<f64> {
+        self.comp.get(worker).map(ShiftedExp::mean)
+    }
+
+    fn mean_comm(&self, worker: usize) -> Option<f64> {
+        self.comm.get(worker).map(ShiftedExp::mean)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::util::stats::RunningStats;
-    
+
 
     #[test]
     fn sample_mean_matches_analytic() {
@@ -151,6 +225,45 @@ mod tests {
     #[should_panic(expected = "rate must be positive")]
     fn rejects_bad_rate() {
         ShiftedExp::new(0.0, 0.0);
+    }
+
+    #[test]
+    fn per_worker_model_respects_parameters() {
+        let m = PerWorkerShiftedExp::new(
+            vec![ShiftedExp::new(0.1, 10.0), ShiftedExp::new(0.4, 2.0)],
+            vec![ShiftedExp::new(0.3, 5.0), ShiftedExp::new(0.3, 5.0)],
+            "fitted/shifted-exp",
+        );
+        assert!(m.name().contains("fitted/shifted-exp"));
+        assert_eq!(m.mean_comp(0), Some(0.2));
+        assert_eq!(m.mean_comp(1), Some(0.9));
+        let mut rng = Rng::seed_from_u64(5);
+        let mut acc = RunningStats::new();
+        for _ in 0..5000 {
+            let s = m.sample(2, 2, &mut rng);
+            assert!(s.comp(0, 0) >= 0.1 && s.comp(1, 1) >= 0.4, "shift floors");
+            acc.push(s.comp(1, 0));
+        }
+        assert!((acc.mean() - 0.9).abs() < 6.0 * acc.std_err());
+    }
+
+    #[test]
+    fn per_worker_batch_matches_sequential() {
+        let m = PerWorkerShiftedExp::new(
+            vec![ShiftedExp::new(0.1, 4.0); 3],
+            vec![ShiftedExp::new(0.2, 3.0); 3],
+            "fitted/shifted-exp",
+        );
+        let (rounds, n, r) = (5usize, 3usize, 2usize);
+        let mut rng_a = Rng::seed_from_u64(0xFEED);
+        let mut rng_b = Rng::seed_from_u64(0xFEED);
+        let batch = m.sample_batch(rounds, n, r, &mut rng_a);
+        let mut tmp = DelaySample::zeros(n, r);
+        for b in 0..rounds {
+            m.sample_into(&mut tmp, &mut rng_b);
+            assert_eq!(batch.comp_round(b), tmp.comp_flat(), "b={b}");
+            assert_eq!(batch.comm_round(b), tmp.comm_flat(), "b={b}");
+        }
     }
 
     #[test]

@@ -22,7 +22,7 @@ pub mod truncated_gaussian;
 
 pub use correlated::WorkerCorrelated;
 pub use empirical::{Ec2LikeModel, EmpiricalModel, Trace};
-pub use exponential::ShiftedExponential;
+pub use exponential::{PerWorkerShiftedExp, ShiftedExponential};
 pub use scaled::Scaled;
 pub use truncated_gaussian::{TruncatedGaussian, TruncatedGaussianModel};
 

@@ -53,7 +53,8 @@ impl Default for Options {
 }
 
 impl Options {
-    fn write(&self, table: &Table, name: &str) -> Result<()> {
+    /// Write a table to the configured output dir (no-op when `--no-out`).
+    pub fn write(&self, table: &Table, name: &str) -> Result<()> {
         if let Some(dir) = &self.out_dir {
             let paths = table.write(dir, name)?;
             for p in paths {
@@ -418,6 +419,7 @@ pub fn adaptive_shift_table(opts: &Options) -> Result<Table> {
             },
             &model,
             None,
+            None,
         )?;
         outcomes.push((scheme, policy, out));
     }
@@ -586,8 +588,8 @@ pub struct E2eConfig {
     /// the scheme to execute (`CS | SS | RA | GC(s) | GCH(a,b) | PC |
     /// PCMM`) — resolved through the registry, no hardcoded scheduler
     pub scheme: SchemeId,
-    /// round-boundary re-planning policy
-    /// (`static | order | load | alloc-group | alloc-random`)
+    /// round-boundary re-planning policy (`static | order | order@pQQ
+    /// | load | load-rate | alloc-group | alloc-random`)
     pub policy: PolicyKind,
     pub profile: String,
     pub use_pjrt: bool,

@@ -41,9 +41,15 @@
 //!   testbed substitute) doing real compute over a real wire protocol;
 //! * [`adaptive`] — online per-worker delay estimation (EWMA +
 //!   streaming quantiles) and round-by-round re-planning policies that
-//!   re-rank the worker order, re-split per-worker flush sizes, or swap
-//!   the task allocation — on the Monte-Carlo engines and the live
-//!   cluster alike;
+//!   re-rank the worker order (by EWMA mean or empirical p95),
+//!   re-split per-worker flush sizes (rank ramp or service-rate
+//!   proportional), or swap the task allocation — on the Monte-Carlo
+//!   engines and the live cluster alike;
+//! * [`trace`] — the record → fit → replay loop: a canonical delay
+//!   trace format (JSONL + binary) captured from the live cluster and
+//!   the simulator, per-worker model fitting with KS diagnostics, and
+//!   bit-reproducible offline replay of the scheme × policy matrix
+//!   against measured delays — the calibrated digital twin of a fleet;
 //! * [`harness`] / [`report`] / [`metrics`] — experiment sweeps that
 //!   regenerate every table and figure of the paper's evaluation.
 //!
@@ -69,6 +75,7 @@ pub mod runtime;
 pub mod scheduler;
 pub mod scheme;
 pub mod sim;
+pub mod trace;
 pub mod util;
 
 pub use scheduler::ToMatrix;

@@ -11,9 +11,14 @@
 //! straggler sim   --n 16 --r 4 --k 16 [--model scenario1|scenario2|ec2|exp]
 //!                 [--schemes CS,SS,GC2,GCH(4,1),LB] [--ingest 0.15]
 //!                 [--policy order [--shift 250 --rotate 5]]  # re-planning arm
+//!                 [--record t.jsonl]            # censored-slot trace capture
+//!                 [--from-trace t.jsonl [--replay empirical|tg|exp]]
 //! straggler train --scheme CS|SS|RA|GC(s)|GCH(a,b)|PC|PCMM
-//!                 [--policy static|order|load|alloc-group|alloc-random]
-//!                 [--rounds 300] [--k 8] [--no-pjrt]  # e2e distributed DGD
+//!                 [--policy static|order|order@p95|load|load-rate|alloc-group|alloc-random]
+//!                 [--rounds 300] [--k 8] [--no-pjrt] [--record t.jsonl]
+//! straggler trace record --out-trace t.jsonl [--cluster]  # record → fit → replay
+//! straggler trace fit    --trace t.jsonl        # per-worker fits + KS + tiers
+//! straggler trace replay --trace t.jsonl        # scheme × policy matrix + digest
 //! straggler adaptive [--trials N]               # shifting-straggler table
 //! straggler all   [--trials N]                  # every figure + table
 //! ```
@@ -32,6 +37,9 @@ use straggler_sched::delay::{
 use straggler_sched::harness::{self, EvalPoint, Options};
 use straggler_sched::report::Table;
 use straggler_sched::scheme::{SchemeId, SchemeRegistry};
+use straggler_sched::trace::{
+    fit_traces, replay, ReplayConfig, ReplaySource, TraceRecorder, TraceStore,
+};
 use straggler_sched::util::cli::Args;
 
 fn main() {
@@ -67,9 +75,256 @@ fn build_model(name: &str, n: usize, seed: u64) -> Result<Box<dyn DelayModel>> {
     })
 }
 
+/// Recording length shared by every trace-capture path: an explicit
+/// `--rounds` wins, else an explicit `--trials`, else the path's small
+/// default — a fit needs a few hundred rounds, not the 20k-trial
+/// estimation default (`n·r` events per round add up fast).
+fn record_rounds(args: &Args, opts: &Options, default: usize) -> Result<usize> {
+    match args.str_opt("rounds") {
+        Some(_) => args.usize_or("rounds", default),
+        None if args.str_opt("trials").is_some() => Ok(opts.trials),
+        None => Ok(default),
+    }
+}
+
+/// Parse a comma-separated policy list (`static,order,load`) through
+/// [`PolicyKind::parse`].
+fn parse_policies(list: &str) -> Result<Vec<PolicyKind>> {
+    list.split(',')
+        .map(|p| PolicyKind::parse(p).map_err(|e| anyhow::anyhow!("policy {p:?}: {e}")))
+        .collect()
+}
+
+/// Shared body of `straggler trace replay` and `sim --from-trace`:
+/// build the replay config from flags, run the scheme × policy matrix
+/// against the trace's delays, print the table + determinism digest.
+fn run_trace_replay(args: &Args, opts: &Options, store: &TraceStore, name: &str) -> Result<()> {
+    let n = store.n_workers();
+    if n == 0 {
+        bail!("trace {name} holds no events");
+    }
+    let trials = if args.str_opt("trials").is_none() {
+        5_000
+    } else {
+        opts.trials
+    };
+    let mut cfg = ReplayConfig::matrix(n, trials, opts.seed);
+    cfg.r = args.usize_or("r", n)?;
+    cfg.k = args.usize_or("k", n)?;
+    cfg.ingest_ms = args.f64_or("ingest", 0.0)?;
+    if cfg.ingest_ms.is_nan() || cfg.ingest_ms < 0.0 {
+        bail!("--ingest must be a non-negative ms/message cost, got {}", cfg.ingest_ms);
+    }
+    if let Some(list) = args.str_opt("schemes") {
+        cfg.schemes = SchemeRegistry::parse_list(&list)?;
+    } else {
+        cfg.schemes = straggler_sched::trace::default_matrix_schemes(n, cfg.r, cfg.k);
+    }
+    if let Some(list) = args.str_opt("policies") {
+        cfg.policies = parse_policies(&list)?;
+    }
+    if let Some(source) = args.str_opt("replay") {
+        cfg.source = ReplaySource::parse(&source)
+            .map_err(|e| anyhow::anyhow!("--replay {source:?}: {e}"))?;
+    }
+    let out = replay(store, &cfg)?;
+    let mut t = Table::new(
+        &format!(
+            "trace replay ({}): n = {n}, r = {}, k = {}, {} rounds/cell, \
+             ingest {} ms — {} events from {name}",
+            out.model_name,
+            cfg.r,
+            cfg.k,
+            cfg.trials,
+            cfg.ingest_ms,
+            store.len()
+        ),
+        &["scheme", "policy", "mean", "std_err", "p95", "replans"],
+    );
+    for cell in &out.cells {
+        t.push_row(vec![
+            cell.scheme.to_string(),
+            cell.policy.to_string(),
+            Table::fmt(cell.estimate.mean),
+            Table::fmt(cell.estimate.std_err),
+            Table::fmt(cell.estimate.p95),
+            cell.replans.to_string(),
+        ]);
+    }
+    t.print();
+    for (scheme, policy, reason) in &out.skipped {
+        println!("  skipped {scheme} × {policy}: {reason}");
+    }
+    println!("  completion digest: {:016x} (pinned-seed determinism handle)", out.digest);
+    opts.write(&t, "trace_replay")?;
+    Ok(())
+}
+
+/// `straggler trace record|fit|replay` — the record → fit → replay loop
+/// of the trace subsystem (EXPERIMENTS.md §Traces).
+fn run_trace(args: &Args, opts: &Options) -> Result<()> {
+    let action = args.action.clone().unwrap_or_default();
+    match action.as_str() {
+        "record" => {
+            let out_path = args
+                .str_opt("out-trace")
+                .ok_or_else(|| anyhow::anyhow!("`trace record` needs --out-trace FILE"))?;
+            let path = std::path::PathBuf::from(&out_path);
+            let store = if args.flag("cluster") {
+                // real sockets + compute; the master's trace tap records
+                // every Result frame
+                if args.str_opt("model").is_some() {
+                    bail!(
+                        "--model shapes the *simulated* recorder; the cluster records \
+                         real measured delays (drop --model or drop --cluster)"
+                    );
+                }
+                let scheme_name = args.str_or("scheme", "GC(2)");
+                let scheme = SchemeRegistry::parse(&scheme_name)?;
+                let policy = PolicyKind::parse(&args.str_or("policy", "static"))?;
+                let n = args.usize_or("n", 6)?;
+                let cfg = harness::E2eConfig {
+                    n,
+                    d: args.usize_or("d", 64)?,
+                    n_samples: args.usize_or("samples", n * 16)?,
+                    r: args.usize_or("r", 4)?,
+                    k: args.usize_or("k", n)?,
+                    rounds: record_rounds(args, opts, 150)?,
+                    eta: 0.01,
+                    scheme,
+                    policy,
+                    profile: "trace".into(),
+                    use_pjrt: false,
+                    seed: opts.seed,
+                    listen: None,
+                    spawn_workers: true,
+                };
+                let quiet = Options {
+                    out_dir: None,
+                    ..opts.clone()
+                };
+                let (report, _) = harness::run_e2e(cfg, &quiet)?;
+                report.trace
+            } else {
+                // simulated: censored slots from the single-stream arm
+                let n = args.usize_or("n", 8)?;
+                let r = args.usize_or("r", 4)?;
+                let k = args.usize_or("k", n)?;
+                let rounds = record_rounds(args, opts, 200)?;
+                let scheme_name = args.str_or("scheme", "GC(2)");
+                let scheme = SchemeRegistry::parse(&scheme_name)?;
+                let policy = PolicyKind::parse(&args.str_or("policy", "static"))?;
+                let model_name = args.str_or("model", "ec2");
+                let model = build_model(&model_name, n, opts.seed)?;
+                let mut rec = TraceRecorder::with_fleet(scheme.to_string(), n);
+                let out = run_policy_rounds(
+                    &PolicyRunConfig {
+                        scheme,
+                        policy,
+                        n,
+                        r,
+                        k,
+                        rounds,
+                        ingest_ms: 0.0,
+                        seed: opts.seed,
+                    },
+                    &PerRound(model.as_ref()),
+                    None,
+                    Some(&mut rec),
+                )?;
+                println!(
+                    "  recorded {} censored-slot events over {rounds} rounds \
+                     (mean completion {:.3} ms)",
+                    rec.len(),
+                    out.estimate.mean
+                );
+                rec.into_store()
+            };
+            store.save(&path)?;
+            println!(
+                "  wrote {} ({} events, {} workers, {} rounds, schemes {:?})",
+                path.display(),
+                store.len(),
+                store.n_workers(),
+                store.rounds(),
+                store.schemes()
+            );
+        }
+        "fit" => {
+            let path = args
+                .str_opt("trace")
+                .ok_or_else(|| anyhow::anyhow!("`trace fit` needs --trace FILE"))?;
+            let store = TraceStore::load(std::path::Path::new(&path))?;
+            let fit = fit_traces(&store)?;
+            let mut t = Table::new(
+                &format!(
+                    "trace fit: {} events, {} workers, {} rounds from {path}",
+                    store.len(),
+                    fit.n(),
+                    store.rounds()
+                ),
+                &[
+                    "worker", "ch", "samples", "mean", "exp shift", "exp rate", "exp KS",
+                    "tg μ", "tg σ", "tg KS", "best", "tier",
+                ],
+            );
+            for w in &fit.workers {
+                let tier = if fit.tier_of[w.worker] == 0 { "fast" } else { "slow" };
+                for (ch, c) in [("comp", &w.comp), ("comm", &w.comm)] {
+                    t.push_row(vec![
+                        w.worker.to_string(),
+                        ch.into(),
+                        c.samples.to_string(),
+                        Table::fmt(c.mean_ms),
+                        Table::fmt(c.exp.dist.shift),
+                        Table::fmt(c.exp.dist.rate),
+                        format!("{:.4}", c.exp.ks),
+                        Table::fmt(c.tg.dist.mu),
+                        Table::fmt(c.tg.dist.sigma),
+                        format!("{:.4}", c.tg.ks),
+                        c.best().to_string(),
+                        tier.into(),
+                    ]);
+                }
+            }
+            t.print();
+            if let (Some(fast), Some(slow)) = (fit.tier_mean_ms(0), fit.tier_mean_ms(1)) {
+                println!(
+                    "  tiers: {} fast (mean {:.3} ms/task) vs {} slow (mean {:.3} ms/task, \
+                     {:.2}× slower)",
+                    fit.fast_workers().len(),
+                    fast,
+                    fit.slow_workers().len(),
+                    slow,
+                    slow / fast
+                );
+            } else {
+                println!("  tiers: fleet is effectively homogeneous (single tier)");
+            }
+            opts.write(&t, "trace_fit")?;
+        }
+        "replay" => {
+            let path = args
+                .str_opt("trace")
+                .ok_or_else(|| anyhow::anyhow!("`trace replay` needs --trace FILE"))?;
+            let store = TraceStore::load(std::path::Path::new(&path))?;
+            run_trace_replay(args, opts, &store, &path)?;
+        }
+        other => bail!(
+            "unknown trace action {other:?} — spell it `straggler trace record|fit|replay` \
+             (record: --out-trace FILE [--cluster] [--scheme S] [--rounds N]; \
+             fit/replay: --trace FILE)"
+        ),
+    }
+    Ok(())
+}
+
 fn run() -> Result<()> {
     let args = Args::from_env()?;
     let sub = args.subcommand.clone().unwrap_or_else(|| "help".into());
+    if let Some(action) = args.action.as_ref().filter(|_| sub != "trace") {
+        bail!("unexpected positional argument {action:?} after `{sub}`");
+    }
     match sub.as_str() {
         "table1" => {
             let opts = options(&args)?;
@@ -123,6 +378,24 @@ fn run() -> Result<()> {
         }
         "sim" => {
             let opts = options(&args)?;
+            if let Some(path) = args.str_opt("from-trace") {
+                // measured-delay replay: the fleet comes from the trace
+                // (record → fit → replay, EXPERIMENTS.md §Traces)
+                if args.str_opt("model").is_some() || args.str_opt("n").is_some() {
+                    bail!(
+                        "--from-trace replays the trace's own fleet; drop --model/--n \
+                         (shape the matrix with --r/--k/--schemes/--policies/--replay \
+                         empirical|tg|exp instead)"
+                    );
+                }
+                let store = TraceStore::load(std::path::Path::new(&path))?;
+                run_trace_replay(&args, &opts, &store, &path)?;
+                let unknown = args.unknown_keys();
+                if !unknown.is_empty() {
+                    bail!("unknown arguments: {}", unknown.join(", "));
+                }
+                return Ok(());
+            }
             let n = args.usize_or("n", 16)?;
             let r = args.usize_or("r", 4)?;
             let k = args.usize_or("k", n)?;
@@ -151,6 +424,60 @@ fn run() -> Result<()> {
             let ingest = args.f64_or("ingest", 0.0)?;
             if ingest.is_nan() || ingest < 0.0 {
                 bail!("--ingest must be a non-negative ms/message cost, got {ingest}");
+            }
+            if let Some(rec_path) = args.str_opt("record") {
+                // censored-slot trace emission: a single-stream run of
+                // ONE scheme, recorded through the simulator tap
+                let scheme = match args.str_opt("schemes") {
+                    None => SchemeId::Cs,
+                    Some(_) if schemes.len() == 1 => schemes[0],
+                    Some(list) => bail!(
+                        "--record captures one scheme's trace at a time; \
+                         got --schemes {list:?} (pick one)"
+                    ),
+                };
+                let policy = match args.str_opt("policy") {
+                    None => PolicyKind::Static,
+                    Some(p) => PolicyKind::parse(&p)
+                        .map_err(|e| anyhow::anyhow!("--policy {p:?}: {e}"))?,
+                };
+                let rounds = record_rounds(&args, &opts, 500)?;
+                let mut rec = TraceRecorder::with_fleet(scheme.to_string(), n);
+                let out = run_policy_rounds(
+                    &PolicyRunConfig {
+                        scheme,
+                        policy,
+                        n,
+                        r,
+                        k,
+                        rounds,
+                        ingest_ms: ingest,
+                        seed: opts.seed,
+                    },
+                    &PerRound(model.as_ref()),
+                    None,
+                    Some(&mut rec),
+                )?;
+                let store = rec.into_store();
+                let path = std::path::PathBuf::from(&rec_path);
+                store.save(&path)?;
+                println!(
+                    "  {scheme} under {policy}: mean completion {:.3} ms over {rounds} rounds",
+                    out.estimate.mean
+                );
+                println!(
+                    "  wrote {} ({} censored-slot events) — next: \
+                     `straggler trace fit --trace {}` or `sim --from-trace {}`",
+                    path.display(),
+                    store.len(),
+                    path.display(),
+                    path.display()
+                );
+                let unknown = args.unknown_keys();
+                if !unknown.is_empty() {
+                    bail!("unknown arguments: {}", unknown.join(", "));
+                }
+                return Ok(());
             }
             if let Some(pname) = args.str_opt("policy") {
                 // re-planning arm: every scheme runs twice on the same
@@ -208,6 +535,7 @@ fn run() -> Result<()> {
                                 seed: opts.seed,
                             },
                             round_model,
+                            None,
                             None,
                         )
                     };
@@ -368,6 +696,19 @@ fn run() -> Result<()> {
                 report.final_loss,
                 report.mean_wire_bytes() / 1024.0
             );
+            if let Some(rec_path) = args.str_opt("record") {
+                // the master's per-Result-frame trace (real socket
+                // timings) — feeds `trace fit` / `sim --from-trace`
+                let path = std::path::PathBuf::from(&rec_path);
+                report.trace.save(&path)?;
+                println!(
+                    "  wrote {} ({} measured events) — next: \
+                     `straggler trace fit --trace {}`",
+                    path.display(),
+                    report.trace.len(),
+                    path.display()
+                );
+            }
             if !report.worker_estimates.is_empty() {
                 let replans = report.rounds.iter().filter(|l| l.replanned).count();
                 println!(
@@ -385,6 +726,10 @@ fn run() -> Result<()> {
         "adaptive" => {
             let opts = options(&args)?;
             harness::adaptive_shift_table(&opts)?;
+        }
+        "trace" => {
+            let opts = options(&args)?;
+            run_trace(&args, &opts)?;
         }
         _ => {
             print!("{HELP}");
@@ -414,7 +759,14 @@ subcommands:
                     re-planning arm, each scheme frozen vs under P
                     (--shift R rotates the worker delay profiles every
                     R rounds by --rotate positions — the
-                    shifting-straggler scenario)
+                    shifting-straggler scenario);
+                    --record FILE captures one scheme's censored-slot
+                    delay trace (--rounds N, default 500);
+                    --from-trace FILE replays a recorded
+                    trace instead of a --model (the fleet size comes
+                    from the trace; --replay empirical|tg|exp picks
+                    bootstrap vs fitted substrates, --policies
+                    static,order,load shapes the matrix)
   run               run a JSON-described sweep: --config exp.json
                     (optional "policy" field runs the re-planning arm)
   ablations         design-choice studies (ingest, correlation, searched
@@ -430,10 +782,27 @@ subcommands:
                     GCH(a,b) ramps per-worker flush sizes, snapped to
                     divisors of max(a,b) on the cluster; PC/PCMM decode
                     the coded gradient on the master, k = n required)
-                    --policy static|order|load|alloc-group|alloc-random
-                    re-plans the assignment between rounds from measured
-                    per-worker delays (uncoded schemes only)
+                    --policy static|order|order@p95|load|load-rate|
+                    alloc-group|alloc-random re-plans the assignment
+                    between rounds from measured per-worker delays
+                    (uncoded schemes only); --record FILE saves the
+                    master's measured delay trace
                     (--listen ADDR --external for multi-process mode)
+  trace             the record → fit → replay loop (digital-twin
+                    calibration, EXPERIMENTS.md §Traces):
+                    trace record --out-trace FILE [--cluster]
+                      captures a delay trace — simulated censored slots
+                      by default (--scheme/--policy/--model/--n/--r/--k/
+                      --rounds), real master-measured Result frames
+                      with --cluster;
+                    trace fit --trace FILE
+                      per-worker shifted-exp MLE + truncated-Gaussian
+                      moment fits, KS goodness-of-fit, fast/slow tiers;
+                    trace replay --trace FILE
+                      runs the scheme × policy matrix on the traced
+                      fleet (--replay empirical|tg|exp, --schemes,
+                      --policies, --trials, --ingest) and prints the
+                      pinned-seed completion digest
   worker            external worker process: --connect HOST:PORT
                     [--oracle] [--inject ec2 --n N --id I]
   all               regenerate every table and figure
@@ -441,7 +810,13 @@ subcommands:
 common flags: --trials N  --seed S  --out DIR  --no-out  --cluster
 scheme grammar (sim/run/train): CS SS RA PC PCMM LB GC(s)|GCs GCH(a,b)
   — case-insensitive; malformed spellings fail with the expected form
-policy grammar (sim/run/train): static order load alloc-group alloc-random
-  — order/load re-plan from EWMA delay estimates; alloc-* are the
-  Behrouzi-Far & Soljanin allocation variants (alloc-group needs r | n)
+policy grammar (sim/run/train): static order order@pQQ load load-rate
+  alloc-group alloc-random
+  — order/load re-plan from EWMA delay estimates; order@pQQ ranks by
+  the empirical QQ-th percentile (heavy-tailed fleets, e.g. order@p95);
+  load-rate sizes flushes by estimated service-rate ratios instead of
+  the rank ramp; alloc-* are the Behrouzi-Far & Soljanin allocation
+  variants (alloc-group needs r | n)
+trace files: versioned JSONL (default) or compact binary (.bin), one
+  event per delivered message — see EXPERIMENTS.md §Traces
 "#;

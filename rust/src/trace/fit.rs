@@ -1,0 +1,401 @@
+//! Per-worker delay-model fitting from a recorded [`TraceStore`] — the
+//! "fit" leg of the record → fit → replay loop.
+//!
+//! Two parametric families are fitted per worker and per channel
+//! (computation, communication), both against the per-task /
+//! per-message millisecond samples the store extracts:
+//!
+//! * **shifted exponential** (the coded-computation workhorse,
+//!   `T = c + Exp(λ)`) by maximum likelihood: `ĉ = min(x)`,
+//!   `λ̂ = 1 / (mean(x) − min(x))` — the exact MLE, whose shift is
+//!   biased high by `O(1/(λn))` (the minimum of `n` exponentials);
+//! * **truncated Gaussian** (the paper's eq. 66 model) by the same
+//!   moment fit the Fig. 3 overlay uses
+//!   ([`crate::metrics::fit_truncated_gaussian`]): `μ̂ = mean`,
+//!   `σ̂ = sample std`, support at the observed extremes.  Under tight
+//!   truncation the sample std *understates* the latent `σ` (variance
+//!   of a ±1σ-truncated normal is `0.29σ²`), so `σ̂` is the dispersion
+//!   of the truncated law, not the latent parameter — which is exactly
+//!   what replay needs.
+//!
+//! Each fit carries a **Kolmogorov–Smirnov distance** against the
+//! empirical CDF (`D = sup_t |F̂(t) − F_fit(t)|`, evaluated at the
+//! sample points where the sup is attained), so `straggler trace fit`
+//! can report which family describes each worker and how well; the
+//! family with the smaller KS is the per-channel [`ChannelFit::best`].
+//!
+//! [`fit_traces`] additionally groups the fleet into **fast/slow
+//! tiers** by deterministic 1-D 2-means over the per-worker mean
+//! computation delay — the heterogeneity summary that picks GCH-style
+//! layouts and seeds the `load`/`load-rate` policies with a prior.
+
+use anyhow::{bail, Result};
+
+use crate::delay::exponential::ShiftedExp;
+use crate::delay::{TruncatedGaussian, TruncatedGaussianModel};
+use crate::metrics::fit_truncated_gaussian;
+
+use super::record::TraceStore;
+
+/// Kolmogorov–Smirnov distance between the empirical CDF of `samples`
+/// and a fitted CDF.  `samples` need not be sorted.
+pub fn ks_distance(samples: &[f64], cdf: impl Fn(f64) -> f64) -> f64 {
+    assert!(!samples.is_empty(), "KS distance of an empty sample");
+    let mut sorted = samples.to_vec();
+    sorted.sort_unstable_by(f64::total_cmp);
+    let n = sorted.len() as f64;
+    let mut d = 0.0f64;
+    for (i, &x) in sorted.iter().enumerate() {
+        let f = cdf(x);
+        // the empirical CDF steps from i/n to (i+1)/n at x: the sup is
+        // attained just below or at each sample point
+        d = d.max((f - i as f64 / n).abs());
+        d = d.max(((i + 1) as f64 / n - f).abs());
+    }
+    d
+}
+
+/// A fitted shifted exponential plus its goodness of fit.
+#[derive(Debug, Clone)]
+pub struct ShiftedExpFit {
+    pub dist: ShiftedExp,
+    /// KS distance against the empirical CDF.
+    pub ks: f64,
+}
+
+/// MLE fit of `shift + Exp(rate)` to millisecond samples.
+pub fn fit_shifted_exp(samples: &[f64]) -> ShiftedExpFit {
+    assert!(samples.len() >= 2, "need ≥ 2 samples to fit");
+    let min = samples.iter().copied().fold(f64::INFINITY, f64::min);
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    // a degenerate (constant) stream has mean == min; clamp the rate so
+    // the fitted CDF stays a step at the shift instead of NaN
+    let rate = 1.0 / (mean - min).max(1e-12);
+    let dist = ShiftedExp::new(min, rate);
+    let ks = ks_distance(samples, |t| 1.0 - dist.sf(t));
+    ShiftedExpFit { dist, ks }
+}
+
+/// A fitted truncated Gaussian plus its goodness of fit.
+#[derive(Debug, Clone)]
+pub struct TruncatedGaussianFit {
+    pub dist: TruncatedGaussian,
+    pub ks: f64,
+}
+
+/// Moment fit of the paper's eq. 66 model (Fig. 3 overlay form).
+pub fn fit_truncated_gaussian_ks(samples: &[f64]) -> TruncatedGaussianFit {
+    let dist = fit_truncated_gaussian(samples);
+    let ks = ks_distance(samples, |t| dist.cdf(t));
+    TruncatedGaussianFit { dist, ks }
+}
+
+/// Which fitted family describes a channel better (smaller KS).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FitFamily {
+    ShiftedExp,
+    TruncatedGaussian,
+}
+
+impl std::fmt::Display for FitFamily {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            FitFamily::ShiftedExp => "shifted-exp",
+            FitFamily::TruncatedGaussian => "trunc-gauss",
+        })
+    }
+}
+
+/// Both fits of one delay channel (comp or comm) of one worker.
+#[derive(Debug, Clone)]
+pub struct ChannelFit {
+    /// Observations the fits were computed from.
+    pub samples: usize,
+    /// Sample mean (ms) — also the tiering feature for comp channels.
+    pub mean_ms: f64,
+    pub exp: ShiftedExpFit,
+    pub tg: TruncatedGaussianFit,
+}
+
+impl ChannelFit {
+    pub fn fit(samples: &[f64]) -> Self {
+        assert!(samples.len() >= 2, "need ≥ 2 samples to fit");
+        Self {
+            samples: samples.len(),
+            mean_ms: samples.iter().sum::<f64>() / samples.len() as f64,
+            exp: fit_shifted_exp(samples),
+            tg: fit_truncated_gaussian_ks(samples),
+        }
+    }
+
+    /// The better-fitting family by KS distance (ties → the paper's
+    /// truncated Gaussian).
+    pub fn best(&self) -> FitFamily {
+        if self.exp.ks < self.tg.ks {
+            FitFamily::ShiftedExp
+        } else {
+            FitFamily::TruncatedGaussian
+        }
+    }
+
+    /// KS distance of the better family.
+    pub fn best_ks(&self) -> f64 {
+        self.exp.ks.min(self.tg.ks)
+    }
+}
+
+/// One worker's fitted delay model.
+#[derive(Debug, Clone)]
+pub struct WorkerFit {
+    pub worker: usize,
+    pub comp: ChannelFit,
+    pub comm: ChannelFit,
+}
+
+/// Fleet-wide fit: per-worker models plus the fast/slow tier grouping.
+#[derive(Debug, Clone)]
+pub struct FleetFit {
+    pub workers: Vec<WorkerFit>,
+    /// `tier_of[w] ∈ {0 (fast), 1 (slow)}` from 2-means over the
+    /// per-worker mean computation delay; all-0 when the fleet is
+    /// effectively homogeneous (tier means within 10 %).
+    pub tier_of: Vec<usize>,
+}
+
+impl FleetFit {
+    pub fn n(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn fast_workers(&self) -> Vec<usize> {
+        (0..self.n()).filter(|&w| self.tier_of[w] == 0).collect()
+    }
+
+    pub fn slow_workers(&self) -> Vec<usize> {
+        (0..self.n()).filter(|&w| self.tier_of[w] == 1).collect()
+    }
+
+    /// Mean per-task computation delay of each tier (ms); `None` for an
+    /// empty tier.
+    pub fn tier_mean_ms(&self, tier: usize) -> Option<f64> {
+        let members: Vec<f64> = self
+            .workers
+            .iter()
+            .zip(&self.tier_of)
+            .filter(|(_, &t)| t == tier)
+            .map(|(w, _)| w.comp.mean_ms)
+            .collect();
+        if members.is_empty() {
+            None
+        } else {
+            Some(members.iter().sum::<f64>() / members.len() as f64)
+        }
+    }
+
+    /// The fitted truncated-Gaussian fleet model (per-worker eq. 66
+    /// parameters) — a [`crate::delay::DelayModel`] ready for replay.
+    pub fn truncated_gaussian_model(&self) -> TruncatedGaussianModel {
+        TruncatedGaussianModel::new(
+            self.workers.iter().map(|w| w.comp.tg.dist.clone()).collect(),
+            self.workers.iter().map(|w| w.comm.tg.dist.clone()).collect(),
+            "fitted/trunc-gauss",
+        )
+    }
+
+    /// The fitted per-worker shifted-exponential fleet model.
+    pub fn shifted_exp_model(&self) -> crate::delay::PerWorkerShiftedExp {
+        crate::delay::PerWorkerShiftedExp::new(
+            self.workers.iter().map(|w| w.comp.exp.dist).collect(),
+            self.workers.iter().map(|w| w.comm.exp.dist).collect(),
+            "fitted/shifted-exp",
+        )
+    }
+}
+
+/// Deterministic 1-D 2-means over per-worker means: centers start at
+/// the extremes, Lloyd iterations until stable.  Returns all-0 when
+/// the converged centers sit within 10 % of each other (no meaningful
+/// heterogeneity to act on).
+fn two_tier(means: &[f64]) -> Vec<usize> {
+    let n = means.len();
+    let lo = means.iter().copied().fold(f64::INFINITY, f64::min);
+    let hi = means.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    if !(hi > lo) {
+        return vec![0; n];
+    }
+    let (mut c0, mut c1) = (lo, hi);
+    let mut assign = vec![0usize; n];
+    for _ in 0..64 {
+        let mut changed = false;
+        for (w, &m) in means.iter().enumerate() {
+            let t = usize::from((m - c0).abs() > (m - c1).abs());
+            if assign[w] != t {
+                assign[w] = t;
+                changed = true;
+            }
+        }
+        let mean_of = |tier: usize, fallback: f64| {
+            let (mut sum, mut cnt) = (0.0, 0usize);
+            for (w, &m) in means.iter().enumerate() {
+                if assign[w] == tier {
+                    sum += m;
+                    cnt += 1;
+                }
+            }
+            if cnt == 0 {
+                fallback
+            } else {
+                sum / cnt as f64
+            }
+        };
+        let (n0, n1) = (mean_of(0, c0), mean_of(1, c1));
+        if !changed && n0 == c0 && n1 == c1 {
+            break;
+        }
+        c0 = n0;
+        c1 = n1;
+    }
+    // homogeneous fleet: collapse to a single tier
+    if c1 <= c0 * 1.1 {
+        return vec![0; n];
+    }
+    assign
+}
+
+/// Fit every worker's delay channels from a trace.  Every worker in
+/// `[0, n_workers)` must have ≥ 2 computation and ≥ 2 communication
+/// observations (fitting a worker the trace never saw would silently
+/// invent a model).
+pub fn fit_traces(store: &TraceStore) -> Result<FleetFit> {
+    let n = store.n_workers();
+    if n == 0 {
+        bail!("cannot fit an empty trace");
+    }
+    // one pass over the events, not one per worker per channel
+    let (comp_all, comm_all) = store.per_worker_ms();
+    let mut workers = Vec::with_capacity(n);
+    for (w, (comp, comm)) in comp_all.iter().zip(&comm_all).enumerate() {
+        if comp.len() < 2 || comm.len() < 2 {
+            bail!(
+                "worker {w} has too few observations to fit ({} comp, {} comm; need ≥ 2 each) \
+                 — record more rounds or window differently",
+                comp.len(),
+                comm.len()
+            );
+        }
+        workers.push(WorkerFit {
+            worker: w,
+            comp: ChannelFit::fit(comp),
+            comm: ChannelFit::fit(comm),
+        });
+    }
+    let means: Vec<f64> = workers.iter().map(|w| w.comp.mean_ms).collect();
+    let tier_of = two_tier(&means);
+    Ok(FleetFit { workers, tier_of })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::record::TraceRecorder;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn ks_of_perfect_cdf_is_small_and_of_wrong_cdf_is_large() {
+        let xs: Vec<f64> = (0..1000).map(|i| (i as f64 + 0.5) / 1000.0).collect();
+        // uniform samples against the uniform CDF: D ≈ 1/(2n)
+        let d = ks_distance(&xs, |t| t.clamp(0.0, 1.0));
+        assert!(d < 2.0 / 1000.0, "{d}");
+        // against a point mass at 0 the distance is ~1
+        let d_bad = ks_distance(&xs, |_| 1.0);
+        assert!(d_bad > 0.9, "{d_bad}");
+    }
+
+    #[test]
+    fn shifted_exp_mle_recovers_parameters() {
+        let truth = ShiftedExp::new(0.2, 4.0);
+        let mut rng = Rng::seed_from_u64(7);
+        let xs: Vec<f64> = (0..4000).map(|_| truth.sample(&mut rng)).collect();
+        let fit = fit_shifted_exp(&xs);
+        assert!((fit.dist.shift - 0.2).abs() < 0.01, "shift {}", fit.dist.shift);
+        assert!((fit.dist.rate - 4.0).abs() / 4.0 < 0.1, "rate {}", fit.dist.rate);
+        assert!(fit.ks < 0.03, "ks {}", fit.ks);
+    }
+
+    #[test]
+    fn family_selection_matches_the_generator() {
+        let mut rng = Rng::seed_from_u64(11);
+        let exp = ShiftedExp::new(0.1, 3.0);
+        let exp_xs: Vec<f64> = (0..3000).map(|_| exp.sample(&mut rng)).collect();
+        let cf = ChannelFit::fit(&exp_xs);
+        assert_eq!(
+            cf.best(),
+            FitFamily::ShiftedExp,
+            "exp data: exp ks {} vs tg ks {}",
+            cf.exp.ks,
+            cf.tg.ks
+        );
+
+        let tg = TruncatedGaussian::symmetric(0.5, 0.2, 0.2);
+        let tg_xs: Vec<f64> = (0..3000).map(|_| tg.sample(&mut rng)).collect();
+        let cf = ChannelFit::fit(&tg_xs);
+        assert_eq!(
+            cf.best(),
+            FitFamily::TruncatedGaussian,
+            "tg data: exp ks {} vs tg ks {}",
+            cf.exp.ks,
+            cf.tg.ks
+        );
+        assert!((cf.tg.dist.mu - 0.5).abs() < 0.02, "mu {}", cf.tg.dist.mu);
+    }
+
+    #[test]
+    fn two_tier_separates_and_collapses() {
+        assert_eq!(two_tier(&[1.0, 1.1, 3.0, 3.2]), vec![0, 0, 1, 1]);
+        assert_eq!(two_tier(&[2.0, 2.01, 1.99, 2.0]), vec![0; 4], "homogeneous");
+        assert_eq!(two_tier(&[5.0]), vec![0]);
+        // order independence of membership
+        assert_eq!(two_tier(&[3.0, 1.0, 3.2, 1.1]), vec![1, 0, 1, 0]);
+    }
+
+    #[test]
+    fn fit_traces_builds_replayable_models() {
+        let mut rec = TraceRecorder::new("CS");
+        let mut rng = Rng::seed_from_u64(3);
+        for round in 0..200 {
+            for w in 0..4usize {
+                let comp = if w < 2 { 0.1 } else { 0.4 } + 0.02 * rng.f64();
+                let comm = 0.5 + 0.1 * rng.f64();
+                rec.push_slot(round, w, 0, comp, comm, false);
+            }
+        }
+        let fit = fit_traces(&rec.into_store()).unwrap();
+        assert_eq!(fit.n(), 4);
+        assert_eq!(fit.fast_workers(), vec![0, 1]);
+        assert_eq!(fit.slow_workers(), vec![2, 3]);
+        assert!(fit.tier_mean_ms(1).unwrap() > 3.0 * fit.tier_mean_ms(0).unwrap());
+        // the fitted models are shaped for the fleet and sample sanely
+        use crate::delay::DelayModel;
+        let tg = fit.truncated_gaussian_model();
+        let ex = fit.shifted_exp_model();
+        let mut r2 = Rng::seed_from_u64(0);
+        for model in [&tg as &dyn DelayModel, &ex] {
+            let s = model.sample(4, 2, &mut r2);
+            for w in 0..4 {
+                for j in 0..2 {
+                    assert!(s.comp(w, j) > 0.0 && s.comp(w, j) < 1.0, "{}", model.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fit_rejects_unobserved_workers() {
+        let mut rec = TraceRecorder::new("CS");
+        rec.push_slot(0, 0, 0, 0.1, 0.5, false);
+        rec.push_slot(1, 0, 0, 0.1, 0.5, false);
+        rec.push_slot(0, 2, 0, 0.1, 0.5, false); // worker 1 never observed
+        rec.push_slot(1, 2, 0, 0.1, 0.5, false);
+        assert!(fit_traces(&rec.into_store()).is_err());
+    }
+}

@@ -1,0 +1,54 @@
+//! Trace subsystem — record → fit → replay, the fifth pillar next to
+//! the engines ([`crate::sim`]), the scheme layer ([`crate::scheme`]),
+//! the cluster data plane ([`crate::coordinator`]) and the adaptive
+//! subsystem ([`crate::adaptive`]).
+//!
+//! The paper's headline results are *measured* on an EC2 cluster and
+//! then explained through a statistical delay model; this module closes
+//! that loop in-repo, turning the codebase into a calibrated digital
+//! twin of a real fleet:
+//!
+//! * [`record`] — a canonical per-event trace format
+//!   ([`TraceEvent`]: worker, round, slot, tasks, compute, comm, wire
+//!   bytes, scheme, replanned-flag; versioned JSONL + compact binary,
+//!   both bit-exact round-trips), a [`TraceStore`] with
+//!   load/merge/filter/windowing, and the [`TraceRecorder`] tap fed by
+//!   the cluster master (real socket timings, one event per `Result`
+//!   frame) and by the simulator (censored slots — only deliveries the
+//!   master saw before round completion, mirroring the adaptive
+//!   estimator's causal view);
+//! * [`fit`] — per-worker model fitting: shifted-exponential MLE and
+//!   truncated-Gaussian moment fits with Kolmogorov–Smirnov
+//!   goodness-of-fit against the empirical CDF, plus fast/slow tier
+//!   grouping of heterogeneous fleets ([`fit_traces`] → [`FleetFit`]);
+//! * [`replay`] — rebuild a delay substrate from the trace
+//!   ([`crate::delay::EmpiricalModel`] bootstrap, or the fitted
+//!   parametric fleets) and run the whole scheme × policy matrix
+//!   against it ([`replay::replay`]), bit-reproducibly under a fixed
+//!   seed with an FNV completion digest as the determinism pin.
+//!
+//! CLI: `straggler trace record|fit|replay`, plus `sim --from-trace`
+//! (replay inline) and `sim --record` / `train --record` (capture).
+//! The committed fixture `rust/tests/fixtures/fleet_trace.jsonl` makes
+//! the loop runnable end-to-end without a cluster; EXPERIMENTS.md
+//! §Traces documents the schema and the fit math.
+//!
+//! Closing the loop this way follows how Ozfatura, Ulukus & Gündüz
+//! (arXiv:2004.04948) treat the communication–computation latency
+//! trade-off on measured fleets and how Egger, Kas Hanna & Bitar
+//! (arXiv:2304.08589) drive adaptive load from estimated straggling
+//! behavior.
+
+pub mod fit;
+pub mod record;
+pub mod replay;
+
+pub use fit::{
+    fit_shifted_exp, fit_traces, fit_truncated_gaussian_ks, ks_distance, ChannelFit, FitFamily,
+    FleetFit, ShiftedExpFit, TruncatedGaussianFit, WorkerFit,
+};
+pub use record::{TraceEvent, TraceRecorder, TraceStore, BINARY_MAGIC, TRACE_FORMAT};
+pub use replay::{
+    default_matrix_schemes, empirical_model, model_from_trace, replay, ReplayCell, ReplayConfig,
+    ReplayOutcome, ReplaySource,
+};

@@ -1,0 +1,725 @@
+//! The canonical trace format: per-event delay records, a versioned
+//! JSONL codec (human-greppable, diff-friendly) and a compact
+//! little-endian binary codec (bulk storage), plus the [`TraceStore`]
+//! container with load/merge/filter/windowing and the [`TraceRecorder`]
+//! tap both execution paths feed.
+//!
+//! One [`TraceEvent`] is one delivered **message**: for the live
+//! cluster that is one `Result` frame (a flush of `tasks` tasks, the
+//! frame's measured `comp_us` and wire delay, and its on-wire size);
+//! for the simulator it is one censored slot (`tasks = 1`, `bytes = 0`
+//! — no wire).  Delays are stored in **seconds** (SI units on disk; the
+//! in-memory engine convention stays milliseconds — the accessors
+//! convert), and `compute_s` always covers the *whole* event, so
+//! per-task attribution divides by `tasks` exactly like
+//! [`crate::adaptive::DelayEstimator::observe_flush`].
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Format tag of the JSONL header line and the binary magic version.
+pub const TRACE_FORMAT: &str = "straggler-trace/v1";
+
+/// Magic prefix of the binary codec (7 bytes + 1 version byte).
+pub const BINARY_MAGIC: &[u8; 8] = b"STRGTRC\x01";
+
+/// One recorded delivery.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    /// Worker index `i ∈ [0, n)`.
+    pub worker: u32,
+    /// DGD round the delivery belongs to.
+    pub round: u32,
+    /// Message index within `(worker, round)` for cluster traces; the
+    /// computation-slot index `j` for per-slot simulator traces.
+    pub slot: u32,
+    /// Tasks covered by the event (`1` = per-slot record; a GC(s)
+    /// flush covers up to `s`).
+    pub tasks: u32,
+    /// Computation time covered by the event, in **seconds** (the
+    /// frame's `comp_us`; divide by `tasks` for per-task attribution).
+    pub compute_s: f64,
+    /// Communication delay of the delivery, in **seconds**.
+    pub comm_s: f64,
+    /// On-wire frame bytes (length prefix + payload); `0` for
+    /// simulated traces.
+    pub bytes: u64,
+    /// Scheme label the trace was recorded under (e.g. `"GC(2)"`).
+    pub scheme: String,
+    /// Whether an adaptive policy changed the plan for this round.
+    pub replanned: bool,
+}
+
+impl TraceEvent {
+    fn validate(&self) -> Result<()> {
+        if self.tasks == 0 {
+            bail!("trace event covers zero tasks");
+        }
+        if !(self.compute_s.is_finite() && self.compute_s >= 0.0) {
+            bail!("trace event compute_s must be finite and ≥ 0, got {}", self.compute_s);
+        }
+        if !(self.comm_s.is_finite() && self.comm_s >= 0.0) {
+            bail!("trace event comm_s must be finite and ≥ 0, got {}", self.comm_s);
+        }
+        if self.scheme.is_empty() {
+            bail!("trace event needs a scheme label");
+        }
+        Ok(())
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("worker", Json::Num(self.worker as f64)),
+            ("round", Json::Num(self.round as f64)),
+            ("slot", Json::Num(self.slot as f64)),
+            ("tasks", Json::Num(self.tasks as f64)),
+            ("compute_s", Json::Num(self.compute_s)),
+            ("comm_s", Json::Num(self.comm_s)),
+            ("bytes", Json::Num(self.bytes as f64)),
+            ("scheme", Json::Str(self.scheme.clone())),
+            ("replanned", Json::Bool(self.replanned)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        let u32_field = |key: &str| -> Result<u32> {
+            v.get(key)
+                .and_then(Json::as_usize)
+                .and_then(|x| u32::try_from(x).ok())
+                .with_context(|| format!("trace event `{key}` must be a u32"))
+        };
+        let f64_field = |key: &str| -> Result<f64> {
+            v.get(key)
+                .and_then(Json::as_f64)
+                .with_context(|| format!("trace event `{key}` must be a number"))
+        };
+        let ev = Self {
+            worker: u32_field("worker")?,
+            round: u32_field("round")?,
+            slot: u32_field("slot")?,
+            tasks: u32_field("tasks")?,
+            compute_s: f64_field("compute_s")?,
+            comm_s: f64_field("comm_s")?,
+            bytes: v
+                .get("bytes")
+                .and_then(Json::as_usize)
+                .context("trace event `bytes` must be a non-negative integer")?
+                as u64,
+            scheme: v
+                .get("scheme")
+                .and_then(Json::as_str)
+                .context("trace event `scheme` must be a string")?
+                .to_string(),
+            replanned: v
+                .get("replanned")
+                .and_then(Json::as_bool)
+                .context("trace event `replanned` must be a bool")?,
+        };
+        ev.validate()?;
+        Ok(ev)
+    }
+}
+
+/// An ordered bag of trace events with the trace-subsystem plumbing:
+/// codecs, merge, filtering, round windowing, and the per-worker delay
+/// extraction the fitting layer consumes.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TraceStore {
+    events: Vec<TraceEvent>,
+    /// Fleet size declared by the recorder (`Some(n)`); without it the
+    /// fleet is inferred as `max worker + 1`, which silently drops a
+    /// trailing worker whose deliveries were all censored — the taps
+    /// therefore always declare.
+    declared_workers: Option<u32>,
+}
+
+impl TraceStore {
+    pub fn new(events: Vec<TraceEvent>) -> Result<Self> {
+        for ev in &events {
+            ev.validate()?;
+        }
+        Ok(Self {
+            events,
+            declared_workers: None,
+        })
+    }
+
+    /// Declare the true fleet size (kept through codecs, merge and
+    /// filtering): a worker the trace never observed then *fails*
+    /// fitting/replay loudly instead of shrinking the fleet.
+    pub fn with_fleet(mut self, n: usize) -> Self {
+        self.declared_workers = Some(n as u32);
+        self
+    }
+
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Fleet size: the recorder's declaration when present (never less
+    /// than what the events imply), else `max worker + 1`.
+    pub fn n_workers(&self) -> usize {
+        let implied = self
+            .events
+            .iter()
+            .map(|e| e.worker as usize + 1)
+            .max()
+            .unwrap_or(0);
+        implied.max(self.declared_workers.unwrap_or(0) as usize)
+    }
+
+    /// Rounds covered (`max round + 1`).
+    pub fn rounds(&self) -> usize {
+        self.events
+            .iter()
+            .map(|e| e.round as usize + 1)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Distinct scheme labels, first-seen order.
+    pub fn schemes(&self) -> Vec<String> {
+        let mut out: Vec<String> = Vec::new();
+        for ev in &self.events {
+            if !out.iter().any(|s| *s == ev.scheme) {
+                out.push(ev.scheme.clone());
+            }
+        }
+        out
+    }
+
+    /// Total on-wire bytes recorded.
+    pub fn total_bytes(&self) -> u64 {
+        self.events.iter().map(|e| e.bytes).sum()
+    }
+
+    /// Append another trace's events (e.g. several recorded runs of the
+    /// same fleet).  Event order within each store is preserved;
+    /// `other`'s events follow `self`'s, and the larger declared fleet
+    /// wins.
+    pub fn merge(&mut self, other: TraceStore) {
+        self.events.extend(other.events);
+        self.declared_workers = self.declared_workers.max(other.declared_workers);
+    }
+
+    /// Events satisfying `pred`, in order (the declared fleet size is
+    /// kept — filtering observations does not shrink the fleet).
+    pub fn filter(&self, pred: impl Fn(&TraceEvent) -> bool) -> TraceStore {
+        TraceStore {
+            events: self.events.iter().filter(|e| pred(e)).cloned().collect(),
+            declared_workers: self.declared_workers,
+        }
+    }
+
+    /// Events recorded under one scheme label.
+    pub fn filter_scheme(&self, scheme: &str) -> TraceStore {
+        self.filter(|e| e.scheme == scheme)
+    }
+
+    /// Events whose round lies in `[lo, hi)` — e.g. to drop warmup
+    /// rounds before fitting, or to fit drifting fleets piecewise.
+    pub fn window(&self, lo: usize, hi: usize) -> TraceStore {
+        self.filter(|e| (lo..hi).contains(&(e.round as usize)))
+    }
+
+    /// Per-task computation delays of `worker` in **milliseconds**:
+    /// each event contributes `tasks` observations of
+    /// `compute_s / tasks` — the same even attribution the adaptive
+    /// estimator uses for flush-grouped measurements.
+    pub fn comp_ms(&self, worker: usize) -> Vec<f64> {
+        let mut out = Vec::new();
+        for ev in &self.events {
+            if ev.worker as usize == worker {
+                let per_task = ev.compute_s * 1e3 / ev.tasks as f64;
+                out.resize(out.len() + ev.tasks as usize, per_task);
+            }
+        }
+        out
+    }
+
+    /// Per-message communication delays of `worker` in milliseconds
+    /// (one observation per event — comm rides messages, not tasks).
+    pub fn comm_ms(&self, worker: usize) -> Vec<f64> {
+        self.events
+            .iter()
+            .filter(|e| e.worker as usize == worker)
+            .map(|e| e.comm_s * 1e3)
+            .collect()
+    }
+
+    /// Every worker's `(comp, comm)` millisecond samples in one pass
+    /// over the events — what the fitting and replay layers consume
+    /// (the per-worker accessors above are O(events) *each*; on an
+    /// operational million-event trace a per-worker loop over them
+    /// would be O(workers × events)).
+    pub fn per_worker_ms(&self) -> (Vec<Vec<f64>>, Vec<Vec<f64>>) {
+        let n = self.n_workers();
+        let mut comp: Vec<Vec<f64>> = vec![Vec::new(); n];
+        let mut comm: Vec<Vec<f64>> = vec![Vec::new(); n];
+        for ev in &self.events {
+            let w = ev.worker as usize;
+            let per_task = ev.compute_s * 1e3 / ev.tasks as f64;
+            let c = &mut comp[w];
+            c.resize(c.len() + ev.tasks as usize, per_task);
+            comm[w].push(ev.comm_s * 1e3);
+        }
+        (comp, comm)
+    }
+
+    // ---- JSONL codec -------------------------------------------------------
+
+    /// Serialize as versioned JSONL: a header line
+    /// `{"format": "straggler-trace/v1", "events": N, "workers": n}`
+    /// (`workers` only when declared) followed by one compact JSON
+    /// object per event.
+    pub fn to_jsonl(&self) -> String {
+        let mut header = vec![
+            ("format", Json::Str(TRACE_FORMAT.into())),
+            ("events", Json::Num(self.events.len() as f64)),
+        ];
+        if let Some(n) = self.declared_workers {
+            header.push(("workers", Json::Num(n as f64)));
+        }
+        let mut out = String::new();
+        out.push_str(&Json::obj(header).to_string_compact());
+        out.push('\n');
+        for ev in &self.events {
+            out.push_str(&ev.to_json().to_string_compact());
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn from_jsonl(text: &str) -> Result<Self> {
+        let mut lines = text.lines().enumerate().filter(|(_, l)| !l.trim().is_empty());
+        let (_, header) = lines.next().context("empty trace file")?;
+        let header = Json::parse(header).context("trace header is not JSON")?;
+        let format = header
+            .get("format")
+            .and_then(Json::as_str)
+            .context("trace header missing `format`")?;
+        if format != TRACE_FORMAT {
+            bail!("unsupported trace format {format:?} (this build reads {TRACE_FORMAT:?})");
+        }
+        let declared = header.get("events").and_then(Json::as_usize);
+        let declared_workers = header
+            .get("workers")
+            .and_then(Json::as_usize)
+            .map(|n| n as u32);
+        let mut events = Vec::new();
+        for (lineno, line) in lines {
+            let v = Json::parse(line)
+                .with_context(|| format!("trace line {} is not JSON", lineno + 1))?;
+            events.push(
+                TraceEvent::from_json(&v)
+                    .map_err(|e| e.context(format!("trace line {}", lineno + 1)))?,
+            );
+        }
+        if let Some(want) = declared {
+            if want != events.len() {
+                bail!(
+                    "trace header declares {want} events but the file holds {} — truncated?",
+                    events.len()
+                );
+            }
+        }
+        Ok(Self {
+            events,
+            declared_workers,
+        })
+    }
+
+    // ---- binary codec ------------------------------------------------------
+
+    /// Compact little-endian binary form: magic, declared fleet size
+    /// (`0` = undeclared), interned scheme table, then fixed-width
+    /// records.  `f64` delays round-trip bit-exactly
+    /// (`to_le_bytes`/`from_le_bytes`).
+    pub fn to_binary(&self) -> Vec<u8> {
+        let schemes = self.schemes();
+        let mut out = Vec::with_capacity(20 + self.events.len() * 41);
+        out.extend_from_slice(BINARY_MAGIC);
+        out.extend_from_slice(&self.declared_workers.unwrap_or(0).to_le_bytes());
+        out.extend_from_slice(&(schemes.len() as u32).to_le_bytes());
+        for s in &schemes {
+            out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+            out.extend_from_slice(s.as_bytes());
+        }
+        out.extend_from_slice(&(self.events.len() as u64).to_le_bytes());
+        for ev in &self.events {
+            let scheme_idx = schemes.iter().position(|s| *s == ev.scheme).expect("interned") as u32;
+            out.extend_from_slice(&ev.worker.to_le_bytes());
+            out.extend_from_slice(&ev.round.to_le_bytes());
+            out.extend_from_slice(&ev.slot.to_le_bytes());
+            out.extend_from_slice(&ev.tasks.to_le_bytes());
+            out.extend_from_slice(&scheme_idx.to_le_bytes());
+            out.extend_from_slice(&ev.bytes.to_le_bytes());
+            out.push(ev.replanned as u8);
+            out.extend_from_slice(&ev.compute_s.to_le_bytes());
+            out.extend_from_slice(&ev.comm_s.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn from_binary(bytes: &[u8]) -> Result<Self> {
+        fn take<'a>(bytes: &'a [u8], pos: &mut usize, len: usize) -> Result<&'a [u8]> {
+            let end = pos
+                .checked_add(len)
+                .filter(|&e| e <= bytes.len())
+                .context("truncated binary trace")?;
+            let out = &bytes[*pos..end];
+            *pos = end;
+            Ok(out)
+        }
+        fn u32_at(bytes: &[u8], pos: &mut usize) -> Result<u32> {
+            Ok(u32::from_le_bytes(take(bytes, pos, 4)?.try_into().unwrap()))
+        }
+        fn u64_at(bytes: &[u8], pos: &mut usize) -> Result<u64> {
+            Ok(u64::from_le_bytes(take(bytes, pos, 8)?.try_into().unwrap()))
+        }
+        fn f64_at(bytes: &[u8], pos: &mut usize) -> Result<f64> {
+            Ok(f64::from_le_bytes(take(bytes, pos, 8)?.try_into().unwrap()))
+        }
+        let mut pos = 0usize;
+        let magic = take(bytes, &mut pos, BINARY_MAGIC.len())?;
+        if magic != BINARY_MAGIC {
+            bail!("not a binary straggler trace (bad magic)");
+        }
+        let declared_workers = match u32_at(bytes, &mut pos)? {
+            0 => None,
+            n => Some(n),
+        };
+        let n_schemes = u32_at(bytes, &mut pos)? as usize;
+        let mut schemes = Vec::with_capacity(n_schemes);
+        for _ in 0..n_schemes {
+            let len = u32_at(bytes, &mut pos)? as usize;
+            let raw = take(bytes, &mut pos, len)?;
+            schemes.push(
+                std::str::from_utf8(raw)
+                    .context("scheme label is not UTF-8")?
+                    .to_string(),
+            );
+        }
+        let count = u64_at(bytes, &mut pos)? as usize;
+        // cap the pre-allocation: a corrupt header must not OOM the loader
+        let mut events = Vec::with_capacity(count.min(1 << 20));
+        for _ in 0..count {
+            let worker = u32_at(bytes, &mut pos)?;
+            let round = u32_at(bytes, &mut pos)?;
+            let slot = u32_at(bytes, &mut pos)?;
+            let tasks = u32_at(bytes, &mut pos)?;
+            let scheme_idx = u32_at(bytes, &mut pos)? as usize;
+            let wire = u64_at(bytes, &mut pos)?;
+            let replanned = take(bytes, &mut pos, 1)?[0] != 0;
+            let compute_s = f64_at(bytes, &mut pos)?;
+            let comm_s = f64_at(bytes, &mut pos)?;
+            let ev = TraceEvent {
+                worker,
+                round,
+                slot,
+                tasks,
+                compute_s,
+                comm_s,
+                bytes: wire,
+                scheme: schemes
+                    .get(scheme_idx)
+                    .context("scheme index out of table")?
+                    .clone(),
+                replanned,
+            };
+            ev.validate()?;
+            events.push(ev);
+        }
+        if pos != bytes.len() {
+            bail!("trailing bytes after the declared {count} events");
+        }
+        Ok(Self {
+            events,
+            declared_workers,
+        })
+    }
+
+    // ---- file plumbing -----------------------------------------------------
+
+    /// Load a trace, sniffing the codec: binary magic → binary, else
+    /// JSONL.
+    pub fn load(path: &Path) -> Result<Self> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading trace {}", path.display()))?;
+        if bytes.starts_with(BINARY_MAGIC) {
+            Self::from_binary(&bytes)
+        } else {
+            let text = std::str::from_utf8(&bytes)
+                .with_context(|| format!("trace {} is neither binary nor UTF-8", path.display()))?;
+            Self::from_jsonl(text)
+        }
+    }
+
+    /// Save, choosing the codec by extension: `.bin` → binary, anything
+    /// else → JSONL.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating {}", dir.display()))?;
+        }
+        let bytes = if path.extension().is_some_and(|e| e == "bin") {
+            self.to_binary()
+        } else {
+            self.to_jsonl().into_bytes()
+        };
+        std::fs::write(path, bytes).with_context(|| format!("writing trace {}", path.display()))
+    }
+}
+
+/// The capture tap both execution paths feed: the cluster master pushes
+/// one flush per received `Result` frame, the simulator pushes censored
+/// slots (only deliveries the master actually saw before the round
+/// completed — the same causal view the adaptive estimator gets).
+#[derive(Debug, Clone)]
+pub struct TraceRecorder {
+    scheme: String,
+    fleet: Option<u32>,
+    events: Vec<TraceEvent>,
+}
+
+impl TraceRecorder {
+    pub fn new(scheme: impl Into<String>) -> Self {
+        Self {
+            scheme: scheme.into(),
+            fleet: None,
+            events: Vec::new(),
+        }
+    }
+
+    /// A recorder that declares the fleet size up front — what both
+    /// execution taps use, so a worker whose deliveries were all
+    /// censored still counts toward the recorded fleet (fitting it
+    /// then fails loudly instead of silently shrinking `n`).
+    pub fn with_fleet(scheme: impl Into<String>, n: usize) -> Self {
+        Self {
+            scheme: scheme.into(),
+            fleet: Some(n as u32),
+            events: Vec::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Record one simulated slot delivery (ms in, seconds stored).
+    ///
+    /// Panics on a non-finite/negative delay: every load path
+    /// validates, so an invalid measurement must fail at the tap — not
+    /// after the recording was saved and became permanently unloadable.
+    pub fn push_slot(
+        &mut self,
+        round: usize,
+        worker: usize,
+        slot: usize,
+        comp_ms: f64,
+        comm_ms: f64,
+        replanned: bool,
+    ) {
+        let ev = TraceEvent {
+            worker: worker as u32,
+            round: round as u32,
+            slot: slot as u32,
+            tasks: 1,
+            compute_s: comp_ms * 1e-3,
+            comm_s: comm_ms * 1e-3,
+            bytes: 0,
+            scheme: self.scheme.clone(),
+            replanned,
+        };
+        ev.validate().expect("recorded slot event must be loadable");
+        self.events.push(ev);
+    }
+
+    /// Record one measured cluster flush: `tasks` tasks computed in
+    /// `comp_total_ms`, delivered with `comm_ms` of wire delay in a
+    /// `bytes`-byte frame; `msg_idx` is the message's index within the
+    /// worker's round.
+    /// Panics on an invalid frame (zero tasks, non-finite/negative
+    /// delay) — same tap-time guarantee as [`TraceRecorder::push_slot`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn push_flush(
+        &mut self,
+        round: usize,
+        worker: usize,
+        msg_idx: usize,
+        tasks: usize,
+        comp_total_ms: f64,
+        comm_ms: f64,
+        bytes: usize,
+        replanned: bool,
+    ) {
+        let ev = TraceEvent {
+            worker: worker as u32,
+            round: round as u32,
+            slot: msg_idx as u32,
+            tasks: tasks as u32,
+            compute_s: comp_total_ms * 1e-3,
+            comm_s: comm_ms * 1e-3,
+            bytes: bytes as u64,
+            scheme: self.scheme.clone(),
+            replanned,
+        };
+        ev.validate().expect("recorded flush event must be loadable");
+        self.events.push(ev);
+    }
+
+    pub fn into_store(self) -> TraceStore {
+        TraceStore {
+            events: self.events,
+            declared_workers: self.fleet,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_store() -> TraceStore {
+        let mut rec = TraceRecorder::new("GC(2)");
+        rec.push_flush(0, 0, 0, 2, 3.25, 5.5, 2088, false);
+        rec.push_flush(0, 1, 0, 2, 9.75, 6.25, 2088, false);
+        rec.push_slot(1, 0, 0, 1.625, 5.0, true);
+        rec.into_store()
+    }
+
+    #[test]
+    fn recorder_units_and_shape() {
+        let s = sample_store();
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.n_workers(), 2);
+        assert_eq!(s.rounds(), 2);
+        assert_eq!(s.schemes(), vec!["GC(2)".to_string()]);
+        assert_eq!(s.total_bytes(), 2 * 2088);
+        // flush of 2 tasks in 3.25 ms → two per-task observations of 1.625 ms
+        assert_eq!(s.comp_ms(0), vec![1.625, 1.625, 1.625]);
+        // comm is per message: one observation per event
+        assert_eq!(s.comm_ms(0), vec![5.5, 5.0]);
+        assert_eq!(s.comm_ms(1), vec![6.25]);
+    }
+
+    #[test]
+    fn jsonl_roundtrip_is_bit_identical() {
+        let s = sample_store();
+        let text = s.to_jsonl();
+        assert!(text.starts_with("{\"format\":\"straggler-trace/v1\""));
+        let back = TraceStore::from_jsonl(&text).unwrap();
+        assert_eq!(back, s);
+        for (a, b) in back.events().iter().zip(s.events()) {
+            assert_eq!(a.compute_s.to_bits(), b.compute_s.to_bits());
+            assert_eq!(a.comm_s.to_bits(), b.comm_s.to_bits());
+        }
+    }
+
+    #[test]
+    fn binary_roundtrip_is_bit_identical() {
+        let s = sample_store();
+        let bin = s.to_binary();
+        assert!(bin.starts_with(BINARY_MAGIC));
+        let back = TraceStore::from_binary(&bin).unwrap();
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn jsonl_rejects_malformed() {
+        assert!(TraceStore::from_jsonl("").is_err(), "empty");
+        assert!(
+            TraceStore::from_jsonl("{\"format\":\"other/v9\"}\n").is_err(),
+            "wrong format tag"
+        );
+        let s = sample_store();
+        let mut text = s.to_jsonl();
+        text.push_str("{\"worker\":0}\n");
+        assert!(TraceStore::from_jsonl(&text).is_err(), "short event line");
+        // truncation detection via the declared count
+        let truncated: String = s
+            .to_jsonl()
+            .lines()
+            .take(2)
+            .map(|l| format!("{l}\n"))
+            .collect();
+        assert!(TraceStore::from_jsonl(&truncated).is_err(), "truncated body");
+    }
+
+    #[test]
+    fn binary_rejects_malformed() {
+        let s = sample_store();
+        let bin = s.to_binary();
+        assert!(TraceStore::from_binary(&bin[..bin.len() - 3]).is_err(), "truncated");
+        assert!(TraceStore::from_binary(b"NOPE").is_err(), "bad magic");
+        let mut extra = bin.clone();
+        extra.push(7);
+        assert!(TraceStore::from_binary(&extra).is_err(), "trailing bytes");
+    }
+
+    #[test]
+    fn declared_fleet_survives_codecs_and_filtering() {
+        // worker 3 exists but was never observed (fully censored): the
+        // declared fleet keeps it in n_workers through both codecs,
+        // merge and windowing — downstream fitting then fails loudly
+        // instead of modeling a 3-worker fleet
+        let mut rec = TraceRecorder::with_fleet("CS", 4);
+        rec.push_slot(0, 0, 0, 0.1, 0.5, false);
+        rec.push_slot(0, 2, 0, 0.1, 0.5, false);
+        let store = rec.into_store();
+        assert_eq!(store.n_workers(), 4);
+        assert_eq!(TraceStore::from_jsonl(&store.to_jsonl()).unwrap(), store);
+        assert_eq!(TraceStore::from_binary(&store.to_binary()).unwrap(), store);
+        assert!(store.to_jsonl().starts_with(
+            "{\"format\":\"straggler-trace/v1\",\"events\":2,\"workers\":4}"
+        ));
+        assert_eq!(store.window(0, 1).n_workers(), 4);
+        assert_eq!(store.filter_scheme("CS").n_workers(), 4);
+        let mut merged = TraceStore::new(vec![]).unwrap();
+        merged.merge(store.clone());
+        assert_eq!(merged.n_workers(), 4);
+        // the undeclared path still infers from events, and an explicit
+        // declaration never *shrinks* below what the events imply
+        assert_eq!(sample_store().n_workers(), 2);
+        assert_eq!(sample_store().with_fleet(1).n_workers(), 2);
+    }
+
+    #[test]
+    fn filter_window_merge() {
+        let s = sample_store();
+        assert_eq!(s.window(0, 1).len(), 2);
+        assert_eq!(s.window(1, 2).len(), 1);
+        assert_eq!(s.filter_scheme("GC(2)").len(), 3);
+        assert_eq!(s.filter_scheme("CS").len(), 0);
+        let mut merged = s.clone();
+        merged.merge(s.clone());
+        assert_eq!(merged.len(), 6);
+        assert_eq!(merged.n_workers(), 2);
+    }
+
+    #[test]
+    fn event_validation_rejects_bad_delays() {
+        let mut ev = sample_store().events()[0].clone();
+        ev.compute_s = f64::NAN;
+        assert!(TraceStore::new(vec![ev]).is_err());
+        let mut ev = sample_store().events()[0].clone();
+        ev.tasks = 0;
+        assert!(TraceStore::new(vec![ev]).is_err());
+    }
+}

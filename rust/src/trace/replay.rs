@@ -1,0 +1,354 @@
+//! Replay: turn a recorded [`TraceStore`] back into a delay substrate
+//! and run the whole scheme × policy matrix against it, offline and
+//! bit-reproducibly — the "does the policy win on *this* fleet?" leg.
+//!
+//! Three replay sources:
+//!
+//! * [`ReplaySource::Empirical`] — bootstrap-resample the measured
+//!   per-worker delays through [`crate::delay::EmpiricalModel`]
+//!   (distribution-free; the default);
+//! * [`ReplaySource::FittedTg`] — the fitted per-worker truncated
+//!   Gaussians (paper eq. 66, smooth tails within the observed
+//!   support);
+//! * [`ReplaySource::FittedExp`] — the fitted per-worker shifted
+//!   exponentials (heavier tail extrapolation beyond the observed
+//!   maximum).
+//!
+//! Every `(scheme, policy)` cell runs through
+//! [`crate::adaptive::run_policy_rounds`] with the same seed, so all
+//! cells share one delay stream (variance-reduced comparisons), and
+//! the whole matrix folds into an FNV-1a **completion digest** over
+//! the bit patterns of every per-round completion time — the
+//! determinism pin of `rust/tests/trace.rs`: same trace + same config
+//! ⇒ same digest, bit for bit.
+
+use anyhow::{bail, Result};
+
+use crate::adaptive::{run_policy_rounds, PerRound, PolicyKind, PolicyRunConfig};
+use crate::delay::{DelayModel, EmpiricalModel, Trace};
+use crate::scheme::{SchemeId, SchemeRegistry};
+use crate::sim::CompletionEstimate;
+use crate::util::fnv::Fnv1a;
+
+use super::fit::fit_traces;
+use super::record::TraceStore;
+
+/// Which delay substrate a replay runs on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplaySource {
+    /// Bootstrap resampling of the raw measured delays (default).
+    Empirical,
+    /// Fitted per-worker truncated Gaussians (eq. 66).
+    FittedTg,
+    /// Fitted per-worker shifted exponentials.
+    FittedExp,
+}
+
+impl ReplaySource {
+    /// CLI spelling: `empirical | tg | exp`.
+    pub fn parse(name: &str) -> Result<Self> {
+        Ok(match name.trim().to_lowercase().as_str() {
+            "empirical" => ReplaySource::Empirical,
+            "tg" | "trunc-gauss" | "truncated-gaussian" => ReplaySource::FittedTg,
+            "exp" | "shifted-exp" => ReplaySource::FittedExp,
+            other => bail!("unknown replay source {other:?} (empirical|tg|exp)"),
+        })
+    }
+}
+
+impl std::fmt::Display for ReplaySource {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            ReplaySource::Empirical => "empirical",
+            ReplaySource::FittedTg => "tg",
+            ReplaySource::FittedExp => "exp",
+        })
+    }
+}
+
+/// Build the bootstrap-resampling model from a trace's raw delays.
+pub fn empirical_model(store: &TraceStore) -> Result<EmpiricalModel> {
+    if store.n_workers() == 0 {
+        bail!("cannot replay an empty trace");
+    }
+    // one pass over the events, not one per worker per channel
+    let (comp_all, comm_all) = store.per_worker_ms();
+    let mut comp = Vec::with_capacity(comp_all.len());
+    let mut comm = Vec::with_capacity(comm_all.len());
+    for (w, (c, m)) in comp_all.into_iter().zip(comm_all).enumerate() {
+        if c.is_empty() || m.is_empty() {
+            bail!("worker {w} has no recorded delays — cannot bootstrap-replay it");
+        }
+        comp.push(Trace::new(c));
+        comm.push(Trace::new(m));
+    }
+    Ok(EmpiricalModel::new(comp, comm))
+}
+
+/// Materialize the replay substrate for a source.
+pub fn model_from_trace(store: &TraceStore, source: ReplaySource) -> Result<Box<dyn DelayModel>> {
+    Ok(match source {
+        ReplaySource::Empirical => Box::new(empirical_model(store)?),
+        ReplaySource::FittedTg => Box::new(fit_traces(store)?.truncated_gaussian_model()),
+        ReplaySource::FittedExp => Box::new(fit_traces(store)?.shifted_exp_model()),
+    })
+}
+
+/// The default replay matrix at an `(n, r, k)` point: every registered
+/// scheme family that paper Table I admits there, in figure order.
+pub fn default_matrix_schemes(n: usize, r: usize, k: usize) -> Vec<SchemeId> {
+    let s = 2u32.min(r as u32).max(1);
+    let candidates = [
+        SchemeId::Cs,
+        SchemeId::Ss,
+        SchemeId::Ra,
+        SchemeId::Gc(s),
+        SchemeId::GcHet(s, 1),
+        SchemeId::Pc,
+        SchemeId::Pcmm,
+        SchemeId::Lb,
+    ];
+    candidates
+        .into_iter()
+        .filter(|&id| SchemeRegistry::applicable(id, n, r, k))
+        .collect()
+}
+
+/// One replay run's shape.
+#[derive(Debug, Clone)]
+pub struct ReplayConfig {
+    pub schemes: Vec<SchemeId>,
+    pub policies: Vec<PolicyKind>,
+    pub r: usize,
+    pub k: usize,
+    pub trials: usize,
+    pub seed: u64,
+    pub ingest_ms: f64,
+    pub source: ReplaySource,
+}
+
+impl ReplayConfig {
+    /// The full-matrix default at `r = k = n`: every scheme is
+    /// applicable there, so the fleet question is answered in one run.
+    pub fn matrix(n: usize, trials: usize, seed: u64) -> Self {
+        Self {
+            schemes: default_matrix_schemes(n, n, n),
+            policies: vec![
+                PolicyKind::Static,
+                PolicyKind::AdaptiveOrder,
+                PolicyKind::AdaptiveLoad,
+            ],
+            r: n,
+            k: n,
+            trials,
+            seed,
+            ingest_ms: 0.0,
+            source: ReplaySource::Empirical,
+        }
+    }
+}
+
+/// One `(scheme, policy)` cell of the replay matrix.
+#[derive(Debug, Clone)]
+pub struct ReplayCell {
+    pub scheme: SchemeId,
+    pub policy: PolicyKind,
+    pub estimate: CompletionEstimate,
+    pub replans: usize,
+}
+
+/// A replayed matrix plus its determinism pin.
+#[derive(Debug, Clone)]
+pub struct ReplayOutcome {
+    pub cells: Vec<ReplayCell>,
+    /// `(scheme, policy, reason)` pairs the matrix skipped — a policy
+    /// that cannot re-plan a scheme's base is a gap in the table, not
+    /// an error.
+    pub skipped: Vec<(SchemeId, PolicyKind, String)>,
+    /// FNV-1a fold of every per-round completion time's bit pattern,
+    /// in run order — same trace + same config ⇒ same digest.
+    pub digest: u64,
+    pub model_name: String,
+}
+
+/// Run the scheme × policy matrix against a trace's delays.
+pub fn replay(store: &TraceStore, cfg: &ReplayConfig) -> Result<ReplayOutcome> {
+    let n = store.n_workers();
+    if cfg.schemes.is_empty() {
+        bail!("replay needs at least one scheme");
+    }
+    if cfg.policies.is_empty() {
+        bail!("replay needs at least one policy");
+    }
+    let model = model_from_trace(store, cfg.source)?;
+    let round_model = PerRound(model.as_ref());
+
+    let mut digest = Fnv1a::new();
+
+    let mut cells = Vec::new();
+    let mut skipped = Vec::new();
+    for &scheme in &cfg.schemes {
+        if !SchemeRegistry::applicable(scheme, n, cfg.r, cfg.k) {
+            // the whole scheme is out at this shape: every requested
+            // policy's cell is a gap
+            for &policy in &cfg.policies {
+                skipped.push((
+                    scheme,
+                    policy,
+                    format!("{scheme} not applicable at (n = {n}, r = {}, k = {})", cfg.r, cfg.k),
+                ));
+            }
+            continue;
+        }
+        for &policy in &cfg.policies {
+            if policy != PolicyKind::Static {
+                if let Err(e) = policy.validate_base(scheme, n, cfg.r) {
+                    skipped.push((scheme, policy, e.to_string()));
+                    continue;
+                }
+            }
+            for b in scheme.to_string().bytes().chain(policy.to_string().bytes()) {
+                digest.fold(b as u64);
+            }
+            let mut emit = |_round: usize, t: f64| digest.fold(t.to_bits());
+            let out = run_policy_rounds(
+                &PolicyRunConfig {
+                    scheme,
+                    policy,
+                    n,
+                    r: cfg.r,
+                    k: cfg.k,
+                    rounds: cfg.trials,
+                    ingest_ms: cfg.ingest_ms,
+                    seed: cfg.seed,
+                },
+                &round_model,
+                Some(&mut emit),
+                None,
+            )?;
+            cells.push(ReplayCell {
+                scheme,
+                policy,
+                estimate: out.estimate,
+                replans: out.replans,
+            });
+        }
+    }
+    if cells.is_empty() {
+        bail!("replay matrix is empty: no (scheme, policy) pair was runnable at this shape");
+    }
+    Ok(ReplayOutcome {
+        cells,
+        skipped,
+        digest: digest.digest(),
+        model_name: model.name(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::record::TraceRecorder;
+    use crate::util::rng::Rng;
+
+    fn synthetic_store(n: usize) -> TraceStore {
+        let mut rec = TraceRecorder::new("CS");
+        let mut rng = Rng::seed_from_u64(9);
+        for round in 0..80 {
+            for w in 0..n {
+                let comp = 0.1 + 0.05 * (w as f64) + 0.02 * rng.f64();
+                let comm = 0.5 + 0.1 * rng.f64();
+                rec.push_slot(round, w, 0, comp, comm, false);
+            }
+        }
+        rec.into_store()
+    }
+
+    #[test]
+    fn source_spellings_roundtrip() {
+        for (s, want) in [
+            ("empirical", ReplaySource::Empirical),
+            ("TG", ReplaySource::FittedTg),
+            ("shifted-exp", ReplaySource::FittedExp),
+        ] {
+            assert_eq!(ReplaySource::parse(s).unwrap(), want);
+        }
+        for src in [ReplaySource::Empirical, ReplaySource::FittedTg, ReplaySource::FittedExp] {
+            assert_eq!(ReplaySource::parse(&src.to_string()).unwrap(), src);
+        }
+        assert!(ReplaySource::parse("wat").is_err());
+    }
+
+    #[test]
+    fn empirical_model_means_match_trace() {
+        let store = synthetic_store(3);
+        let m = empirical_model(&store).unwrap();
+        // worker 2 is slower than worker 0 by construction
+        assert!(m.mean_comp(2).unwrap() > m.mean_comp(0).unwrap());
+        let direct = store.comp_ms(1);
+        let want = direct.iter().sum::<f64>() / direct.len() as f64;
+        assert!((m.mean_comp(1).unwrap() - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn default_matrix_respects_table1() {
+        let ids = default_matrix_schemes(6, 6, 6);
+        assert!(ids.contains(&SchemeId::Ra), "r = n admits RA");
+        assert!(ids.contains(&SchemeId::Pc) && ids.contains(&SchemeId::Pcmm));
+        let ids = default_matrix_schemes(6, 3, 4);
+        assert!(!ids.contains(&SchemeId::Ra), "r < n excludes RA");
+        assert!(!ids.contains(&SchemeId::Pc), "k < n excludes the coded pair");
+        assert!(ids.contains(&SchemeId::Gc(2)));
+    }
+
+    #[test]
+    fn replay_matrix_is_deterministic_and_seed_sensitive() {
+        let store = synthetic_store(4);
+        let cfg = ReplayConfig {
+            trials: 60,
+            ..ReplayConfig::matrix(4, 60, 0xF1EE7)
+        };
+        let a = replay(&store, &cfg).unwrap();
+        let b = replay(&store, &cfg).unwrap();
+        assert_eq!(a.digest, b.digest, "same trace + config ⇒ same digest");
+        for (x, y) in a.cells.iter().zip(&b.cells) {
+            assert_eq!(x.estimate.mean.to_bits(), y.estimate.mean.to_bits());
+        }
+        let c = replay(
+            &store,
+            &ReplayConfig {
+                seed: 0xF1EE8,
+                ..cfg.clone()
+            },
+        )
+        .unwrap();
+        assert_ne!(a.digest, c.digest, "different seed ⇒ different digest");
+        // static policy runs every scheme; the re-planning policies skip
+        // the coded/randomized bases into `skipped`, not into errors
+        assert!(a.cells.iter().any(|c| c.scheme == SchemeId::Pcmm
+            && c.policy == PolicyKind::Static));
+        assert!(a
+            .skipped
+            .iter()
+            .any(|(s, p, _)| *s == SchemeId::Pc && *p == PolicyKind::AdaptiveOrder));
+    }
+
+    #[test]
+    fn fitted_sources_replay_too() {
+        let store = synthetic_store(3);
+        for source in [ReplaySource::FittedTg, ReplaySource::FittedExp] {
+            let cfg = ReplayConfig {
+                schemes: vec![SchemeId::Cs, SchemeId::Lb],
+                policies: vec![PolicyKind::Static],
+                source,
+                trials: 40,
+                ..ReplayConfig::matrix(3, 40, 1)
+            };
+            let out = replay(&store, &cfg).unwrap();
+            assert_eq!(out.cells.len(), 2);
+            for cell in &out.cells {
+                assert!(cell.estimate.mean > 0.0, "{source}: {}", cell.scheme);
+            }
+        }
+    }
+}

@@ -1,8 +1,10 @@
 //! Tiny command-line parser (offline substrate — DESIGN.md §5).
 //!
-//! Grammar: `prog <subcommand> [--key value]... [--flag]...`.
-//! Typed getters with defaults; unknown keys are collected so the
-//! binary can reject typos instead of silently ignoring them.
+//! Grammar: `prog <subcommand> [<action>] [--key value]... [--flag]...`
+//! — at most two leading positionals (`trace record` style); further
+//! positionals are rejected.  Typed getters with defaults; unknown
+//! keys are collected so the binary can reject typos instead of
+//! silently ignoring them.
 
 use std::collections::HashMap;
 
@@ -12,6 +14,9 @@ use anyhow::{anyhow, bail, Result};
 #[derive(Debug, Clone, Default)]
 pub struct Args {
     pub subcommand: Option<String>,
+    /// Second positional (`straggler trace record` → `record`);
+    /// subcommands that take no action must reject `Some`.
+    pub action: Option<String>,
     values: HashMap<String, String>,
     flags: Vec<String>,
     consumed: std::cell::RefCell<Vec<String>>,
@@ -25,6 +30,11 @@ impl Args {
         if let Some(first) = it.peek() {
             if !first.starts_with('-') {
                 out.subcommand = Some(it.next().unwrap());
+                if let Some(second) = it.peek() {
+                    if !second.starts_with('-') {
+                        out.action = Some(it.next().unwrap());
+                    }
+                }
             }
         }
         while let Some(arg) = it.next() {
@@ -154,7 +164,21 @@ mod tests {
     }
 
     #[test]
-    fn rejects_stray_positional() {
-        assert!(Args::parse(["fig4".to_string(), "oops".to_string()]).is_err());
+    fn action_positional_is_captured() {
+        let a = parse(&["trace", "record", "--out", "t.jsonl"]);
+        assert_eq!(a.subcommand.as_deref(), Some("trace"));
+        assert_eq!(a.action.as_deref(), Some("record"));
+        assert_eq!(a.str_or("out", ""), "t.jsonl");
+        // plain subcommands leave the action empty
+        let a = parse(&["fig4", "--trials", "5"]);
+        assert_eq!(a.action, None);
+    }
+
+    #[test]
+    fn rejects_third_positional() {
+        assert!(Args::parse(
+            ["trace", "record", "oops"].map(String::from)
+        )
+        .is_err());
     }
 }

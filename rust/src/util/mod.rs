@@ -4,6 +4,7 @@
 pub mod benchkit;
 pub mod cli;
 pub mod combin;
+pub mod fnv;
 pub mod json;
 pub mod math;
 pub mod rng;

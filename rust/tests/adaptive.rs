@@ -34,6 +34,7 @@ fn shift_run(scheme: SchemeId, policy: PolicyKind, rounds: usize, seed: u64) -> 
         },
         &model,
         None,
+        None,
     )
     .expect("valid run")
 }
@@ -144,6 +145,7 @@ fn stationary_fleet_leaves_little_for_adaptation() {
             },
             &PerRound(&model),
             None,
+            None,
         )
         .unwrap()
     };
@@ -192,6 +194,7 @@ fn estimator_recovers_the_true_tiers_from_censored_feedback() {
             },
             &PerRound(&base),
             Some(&mut emit),
+            None,
         )
         .unwrap();
     }
@@ -223,6 +226,7 @@ fn emit_streams_every_round_in_order() {
         },
         &PerRound(&model),
         Some(&mut emit),
+        None,
     )
     .unwrap();
     assert_eq!(seen.len(), 300);

@@ -313,6 +313,7 @@ fn static_policy_bit_identical_to_registry_path_for_every_scheme() {
                 },
                 &PerRound(&model),
                 None,
+                None,
             )
             .unwrap();
             assert_eq!(got.replans, 0, "{id} static never replans");
