@@ -10,9 +10,11 @@
 use std::hint::black_box;
 
 use straggler_sched::analysis::{collect_task_times, theorem1_mean};
-use straggler_sched::coded::{PcScheme, PcmmScheme};
-use straggler_sched::coordinator::Msg;
-use straggler_sched::delay::{DelayBatch, DelayModel, DelaySample, TruncatedGaussianModel};
+use straggler_sched::coded::{DecodeCache, PcScheme, PcmmScheme};
+use straggler_sched::coordinator::{Msg, RoundAggregator};
+use straggler_sched::delay::{
+    DelayBatch, DelayModel, DelaySample, ShiftedExponential, TruncatedGaussianModel,
+};
 use straggler_sched::lb::kth_slot_arrival;
 use straggler_sched::linalg::Mat;
 use straggler_sched::scheduler::{
@@ -20,8 +22,8 @@ use straggler_sched::scheduler::{
 };
 use straggler_sched::scheme::{RoundView, SchemeEvaluator as _, SchemeId, SchemeRegistry};
 use straggler_sched::sim::{
-    completion_from_arrivals, completion_time_fast, simulate_round_with, slot_arrivals_batch,
-    FlatTasks, MonteCarlo, SimScratch, BATCH_ROUNDS,
+    chunk_rounds, completion_from_arrivals, completion_time_fast, simulate_round_with,
+    slot_arrivals_batch, FlatTasks, MonteCarlo, SimScratch, BATCH_ROUNDS,
 };
 use straggler_sched::util::benchkit::{bench, group, write_json_report, BenchResult};
 use straggler_sched::util::rng::Rng;
@@ -102,6 +104,165 @@ fn main() {
             }
             black_box(acc);
         }));
+    }
+
+    group("aggregate merge (uncoded flush path: SoA arena vs per-round alloc, 256 tasks, d = 512)");
+    {
+        // one GC(16)-shaped round over 256 tasks: 16 block flushes plus
+        // a duplicate re-flush of each (a straggler's late copy) — the
+        // master-side merge the cluster data plane runs per round
+        let (n_t, s, d) = (256usize, 16usize, 512usize);
+        let mut rng = Rng::seed_from_u64(11);
+        let flushes: Vec<(Vec<usize>, Vec<f64>)> = (0..n_t / s)
+            .map(|b| {
+                let tasks: Vec<usize> = (b * s..(b + 1) * s).collect();
+                let sum: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+                (tasks, sum)
+            })
+            .collect();
+        let mut agg = RoundAggregator::new(n_t, d, s, n_t);
+        let reused = bench("aggregate/reused_soa_256tasks_d512", || {
+            agg.reset();
+            for (tasks, sum) in &flushes {
+                black_box(agg.offer(tasks, sum));
+                black_box(agg.offer(tasks, sum)); // duplicate drop
+            }
+            let (w, t) = agg.finish();
+            black_box((w.len(), t[0]));
+        });
+        let fresh = bench("aggregate/fresh_alloc_256tasks_d512", || {
+            let mut agg = RoundAggregator::new(n_t, d, s, n_t);
+            for (tasks, sum) in &flushes {
+                black_box(agg.offer(tasks, sum));
+                black_box(agg.offer(tasks, sum));
+            }
+            let (w, t) = agg.finish();
+            black_box((w.len(), t[0]));
+        });
+        println!(
+            "aggregate merge reuse: fresh-alloc {:.2} µs vs reused {:.2} µs  →  {:.2}× \
+             (reset must beat rebuild)",
+            fresh.mean_ns / 1e3,
+            reused.mean_ns / 1e3,
+            fresh.mean_ns / reused.mean_ns
+        );
+        all.push(reused);
+        all.push(fresh);
+    }
+
+    group("decode cache (PC/PCMM weight reuse at threshold ≥ 32, d = 512)");
+    {
+        // responder subsets repeat round-over-round, so the cached
+        // decode path must collapse the per-round O(m²) solve to a key
+        // lookup + one O(m·d) apply.  Data content is irrelevant to the
+        // solve cost — fabricated d-length payloads keep setup cheap.
+        let d = 512usize;
+        let mut rng = Rng::seed_from_u64(13);
+
+        // PC n = 32, r = 2 → threshold m = 31 (k ≥ 32-scale subset)
+        let pc = PcScheme::new(32, 2);
+        let m_pc = pc.recovery_threshold();
+        let pc_resp: Vec<(usize, Vec<f64>)> = (0..m_pc)
+            .map(|w| (w, (0..d).map(|_| rng.normal()).collect()))
+            .collect();
+        let pc_newton = bench("decode/pc_newton_fresh_m31_d512", || {
+            black_box(pc.decode_interpolated(black_box(&pc_resp)));
+        });
+        all.push(bench("decode/pc_weights_fresh_m31_d512", || {
+            black_box(pc.decode(black_box(&pc_resp)));
+        }));
+        let mut pc_cache = DecodeCache::with_default_cap();
+        pc.decode_cached(&pc_resp, &mut pc_cache); // warm: every bench call hits
+        let pc_hit = bench("decode/pc_cache_hit_m31_d512", || {
+            black_box(pc.decode_cached(black_box(&pc_resp), &mut pc_cache));
+        });
+        println!(
+            "decode cache PC m=31: newton {:.2} µs vs cache-hit {:.2} µs  →  {:.1}× \
+             (target ≥ 5×)",
+            pc_newton.mean_ns / 1e3,
+            pc_hit.mean_ns / 1e3,
+            pc_newton.mean_ns / pc_hit.mean_ns
+        );
+        all.push(pc_newton);
+        all.push(pc_hit);
+
+        // PCMM n = 32, r = 2 → threshold m = 63 over 64 slots
+        let pcmm = PcmmScheme::new(32, 2);
+        let m_mm = pcmm.recovery_threshold();
+        let pcmm_resp: Vec<((usize, usize), Vec<f64>)> = (0..m_mm)
+            .map(|s| ((s / 2, s % 2), (0..d).map(|_| rng.normal()).collect()))
+            .collect();
+        let mm_newton = bench("decode/pcmm_newton_fresh_m63_d512", || {
+            black_box(pcmm.decode_interpolated(black_box(&pcmm_resp)));
+        });
+        all.push(bench("decode/pcmm_weights_fresh_m63_d512", || {
+            black_box(pcmm.decode(black_box(&pcmm_resp)));
+        }));
+        let mut mm_cache = DecodeCache::with_default_cap();
+        pcmm.decode_cached(&pcmm_resp, &mut mm_cache);
+        let mm_hit = bench("decode/pcmm_cache_hit_m63_d512", || {
+            black_box(pcmm.decode_cached(black_box(&pcmm_resp), &mut mm_cache));
+        });
+        println!(
+            "decode cache PCMM m=63: newton {:.2} µs vs cache-hit {:.2} µs  →  {:.1}× \
+             (target ≥ 5×)",
+            mm_newton.mean_ns / 1e3,
+            mm_hit.mean_ns / 1e3,
+            mm_newton.mean_ns / mm_hit.mean_ns
+        );
+        all.push(mm_newton);
+        all.push(mm_hit);
+    }
+
+    group("fleet n = 10_000 (chunked arrivals + completion kernel, r = 4, k = 9_000)");
+    {
+        // the fleet regime the chunked engine targets: one n = 10_000
+        // round end-to-end (sample → arrivals → k-th order statistic)
+        // must stay in low single-digit milliseconds, with zero
+        // allocation after the first chunk
+        let (n_f, r_f, k_f) = (10_000usize, 4usize, 9_000usize);
+        let chunk = chunk_rounds(n_f, r_f);
+        let fleet_model = ShiftedExponential::new(0.05, 4.0, 0.2, 2.0);
+        let mut rng = Rng::seed_from_u64(17);
+        let mut batch = DelayBatch::zeros(chunk, n_f, r_f);
+        let sample_b = bench(&format!("fleet/sample_chunk_{chunk}x10000x4"), || {
+            fleet_model.sample_batch_into(black_box(&mut batch), &mut rng);
+        });
+        let mut arrivals: Vec<f64> = Vec::new();
+        let arrive_b = bench(&format!("fleet/slot_arrivals_{chunk}x10000x4"), || {
+            slot_arrivals_batch(black_box(&batch), &mut arrivals);
+        });
+        slot_arrivals_batch(&batch, &mut arrivals);
+        let to_fleet = CyclicScheduler.schedule(n_f, r_f, &mut rng);
+        let flat = FlatTasks::new(&to_fleet);
+        let stride = n_f * r_f;
+        let mut task_times: Vec<f64> = Vec::with_capacity(n_f);
+        let complete_b = bench(&format!("fleet/completions_{chunk}rounds_k9000"), || {
+            let mut acc = 0.0;
+            for b in 0..chunk {
+                acc += completion_from_arrivals(
+                    &flat,
+                    &arrivals[b * stride..(b + 1) * stride],
+                    k_f,
+                    &mut task_times,
+                );
+            }
+            black_box(acc);
+        });
+        let per_round_us = (sample_b.mean_ns + arrive_b.mean_ns + complete_b.mean_ns)
+            / chunk as f64
+            / 1e3;
+        println!(
+            "fleet n=10,000 per-round: sample {:.0} µs + arrivals {:.0} µs + completion \
+             {:.0} µs = {per_round_us:.0} µs (target < 3000 µs end-to-end; completion \
+             alone < 500 µs)",
+            sample_b.mean_ns / chunk as f64 / 1e3,
+            arrive_b.mean_ns / chunk as f64 / 1e3,
+            complete_b.mean_ns / chunk as f64 / 1e3
+        );
+        all.push(sample_b);
+        all.push(arrive_b);
+        all.push(complete_b);
     }
 
     group("scheme layer: registry dispatch vs direct kernel (per 256-round chunk)");

@@ -26,7 +26,7 @@ use crate::delay::{DelayBatch, DelayModel, DelaySample, TruncatedGaussian, Trunc
 use crate::scheduler::{CyclicScheduler, Scheduler, StaircaseScheduler, ToMatrix};
 use crate::scheme::gc::GcEvaluator;
 use crate::scheme::{RoundView, SchemeEvaluator, SchemeId, SchemeRegistry};
-use crate::sim::{shard_rngs, slot_arrivals_batch, CompletionEstimate, MonteCarlo, BATCH_ROUNDS};
+use crate::sim::{chunk_rounds, shard_rngs, slot_arrivals_batch, CompletionEstimate, MonteCarlo};
 use crate::trace::TraceRecorder;
 use crate::util::rng::Rng;
 use crate::util::stats::{RunningStats, StreamingQuantiles};
@@ -249,12 +249,14 @@ pub fn run_policy_rounds(
     let mut last_plan: Option<RoundPlan> = None;
 
     let stride = n * r;
-    let mut batch = DelayBatch::zeros(BATCH_ROUNDS.min(rounds), n, r);
+    // fleet-aware chunk cap — identical round sequence for any chunking
+    let cap = chunk_rounds(n, r).min(rounds);
+    let mut batch = DelayBatch::zeros(cap, n, r);
     let mut tmp = DelaySample::zeros(n, r);
     let mut arrivals: Vec<f64> = Vec::new();
     let mut done = 0usize;
     while done < rounds {
-        let chunk = BATCH_ROUNDS.min(rounds - done);
+        let chunk = cap.min(rounds - done);
         if batch.rounds != chunk {
             batch = DelayBatch::zeros(chunk, n, r);
         }

@@ -1,0 +1,204 @@
+//! LRU cache of [`DecodeWeights`] keyed by the responding subset.
+//!
+//! The PC/PCMM decode weights depend only on *which* workers (or
+//! worker-slots) the master heard from — not on the round's data.
+//! Stragglers recur, so responder subsets repeat round-over-round and
+//! the fresh `O(m²)` weight build amortizes to a key lookup.  The cache
+//! is a bounded LRU (small linear-scan `Vec`; keys are short sorted id
+//! lists and the bound is tens of entries, so a hash map would cost
+//! more than it saves) with hit/miss/eviction counters surfaced through
+//! `ClusterReport` and trace replay.
+//!
+//! Keys must be **canonical** (sorted ascending) so the same subset
+//! hits regardless of arrival order — `PcScheme::decode_cached` /
+//! `PcmmScheme::decode_cached` canonicalize before lookup.
+
+use super::poly::DecodeWeights;
+
+/// Hit/miss/eviction counters for one cache (cheap to copy around).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DecodeCacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+impl DecodeCacheStats {
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    /// Fraction of lookups served from cache (0.0 when never used).
+    pub fn hit_rate(&self) -> f64 {
+        let lookups = self.lookups();
+        if lookups == 0 {
+            0.0
+        } else {
+            self.hits as f64 / lookups as f64
+        }
+    }
+
+    /// Fold another cache's counters in (per-run totals across schemes).
+    pub fn merge(&mut self, other: &DecodeCacheStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.evictions += other.evictions;
+    }
+}
+
+/// Bounded LRU from canonical responder-subset keys to decode weights.
+#[derive(Debug, Clone)]
+pub struct DecodeCache {
+    cap: usize,
+    /// LRU order: least-recently-used first, most-recent last.
+    entries: Vec<(Vec<usize>, DecodeWeights)>,
+    stats: DecodeCacheStats,
+}
+
+impl DecodeCache {
+    /// Default bound: generous for the paper's fleet sizes (an n-worker
+    /// PC run has at most `C(n, 2c−1)` subsets but in practice a
+    /// handful of straggler patterns dominate), tiny in memory (one
+    /// `m`-length weight vector per entry).
+    pub const DEFAULT_CAP: usize = 64;
+
+    pub fn new(cap: usize) -> Self {
+        assert!(cap >= 1, "cache bound must be ≥ 1");
+        Self {
+            cap,
+            entries: Vec::with_capacity(cap.min(Self::DEFAULT_CAP)),
+            stats: DecodeCacheStats::default(),
+        }
+    }
+
+    pub fn with_default_cap() -> Self {
+        Self::new(Self::DEFAULT_CAP)
+    }
+
+    /// Weights for `key` (a canonical, ascending responder id list):
+    /// cache hit refreshes recency; miss builds via `build`, evicting
+    /// the least-recently-used entry at the bound.
+    pub fn weights_for(
+        &mut self,
+        key: &[usize],
+        build: impl FnOnce() -> DecodeWeights,
+    ) -> &DecodeWeights {
+        if let Some(pos) = self.entries.iter().position(|(k, _)| k.as_slice() == key) {
+            self.stats.hits += 1;
+            let entry = self.entries.remove(pos);
+            self.entries.push(entry);
+        } else {
+            self.stats.misses += 1;
+            if self.entries.len() == self.cap {
+                self.entries.remove(0);
+                self.stats.evictions += 1;
+            }
+            self.entries.push((key.to_vec(), build()));
+        }
+        &self.entries.last().expect("just inserted or refreshed").1
+    }
+
+    pub fn stats(&self) -> DecodeCacheStats {
+        self.stats
+    }
+
+    /// Entries currently held.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn weights_of(key: &[usize]) -> DecodeWeights {
+        // distinct fake points derived from the key — enough to tell
+        // entries apart
+        let xs: Vec<f64> = key.iter().map(|&k| 1.0 + k as f64).collect();
+        DecodeWeights::build(&xs, &[0.0])
+    }
+
+    #[test]
+    fn hits_and_misses_are_counted() {
+        let mut c = DecodeCache::new(4);
+        c.weights_for(&[0, 1, 2], || weights_of(&[0, 1, 2]));
+        c.weights_for(&[0, 1, 3], || weights_of(&[0, 1, 3]));
+        c.weights_for(&[0, 1, 2], || panic!("must hit, not rebuild"));
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.evictions), (1, 2, 0));
+        assert_eq!(s.lookups(), 3);
+        assert!((s.hit_rate() - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn cached_weights_equal_fresh_build() {
+        let mut c = DecodeCache::new(2);
+        let key = [1usize, 4, 6];
+        let fresh = weights_of(&key);
+        let first = c.weights_for(&key, || weights_of(&key)).weights().to_vec();
+        let hit = c.weights_for(&key, || panic!("hit expected")).weights().to_vec();
+        assert_eq!(first, fresh.weights());
+        assert_eq!(hit, fresh.weights());
+    }
+
+    #[test]
+    fn evicts_least_recently_used_at_bound() {
+        let mut c = DecodeCache::new(2);
+        c.weights_for(&[0], || weights_of(&[0]));
+        c.weights_for(&[1], || weights_of(&[1]));
+        // touch [0] so [1] becomes LRU
+        c.weights_for(&[0], || panic!("hit expected"));
+        c.weights_for(&[2], || weights_of(&[2])); // evicts [1]
+        assert_eq!(c.stats().evictions, 1);
+        // [1] gone (rebuild), [0] still resident (hit)
+        let mut rebuilt = false;
+        c.weights_for(&[1], || {
+            rebuilt = true;
+            weights_of(&[1])
+        });
+        assert!(rebuilt, "LRU entry [1] should have been evicted");
+        // reinserting [1] at the bound evicts the now-LRU [0]
+        assert_eq!(c.stats().evictions, 2);
+    }
+
+    #[test]
+    fn hit_rate_zero_when_unused() {
+        let c = DecodeCache::with_default_cap();
+        assert_eq!(c.stats().hit_rate(), 0.0);
+        assert!(c.is_empty());
+        assert_eq!(c.cap(), DecodeCache::DEFAULT_CAP);
+    }
+
+    #[test]
+    fn merge_folds_counters() {
+        let mut a = DecodeCacheStats {
+            hits: 3,
+            misses: 2,
+            evictions: 1,
+        };
+        let b = DecodeCacheStats {
+            hits: 1,
+            misses: 4,
+            evictions: 0,
+        };
+        a.merge(&b);
+        assert_eq!(
+            a,
+            DecodeCacheStats {
+                hits: 4,
+                misses: 6,
+                evictions: 1
+            }
+        );
+    }
+}

@@ -15,9 +15,17 @@
 //! the completion-time metric (it would only worsen the coded schemes);
 //! the harness measures it separately and reports it alongside.
 
+//! Decode hot path: reconstruction is *linear* in the received
+//! evaluations, so both schemes apply precomputed per-subset
+//! [`poly::DecodeWeights`] (canonical responder order), and [`cache`]
+//! bounds an LRU of those weights keyed by the responding subset —
+//! repeated straggler patterns decode with zero solve work.
+
+pub mod cache;
 pub mod pc;
 pub mod pcmm;
 pub mod poly;
 
+pub use cache::{DecodeCache, DecodeCacheStats};
 pub use pc::PcScheme;
 pub use pcmm::PcmmScheme;

@@ -22,7 +22,8 @@
 use crate::delay::DelaySample;
 use crate::linalg::{vec_axpy, Mat};
 
-use super::poly::{lagrange_basis, NewtonPoly};
+use super::cache::DecodeCache;
+use super::poly::{lagrange_basis, DecodeWeights, NewtonPoly};
 
 /// The PC scheme for `n` tasks/workers at computation load `r ≥ 2`.
 #[derive(Debug, Clone)]
@@ -91,8 +92,62 @@ impl PcScheme {
     }
 
     /// Master decode: from `(worker, value)` pairs (≥ threshold),
-    /// interpolate `φ` and reconstruct `XᵀXθ = Σ_u φ(node_u)`.
+    /// reconstruct `XᵀXθ = Σ_u φ(node_u)`.
+    ///
+    /// The reconstruction is linear in the received evaluations, so
+    /// decode applies precomputed [`DecodeWeights`] for the responding
+    /// subset (canonicalized to ascending worker order first, making
+    /// the result a pure function of *which* workers responded — not
+    /// of arrival order).  Bit-identical to [`Self::decode_cached`] by
+    /// construction.
     pub fn decode(&self, responses: &[(usize, Vec<f64>)]) -> Vec<f64> {
+        self.decode_with(responses, None)
+    }
+
+    /// [`Self::decode`] through an LRU of per-subset weights: repeated
+    /// straggler patterns skip the `O(m²·c)` weight build entirely.
+    pub fn decode_cached(
+        &self,
+        responses: &[(usize, Vec<f64>)],
+        cache: &mut DecodeCache,
+    ) -> Vec<f64> {
+        self.decode_with(responses, Some(cache))
+    }
+
+    fn decode_with(
+        &self,
+        responses: &[(usize, Vec<f64>)],
+        cache: Option<&mut DecodeCache>,
+    ) -> Vec<f64> {
+        assert!(
+            responses.len() >= self.recovery_threshold(),
+            "PC needs {} responses, got {}",
+            self.recovery_threshold(),
+            responses.len()
+        );
+        let take = self.recovery_threshold();
+        // canonical subset order: ascending worker id
+        let mut order: Vec<usize> = (0..take).collect();
+        order.sort_unstable_by_key(|&i| responses[i].0);
+        let key: Vec<usize> = order.iter().map(|&i| responses[i].0).collect();
+        let ys: Vec<&[f64]> = order.iter().map(|&i| responses[i].1.as_slice()).collect();
+        match cache {
+            Some(c) => c.weights_for(&key, || self.decode_weights(&key)).apply(&ys),
+            None => self.decode_weights(&key).apply(&ys),
+        }
+    }
+
+    /// Decode weights for a canonical (ascending) responding worker
+    /// subset — the cacheable, data-independent part of [`Self::decode`].
+    pub fn decode_weights(&self, workers: &[usize]) -> DecodeWeights {
+        let xs: Vec<f64> = workers.iter().map(|&w| self.points[w]).collect();
+        DecodeWeights::build(&xs, &self.nodes)
+    }
+
+    /// Reference decode via Newton divided-difference interpolation —
+    /// the original `O(m²·d)` per-round path, kept as the numerical
+    /// cross-check and the "fresh solve" bench baseline.
+    pub fn decode_interpolated(&self, responses: &[(usize, Vec<f64>)]) -> Vec<f64> {
         assert!(
             responses.len() >= self.recovery_threshold(),
             "PC needs {} responses, got {}",
@@ -260,5 +315,55 @@ mod tests {
     fn decode_rejects_too_few() {
         let pc = PcScheme::new(6, 2);
         pc.decode(&[(0, vec![0.0])]);
+    }
+
+    #[test]
+    fn weight_decode_matches_newton_reference() {
+        let mut rng = Rng::seed_from_u64(17);
+        for (n, r) in [(4usize, 2usize), (6, 3), (8, 4)] {
+            let pc = PcScheme::new(n, r);
+            let parts = random_parts(n, 7, 4, &mut rng);
+            let theta: Vec<f64> = (0..7).map(|_| rng.normal()).collect();
+            let resp: Vec<_> = (0..pc.recovery_threshold())
+                .map(|w| (w, pc.worker_compute(w, &parts, &theta)))
+                .collect();
+            let (fast, reference) = (pc.decode(&resp), pc.decode_interpolated(&resp));
+            for lane in 0..7 {
+                assert!(
+                    (fast[lane] - reference[lane]).abs() < 1e-9 * (1.0 + reference[lane].abs()),
+                    "n={n} r={r} lane {lane}: {} vs {}",
+                    fast[lane],
+                    reference[lane]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cached_decode_bit_identical_across_arrival_orders() {
+        use crate::coded::DecodeCache;
+        let mut rng = Rng::seed_from_u64(23);
+        let pc = PcScheme::new(6, 3); // threshold 3
+        let parts = random_parts(6, 8, 4, &mut rng);
+        let theta: Vec<f64> = (0..8).map(|_| rng.normal()).collect();
+        let computed: Vec<Vec<f64>> = (0..6)
+            .map(|w| pc.worker_compute(w, &parts, &theta))
+            .collect();
+        let mut cache = DecodeCache::with_default_cap();
+        // the same subset {1, 3, 5} in three arrival orders: fresh and
+        // cached decodes must all be bit-identical (canonical order)
+        let mut want: Option<Vec<f64>> = None;
+        for order in [[5usize, 1, 3], [3, 5, 1], [1, 3, 5]] {
+            let resp: Vec<_> = order.iter().map(|&w| (w, computed[w].clone())).collect();
+            let fresh = pc.decode(&resp);
+            let cached = pc.decode_cached(&resp, &mut cache);
+            assert_eq!(fresh, cached, "cached ≠ fresh for order {order:?}");
+            if let Some(w) = &want {
+                assert_eq!(w, &fresh, "arrival order {order:?} changed the decode");
+            }
+            want = Some(fresh);
+        }
+        let stats = cache.stats();
+        assert_eq!((stats.hits, stats.misses), (2, 1));
     }
 }

@@ -28,7 +28,8 @@
 use crate::delay::DelaySample;
 use crate::linalg::Mat;
 
-use super::poly::{chebyshev_points, lagrange_basis, NewtonPoly};
+use super::cache::DecodeCache;
+use super::poly::{chebyshev_points, lagrange_basis, DecodeWeights, NewtonPoly};
 
 /// The PCMM scheme for `n` tasks/workers at computation load `r ≥ 2`.
 #[derive(Debug, Clone)]
@@ -89,7 +90,72 @@ impl PcmmScheme {
     }
 
     /// Master decode from `((worker, slot), value)` pairs.
+    ///
+    /// Linear-weight reconstruction over the responding slot subset,
+    /// canonicalized to ascending global slot id `worker·r + slot` —
+    /// the result depends only on *which* evaluations arrived, not on
+    /// their order.  Bit-identical to [`Self::decode_cached`].
     pub fn decode(&self, responses: &[((usize, usize), Vec<f64>)]) -> Vec<f64> {
+        self.decode_with(responses, None)
+    }
+
+    /// [`Self::decode`] through an LRU of per-subset weights (keys are
+    /// global slot ids): repeated straggler patterns skip the weight
+    /// build.
+    pub fn decode_cached(
+        &self,
+        responses: &[((usize, usize), Vec<f64>)],
+        cache: &mut DecodeCache,
+    ) -> Vec<f64> {
+        self.decode_with(responses, Some(cache))
+    }
+
+    fn decode_with(
+        &self,
+        responses: &[((usize, usize), Vec<f64>)],
+        cache: Option<&mut DecodeCache>,
+    ) -> Vec<f64> {
+        assert!(
+            responses.len() >= self.recovery_threshold(),
+            "PCMM needs {} evaluations, got {}",
+            self.recovery_threshold(),
+            responses.len()
+        );
+        let take = self.recovery_threshold();
+        // canonical subset order: ascending global slot id
+        let mut order: Vec<usize> = (0..take).collect();
+        order.sort_unstable_by_key(|&i| {
+            let (w, j) = responses[i].0;
+            w * self.r + j
+        });
+        let key: Vec<usize> = order
+            .iter()
+            .map(|&i| {
+                let (w, j) = responses[i].0;
+                w * self.r + j
+            })
+            .collect();
+        let ys: Vec<&[f64]> = order.iter().map(|&i| responses[i].1.as_slice()).collect();
+        match cache {
+            Some(c) => c.weights_for(&key, || self.decode_weights(&key)).apply(&ys),
+            None => self.decode_weights(&key).apply(&ys),
+        }
+    }
+
+    /// Decode weights for a canonical (ascending) global-slot-id
+    /// subset — the cacheable, data-independent part of decode.
+    pub fn decode_weights(&self, slots: &[usize]) -> DecodeWeights {
+        let xs: Vec<f64> = slots
+            .iter()
+            .map(|&s| self.beta(s / self.r, s % self.r))
+            .collect();
+        DecodeWeights::build(&xs, &self.nodes)
+    }
+
+    /// Reference decode via Newton divided-difference interpolation —
+    /// the original per-round path, kept as the numerical cross-check
+    /// and the "fresh solve" bench baseline.
+    pub fn decode_interpolated(&self, responses: &[((usize, usize), Vec<f64>)]) -> Vec<f64> {
         assert!(
             responses.len() >= self.recovery_threshold(),
             "PCMM needs {} evaluations, got {}",
@@ -259,5 +325,65 @@ mod tests {
     fn decode_rejects_too_few() {
         let s = PcmmScheme::new(3, 2);
         s.decode(&[((0, 0), vec![1.0])]);
+    }
+
+    #[test]
+    fn weight_decode_matches_newton_reference() {
+        let mut rng = Rng::seed_from_u64(19);
+        for (n, r) in [(3usize, 2usize), (4, 2), (5, 3)] {
+            let s = PcmmScheme::new(n, r);
+            let parts = random_parts(n, 6, 3, &mut rng);
+            let theta: Vec<f64> = (0..6).map(|_| rng.normal()).collect();
+            let mut resp = Vec::new();
+            'outer: for j in 0..r {
+                for i in 0..n {
+                    resp.push(((i, j), s.worker_compute(i, j, &parts, &theta)));
+                    if resp.len() == s.recovery_threshold() {
+                        break 'outer;
+                    }
+                }
+            }
+            let (fast, reference) = (s.decode(&resp), s.decode_interpolated(&resp));
+            for lane in 0..6 {
+                assert!(
+                    (fast[lane] - reference[lane]).abs() < 1e-7 * (1.0 + reference[lane].abs()),
+                    "n={n} r={r} lane {lane}: {} vs {}",
+                    fast[lane],
+                    reference[lane]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cached_decode_bit_identical_across_arrival_orders() {
+        use crate::coded::DecodeCache;
+        let mut rng = Rng::seed_from_u64(29);
+        let s = PcmmScheme::new(3, 2); // threshold 5 of 6 slots
+        let parts = random_parts(3, 5, 3, &mut rng);
+        let theta: Vec<f64> = (0..5).map(|_| rng.normal()).collect();
+        let slots: Vec<(usize, usize)> = (0..3).flat_map(|i| (0..2).map(move |j| (i, j))).collect();
+        let computed: Vec<Vec<f64>> = slots
+            .iter()
+            .map(|&(i, j)| s.worker_compute(i, j, &parts, &theta))
+            .collect();
+        let mut cache = DecodeCache::with_default_cap();
+        // same 5-slot subset (drop slot index 3) in two arrival orders
+        let mut want: Option<Vec<f64>> = None;
+        for order in [[0usize, 1, 2, 4, 5], [5, 2, 0, 4, 1]] {
+            let resp: Vec<_> = order
+                .iter()
+                .map(|&si| (slots[si], computed[si].clone()))
+                .collect();
+            let fresh = s.decode(&resp);
+            let cached = s.decode_cached(&resp, &mut cache);
+            assert_eq!(fresh, cached, "cached ≠ fresh for order {order:?}");
+            if let Some(w) = &want {
+                assert_eq!(w, &fresh, "arrival order {order:?} changed the decode");
+            }
+            want = Some(fresh);
+        }
+        let stats = cache.stats();
+        assert_eq!((stats.hits, stats.misses), (1, 1));
     }
 }

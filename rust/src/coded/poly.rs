@@ -92,6 +92,89 @@ impl NewtonPoly {
     }
 }
 
+/// Precomputed linear decode weights for one responder subset.
+///
+/// The master's reconstruction `Σ_u φ(node_u)` is *linear* in the
+/// received evaluations: with responder points `x_0 … x_{m−1}` and
+/// reconstruction nodes `u_0 … u_{c−1}`,
+///
+/// ```text
+/// Σ_u φ(u)  =  Σ_i w_i · y_i,      w_i = Σ_u ℓ_i(u)
+/// ```
+///
+/// where `ℓ_i` is the Lagrange basis over the responder points.  The
+/// weights depend only on *which* workers responded — not on the data —
+/// so they are the natural unit to cache across rounds (stragglers
+/// recur, subsets repeat).  Build is `O(c·m²)` independent of the
+/// vector dimension `d`; [`Self::apply`] is `O(m·d)`, versus the
+/// `O(m²·d)` divided-difference solve of [`NewtonPoly`] per round.
+///
+/// Numerics: the product-form basis evaluates `ℓ_i(u)` exactly as
+/// [`lagrange_basis`] does (Kronecker delta when a node coincides with
+/// a responder point), and the mirror-validated error is at or below
+/// the Newton path's on every PC/PCMM shape the repo tests.
+#[derive(Debug, Clone)]
+pub struct DecodeWeights {
+    weights: Vec<f64>,
+}
+
+impl DecodeWeights {
+    /// Build the weights for responder points `xs` and reconstruction
+    /// nodes `recon`.  `xs` must be pairwise distinct.
+    pub fn build(xs: &[f64], recon: &[f64]) -> Self {
+        assert!(!xs.is_empty(), "need at least one responder point");
+        for (i, &a) in xs.iter().enumerate() {
+            for &b in &xs[..i] {
+                assert!(
+                    (a - b).abs() > 1e-12 * (1.0 + a.abs().max(b.abs())),
+                    "responder points must be distinct (got {a} ≈ {b})"
+                );
+            }
+        }
+        let weights = (0..xs.len())
+            .map(|i| recon.iter().map(|&u| lagrange_basis(xs, i, u)).sum())
+            .collect();
+        Self { weights }
+    }
+
+    /// Number of responder evaluations the weights combine.
+    pub fn len(&self) -> usize {
+        self.weights.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.weights.is_empty()
+    }
+
+    /// The raw weight vector (bench/inspection).
+    pub fn weights(&self) -> &[f64] {
+        &self.weights
+    }
+
+    /// Combine the responder evaluations: `out = Σ_i w_i · ys_i`.
+    /// `ys` must match the build order of the responder points.
+    pub fn apply(&self, ys: &[&[f64]]) -> Vec<f64> {
+        assert_eq!(ys.len(), self.weights.len(), "evaluation count mismatch");
+        let dim = ys[0].len();
+        let mut out = vec![0.0f64; dim];
+        self.apply_into(ys, &mut out);
+        out
+    }
+
+    /// [`Self::apply`] into a caller-provided, correctly-sized buffer
+    /// (the master's hot path — no per-round allocation).
+    pub fn apply_into(&self, ys: &[&[f64]], out: &mut [f64]) {
+        assert_eq!(ys.len(), self.weights.len(), "evaluation count mismatch");
+        out.fill(0.0);
+        for (&w, y) in self.weights.iter().zip(ys) {
+            assert_eq!(y.len(), out.len(), "ragged evaluation vectors");
+            for (o, &v) in out.iter_mut().zip(y.iter()) {
+                *o += w * v;
+            }
+        }
+    }
+}
+
 /// Scalar Lagrange basis polynomial `ℓ_u(x)` over the given nodes:
 /// `Π_{m ≠ u} (x − node_m) / (node_u − node_m)`.
 pub fn lagrange_basis(nodes: &[f64], u: usize, x: f64) -> f64 {
@@ -227,5 +310,65 @@ mod tests {
     #[should_panic(expected = "distinct")]
     fn rejects_duplicate_nodes() {
         NewtonPoly::interpolate(&[1.0, 1.0], &[vec![0.0], vec![1.0]]);
+    }
+
+    #[test]
+    fn decode_weights_match_newton_reconstruction() {
+        // Σ_u φ(u) computed two ways: divided-difference interpolation
+        // + eval_sum, versus the precomputed linear weights
+        let mut rng = Rng::seed_from_u64(9);
+        for (m, recon) in [(3usize, vec![1.0, 2.0]), (5, vec![1.0, 2.0, 3.0]), (7, vec![2.5])] {
+            let dim = 6;
+            let coef: Vec<Vec<f64>> = (0..m)
+                .map(|_| (0..dim).map(|_| rng.range_f64(-2.0, 2.0)).collect())
+                .collect();
+            let eval = |x: f64| -> Vec<f64> {
+                (0..dim)
+                    .map(|l| coef.iter().rev().fold(0.0, |acc, c| acc * x + c[l]))
+                    .collect()
+            };
+            let xs: Vec<f64> = (0..m).map(|i| 1.0 + i as f64).collect();
+            let ys: Vec<Vec<f64>> = xs.iter().map(|&x| eval(x)).collect();
+            let want = NewtonPoly::interpolate(&xs, &ys).eval_sum(&recon);
+            let w = DecodeWeights::build(&xs, &recon);
+            let refs: Vec<&[f64]> = ys.iter().map(|y| y.as_slice()).collect();
+            let got = w.apply(&refs);
+            for l in 0..dim {
+                assert!(
+                    (got[l] - want[l]).abs() < 1e-9 * (1.0 + want[l].abs()),
+                    "m={m} lane {l}: weights {} vs newton {}",
+                    got[l],
+                    want[l]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn decode_weights_kronecker_when_node_is_a_responder_point() {
+        // reconstruction node coincides with a responder point: the
+        // product form collapses ℓ_i to the Kronecker delta, so the
+        // weight contribution is exactly 1.0 on that responder
+        let xs = [1.0, 2.0, 3.0];
+        let w = DecodeWeights::build(&xs, &[2.0]);
+        assert_eq!(w.weights(), &[0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn apply_into_reuses_buffer_and_matches_apply() {
+        let xs = [1.0, 2.0, 4.0];
+        let w = DecodeWeights::build(&xs, &[1.5, 3.0]);
+        let ys = [vec![1.0, -2.0], vec![0.5, 4.0], vec![-3.0, 0.25]];
+        let refs: Vec<&[f64]> = ys.iter().map(|y| y.as_slice()).collect();
+        let fresh = w.apply(&refs);
+        let mut buf = vec![9.0; 2]; // stale garbage must be overwritten
+        w.apply_into(&refs, &mut buf);
+        assert_eq!(fresh, buf);
+    }
+
+    #[test]
+    #[should_panic(expected = "distinct")]
+    fn decode_weights_reject_duplicate_points() {
+        DecodeWeights::build(&[2.0, 2.0], &[1.0]);
     }
 }

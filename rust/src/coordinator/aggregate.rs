@@ -34,11 +34,23 @@
 //! stranded-overlap case only delays (never prevents) the `k`-distinct
 //! rule in the paper's regimes.
 //!
+//! Layout: accepted sums live in one flat slot arena (`sums`, a single
+//! `d`-strided `Vec<f64>`) with a free-list for recycled slots; the
+//! per-block interval lists hold only `{start, len, slot}` metadata.
+//! The aggregator is built once per run and [`RoundAggregator::reset`]
+//! between rounds — no per-flush or per-round `Vec` churn: slot copies
+//! are `copy_from_slice` into preallocated storage and the `finish`
+//! outputs are reused buffers.  This mirrors the structure-of-arrays
+//! audit `sim/batch.rs` did for delay sampling.
+//!
 //! Determinism: [`RoundAggregator::finish`] emits winners and the
 //! gradient partial-sum in **canonical task order** (blocks ascending,
 //! ranges ascending within a block), independent of arrival order —
 //! the property `rust/tests/partial_sum.rs` pins (bit-identical θ
 //! across `s` and arrival orders on exactly-representable values).
+//! The arena layout keeps the accumulation arithmetic (one `vec_axpy`
+//! per accepted range, canonical order) identical to the
+//! per-range-`Vec` implementation it replaced, so θ is bit-identical.
 
 use crate::linalg::vec_axpy;
 
@@ -57,22 +69,34 @@ pub enum Offer {
     Malformed,
 }
 
-/// An accepted range: `[start, start + len)` plus its `d`-length sum.
-struct AccRange {
+/// An accepted range: `[start, start + len)`; its `d`-length sum lives
+/// in arena slot `slot` of the owning aggregator.
+struct RangeMeta {
     start: usize,
     len: usize,
-    sum: Vec<f64>,
+    slot: usize,
 }
 
-/// Per-round aggregation state for the uncoded `DistinctTasks` rule:
-/// one list of accepted, pairwise-disjoint ranges per canonical block.
+/// Aggregation state for the uncoded `DistinctTasks` rule: one list of
+/// accepted, pairwise-disjoint ranges per canonical block, sums in a
+/// flat slot arena.  Built once per run, [`Self::reset`] per round.
 pub struct RoundAggregator {
     n: usize,
     d: usize,
     s: usize,
     k: usize,
-    blocks: Vec<Vec<AccRange>>,
+    /// interval metadata per canonical block, reused across rounds
+    blocks: Vec<Vec<RangeMeta>>,
+    /// blocks holding ≥ 1 accepted range this round (sparse reset/scan)
+    touched: Vec<usize>,
+    /// flat `d`-strided sum arena; slot `i` is `sums[i·d .. (i+1)·d]`
+    sums: Vec<f64>,
+    /// recycled arena slots
+    free: Vec<usize>,
     distinct: usize,
+    /// reused `finish` outputs
+    winners: Vec<usize>,
+    total: Vec<f64>,
 }
 
 impl RoundAggregator {
@@ -87,8 +111,35 @@ impl RoundAggregator {
             s,
             k,
             blocks: (0..n.div_ceil(s)).map(|_| Vec::new()).collect(),
+            touched: Vec::new(),
+            sums: Vec::new(),
+            free: Vec::new(),
             distinct: 0,
+            winners: Vec::new(),
+            total: vec![0.0; d],
         }
+    }
+
+    /// Clear round state for reuse, keeping every allocation (interval
+    /// lists, arena, free-list, output buffers) warm for the next round.
+    pub fn reset(&mut self) {
+        while let Some(b) = self.touched.pop() {
+            for r in self.blocks[b].drain(..) {
+                self.free.push(r.slot);
+            }
+        }
+        self.distinct = 0;
+    }
+
+    /// Copy `sum` into a (recycled or fresh) arena slot.
+    fn alloc_slot(&mut self, sum: &[f64]) -> usize {
+        let slot = self.free.pop().unwrap_or_else(|| {
+            let next = self.sums.len() / self.d;
+            self.sums.resize(self.sums.len() + self.d, 0.0);
+            next
+        });
+        self.sums[slot * self.d..(slot + 1) * self.d].copy_from_slice(sum);
+        slot
     }
 
     /// Offer one received block: a contiguous ascending task range and
@@ -104,7 +155,7 @@ impl RoundAggregator {
         if (start / self.s) != ((start + len - 1) / self.s) {
             return Offer::Malformed; // straddles a canonical boundary
         }
-        let ranges = &mut self.blocks[start / self.s];
+        let block = start / self.s;
         let end = start + len;
         // `inter` measures the covered part of the incoming range (for
         // duplicate detection); `dropped_len` is the *full* length of
@@ -112,7 +163,7 @@ impl RoundAggregator {
         // replacement would evict whole, so strict coverage growth
         // requires `len > dropped_len`, not merely `len > inter`
         let (mut inter, mut dropped_len) = (0usize, 0usize);
-        for r in ranges.iter() {
+        for r in self.blocks[block].iter() {
             let ov = end.min(r.start + r.len).saturating_sub(start.max(r.start));
             if ov > 0 {
                 inter += ov;
@@ -123,23 +174,30 @@ impl RoundAggregator {
             return Offer::Duplicate;
         }
         if inter == 0 {
-            ranges.push(AccRange {
-                start,
-                len,
-                sum: sum.to_vec(),
-            });
+            if self.blocks[block].is_empty() {
+                self.touched.push(block);
+            }
+            let slot = self.alloc_slot(sum);
+            self.blocks[block].push(RangeMeta { start, len, slot });
             self.distinct += len;
             return Offer::Accepted { new_distinct: len };
         }
         // partial overlap: replace the intersecting ranges only if the
-        // swap strictly grows coverage (monotone acceptance)
+        // swap strictly grows coverage (monotone acceptance); evicted
+        // slots return to the free-list before the incoming claims one
         if len > dropped_len {
-            ranges.retain(|r| r.start + r.len <= start || r.start >= end);
-            ranges.push(AccRange {
-                start,
-                len,
-                sum: sum.to_vec(),
-            });
+            {
+                let Self { blocks, free, .. } = self;
+                blocks[block].retain(|r| {
+                    let keep = r.start + r.len <= start || r.start >= end;
+                    if !keep {
+                        free.push(r.slot);
+                    }
+                    keep
+                });
+            }
+            let slot = self.alloc_slot(sum);
+            self.blocks[block].push(RangeMeta { start, len, slot });
             let gained = len - dropped_len;
             self.distinct += gained;
             Offer::Accepted {
@@ -162,15 +220,29 @@ impl RoundAggregator {
 
     /// Emit the winners (canonical task order) and the gradient
     /// partial-sum `Σ_{t ∈ winners} h(X_t)`, accumulated in canonical
-    /// order so the result is independent of arrival order.
-    pub fn finish(mut self) -> (Vec<usize>, Vec<f64>) {
-        let mut winners = Vec::with_capacity(self.distinct);
-        let mut total = vec![0.0f64; self.d];
-        for ranges in &mut self.blocks {
+    /// order so the result is independent of arrival order.  The
+    /// returned slices borrow reused internal buffers — copy out what
+    /// must outlive the next `reset`/`finish`.
+    pub fn finish(&mut self) -> (&[usize], &[f64]) {
+        self.winners.clear();
+        self.total.clear();
+        self.total.resize(self.d, 0.0);
+        self.touched.sort_unstable();
+        let Self {
+            blocks,
+            touched,
+            sums,
+            winners,
+            total,
+            d,
+            ..
+        } = self;
+        for &b in touched.iter() {
+            let ranges = &mut blocks[b];
             ranges.sort_unstable_by_key(|r| r.start);
-            for range in ranges.iter() {
-                winners.extend(range.start..range.start + range.len);
-                vec_axpy(&mut total, 1.0, &range.sum);
+            for r in ranges.iter() {
+                winners.extend(r.start..r.start + r.len);
+                vec_axpy(total, 1.0, &sums[r.slot * *d..(r.slot + 1) * *d]);
             }
         }
         (winners, total)
@@ -284,5 +356,49 @@ mod tests {
         let (winners, total) = agg.finish();
         assert_eq!(winners, vec![0, 1, 2, 3, 4]);
         assert_eq!(total, vec![15.0]);
+    }
+
+    #[test]
+    fn reset_reuses_state_identically_to_a_fresh_aggregator() {
+        // round 1 exercises accept / duplicate / replace, then reset;
+        // round 2 on the reused aggregator must match a fresh one
+        // bit-for-bit (recycled arena slots, warm buffers and all)
+        let mut reused = RoundAggregator::new(6, 3, 3, 6);
+        assert_eq!(offer_range(&mut reused, 0, 2, 3), Offer::Accepted { new_distinct: 2 });
+        assert_eq!(offer_range(&mut reused, 3, 6, 3), Offer::Accepted { new_distinct: 3 });
+        assert_eq!(offer_range(&mut reused, 0, 3, 3), Offer::Accepted { new_distinct: 1 });
+        let _ = reused.finish();
+        reused.reset();
+        assert_eq!(reused.distinct(), 0);
+        assert!(!reused.complete());
+
+        let mut fresh = RoundAggregator::new(6, 3, 3, 6);
+        let offers = [(4usize, 6usize), (4, 6), (1, 3), (0, 3), (3, 6)];
+        for &(lo, hi) in &offers {
+            assert_eq!(
+                offer_range(&mut reused, lo, hi, 3),
+                offer_range(&mut fresh, lo, hi, 3),
+                "offer [{lo}, {hi}) verdicts diverged after reset"
+            );
+        }
+        let (w1, t1) = reused.finish();
+        let (w2, t2) = fresh.finish();
+        assert_eq!(w1, w2);
+        assert_eq!(t1, t2);
+    }
+
+    #[test]
+    fn finish_is_idempotent_on_reused_buffers() {
+        let mut agg = RoundAggregator::new(4, 2, 2, 4);
+        offer_range(&mut agg, 2, 4, 2);
+        offer_range(&mut agg, 0, 2, 2);
+        let (w1, t1) = {
+            let (w, t) = agg.finish();
+            (w.to_vec(), t.to_vec())
+        };
+        let (w2, t2) = agg.finish();
+        assert_eq!(w1, w2);
+        assert_eq!(t1, t2);
+        assert_eq!(w1, vec![0, 1, 2, 3]);
     }
 }

@@ -35,7 +35,7 @@ use super::aggregate::{Offer, RoundAggregator};
 use super::protocol::Msg;
 use super::{now_us, TaskDelaySampler};
 use crate::adaptive::{GroupAllocation, PolicyEngine, PolicyKind, WorkerEstimate};
-use crate::coded::{PcScheme, PcmmScheme};
+use crate::coded::{DecodeCache, DecodeCacheStats, PcScheme, PcmmScheme};
 use crate::data::Dataset;
 use crate::delay::DelayModelKind;
 use crate::gd::{coded_update, UncodedMaster};
@@ -125,6 +125,10 @@ pub struct ClusterReport {
     pub worker_estimates: Vec<WorkerEstimate>,
     pub final_theta: Vec<f64>,
     pub final_loss: f64,
+    /// decode-weight cache counters for the run (`None` on uncoded
+    /// wires) — stragglers recur, so the hit rate is the fraction of
+    /// rounds that decoded without any Lagrange solve work
+    pub decode_cache: Option<DecodeCacheStats>,
 }
 
 impl ClusterReport {
@@ -413,6 +417,15 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
     let mut trace_msgs = vec![0usize; n];
     let mut logs = Vec::with_capacity(rounds);
     let d = dataset.d;
+    // per-run hot-path state, persistent across rounds: the uncoded
+    // aggregator keeps its slot arena warm (`reset` per round), the
+    // coded wires keep an LRU of per-subset decode weights
+    let mut agg = if coded.is_none() {
+        Some(RoundAggregator::new(n, d, group, k))
+    } else {
+        None
+    };
+    let mut decode_cache = coded.as_ref().map(|_| DecodeCache::with_default_cap());
 
     for round in 0..rounds {
         // ---- the policy's round-boundary re-plan ---------------------------
@@ -467,11 +480,9 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
         // collect until the completion rule fires: k distinct tasks
         // (uncoded, duplicate-safe range merge) or the threshold-th
         // evaluation (coded)
-        let mut agg = if coded.is_none() {
-            Some(RoundAggregator::new(n, d, group, k))
-        } else {
-            None
-        };
+        if let Some(a) = agg.as_mut() {
+            a.reset();
+        }
         let mut responses: Vec<(usize, Vec<f64>)> = Vec::new();
         let mut seen_keys: HashSet<usize> = HashSet::new();
         trace_msgs.fill(0);
@@ -618,32 +629,29 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
         // ---- the scheme's master update ------------------------------------
         let winners: Vec<usize> = match &coded {
             None => {
-                let (winners, h_sum) = agg.take().expect("uncoded aggregator").finish();
+                let (winners, h_sum) = agg.as_mut().expect("uncoded aggregator").finish();
                 if rule == CompletionRule::DistinctTasks {
-                    master.apply_aggregate(
-                        &winners,
-                        &h_sum,
-                        n,
-                        dataset.padded_samples(),
-                        &mut rng,
-                    );
+                    master.apply_aggregate(winners, h_sum, n, dataset.padded_samples(), &mut rng);
                 }
                 // an uncoded Messages rule (hand-built configs only) is
                 // a pure timing round: θ stays frozen
-                winners
+                winners.to_vec()
             }
             Some(c) => {
                 // decode input is key-shaped per construction; the
                 // update and winner bookkeeping are shared
+                let cache = decode_cache.as_mut().expect("coded decode cache");
                 let xxt = match c {
-                    Coded::Pc(pc) => pc.decode(&responses[..pc.recovery_threshold()]),
+                    Coded::Pc(pc) => {
+                        pc.decode_cached(&responses[..pc.recovery_threshold()], cache)
+                    }
                     Coded::Pcmm(pcmm) => {
                         let take = pcmm.recovery_threshold();
                         let pairs: Vec<((usize, usize), Vec<f64>)> = responses[..take]
                             .iter()
                             .map(|(key, v)| ((key / r, key % r), v.clone()))
                             .collect();
-                        pcmm.decode(&pairs)
+                        pcmm.decode_cached(&pairs, cache)
                     }
                 };
                 coded_update(
@@ -697,6 +705,7 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
             .unwrap_or_default(),
         final_theta: master.theta,
         final_loss,
+        decode_cache: decode_cache.as_ref().map(|c| c.stats()),
     })
 }
 

@@ -155,6 +155,17 @@ fn run_trace_replay(args: &Args, opts: &Options, store: &TraceStore, name: &str)
     for (scheme, policy, reason) in &out.skipped {
         println!("  skipped {scheme} × {policy}: {reason}");
     }
+    for d in &out.decode_cache {
+        println!(
+            "  decode cache {}: {:.1}% hit rate over {} rounds ({} hits / {} misses / {} evictions)",
+            d.scheme,
+            100.0 * d.stats.hit_rate(),
+            d.rounds,
+            d.stats.hits,
+            d.stats.misses,
+            d.stats.evictions
+        );
+    }
     println!("  completion digest: {:016x} (pinned-seed determinism handle)", out.digest);
     opts.write(&t, "trace_replay")?;
     Ok(())
@@ -696,6 +707,15 @@ fn run() -> Result<()> {
                 report.final_loss,
                 report.mean_wire_bytes() / 1024.0
             );
+            if let Some(stats) = &report.decode_cache {
+                println!(
+                    "  decode cache: {:.1}% hit rate ({} hits / {} misses / {} evictions)",
+                    100.0 * stats.hit_rate(),
+                    stats.hits,
+                    stats.misses,
+                    stats.evictions
+                );
+            }
             if let Some(rec_path) = args.str_opt("record") {
                 // the master's per-Result-frame trace (real socket
                 // timings) — feeds `trace fit` / `sim --from-trace`

@@ -46,7 +46,7 @@ pub use registry::SchemeRegistry;
 
 use crate::delay::{DelayBatch, DelayModel};
 use crate::scheduler::Scheduler;
-use crate::sim::{slot_arrivals_batch, BATCH_ROUNDS};
+use crate::sim::{chunk_rounds, slot_arrivals_batch};
 use crate::util::rng::Rng;
 
 /// Scheme identifier used across harness, reports, configs and CLI — a
@@ -172,11 +172,14 @@ pub fn run_rounds<'a>(
     emit: &mut dyn FnMut(usize, f64),
 ) {
     let stride = n * r;
-    let mut batch = DelayBatch::zeros(BATCH_ROUNDS.min(rounds.max(1)), n, r);
+    // fleet-aware chunking: same round-sequential delay stream for any
+    // chunk size, but bounded per-shard memory at n = 10_000 scale
+    let cap = chunk_rounds(n, r);
+    let mut batch = DelayBatch::zeros(cap.min(rounds.max(1)), n, r);
     let mut arrivals: Vec<f64> = Vec::new();
     let mut done = 0usize;
     while done < rounds {
-        let chunk = BATCH_ROUNDS.min(rounds - done);
+        let chunk = cap.min(rounds - done);
         if batch.rounds != chunk {
             batch = DelayBatch::zeros(chunk, n, r);
         }

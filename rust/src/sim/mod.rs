@@ -28,7 +28,8 @@ pub use batch::{
     slot_arrivals_batch, FlatTasks,
 };
 pub use montecarlo::{
-    shard_layout, shard_rngs, CompletionEstimate, Engine, MonteCarlo, BATCH_ROUNDS,
+    chunk_rounds, shard_layout, shard_rngs, CompletionEstimate, Engine, MonteCarlo, BATCH_ROUNDS,
+    MAX_CHUNK_SLOTS,
 };
 pub use pool::WorkerPool;
 

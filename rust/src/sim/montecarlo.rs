@@ -53,6 +53,22 @@ use super::pool::WorkerPool;
 /// enough that a 16×16 batch stays ~1 MB.
 pub const BATCH_ROUNDS: usize = 256;
 
+/// Per-chunk slot budget for fleet-scale shapes: comp + comm + arrivals
+/// at `f64` cost 24 bytes/slot, so 2²¹ slots ≈ 50 MB per shard — the
+/// ceiling a fixed 256-round chunk would blow through at `n = 10_000`
+/// (256 rounds × 40 000 slots ≈ 245 MB per shard).
+pub const MAX_CHUNK_SLOTS: usize = 1 << 21;
+
+/// Rounds per [`DelayBatch`] chunk adapted to the fleet size: the full
+/// [`BATCH_ROUNDS`] for every paper-scale shape (`n·r ≤ 8192`), scaled
+/// down to hold [`MAX_CHUNK_SLOTS`] for big fleets.  Chunking never
+/// affects results — delays are sampled round-sequentially, so any
+/// chunk split concatenates to the identical stream (pinned by the
+/// batched-vs-scalar bit-identity tests and `tests/fleet.rs`).
+pub fn chunk_rounds(n: usize, r: usize) -> usize {
+    (MAX_CHUNK_SLOTS / (n * r).max(1)).clamp(1, BATCH_ROUNDS)
+}
+
 /// Derive a shard's `(delay RNG, scheduling RNG)` pair — the single
 /// source of the shard-seeding invariant (see module docs).  Everything
 /// that shards Monte-Carlo rounds (this engine, the harness evaluator)

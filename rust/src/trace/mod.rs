@@ -49,6 +49,6 @@ pub use fit::{
 };
 pub use record::{TraceEvent, TraceRecorder, TraceStore, BINARY_MAGIC, TRACE_FORMAT};
 pub use replay::{
-    default_matrix_schemes, empirical_model, model_from_trace, replay, ReplayCell, ReplayConfig,
-    ReplayOutcome, ReplaySource,
+    default_matrix_schemes, empirical_model, model_from_trace, replay, DecodeCacheReplay,
+    ReplayCell, ReplayConfig, ReplayOutcome, ReplaySource,
 };

@@ -25,10 +25,12 @@
 use anyhow::{bail, Result};
 
 use crate::adaptive::{run_policy_rounds, PerRound, PolicyKind, PolicyRunConfig};
+use crate::coded::{DecodeCache, DecodeCacheStats, PcScheme, PcmmScheme};
 use crate::delay::{DelayModel, EmpiricalModel, Trace};
 use crate::scheme::{SchemeId, SchemeRegistry};
 use crate::sim::CompletionEstimate;
 use crate::util::fnv::Fnv1a;
+use crate::util::rng::Rng;
 
 use super::fit::fit_traces;
 use super::record::TraceStore;
@@ -157,6 +159,19 @@ pub struct ReplayCell {
     pub replans: usize,
 }
 
+/// Decode-weight cache behaviour of one coded scheme under this
+/// trace's delays: per-round responder subsets are drawn from the
+/// replay substrate (the scheme's own completion rule picks them) and
+/// driven through a real [`DecodeCache`] — the measured answer to "do
+/// this fleet's straggler patterns actually repeat?".
+#[derive(Debug, Clone)]
+pub struct DecodeCacheReplay {
+    pub scheme: SchemeId,
+    /// rounds simulated (one decode per round)
+    pub rounds: usize,
+    pub stats: DecodeCacheStats,
+}
+
 /// A replayed matrix plus its determinism pin.
 #[derive(Debug, Clone)]
 pub struct ReplayOutcome {
@@ -167,8 +182,86 @@ pub struct ReplayOutcome {
     pub skipped: Vec<(SchemeId, PolicyKind, String)>,
     /// FNV-1a fold of every per-round completion time's bit pattern,
     /// in run order — same trace + same config ⇒ same digest.
+    /// Deliberately excludes the decode-cache leg, so the pin predates
+    /// and survives it.
     pub digest: u64,
     pub model_name: String,
+    /// one entry per applicable coded scheme in the config (empty when
+    /// the matrix has no PC/PCMM)
+    pub decode_cache: Vec<DecodeCacheReplay>,
+}
+
+/// Measure decode-weight cache behaviour for every coded scheme in the
+/// config against `model`'s delay stream: each round samples a delay
+/// realization, lets the scheme's own completion rule pick the
+/// threshold-fastest responders, canonicalizes that subset and drives a
+/// real [`DecodeCache`].  Runs on its own deterministic RNG stream
+/// derived from the config seed, so it neither perturbs nor joins the
+/// matrix completion digest.
+fn decode_cache_replay(model: &dyn DelayModel, cfg: &ReplayConfig, n: usize) -> Vec<DecodeCacheReplay> {
+    let mut out = Vec::new();
+    // (arrival, id) pairs — reused across rounds and schemes
+    let mut arrivals: Vec<(f64, usize)> = Vec::new();
+    for &scheme in &cfg.schemes {
+        if !matches!(scheme, SchemeId::Pc | SchemeId::Pcmm) {
+            continue;
+        }
+        if !SchemeRegistry::applicable(scheme, n, cfg.r, cfg.k) {
+            continue;
+        }
+        // per-scheme stream: the subsets a scheme sees do not depend on
+        // which other schemes share the matrix
+        let tag = if scheme == SchemeId::Pc { 1u64 } else { 2u64 };
+        let mut rng = Rng::seed_from_u64(cfg.seed ^ 0xDEC0DE_u64.rotate_left(17) ^ tag);
+        let mut cache = DecodeCache::with_default_cap();
+        match scheme {
+            SchemeId::Pc => {
+                let pc = PcScheme::new(n, cfg.r);
+                let m = pc.recovery_threshold();
+                for _ in 0..cfg.trials {
+                    let sample = model.sample(n, cfg.r, &mut rng);
+                    arrivals.clear();
+                    for i in 0..n {
+                        // same finish rule as PcScheme::completion_time
+                        let comp: f64 = sample.comp_row(i).iter().sum();
+                        arrivals.push((comp + sample.comm(i, cfg.r - 1), i));
+                    }
+                    arrivals.sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+                    let mut key: Vec<usize> = arrivals[..m].iter().map(|&(_, i)| i).collect();
+                    key.sort_unstable();
+                    cache.weights_for(&key, || pc.decode_weights(&key));
+                }
+            }
+            SchemeId::Pcmm => {
+                let pcmm = PcmmScheme::new(n, cfg.r);
+                let m = pcmm.recovery_threshold();
+                for _ in 0..cfg.trials {
+                    let sample = model.sample(n, cfg.r, &mut rng);
+                    arrivals.clear();
+                    for i in 0..n {
+                        // same slot-arrival rule as PcmmScheme::completion_time
+                        let comp = sample.comp_row(i);
+                        let mut prefix = 0.0;
+                        for j in 0..cfg.r {
+                            prefix += comp[j];
+                            arrivals.push((prefix + sample.comm(i, j), i * cfg.r + j));
+                        }
+                    }
+                    arrivals.sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+                    let mut key: Vec<usize> = arrivals[..m].iter().map(|&(_, s)| s).collect();
+                    key.sort_unstable();
+                    cache.weights_for(&key, || pcmm.decode_weights(&key));
+                }
+            }
+            _ => unreachable!("filtered above"),
+        }
+        out.push(DecodeCacheReplay {
+            scheme,
+            rounds: cfg.trials,
+            stats: cache.stats(),
+        });
+    }
+    out
 }
 
 /// Run the scheme × policy matrix against a trace's delays.
@@ -237,11 +330,13 @@ pub fn replay(store: &TraceStore, cfg: &ReplayConfig) -> Result<ReplayOutcome> {
     if cells.is_empty() {
         bail!("replay matrix is empty: no (scheme, policy) pair was runnable at this shape");
     }
+    let decode_cache = decode_cache_replay(model.as_ref(), cfg, n);
     Ok(ReplayOutcome {
         cells,
         skipped,
         digest: digest.digest(),
         model_name: model.name(),
+        decode_cache,
     })
 }
 
@@ -331,6 +426,31 @@ mod tests {
             .skipped
             .iter()
             .any(|(s, p, _)| *s == SchemeId::Pc && *p == PolicyKind::AdaptiveOrder));
+    }
+
+    #[test]
+    fn decode_cache_leg_measures_repeating_subsets() {
+        let store = synthetic_store(4);
+        let cfg = ReplayConfig::matrix(4, 60, 0xCAFE);
+        let a = replay(&store, &cfg).unwrap();
+        let schemes: Vec<_> = a.decode_cache.iter().map(|d| d.scheme).collect();
+        assert!(schemes.contains(&SchemeId::Pc) && schemes.contains(&SchemeId::Pcmm));
+        for d in &a.decode_cache {
+            assert_eq!(d.rounds, 60);
+            assert_eq!(d.stats.lookups(), 60, "{}: one decode per round", d.scheme);
+            assert!(
+                d.stats.hits > 0,
+                "{}: straggler subsets must repeat across 60 rounds at n = 4",
+                d.scheme
+            );
+        }
+        // the leg runs on its own derived stream: deterministic, and it
+        // never perturbs the matrix completion digest
+        let b = replay(&store, &cfg).unwrap();
+        assert_eq!(a.digest, b.digest);
+        for (x, y) in a.decode_cache.iter().zip(&b.decode_cache) {
+            assert_eq!(x.stats, y.stats, "{}", x.scheme);
+        }
     }
 
     #[test]

@@ -1,0 +1,83 @@
+//! Fleet-scale regression tests — the `n = 10_000` regime the raw-speed
+//! pass targets.  Guards three properties:
+//!
+//! 1. [`chunk_rounds`] bounds per-shard chunk memory for big fleets and
+//!    leaves every paper-scale shape on the full [`BATCH_ROUNDS`];
+//! 2. fleet-sized chunking is *invisible* to results — the batched
+//!    engine stays bit-identical to the scalar reference even when the
+//!    chunk cap kicks in;
+//! 3. the flat completion kernel agrees with a naive per-task min +
+//!    full-sort reference at `n = 10_000`.
+
+use straggler_sched::delay::{DelayModel, ShiftedExponential};
+use straggler_sched::scheduler::{CyclicScheduler, Scheduler};
+use straggler_sched::sim::{
+    chunk_rounds, completion_from_arrivals, slot_arrivals_batch, FlatTasks, MonteCarlo,
+    BATCH_ROUNDS, MAX_CHUNK_SLOTS,
+};
+use straggler_sched::util::rng::Rng;
+
+#[test]
+fn chunk_rounds_caps_fleet_memory_and_keeps_paper_shapes() {
+    // every shape the paper's figures use keeps the full chunk size
+    for (n, r) in [(1usize, 1usize), (8, 4), (16, 16), (32, 32), (100, 20)] {
+        assert_eq!(chunk_rounds(n, r), BATCH_ROUNDS, "n={n} r={r}");
+    }
+    // fleet shapes scale the chunk down under the slot budget
+    for (n, r) in [(10_000usize, 4usize), (5_000, 2), (10_000, 1)] {
+        let c = chunk_rounds(n, r);
+        assert!((1..BATCH_ROUNDS).contains(&c), "n={n} r={r}: {c}");
+        assert!(c * n * r <= MAX_CHUNK_SLOTS, "n={n} r={r}: {c}");
+    }
+}
+
+#[test]
+fn chunked_fleet_estimates_bit_identical_to_scalar() {
+    // n·r = 10_000 > the 8192-slot full-chunk knee, so the batched
+    // engine runs sub-BATCH_ROUNDS chunks here — and must still
+    // reproduce the scalar reference bit-for-bit (chunking only splits
+    // the round-sequential delay stream, never reorders it)
+    let (n, r, k) = (5_000usize, 2usize, 4_000usize);
+    assert!(chunk_rounds(n, r) < BATCH_ROUNDS);
+    let model = ShiftedExponential::new(0.05, 4.0, 0.2, 2.0);
+    let mc = MonteCarlo {
+        trials: 40,
+        seed: 321,
+        threads: 2,
+    };
+    let schemes: Vec<&dyn Scheduler> = vec![&CyclicScheduler];
+    let batched = mc.estimate_coupled(&schemes, &model, n, r, k);
+    let scalar = mc.estimate_coupled_scalar(&schemes, &model, n, r, k);
+    assert_eq!(batched[0].mean.to_bits(), scalar[0].mean.to_bits());
+    assert_eq!(batched[0].p50.to_bits(), scalar[0].p50.to_bits());
+    assert_eq!(batched[0].p95.to_bits(), scalar[0].p95.to_bits());
+    assert_eq!(batched[0].min.to_bits(), scalar[0].min.to_bits());
+    assert_eq!(batched[0].max.to_bits(), scalar[0].max.to_bits());
+}
+
+#[test]
+fn fleet_completion_kernel_matches_naive_reference_at_n_10_000() {
+    let (n, r, k) = (10_000usize, 4usize, 9_000usize);
+    let model = ShiftedExponential::new(0.05, 4.0, 0.2, 2.0);
+    let mut rng = Rng::seed_from_u64(7);
+    let batch = model.sample_batch(2, n, r, &mut rng);
+    let mut arrivals = Vec::new();
+    slot_arrivals_batch(&batch, &mut arrivals);
+    let to = CyclicScheduler.schedule(n, r, &mut Rng::seed_from_u64(0));
+    let flat = FlatTasks::new(&to);
+    let stride = n * r;
+    let mut task_times = Vec::new();
+    for b in 0..batch.rounds {
+        let slice = &arrivals[b * stride..(b + 1) * stride];
+        let fast = completion_from_arrivals(&flat, slice, k, &mut task_times);
+        // naive reference: per-task first arrival, then a full sort
+        let mut mins = vec![f64::INFINITY; n];
+        for (slot, &task) in flat.tasks().iter().enumerate() {
+            if slice[slot] < mins[task] {
+                mins[task] = slice[slot];
+            }
+        }
+        mins.sort_by(f64::total_cmp);
+        assert_eq!(fast.to_bits(), mins[k - 1].to_bits(), "round {b}");
+    }
+}

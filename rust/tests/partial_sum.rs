@@ -149,7 +149,7 @@ fn prop_theta_trajectory_bit_identical_across_s_and_arrival_order() {
                 agg.offer(&[t], &range_sum(&h, t, t + 1, d));
             }
             let (w_ref, sum_ref) = agg.finish();
-            reference.apply_aggregate(&w_ref, &sum_ref, n, ds.padded_samples(), &mut rng_step);
+            reference.apply_aggregate(w_ref, sum_ref, n, ds.padded_samples(), &mut rng_step);
 
             for (s, master) in candidates.iter_mut() {
                 let mut offers: Vec<(usize, usize)> = Vec::new();
@@ -169,7 +169,7 @@ fn prop_theta_trajectory_bit_identical_across_s_and_arrival_order() {
                 assert!(agg.complete(), "s = {s} round {round}");
                 let (w, sum) = agg.finish();
                 let mut rng_s = Rng::seed_from_u64(1); // no reshuffle drawn anyway
-                master.apply_aggregate(&w, &sum, n, ds.padded_samples(), &mut rng_s);
+                master.apply_aggregate(w, sum, n, ds.padded_samples(), &mut rng_s);
                 for i in 0..d {
                     assert_eq!(
                         master.theta[i].to_bits(),
@@ -212,7 +212,7 @@ fn prop_replanned_flush_sizes_never_double_count_theta() {
             }
             let (w_ref, sum_ref) = agg.finish();
             let mut rng_step = Rng::seed_from_u64(1);
-            reference.apply_aggregate(&w_ref, &sum_ref, n, ds.padded_samples(), &mut rng_step);
+            reference.apply_aggregate(w_ref, sum_ref, n, ds.padded_samples(), &mut rng_step);
 
             // replanned round: fresh per-worker sizes drawn THIS round
             let sizes: Vec<usize> =
@@ -240,7 +240,7 @@ fn prop_replanned_flush_sizes_never_double_count_theta() {
             assert!(agg.complete(), "round {round} covers all tasks");
             let (w, sum) = agg.finish();
             let mut rng_step = Rng::seed_from_u64(1);
-            replanned.apply_aggregate(&w, &sum, n, ds.padded_samples(), &mut rng_step);
+            replanned.apply_aggregate(w, sum, n, ds.padded_samples(), &mut rng_step);
 
             for i in 0..d {
                 assert_eq!(
@@ -282,12 +282,12 @@ fn prop_no_double_count_under_adversarial_ranges() {
         let distinct = agg.distinct();
         let (winners, sum) = agg.finish();
         assert_eq!(winners.len(), distinct);
-        let mut sorted = winners.clone();
+        let mut sorted = winners.to_vec();
         sorted.sort_unstable();
         sorted.dedup();
         assert_eq!(sorted.len(), winners.len(), "winners must be distinct");
         let mut want = vec![0.0; d];
-        for &t in &winners {
+        for &t in winners {
             for (acc, v) in want.iter_mut().zip(&h[t]) {
                 *acc += v;
             }
@@ -300,6 +300,55 @@ fn prop_no_double_count_under_adversarial_ranges() {
                 sum[lane],
                 want[lane]
             );
+        }
+    });
+}
+
+#[test]
+fn prop_reused_aggregator_matches_fresh_per_round() {
+    // the live master builds ONE aggregator per run and resets it at
+    // each round boundary (warm slot arena, recycled free-list); an
+    // arbitrary multi-round adversarial offer stream through the reused
+    // arena must match per-round fresh aggregators verdict-for-verdict
+    // and bit-for-bit in the finished sums
+    forall("reuse ≡ fresh", 80, |rng| {
+        let n = 2 + rng.below(15); // 2..=16
+        let s = 1 + rng.below(n);
+        let d = 1 + rng.below(4);
+        let k = 1 + rng.below(n);
+        let mut reused = RoundAggregator::new(n, d, s, k);
+        for round in 0..4 {
+            reused.reset();
+            let h = integer_h_table(rng, n, d);
+            let mut fresh = RoundAggregator::new(n, d, s, k);
+            for _ in 0..rng.below(40) {
+                let block = rng.below(n.div_ceil(s));
+                let b_lo = block * s;
+                let b_hi = (b_lo + s).min(n);
+                let lo = b_lo + rng.below(b_hi - b_lo);
+                let hi = lo + 1 + rng.below(b_hi - lo);
+                let tasks: Vec<usize> = (lo..hi).collect();
+                let sum = range_sum(&h, lo, hi, d);
+                assert_eq!(
+                    reused.offer(&tasks, &sum),
+                    fresh.offer(&tasks, &sum),
+                    "round {round}: verdicts diverged on {lo}..{hi}"
+                );
+            }
+            assert_eq!(reused.distinct(), fresh.distinct(), "round {round}");
+            let (w_reused, sum_reused) = {
+                let (w, t) = reused.finish();
+                (w.to_vec(), t.to_vec())
+            };
+            let (w_fresh, sum_fresh) = fresh.finish();
+            assert_eq!(w_reused, w_fresh, "round {round}");
+            for lane in 0..d {
+                assert_eq!(
+                    sum_reused[lane].to_bits(),
+                    sum_fresh[lane].to_bits(),
+                    "round {round} lane {lane}"
+                );
+            }
         }
     });
 }

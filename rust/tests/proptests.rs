@@ -5,7 +5,7 @@
 //! couple of hundred randomized configurations drawn from a seeded RNG;
 //! failures report the seed so the exact case can be replayed.
 
-use straggler_sched::coded::{PcScheme, PcmmScheme};
+use straggler_sched::coded::{DecodeCache, PcScheme, PcmmScheme};
 use straggler_sched::coordinator::Msg;
 use straggler_sched::delay::{
     DelayModel, DelaySample, Ec2LikeModel, ShiftedExponential, TruncatedGaussianModel,
@@ -203,6 +203,81 @@ fn prop_pc_encode_decode_random_shapes() {
                 "n={n} r={r} lane {lane}"
             );
         }
+    });
+}
+
+fn shuffle(xs: &mut [usize], rng: &mut Rng) {
+    for i in (1..xs.len()).rev() {
+        let j = rng.below(i + 1);
+        xs.swap(i, j);
+    }
+}
+
+/// The decode-cache contract: for any shape, responder subset, arrival
+/// order and payload, the cached decode is bit-identical to the fresh
+/// weight decode — a cache hit may never change a single output bit.
+#[test]
+fn prop_cached_decode_bit_identical_to_fresh() {
+    forall("cached decode ≡ fresh", 60, |rng| {
+        let n = 2 + rng.below(7);
+        let r = (2 + rng.below(n - 1)).min(n);
+        let d = 1 + rng.below(6);
+
+        // PC: random threshold-sized worker subset, two arrival orders
+        let pc = PcScheme::new(n, r);
+        let m = pc.recovery_threshold();
+        let mut workers: Vec<usize> = (0..n).collect();
+        shuffle(&mut workers, rng);
+        let order_a: Vec<usize> = workers[..m].to_vec();
+        let mut order_b = order_a.clone();
+        shuffle(&mut order_b, rng);
+        let data: Vec<Vec<f64>> = (0..n)
+            .map(|_| (0..d).map(|_| rng.normal()).collect())
+            .collect();
+        let resp = |ord: &[usize]| -> Vec<(usize, Vec<f64>)> {
+            ord.iter().map(|&w| (w, data[w].clone())).collect()
+        };
+        let fresh = pc.decode(&resp(&order_a));
+        let mut cache = DecodeCache::with_default_cap();
+        let c1 = pc.decode_cached(&resp(&order_a), &mut cache); // miss: builds
+        let c2 = pc.decode_cached(&resp(&order_b), &mut cache); // hit: cached weights
+        for lane in 0..d {
+            assert_eq!(fresh[lane].to_bits(), c1[lane].to_bits(), "PC n={n} r={r} lane {lane}");
+            assert_eq!(
+                fresh[lane].to_bits(),
+                c2[lane].to_bits(),
+                "PC n={n} r={r} lane {lane} (cache hit)"
+            );
+        }
+        assert_eq!((cache.stats().hits, cache.stats().misses), (1, 1));
+
+        // PCMM: random (2n−1)-slot subset of the n·r evaluation slots
+        let pcmm = PcmmScheme::new(n, r);
+        let mm = pcmm.recovery_threshold();
+        let mut slots: Vec<usize> = (0..n * r).collect();
+        shuffle(&mut slots, rng);
+        let order_a: Vec<usize> = slots[..mm].to_vec();
+        let mut order_b = order_a.clone();
+        shuffle(&mut order_b, rng);
+        let sdata: Vec<Vec<f64>> = (0..n * r)
+            .map(|_| (0..d).map(|_| rng.normal()).collect())
+            .collect();
+        let mresp = |ord: &[usize]| -> Vec<((usize, usize), Vec<f64>)> {
+            ord.iter().map(|&s| ((s / r, s % r), sdata[s].clone())).collect()
+        };
+        let fresh = pcmm.decode(&mresp(&order_a));
+        let mut cache = DecodeCache::with_default_cap();
+        let c1 = pcmm.decode_cached(&mresp(&order_a), &mut cache);
+        let c2 = pcmm.decode_cached(&mresp(&order_b), &mut cache);
+        for lane in 0..d {
+            assert_eq!(fresh[lane].to_bits(), c1[lane].to_bits(), "PCMM n={n} r={r} lane {lane}");
+            assert_eq!(
+                fresh[lane].to_bits(),
+                c2[lane].to_bits(),
+                "PCMM n={n} r={r} lane {lane} (cache hit)"
+            );
+        }
+        assert_eq!((cache.stats().hits, cache.stats().misses), (1, 1));
     });
 }
 

@@ -236,6 +236,38 @@ fn fixture_replay_matrix_is_deterministic() {
     }
 }
 
+/// The decode-weight cache must actually pay off on the committed
+/// fleet: the fixture's two-tier straggler pattern makes responder
+/// subsets repeat, so replay's decode-cache leg reports a nonzero hit
+/// rate for both coded schemes — and the leg itself is deterministic.
+#[test]
+fn fixture_replay_reports_decode_cache_hits() {
+    let store = TraceStore::load(std::path::Path::new(FIXTURE)).expect("committed fixture");
+    let cfg = fixture_replay_config();
+    let out = replay(&store, &cfg).unwrap();
+    let schemes: Vec<_> = out.decode_cache.iter().map(|d| d.scheme).collect();
+    assert_eq!(schemes, vec![SchemeId::Pc, SchemeId::Pcmm]);
+    for d in &out.decode_cache {
+        assert_eq!(d.rounds, 400);
+        assert_eq!(d.stats.lookups(), 400, "{}: one decode per round", d.scheme);
+        assert!(
+            d.stats.hits > 0,
+            "{}: the two-tier fleet's responder subsets must repeat",
+            d.scheme
+        );
+    }
+    // PC at r = n collapses to threshold 1: at most n distinct
+    // single-responder subsets exist, so misses are bounded by the
+    // fleet size and the hit rate is near 1
+    let pc = &out.decode_cache[0];
+    assert!(pc.stats.misses <= 8, "PC misses {}", pc.stats.misses);
+    assert!(pc.stats.hit_rate() > 0.9, "PC hit rate {}", pc.stats.hit_rate());
+    let again = replay(&store, &cfg).unwrap();
+    for (x, y) in out.decode_cache.iter().zip(&again.decode_cache) {
+        assert_eq!(x.stats, y.stats, "{}: decode-cache leg must be deterministic", x.scheme);
+    }
+}
+
 #[test]
 fn recording_does_not_perturb_the_run() {
     // the trace tap must be an observer: a recorded run's estimate is

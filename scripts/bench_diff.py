@@ -1,0 +1,102 @@
+#!/usr/bin/env python3
+"""Diff a fresh hot-path bench report against the committed baseline.
+
+Usage:
+    python3 scripts/bench_diff.py BASELINE.json CURRENT.json
+
+Both files use the `util::benchkit::write_json_report` schema
+(`{"target": ..., "benchmarks": [{name, mean_ns, ...}, ...]}`).
+
+Rules:
+
+* If the baseline is a placeholder (`"placeholder": true` or an empty
+  benchmark list — the authoring environment has no toolchain, so the
+  first measured report comes from CI or a dev machine), the diff is
+  skipped gracefully: there is nothing honest to compare against.
+* Benchmarks are grouped by their `name` prefix before the first `/`
+  (`aggregate/...`, `decode/...`, `fleet/...`, ...).  For every watched
+  group, the geometric-mean ratio of matched benchmarks' `mean_ns` is
+  computed; a group whose geomean regresses more than the threshold
+  fails the run (exit 1).  The geomean keeps one noisy micro-bench from
+  flaking the gate while still catching real regressions.
+* Benchmarks new in the current run are reported but never fail; a
+  baseline benchmark missing from the current run is a warning.
+"""
+
+import json
+import math
+import sys
+
+# fail a watched group whose geomean mean_ns grows beyond +25 %
+THRESHOLD = 1.25
+# the perf surfaces EXPERIMENTS.md §Perf tracks; other groups are
+# reported informationally only
+WATCHED = ("aggregate", "decode", "fleet", "batch", "coupled3", "estimator", "scheme")
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def group_of(name):
+    return name.split("/", 1)[0]
+
+
+def main(argv):
+    if len(argv) != 3:
+        print(__doc__.strip().splitlines()[2].strip(), file=sys.stderr)
+        return 2
+    baseline_path, current_path = argv[1], argv[2]
+    base = load(baseline_path)
+    if base.get("placeholder") or not base.get("benchmarks"):
+        print(
+            f"bench-diff: baseline {baseline_path} is a placeholder with no "
+            "measured numbers — skipping comparison (commit a measured "
+            "report to arm the gate)"
+        )
+        return 0
+    cur = load(current_path)
+    base_by = {b["name"]: b for b in base["benchmarks"]}
+    cur_names = set()
+    ratios = {}
+    for b in cur.get("benchmarks", []):
+        cur_names.add(b["name"])
+        ref = base_by.get(b["name"])
+        if ref is None:
+            print(f"  new benchmark (no baseline yet): {b['name']}")
+            continue
+        ratios.setdefault(group_of(b["name"]), []).append(
+            (b["name"], b["mean_ns"] / ref["mean_ns"])
+        )
+    for name in sorted(set(base_by) - cur_names):
+        print(f"  warning: baseline benchmark missing from current run: {name}")
+
+    failed = []
+    for grp in sorted(ratios):
+        pairs = ratios[grp]
+        geo = math.exp(sum(math.log(r) for _, r in pairs) / len(pairs))
+        worst_name, worst = max(pairs, key=lambda p: p[1])
+        watched = grp in WATCHED
+        status = "ok"
+        if watched and geo > THRESHOLD:
+            failed.append(grp)
+            status = "REGRESSED"
+        elif not watched:
+            status = "info"
+        print(
+            f"  {grp:<12} geomean {geo - 1.0:+7.1%}  "
+            f"(worst: {worst_name} {worst - 1.0:+.1%})  [{status}]"
+        )
+    if failed:
+        print(
+            f"bench-diff: FAIL — group(s) {', '.join(failed)} regressed "
+            f"beyond +{THRESHOLD - 1.0:.0%} geomean vs {baseline_path}"
+        )
+        return 1
+    print("bench-diff: no watched group regressed beyond the threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
