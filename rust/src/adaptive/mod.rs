@@ -64,7 +64,9 @@ pub mod sim;
 
 pub use alloc::GroupAllocation;
 pub use estimator::{DelayEstimator, WorkerEstimate, DEFAULT_EWMA_ALPHA};
-pub use policy::{snap_divisor, spread_offsets, PolicyEngine, PolicyKind, RoundPlan};
+pub use policy::{
+    snap_divisor, spread_offsets, PolicyEngine, PolicyKind, PolicySpec, RoundPlan, MAX_STALENESS,
+};
 pub use sim::{
     run_policy_rounds, two_tier_model, PerRound, PolicyOutcome, PolicyRunConfig,
     RoundDelayModel, ShiftingStraggler,

@@ -172,6 +172,74 @@ impl std::fmt::Display for PolicyKind {
     }
 }
 
+/// Upper bound on the bounded-staleness window `S`: the master keeps one
+/// aggregation arena per in-flight round, so the ring is sized `S`
+/// slots — a small constant keeps the stale-gradient bound meaningful
+/// (gap ≤ S − 1) and the memory footprint flat.
+pub const MAX_STALENESS: usize = 8;
+
+/// A policy *spec*: the re-planning rule plus the bounded-staleness
+/// window `S` of the async data plane — the second axis of the policy
+/// grammar (`order@p95@s2`, `static@s3`).  `S = 1` is the synchronous
+/// path (bit-identical to today's, pinned by test); `S ≥ 2` keeps up to
+/// `S` rounds in flight, applying each round's aggregate against a θ at
+/// most `S − 1` versions stale (Egger, Kas Hanna & Bitar,
+/// arXiv:2304.08589).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PolicySpec {
+    pub kind: PolicyKind,
+    /// Bounded-staleness window `S ∈ [1, MAX_STALENESS]`; 1 = sync.
+    pub staleness: usize,
+}
+
+impl PolicySpec {
+    /// The synchronous spec for a bare policy (`S = 1`).
+    pub fn sync(kind: PolicyKind) -> Self {
+        Self { kind, staleness: 1 }
+    }
+
+    /// Parse the CLI/config spelling: any [`PolicyKind`] spelling,
+    /// optionally suffixed `@sS` with `S ∈ [1, MAX_STALENESS]` —
+    /// `order@s2`, `order@p95@s3`, `static@s2`.  No suffix means `S = 1`
+    /// (synchronous).
+    pub fn parse(name: &str) -> Result<PolicySpec> {
+        let lower = name.trim().to_lowercase();
+        let (kind_str, staleness) = match lower.rfind("@s") {
+            Some(pos) => {
+                let digits = &lower[pos + 2..];
+                ensure!(
+                    !digits.is_empty() && digits.bytes().all(|b| b.is_ascii_digit()),
+                    "bad staleness in {name:?}; want POLICY@sS with \
+                     S ∈ [1, {MAX_STALENESS}] (e.g. order@s2, order@p95@s2)"
+                );
+                let s: usize = digits.parse().map_err(|_| {
+                    anyhow::anyhow!("bad staleness in {name:?}; want POLICY@sS")
+                })?;
+                ensure!(
+                    (1..=MAX_STALENESS).contains(&s),
+                    "staleness must be in [1, {MAX_STALENESS}], got {s}"
+                );
+                (&lower[..pos], s)
+            }
+            None => (lower.as_str(), 1),
+        };
+        Ok(PolicySpec {
+            kind: PolicyKind::parse(kind_str)?,
+            staleness,
+        })
+    }
+}
+
+impl std::fmt::Display for PolicySpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.staleness <= 1 {
+            write!(f, "{}", self.kind)
+        } else {
+            write!(f, "{}@s{}", self.kind, self.staleness)
+        }
+    }
+}
+
 /// One round's plan, as emitted by [`PolicyEngine::plan`].
 #[derive(Debug, Clone, PartialEq)]
 pub struct RoundPlan {
@@ -467,6 +535,39 @@ mod tests {
         }
         for bad in ["wat", "order@p0", "order@p100", "order@p", "order@pxx"] {
             assert!(PolicyKind::parse(bad).is_err(), "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn policy_spec_parses_the_staleness_axis() {
+        for (s, kind, staleness) in [
+            ("static", PolicyKind::Static, 1),
+            ("order", PolicyKind::AdaptiveOrder, 1),
+            ("static@s3", PolicyKind::Static, 3),
+            ("ORDER@S2", PolicyKind::AdaptiveOrder, 2),
+            ("order@p95@s2", PolicyKind::AdaptiveOrderQuantile(95), 2),
+            ("load-rate@s4", PolicyKind::LoadRate, 4),
+            ("order@s1", PolicyKind::AdaptiveOrder, 1),
+        ] {
+            let spec = PolicySpec::parse(s).unwrap();
+            assert_eq!(spec.kind, kind, "{s:?}");
+            assert_eq!(spec.staleness, staleness, "{s:?}");
+        }
+        // display round-trips, eliding @s1
+        for spec in [
+            PolicySpec::sync(PolicyKind::Static),
+            PolicySpec { kind: PolicyKind::AdaptiveOrder, staleness: 2 },
+            PolicySpec { kind: PolicyKind::AdaptiveOrderQuantile(95), staleness: 3 },
+        ] {
+            assert_eq!(PolicySpec::parse(&spec.to_string()).unwrap(), spec);
+        }
+        assert_eq!(PolicySpec::sync(PolicyKind::Static).to_string(), "static");
+        assert_eq!(
+            PolicySpec { kind: PolicyKind::AdaptiveOrder, staleness: 2 }.to_string(),
+            "order@s2"
+        );
+        for bad in ["order@s", "order@s0", "order@s99", "order@sx", "wat@s2"] {
+            assert!(PolicySpec::parse(bad).is_err(), "{bad:?}");
         }
     }
 

@@ -31,7 +31,7 @@ use crate::trace::TraceRecorder;
 use crate::util::rng::Rng;
 use crate::util::stats::{RunningStats, StreamingQuantiles};
 
-use super::policy::{PolicyEngine, PolicyKind, RoundPlan};
+use super::policy::{PolicyEngine, PolicyKind, RoundPlan, MAX_STALENESS};
 
 /// A delay source that may depend on the round index — the hook the
 /// shifting-straggler scenario plugs into.  Round-stationary models
@@ -144,6 +144,14 @@ pub struct PolicyRunConfig {
     /// idealized eq. (1)–(2) dynamics.
     pub ingest_ms: f64,
     pub seed: u64,
+    /// Bounded-staleness window `S ∈ [1, MAX_STALENESS]`.  `S = 1` is
+    /// the synchronous data plane — bit-identical to the registry path
+    /// (pinned in `rust/tests/scheme_registry.rs`).  `S ≥ 2` keeps up
+    /// to `S` rounds in flight over shared worker queues: round `t` is
+    /// issued the instant round `t − S` *applies* to θ, so a straggler
+    /// delays only its own round's contribution (see
+    /// [`run_policy_rounds`] for the overlapping-round recurrences).
+    pub staleness: usize,
 }
 
 /// What a policy run produces.
@@ -214,6 +222,7 @@ pub fn run_policy_rounds(
         rounds,
         ingest_ms,
         seed,
+        staleness,
     } = *cfg;
     ensure!(rounds >= 1, "need at least one round");
     ensure!(
@@ -224,6 +233,17 @@ pub fn run_policy_rounds(
         !(ingest_ms.is_nan() || ingest_ms < 0.0),
         "ingest cost must be a non-negative ms/message"
     );
+    ensure!(
+        (1..=MAX_STALENESS).contains(&staleness),
+        "staleness must be in [1, {MAX_STALENESS}], got {staleness}"
+    );
+    if staleness > 1 {
+        // the k-async arm: overlapping rounds on shared worker queues.
+        // S = 1 deliberately does NOT route through it — the loop below
+        // is the synchronous engines' exact code path (same RNG streams,
+        // same FP operation order), which the bit-identity pins require.
+        return run_policy_rounds_async(cfg, model, emit, trace);
+    }
 
     let (mut rng, mut rng_sched) = shard_rngs(seed, 0);
     let scheme = SchemeRegistry::build(scheme_id);
@@ -305,6 +325,8 @@ pub fn run_policy_rounds(
                                 engine.observe(i, view.comp[slot], view.comm[slot]);
                             }
                             if let Some(rec) = trace.as_deref_mut() {
+                                // sync: θ is always current — version
+                                // tag = round index, gap 0
                                 rec.push_slot(
                                     round,
                                     i,
@@ -312,6 +334,7 @@ pub fn run_policy_rounds(
                                     view.comp[slot],
                                     view.comm[slot],
                                     replanned,
+                                    round as u32,
                                 );
                             }
                         }
@@ -330,6 +353,206 @@ pub fn run_policy_rounds(
     let label = match policy {
         PolicyKind::Static => scheme_id.to_string(),
         _ => format!("{scheme_id}+{policy}"),
+    };
+    Ok(PolicyOutcome {
+        estimate: CompletionEstimate::from_streams(label, n, r, k, &stats, &quantiles),
+        replans: engine.as_ref().map_or(0, |e| e.replans()),
+        decision_digest: engine.as_ref().map_or(0, |e| e.decision_digest()),
+    })
+}
+
+/// The bounded-staleness (`S ≥ 2`) overlapping-rounds kernel behind
+/// [`run_policy_rounds`].  Rounds share the worker queues; everything
+/// runs on one absolute clock:
+///
+/// * issue time `a_t = apply_{t−S}` (`0` for `t < S`) — round `t`'s
+///   `Assign` goes out the instant round `t − S` applies to θ, which is
+///   exactly when the master's `S`-slot aggregation ring recycles a slot
+///   ([`crate::coordinator::AggregatorRing`]);
+/// * worker start `s_{i,t} = max(a_t, f_{i,t−1})` — a worker picks up
+///   round `t` when it is both issued and the worker's queue drained;
+/// * absolute slot arrival = `s_{i,t}` + the worker's *local* arrival
+///   profile (prefix-comp + comm — the untouched
+///   [`slot_arrivals_batch`] values, shifted by
+///   [`crate::sim::offset_arrivals`]), so every scheme's completion
+///   evaluator runs unchanged over absolute arrivals;
+/// * completion `c_t` = the scheme's completion rule over those
+///   arrivals;
+/// * worker free time `f_{i,t} = min(c_t, s_{i,t} + Σ_j comp_t(i,j))` —
+///   the `Stop(t)` broadcast censors remaining work at `c_t`, and
+///   communication rides the delivery threads so it never blocks the
+///   compute queue;
+/// * in-order apply `apply_t = max(c_t, apply_{t−1})` (the ring applies
+///   oldest-first), reported per-round metric `d_t = apply_t −
+///   apply_{t−1} ≥ 0` — wall-clock per applied round, so means are
+///   directly comparable with the synchronous path's per-round
+///   durations.
+///
+/// θ-version tag of round `t`: `v_t = max(0, t − S + 1)` applied rounds
+/// at issue → staleness gap `t − v_t ≤ S − 1`, with `S = 1` degenerating
+/// to gap 0 (the synchronous tag `v_t = t`).
+///
+/// Causality: the engine planning round `t` (at issue time `a_t`) has
+/// seen censored observations only from rounds `≤ t − S` — later rounds
+/// are still in flight — so observations are buffered `S` deep and
+/// flushed just before planning (`S = 1` would degenerate to the
+/// synchronous loop's feed-after-evaluate order).
+///
+/// Known approximation (documented in EXPERIMENTS.md §Async): per-round
+/// master ingestion serializes *within* a round's messages only;
+/// cross-round ingest contention at the master is not modeled.
+fn run_policy_rounds_async(
+    cfg: &PolicyRunConfig,
+    model: &dyn RoundDelayModel,
+    mut emit: Option<&mut dyn FnMut(usize, f64)>,
+    mut trace: Option<&mut TraceRecorder>,
+) -> Result<PolicyOutcome> {
+    let PolicyRunConfig {
+        scheme: scheme_id,
+        policy,
+        n,
+        r,
+        k,
+        rounds,
+        ingest_ms,
+        seed,
+        staleness,
+    } = *cfg;
+    debug_assert!(staleness >= 2, "the sync path handles S = 1");
+
+    let (mut rng, mut rng_sched) = shard_rngs(seed, 0);
+    let scheme = SchemeRegistry::build(scheme_id);
+    let mut evaluator: Box<dyn SchemeEvaluator> = scheme.prepare(n, r, k, &mut rng_sched);
+
+    policy.validate_base(scheme_id, n, r)?;
+    let mut engine: Option<PolicyEngine> = match policy {
+        PolicyKind::Static => None,
+        _ => Some(PolicyEngine::new(policy, n, r, scheme_block(scheme_id))),
+    };
+    let base_to: Option<ToMatrix> = engine
+        .as_ref()
+        .and_then(|_| base_scheduler(scheme_id))
+        .map(|s| s.schedule(n, r, &mut Rng::seed_from_u64(0)));
+
+    let mut stats = RunningStats::new();
+    let mut quantiles = StreamingQuantiles::new();
+    let mut last_plan: Option<RoundPlan> = None;
+
+    let stride = n * r;
+    let cap = chunk_rounds(n, r).min(rounds);
+    let mut batch = DelayBatch::zeros(cap, n, r);
+    let mut tmp = DelaySample::zeros(n, r);
+    let mut arrivals: Vec<f64> = Vec::new();
+    let mut abs_arrivals: Vec<f64> = vec![0.0; stride];
+    let mut starts: Vec<f64> = vec![0.0; n];
+
+    // pipeline state on the absolute clock
+    let mut free_at = vec![0.0f64; n]; // f_{i, t−1}
+    let mut apply_ring = vec![0.0f64; staleness]; // apply_{t−S..t−1}, mod S
+    let mut applied_at = 0.0f64; // apply_{t−1}
+    // S-deep causal observation buffer: slot `t % S` holds round `t`'s
+    // censored observations until round `t + S` is planned
+    let mut obs_buf: Vec<Vec<(usize, f64, f64)>> = vec![Vec::new(); staleness];
+
+    let mut done = 0usize;
+    while done < rounds {
+        let chunk = cap.min(rounds - done);
+        if batch.rounds != chunk {
+            batch = DelayBatch::zeros(chunk, n, r);
+        }
+        // sample all chunk rounds first — the identical consumption
+        // order of the synchronous path, so S is delay-stream-inert
+        for b in 0..chunk {
+            model.sample_round_into(done + b, &mut tmp, &mut rng);
+            batch.copy_round_from_sample(b, &tmp);
+        }
+        slot_arrivals_batch(&batch, &mut arrivals);
+        for b in 0..chunk {
+            let round = done + b;
+            let slot_ix = round % staleness;
+            // observation lag: round `round − S` has applied by this
+            // round's issue instant — its buffered observations land now
+            if let Some(engine) = engine.as_mut() {
+                if round >= staleness {
+                    for (w, comp, comm) in obs_buf[slot_ix].drain(..) {
+                        engine.observe(w, comp, comm);
+                    }
+                }
+            }
+            let mut replanned = false;
+            if let Some(engine) = engine.as_mut() {
+                let plan = engine.plan(round, &mut rng_sched);
+                if last_plan.as_ref() != Some(&plan) {
+                    let to = plan.materialize(base_to.as_ref().expect("adaptive base plan"));
+                    evaluator = Box::new(GcEvaluator::with_sizes(&to, &plan.sizes, k));
+                    last_plan = Some(plan);
+                    replanned = true;
+                }
+            }
+            // a_t = apply_{t−S}; ring slot t % S still holds it
+            let issue = if round >= staleness { apply_ring[slot_ix] } else { 0.0 };
+            for (i, s) in starts.iter_mut().enumerate() {
+                *s = issue.max(free_at[i]);
+            }
+            let local = &arrivals[b * stride..(b + 1) * stride];
+            crate::sim::offset_arrivals(local, &starts, r, &mut abs_arrivals);
+            let view = RoundView {
+                arrivals: &abs_arrivals,
+                comp: batch.comp_round(b),
+                comm: batch.comm_round(b),
+            };
+            let c = if ingest_ms == 0.0 {
+                evaluator.completion(&view, &mut rng_sched)
+            } else {
+                evaluator.completion_ingest(&view, ingest_ms, &mut rng_sched)
+            };
+            // free times: finished the queue, or stopped at c_t
+            let comp = batch.comp_round(b);
+            for i in 0..n {
+                let total: f64 = comp[i * r..(i + 1) * r].iter().sum();
+                free_at[i] = c.min(starts[i] + total);
+            }
+            // censored causal feedback (buffered S rounds) + trace tap
+            if engine.is_some() || trace.is_some() {
+                let version = (round + 1).saturating_sub(staleness) as u32;
+                for i in 0..n {
+                    for j in 0..r {
+                        let slot = i * r + j;
+                        if abs_arrivals[slot] <= c {
+                            if engine.is_some() {
+                                obs_buf[slot_ix].push((i, view.comp[slot], view.comm[slot]));
+                            }
+                            if let Some(rec) = trace.as_deref_mut() {
+                                rec.push_slot(
+                                    round,
+                                    i,
+                                    j,
+                                    view.comp[slot],
+                                    view.comm[slot],
+                                    replanned,
+                                    version,
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+            let apply = applied_at.max(c);
+            let d = apply - applied_at;
+            applied_at = apply;
+            apply_ring[slot_ix] = apply;
+            stats.push(d);
+            quantiles.push(d);
+            if let Some(f) = emit.as_mut() {
+                (*f)(round, d);
+            }
+        }
+        done += chunk;
+    }
+
+    let label = match policy {
+        PolicyKind::Static => format!("{scheme_id}@s{staleness}"),
+        _ => format!("{scheme_id}+{policy}@s{staleness}"),
     };
     Ok(PolicyOutcome {
         estimate: CompletionEstimate::from_streams(label, n, r, k, &stats, &quantiles),
@@ -365,6 +588,7 @@ impl MonteCarlo {
                 rounds: self.trials,
                 ingest_ms,
                 seed: self.seed,
+                staleness: 1,
             },
             model,
             None,
@@ -435,6 +659,7 @@ mod tests {
                     rounds: 4,
                     ingest_ms: 0.0,
                     seed: 1,
+                    staleness: 1,
                 },
                 &PerRound(&model),
                 None,
@@ -457,6 +682,147 @@ mod tests {
         assert!(run(SchemeId::Ss, PolicyKind::AdaptiveOrder, 6, 3).is_ok());
         assert!(run(SchemeId::Cs, PolicyKind::AllocGroup, 6, 3).is_ok());
         assert!(run(SchemeId::Pcmm, PolicyKind::Static, 6, 3).is_ok());
+    }
+
+    #[test]
+    fn staleness_bounds_are_enforced() {
+        let model = two_tier_model(6, 3, 3.0);
+        let run = |staleness| {
+            run_policy_rounds(
+                &PolicyRunConfig {
+                    scheme: SchemeId::Cs,
+                    policy: PolicyKind::Static,
+                    n: 6,
+                    r: 3,
+                    k: 6,
+                    rounds: 4,
+                    ingest_ms: 0.0,
+                    seed: 1,
+                    staleness,
+                },
+                &PerRound(&model),
+                None,
+                None,
+            )
+        };
+        assert!(run(0).is_err(), "S = 0 is meaningless");
+        assert!(run(MAX_STALENESS + 1).is_err(), "above the window cap");
+        assert!(run(1).is_ok());
+        assert!(run(MAX_STALENESS).is_ok());
+    }
+
+    #[test]
+    fn async_rounds_are_causal_and_labelled() {
+        // d_t ≥ 0 always (in-order apply), every round emits exactly
+        // once and in order, and the label carries the @sS suffix
+        let model = two_tier_model(6, 2, 3.0);
+        let mut seen = Vec::new();
+        let out = run_policy_rounds(
+            &PolicyRunConfig {
+                scheme: SchemeId::Gc(2),
+                policy: PolicyKind::AdaptiveOrder,
+                n: 6,
+                r: 4,
+                k: 6,
+                rounds: 120,
+                ingest_ms: 0.0,
+                seed: 7,
+                staleness: 3,
+            },
+            &PerRound(&model),
+            Some(&mut |round, d| seen.push((round, d))),
+            None,
+        )
+        .unwrap();
+        assert_eq!(seen.len(), 120);
+        for (ix, &(round, d)) in seen.iter().enumerate() {
+            assert_eq!(round, ix, "emitted out of order");
+            assert!(d >= 0.0, "negative apply delta at round {round}");
+        }
+        // total wall-clock = Σ d_t must be positive and finite
+        let total: f64 = seen.iter().map(|&(_, d)| d).sum();
+        assert!(total.is_finite() && total > 0.0);
+        assert_eq!(out.estimate.scheme, "GC(2)+order@s3");
+    }
+
+    #[test]
+    fn async_pipelining_beats_sync_on_the_same_delay_stream() {
+        // monotone coupling: both runs consume the identical delay
+        // stream (chunked sampling order is S-inert), and under S ≥ 2
+        // every round's issue instant a_t = apply_{t−S} ≤ apply_{t−1} =
+        // the sync start — so total applied wall-clock can only shrink.
+        // Static policy isolates the pipelining effect from adaptation.
+        let base = two_tier_model(8, 2, 4.0);
+        let model = ShiftingStraggler::new(&base, 40, 2);
+        let run = |staleness| {
+            run_policy_rounds(
+                &PolicyRunConfig {
+                    scheme: SchemeId::Cs,
+                    policy: PolicyKind::Static,
+                    n: 8,
+                    r: 3,
+                    k: 8,
+                    rounds: 400,
+                    ingest_ms: 0.0,
+                    seed: 21,
+                    staleness,
+                },
+                &model,
+                None,
+                None,
+            )
+            .unwrap()
+            .estimate
+            .mean
+        };
+        let sync = run(1);
+        let async2 = run(2);
+        let async4 = run(4);
+        assert!(
+            async2 < sync,
+            "S=2 ({async2}) should beat sync ({sync}) per applied round"
+        );
+        assert!(
+            async4 <= async2 * 1.05,
+            "deeper pipelines don't regress: S=4 {async4} vs S=2 {async2}"
+        );
+    }
+
+    #[test]
+    fn async_static_run_reports_version_gap_bound() {
+        // recorded trace versions never lag the round by more than S−1
+        use crate::trace::TraceRecorder;
+        let model = two_tier_model(6, 2, 3.0);
+        let staleness = 3usize;
+        let mut rec = TraceRecorder::with_fleet("CS@s3", 6);
+        run_policy_rounds(
+            &PolicyRunConfig {
+                scheme: SchemeId::Cs,
+                policy: PolicyKind::Static,
+                n: 6,
+                r: 4,
+                k: 6,
+                rounds: 60,
+                ingest_ms: 0.0,
+                seed: 9,
+                staleness,
+            },
+            &PerRound(&model),
+            None,
+            Some(&mut rec),
+        )
+        .unwrap();
+        let store = rec.into_store();
+        assert!(store.events().len() > 0, "async run recorded no events");
+        for ev in store.events() {
+            let gap = ev.round as i64 - ev.version as i64;
+            assert!(
+                (0..staleness as i64).contains(&gap),
+                "round {} tagged version {} — gap {gap} outside [0, S)",
+                ev.round,
+                ev.version
+            );
+        }
     }
 
     #[test]

@@ -32,11 +32,17 @@
 //! An optional `"policy"` field (`static | order | order@pQQ | load |
 //! load-rate | alloc-group | alloc-random`) switches the sweep onto
 //! the sequential re-planning arm of [`crate::adaptive`]; non-static
-//! policies require CS/SS/GC(s) bases.
+//! policies require CS/SS/GC(s) bases.  An optional `"staleness"` key
+//! (or the `@sS` policy suffix, e.g. `"order@s2"`) pipelines `S ∈
+//! [1, 8]` rounds in flight — the bounded-staleness k-async arm; any
+//! `S > 1` routes the sweep through the sequential arm even under the
+//! static policy.
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::adaptive::{run_policy_rounds, PerRound, PolicyKind, PolicyRunConfig};
+use crate::adaptive::{
+    run_policy_rounds, PerRound, PolicyKind, PolicyRunConfig, PolicySpec, MAX_STALENESS,
+};
 use crate::delay::{DelayModelKind, TruncatedGaussian};
 use crate::harness::{evaluate, EvalPoint};
 use crate::report::Table;
@@ -61,6 +67,10 @@ pub struct Experiment {
     /// point instead of the coupled batch evaluator — every scheme
     /// still sees the identical delay stream.
     pub policy: PolicyKind,
+    /// Bounded-staleness window (`"staleness"` key or the `@sS` policy
+    /// suffix; default 1 = synchronous).  `S > 1` runs every point
+    /// through the sequential arm with `S` rounds in flight.
+    pub staleness: usize,
     pub model: DelayModelKind,
 }
 
@@ -138,13 +148,14 @@ impl Experiment {
             }
             Some(_) => bail!("`schemes` must be an array of scheme names"),
         };
-        let policy = match root.get("policy") {
-            None => PolicyKind::Static,
+        let (policy, policy_staleness) = match root.get("policy") {
+            None => (PolicyKind::Static, 1),
             Some(v) => {
                 let name = v
                     .as_str()
                     .ok_or_else(|| anyhow!("`policy` must be a string"))?;
-                let p = PolicyKind::parse(name)?;
+                let spec = PolicySpec::parse(name)?;
+                let p = spec.kind;
                 if p != PolicyKind::Static {
                     // the shared policy × scheme gate, with sweep
                     // semantics: a scheme the policy cannot re-plan at
@@ -160,8 +171,18 @@ impl Experiment {
                         }
                     }
                 }
-                p
+                (p, spec.staleness)
             }
+        };
+        let staleness = {
+            // the `@sS` policy suffix and the standalone `"staleness"`
+            // key are the same axis; the suffix wins when both appear
+            let key = usize_field("staleness", Some(1))?;
+            let s = if policy_staleness > 1 { policy_staleness } else { key };
+            if !(1..=MAX_STALENESS).contains(&s) {
+                bail!("`staleness` must be in [1, {MAX_STALENESS}] rounds in flight, got {s}");
+            }
+            s
         };
         Ok(Self {
             name: root
@@ -191,6 +212,7 @@ impl Experiment {
             },
             schemes,
             policy,
+            staleness,
             model: parse_model(
                 root.get("model")
                     .ok_or_else(|| anyhow!("config missing `model`"))?,
@@ -210,10 +232,11 @@ impl Experiment {
                 self.n,
                 self.trials,
                 model.name(),
-                if self.policy == PolicyKind::Static {
-                    String::new()
-                } else {
-                    format!(", policy = {}", self.policy)
+                match (self.policy == PolicyKind::Static, self.staleness) {
+                    (true, 1) => String::new(),
+                    (true, s) => format!(", S = {s}"),
+                    (false, 1) => format!(", policy = {}", self.policy),
+                    (false, s) => format!(", policy = {}, S = {s}", self.policy),
                 }
             ),
             &headers.iter().map(String::as_str).collect::<Vec<_>>(),
@@ -221,7 +244,7 @@ impl Experiment {
         for &r in &self.rs {
             for &k in &self.ks {
                 let mut row = vec![r.to_string(), k.to_string()];
-                if self.policy == PolicyKind::Static {
+                if self.policy == PolicyKind::Static && self.staleness == 1 {
                     let point = EvalPoint::new(self.n, r, k, self.trials, self.seed)
                         .with_schemes(&self.schemes)
                         .with_ingest(self.ingest_ms);
@@ -235,8 +258,9 @@ impl Experiment {
                         row.push(Table::fmt(mean));
                     }
                 } else {
-                    // the sequential re-planning arm, one run per
-                    // scheme; identical seeds couple the delay streams
+                    // the sequential arm (re-planning and/or S > 1
+                    // rounds in flight), one run per scheme; identical
+                    // seeds couple the delay streams
                     for &s in &self.schemes {
                         let mean = run_policy_rounds(
                             &PolicyRunConfig {
@@ -248,6 +272,7 @@ impl Experiment {
                                 rounds: self.trials,
                                 ingest_ms: self.ingest_ms,
                                 seed: self.seed,
+                                staleness: self.staleness,
                             },
                             &PerRound(model.as_ref()),
                             None,
@@ -419,6 +444,30 @@ mod tests {
         )
         .unwrap();
         assert_eq!(exp.policy, PolicyKind::Static);
+        assert_eq!(exp.staleness, 1, "default is the synchronous protocol");
+    }
+
+    #[test]
+    fn staleness_key_and_policy_suffix_agree() {
+        // standalone key: static policy still routes through the
+        // sequential arm when S > 1
+        let exp = Experiment::from_json_str(
+            r#"{"n": 6, "rs": [2], "trials": 150, "schemes": ["CS"],
+                "staleness": 2, "model": {"kind": "scenario1"}}"#,
+        )
+        .unwrap();
+        assert_eq!(exp.staleness, 2);
+        let table = exp.run();
+        assert!(table.title.contains("S = 2"), "{}", table.title);
+        assert!(table.rows[0][2].parse::<f64>().unwrap() > 0.0);
+        // `@sS` suffix on the policy spells the same axis
+        let exp = Experiment::from_json_str(
+            r#"{"n": 6, "rs": [2], "schemes": ["CS"], "policy": "order@s3",
+                "model": {"kind": "scenario1"}}"#,
+        )
+        .unwrap();
+        assert_eq!(exp.policy, PolicyKind::AdaptiveOrder);
+        assert_eq!(exp.staleness, 3, "suffix carries the window");
     }
 
     #[test]
@@ -444,6 +493,9 @@ mod tests {
             r#"{"n": 4, "schemes": ["PC"], "policy": "order", "model": {"kind": "scenario1"}}"#,
             r#"{"n": 4, "schemes": ["GCH(2,1)"], "policy": "load",
                 "model": {"kind": "scenario1"}}"#,
+            // staleness window is bounded: S ∈ [1, MAX_STALENESS]
+            r#"{"n": 4, "staleness": 0, "model": {"kind": "scenario1"}}"#,
+            r#"{"n": 4, "staleness": 99, "model": {"kind": "scenario1"}}"#,
         ] {
             assert!(Experiment::from_json_str(bad).is_err(), "{bad}");
         }

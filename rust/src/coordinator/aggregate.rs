@@ -249,6 +249,113 @@ impl RoundAggregator {
     }
 }
 
+/// Verdict on a frame offered to the [`AggregatorRing`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RingOffer {
+    /// The frame belongs to an in-flight round; the inner verdict is
+    /// the round's own duplicate-safe range bookkeeping.
+    InFlight(Offer),
+    /// The frame's round already applied to θ (it lags the ring's base
+    /// — e.g. a straggler's flush from round `t` landing after round
+    /// `t + S` applied).  Dropped whole: θ is immutable history.
+    Stale,
+    /// The frame claims a round the master has not issued yet — only a
+    /// corrupt or hostile worker can produce it.  Dropped whole.
+    Future,
+}
+
+/// `S` independent [`RoundAggregator`]s behind one round-indexed
+/// window — the master-side state of the bounded-staleness pipeline.
+///
+/// Round `t` occupies slot `t % S` while `t ∈ [base, base + S)`;
+/// `base` is the oldest unapplied round.  Application is strictly
+/// **in order**: only the oldest round can be finished and popped,
+/// which is what keeps θ a linear history (version tags count applied
+/// rounds) even though frames land out of order.  Popping recycles the
+/// slot (a [`RoundAggregator::reset`], zero steady-state allocation —
+/// the PR-6 arena survives intact S-fold) and is the exact instant the
+/// master may issue round `base + S`.
+///
+/// Synchronous operation is the `S = 1` degenerate case: one slot,
+/// `offer` → `complete` → `finish_oldest` → `advance`, identical to
+/// driving a bare [`RoundAggregator`].
+pub struct AggregatorRing {
+    slots: Vec<RoundAggregator>,
+    staleness: usize,
+    base: usize,
+}
+
+impl AggregatorRing {
+    /// Ring of `staleness` aggregators, each shaped `(n, d, s, k)` like
+    /// [`RoundAggregator::new`].
+    pub fn new(n: usize, d: usize, s: usize, k: usize, staleness: usize) -> Self {
+        assert!(staleness >= 1, "need at least one round in flight");
+        Self {
+            slots: (0..staleness).map(|_| RoundAggregator::new(n, d, s, k)).collect(),
+            staleness,
+            base: 0,
+        }
+    }
+
+    /// Oldest unapplied round — also the θ-version tag (number of
+    /// applied rounds) of any `Assign` issued right now.
+    pub fn base_round(&self) -> usize {
+        self.base
+    }
+
+    pub fn staleness(&self) -> usize {
+        self.staleness
+    }
+
+    /// Is `round` currently in flight (`base ≤ round < base + S`)?
+    pub fn in_flight(&self, round: usize) -> bool {
+        (self.base..self.base + self.staleness).contains(&round)
+    }
+
+    /// Route one received block to its round.  Frames outside the
+    /// window are dropped whole — a late duplicate from an applied
+    /// round can never reach an aggregator, so it can never corrupt θ.
+    pub fn offer(&mut self, round: usize, tasks: &[usize], sum: &[f64]) -> RingOffer {
+        if round < self.base {
+            return RingOffer::Stale;
+        }
+        if round >= self.base + self.staleness {
+            return RingOffer::Future;
+        }
+        RingOffer::InFlight(self.slots[round % self.staleness].offer(tasks, sum))
+    }
+
+    /// Distinct tasks covered by an in-flight round (`None` outside the
+    /// window).
+    pub fn distinct(&self, round: usize) -> Option<usize> {
+        self.in_flight(round)
+            .then(|| self.slots[round % self.staleness].distinct())
+    }
+
+    /// Has the *oldest* round's `k`-distinct rule fired?  Only the
+    /// oldest is ever eligible — in-order application.
+    pub fn oldest_complete(&self) -> bool {
+        self.slots[self.base % self.staleness].complete()
+    }
+
+    /// Winners + partial-sum of the oldest round (canonical order, same
+    /// reused buffers as [`RoundAggregator::finish`]).  Call
+    /// [`Self::advance`] after applying to θ.
+    pub fn finish_oldest(&mut self) -> (&[usize], &[f64]) {
+        let ix = self.base % self.staleness;
+        self.slots[ix].finish()
+    }
+
+    /// Retire the oldest round: recycle its slot for round
+    /// `base + S` and move the window forward.  The caller may issue
+    /// the next round's `Assign` the moment this returns.
+    pub fn advance(&mut self) {
+        let ix = self.base % self.staleness;
+        self.slots[ix].reset();
+        self.base += 1;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -400,5 +507,115 @@ mod tests {
         assert_eq!(w1, w2);
         assert_eq!(t1, t2);
         assert_eq!(w1, vec![0, 1, 2, 3]);
+    }
+
+    fn ring_offer(ring: &mut AggregatorRing, round: usize, lo: usize, hi: usize, d: usize) -> RingOffer {
+        let tasks: Vec<usize> = (lo..hi).collect();
+        ring.offer(round, &tasks, &sum_of(&tasks, d))
+    }
+
+    #[test]
+    fn ring_routes_frames_by_round_within_the_window() {
+        let mut ring = AggregatorRing::new(3, 1, 1, 3, 2);
+        assert_eq!(ring.base_round(), 0);
+        assert!(ring.in_flight(0) && ring.in_flight(1) && !ring.in_flight(2));
+        // interleaved frames for both in-flight rounds
+        assert_eq!(
+            ring_offer(&mut ring, 0, 0, 1, 1),
+            RingOffer::InFlight(Offer::Accepted { new_distinct: 1 })
+        );
+        assert_eq!(
+            ring_offer(&mut ring, 1, 2, 3, 1),
+            RingOffer::InFlight(Offer::Accepted { new_distinct: 1 })
+        );
+        assert_eq!(ring_offer(&mut ring, 2, 0, 1, 1), RingOffer::Future);
+        assert_eq!(ring.distinct(0), Some(1));
+        assert_eq!(ring.distinct(1), Some(1));
+        assert_eq!(ring.distinct(2), None);
+        // fill + apply round 0; round 2 opens the moment it retires
+        ring_offer(&mut ring, 0, 1, 2, 1);
+        ring_offer(&mut ring, 0, 2, 3, 1);
+        assert!(ring.oldest_complete());
+        let (winners, total) = ring.finish_oldest();
+        assert_eq!(winners, vec![0, 1, 2]);
+        assert_eq!(total, vec![6.0]);
+        ring.advance();
+        assert_eq!(ring.base_round(), 1);
+        assert!(ring.in_flight(2));
+        assert_eq!(
+            ring_offer(&mut ring, 2, 0, 1, 1),
+            RingOffer::InFlight(Offer::Accepted { new_distinct: 1 })
+        );
+        // round 1's earlier frame survived round 0's retirement
+        assert_eq!(ring.distinct(1), Some(1));
+    }
+
+    #[test]
+    fn late_frames_from_applied_rounds_never_corrupt_theta() {
+        // the issue-12 edge case: a duplicate/censored frame from round
+        // t arrives after round t + S applied — it must be dropped
+        // whole, and every later round's θ contribution must be
+        // bit-identical to a run where the late frame never arrived
+        let mut ring = AggregatorRing::new(2, 1, 1, 2, 2);
+        for round in 0..2usize {
+            ring_offer(&mut ring, round, 0, 1, 1);
+            ring_offer(&mut ring, round, 1, 2, 1);
+            assert!(ring.oldest_complete());
+            let _ = ring.finish_oldest();
+            ring.advance();
+        }
+        assert_eq!(ring.base_round(), 2);
+        // round 0 retired two advances ago (= t + S applied)
+        assert_eq!(ring_offer(&mut ring, 0, 0, 1, 1), RingOffer::Stale);
+        assert_eq!(ring_offer(&mut ring, 1, 0, 2, 1), RingOffer::Stale);
+        // the in-flight rounds saw nothing: distinct counts untouched
+        assert_eq!(ring.distinct(2), Some(0));
+        assert_eq!(ring.distinct(3), Some(0));
+        ring_offer(&mut ring, 2, 0, 2, 1);
+        assert!(ring.oldest_complete());
+        let (winners, total) = ring.finish_oldest();
+        assert_eq!(winners, vec![0, 1]);
+        assert_eq!(total, vec![3.0], "late stale frames leaked into θ");
+    }
+
+    #[test]
+    fn ring_version_gap_never_exceeds_staleness_minus_one() {
+        // hand-rolled proptest: drive rings of every S ∈ [1, 4] with a
+        // deterministic pseudo-random frame schedule; at every instant
+        // any issuable round `t ∈ [base, base + S)` is tagged with
+        // version = base, so the staleness gap t − base ≤ S − 1 must
+        // hold, and the window never outruns in-order application
+        for staleness in 1..=4usize {
+            let (n, d, k) = (3usize, 1usize, 3usize);
+            let mut ring = AggregatorRing::new(n, d, 1, k, staleness);
+            let mut state = 0x9E3779B97F4A7C15u64 ^ staleness as u64;
+            let mut next = move || {
+                state ^= state << 13;
+                state ^= state >> 7;
+                state ^= state << 17;
+                state
+            };
+            let mut applied = 0usize;
+            while applied < 30 {
+                let round = ring.base_round() + (next() as usize % staleness);
+                // the version a master would stamp on this frame's round
+                let version = ring.base_round();
+                assert!(round - version <= staleness - 1, "gap bound violated");
+                let lo = next() as usize % n;
+                let tasks = [lo];
+                let _ = ring.offer(round, &tasks, &sum_of(&tasks, d));
+                // frames beyond the window are always refused
+                assert_eq!(
+                    ring.offer(ring.base_round() + staleness, &tasks, &sum_of(&tasks, d)),
+                    RingOffer::Future
+                );
+                while ring.oldest_complete() {
+                    let _ = ring.finish_oldest();
+                    ring.advance();
+                    applied += 1;
+                }
+            }
+            assert!(ring.base_round() >= 30 / staleness.max(1));
+        }
     }
 }

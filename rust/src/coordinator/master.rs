@@ -23,7 +23,7 @@
 //! rounds.  Protocol stays v3 — assignment was always per-round; only
 //! the plan's source changes.
 
-use std::collections::HashSet;
+use std::collections::{HashMap, HashSet};
 use std::io::Write as _;
 use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc;
@@ -31,10 +31,10 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use super::aggregate::{Offer, RoundAggregator};
+use super::aggregate::{AggregatorRing, Offer, RingOffer, RoundAggregator};
 use super::protocol::Msg;
 use super::{now_us, TaskDelaySampler};
-use crate::adaptive::{GroupAllocation, PolicyEngine, PolicyKind, WorkerEstimate};
+use crate::adaptive::{GroupAllocation, PolicyEngine, PolicyKind, WorkerEstimate, MAX_STALENESS};
 use crate::coded::{DecodeCache, DecodeCacheStats, PcScheme, PcmmScheme};
 use crate::data::Dataset;
 use crate::delay::DelayModelKind;
@@ -66,6 +66,15 @@ pub struct ClusterConfig {
     /// others consume measured per-worker delays and re-issue each
     /// round's `Assign` frames from a fresh [`crate::adaptive::RoundPlan`]
     pub policy: PolicyKind,
+    /// bounded-staleness window `S ∈ [1, MAX_STALENESS]`.  `S = 1` is
+    /// the strictly synchronous §II protocol (collect → step θ →
+    /// re-assign).  `S ≥ 2` keeps up to `S` rounds in flight on the
+    /// uncoded `DistinctTasks` plane: frames route through an
+    /// [`super::aggregate::AggregatorRing`], θ applies strictly in
+    /// round order, and round `t + S` is issued (with its v4 θ-version
+    /// tag) the instant round `t` applies — a straggler delays its own
+    /// round's application, not the fleet's assignment pipeline.
+    pub staleness: usize,
     pub dataset: Dataset,
     /// injected straggling; `None` measures bare-metal delays
     pub inject: Option<DelayModelKind>,
@@ -161,6 +170,7 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
         profile,
         plan,
         policy,
+        staleness,
         dataset,
         inject,
         seed,
@@ -190,6 +200,20 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
         base_sizes.iter().all(|&s| s >= 1 && group % s == 0),
         "per-worker flush sizes must divide the canonical block {group}: {base_sizes:?}"
     );
+    anyhow::ensure!(
+        (1..=MAX_STALENESS).contains(&staleness),
+        "need 1 ≤ staleness ≤ {MAX_STALENESS} (got {staleness})"
+    );
+    if staleness > 1 {
+        // the pipeline applies per-range partial sums out of round
+        // order; coded decodes and Messages timing rounds are
+        // whole-round constructs with no duplicate-safe merge to lean
+        // on, so they stay synchronous
+        anyhow::ensure!(
+            matches!(wire, WirePlan::Uncoded { .. }) && rule == CompletionRule::DistinctTasks,
+            "staleness {staleness} pipelines the uncoded k-distinct data plane only"
+        );
+    }
     if policy != PolicyKind::Static {
         anyhow::ensure!(
             matches!(wire, WirePlan::Uncoded { .. }),
@@ -419,15 +443,221 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
     let d = dataset.d;
     // per-run hot-path state, persistent across rounds: the uncoded
     // aggregator keeps its slot arena warm (`reset` per round), the
-    // coded wires keep an LRU of per-subset decode weights
-    let mut agg = if coded.is_none() {
+    // coded wires keep an LRU of per-subset decode weights.  The
+    // pipelined pump (S ≥ 2) carries its own S-slot ring instead.
+    let mut agg = if coded.is_none() && staleness == 1 {
         Some(RoundAggregator::new(n, d, group, k))
     } else {
         None
     };
     let mut decode_cache = coded.as_ref().map(|_| DecodeCache::with_default_cap());
 
-    for round in 0..rounds {
+    // ---- bounded-staleness pump (S ≥ 2) ------------------------------------
+    // Up to S rounds in flight: round t's Assign goes out the moment
+    // round t − S applies, carrying the θ-version tag `base` (= applied
+    // rounds, so round − version ≤ S − 1 always).  Frames route through
+    // the AggregatorRing and θ advances strictly in round order — a
+    // straggler delays its own round's application, never the fleet's
+    // assignment pipeline.  Stop is also in order: the worker's stop
+    // watermark censors every round ≤ the stopped one, so Stop{t} only
+    // goes out when t applies; younger complete-but-unapplied rounds
+    // keep draining harmlessly into their ring slots.
+    if staleness > 1 {
+        let mut ring = AggregatorRing::new(n, d, group, k, staleness);
+        // per-round in-flight bookkeeping, indexed `round % S`
+        struct InFlight {
+            t0_us: u64,
+            results_seen: usize,
+            messages_seen: usize,
+            wire_bytes: usize,
+            replanned: bool,
+        }
+        let mut meta: Vec<Option<InFlight>> = (0..staleness).map(|_| None).collect();
+        // trace bookkeeping must survive a round's retirement (stale
+        // frames are still real fleet measurements): flush indices are
+        // keyed by (round, worker), replanned flags by round
+        let mut flush_idx: HashMap<(usize, usize), usize> = HashMap::new();
+        let mut replanned_by_round = vec![false; rounds];
+        let mut issued = 0usize;
+        while logs.len() < rounds {
+            // top up the issue window
+            while issued < rounds && issued < ring.base_round() + staleness {
+                let round = issued;
+                let decision = engine.as_mut().map(|e| {
+                    let before = e.replans();
+                    let plan = e.plan(round, &mut rng_sched);
+                    (plan, e.replans() != before)
+                });
+                let replanned = decision.as_ref().is_some_and(|(_, changed)| *changed);
+                replanned_by_round[round] = replanned;
+                let sizes: &[usize] = decision
+                    .as_ref()
+                    .map_or(&base_sizes, |(plan, _)| &plan.sizes);
+                // uncoded wire only (validated above), so a TO matrix
+                // always exists — same sources as the synchronous loop
+                let to = match &decision {
+                    Some((plan, _)) => {
+                        plan.materialize(fixed_to.as_ref().expect("policy base plan"))
+                    }
+                    None => match &fixed_to {
+                        Some(to) => to.clone(),
+                        None => scheduler.schedule(n, r, &mut rng_sched),
+                    },
+                };
+                let theta32: Vec<f32> = master.theta.iter().map(|&v| v as f32).collect();
+                let version = ring.base_round() as u32;
+                for (id, stream) in streams.iter().enumerate() {
+                    let tasks: Vec<u32> = to.row(id).iter().map(|&t| t as u32).collect();
+                    Msg::Assign {
+                        round: round as u32,
+                        version,
+                        theta: theta32.clone(),
+                        tasks: tasks.clone(),
+                        batches: tasks,
+                        group: sizes[id] as u32,
+                        align: align && sizes[id] > 1,
+                    }
+                    .write_to(&mut &*stream)?;
+                }
+                meta[round % staleness] = Some(InFlight {
+                    t0_us: now_us(),
+                    results_seen: 0,
+                    messages_seen: 0,
+                    wire_bytes: 0,
+                    replanned,
+                });
+                issued += 1;
+            }
+
+            // one frame off the shared result channel
+            let (msg, frame_len) = res_rx
+                .recv_timeout(Duration::from_secs(60))
+                .context("master timed out waiting for results (pipelined pump)")?;
+            let Msg::Result {
+                round: rr,
+                version,
+                worker_id,
+                tasks,
+                comp_us,
+                send_ts_us,
+                h,
+            } = msg
+            else {
+                continue;
+            };
+            let rr = rr as usize;
+            if h.len() != d || tasks.is_empty() || worker_id as usize >= n || rr >= rounds {
+                eprintln!(
+                    "master: dropping malformed result from worker {worker_id} \
+                     ({} tasks, {} h values, d = {d}, round {rr})",
+                    tasks.len(),
+                    h.len()
+                );
+                continue;
+            }
+            let recv_us = now_us();
+            let h64: Vec<f64> = h.iter().map(|&v| v as f64).collect();
+            let task_ids: Vec<usize> = tasks.iter().map(|&t| t as usize).collect();
+            let in_window = match ring.offer(rr, &task_ids, &h64) {
+                RingOffer::Future => {
+                    eprintln!(
+                        "master: dropping result for unissued round {rr} from \
+                         worker {worker_id}"
+                    );
+                    continue;
+                }
+                RingOffer::InFlight(Offer::Malformed) => {
+                    eprintln!(
+                        "master: dropping out-of-plan range {task_ids:?} from \
+                         worker {worker_id}"
+                    );
+                    continue;
+                }
+                RingOffer::InFlight(_) => true,
+                // a straggler's flush from an already-applied round:
+                // useless to θ (the ring dropped it whole), but a real
+                // measurement — it still feeds the recorders, the trace
+                // and the estimator below
+                RingOffer::Stale => false,
+            };
+            let comp_ms = comp_us as f64 / 1e3;
+            let comm_ms = (recv_us.saturating_sub(send_ts_us)) as f64 / 1e3;
+            recorders[worker_id as usize].record_comp(comp_ms);
+            recorders[worker_id as usize].record_comm(comm_ms);
+            let slot = flush_idx.entry((rr, worker_id as usize)).or_insert(0);
+            let msg_idx = *slot;
+            *slot += 1;
+            trace_rec.push_flush(
+                rr,
+                worker_id as usize,
+                msg_idx,
+                task_ids.len(),
+                comp_ms,
+                comm_ms,
+                frame_len,
+                replanned_by_round[rr],
+                version, // the worker's echo of its Assign's θ-version
+            );
+            if let Some(e) = engine.as_mut() {
+                e.observe_flush(worker_id as usize, task_ids.len(), comp_ms, comm_ms);
+            }
+            if in_window {
+                if let Some(m) = meta[rr % staleness].as_mut() {
+                    m.messages_seen += 1;
+                    m.results_seen += task_ids.len();
+                    m.wire_bytes += frame_len;
+                }
+            }
+
+            // apply every round this frame completed, strictly in order
+            while ring.oldest_complete() {
+                let applied = ring.base_round();
+                for stream in &streams {
+                    Msg::Stop {
+                        round: applied as u32,
+                    }
+                    .write_to(&mut &*stream)?;
+                }
+                let winners: Vec<usize> = {
+                    let (winners, h_sum) = ring.finish_oldest();
+                    master.apply_aggregate(
+                        winners,
+                        h_sum,
+                        n,
+                        dataset.padded_samples(),
+                        &mut rng,
+                    );
+                    winners.to_vec()
+                };
+                let apply_us = now_us();
+                let m = meta[applied % staleness].take().expect("in-flight meta");
+                let loss = if loss_every > 0 && (applied + 1) % loss_every == 0 {
+                    Some(dataset.loss(&master.theta))
+                } else {
+                    None
+                };
+                logs.push(RoundLog {
+                    round: applied,
+                    // from issue to θ-application — for non-oldest
+                    // rounds this includes the in-order head-of-line
+                    // wait, which is the honest pipeline latency
+                    completion_ms: (apply_us - m.t0_us) as f64 / 1e3,
+                    winners,
+                    results_seen: m.results_seen,
+                    messages_seen: m.messages_seen,
+                    wire_bytes: m.wire_bytes,
+                    replanned: m.replanned,
+                    loss,
+                });
+                ring.advance();
+            }
+        }
+    }
+
+    // S = 1: the synchronous §II loop, bit-identical to the
+    // pre-pipelining master (the pump above fills `logs` otherwise)
+    let sync_rounds = if staleness > 1 { 0 } else { rounds };
+    for round in 0..sync_rounds {
         // ---- the policy's round-boundary re-plan ---------------------------
         // protocol stays v3: assignment was always per-round; only the
         // plan's *source* changes (frozen vs engine-emitted)
@@ -468,6 +698,9 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
             };
             Msg::Assign {
                 round: round_tag,
+                // synchronous: every prior round has applied, so the
+                // θ-version (applied-round count) equals the round tag
+                version: round_tag,
                 theta: theta32.clone(),
                 tasks: tasks.clone(),
                 batches: tasks,
@@ -496,6 +729,7 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
                 .context("master timed out waiting for results")?;
             let Msg::Result {
                 round: rr,
+                version: _,
                 worker_id,
                 tasks,
                 comp_us,
@@ -608,6 +842,7 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
                 comm_ms,
                 frame_len,
                 replanned,
+                round as u32, // sync: θ-version == round, gap 0
             );
             if let Some(e) = engine.as_mut() {
                 // the estimator eats the same measurements RoundLog and

@@ -22,7 +22,7 @@ pub mod master;
 pub mod protocol;
 pub mod worker;
 
-pub use aggregate::{Offer, RoundAggregator};
+pub use aggregate::{AggregatorRing, Offer, RingOffer, RoundAggregator};
 pub use master::{run_cluster, ClusterConfig, ClusterReport, RoundLog};
 pub use protocol::Msg;
 pub use worker::{run_worker, Backend, WorkerOptions};

@@ -38,10 +38,12 @@ pub const MAX_FRAME: u32 = 256 * 1024 * 1024;
 
 /// Wire-protocol version, bumped on every incompatible frame change
 /// (v2: grouped `Result` frames + `Assign.group`, PR 2; v3: aggregated
-/// partial-sum `Result` blocks + `Assign.align`, PR 3).  Sent in
-/// `Welcome` so a version-skewed worker fails the handshake with a
-/// clear message instead of mis-decoding result frames.
-pub const PROTO_VERSION: u32 = 3;
+/// partial-sum `Result` blocks + `Assign.align`, PR 3; v4: per-frame
+/// θ-version tags on `Assign`/`Result` for the bounded-staleness async
+/// data plane).  Sent in `Welcome` so a version-skewed worker fails the
+/// handshake with a clear message instead of mis-decoding result
+/// frames.
+pub const PROTO_VERSION: u32 = 4;
 
 /// Protocol messages.
 #[derive(Debug, Clone, PartialEq)]
@@ -70,8 +72,14 @@ pub enum Msg {
     /// `t + 1`), so every flushed range lies inside one canonical
     /// `group`-sized block and the master's duplicate-safe range
     /// aggregation can merge blocks across workers.
+    /// `version` (v4) tags the θ snapshot this round computes against:
+    /// the number of rounds the master had *applied* when it issued the
+    /// frame.  Synchronous masters send `version == round` (staleness
+    /// gap 0); a bounded-staleness pipeline sends `round − version ≤
+    /// S − 1`.
     Assign {
         round: u32,
+        version: u32,
         theta: Vec<f32>,
         tasks: Vec<u32>,
         batches: Vec<u32>,
@@ -84,8 +92,12 @@ pub enum Msg {
     /// computation time of the whole group and the send timestamp (µs
     /// on the shared process clock) so the master can measure comm
     /// delay.  `tasks` is the range id the master aggregates by.
+    /// `version` (v4) echoes the `Assign.version` the worker computed
+    /// against, so the master's aggregation ring can verify a landing
+    /// frame's θ lineage without a round→version side table.
     Result {
         round: u32,
+        version: u32,
         worker_id: u32,
         tasks: Vec<u32>,
         comp_us: u64,
@@ -133,6 +145,7 @@ impl Msg {
             }
             Msg::Assign {
                 round,
+                version,
                 theta,
                 tasks,
                 batches,
@@ -141,14 +154,18 @@ impl Msg {
             } => {
                 out.push(Self::TAG_ASSIGN);
                 put_u32(&mut out, *round);
+                put_u32(&mut out, *version);
                 put_f32s(&mut out, theta);
                 put_u32s(&mut out, tasks);
                 put_u32s(&mut out, batches);
                 put_u32(&mut out, *group);
+                // align stays the FINAL Assign field across protocol
+                // bumps — rejects_bad_align_byte pokes the last byte
                 out.push(u8::from(*align));
             }
             Msg::Result {
                 round,
+                version,
                 worker_id,
                 tasks,
                 comp_us,
@@ -157,6 +174,7 @@ impl Msg {
             } => {
                 out.push(Self::TAG_RESULT);
                 put_u32(&mut out, *round);
+                put_u32(&mut out, *version);
                 put_u32(&mut out, *worker_id);
                 put_u32s(&mut out, tasks);
                 put_u64(&mut out, *comp_us);
@@ -195,6 +213,7 @@ impl Msg {
             }
             Self::TAG_ASSIGN => Msg::Assign {
                 round: c.u32()?,
+                version: c.u32()?,
                 theta: c.f32s()?,
                 tasks: c.u32s()?,
                 batches: c.u32s()?,
@@ -207,6 +226,7 @@ impl Msg {
             },
             Self::TAG_RESULT => Msg::Result {
                 round: c.u32()?,
+                version: c.u32()?,
                 worker_id: c.u32()?,
                 tasks: c.u32s()?,
                 comp_us: c.u64()?,
@@ -353,14 +373,17 @@ mod tests {
         });
         roundtrip(Msg::Assign {
             round: 12,
+            version: 12,
             theta: vec![0.5, -1.5],
             tasks: vec![3, 1, 0],
             batches: vec![3, 1, 0],
             group: 2,
             align: false,
         });
+        // async issue: round 13 against the θ of applied round 11 (S=3)
         roundtrip(Msg::Assign {
             round: 13,
+            version: 11,
             theta: vec![],
             tasks: vec![0, 1, 2, 3],
             batches: vec![0, 1, 2, 3],
@@ -369,15 +392,18 @@ mod tests {
         });
         roundtrip(Msg::Result {
             round: 12,
+            version: 12,
             worker_id: 2,
             tasks: vec![3],
             comp_us: 1234,
             send_ts_us: 999_999,
             h: vec![f32::MIN, f32::MAX, 0.0],
         });
-        // grouped flush: two tasks, one aggregated d = 2 sum block (v3)
+        // grouped flush: two tasks, one aggregated d = 2 sum block (v3),
+        // echoing a stale θ-version tag (v4)
         roundtrip(Msg::Result {
             round: 13,
+            version: 11,
             worker_id: 0,
             tasks: vec![1, 2],
             comp_us: 2048,
@@ -420,6 +446,7 @@ mod tests {
     fn rejects_bad_align_byte() {
         let mut enc = Msg::Assign {
             round: 1,
+            version: 1,
             theta: vec![],
             tasks: vec![0],
             batches: vec![0],
@@ -442,6 +469,7 @@ mod tests {
     fn rejects_truncation_everywhere() {
         let enc = Msg::Result {
             round: 1,
+            version: 1,
             worker_id: 2,
             tasks: vec![3, 7],
             comp_us: 4,
@@ -468,6 +496,7 @@ mod tests {
         // Assign with a u32s length claiming more than the frame holds
         let mut enc = vec![3u8]; // TAG_ASSIGN
         enc.extend_from_slice(&1u32.to_le_bytes()); // round
+        enc.extend_from_slice(&1u32.to_le_bytes()); // version (v4)
         enc.extend_from_slice(&0u32.to_le_bytes()); // theta len 0
         enc.extend_from_slice(&1_000_000u32.to_le_bytes()); // tasks len lie
         assert!(Msg::decode(&enc).is_err());

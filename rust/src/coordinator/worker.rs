@@ -64,6 +64,7 @@ enum Work {
     },
     Assign {
         round: u32,
+        version: u32,
         theta: Vec<f32>,
         tasks: Vec<u32>,
         batches: Vec<u32>,
@@ -117,6 +118,7 @@ pub fn run_worker(addr: std::net::SocketAddr, mut opts: WorkerOptions) -> Result
                     }
                     Ok(Msg::Assign {
                         round,
+                        version,
                         theta,
                         tasks,
                         batches,
@@ -125,6 +127,7 @@ pub fn run_worker(addr: std::net::SocketAddr, mut opts: WorkerOptions) -> Result
                     }) => {
                         let _ = tx.send(Work::Assign {
                             round,
+                            version,
                             theta,
                             tasks,
                             batches,
@@ -190,8 +193,14 @@ pub fn run_worker(addr: std::net::SocketAddr, mut opts: WorkerOptions) -> Result
                     }
                 }
             }
+            // A queued Assign simply waits until the current round's
+            // tasks drain (or its Stop lands) — the worker-queue
+            // semantics of the bounded-staleness pipeline: the master
+            // may push up to S assignments ahead, and `s_{i,t} =
+            // max(issue, free)` falls out of this sequential loop.
             Work::Assign {
                 round,
+                version,
                 theta,
                 tasks,
                 batches,
@@ -273,6 +282,10 @@ pub fn run_worker(addr: std::net::SocketAddr, mut opts: WorkerOptions) -> Result
                     }
                     let msg = Msg::Result {
                         round,
+                        // echo the θ-version the computation used, so
+                        // the master can audit a frame's lineage without
+                        // a round→version side table (protocol v4)
+                        version,
                         worker_id,
                         tasks: std::mem::take(&mut buf_tasks),
                         comp_us: std::mem::take(&mut buf_comp_us),

@@ -185,6 +185,7 @@ fn fig5_cluster_spotcheck(opts: &Options) -> Result<Table> {
                 profile: "fig5".into(),
                 plan: SchemeRegistry::cluster_plan(id, n, r, n)?,
                 policy: PolicyKind::Static,
+                staleness: 1,
                 dataset: Dataset::synthesize(n, 400, 900, opts.seed),
                 inject: Some(DelayModelKind::Ec2Like {
                     seed: opts.seed ^ 0xEC2,
@@ -346,6 +347,7 @@ fn fig8_cluster_spotcheck(opts: &Options) -> Result<Table> {
             profile: "fig8".into(),
             plan: SchemeRegistry::cluster_plan(SchemeId::Gc(s as u32), n, n, n)?,
             policy: PolicyKind::Static,
+            staleness: 1,
             dataset: Dataset::synthesize(n, 64, n * 16, opts.seed),
             inject: Some(DelayModelKind::Ec2Like {
                 seed: opts.seed ^ 0xEC2,
@@ -378,9 +380,12 @@ fn fig8_cluster_spotcheck(opts: &Options) -> Result<Table> {
 /// scarce-coverage point `n = 12, r = 4, k = n` with a 0.05 ms/message
 /// master.  Static schemes must commit to one layout and are wrong
 /// after every shift; the `order` and `load` policies re-estimate and
-/// re-plan.  Every run shares the identical delay stream (the policy
-/// engines only consume the scheduling RNG), so the deltas are
-/// variance-reduced.
+/// re-plan.  The `@sS` rows pipeline `S` rounds in flight (bounded
+/// staleness, EXPERIMENTS.md §Async): the slow tier's long rounds
+/// overlap instead of serializing, so k-async rows beat the best
+/// synchronous static row even before any re-planning.  Every run
+/// shares the identical delay stream (the policy engines only consume
+/// the scheduling RNG), so the deltas are variance-reduced.
 pub fn adaptive_shift_table(opts: &Options) -> Result<Table> {
     let (n, r, k) = (12usize, 4usize, 12usize);
     let (ingest_ms, shift_every, rotate) = (0.05, 250usize, 5usize);
@@ -389,12 +394,17 @@ pub fn adaptive_shift_table(opts: &Options) -> Result<Table> {
     let base = two_tier_model(n, n_slow, slow_factor);
     let model = ShiftingStraggler::new(&base, shift_every, rotate);
 
-    let runs: Vec<(SchemeId, PolicyKind)> = vec![
-        (SchemeId::Cs, PolicyKind::Static),
-        (SchemeId::Gc(4), PolicyKind::Static),
-        (SchemeId::GcHet(4, 1), PolicyKind::Static),
-        (SchemeId::Gc(4), PolicyKind::AdaptiveOrder),
-        (SchemeId::Gc(4), PolicyKind::AdaptiveLoad),
+    let runs: Vec<(SchemeId, PolicyKind, usize)> = vec![
+        (SchemeId::Cs, PolicyKind::Static, 1),
+        (SchemeId::Gc(4), PolicyKind::Static, 1),
+        (SchemeId::GcHet(4, 1), PolicyKind::Static, 1),
+        (SchemeId::Gc(4), PolicyKind::AdaptiveOrder, 1),
+        (SchemeId::Gc(4), PolicyKind::AdaptiveLoad, 1),
+        // the k-async rows: S rounds in flight on the same stream —
+        // staleness hides the slow tier behind the pipeline
+        (SchemeId::Cs, PolicyKind::Static, 2),
+        (SchemeId::Gc(4), PolicyKind::AdaptiveOrder, 2),
+        (SchemeId::Gc(4), PolicyKind::AdaptiveOrder, 3),
     ];
     let mut table = Table::new(
         &format!(
@@ -405,7 +415,7 @@ pub fn adaptive_shift_table(opts: &Options) -> Result<Table> {
         &["scheme", "policy", "mean", "std_err", "p95", "replans", "vs best static"],
     );
     let mut outcomes = Vec::new();
-    for &(scheme, policy) in &runs {
+    for &(scheme, policy, staleness) in &runs {
         let out = run_policy_rounds(
             &PolicyRunConfig {
                 scheme,
@@ -416,22 +426,28 @@ pub fn adaptive_shift_table(opts: &Options) -> Result<Table> {
                 rounds,
                 ingest_ms,
                 seed: opts.seed,
+                staleness,
             },
             &model,
             None,
             None,
         )?;
-        outcomes.push((scheme, policy, out));
+        outcomes.push((scheme, policy, staleness, out));
     }
+    // the baseline the async rows must beat: best SYNCHRONOUS static
     let best_static = outcomes
         .iter()
-        .filter(|(_, p, _)| *p == PolicyKind::Static)
-        .map(|(_, _, o)| o.estimate.mean)
+        .filter(|(_, p, s, _)| *p == PolicyKind::Static && *s == 1)
+        .map(|(_, _, _, o)| o.estimate.mean)
         .fold(f64::INFINITY, f64::min);
-    for (scheme, policy, out) in &outcomes {
+    for (scheme, policy, staleness, out) in &outcomes {
         table.push_row(vec![
             scheme.to_string(),
-            policy.to_string(),
+            if *staleness > 1 {
+                format!("{policy}@s{staleness}")
+            } else {
+                policy.to_string()
+            },
             Table::fmt(out.estimate.mean),
             Table::fmt(out.estimate.std_err),
             Table::fmt(out.estimate.p95),
@@ -461,6 +477,7 @@ pub fn fig3(opts: &Options) -> Result<(Table, Table)> {
         profile: "fig3".into(),
         plan: SchemeRegistry::cluster_plan(SchemeId::Cs, n, 1, n)?,
         policy: PolicyKind::Static,
+        staleness: 1,
         dataset: Dataset::synthesize(n, 500, 900, opts.seed),
         inject: Some(DelayModelKind::Ec2Like {
             seed: opts.seed ^ 0xF163,
@@ -591,6 +608,10 @@ pub struct E2eConfig {
     /// round-boundary re-planning policy (`static | order | order@pQQ
     /// | load | load-rate | alloc-group | alloc-random`)
     pub policy: PolicyKind,
+    /// bounded-staleness window: keep up to `S` rounds in flight with
+    /// θ-version-tagged frames (`S = 1` = synchronous; `S ≥ 2` needs an
+    /// uncoded scheme — see [`ClusterConfig::staleness`])
+    pub staleness: usize,
     pub profile: String,
     pub use_pjrt: bool,
     pub seed: u64,
@@ -614,6 +635,7 @@ impl Default for E2eConfig {
             eta: 0.05,
             scheme: SchemeId::Ss,
             policy: PolicyKind::Static,
+            staleness: 1,
             profile: "e2e".into(),
             use_pjrt: true,
             seed: 2024,
@@ -635,6 +657,7 @@ pub fn run_e2e(cfg: E2eConfig, opts: &Options) -> Result<(ClusterReport, Table)>
         profile: cfg.profile.clone(),
         plan,
         policy: cfg.policy,
+        staleness: cfg.staleness,
         dataset,
         inject: Some(DelayModelKind::Ec2Like {
             seed: cfg.seed ^ 0xEC2,
@@ -649,8 +672,19 @@ pub fn run_e2e(cfg: E2eConfig, opts: &Options) -> Result<(ClusterReport, Table)>
     })?;
     let mut curve = Table::new(
         &format!(
-            "e2e training: n = {}, d = {}, N = {}, r = {}, k = {} ({} scheme, {} policy)",
-            cfg.n, cfg.d, cfg.n_samples, cfg.r, cfg.k, cfg.scheme, cfg.policy
+            "e2e training: n = {}, d = {}, N = {}, r = {}, k = {} ({} scheme, {} policy{})",
+            cfg.n,
+            cfg.d,
+            cfg.n_samples,
+            cfg.r,
+            cfg.k,
+            cfg.scheme,
+            cfg.policy,
+            if cfg.staleness > 1 {
+                format!(", S = {}", cfg.staleness)
+            } else {
+                String::new()
+            }
         ),
         &["round", "loss", "completion_ms"],
     );

@@ -10,11 +10,13 @@
 //! straggler fig8  [--trials N] [--cluster]      # GC(s) tradeoff sweep
 //! straggler sim   --n 16 --r 4 --k 16 [--model scenario1|scenario2|ec2|exp]
 //!                 [--schemes CS,SS,GC2,GCH(4,1),LB] [--ingest 0.15]
+//!                 [--staleness S]               # k-async: S rounds in flight
 //!                 [--policy order [--shift 250 --rotate 5]]  # re-planning arm
 //!                 [--record t.jsonl]            # censored-slot trace capture
-//!                 [--from-trace t.jsonl [--replay empirical|tg|exp]]
+//!                 [--from-trace t.jsonl [--replay empirical|tg|exp|corr]]
 //! straggler train --scheme CS|SS|RA|GC(s)|GCH(a,b)|PC|PCMM
 //!                 [--policy static|order|order@p95|load|load-rate|alloc-group|alloc-random]
+//!                 [--staleness S]               # pipelined master (uncoded)
 //!                 [--rounds 300] [--k 8] [--no-pjrt] [--record t.jsonl]
 //! straggler trace record --out-trace t.jsonl [--cluster]  # record → fit → replay
 //! straggler trace fit    --trace t.jsonl        # per-worker fits + KS + tiers
@@ -29,7 +31,8 @@
 use anyhow::{bail, Result};
 
 use straggler_sched::adaptive::{
-    run_policy_rounds, PerRound, PolicyKind, PolicyRunConfig, RoundDelayModel, ShiftingStraggler,
+    run_policy_rounds, PerRound, PolicyKind, PolicyRunConfig, PolicySpec, RoundDelayModel,
+    ShiftingStraggler, MAX_STALENESS,
 };
 use straggler_sched::delay::{
     DelayModel, Ec2LikeModel, ShiftedExponential, TruncatedGaussianModel,
@@ -204,6 +207,7 @@ fn run_trace(args: &Args, opts: &Options) -> Result<()> {
                     eta: 0.01,
                     scheme,
                     policy,
+                    staleness: args.usize_in("staleness", 1, 1, MAX_STALENESS)?,
                     profile: "trace".into(),
                     use_pjrt: false,
                     seed: opts.seed,
@@ -238,6 +242,9 @@ fn run_trace(args: &Args, opts: &Options) -> Result<()> {
                         rounds,
                         ingest_ms: 0.0,
                         seed: opts.seed,
+                        // --staleness > 1 records a pipelined run, so
+                        // the trace carries non-trivial θ-version tags
+                        staleness: args.usize_in("staleness", 1, 1, MAX_STALENESS)?,
                     },
                     &PerRound(model.as_ref()),
                     None,
@@ -312,6 +319,16 @@ fn run_trace(args: &Args, opts: &Options) -> Result<()> {
             } else {
                 println!("  tiers: fleet is effectively homogeneous (single tier)");
             }
+            println!(
+                "  correlated slowdown: fleet-mean σ̂ = {:.3} (per-worker: {}) — \
+                 replay it with --replay corr",
+                fit.mean_sigma(),
+                fit.sigma
+                    .iter()
+                    .map(|s| format!("{s:.2}"))
+                    .collect::<Vec<_>>()
+                    .join(" ")
+            );
             opts.write(&t, "trace_fit")?;
         }
         "replay" => {
@@ -396,7 +413,7 @@ fn run() -> Result<()> {
                     bail!(
                         "--from-trace replays the trace's own fleet; drop --model/--n \
                          (shape the matrix with --r/--k/--schemes/--policies/--replay \
-                         empirical|tg|exp instead)"
+                         empirical|tg|exp|corr instead)"
                     );
                 }
                 let store = TraceStore::load(std::path::Path::new(&path))?;
@@ -436,6 +453,7 @@ fn run() -> Result<()> {
             if ingest.is_nan() || ingest < 0.0 {
                 bail!("--ingest must be a non-negative ms/message cost, got {ingest}");
             }
+            let staleness = args.usize_in("staleness", 1, 1, MAX_STALENESS)?;
             if let Some(rec_path) = args.str_opt("record") {
                 // censored-slot trace emission: a single-stream run of
                 // ONE scheme, recorded through the simulator tap
@@ -464,6 +482,7 @@ fn run() -> Result<()> {
                         rounds,
                         ingest_ms: ingest,
                         seed: opts.seed,
+                        staleness,
                     },
                     &PerRound(model.as_ref()),
                     None,
@@ -492,10 +511,18 @@ fn run() -> Result<()> {
             }
             if let Some(pname) = args.str_opt("policy") {
                 // re-planning arm: every scheme runs twice on the same
-                // delay stream — frozen (static) and under the policy
-                let policy = PolicyKind::parse(&pname).map_err(|e| {
+                // delay stream — frozen (static) and under the policy.
+                // `--policy order@s2` and `--policy order --staleness 2`
+                // both pipeline S rounds in flight
+                let spec = PolicySpec::parse(&pname).map_err(|e| {
                     anyhow::anyhow!("--policy {pname:?}: {e}")
                 })?;
+                let policy = spec.kind;
+                let staleness = if spec.staleness > 1 {
+                    spec.staleness
+                } else {
+                    staleness
+                };
                 let shift = args.usize_or("shift", 0)?;
                 let rotate = args.usize_or("rotate", n / 2)?;
                 let bases: Vec<SchemeId> = if args.str_opt("schemes").is_some() {
@@ -522,9 +549,14 @@ fn run() -> Result<()> {
                 let mut t = Table::new(
                     &format!(
                         "re-planning: n = {n}, r = {r}, k = {k}, model = {model_name}\
-                         {}, ingest {ingest} ms, {} rounds",
+                         {}{}, ingest {ingest} ms, {} rounds",
                         if shift > 0 {
                             format!(" (shift every {shift} rot {rotate})")
+                        } else {
+                            String::new()
+                        },
+                        if staleness > 1 {
+                            format!(", S = {staleness}")
                         } else {
                             String::new()
                         },
@@ -544,6 +576,7 @@ fn run() -> Result<()> {
                                 rounds: opts.trials,
                                 ingest_ms: ingest,
                                 seed: opts.seed,
+                                staleness,
                             },
                             round_model,
                             None,
@@ -561,6 +594,59 @@ fn run() -> Result<()> {
                             100.0 * (adaptive.estimate.mean / frozen.estimate.mean - 1.0)
                         ),
                         adaptive.replans.to_string(),
+                    ]);
+                }
+                t.print();
+                let unknown = args.unknown_keys();
+                if !unknown.is_empty() {
+                    bail!("unknown arguments: {}", unknown.join(", "));
+                }
+                return Ok(());
+            }
+            if staleness > 1 {
+                // k-async arm: every scheme runs twice on the same
+                // delay stream — synchronous (S = 1) and with S rounds
+                // in flight (EXPERIMENTS.md §Async).  The async column
+                // reports per-round θ-application *increments*, so the
+                // two columns are directly comparable wall-clock rates
+                let mut t = Table::new(
+                    &format!(
+                        "k-async: n = {n}, r = {r}, k = {k}, model = {model_name}, \
+                         S = {staleness}, ingest {ingest} ms, {} rounds",
+                        opts.trials
+                    ),
+                    &["scheme", "sync", "async", "delta", "label"],
+                );
+                for &scheme in &schemes {
+                    let run = |s: usize| {
+                        run_policy_rounds(
+                            &PolicyRunConfig {
+                                scheme,
+                                policy: PolicyKind::Static,
+                                n,
+                                r,
+                                k,
+                                rounds: opts.trials,
+                                ingest_ms: ingest,
+                                seed: opts.seed,
+                                staleness: s,
+                            },
+                            &PerRound(model.as_ref()),
+                            None,
+                            None,
+                        )
+                    };
+                    let sync = run(1)?;
+                    let pipe = run(staleness)?;
+                    t.push_row(vec![
+                        scheme.to_string(),
+                        Table::fmt(sync.estimate.mean),
+                        Table::fmt(pipe.estimate.mean),
+                        format!(
+                            "{:+.2}%",
+                            100.0 * (pipe.estimate.mean / sync.estimate.mean - 1.0)
+                        ),
+                        pipe.estimate.scheme.clone(),
                     ]);
                 }
                 t.print();
@@ -679,8 +765,14 @@ fn run() -> Result<()> {
                 )
             })?;
             let policy_name = args.str_or("policy", "static");
-            let policy = PolicyKind::parse(&policy_name)
+            let spec = PolicySpec::parse(&policy_name)
                 .map_err(|e| anyhow::anyhow!("--policy {policy_name:?}: {e}"))?;
+            let staleness = if spec.staleness > 1 {
+                spec.staleness
+            } else {
+                args.usize_in("staleness", 1, 1, MAX_STALENESS)?
+            };
+            let policy = spec.kind;
             let cfg = harness::E2eConfig {
                 n: args.usize_or("n", 10)?,
                 d: args.usize_or("d", 512)?,
@@ -691,6 +783,7 @@ fn run() -> Result<()> {
                 eta: args.f64_or("eta", 0.05)?,
                 scheme,
                 policy,
+                staleness,
                 profile: args.str_or("profile", "e2e"),
                 use_pjrt: !args.flag("no-pjrt"),
                 seed: args.u64_or("data-seed", 2024)?,
@@ -775,18 +868,25 @@ subcommands:
                     (--cluster adds a real-cluster spot check)
   sim               one (n, r, k) point (--model ..., --ingest MS,
                     --schemes CS,SS,RA,PC,PCMM,LB,GC(s),GCH(a,b));
+                    --staleness S runs the bounded-staleness k-async
+                    arm instead: each scheme synchronous vs with S
+                    rounds in flight on the same delay stream (S = 1
+                    is synchronous; S ≤ 8);
                     with --policy P it instead runs the sequential
                     re-planning arm, each scheme frozen vs under P
                     (--shift R rotates the worker delay profiles every
                     R rounds by --rotate positions — the
-                    shifting-straggler scenario);
+                    shifting-straggler scenario; P@sS, e.g. order@s2,
+                    combines re-planning with S rounds in flight);
                     --record FILE captures one scheme's censored-slot
-                    delay trace (--rounds N, default 500);
+                    delay trace (--rounds N, default 500; add
+                    --staleness S for θ-version-tagged async traces);
                     --from-trace FILE replays a recorded
                     trace instead of a --model (the fleet size comes
-                    from the trace; --replay empirical|tg|exp picks
-                    bootstrap vs fitted substrates, --policies
-                    static,order,load shapes the matrix)
+                    from the trace; --replay empirical|tg|exp|corr
+                    picks bootstrap vs fitted vs correlated-slowdown
+                    substrates, --policies static,order,load shapes
+                    the matrix)
   run               run a JSON-described sweep: --config exp.json
                     (optional "policy" field runs the re-planning arm)
   ablations         design-choice studies (ingest, correlation, searched
@@ -805,8 +905,11 @@ subcommands:
                     --policy static|order|order@p95|load|load-rate|
                     alloc-group|alloc-random re-plans the assignment
                     between rounds from measured per-worker delays
-                    (uncoded schemes only); --record FILE saves the
-                    master's measured delay trace
+                    (uncoded schemes only); --staleness S (or the
+                    @sS policy suffix) keeps S rounds in flight on
+                    the pipelined master (uncoded k-distinct wire
+                    only, protocol v4 θ-version tags); --record FILE
+                    saves the master's measured delay trace
                     (--listen ADDR --external for multi-process mode)
   trace             the record → fit → replay loop (digital-twin
                     calibration, EXPERIMENTS.md §Traces):
@@ -817,10 +920,11 @@ subcommands:
                       with --cluster;
                     trace fit --trace FILE
                       per-worker shifted-exp MLE + truncated-Gaussian
-                      moment fits, KS goodness-of-fit, fast/slow tiers;
+                      moment fits, KS goodness-of-fit, fast/slow tiers,
+                      per-worker correlated-slowdown σ̂;
                     trace replay --trace FILE
                       runs the scheme × policy matrix on the traced
-                      fleet (--replay empirical|tg|exp, --schemes,
+                      fleet (--replay empirical|tg|exp|corr, --schemes,
                       --policies, --trials, --ingest) and prints the
                       pinned-seed completion digest
   worker            external worker process: --connect HOST:PORT
@@ -837,6 +941,9 @@ policy grammar (sim/run/train): static order order@pQQ load load-rate
   load-rate sizes flushes by estimated service-rate ratios instead of
   the rank ramp; alloc-* are the Behrouzi-Far & Soljanin allocation
   variants (alloc-group needs r | n)
+staleness axis: append @sS to any policy (order@s2, order@p95@s2) or
+  pass --staleness S to keep S ∈ [1, 8] rounds in flight — bounded
+  staleness: θ-version gap ≤ S − 1, S = 1 is the synchronous protocol
 trace files: versioned JSONL (default) or compact binary (.bin), one
   event per delivered message — see EXPERIMENTS.md §Traces
 "#;

@@ -114,6 +114,30 @@ pub fn slot_arrivals_batch(batch: &DelayBatch, out: &mut Vec<f64>) {
     }
 }
 
+/// Shift one round's *local* arrival slice (`n·r` values, worker-major)
+/// onto the absolute clock of the bounded-staleness pipeline:
+/// `out[i·r + j] = local[i·r + j] + starts[i]`, where `starts[i]` is
+/// worker `i`'s start time for the round (max of the round's issue
+/// instant and the worker's previous free time).
+///
+/// With `starts ≡ 0` this is a bit-exact pass-through (a `+ 0.0` leaves
+/// every finite f64 unchanged), which is why the synchronous `S = 1`
+/// engines never need it — pinned by `offsets_of_zero_are_bit_exact`.
+#[inline]
+pub fn offset_arrivals(local: &[f64], starts: &[f64], r: usize, out: &mut Vec<f64>) {
+    debug_assert_eq!(local.len(), starts.len() * r);
+    if out.len() != local.len() {
+        out.clear();
+        out.resize(local.len(), 0.0);
+    }
+    for (i, &start) in starts.iter().enumerate() {
+        let base = i * r;
+        for j in 0..r {
+            out[base + j] = local[base + j] + start;
+        }
+    }
+}
+
 /// Completion time of one round from its precomputed arrival slice
 /// (`n·r` values): per-task first arrival (min-reduce over the flat
 /// task indices), then the k-th order statistic.
@@ -266,6 +290,31 @@ mod tests {
                 );
                 let scalar = crate::lb::kth_slot_arrival(&sample, k, &mut lb_scratch);
                 assert_eq!(batched.to_bits(), scalar.to_bits(), "k={k} round {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn offsets_of_zero_are_bit_exact() {
+        let (n, r) = (4usize, 3usize);
+        let model = TruncatedGaussianModel::scenario1(n);
+        let mut rng = Rng::seed_from_u64(11);
+        let batch = model.sample_batch(2, n, r, &mut rng);
+        let mut arrivals = Vec::new();
+        slot_arrivals_batch(&batch, &mut arrivals);
+        let local = &arrivals[..n * r];
+        let zeros = vec![0.0f64; n];
+        let mut out = Vec::new();
+        offset_arrivals(local, &zeros, r, &mut out);
+        for (a, b) in local.iter().zip(&out) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // and a real shift lands per worker, not globally
+        let starts = vec![0.0, 10.0, 20.0, 30.0];
+        offset_arrivals(local, &starts, r, &mut out);
+        for i in 0..n {
+            for j in 0..r {
+                assert_eq!(out[i * r + j], local[i * r + j] + starts[i]);
             }
         }
     }

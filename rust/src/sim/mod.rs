@@ -24,7 +24,7 @@ pub mod montecarlo;
 pub mod pool;
 
 pub use batch::{
-    completion_from_arrivals, completion_times_batch, kth_arrival_from_arrivals,
+    completion_from_arrivals, completion_times_batch, kth_arrival_from_arrivals, offset_arrivals,
     slot_arrivals_batch, FlatTasks,
 };
 pub use montecarlo::{

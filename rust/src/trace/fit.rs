@@ -28,11 +28,25 @@
 //! tiers** by deterministic 1-D 2-means over the per-worker mean
 //! computation delay — the heterogeneity summary that picks GCH-style
 //! layouts and seeds the `load`/`load-rate` policies with a prior.
+//!
+//! A third estimate captures **within-worker round-to-round
+//! correlation** (the paper's §II joint CDF `F_{i,[n]}` freedom, which
+//! the marginal fits above are blind to): per worker, the between-round
+//! variance of the round-mean task delay decomposes into a genuine
+//! common-factor part plus sampling noise of the round mean,
+//! `Var_t(m_t) ≈ μ² (e^{σ²} − 1) + E_t[v̂_t / c_t]`.  Subtracting the
+//! noise term and inverting the mean-1 log-normal variance map gives
+//! the per-worker log-std `σ̂_w` ([`FleetFit::sigma`]); wrapping the
+//! truncated-Gaussian fleet model in
+//! [`crate::delay::WorkerCorrelated`] at the fleet-mean σ̂ is
+//! [`FleetFit::correlated_model`] — the `trace replay --replay corr`
+//! twin, which reproduces bursty "machine is busy this round" delays
+//! that the independent replays smooth away.
 
 use anyhow::{bail, Result};
 
 use crate::delay::exponential::ShiftedExp;
-use crate::delay::{TruncatedGaussian, TruncatedGaussianModel};
+use crate::delay::{TruncatedGaussian, TruncatedGaussianModel, WorkerCorrelated};
 use crate::metrics::fit_truncated_gaussian;
 
 use super::record::TraceStore;
@@ -160,6 +174,12 @@ pub struct FleetFit {
     /// per-worker mean computation delay; all-0 when the fleet is
     /// effectively homogeneous (tier means within 10 %).
     pub tier_of: Vec<usize>,
+    /// Per-worker round-to-round correlation strength: the log-std of
+    /// the mean-1 log-normal common factor that best explains the
+    /// excess between-round variance of the worker's round-mean task
+    /// delay (0 when rounds look independent, or too few rounds to
+    /// tell).
+    pub sigma: Vec<f64>,
 }
 
 impl FleetFit {
@@ -209,6 +229,25 @@ impl FleetFit {
             self.workers.iter().map(|w| w.comm.exp.dist).collect(),
             "fitted/shifted-exp",
         )
+    }
+
+    /// Fleet-mean correlated log-std — [`WorkerCorrelated`] carries a
+    /// single σ, so the replay twin uses the fleet average.
+    pub fn mean_sigma(&self) -> f64 {
+        if self.sigma.is_empty() {
+            0.0
+        } else {
+            self.sigma.iter().sum::<f64>() / self.sigma.len() as f64
+        }
+    }
+
+    /// The correlated replay twin: the truncated-Gaussian fleet model
+    /// wrapped with the fitted per-round worker slowdown (`σ̂` at the
+    /// fleet mean).  Marginal means are preserved (the factor is
+    /// mean-1), so this only adds the round-to-round burstiness the
+    /// independent models miss.
+    pub fn correlated_model(&self) -> WorkerCorrelated<TruncatedGaussianModel> {
+        WorkerCorrelated::new(self.truncated_gaussian_model(), self.mean_sigma())
     }
 }
 
@@ -262,6 +301,60 @@ fn two_tier(means: &[f64]) -> Vec<usize> {
     assign
 }
 
+/// Per-worker correlated-slowdown log-std from the between/within
+/// variance decomposition (module docs): group the per-task computation
+/// means by `(worker, round)`, estimate the between-round variance of
+/// the round means, subtract the expected sampling noise of a round
+/// mean (`v̂_t / c_t`, from rounds with ≥ 2 flushes), and invert
+/// `Var(Z) = e^{σ²} − 1` of the mean-1 log-normal factor.  Workers with
+/// fewer than two observed rounds get σ̂ = 0 — no evidence either way.
+fn fit_sigma(store: &TraceStore) -> Vec<f64> {
+    use std::collections::BTreeMap;
+    let n = store.n_workers();
+    // (sum, sum of squares, count) of per-task comp ms per (worker, round)
+    let mut per: Vec<BTreeMap<u32, (f64, f64, usize)>> = vec![BTreeMap::new(); n];
+    for ev in store.events() {
+        let x = ev.compute_s * 1e3 / ev.tasks as f64;
+        let cell = per[ev.worker as usize].entry(ev.round).or_insert((0.0, 0.0, 0));
+        cell.0 += x;
+        cell.1 += x * x;
+        cell.2 += 1;
+    }
+    per.iter()
+        .map(|rounds| {
+            if rounds.len() < 2 {
+                return 0.0;
+            }
+            let mut means = Vec::with_capacity(rounds.len());
+            let (mut noise_sum, mut noise_cnt) = (0.0, 0usize);
+            for &(s, ss, c) in rounds.values() {
+                let cf = c as f64;
+                means.push(s / cf);
+                if c >= 2 {
+                    // within-round sample variance → noise of the mean
+                    let v = ((ss - s * s / cf) / (cf - 1.0)).max(0.0);
+                    noise_sum += v / cf;
+                    noise_cnt += 1;
+                }
+            }
+            let t = means.len() as f64;
+            let mu = means.iter().sum::<f64>() / t;
+            if !(mu > 0.0) {
+                return 0.0;
+            }
+            let var_between =
+                means.iter().map(|m| (m - mu) * (m - mu)).sum::<f64>() / (t - 1.0);
+            let noise = if noise_cnt > 0 {
+                noise_sum / noise_cnt as f64
+            } else {
+                0.0
+            };
+            let excess = (var_between - noise).max(0.0);
+            (1.0 + excess / (mu * mu)).ln().max(0.0).sqrt()
+        })
+        .collect()
+}
+
 /// Fit every worker's delay channels from a trace.  Every worker in
 /// `[0, n_workers)` must have ≥ 2 computation and ≥ 2 communication
 /// observations (fitting a worker the trace never saw would silently
@@ -291,7 +384,12 @@ pub fn fit_traces(store: &TraceStore) -> Result<FleetFit> {
     }
     let means: Vec<f64> = workers.iter().map(|w| w.comp.mean_ms).collect();
     let tier_of = two_tier(&means);
-    Ok(FleetFit { workers, tier_of })
+    let sigma = fit_sigma(store);
+    Ok(FleetFit {
+        workers,
+        tier_of,
+        sigma,
+    })
 }
 
 #[cfg(test)]
@@ -366,7 +464,7 @@ mod tests {
             for w in 0..4usize {
                 let comp = if w < 2 { 0.1 } else { 0.4 } + 0.02 * rng.f64();
                 let comm = 0.5 + 0.1 * rng.f64();
-                rec.push_slot(round, w, 0, comp, comm, false);
+                rec.push_slot(round, w, 0, comp, comm, false, round as u32);
             }
         }
         let fit = fit_traces(&rec.into_store()).unwrap();
@@ -390,12 +488,53 @@ mod tests {
     }
 
     #[test]
+    fn sigma_fit_separates_correlated_from_independent_workers() {
+        // worker 0: every flush of a round shares a log-normal slowdown
+        // (σ = 0.5); worker 1: iid flushes.  The decomposition must
+        // attribute worker 0's between-round variance to the common
+        // factor and see (almost) none at worker 1.
+        let mut rec = TraceRecorder::new("CS");
+        let mut rng = Rng::seed_from_u64(17);
+        let gauss = |rng: &mut Rng| {
+            let u1: f64 = rng.f64().max(1e-300);
+            let u2: f64 = rng.f64();
+            (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+        };
+        for round in 0..400 {
+            let z = (0.5 * gauss(&mut rng) - 0.125).exp();
+            for flush in 0..4usize {
+                let noise0 = 1.0 + 0.05 * rng.f64();
+                rec.push_slot(round, 0, flush, 0.2 * z * noise0, 0.5, false, 0);
+                let noise1 = 1.0 + 0.05 * rng.f64();
+                rec.push_slot(round, 1, flush, 0.2 * noise1, 0.5, false, 0);
+            }
+        }
+        let fit = fit_traces(&rec.into_store()).unwrap();
+        assert!(
+            fit.sigma[0] > 0.3,
+            "correlated worker under-detected: σ̂ = {}",
+            fit.sigma[0]
+        );
+        assert!(
+            fit.sigma[1] < 0.1,
+            "independent worker over-detected: σ̂ = {}",
+            fit.sigma[1]
+        );
+        // the replay twin carries the fleet-mean σ and keeps the
+        // fitted marginals underneath
+        use crate::delay::DelayModel;
+        let twin = fit.correlated_model();
+        assert!(twin.name().starts_with("correlated(σ="), "{}", twin.name());
+        assert!((twin.sigma - fit.mean_sigma()).abs() < 1e-12);
+    }
+
+    #[test]
     fn fit_rejects_unobserved_workers() {
         let mut rec = TraceRecorder::new("CS");
-        rec.push_slot(0, 0, 0, 0.1, 0.5, false);
-        rec.push_slot(1, 0, 0, 0.1, 0.5, false);
-        rec.push_slot(0, 2, 0, 0.1, 0.5, false); // worker 1 never observed
-        rec.push_slot(1, 2, 0, 0.1, 0.5, false);
+        rec.push_slot(0, 0, 0, 0.1, 0.5, false, 0);
+        rec.push_slot(1, 0, 0, 0.1, 0.5, false, 1);
+        rec.push_slot(0, 2, 0, 0.1, 0.5, false, 0); // worker 1 never observed
+        rec.push_slot(1, 2, 0, 0.1, 0.5, false, 1);
         assert!(fit_traces(&rec.into_store()).is_err());
     }
 }

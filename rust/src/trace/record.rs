@@ -21,10 +21,19 @@ use anyhow::{bail, Context, Result};
 use crate::util::json::Json;
 
 /// Format tag of the JSONL header line and the binary magic version.
+/// The tag is unchanged by the async θ-version extension: the per-event
+/// `version` key is *optional* on read (absent = `0`, the synchronous
+/// tag of round 0 — pre-async traces stay loadable verbatim) and is
+/// always written, so v4-era traces are self-describing.
 pub const TRACE_FORMAT: &str = "straggler-trace/v1";
 
 /// Magic prefix of the binary codec (7 bytes + 1 version byte).
-pub const BINARY_MAGIC: &[u8; 8] = b"STRGTRC\x01";
+/// `\x02` adds the per-event θ-version tag; `\x01` traces (no tag) are
+/// still accepted and load with `version = 0`.
+pub const BINARY_MAGIC: &[u8; 8] = b"STRGTRC\x02";
+
+/// The pre-async binary magic — readable, never written.
+pub const BINARY_MAGIC_V1: &[u8; 8] = b"STRGTRC\x01";
 
 /// One recorded delivery.
 #[derive(Debug, Clone, PartialEq)]
@@ -51,6 +60,11 @@ pub struct TraceEvent {
     pub scheme: String,
     /// Whether an adaptive policy changed the plan for this round.
     pub replanned: bool,
+    /// θ-version the round was computed against (protocol v4's
+    /// per-frame tag).  Synchronous rounds carry `version == round`
+    /// (staleness gap 0); a bounded-staleness pipeline carries
+    /// `round − version ≤ S − 1`.  Pre-async traces load as `0`.
+    pub version: u32,
 }
 
 impl TraceEvent {
@@ -67,6 +81,14 @@ impl TraceEvent {
         if self.scheme.is_empty() {
             bail!("trace event needs a scheme label");
         }
+        if self.version > self.round {
+            bail!(
+                "trace event θ-version {} is ahead of its round {} — a round can \
+                 never be computed against a future model",
+                self.version,
+                self.round
+            );
+        }
         Ok(())
     }
 
@@ -81,6 +103,7 @@ impl TraceEvent {
             ("bytes", Json::Num(self.bytes as f64)),
             ("scheme", Json::Str(self.scheme.clone())),
             ("replanned", Json::Bool(self.replanned)),
+            ("version", Json::Num(self.version as f64)),
         ])
     }
 
@@ -117,6 +140,15 @@ impl TraceEvent {
                 .get("replanned")
                 .and_then(Json::as_bool)
                 .context("trace event `replanned` must be a bool")?,
+            // optional: pre-async traces have no θ-version tag — they
+            // load as 0 (the synchronous tag of round 0)
+            version: match v.get("version") {
+                None => 0,
+                Some(x) => x
+                    .as_usize()
+                    .and_then(|u| u32::try_from(u).ok())
+                    .context("trace event `version` must be a u32")?,
+            },
         };
         ev.validate()?;
         Ok(ev)
@@ -348,7 +380,7 @@ impl TraceStore {
     /// (`to_le_bytes`/`from_le_bytes`).
     pub fn to_binary(&self) -> Vec<u8> {
         let schemes = self.schemes();
-        let mut out = Vec::with_capacity(20 + self.events.len() * 41);
+        let mut out = Vec::with_capacity(20 + self.events.len() * 45);
         out.extend_from_slice(BINARY_MAGIC);
         out.extend_from_slice(&self.declared_workers.unwrap_or(0).to_le_bytes());
         out.extend_from_slice(&(schemes.len() as u32).to_le_bytes());
@@ -361,6 +393,7 @@ impl TraceStore {
             let scheme_idx = schemes.iter().position(|s| *s == ev.scheme).expect("interned") as u32;
             out.extend_from_slice(&ev.worker.to_le_bytes());
             out.extend_from_slice(&ev.round.to_le_bytes());
+            out.extend_from_slice(&ev.version.to_le_bytes());
             out.extend_from_slice(&ev.slot.to_le_bytes());
             out.extend_from_slice(&ev.tasks.to_le_bytes());
             out.extend_from_slice(&scheme_idx.to_le_bytes());
@@ -393,9 +426,15 @@ impl TraceStore {
         }
         let mut pos = 0usize;
         let magic = take(bytes, &mut pos, BINARY_MAGIC.len())?;
-        if magic != BINARY_MAGIC {
+        // v2 carries the per-event θ-version tag; v1 (pre-async) traces
+        // are still readable — their events load with version = 0
+        let has_version = if magic == BINARY_MAGIC {
+            true
+        } else if magic == BINARY_MAGIC_V1 {
+            false
+        } else {
             bail!("not a binary straggler trace (bad magic)");
-        }
+        };
         let declared_workers = match u32_at(bytes, &mut pos)? {
             0 => None,
             n => Some(n),
@@ -417,6 +456,7 @@ impl TraceStore {
         for _ in 0..count {
             let worker = u32_at(bytes, &mut pos)?;
             let round = u32_at(bytes, &mut pos)?;
+            let version = if has_version { u32_at(bytes, &mut pos)? } else { 0 };
             let slot = u32_at(bytes, &mut pos)?;
             let tasks = u32_at(bytes, &mut pos)?;
             let scheme_idx = u32_at(bytes, &mut pos)? as usize;
@@ -437,6 +477,7 @@ impl TraceStore {
                     .context("scheme index out of table")?
                     .clone(),
                 replanned,
+                version,
             };
             ev.validate()?;
             events.push(ev);
@@ -457,7 +498,7 @@ impl TraceStore {
     pub fn load(path: &Path) -> Result<Self> {
         let bytes = std::fs::read(path)
             .with_context(|| format!("reading trace {}", path.display()))?;
-        if bytes.starts_with(BINARY_MAGIC) {
+        if bytes.starts_with(BINARY_MAGIC) || bytes.starts_with(BINARY_MAGIC_V1) {
             Self::from_binary(&bytes)
         } else {
             let text = std::str::from_utf8(&bytes)
@@ -527,6 +568,7 @@ impl TraceRecorder {
     /// Panics on a non-finite/negative delay: every load path
     /// validates, so an invalid measurement must fail at the tap — not
     /// after the recording was saved and became permanently unloadable.
+    #[allow(clippy::too_many_arguments)]
     pub fn push_slot(
         &mut self,
         round: usize,
@@ -535,6 +577,7 @@ impl TraceRecorder {
         comp_ms: f64,
         comm_ms: f64,
         replanned: bool,
+        version: u32,
     ) {
         let ev = TraceEvent {
             worker: worker as u32,
@@ -546,6 +589,7 @@ impl TraceRecorder {
             bytes: 0,
             scheme: self.scheme.clone(),
             replanned,
+            version,
         };
         ev.validate().expect("recorded slot event must be loadable");
         self.events.push(ev);
@@ -568,6 +612,7 @@ impl TraceRecorder {
         comm_ms: f64,
         bytes: usize,
         replanned: bool,
+        version: u32,
     ) {
         let ev = TraceEvent {
             worker: worker as u32,
@@ -579,6 +624,7 @@ impl TraceRecorder {
             bytes: bytes as u64,
             scheme: self.scheme.clone(),
             replanned,
+            version,
         };
         ev.validate().expect("recorded flush event must be loadable");
         self.events.push(ev);
@@ -598,9 +644,9 @@ mod tests {
 
     fn sample_store() -> TraceStore {
         let mut rec = TraceRecorder::new("GC(2)");
-        rec.push_flush(0, 0, 0, 2, 3.25, 5.5, 2088, false);
-        rec.push_flush(0, 1, 0, 2, 9.75, 6.25, 2088, false);
-        rec.push_slot(1, 0, 0, 1.625, 5.0, true);
+        rec.push_flush(0, 0, 0, 2, 3.25, 5.5, 2088, false, 0);
+        rec.push_flush(0, 1, 0, 2, 9.75, 6.25, 2088, false, 0);
+        rec.push_slot(1, 0, 0, 1.625, 5.0, true, 1);
         rec.into_store()
     }
 
@@ -680,8 +726,8 @@ mod tests {
         // merge and windowing — downstream fitting then fails loudly
         // instead of modeling a 3-worker fleet
         let mut rec = TraceRecorder::with_fleet("CS", 4);
-        rec.push_slot(0, 0, 0, 0.1, 0.5, false);
-        rec.push_slot(0, 2, 0, 0.1, 0.5, false);
+        rec.push_slot(0, 0, 0, 0.1, 0.5, false, 0);
+        rec.push_slot(0, 2, 0, 0.1, 0.5, false, 0);
         let store = rec.into_store();
         assert_eq!(store.n_workers(), 4);
         assert_eq!(TraceStore::from_jsonl(&store.to_jsonl()).unwrap(), store);
@@ -721,5 +767,63 @@ mod tests {
         let mut ev = sample_store().events()[0].clone();
         ev.tasks = 0;
         assert!(TraceStore::new(vec![ev]).is_err());
+        // a θ-version ahead of its round is a corrupt tag
+        let mut ev = sample_store().events()[0].clone();
+        ev.round = 3;
+        ev.version = 4;
+        assert!(TraceStore::new(vec![ev]).is_err());
+    }
+
+    #[test]
+    fn version_tags_roundtrip_and_default_to_zero() {
+        // an async recording: round 4 computed against θ-version 2
+        let mut rec = TraceRecorder::with_fleet("CS@s3", 2);
+        rec.push_slot(4, 0, 0, 0.1, 0.5, false, 2);
+        rec.push_flush(4, 1, 0, 2, 0.2, 0.5, 1024, false, 2);
+        let store = rec.into_store();
+        for back in [
+            TraceStore::from_jsonl(&store.to_jsonl()).unwrap(),
+            TraceStore::from_binary(&store.to_binary()).unwrap(),
+        ] {
+            assert_eq!(back, store);
+            assert!(back.events().iter().all(|e| e.version == 2));
+        }
+        // a pre-async JSONL line (no `version` key) loads as version 0
+        let legacy = format!(
+            "{}\n{}\n",
+            "{\"format\":\"straggler-trace/v1\",\"events\":1}",
+            "{\"worker\":0,\"round\":7,\"slot\":0,\"tasks\":1,\"compute_s\":0.001,\
+             \"comm_s\":0.002,\"bytes\":0,\"scheme\":\"CS\",\"replanned\":false}"
+        );
+        let back = TraceStore::from_jsonl(&legacy).unwrap();
+        assert_eq!(back.events()[0].version, 0);
+    }
+
+    #[test]
+    fn legacy_v1_binary_traces_still_load() {
+        // hand-build a v1 (pre-version-tag) binary trace: one CS event,
+        // worker 0, round 7 — must load with version = 0
+        let mut bin = Vec::new();
+        bin.extend_from_slice(BINARY_MAGIC_V1);
+        bin.extend_from_slice(&0u32.to_le_bytes()); // fleet undeclared
+        bin.extend_from_slice(&1u32.to_le_bytes()); // one scheme
+        bin.extend_from_slice(&2u32.to_le_bytes());
+        bin.extend_from_slice(b"CS");
+        bin.extend_from_slice(&1u64.to_le_bytes()); // one event
+        bin.extend_from_slice(&0u32.to_le_bytes()); // worker
+        bin.extend_from_slice(&7u32.to_le_bytes()); // round (no version!)
+        bin.extend_from_slice(&0u32.to_le_bytes()); // slot
+        bin.extend_from_slice(&1u32.to_le_bytes()); // tasks
+        bin.extend_from_slice(&0u32.to_le_bytes()); // scheme idx
+        bin.extend_from_slice(&0u64.to_le_bytes()); // bytes
+        bin.push(0); // replanned
+        bin.extend_from_slice(&0.001f64.to_le_bytes());
+        bin.extend_from_slice(&0.002f64.to_le_bytes());
+        let back = TraceStore::from_binary(&bin).unwrap();
+        assert_eq!(back.len(), 1);
+        assert_eq!(back.events()[0].round, 7);
+        assert_eq!(back.events()[0].version, 0);
+        // and re-saving upgrades it to the v2 magic
+        assert!(back.to_binary().starts_with(BINARY_MAGIC));
     }
 }

@@ -2,7 +2,7 @@
 //! and run the whole scheme × policy matrix against it, offline and
 //! bit-reproducibly — the "does the policy win on *this* fleet?" leg.
 //!
-//! Three replay sources:
+//! Four replay sources:
 //!
 //! * [`ReplaySource::Empirical`] — bootstrap-resample the measured
 //!   per-worker delays through [`crate::delay::EmpiricalModel`]
@@ -12,7 +12,12 @@
 //!   support);
 //! * [`ReplaySource::FittedExp`] — the fitted per-worker shifted
 //!   exponentials (heavier tail extrapolation beyond the observed
-//!   maximum).
+//!   maximum);
+//! * [`ReplaySource::Corr`] — the truncated Gaussians wrapped in the
+//!   fitted per-round worker-correlated slowdown
+//!   ([`super::fit::FleetFit::correlated_model`]): same marginals,
+//!   plus the measured round-to-round burstiness the independent
+//!   sources smooth away.
 //!
 //! Every `(scheme, policy)` cell runs through
 //! [`crate::adaptive::run_policy_rounds`] with the same seed, so all
@@ -44,16 +49,20 @@ pub enum ReplaySource {
     FittedTg,
     /// Fitted per-worker shifted exponentials.
     FittedExp,
+    /// Truncated Gaussians under the fitted per-round correlated
+    /// slowdown (σ̂ at the fleet mean).
+    Corr,
 }
 
 impl ReplaySource {
-    /// CLI spelling: `empirical | tg | exp`.
+    /// CLI spelling: `empirical | tg | exp | corr`.
     pub fn parse(name: &str) -> Result<Self> {
         Ok(match name.trim().to_lowercase().as_str() {
             "empirical" => ReplaySource::Empirical,
             "tg" | "trunc-gauss" | "truncated-gaussian" => ReplaySource::FittedTg,
             "exp" | "shifted-exp" => ReplaySource::FittedExp,
-            other => bail!("unknown replay source {other:?} (empirical|tg|exp)"),
+            "corr" | "correlated" => ReplaySource::Corr,
+            other => bail!("unknown replay source {other:?} (empirical|tg|exp|corr)"),
         })
     }
 }
@@ -64,6 +73,7 @@ impl std::fmt::Display for ReplaySource {
             ReplaySource::Empirical => "empirical",
             ReplaySource::FittedTg => "tg",
             ReplaySource::FittedExp => "exp",
+            ReplaySource::Corr => "corr",
         })
     }
 }
@@ -93,6 +103,7 @@ pub fn model_from_trace(store: &TraceStore, source: ReplaySource) -> Result<Box<
         ReplaySource::Empirical => Box::new(empirical_model(store)?),
         ReplaySource::FittedTg => Box::new(fit_traces(store)?.truncated_gaussian_model()),
         ReplaySource::FittedExp => Box::new(fit_traces(store)?.shifted_exp_model()),
+        ReplaySource::Corr => Box::new(fit_traces(store)?.correlated_model()),
     })
 }
 
@@ -314,6 +325,10 @@ pub fn replay(store: &TraceStore, cfg: &ReplayConfig) -> Result<ReplayOutcome> {
                     rounds: cfg.trials,
                     ingest_ms: cfg.ingest_ms,
                     seed: cfg.seed,
+                    // the replay matrix compares schemes on one shared
+                    // synchronous delay stream; async what-ifs run
+                    // through `sim --staleness` instead
+                    staleness: 1,
                 },
                 &round_model,
                 Some(&mut emit),
@@ -353,7 +368,7 @@ mod tests {
             for w in 0..n {
                 let comp = 0.1 + 0.05 * (w as f64) + 0.02 * rng.f64();
                 let comm = 0.5 + 0.1 * rng.f64();
-                rec.push_slot(round, w, 0, comp, comm, false);
+                rec.push_slot(round, w, 0, comp, comm, false, round as u32);
             }
         }
         rec.into_store()
@@ -365,10 +380,16 @@ mod tests {
             ("empirical", ReplaySource::Empirical),
             ("TG", ReplaySource::FittedTg),
             ("shifted-exp", ReplaySource::FittedExp),
+            ("correlated", ReplaySource::Corr),
         ] {
             assert_eq!(ReplaySource::parse(s).unwrap(), want);
         }
-        for src in [ReplaySource::Empirical, ReplaySource::FittedTg, ReplaySource::FittedExp] {
+        for src in [
+            ReplaySource::Empirical,
+            ReplaySource::FittedTg,
+            ReplaySource::FittedExp,
+            ReplaySource::Corr,
+        ] {
             assert_eq!(ReplaySource::parse(&src.to_string()).unwrap(), src);
         }
         assert!(ReplaySource::parse("wat").is_err());
@@ -456,7 +477,11 @@ mod tests {
     #[test]
     fn fitted_sources_replay_too() {
         let store = synthetic_store(3);
-        for source in [ReplaySource::FittedTg, ReplaySource::FittedExp] {
+        for source in [
+            ReplaySource::FittedTg,
+            ReplaySource::FittedExp,
+            ReplaySource::Corr,
+        ] {
             let cfg = ReplayConfig {
                 schemes: vec![SchemeId::Cs, SchemeId::Lb],
                 policies: vec![PolicyKind::Static],

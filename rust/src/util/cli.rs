@@ -86,6 +86,19 @@ impl Args {
         }
     }
 
+    /// Like [`Self::usize_or`] but range-checked: the value must parse
+    /// AND land in `[lo, hi]`.  The error spells the accepted range, so
+    /// axis flags with hard bounds (`--staleness` ∈ [1, 8], like the
+    /// `order@pQQ` percentile grammar) fail with actionable guidance at
+    /// the flag instead of a deep validation error later.
+    pub fn usize_in(&self, key: &str, default: usize, lo: usize, hi: usize) -> Result<usize> {
+        let v = self.usize_or(key, default)?;
+        if !(lo..=hi).contains(&v) {
+            bail!("--{key} expects an integer in [{lo}, {hi}], got {v}");
+        }
+        Ok(v)
+    }
+
     pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
         match self.str_opt(key) {
             None => Ok(default),
@@ -161,6 +174,17 @@ mod tests {
     fn bad_number_is_error() {
         let a = parse(&["x", "--n", "lots"]);
         assert!(a.usize_or("n", 1).is_err());
+    }
+
+    #[test]
+    fn range_checked_getter_guides_the_user() {
+        let a = parse(&["sim", "--staleness", "9"]);
+        let err = a.usize_in("staleness", 1, 1, 8).unwrap_err().to_string();
+        assert!(err.contains("[1, 8]"), "range must be spelled out: {err}");
+        let a = parse(&["sim", "--staleness", "3"]);
+        assert_eq!(a.usize_in("staleness", 1, 1, 8).unwrap(), 3);
+        let a = parse(&["sim"]);
+        assert_eq!(a.usize_in("staleness", 1, 1, 8).unwrap(), 1, "default");
     }
 
     #[test]

@@ -18,6 +18,18 @@ use straggler_sched::scheme::SchemeId;
 /// light ingestion.  All runs share the delay stream (the policies only
 /// consume the scheduling RNG), so comparisons are variance-reduced.
 fn shift_run(scheme: SchemeId, policy: PolicyKind, rounds: usize, seed: u64) -> PolicyOutcome {
+    shift_run_async(scheme, policy, 1, rounds, seed)
+}
+
+/// Same scenario with `S` rounds in flight (bounded staleness; `S = 1`
+/// is the synchronous loop).
+fn shift_run_async(
+    scheme: SchemeId,
+    policy: PolicyKind,
+    staleness: usize,
+    rounds: usize,
+    seed: u64,
+) -> PolicyOutcome {
     let (n, r, k) = (12usize, 4usize, 12usize);
     let base = two_tier_model(n, 6, 3.0);
     let model = ShiftingStraggler::new(&base, 250, 5);
@@ -31,6 +43,7 @@ fn shift_run(scheme: SchemeId, policy: PolicyKind, rounds: usize, seed: u64) -> 
             rounds,
             ingest_ms: 0.05,
             seed,
+            staleness,
         },
         &model,
         None,
@@ -125,6 +138,47 @@ fn shifting_stragglers_adaptive_beats_best_static() {
 }
 
 #[test]
+fn bounded_staleness_beats_best_sync_static_under_shifts() {
+    // the PR's async acceptance bar: with S ≥ 2 rounds in flight, fast
+    // workers start round t + 1 while the shifted slow tier drags round
+    // t to its Stop — per-applied-round wall clock (d_t = apply_t −
+    // apply_{t−1}) drops strictly below the best SYNCHRONOUS static
+    // scheme, even with no re-planning at all.
+    let rounds = 3000;
+    let best_sync_static = [
+        shift_run(SchemeId::Cs, PolicyKind::Static, rounds, 1),
+        shift_run(SchemeId::Gc(4), PolicyKind::Static, rounds, 1),
+        shift_run(SchemeId::GcHet(4, 1), PolicyKind::Static, rounds, 1),
+    ]
+    .iter()
+    .map(|o| o.estimate.mean)
+    .fold(f64::INFINITY, f64::min);
+    let async_static = shift_run_async(SchemeId::Cs, PolicyKind::Static, 2, rounds, 1);
+    assert!(
+        async_static.estimate.mean < best_sync_static,
+        "CS@s2 {} must beat best sync static {best_sync_static}",
+        async_static.estimate.mean
+    );
+    // staleness composes with re-planning: order@s2 must also beat the
+    // synchronous order policy (the pipeline is pure overlap, the
+    // planner sees the same censored measurements S rounds late)
+    let sync_order = shift_run(SchemeId::Gc(4), PolicyKind::AdaptiveOrder, rounds, 1);
+    let async_order = shift_run_async(SchemeId::Gc(4), PolicyKind::AdaptiveOrder, 2, rounds, 1);
+    assert!(
+        async_order.estimate.mean < sync_order.estimate.mean,
+        "order@s2 {} must beat sync order {}",
+        async_order.estimate.mean,
+        sync_order.estimate.mean
+    );
+    // the labels advertise the window
+    assert!(
+        async_static.estimate.scheme.ends_with("@s2"),
+        "async label: {}",
+        async_static.estimate.scheme
+    );
+}
+
+#[test]
 fn stationary_fleet_leaves_little_for_adaptation() {
     // sanity check against over-claiming: on a *homogeneous stationary*
     // fleet, re-ranking cannot find structure — adaptive order must be
@@ -142,6 +196,7 @@ fn stationary_fleet_leaves_little_for_adaptation() {
                 rounds: 2500,
                 ingest_ms: 0.05,
                 seed: 9,
+                staleness: 1,
             },
             &PerRound(&model),
             None,
@@ -191,6 +246,7 @@ fn estimator_recovers_the_true_tiers_from_censored_feedback() {
                 rounds: 400,
                 ingest_ms: 0.05,
                 seed: 5,
+                staleness: 1,
             },
             &PerRound(&base),
             Some(&mut emit),
@@ -223,6 +279,7 @@ fn emit_streams_every_round_in_order() {
             rounds: 300,
             ingest_ms: 0.0,
             seed: 2,
+            staleness: 1,
         },
         &PerRound(&model),
         Some(&mut emit),

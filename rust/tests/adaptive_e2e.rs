@@ -27,6 +27,7 @@ fn config(
         plan: SchemeRegistry::adaptive_plan(scheme, policy, n, r, k)
             .unwrap_or_else(|e| panic!("{scheme}+{policy} plan: {e:#}")),
         policy,
+        staleness: 1,
         dataset: Dataset::synthesize(n, 16, n * 8, 42),
         inject: Some(DelayModelKind::Ec2Like {
             seed: 11,

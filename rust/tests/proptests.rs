@@ -317,6 +317,7 @@ fn prop_protocol_roundtrip_random_messages() {
             },
             2 => Msg::Assign {
                 round: rng.next_u64() as u32,
+                version: rng.next_u64() as u32,
                 theta: (0..rng.below(128)).map(|_| rng.normal() as f32).collect(),
                 tasks: (0..rng.below(16)).map(|_| rng.below(99) as u32).collect(),
                 batches: (0..rng.below(16)).map(|_| rng.below(99) as u32).collect(),
@@ -325,6 +326,7 @@ fn prop_protocol_roundtrip_random_messages() {
             },
             3 => Msg::Result {
                 round: rng.next_u64() as u32,
+                version: rng.next_u64() as u32,
                 worker_id: rng.below(64) as u32,
                 tasks: (1..=1 + rng.below(4)).map(|_| rng.below(64) as u32).collect(),
                 comp_us: rng.next_u64(),

@@ -310,6 +310,9 @@ fn static_policy_bit_identical_to_registry_path_for_every_scheme() {
                     rounds: trials,
                     ingest_ms: ingest,
                     seed,
+                    // S = 1 MUST dispatch to the synchronous loop —
+                    // this whole test is the bit-identity pin
+                    staleness: 1,
                 },
                 &PerRound(&model),
                 None,

@@ -33,22 +33,28 @@ fn random_store(rng: &mut Rng) -> TraceStore {
     let schemes = ["CS", "GC(2)", "GCH(4,1)", "PCMM", "cyclic/g2", "ünïcode✓"];
     let n_events = 1 + rng.below(60);
     let events: Vec<TraceEvent> = (0..n_events)
-        .map(|_| TraceEvent {
-            worker: rng.below(16) as u32,
-            round: rng.below(1000) as u32,
-            slot: rng.below(32) as u32,
-            tasks: 1 + rng.below(8) as u32,
-            // mix exact integers (serialize without a decimal point),
-            // zeros, and arbitrary positive reals
-            compute_s: match rng.below(4) {
-                0 => 0.0,
-                1 => rng.below(10) as f64,
-                _ => rng.f64() * 1e-2,
-            },
-            comm_s: rng.f64() * 1e-2,
-            bytes: rng.below(1 << 20) as u64,
-            scheme: schemes[rng.below(schemes.len())].to_string(),
-            replanned: rng.below(2) == 1,
+        .map(|_| {
+            let round = rng.below(1000) as u32;
+            TraceEvent {
+                worker: rng.below(16) as u32,
+                round,
+                slot: rng.below(32) as u32,
+                tasks: 1 + rng.below(8) as u32,
+                // mix exact integers (serialize without a decimal point),
+                // zeros, and arbitrary positive reals
+                compute_s: match rng.below(4) {
+                    0 => 0.0,
+                    1 => rng.below(10) as f64,
+                    _ => rng.f64() * 1e-2,
+                },
+                comm_s: rng.f64() * 1e-2,
+                bytes: rng.below(1 << 20) as u64,
+                scheme: schemes[rng.below(schemes.len())].to_string(),
+                replanned: rng.below(2) == 1,
+                // θ-version tag (protocol v4): sync (= round) and stale
+                // (< round, gap ≤ 7) tags, never ahead of the round
+                version: round.saturating_sub(rng.below(8) as u32),
+            }
         })
         .collect();
     TraceStore::new(events).expect("valid random events")
@@ -87,7 +93,15 @@ fn fit_recovers_shifted_exp_parameters() {
     let mut rng = Rng::seed_from_u64(41);
     let mut rec = TraceRecorder::new("CS");
     for round in 0..1500 {
-        rec.push_slot(round, 0, 0, truth_comp.sample(&mut rng), truth_comm.sample(&mut rng), false);
+        rec.push_slot(
+            round,
+            0,
+            0,
+            truth_comp.sample(&mut rng),
+            truth_comm.sample(&mut rng),
+            false,
+            round as u32,
+        );
     }
     let fit = fit_traces(&rec.into_store()).unwrap();
     let comp = &fit.workers[0].comp;
@@ -106,7 +120,7 @@ fn fit_recovers_truncated_gaussian_shape() {
     let mut rng = Rng::seed_from_u64(42);
     let mut rec = TraceRecorder::new("CS");
     for round in 0..1500 {
-        rec.push_slot(round, 0, 0, truth.sample(&mut rng), truth.sample(&mut rng), false);
+        rec.push_slot(round, 0, 0, truth.sample(&mut rng), truth.sample(&mut rng), false, round as u32);
     }
     let fit = fit_traces(&rec.into_store()).unwrap();
     let comp = &fit.workers[0].comp;
@@ -282,6 +296,7 @@ fn recording_does_not_perturb_the_run() {
         rounds: 120,
         ingest_ms: 0.05,
         seed: 77,
+        staleness: 1,
     };
     let plain = run_policy_rounds(&cfg, &PerRound(&model), None, None).unwrap();
     let mut rec = TraceRecorder::with_fleet("GC(2)", 6);
@@ -312,6 +327,7 @@ fn recorded_sim_trace_closes_the_loop() {
         rounds: 250,
         ingest_ms: 0.0,
         seed: 3,
+        staleness: 1,
     };
     let mut rec = TraceRecorder::with_fleet("CS", 6);
     run_policy_rounds(&cfg, &PerRound(&model), None, Some(&mut rec)).unwrap();

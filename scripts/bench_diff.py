@@ -31,7 +31,7 @@ import sys
 THRESHOLD = 1.25
 # the perf surfaces EXPERIMENTS.md §Perf tracks; other groups are
 # reported informationally only
-WATCHED = ("aggregate", "decode", "fleet", "batch", "coupled3", "estimator", "scheme")
+WATCHED = ("aggregate", "ring", "decode", "fleet", "batch", "coupled3", "estimator", "scheme")
 
 
 def load(path):
