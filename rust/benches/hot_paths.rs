@@ -10,6 +10,8 @@
 use std::hint::black_box;
 
 use straggler_sched::analysis::{collect_task_times, theorem1_mean};
+use straggler_sched::coordinator::framebuf::{encode_result_into, parse_frame, FrameView};
+use straggler_sched::coordinator::reactor::Reactor;
 use straggler_sched::coded::{DecodeCache, PcScheme, PcmmScheme};
 use straggler_sched::coordinator::{AggregatorRing, Msg, RoundAggregator};
 use straggler_sched::delay::{
@@ -27,6 +29,40 @@ use straggler_sched::sim::{
 };
 use straggler_sched::util::benchkit::{bench, group, write_json_report, BenchResult};
 use straggler_sched::util::rng::Rng;
+
+/// Allocation-counting wrapper around the system allocator: the §Perf
+/// zero-alloc claims ("the warmed ingest path allocates nothing") are
+/// asserted, not eyeballed — count deltas around a manual loop on the
+/// main thread (not inside `bench`, whose sample vector also allocates).
+struct CountingAlloc;
+
+static ALLOC_CALLS: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+
+unsafe impl std::alloc::GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: std::alloc::Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        std::alloc::System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: std::alloc::Layout) {
+        std::alloc::System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: std::alloc::Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        std::alloc::System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn alloc_calls() -> u64 {
+    ALLOC_CALLS.load(std::sync::atomic::Ordering::Relaxed)
+}
 
 fn main() {
     let (n, r) = (16usize, 16usize);
@@ -569,6 +605,191 @@ fn main() {
         all.push(bench("wire/decode_gc4_aggregated_d512", || {
             black_box(Msg::decode(&enc).unwrap());
         }));
+    }
+
+    group("net (reactor data plane: pooled frame codec + poll pump vs thread baseline)");
+    {
+        use std::io::Write as _;
+        use std::net::{TcpListener, TcpStream};
+        use std::sync::mpsc;
+        use std::time::Duration;
+
+        // --- pooled frame codec, d = 512 (the worker flush / master
+        // ingest frame shape).  The pooled path appends into a warmed
+        // buffer; the fresh path is PR-7's encode-per-flush.
+        let d = 512usize;
+        let tasks: Vec<u32> = (8..12).collect();
+        let h64: Vec<f64> = (0..d).map(|i| (i % 13) as f64 / 7.0).collect();
+        let mut frame: Vec<u8> = Vec::new();
+        encode_result_into(&mut frame, 1, 1, 0, &tasks, 1500, 123_456, &h64);
+        let a0 = alloc_calls();
+        for _ in 0..1_000 {
+            frame.clear();
+            encode_result_into(&mut frame, 1, 1, 0, &tasks, 1500, 123_456, &h64);
+        }
+        let encode_allocs = alloc_calls() - a0;
+        assert_eq!(
+            encode_allocs, 0,
+            "warmed pooled encode must be allocation-free, saw {encode_allocs} allocs/1000"
+        );
+        let pooled = bench("net/encode_result_pooled_d512", || {
+            frame.clear();
+            encode_result_into(&mut frame, 1, 1, 0, &tasks, 1500, 123_456, &h64);
+            black_box(frame.len());
+        });
+        let owned_msg = Msg::Result {
+            round: 1,
+            version: 1,
+            worker_id: 0,
+            tasks: tasks.clone(),
+            comp_us: 1500,
+            send_ts_us: 123_456,
+            h: h64.iter().map(|&v| v as f32).collect(),
+        };
+        let fresh = bench("net/encode_result_fresh_d512", || {
+            black_box(owned_msg.encode());
+        });
+        println!(
+            "net codec encode: fresh-alloc {:.0} ns vs pooled {:.0} ns  →  {:.2}×; \
+             pooled path allocs/iter = 0 (asserted)",
+            fresh.mean_ns,
+            pooled.mean_ns,
+            fresh.mean_ns / pooled.mean_ns
+        );
+        all.push(pooled);
+        all.push(fresh);
+
+        // --- zero-copy decode view vs owned decode on the same frame
+        let payload = frame[4..].to_vec();
+        let a0 = alloc_calls();
+        for _ in 0..1_000 {
+            match parse_frame(&payload).unwrap() {
+                FrameView::Result(r) => {
+                    black_box((r.round, r.tasks_len(), r.h_len()));
+                }
+                FrameView::Other(_) => unreachable!("Result frame"),
+            }
+        }
+        let view_allocs = alloc_calls() - a0;
+        assert_eq!(
+            view_allocs, 0,
+            "zero-copy Result view must not allocate, saw {view_allocs} allocs/1000"
+        );
+        let view = bench("net/decode_result_view_d512", || {
+            match parse_frame(black_box(&payload)).unwrap() {
+                FrameView::Result(r) => black_box((r.round, r.h_len())),
+                FrameView::Other(_) => unreachable!("Result frame"),
+            };
+        });
+        let owned = bench("net/decode_result_owned_d512", || {
+            black_box(Msg::decode(black_box(&payload)).unwrap());
+        });
+        println!(
+            "net codec decode: owned {:.0} ns vs view {:.0} ns  →  {:.2}×; \
+             view path allocs/iter = 0 (asserted)",
+            owned.mean_ns,
+            view.mean_ns,
+            owned.mean_ns / view.mean_ns
+        );
+        all.push(view);
+        all.push(owned);
+
+        // --- ingest pump at n = 64 synthetic sockets: 8 pre-queued
+        // ~2 KiB Result frames per conn (512 frames total) drained by
+        // (a) the poll reactor on one thread and (b) PR-7's 64 blocking
+        // reader threads + channel.  Same frames, same loopback sockets.
+        let n_conns = 64usize;
+        let frames_per_conn = 8usize;
+        let total = n_conns * frames_per_conn;
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+        let addr = listener.local_addr().unwrap();
+        let mut masters: Vec<TcpStream> = Vec::new();
+        let mut peers: Vec<TcpStream> = Vec::new();
+        for _ in 0..n_conns {
+            let c = TcpStream::connect(addr).expect("connect");
+            let (s, _) = listener.accept().expect("accept");
+            s.set_nodelay(true).unwrap();
+            c.set_nodelay(true).unwrap();
+            masters.push(s);
+            peers.push(c);
+        }
+        let mut reactor = Reactor::new(masters).expect("reactor");
+        let mut pump_iter = || {
+            for p in peers.iter_mut() {
+                for _ in 0..frames_per_conn {
+                    p.write_all(&frame).unwrap();
+                }
+            }
+            let mut got = 0usize;
+            while got < total {
+                if reactor
+                    .poll_frame(Duration::from_secs(5))
+                    .expect("reactor pump")
+                    .is_some()
+                {
+                    got += 1;
+                }
+            }
+            black_box(got);
+        };
+        pump_iter(); // warm every conn's read buffer to frame depth
+        let a0 = alloc_calls();
+        pump_iter();
+        let pump_allocs = alloc_calls() - a0;
+        assert_eq!(
+            pump_allocs, 0,
+            "warmed reactor ingest (512 frames / 64 conns) must be allocation-free, \
+             saw {pump_allocs} allocs"
+        );
+        let reactor_pump = bench("net/reactor_pump_n64_512frames", &mut pump_iter);
+        all.push(reactor_pump.clone());
+
+        // thread baseline — spawned AFTER the reactor alloc assertions
+        // so its per-frame decode allocations can't pollute the counter
+        let listener2 = TcpListener::bind("127.0.0.1:0").expect("bind");
+        let addr2 = listener2.local_addr().unwrap();
+        let mut peers2: Vec<TcpStream> = Vec::new();
+        let (tx, rx) = mpsc::channel::<Msg>();
+        for _ in 0..n_conns {
+            let c = TcpStream::connect(addr2).expect("connect");
+            let (s, _) = listener2.accept().expect("accept");
+            s.set_nodelay(true).unwrap();
+            c.set_nodelay(true).unwrap();
+            peers2.push(c);
+            let mut s = s;
+            let tx = tx.clone();
+            std::thread::spawn(move || loop {
+                match Msg::read_from(&mut s) {
+                    Ok(m) => {
+                        if tx.send(m).is_err() {
+                            return;
+                        }
+                    }
+                    Err(_) => return,
+                }
+            });
+        }
+        let threads_pump = bench("net/threads_pump_n64_512frames", || {
+            for p in peers2.iter_mut() {
+                for _ in 0..frames_per_conn {
+                    p.write_all(&frame).unwrap();
+                }
+            }
+            let mut got = 0usize;
+            while got < total {
+                rx.recv_timeout(Duration::from_secs(5)).expect("threads pump");
+                got += 1;
+            }
+            black_box(got);
+        });
+        all.push(threads_pump.clone());
+        println!(
+            "net pump n=64 ×512 frames: threads {:.0} µs vs reactor {:.0} µs  →  \
+             {:.2}× (acceptance: reactor ≥ thread baseline, i.e. ratio ≥ 1.0)",
+            threads_pump.mean_ns / 1e3,
+            reactor_pump.mean_ns / 1e3,
+            threads_pump.mean_ns / reactor_pump.mean_ns
+        );
     }
 
     group("policy replan (adaptive subsystem, n = 64) — must stay off the per-task hot path");

@@ -1,0 +1,637 @@
+//! Pooled, zero-copy frame plumbing for the cluster data plane.
+//!
+//! The blocking master reads one frame per `Msg::read_frame` call with
+//! a fresh payload `Vec` each time, and every `Result` decode allocates
+//! its `tasks`/`h` vectors even though the master immediately folds
+//! them into the aggregator and drops them.  At fleet scale that
+//! per-frame churn *is* the master-side ingest term the paper's
+//! completion time is gated on.  This module is the allocation-free
+//! replacement, shared by the poll reactor
+//! ([`crate::coordinator::reactor`]) and the worker's send path:
+//!
+//! * [`FrameBuf`] — a growable scratch buffer a non-blocking socket is
+//!   drained into; complete length-prefixed frames are yielded in place
+//!   as borrows ([`Frame`]), partial frames simply stay buffered until
+//!   the next readiness event.  Each OS read is stamped, so every
+//!   yielded frame knows the wall-clock instant its last byte arrived —
+//!   the numerator of the master *dwell time* metric (arrival →
+//!   processing) reported in `ClusterReport.ingest`.
+//! * [`parse_frame`] / [`ResultRef`] — a zero-copy view of the hot
+//!   `Result` frame: header fields decoded by value, the `tasks`/`h`
+//!   arrays left as byte borrows to be copied straight into caller
+//!   scratch (`read_tasks_into`/`read_h64_into`).  Cold control frames
+//!   fall back to the owned [`Msg`] decode.
+//! * [`FramePool`] + [`encode_result_into`]/[`encode_assign_into`] —
+//!   recycled encode buffers and framed (length-prefixed) encoders for
+//!   the two per-round hot frames, byte-identical to
+//!   `Msg::encode` + prefix (pinned by tests below).
+//!
+//! Protocol v4 wire bytes are unchanged — this is purely a different
+//! way of producing and consuming the same frames.
+
+use std::collections::VecDeque;
+use std::io::{self, Read};
+
+use anyhow::{bail, Result};
+
+use super::protocol::{put_u32, put_u64, Msg, MAX_FRAME};
+
+/// Per-read target: large enough that a GC flush frame (d ≲ 8k floats)
+/// lands in one or two reads, small enough that an idle connection
+/// costs nothing.
+const READ_CHUNK: usize = 64 * 1024;
+
+/// A complete frame borrowed out of a [`FrameBuf`].
+pub struct Frame<'a> {
+    /// the payload (tag + fields), without the length prefix
+    pub payload: &'a [u8],
+    /// total wire size: 4-byte prefix + payload
+    pub wire_len: usize,
+    /// µs timestamp (shared process clock) of the OS read that
+    /// completed this frame — when its last byte actually arrived
+    pub recv_us: u64,
+}
+
+/// Incremental frame assembly buffer for one connection.
+///
+/// `fill_from` appends whatever the socket has ready; `next_frame`
+/// yields complete frames in place.  Compaction (shifting the live
+/// region back to offset 0) happens only when the spare tail runs out,
+/// so steady-state operation is memmove-light and allocation-free once
+/// the buffer has grown to the connection's frame size.
+#[derive(Default)]
+pub struct FrameBuf {
+    buf: Vec<u8>,
+    start: usize,
+    end: usize,
+    /// absolute stream offset of `start` (bytes consumed so far)
+    abs_consumed: u64,
+    /// fill marks `(absolute_end_offset, ts_us)`: the ts of the read
+    /// that brought the stream up to that offset.  Frames map their end
+    /// offset to the first covering mark — exact arrival times even
+    /// when frames sit buffered behind one another.
+    marks: VecDeque<(u64, u64)>,
+}
+
+impl FrameBuf {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bytes currently buffered (complete or partial frames).
+    pub fn pending_bytes(&self) -> usize {
+        self.end - self.start
+    }
+
+    /// Drop all buffered state (pool reuse).
+    pub fn reset(&mut self) {
+        self.start = 0;
+        self.end = 0;
+        self.abs_consumed = 0;
+        self.marks.clear();
+    }
+
+    /// One `read` from `r` into spare capacity, stamped `now_us`.
+    /// Returns `Ok(0)` on EOF; `WouldBlock` propagates as `Err` (the
+    /// reactor's cue that the socket is drained).
+    pub fn fill_from(&mut self, r: &mut impl Read, now_us: u64) -> io::Result<usize> {
+        if self.start == self.end {
+            self.start = 0;
+            self.end = 0;
+        }
+        if self.buf.len() - self.end < READ_CHUNK {
+            if self.start > 0 {
+                self.buf.copy_within(self.start..self.end, 0);
+                self.end -= self.start;
+                self.start = 0;
+            }
+            if self.buf.len() - self.end < READ_CHUNK {
+                self.buf.resize(self.end + READ_CHUNK, 0);
+            }
+        }
+        let n = r.read(&mut self.buf[self.end..])?;
+        if n > 0 {
+            self.end += n;
+            let abs_end = self.abs_consumed + (self.end - self.start) as u64;
+            match self.marks.back_mut() {
+                // coalesce reads from the same instant
+                Some(m) if m.1 == now_us => m.0 = abs_end,
+                _ => self.marks.push_back((abs_end, now_us)),
+            }
+        }
+        Ok(n)
+    }
+
+    /// Is a complete frame buffered?  Non-consuming peek — the
+    /// reactor's fairness scan checks every connection before
+    /// borrowing one frame out.  Errors on a corrupt (oversized)
+    /// length prefix, like [`FrameBuf::next_frame`].
+    pub fn has_frame(&self) -> Result<bool> {
+        let avail = self.end - self.start;
+        if avail < 4 {
+            return Ok(false);
+        }
+        let len = u32::from_le_bytes(self.buf[self.start..self.start + 4].try_into().unwrap());
+        if len > MAX_FRAME {
+            bail!("oversized frame {len}");
+        }
+        Ok(avail >= 4 + len as usize)
+    }
+
+    /// Yield the next complete frame, if one is fully buffered.
+    /// Errors only on a corrupt (oversized) length prefix — the
+    /// connection is unrecoverable past that point.
+    pub fn next_frame(&mut self) -> Result<Option<Frame<'_>>> {
+        let avail = self.end - self.start;
+        if avail < 4 {
+            return Ok(None);
+        }
+        let len = u32::from_le_bytes(self.buf[self.start..self.start + 4].try_into().unwrap());
+        if len > MAX_FRAME {
+            bail!("oversized frame {len}");
+        }
+        let len = len as usize;
+        if avail < 4 + len {
+            return Ok(None);
+        }
+        let frame_end_abs = self.abs_consumed + (4 + len) as u64;
+        while self.marks.front().is_some_and(|m| m.0 < frame_end_abs) {
+            self.marks.pop_front();
+        }
+        let recv_us = self.marks.front().map_or(0, |m| m.1);
+        let s = self.start + 4;
+        self.start += 4 + len;
+        self.abs_consumed += (4 + len) as u64;
+        Ok(Some(Frame {
+            payload: &self.buf[s..s + len],
+            wire_len: 4 + len,
+            recv_us,
+        }))
+    }
+}
+
+/// Zero-copy view of a `Result` frame: header by value, arrays as byte
+/// borrows to be copied straight into caller scratch.
+pub struct ResultRef<'a> {
+    pub round: u32,
+    pub version: u32,
+    pub worker_id: u32,
+    pub comp_us: u64,
+    pub send_ts_us: u64,
+    tasks: &'a [u8],
+    h: &'a [u8],
+}
+
+impl ResultRef<'_> {
+    pub fn tasks_len(&self) -> usize {
+        self.tasks.len() / 4
+    }
+
+    pub fn h_len(&self) -> usize {
+        self.h.len() / 4
+    }
+
+    /// Copy the task ids into `out` (cleared first).
+    pub fn read_tasks_into(&self, out: &mut Vec<usize>) {
+        out.clear();
+        out.extend(
+            self.tasks
+                .chunks_exact(4)
+                .map(|c| u32::from_le_bytes(c.try_into().unwrap()) as usize),
+        );
+    }
+
+    /// Copy the aggregated partial-sum block into `out` as f64
+    /// (cleared first) — the master aggregates in f64.
+    pub fn read_h64_into(&self, out: &mut Vec<f64>) {
+        out.clear();
+        out.extend(
+            self.h
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()) as f64),
+        );
+    }
+}
+
+/// A parsed frame: the hot `Result` path stays zero-copy, everything
+/// else takes the owned [`Msg`] decode (control frames are rare).
+pub enum FrameView<'a> {
+    Result(ResultRef<'a>),
+    Other(Msg),
+}
+
+/// Parse a frame payload.  Field layout and validation (truncation,
+/// lying array lengths, trailing bytes) match [`Msg::decode`] exactly.
+pub fn parse_frame(payload: &[u8]) -> Result<FrameView<'_>> {
+    if payload.first() != Some(&Msg::TAG_RESULT) {
+        return Ok(FrameView::Other(Msg::decode(payload)?));
+    }
+    let mut pos = 1usize;
+    let round = u32_at(payload, &mut pos)?;
+    let version = u32_at(payload, &mut pos)?;
+    let worker_id = u32_at(payload, &mut pos)?;
+    let tasks_len = u32_at(payload, &mut pos)? as usize;
+    let tasks = take(payload, &mut pos, tasks_len.saturating_mul(4))?;
+    let comp_us = u64_at(payload, &mut pos)?;
+    let send_ts_us = u64_at(payload, &mut pos)?;
+    let h_len = u32_at(payload, &mut pos)? as usize;
+    let h = take(payload, &mut pos, h_len.saturating_mul(4))?;
+    if pos != payload.len() {
+        bail!("trailing bytes in frame (tag {})", Msg::TAG_RESULT);
+    }
+    Ok(FrameView::Result(ResultRef {
+        round,
+        version,
+        worker_id,
+        comp_us,
+        send_ts_us,
+        tasks,
+        h,
+    }))
+}
+
+fn take<'a>(payload: &'a [u8], pos: &mut usize, n: usize) -> Result<&'a [u8]> {
+    if payload.len() - *pos < n {
+        bail!("frame truncated at byte {}", *pos);
+    }
+    let s = &payload[*pos..*pos + n];
+    *pos += n;
+    Ok(s)
+}
+
+fn u32_at(payload: &[u8], pos: &mut usize) -> Result<u32> {
+    Ok(u32::from_le_bytes(take(payload, pos, 4)?.try_into().unwrap()))
+}
+
+fn u64_at(payload: &[u8], pos: &mut usize) -> Result<u64> {
+    Ok(u64::from_le_bytes(take(payload, pos, 8)?.try_into().unwrap()))
+}
+
+/// Recycled encode buffers: `get` a cleared `Vec<u8>`, `put` it back
+/// after the bytes hit the socket.  Bounded so a burst can't pin
+/// memory forever.
+#[derive(Default)]
+pub struct FramePool {
+    free: Vec<Vec<u8>>,
+}
+
+impl FramePool {
+    const MAX_POOLED: usize = 64;
+
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn get(&mut self) -> Vec<u8> {
+        match self.free.pop() {
+            Some(mut b) => {
+                b.clear();
+                b
+            }
+            None => Vec::new(),
+        }
+    }
+
+    pub fn put(&mut self, buf: Vec<u8>) {
+        if self.free.len() < Self::MAX_POOLED {
+            self.free.push(buf);
+        }
+    }
+
+    pub fn pooled(&self) -> usize {
+        self.free.len()
+    }
+}
+
+/// Append a framed (length-prefixed) `Result` to `out`, converting the
+/// f64 running sum to the wire's f32 in place — byte-identical to
+/// `Msg::Result{..}.encode()` behind a prefix, with zero intermediate
+/// allocation.
+pub fn encode_result_into(
+    out: &mut Vec<u8>,
+    round: u32,
+    version: u32,
+    worker_id: u32,
+    tasks: &[u32],
+    comp_us: u64,
+    send_ts_us: u64,
+    h_sum: &[f64],
+) {
+    let payload_len = 1 + 3 * 4 + (4 + 4 * tasks.len()) + 2 * 8 + (4 + 4 * h_sum.len());
+    out.reserve(4 + payload_len);
+    put_u32(out, payload_len as u32);
+    out.push(Msg::TAG_RESULT);
+    put_u32(out, round);
+    put_u32(out, version);
+    put_u32(out, worker_id);
+    put_u32(out, tasks.len() as u32);
+    for &t in tasks {
+        put_u32(out, t);
+    }
+    put_u64(out, comp_us);
+    put_u64(out, send_ts_us);
+    put_u32(out, h_sum.len() as u32);
+    for &v in h_sum {
+        out.extend_from_slice(&(v as f32).to_le_bytes());
+    }
+}
+
+/// Append a framed `Assign` to `out`.  Cluster mode always uses the
+/// identity task↔batch map (no Remark-3 reshuffle), so the task list is
+/// written twice — once as `tasks`, once as `batches` — exactly as the
+/// master's `Msg::Assign { batches: tasks.clone(), .. }` did.
+pub fn encode_assign_into(
+    out: &mut Vec<u8>,
+    round: u32,
+    version: u32,
+    theta: &[f32],
+    tasks: &[u32],
+    group: u32,
+    align: bool,
+) {
+    let payload_len = 1 + 2 * 4 + (4 + 4 * theta.len()) + 2 * (4 + 4 * tasks.len()) + 4 + 1;
+    out.reserve(4 + payload_len);
+    put_u32(out, payload_len as u32);
+    out.push(Msg::TAG_ASSIGN);
+    put_u32(out, round);
+    put_u32(out, version);
+    put_u32(out, theta.len() as u32);
+    for &v in theta {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    for _ in 0..2 {
+        put_u32(out, tasks.len() as u32);
+        for &t in tasks {
+            put_u32(out, t);
+        }
+    }
+    put_u32(out, group);
+    // align stays the FINAL Assign field (see protocol.rs)
+    out.push(u8::from(align));
+}
+
+/// Append any message framed (prefix + payload) to `out` — the cold
+/// path for control frames (Stop/Shutdown/Welcome), sharing the pooled
+/// buffer discipline of the hot encoders.
+pub fn encode_msg_framed(out: &mut Vec<u8>, msg: &Msg) {
+    let at = out.len();
+    out.extend_from_slice(&[0u8; 4]); // prefix backpatched below
+    msg.encode_into(out);
+    let payload_len = (out.len() - at - 4) as u32;
+    out[at..at + 4].copy_from_slice(&payload_len.to_le_bytes());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn framed(msg: &Msg) -> Vec<u8> {
+        let payload = msg.encode();
+        let mut wire = (payload.len() as u32).to_le_bytes().to_vec();
+        wire.extend_from_slice(&payload);
+        wire
+    }
+
+    fn sample_result() -> Msg {
+        Msg::Result {
+            round: 13,
+            version: 11,
+            worker_id: 2,
+            tasks: vec![3, 4, 9],
+            comp_us: 1234,
+            send_ts_us: 999_999,
+            h: vec![1.0, -2.5, f32::MAX],
+        }
+    }
+
+    #[test]
+    fn encode_result_into_is_byte_identical_to_msg_encode() {
+        let mut out = Vec::new();
+        encode_result_into(
+            &mut out,
+            13,
+            11,
+            2,
+            &[3, 4, 9],
+            1234,
+            999_999,
+            // f64 inputs that round-trip exactly through f32
+            &[1.0, -2.5, f32::MAX as f64],
+        );
+        assert_eq!(out, framed(&sample_result()));
+    }
+
+    #[test]
+    fn encode_assign_into_is_byte_identical_to_msg_encode() {
+        for align in [false, true] {
+            let tasks = vec![7u32, 0, 3, 4];
+            let theta = vec![0.5f32, -1.5, 3.25];
+            let msg = Msg::Assign {
+                round: 12,
+                version: 10,
+                theta: theta.clone(),
+                tasks: tasks.clone(),
+                batches: tasks.clone(),
+                group: 2,
+                align,
+            };
+            let mut out = Vec::new();
+            encode_assign_into(&mut out, 12, 10, &theta, &tasks, 2, align);
+            assert_eq!(out, framed(&msg), "align = {align}");
+        }
+    }
+
+    #[test]
+    fn encode_msg_framed_matches_write_to() {
+        for msg in [
+            Msg::Stop { round: 7 },
+            Msg::Shutdown,
+            Msg::Welcome {
+                proto: 4,
+                worker_id: 3,
+                profile: "fig5".into(),
+            },
+        ] {
+            let mut out = Vec::new();
+            encode_msg_framed(&mut out, &msg);
+            assert_eq!(out, framed(&msg));
+        }
+    }
+
+    #[test]
+    fn parse_frame_result_view_matches_owned_decode() {
+        let payload = sample_result().encode();
+        match parse_frame(&payload).unwrap() {
+            FrameView::Result(r) => {
+                assert_eq!((r.round, r.version, r.worker_id), (13, 11, 2));
+                assert_eq!((r.comp_us, r.send_ts_us), (1234, 999_999));
+                assert_eq!((r.tasks_len(), r.h_len()), (3, 3));
+                let mut tasks = vec![99usize]; // read_*_into must clear
+                r.read_tasks_into(&mut tasks);
+                assert_eq!(tasks, vec![3, 4, 9]);
+                let mut h = vec![0.0f64];
+                r.read_h64_into(&mut h);
+                assert_eq!(h, vec![1.0, -2.5, f32::MAX as f64]);
+            }
+            FrameView::Other(_) => panic!("Result frame must take the zero-copy path"),
+        }
+    }
+
+    #[test]
+    fn parse_frame_other_falls_back_to_msg_decode() {
+        let payload = Msg::Stop { round: 3 }.encode();
+        match parse_frame(&payload).unwrap() {
+            FrameView::Other(Msg::Stop { round }) => assert_eq!(round, 3),
+            _ => panic!("Stop must fall back to the owned decode"),
+        }
+    }
+
+    #[test]
+    fn parse_frame_rejects_everything_msg_decode_rejects() {
+        let enc = sample_result().encode();
+        for cut in 1..enc.len() {
+            assert!(parse_frame(&enc[..cut]).is_err(), "cut at {cut}");
+        }
+        let mut trailing = enc.clone();
+        trailing.push(0);
+        assert!(parse_frame(&trailing).is_err());
+        // lying tasks length: claims more u32s than the frame holds
+        let mut lying = vec![Msg::TAG_RESULT];
+        lying.extend_from_slice(&1u32.to_le_bytes()); // round
+        lying.extend_from_slice(&1u32.to_le_bytes()); // version
+        lying.extend_from_slice(&0u32.to_le_bytes()); // worker_id
+        lying.extend_from_slice(&1_000_000u32.to_le_bytes()); // tasks len lie
+        assert!(parse_frame(&lying).is_err());
+        assert!(parse_frame(&[99]).is_err()); // unknown tag → Msg::decode error
+    }
+
+    /// `Read` that doles the wire out `chunk` bytes at a time — frame
+    /// boundaries land everywhere, including inside the length prefix.
+    struct Chunked<'a> {
+        data: &'a [u8],
+        pos: usize,
+        chunk: usize,
+    }
+
+    impl Read for Chunked<'_> {
+        fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+            let n = self.chunk.min(self.data.len() - self.pos).min(buf.len());
+            buf[..n].copy_from_slice(&self.data[self.pos..self.pos + n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+
+    #[test]
+    fn framebuf_reassembles_frames_across_any_split() {
+        let msgs = vec![
+            sample_result(),
+            Msg::Stop { round: 13 },
+            Msg::Result {
+                round: 14,
+                version: 12,
+                worker_id: 0,
+                tasks: vec![1],
+                comp_us: 5,
+                send_ts_us: 6,
+                h: vec![0.25; 32],
+            },
+            Msg::Shutdown,
+        ];
+        let mut wire = Vec::new();
+        for m in &msgs {
+            encode_msg_framed(&mut wire, m);
+        }
+        for chunk in [1usize, 2, 3, 5, 7, 11, 64, wire.len()] {
+            let mut r = Chunked {
+                data: &wire,
+                pos: 0,
+                chunk,
+            };
+            let mut fb = FrameBuf::new();
+            let mut got = Vec::new();
+            let mut wire_total = 0usize;
+            loop {
+                while let Some(f) = fb.next_frame().unwrap() {
+                    wire_total += f.wire_len;
+                    got.push(Msg::decode(f.payload).unwrap());
+                }
+                if fb.fill_from(&mut r, 0).unwrap() == 0 {
+                    break;
+                }
+            }
+            assert_eq!(got, msgs, "chunk = {chunk}");
+            assert_eq!(wire_total, wire.len(), "chunk = {chunk}");
+            assert_eq!(fb.pending_bytes(), 0, "chunk = {chunk}");
+        }
+    }
+
+    #[test]
+    fn framebuf_rejects_oversized_prefix() {
+        let mut fb = FrameBuf::new();
+        let bogus = (MAX_FRAME + 1).to_le_bytes();
+        let mut r = Chunked {
+            data: &bogus,
+            pos: 0,
+            chunk: 4,
+        };
+        fb.fill_from(&mut r, 0).unwrap();
+        assert!(fb.next_frame().is_err());
+    }
+
+    #[test]
+    fn fill_marks_give_exact_per_frame_arrival_times() {
+        // frame A arrives whole in the first read (ts 100); frame B is
+        // split across reads and completes in the second (ts 200); a
+        // third read (ts 300) brings frame C.  Buffered frames must
+        // report the read that *completed* them, not the consume time.
+        let a = {
+            let mut v = Vec::new();
+            encode_msg_framed(&mut v, &Msg::Stop { round: 1 });
+            v
+        };
+        let b = {
+            let mut v = Vec::new();
+            encode_msg_framed(&mut v, &Msg::Stop { round: 2 });
+            v
+        };
+        let c = {
+            let mut v = Vec::new();
+            encode_msg_framed(&mut v, &Msg::Shutdown);
+            v
+        };
+        let mut fb = FrameBuf::new();
+        let fill = |fb: &mut FrameBuf, bytes: &[u8], ts: u64| {
+            let mut r = Chunked {
+                data: bytes,
+                pos: 0,
+                chunk: bytes.len().max(1),
+            };
+            fb.fill_from(&mut r, ts).unwrap();
+        };
+        let split = b.len() / 2;
+        fill(&mut fb, &a, 100);
+        fill(&mut fb, &b[..split], 100);
+        fill(&mut fb, &b[split..], 200);
+        fill(&mut fb, &c, 300);
+        let ts_a = fb.next_frame().unwrap().unwrap().recv_us;
+        let ts_b = fb.next_frame().unwrap().unwrap().recv_us;
+        let ts_c = fb.next_frame().unwrap().unwrap().recv_us;
+        assert_eq!((ts_a, ts_b, ts_c), (100, 200, 300));
+        assert!(fb.next_frame().unwrap().is_none());
+    }
+
+    #[test]
+    fn frame_pool_recycles_buffers() {
+        let mut pool = FramePool::new();
+        let mut b = pool.get();
+        b.extend_from_slice(&[1, 2, 3]);
+        let cap = b.capacity();
+        pool.put(b);
+        assert_eq!(pool.pooled(), 1);
+        let b2 = pool.get();
+        assert!(b2.is_empty(), "pooled buffers come back cleared");
+        assert_eq!(b2.capacity(), cap, "capacity survives the round trip");
+        assert_eq!(pool.pooled(), 0);
+    }
+}

@@ -29,10 +29,12 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc;
 use std::time::Duration;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use super::aggregate::{AggregatorRing, Offer, RingOffer, RoundAggregator};
+use super::framebuf::{encode_assign_into, encode_msg_framed, parse_frame, FramePool, FrameView};
 use super::protocol::Msg;
+use super::reactor::Reactor;
 use super::{now_us, TaskDelaySampler};
 use crate::adaptive::{GroupAllocation, PolicyEngine, PolicyKind, WorkerEstimate, MAX_STALENESS};
 use crate::coded::{DecodeCache, DecodeCacheStats, PcScheme, PcmmScheme};
@@ -45,6 +47,45 @@ use crate::scheduler::Scheduler as _;
 use crate::scheme::{ClusterPlan, CompletionRule, WirePlan};
 use crate::trace::{TraceRecorder, TraceStore};
 use crate::util::rng::Rng;
+use crate::util::stats::{RunningStats, StreamingQuantiles};
+
+/// How the master talks to its worker sockets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum IoMode {
+    /// Thread-per-worker blocking readers feeding an mpsc channel — the
+    /// pre-reactor data plane, kept as the bit-identity cross-check
+    /// (`tests/reactor_parity.rs`).
+    Threads,
+    /// One poll-driven event loop over non-blocking sockets with pooled
+    /// frame buffers and a zero-copy `Result` parse
+    /// ([`super::reactor`], [`super::framebuf`]).
+    #[default]
+    Reactor,
+}
+
+impl IoMode {
+    /// Parse the CLI spelling (`train --io threads|reactor`).
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "threads" => Ok(IoMode::Threads),
+            "reactor" => Ok(IoMode::Reactor),
+            other => bail!("unknown io mode {other:?} (expected threads|reactor)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            IoMode::Threads => "threads",
+            IoMode::Reactor => "reactor",
+        }
+    }
+}
+
+impl std::fmt::Display for IoMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
 
 /// Cluster configuration.
 pub struct ClusterConfig {
@@ -89,6 +130,9 @@ pub struct ClusterConfig {
     /// spawn the n workers in-process (false = wait for external
     /// `straggler worker --connect` processes — real multi-process mode)
     pub spawn_workers: bool,
+    /// master-side socket I/O: the poll reactor (default) or the
+    /// thread-per-worker blocking path (bit-identity cross-check)
+    pub io: IoMode,
 }
 
 /// Per-round record.
@@ -117,6 +161,63 @@ pub struct RoundLog {
     pub loss: Option<f64>,
 }
 
+/// Master-side ingest health for the run: per-frame *dwell time* — µs
+/// from a `Result` frame being ready at the master (last byte read off
+/// the socket, or handed to the channel in `IoMode::Threads`) to the
+/// round loop actually processing it.  Dwell is the master-side queueing
+/// term the cross-round ingest-contention approximation in
+/// EXPERIMENTS.md §Async could previously only estimate: a p99 that
+/// grows with n means the master itself is the straggler.
+#[derive(Debug, Clone, Default)]
+pub struct IngestReport {
+    /// frames measured (every frame the data plane handed the loop,
+    /// including non-Result and later-dropped ones)
+    pub frames: usize,
+    pub dwell_p50_us: f64,
+    pub dwell_p90_us: f64,
+    pub dwell_p99_us: f64,
+    pub dwell_mean_us: f64,
+    pub dwell_max_us: f64,
+}
+
+/// Streaming dwell accumulator behind [`IngestReport`]: exact order
+/// statistics up to `StreamingQuantiles::EXACT_CAP` frames, O(1) grid
+/// past it — safe to leave on for million-frame runs.
+struct IngestStats {
+    q: StreamingQuantiles,
+    s: RunningStats,
+}
+
+impl IngestStats {
+    fn new() -> Self {
+        Self {
+            q: StreamingQuantiles::new(),
+            s: RunningStats::new(),
+        }
+    }
+
+    fn push(&mut self, dwell_us: u64) {
+        let v = dwell_us as f64;
+        self.q.push(v);
+        self.s.push(v);
+    }
+
+    fn report(&self) -> IngestReport {
+        if self.s.count() == 0 {
+            return IngestReport::default();
+        }
+        let qs = self.q.quantiles(&[0.5, 0.9, 0.99]);
+        IngestReport {
+            frames: self.s.count() as usize,
+            dwell_p50_us: qs[0],
+            dwell_p90_us: qs[1],
+            dwell_p99_us: qs[2],
+            dwell_mean_us: self.s.mean(),
+            dwell_max_us: self.s.max(),
+        }
+    }
+}
+
 /// Whole-run report.
 pub struct ClusterReport {
     pub rounds: Vec<RoundLog>,
@@ -138,6 +239,8 @@ pub struct ClusterReport {
     /// wires) — stragglers recur, so the hit rate is the fraction of
     /// rounds that decoded without any Lagrange solve work
     pub decode_cache: Option<DecodeCacheStats>,
+    /// per-frame master dwell-time percentiles (ready → processed)
+    pub ingest: IngestReport,
 }
 
 impl ClusterReport {
@@ -156,6 +259,211 @@ impl ClusterReport {
 enum Coded {
     Pc(PcScheme),
     Pcmm(PcmmScheme),
+}
+
+/// Reused per-frame decode scratch: a `Result`'s task range and
+/// aggregated block land here instead of fresh vectors — the
+/// allocation-free half of the zero-copy ingest path.
+#[derive(Default)]
+struct ResultScratch {
+    tasks: Vec<usize>,
+    h64: Vec<f64>,
+}
+
+/// Header of one received `Result` frame (arrays live in the scratch).
+struct ResultMeta {
+    round: u32,
+    version: u32,
+    worker_id: u32,
+    comp_us: u64,
+    send_ts_us: u64,
+    /// wire size (length prefix + payload)
+    frame_len: usize,
+    /// µs the frame became ready at the master — arrival of its last
+    /// byte (reactor) or the channel hand-off (threads)
+    recv_us: u64,
+}
+
+/// The master's socket I/O behind one interface, so both round loops
+/// are word-for-word identical across [`IoMode`]s — which is what makes
+/// the reactor bit-identity cross-check meaningful.
+enum DataPlane {
+    Threads {
+        streams: Vec<TcpStream>,
+        rx: mpsc::Receiver<(Msg, usize, u64)>,
+        pool: FramePool,
+    },
+    Reactor(Reactor),
+}
+
+impl DataPlane {
+    /// Wrap the handshaken streams.  `Threads` spawns the per-worker
+    /// blocking readers here (workers stay silent until their first
+    /// `Assign`, so post-LoadData spawn loses nothing); `Reactor`
+    /// flips the sockets non-blocking.
+    fn new(io: IoMode, streams: Vec<TcpStream>) -> Result<Self> {
+        match io {
+            IoMode::Threads => {
+                let (tx, rx) = mpsc::channel::<(Msg, usize, u64)>();
+                for (id, stream) in streams.iter().enumerate() {
+                    let mut rd = stream.try_clone()?;
+                    let tx = tx.clone();
+                    std::thread::Builder::new()
+                        .name(format!("master-recv{id}"))
+                        .spawn(move || loop {
+                            match Msg::read_frame(&mut rd) {
+                                Ok((msg, len)) => {
+                                    // stamp the hand-off: dwell = how
+                                    // long the frame waits in the
+                                    // channel before the loop takes it
+                                    if tx.send((msg, len, now_us())).is_err() {
+                                        return;
+                                    }
+                                }
+                                Err(_) => return,
+                            }
+                        })?;
+                }
+                Ok(DataPlane::Threads {
+                    streams,
+                    rx,
+                    pool: FramePool::new(),
+                })
+            }
+            IoMode::Reactor => Ok(DataPlane::Reactor(Reactor::new(streams)?)),
+        }
+    }
+
+    /// A cleared, pooled buffer to encode the next outbound frame into.
+    fn take_buf(&mut self) -> Vec<u8> {
+        match self {
+            DataPlane::Threads { pool, .. } => pool.get(),
+            DataPlane::Reactor(r) => r.take_send_buf(),
+        }
+    }
+
+    /// Send one framed message to one worker.
+    fn send_frame(&mut self, id: usize, frame: Vec<u8>) -> Result<()> {
+        match self {
+            DataPlane::Threads { streams, pool, .. } => {
+                let mut w = &streams[id];
+                w.write_all(&frame)?;
+                w.flush()?;
+                pool.put(frame);
+                Ok(())
+            }
+            DataPlane::Reactor(r) => {
+                r.send_frame(id, frame);
+                Ok(())
+            }
+        }
+    }
+
+    /// Send one framed message to every worker (Assign/Stop fan-out);
+    /// the reactor shares a single buffer across all write queues.
+    fn broadcast_frame(&mut self, frame: Vec<u8>) -> Result<()> {
+        match self {
+            DataPlane::Threads { streams, pool, .. } => {
+                for stream in streams.iter() {
+                    let mut w = stream;
+                    w.write_all(&frame)?;
+                    w.flush()?;
+                }
+                pool.put(frame);
+                Ok(())
+            }
+            DataPlane::Reactor(r) => {
+                r.broadcast_frame(frame);
+                Ok(())
+            }
+        }
+    }
+
+    /// Next `Result` frame into `scratch`: `Ok(Some)` on a Result,
+    /// `Ok(None)` on any other frame (the caller's loop just
+    /// continues), `Err` on timeout (with `timeout_ctx`) or a dead
+    /// fleet.  Every frame's dwell time is pushed into `ingest`.
+    fn recv_result(
+        &mut self,
+        timeout: Duration,
+        timeout_ctx: &'static str,
+        scratch: &mut ResultScratch,
+        ingest: &mut IngestStats,
+    ) -> Result<Option<ResultMeta>> {
+        match self {
+            DataPlane::Threads { rx, .. } => {
+                let (msg, frame_len, ready_us) = rx.recv_timeout(timeout).context(timeout_ctx)?;
+                ingest.push(now_us().saturating_sub(ready_us));
+                let Msg::Result {
+                    round,
+                    version,
+                    worker_id,
+                    tasks,
+                    comp_us,
+                    send_ts_us,
+                    h,
+                } = msg
+                else {
+                    return Ok(None);
+                };
+                scratch.tasks.clear();
+                scratch.tasks.extend(tasks.iter().map(|&t| t as usize));
+                scratch.h64.clear();
+                scratch.h64.extend(h.iter().map(|&v| v as f64));
+                Ok(Some(ResultMeta {
+                    round,
+                    version,
+                    worker_id,
+                    comp_us,
+                    send_ts_us,
+                    frame_len,
+                    recv_us: now_us(),
+                }))
+            }
+            DataPlane::Reactor(r) => {
+                let Some((_, frame)) = r.poll_frame(timeout)? else {
+                    bail!("{timeout_ctx}");
+                };
+                ingest.push(now_us().saturating_sub(frame.recv_us));
+                match parse_frame(frame.payload)? {
+                    FrameView::Result(res) => {
+                        res.read_tasks_into(&mut scratch.tasks);
+                        res.read_h64_into(&mut scratch.h64);
+                        Ok(Some(ResultMeta {
+                            round: res.round,
+                            version: res.version,
+                            worker_id: res.worker_id,
+                            comp_us: res.comp_us,
+                            send_ts_us: res.send_ts_us,
+                            frame_len: frame.wire_len,
+                            recv_us: frame.recv_us,
+                        }))
+                    }
+                    FrameView::Other(_) => Ok(None),
+                }
+            }
+        }
+    }
+
+    /// Best-effort teardown: Shutdown to every worker, flush, close.
+    fn shutdown(&mut self) {
+        let mut frame = self.take_buf();
+        encode_msg_framed(&mut frame, &Msg::Shutdown);
+        match self {
+            DataPlane::Threads { streams, .. } => {
+                for stream in streams.iter() {
+                    let mut w = stream;
+                    let _ = w.write_all(&frame);
+                    let _ = w.flush();
+                    let _ = stream.shutdown(std::net::Shutdown::Both);
+                }
+            }
+            DataPlane::Reactor(r) => {
+                r.broadcast_frame(frame);
+                r.shutdown(Duration::from_secs(2));
+            }
+        }
+    }
 }
 
 /// Run a full cluster experiment: spawns `n` in-process workers over
@@ -179,6 +487,7 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
         loss_every,
         listen,
         spawn_workers,
+        io,
     } = cfg;
     let ClusterPlan {
         scheduler,
@@ -326,8 +635,9 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
     }
 
     // ---- accept + handshake ------------------------------------------------
+    // sockets stay blocking through handshake + data distribution; the
+    // chosen data plane (reactor or reader threads) takes over after
     let mut streams: Vec<TcpStream> = Vec::with_capacity(n);
-    let (res_tx, res_rx) = mpsc::channel::<(Msg, usize)>();
     for id in 0..n {
         let (stream, _) = listener.accept().context("accepting worker")?;
         stream.set_nodelay(true)?;
@@ -337,22 +647,6 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
             profile: profile.clone(),
         }
         .write_to(&mut &stream)?;
-        // receiver thread: forward Results (plus frame size) to the
-        // master channel
-        let mut rd = stream.try_clone()?;
-        let tx = res_tx.clone();
-        std::thread::Builder::new()
-            .name(format!("master-recv{id}"))
-            .spawn(move || loop {
-                match Msg::read_frame(&mut rd) {
-                    Ok(framed) => {
-                        if tx.send(framed).is_err() {
-                            return;
-                        }
-                    }
-                    Err(_) => return,
-                }
-            })?;
         streams.push(stream);
     }
 
@@ -409,6 +703,9 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
         .write_to(&mut &*stream)?;
     }
 
+    // data distributed — hand the sockets to the configured data plane
+    let mut plane = DataPlane::new(io, streams)?;
+
     // ---- round loop ----------------------------------------------------------
     let mut master = UncodedMaster::new(&dataset, eta, k);
     // coded decode target: Xᵀy = Σ_i X_i y_i, precomputed once (eq. 49)
@@ -451,6 +748,12 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
         None
     };
     let mut decode_cache = coded.as_ref().map(|_| DecodeCache::with_default_cap());
+    // reused per-frame/per-fanout scratch (both loops): the steady-state
+    // ingest and Assign paths allocate nothing once these are warm
+    let mut scratch = ResultScratch::default();
+    let mut ingest = IngestStats::new();
+    let mut theta32: Vec<f32> = Vec::new();
+    let mut tasks_u32: Vec<u32> = Vec::new();
 
     // ---- bounded-staleness pump (S ≥ 2) ------------------------------------
     // Up to S rounds in flight: round t's Assign goes out the moment
@@ -504,20 +807,23 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
                         None => scheduler.schedule(n, r, &mut rng_sched),
                     },
                 };
-                let theta32: Vec<f32> = master.theta.iter().map(|&v| v as f32).collect();
+                theta32.clear();
+                theta32.extend(master.theta.iter().map(|&v| v as f32));
                 let version = ring.base_round() as u32;
-                for (id, stream) in streams.iter().enumerate() {
-                    let tasks: Vec<u32> = to.row(id).iter().map(|&t| t as u32).collect();
-                    Msg::Assign {
-                        round: round as u32,
+                for id in 0..n {
+                    tasks_u32.clear();
+                    tasks_u32.extend(to.row(id).iter().map(|&t| t as u32));
+                    let mut buf = plane.take_buf();
+                    encode_assign_into(
+                        &mut buf,
+                        round as u32,
                         version,
-                        theta: theta32.clone(),
-                        tasks: tasks.clone(),
-                        batches: tasks,
-                        group: sizes[id] as u32,
-                        align: align && sizes[id] > 1,
-                    }
-                    .write_to(&mut &*stream)?;
+                        &theta32,
+                        &tasks_u32,
+                        sizes[id] as u32,
+                        align && sizes[id] > 1,
+                    );
+                    plane.send_frame(id, buf)?;
                 }
                 meta[round % staleness] = Some(InFlight {
                     t0_us: now_us(),
@@ -529,36 +835,32 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
                 issued += 1;
             }
 
-            // one frame off the shared result channel
-            let (msg, frame_len) = res_rx
-                .recv_timeout(Duration::from_secs(60))
-                .context("master timed out waiting for results (pipelined pump)")?;
-            let Msg::Result {
-                round: rr,
-                version,
-                worker_id,
-                tasks,
-                comp_us,
-                send_ts_us,
-                h,
-            } = msg
+            // one frame off the data plane
+            let Some(fr) = plane.recv_result(
+                Duration::from_secs(60),
+                "master timed out waiting for results (pipelined pump)",
+                &mut scratch,
+                &mut ingest,
+            )?
             else {
                 continue;
             };
-            let rr = rr as usize;
-            if h.len() != d || tasks.is_empty() || worker_id as usize >= n || rr >= rounds {
+            let worker_id = fr.worker_id;
+            let rr = fr.round as usize;
+            if scratch.h64.len() != d
+                || scratch.tasks.is_empty()
+                || worker_id as usize >= n
+                || rr >= rounds
+            {
                 eprintln!(
                     "master: dropping malformed result from worker {worker_id} \
                      ({} tasks, {} h values, d = {d}, round {rr})",
-                    tasks.len(),
-                    h.len()
+                    scratch.tasks.len(),
+                    scratch.h64.len()
                 );
                 continue;
             }
-            let recv_us = now_us();
-            let h64: Vec<f64> = h.iter().map(|&v| v as f64).collect();
-            let task_ids: Vec<usize> = tasks.iter().map(|&t| t as usize).collect();
-            let in_window = match ring.offer(rr, &task_ids, &h64) {
+            let in_window = match ring.offer(rr, &scratch.tasks, &scratch.h64) {
                 RingOffer::Future => {
                     eprintln!(
                         "master: dropping result for unissued round {rr} from \
@@ -568,8 +870,9 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
                 }
                 RingOffer::InFlight(Offer::Malformed) => {
                     eprintln!(
-                        "master: dropping out-of-plan range {task_ids:?} from \
-                         worker {worker_id}"
+                        "master: dropping out-of-plan range {:?} from \
+                         worker {worker_id}",
+                        scratch.tasks
                     );
                     continue;
                 }
@@ -580,8 +883,8 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
                 // and the estimator below
                 RingOffer::Stale => false,
             };
-            let comp_ms = comp_us as f64 / 1e3;
-            let comm_ms = (recv_us.saturating_sub(send_ts_us)) as f64 / 1e3;
+            let comp_ms = fr.comp_us as f64 / 1e3;
+            let comm_ms = (fr.recv_us.saturating_sub(fr.send_ts_us)) as f64 / 1e3;
             recorders[worker_id as usize].record_comp(comp_ms);
             recorders[worker_id as usize].record_comm(comm_ms);
             let slot = flush_idx.entry((rr, worker_id as usize)).or_insert(0);
@@ -591,33 +894,35 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
                 rr,
                 worker_id as usize,
                 msg_idx,
-                task_ids.len(),
+                scratch.tasks.len(),
                 comp_ms,
                 comm_ms,
-                frame_len,
+                fr.frame_len,
                 replanned_by_round[rr],
-                version, // the worker's echo of its Assign's θ-version
+                fr.version, // the worker's echo of its Assign's θ-version
             );
             if let Some(e) = engine.as_mut() {
-                e.observe_flush(worker_id as usize, task_ids.len(), comp_ms, comm_ms);
+                e.observe_flush(worker_id as usize, scratch.tasks.len(), comp_ms, comm_ms);
             }
             if in_window {
                 if let Some(m) = meta[rr % staleness].as_mut() {
                     m.messages_seen += 1;
-                    m.results_seen += task_ids.len();
-                    m.wire_bytes += frame_len;
+                    m.results_seen += scratch.tasks.len();
+                    m.wire_bytes += fr.frame_len;
                 }
             }
 
             // apply every round this frame completed, strictly in order
             while ring.oldest_complete() {
                 let applied = ring.base_round();
-                for stream in &streams {
-                    Msg::Stop {
+                let mut buf = plane.take_buf();
+                encode_msg_framed(
+                    &mut buf,
+                    &Msg::Stop {
                         round: applied as u32,
-                    }
-                    .write_to(&mut &*stream)?;
-                }
+                    },
+                );
+                plane.broadcast_frame(buf)?;
                 let winners: Vec<usize> = {
                     let (winners, h_sum) = ring.finish_oldest();
                     master.apply_aggregate(
@@ -685,29 +990,32 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
         } else {
             None
         };
-        let theta32: Vec<f32> = master.theta.iter().map(|&v| v as f32).collect();
+        theta32.clear();
+        theta32.extend(master.theta.iter().map(|&v| v as f32));
         let round_tag = round as u32;
         let t0_us = now_us();
-        for (id, stream) in streams.iter().enumerate() {
+        for id in 0..n {
             // uncoded: the worker's TO row (identity task↔batch map in
             // cluster mode — no Remark-3 reshuffle, it would force data
             // re-distribution); coded: the worker's fixed global slots
-            let tasks: Vec<u32> = match &to {
-                Some(to) => to.row(id).iter().map(|&t| t as u32).collect(),
-                None => (id * r..(id + 1) * r).map(|s| s as u32).collect(),
-            };
-            Msg::Assign {
-                round: round_tag,
+            tasks_u32.clear();
+            match &to {
+                Some(to) => tasks_u32.extend(to.row(id).iter().map(|&t| t as u32)),
+                None => tasks_u32.extend((id * r..(id + 1) * r).map(|s| s as u32)),
+            }
+            let mut buf = plane.take_buf();
+            encode_assign_into(
+                &mut buf,
+                round_tag,
                 // synchronous: every prior round has applied, so the
                 // θ-version (applied-round count) equals the round tag
-                version: round_tag,
-                theta: theta32.clone(),
-                tasks: tasks.clone(),
-                batches: tasks,
-                group: sizes[id] as u32,
-                align: align && sizes[id] > 1,
-            }
-            .write_to(&mut &*stream)?;
+                round_tag,
+                &theta32,
+                &tasks_u32,
+                sizes[id] as u32,
+                align && sizes[id] > 1,
+            );
+            plane.send_frame(id, buf)?;
         }
 
         // collect until the completion rule fires: k distinct tasks
@@ -724,44 +1032,38 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
         let mut wire_bytes = 0usize;
         let completion_ms;
         loop {
-            let (msg, frame_len) = res_rx
-                .recv_timeout(Duration::from_secs(60))
-                .context("master timed out waiting for results")?;
-            let Msg::Result {
-                round: rr,
-                version: _,
-                worker_id,
-                tasks,
-                comp_us,
-                send_ts_us,
-                h,
-            } = msg
+            let Some(fr) = plane.recv_result(
+                Duration::from_secs(60),
+                "master timed out waiting for results",
+                &mut scratch,
+                &mut ingest,
+            )?
             else {
                 continue;
             };
-            if rr != round_tag {
+            let worker_id = fr.worker_id;
+            if fr.round != round_tag {
                 continue; // stale result from a stopped round
             }
             // v3 invariant: one aggregated d-length block per message
-            if h.len() != d || tasks.is_empty() || worker_id as usize >= n {
+            if scratch.h64.len() != d || scratch.tasks.is_empty() || worker_id as usize >= n {
                 eprintln!(
                     "master: dropping malformed result from worker {worker_id} \
                      ({} tasks, {} h values, d = {d})",
-                    tasks.len(),
-                    h.len()
+                    scratch.tasks.len(),
+                    scratch.h64.len()
                 );
                 continue;
             }
-            let recv_us = now_us();
-            let h64: Vec<f64> = h.iter().map(|&v| v as f64).collect();
-            let task_ids: Vec<usize> = tasks.iter().map(|&t| t as usize).collect();
+            let recv_us = fr.recv_us;
             let complete = match (&coded, agg.as_mut()) {
                 (None, Some(agg)) => {
-                    match agg.offer(&task_ids, &h64) {
+                    match agg.offer(&scratch.tasks, &scratch.h64) {
                         Offer::Malformed => {
                             eprintln!(
-                                "master: dropping out-of-plan range {task_ids:?} \
-                                 from worker {worker_id}"
+                                "master: dropping out-of-plan range {:?} \
+                                 from worker {worker_id}",
+                                scratch.tasks
                             );
                             continue;
                         }
@@ -782,7 +1084,7 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
                     let key = match c {
                         // PC: one flush per worker, keyed by worker
                         Coded::Pc(_) => {
-                            if task_ids.len() != r {
+                            if scratch.tasks.len() != r {
                                 eprintln!(
                                     "master: dropping partial PC flush from \
                                      worker {worker_id}"
@@ -794,11 +1096,12 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
                         // PCMM: one evaluation per message, keyed by
                         // the global slot id
                         Coded::Pcmm(_) => {
-                            let slot = task_ids[0];
-                            if task_ids.len() != 1 || slot / r != worker_id as usize {
+                            let slot = scratch.tasks[0];
+                            if scratch.tasks.len() != 1 || slot / r != worker_id as usize {
                                 eprintln!(
                                     "master: dropping malformed PCMM evaluation \
-                                     {task_ids:?} from worker {worker_id}"
+                                     {:?} from worker {worker_id}",
+                                    scratch.tasks
                                 );
                                 continue;
                             }
@@ -810,7 +1113,7 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
                     // messages/wire-bytes accounting below, like uncoded
                     // duplicates
                     if seen_keys.insert(key) {
-                        responses.push((key, h64));
+                        responses.push((key, scratch.h64.clone()));
                     }
                     match rule {
                         CompletionRule::Messages { threshold } => {
@@ -822,10 +1125,10 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
                 (None, None) => unreachable!("uncoded wire always has an aggregator"),
             };
             messages_seen += 1;
-            results_seen += task_ids.len();
-            wire_bytes += frame_len;
-            let comp_ms = comp_us as f64 / 1e3;
-            let comm_ms = (recv_us.saturating_sub(send_ts_us)) as f64 / 1e3;
+            results_seen += scratch.tasks.len();
+            wire_bytes += fr.frame_len;
+            let comp_ms = fr.comp_us as f64 / 1e3;
+            let comm_ms = (recv_us.saturating_sub(fr.send_ts_us)) as f64 / 1e3;
             recorders[worker_id as usize].record_comp(comp_ms);
             recorders[worker_id as usize].record_comm(comm_ms);
             // duplicates and stranded overlaps are real fleet
@@ -837,10 +1140,10 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
                 round,
                 worker_id as usize,
                 msg_idx,
-                task_ids.len(),
+                scratch.tasks.len(),
                 comp_ms,
                 comm_ms,
-                frame_len,
+                fr.frame_len,
                 replanned,
                 round as u32, // sync: θ-version == round, gap 0
             );
@@ -848,7 +1151,7 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
                 // the estimator eats the same measurements RoundLog and
                 // the recorders are built from — causal by construction
                 // (these results precede the next round's plan)
-                e.observe_flush(worker_id as usize, task_ids.len(), comp_ms, comm_ms);
+                e.observe_flush(worker_id as usize, scratch.tasks.len(), comp_ms, comm_ms);
             }
             if complete {
                 completion_ms = (recv_us - t0_us) as f64 / 1e3;
@@ -857,9 +1160,9 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
         }
 
         // acknowledgement: stop all workers for this round (paper §II)
-        for stream in &streams {
-            Msg::Stop { round: round_tag }.write_to(&mut &*stream)?;
-        }
+        let mut buf = plane.take_buf();
+        encode_msg_framed(&mut buf, &Msg::Stop { round: round_tag });
+        plane.broadcast_frame(buf)?;
 
         // ---- the scheme's master update ------------------------------------
         let winners: Vec<usize> = match &coded {
@@ -917,10 +1220,7 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
     }
 
     // ---- teardown -----------------------------------------------------------
-    for stream in &streams {
-        let _ = Msg::Shutdown.write_to(&mut &*stream);
-        let _ = stream.shutdown(std::net::Shutdown::Both);
-    }
+    plane.shutdown();
     for j in worker_joins {
         match j.join() {
             Ok(Ok(())) => {}
@@ -941,6 +1241,7 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
         final_theta: master.theta,
         final_loss,
         decode_cache: decode_cache.as_ref().map(|c| c.stats()),
+        ingest: ingest.report(),
     })
 }
 

@@ -18,12 +18,14 @@
 //! Fig.-3-style histograms).
 
 pub mod aggregate;
+pub mod framebuf;
 pub mod master;
 pub mod protocol;
+pub mod reactor;
 pub mod worker;
 
 pub use aggregate::{AggregatorRing, Offer, RingOffer, RoundAggregator};
-pub use master::{run_cluster, ClusterConfig, ClusterReport, RoundLog};
+pub use master::{run_cluster, ClusterConfig, ClusterReport, IngestReport, IoMode, RoundLog};
 pub use protocol::Msg;
 pub use worker::{run_worker, Backend, WorkerOptions};
 

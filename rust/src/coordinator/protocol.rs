@@ -112,16 +112,24 @@ pub enum Msg {
 }
 
 impl Msg {
-    const TAG_WELCOME: u8 = 1;
-    const TAG_LOAD: u8 = 2;
-    const TAG_ASSIGN: u8 = 3;
-    const TAG_RESULT: u8 = 4;
-    const TAG_STOP: u8 = 5;
-    const TAG_SHUTDOWN: u8 = 6;
+    pub(crate) const TAG_WELCOME: u8 = 1;
+    pub(crate) const TAG_LOAD: u8 = 2;
+    pub(crate) const TAG_ASSIGN: u8 = 3;
+    pub(crate) const TAG_RESULT: u8 = 4;
+    pub(crate) const TAG_STOP: u8 = 5;
+    pub(crate) const TAG_SHUTDOWN: u8 = 6;
 
     /// Serialize into a payload (without the length prefix).
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(64);
+        self.encode_into(&mut out);
+        out
+    }
+
+    /// Serialize into a caller-owned buffer (appended, without the
+    /// length prefix) — the allocation-free spelling of [`Msg::encode`]
+    /// for pooled send paths ([`crate::coordinator::framebuf`]).
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
         match self {
             Msg::Welcome {
                 proto,
@@ -187,7 +195,6 @@ impl Msg {
             }
             Msg::Shutdown => out.push(Self::TAG_SHUTDOWN),
         }
-        out
     }
 
     /// Deserialize a payload.
@@ -273,11 +280,11 @@ impl Msg {
 
 // ---- little-endian put/get helpers ----------------------------------------
 
-fn put_u32(out: &mut Vec<u8>, v: u32) {
+pub(crate) fn put_u32(out: &mut Vec<u8>, v: u32) {
     out.extend_from_slice(&v.to_le_bytes());
 }
 
-fn put_u64(out: &mut Vec<u8>, v: u64) {
+pub(crate) fn put_u64(out: &mut Vec<u8>, v: u64) {
     out.extend_from_slice(&v.to_le_bytes());
 }
 

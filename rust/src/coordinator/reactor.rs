@@ -1,0 +1,576 @@
+//! Poll-driven event loop for the master's worker connections
+//! (`IoMode::Reactor`).
+//!
+//! One thread, one `poll(2)` call over every worker socket
+//! ([`crate::util::poll`]), replacing the thread-per-worker blocking
+//! readers: each connection owns a [`FrameBuf`] that non-blocking reads
+//! drain into, complete frames are yielded round-robin (no fast worker
+//! can starve a slow one's buffered frames), and outbound frames ride a
+//! per-connection write queue flushed with vectored writes — an
+//! `Assign`/`Stop` fan-out shares one reference-counted buffer across
+//! all n queues instead of n clones.
+//!
+//! The reactor is deliberately *not* a thread: it lives on the master's
+//! round loop, so completions flow into `RoundAggregator`/
+//! `AggregatorRing` with no channel hop and no lock.  θ-updates happen
+//! between `poll_frame` calls; while the master computes, the kernel
+//! keeps buffering — the per-frame cost of that dwell is exactly what
+//! `ClusterReport.ingest` measures.
+//!
+//! Disconnect semantics: a dead connection is marked closed and its
+//! queued writes are dropped (the fleet keeps going, as with a dead
+//! receiver thread in `IoMode::Threads`); only when *every* connection
+//! is gone does `poll_frame` error out instead of letting the master
+//! sit out its 60 s timeout.
+
+use std::collections::VecDeque;
+use std::io::{self, IoSlice, Write};
+use std::net::TcpStream;
+use std::rc::Rc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::framebuf::{Frame, FrameBuf};
+use super::now_us;
+use crate::util::poll::{poll_fds, PollFd, POLLIN, POLLOUT};
+use std::os::unix::io::AsRawFd;
+
+/// Max buffers per vectored write burst.
+const MAX_IOV: usize = 16;
+/// Max recycled send buffers kept around.
+const MAX_POOLED: usize = 64;
+
+struct Conn {
+    stream: TcpStream,
+    rbuf: FrameBuf,
+    /// outbound queue: `(frame bytes, written offset)`; broadcast
+    /// frames share one `Rc` across all queues
+    wq: VecDeque<(Rc<Vec<u8>>, usize)>,
+    open: bool,
+}
+
+impl Conn {
+    fn pending_write_bytes(&self) -> usize {
+        self.wq.iter().map(|(b, off)| b.len() - off).sum()
+    }
+}
+
+/// The master-side event loop over all worker connections.
+pub struct Reactor {
+    conns: Vec<Conn>,
+    /// reused poll set + its pollfd→conn index map
+    pollfds: Vec<PollFd>,
+    poll_map: Vec<usize>,
+    /// round-robin cursor for the buffered-frame drain
+    scan: usize,
+    /// recycled send buffers (drained queue entries whose `Rc` we held
+    /// the last reference to)
+    send_pool: Vec<Vec<u8>>,
+}
+
+impl Reactor {
+    /// Take ownership of the handshaken (blocking) streams and switch
+    /// them to non-blocking.
+    pub fn new(streams: Vec<TcpStream>) -> Result<Self> {
+        for s in &streams {
+            s.set_nonblocking(true).context("set_nonblocking")?;
+        }
+        let conns = streams
+            .into_iter()
+            .map(|stream| Conn {
+                stream,
+                rbuf: FrameBuf::new(),
+                wq: VecDeque::new(),
+                open: true,
+            })
+            .collect();
+        Ok(Self {
+            conns,
+            pollfds: Vec::new(),
+            poll_map: Vec::new(),
+            scan: 0,
+            send_pool: Vec::new(),
+        })
+    }
+
+    pub fn n_conns(&self) -> usize {
+        self.conns.len()
+    }
+
+    pub fn is_open(&self, id: usize) -> bool {
+        self.conns[id].open
+    }
+
+    /// Outbound bytes still queued (all connections) — backpressure
+    /// visibility for tests and benches.
+    pub fn pending_write_bytes(&self) -> usize {
+        self.conns.iter().map(Conn::pending_write_bytes).sum()
+    }
+
+    /// A cleared send buffer from the recycle pool (returns to the pool
+    /// by itself once the frame is fully written and the last queue
+    /// reference drops).
+    pub fn take_send_buf(&mut self) -> Vec<u8> {
+        match self.send_pool.pop() {
+            Some(mut b) => {
+                b.clear();
+                b
+            }
+            None => Vec::new(),
+        }
+    }
+
+    /// Queue one framed message to one worker; flushes opportunistically
+    /// (a send to a closed connection is silently dropped).
+    pub fn send_frame(&mut self, id: usize, frame: Vec<u8>) {
+        let rc = Rc::new(frame);
+        self.enqueue(id, rc);
+    }
+
+    /// Queue one framed message to every open worker, sharing a single
+    /// buffer across all queues (the Assign/Stop fan-out path).
+    pub fn broadcast_frame(&mut self, frame: Vec<u8>) {
+        let rc = Rc::new(frame);
+        for id in 0..self.conns.len() {
+            self.enqueue(id, Rc::clone(&rc));
+        }
+        // sole owner already (every conn closed): recycle immediately
+        if let Ok(buf) = Rc::try_unwrap(rc) {
+            self.recycle(buf);
+        }
+    }
+
+    fn enqueue(&mut self, id: usize, rc: Rc<Vec<u8>>) {
+        if !self.conns[id].open || rc.is_empty() {
+            return;
+        }
+        self.conns[id].wq.push_back((rc, 0));
+        Self::flush_conn(&mut self.conns[id], &mut self.send_pool);
+    }
+
+    fn recycle(&mut self, buf: Vec<u8>) {
+        if self.send_pool.len() < MAX_POOLED {
+            self.send_pool.push(buf);
+        }
+    }
+
+    /// Drive the write queue of one connection until empty or
+    /// `WouldBlock`.  Errors close the connection (queued writes
+    /// dropped) — the read side will surface the disconnect.
+    fn flush_conn(c: &mut Conn, pool: &mut Vec<Vec<u8>>) {
+        if !c.open {
+            c.wq.clear();
+            return;
+        }
+        while !c.wq.is_empty() {
+            // scope the IoSlice borrows of the queue to the write call,
+            // so the queue can be advanced from the result below
+            let res = {
+                let mut iov = [IoSlice::new(&[]); MAX_IOV];
+                let mut k = 0;
+                for (buf, off) in c.wq.iter() {
+                    if k == MAX_IOV {
+                        break;
+                    }
+                    iov[k] = IoSlice::new(&buf[*off..]);
+                    k += 1;
+                }
+                c.stream.write_vectored(&iov[..k])
+            };
+            match res {
+                Ok(0) => {
+                    c.open = false;
+                    c.wq.clear();
+                    return;
+                }
+                Ok(mut n) => {
+                    while n > 0 {
+                        let (buf, off) = c.wq.front_mut().expect("bytes written ⇒ queue nonempty");
+                        let rem = buf.len() - *off;
+                        if n < rem {
+                            *off += n;
+                            break;
+                        }
+                        n -= rem;
+                        let (rc, _) = c.wq.pop_front().unwrap();
+                        if let Ok(owned) = Rc::try_unwrap(rc) {
+                            if pool.len() < MAX_POOLED {
+                                pool.push(owned);
+                            }
+                        }
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    c.open = false;
+                    c.wq.clear();
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Drain one connection's socket into its frame buffer until
+    /// `WouldBlock`/EOF.  Any hard error closes the connection.
+    fn fill_conn(c: &mut Conn) {
+        loop {
+            match c.rbuf.fill_from(&mut c.stream, now_us()) {
+                Ok(0) => {
+                    c.open = false;
+                    return;
+                }
+                Ok(_) => {}
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(_) => {
+                    c.open = false;
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Yield the next complete frame from any connection, waiting up to
+    /// `timeout`.  `Ok(None)` = timeout.  Buffered frames drain
+    /// round-robin before the reactor goes back to the kernel; pending
+    /// writes are flushed as their sockets turn writable.  Errors when
+    /// every connection is closed with nothing left buffered, or on a
+    /// corrupt frame stream.
+    pub fn poll_frame(&mut self, timeout: Duration) -> Result<Option<(usize, Frame<'_>)>> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            // 1. fairness scan over already-buffered frames
+            let n = self.conns.len();
+            let mut found = None;
+            for off in 0..n {
+                let i = (self.scan + off) % n;
+                if self.conns[i]
+                    .rbuf
+                    .has_frame()
+                    .with_context(|| format!("worker {i} frame stream corrupt"))?
+                {
+                    found = Some(i);
+                    break;
+                }
+            }
+            if let Some(i) = found {
+                self.scan = (i + 1) % n;
+                let frame = self.conns[i].rbuf.next_frame()?.expect("peeked above");
+                return Ok(Some((i, frame)));
+            }
+
+            // 2. back to the kernel for readiness
+            let now = Instant::now();
+            if now >= deadline {
+                return Ok(None);
+            }
+            self.pollfds.clear();
+            self.poll_map.clear();
+            for (i, c) in self.conns.iter().enumerate() {
+                if !c.open {
+                    continue;
+                }
+                let mut events = POLLIN;
+                if !c.wq.is_empty() {
+                    events |= POLLOUT;
+                }
+                self.pollfds.push(PollFd::new(c.stream.as_raw_fd(), events));
+                self.poll_map.push(i);
+            }
+            if self.pollfds.is_empty() {
+                bail!("all worker connections closed");
+            }
+            let wait_ms = ((deadline - now).as_millis().min(i32::MAX as u128) as i32).max(1);
+            poll_fds(&mut self.pollfds, wait_ms).context("poll on worker sockets")?;
+            for p in 0..self.pollfds.len() {
+                let pfd = self.pollfds[p];
+                let i = self.poll_map[p];
+                if pfd.writable() {
+                    Self::flush_conn(&mut self.conns[i], &mut self.send_pool);
+                }
+                // readable, or error/hangup: read it out — a hangup
+                // with buffered data still delivers the data first,
+                // then EOF closes the connection
+                if pfd.readable() || pfd.failed() {
+                    Self::fill_conn(&mut self.conns[i]);
+                }
+            }
+        }
+    }
+
+    /// Best-effort teardown: flush queued writes for up to `deadline`,
+    /// then shut both socket directions down.
+    pub fn shutdown(&mut self, deadline: Duration) {
+        let until = Instant::now() + deadline;
+        while self.pending_write_bytes() > 0 && Instant::now() < until {
+            self.pollfds.clear();
+            self.poll_map.clear();
+            for (i, c) in self.conns.iter().enumerate() {
+                if c.open && !c.wq.is_empty() {
+                    self.pollfds.push(PollFd::new(c.stream.as_raw_fd(), POLLOUT));
+                    self.poll_map.push(i);
+                }
+            }
+            if self.pollfds.is_empty() {
+                break;
+            }
+            if poll_fds(&mut self.pollfds, 50).is_err() {
+                break;
+            }
+            for p in 0..self.pollfds.len() {
+                if self.pollfds[p].writable() || self.pollfds[p].failed() {
+                    let i = self.poll_map[p];
+                    Self::flush_conn(&mut self.conns[i], &mut self.send_pool);
+                }
+            }
+        }
+        for c in &self.conns {
+            let _ = c.stream.shutdown(std::net::Shutdown::Both);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::framebuf::encode_msg_framed;
+    use crate::coordinator::protocol::Msg;
+    use std::io::Read;
+    use std::net::TcpListener;
+
+    /// A reactor over `n` localhost connections plus the peer ends.
+    fn rig(n: usize) -> (Reactor, Vec<TcpStream>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut masters = Vec::new();
+        let mut peers = Vec::new();
+        for _ in 0..n {
+            let peer = TcpStream::connect(addr).unwrap();
+            peer.set_nodelay(true).unwrap();
+            let (m, _) = listener.accept().unwrap();
+            m.set_nodelay(true).unwrap();
+            masters.push(m);
+            peers.push(peer);
+        }
+        (Reactor::new(masters).unwrap(), peers)
+    }
+
+    fn framed(msg: &Msg) -> Vec<u8> {
+        let mut v = Vec::new();
+        encode_msg_framed(&mut v, msg);
+        v
+    }
+
+    fn result_msg(round: u32, worker: u32, d: usize) -> Msg {
+        Msg::Result {
+            round,
+            version: round,
+            worker_id: worker,
+            tasks: vec![worker],
+            comp_us: 1,
+            send_ts_us: 0,
+            h: vec![worker as f32; d],
+        }
+    }
+
+    #[test]
+    fn partial_frame_stays_buffered_until_complete() {
+        let (mut reactor, mut peers) = rig(1);
+        let wire = framed(&result_msg(0, 0, 64));
+        let split = wire.len() / 2;
+        peers[0].write_all(&wire[..split]).unwrap();
+        peers[0].flush().unwrap();
+        // half a frame: the reactor must time out, not yield garbage
+        assert!(reactor
+            .poll_frame(Duration::from_millis(100))
+            .unwrap()
+            .is_none());
+        peers[0].write_all(&wire[split..]).unwrap();
+        peers[0].flush().unwrap();
+        let (conn, frame) = reactor
+            .poll_frame(Duration::from_secs(2))
+            .unwrap()
+            .expect("completed frame");
+        assert_eq!(conn, 0);
+        assert_eq!(frame.wire_len, wire.len());
+        assert_eq!(Msg::decode(frame.payload).unwrap(), result_msg(0, 0, 64));
+        assert!(frame.recv_us > 0, "arrival timestamp stamped");
+    }
+
+    #[test]
+    fn burst_from_one_worker_does_not_lose_the_others() {
+        let (mut reactor, mut peers) = rig(3);
+        // worker 2 bursts three frames; 0 and 1 send one each — every
+        // frame from every connection must come through exactly once
+        // (exact interleaving depends on arrival timing; delivery and
+        // per-connection order are the guarantees)
+        for _ in 0..3 {
+            peers[2].write_all(&framed(&result_msg(0, 2, 8))).unwrap();
+        }
+        peers[0].write_all(&framed(&result_msg(0, 0, 8))).unwrap();
+        peers[1].write_all(&framed(&result_msg(0, 1, 8))).unwrap();
+        for p in &mut peers {
+            p.flush().unwrap();
+        }
+        let mut seen = Vec::new();
+        for _ in 0..5 {
+            let (conn, _) = reactor
+                .poll_frame(Duration::from_secs(2))
+                .unwrap()
+                .expect("frame");
+            seen.push(conn);
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1, 2, 2, 2]);
+        // and nothing invented beyond the five sent
+        assert!(reactor
+            .poll_frame(Duration::from_millis(50))
+            .unwrap()
+            .is_none());
+    }
+
+    #[test]
+    fn slow_writer_backpressure_queues_then_drains_in_order() {
+        let (mut reactor, mut peers) = rig(1);
+        // a frame large enough that a few of them overrun the combined
+        // kernel socket buffers while the peer refuses to read
+        let big = framed(&Msg::LoadData {
+            d: 4,
+            b: 4,
+            batches: vec![(0, vec![1.5f32; 64 * 1024])],
+        });
+        let mut wire_expect = Vec::new();
+        let mut sent = 0usize;
+        while reactor.pending_write_bytes() == 0 && sent < 64 {
+            reactor.send_frame(0, big.clone());
+            wire_expect.extend_from_slice(&big);
+            sent += 1;
+        }
+        assert!(
+            reactor.pending_write_bytes() > 0,
+            "an undrained peer must eventually push the queue into backpressure"
+        );
+        assert!(reactor.is_open(0), "backpressure is not an error");
+        // drain on a thread while the reactor pumps its write queue
+        let mut peer = peers.remove(0);
+        let total = wire_expect.len();
+        let drainer = std::thread::spawn(move || {
+            let mut got = vec![0u8; total];
+            peer.read_exact(&mut got).unwrap();
+            got
+        });
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while reactor.pending_write_bytes() > 0 && Instant::now() < deadline {
+            // no inbound traffic: poll_frame times out, flushing writes
+            let _ = reactor.poll_frame(Duration::from_millis(20)).unwrap();
+        }
+        assert_eq!(reactor.pending_write_bytes(), 0, "queue fully drained");
+        let got = drainer.join().unwrap();
+        assert_eq!(got, wire_expect, "byte stream intact and in order");
+    }
+
+    #[test]
+    fn broadcast_shares_one_buffer_and_skips_closed_conns() {
+        let (mut reactor, mut peers) = rig(2);
+        drop(peers.remove(0)); // worker 0 is gone
+        // deliver worker 0's EOF so the reactor marks it closed (FIN
+        // delivery is fast on loopback but not instantaneous)
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while reactor.is_open(0) && Instant::now() < deadline {
+            let _ = reactor.poll_frame(Duration::from_millis(50)).unwrap();
+        }
+        assert!(!reactor.is_open(0));
+        assert!(reactor.is_open(1));
+        let stop = framed(&Msg::Stop { round: 3 });
+        reactor.broadcast_frame(stop.clone());
+        let mut got = vec![0u8; stop.len()];
+        peers[0].read_exact(&mut got).unwrap(); // peers[0] is worker 1
+        assert_eq!(got, stop);
+    }
+
+    #[test]
+    fn mid_round_disconnect_keeps_the_fleet_going() {
+        let (mut reactor, mut peers) = rig(2);
+        peers[0].write_all(&framed(&result_msg(0, 0, 8))).unwrap();
+        peers[0].flush().unwrap();
+        let (conn, _) = reactor
+            .poll_frame(Duration::from_secs(2))
+            .unwrap()
+            .expect("frame from worker 0");
+        assert_eq!(conn, 0);
+        drop(peers.remove(0)); // worker 0 dies mid-round
+        peers[0].write_all(&framed(&result_msg(0, 1, 8))).unwrap();
+        peers[0].flush().unwrap();
+        let (conn, _) = reactor
+            .poll_frame(Duration::from_secs(2))
+            .unwrap()
+            .expect("surviving worker still heard");
+        assert_eq!(conn, 1);
+        // the dead connection is noticed within a few polls
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while reactor.is_open(0) && Instant::now() < deadline {
+            let _ = reactor.poll_frame(Duration::from_millis(50)).unwrap();
+        }
+        assert!(!reactor.is_open(0));
+        // sending to the dead connection is a silent drop, not a panic
+        reactor.send_frame(0, framed(&Msg::Stop { round: 0 }));
+        // once the whole fleet is gone, waiting errors out instead of
+        // burning the full master timeout
+        drop(peers);
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            match reactor.poll_frame(Duration::from_millis(100)) {
+                Ok(Some(_)) => continue, // drain whatever was in flight
+                Ok(None) => {
+                    assert!(
+                        Instant::now() < deadline,
+                        "all-closed fleet must surface an error promptly"
+                    );
+                }
+                Err(e) => {
+                    assert!(e.to_string().contains("all worker connections closed"));
+                    break;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn eof_with_buffered_frames_delivers_them_first() {
+        let (mut reactor, mut peers) = rig(1);
+        let m1 = framed(&result_msg(0, 0, 4));
+        let m2 = framed(&result_msg(1, 0, 4));
+        peers[0].write_all(&m1).unwrap();
+        peers[0].write_all(&m2).unwrap();
+        peers[0].flush().unwrap();
+        drop(peers); // hangup right behind the data
+        let mut got = Vec::new();
+        loop {
+            match reactor.poll_frame(Duration::from_millis(200)) {
+                Ok(Some((_, f))) => got.push(Msg::decode(f.payload).unwrap()),
+                Ok(None) => continue,
+                Err(_) => break, // all closed, after the data drained
+            }
+        }
+        assert_eq!(got, vec![result_msg(0, 0, 4), result_msg(1, 0, 4)]);
+    }
+
+    #[test]
+    fn send_buffers_recycle_through_the_pool() {
+        let (mut reactor, mut peers) = rig(1);
+        let stop = framed(&Msg::Stop { round: 1 });
+        for round in 0..8u32 {
+            let mut buf = reactor.take_send_buf();
+            encode_msg_framed(&mut buf, &Msg::Stop { round });
+            reactor.send_frame(0, buf);
+            let mut got = vec![0u8; stop.len()];
+            peers[0].read_exact(&mut got).unwrap();
+        }
+        assert!(
+            !reactor.send_pool.is_empty(),
+            "fully-written sole-owner buffers must come back to the pool"
+        );
+    }
+}

@@ -33,6 +33,7 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
+use super::framebuf::{encode_result_into, FramePool};
 use super::protocol::Msg;
 use super::{now_us, TaskDelaySampler};
 use crate::linalg::Mat;
@@ -149,6 +150,15 @@ pub fn run_worker(addr: std::net::SocketAddr, mut opts: WorkerOptions) -> Result
             })?;
     }
 
+    // Send-side scratch, reused across flushes and rounds: the frame
+    // bytes come from a pool shared with the delivery threads (each
+    // thread returns its buffer after the write), and the group
+    // accumulators keep their capacity between flushes — steady state
+    // allocates nothing on the result path.
+    let send_pool = Arc::new(Mutex::new(FramePool::new()));
+    let mut buf_tasks: Vec<u32> = Vec::new();
+    let mut buf_sum: Vec<f64> = Vec::new();
+
     // compute state
     #[allow(unused_assignments)]
     let mut dim = 0usize;
@@ -212,8 +222,8 @@ pub fn run_worker(addr: std::net::SocketAddr, mut opts: WorkerOptions) -> Result
                 // task, i.e. the paper's immediate streaming.  The
                 // buffer holds one f64 running sum, not per-task blocks
                 // — protocol v3 ships the aggregate only.
-                let mut buf_tasks: Vec<u32> = Vec::with_capacity(group);
-                let mut buf_sum: Vec<f64> = Vec::new();
+                buf_tasks.clear();
+                buf_sum.clear();
                 let mut buf_comp_us: u64 = 0;
                 for (slot, (&task, &batch)) in tasks.iter().zip(&batches).enumerate() {
                     // paper: stop as soon as the ack for *this* round
@@ -255,7 +265,7 @@ pub fn run_worker(addr: std::net::SocketAddr, mut opts: WorkerOptions) -> Result
                     buf_comp_us += now_us() - t0;
                     buf_tasks.push(task);
                     if buf_sum.is_empty() {
-                        buf_sum = h;
+                        buf_sum.extend_from_slice(&h);
                     } else {
                         crate::linalg::vec_axpy(&mut buf_sum, 1.0, &h);
                     }
@@ -280,22 +290,28 @@ pub fn run_worker(addr: std::net::SocketAddr, mut opts: WorkerOptions) -> Result
                     if !flush {
                         continue;
                     }
-                    let msg = Msg::Result {
+                    // Encode the framed Result directly into a pooled
+                    // buffer (length prefix + payload in one shot, f64
+                    // sum narrowed to f32 inline); the version field
+                    // echoes the θ-version the computation used, so
+                    // the master can audit a frame's lineage without
+                    // a round→version side table (protocol v4).
+                    let mut frame = send_pool.lock().expect("pool poisoned").get();
+                    encode_result_into(
+                        &mut frame,
                         round,
-                        // echo the θ-version the computation used, so
-                        // the master can audit a frame's lineage without
-                        // a round→version side table (protocol v4)
                         version,
                         worker_id,
-                        tasks: std::mem::take(&mut buf_tasks),
-                        comp_us: std::mem::take(&mut buf_comp_us),
-                        send_ts_us: now_us(),
-                        h: std::mem::take(&mut buf_sum)
-                            .into_iter()
-                            .map(|v| v as f32)
-                            .collect(),
-                    };
+                        &buf_tasks,
+                        buf_comp_us,
+                        now_us(),
+                        &buf_sum,
+                    );
+                    buf_tasks.clear();
+                    buf_sum.clear();
+                    buf_comp_us = 0;
                     let writer = Arc::clone(&writer);
+                    let pool = Arc::clone(&send_pool);
                     let inflight2 = Arc::clone(&inflight);
                     inflight.fetch_add(1, Ordering::SeqCst);
                     std::thread::Builder::new()
@@ -305,10 +321,10 @@ pub fn run_worker(addr: std::net::SocketAddr, mut opts: WorkerOptions) -> Result
                                 spin_sleep(Duration::from_secs_f64(inj_comm_ms / 1e3));
                             }
                             let mut w = writer.lock().expect("writer poisoned");
-                            let payload = msg.encode();
-                            let _ = w.write_all(&(payload.len() as u32).to_le_bytes());
-                            let _ = w.write_all(&payload);
+                            let _ = w.write_all(&frame);
                             let _ = w.flush();
+                            drop(w);
+                            pool.lock().expect("pool poisoned").put(frame);
                             inflight2.fetch_sub(1, Ordering::SeqCst);
                         })?;
                 }

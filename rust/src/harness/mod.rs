@@ -18,7 +18,7 @@ use anyhow::Result;
 use crate::adaptive::{
     run_policy_rounds, two_tier_model, PolicyKind, PolicyRunConfig, ShiftingStraggler,
 };
-use crate::coordinator::{run_cluster, ClusterConfig, ClusterReport};
+use crate::coordinator::{run_cluster, ClusterConfig, ClusterReport, IoMode};
 use crate::data::Dataset;
 use crate::delay::{DelayModel, DelayModelKind, Ec2LikeModel, TruncatedGaussianModel};
 use crate::metrics::{fit_truncated_gaussian, Histogram};
@@ -197,6 +197,7 @@ fn fig5_cluster_spotcheck(opts: &Options) -> Result<Table> {
                 loss_every: 0,
                 listen: None,
                 spawn_workers: true,
+                io: IoMode::default(),
             })?;
             row.push(Table::fmt(report.mean_completion_ms()));
         }
@@ -359,6 +360,7 @@ fn fig8_cluster_spotcheck(opts: &Options) -> Result<Table> {
             loss_every: 0,
             listen: None,
             spawn_workers: true,
+            io: IoMode::default(),
         })?;
         let rounds_f = report.rounds.len().max(1) as f64;
         let msgs: usize = report.rounds.iter().map(|l| l.messages_seen).sum();
@@ -489,6 +491,7 @@ pub fn fig3(opts: &Options) -> Result<(Table, Table)> {
         loss_every: 0,
         listen: None,
         spawn_workers: true,
+        io: IoMode::default(),
     })?;
 
     let mut summary = Table::new(
@@ -620,6 +623,10 @@ pub struct E2eConfig {
     /// spawn in-process workers (false = wait for external
     /// `straggler worker --connect` processes)
     pub spawn_workers: bool,
+    /// master data plane: poll-driven reactor (default) or the legacy
+    /// thread-per-worker blocking receivers (kept as a bit-identity
+    /// cross-check — see [`IoMode`])
+    pub io: IoMode,
 }
 
 impl Default for E2eConfig {
@@ -641,6 +648,7 @@ impl Default for E2eConfig {
             seed: 2024,
             listen: None,
             spawn_workers: true,
+            io: IoMode::default(),
         }
     }
 }
@@ -669,6 +677,7 @@ pub fn run_e2e(cfg: E2eConfig, opts: &Options) -> Result<(ClusterReport, Table)>
         loss_every: 10,
         listen: cfg.listen.clone(),
         spawn_workers: cfg.spawn_workers,
+        io: cfg.io,
     })?;
     let mut curve = Table::new(
         &format!(

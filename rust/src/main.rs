@@ -17,6 +17,7 @@
 //! straggler train --scheme CS|SS|RA|GC(s)|GCH(a,b)|PC|PCMM
 //!                 [--policy static|order|order@p95|load|load-rate|alloc-group|alloc-random]
 //!                 [--staleness S]               # pipelined master (uncoded)
+//!                 [--io reactor|threads]        # master data plane
 //!                 [--rounds 300] [--k 8] [--no-pjrt] [--record t.jsonl]
 //! straggler trace record --out-trace t.jsonl [--cluster]  # record → fit → replay
 //! straggler trace fit    --trace t.jsonl        # per-worker fits + KS + tiers
@@ -213,6 +214,7 @@ fn run_trace(args: &Args, opts: &Options) -> Result<()> {
                     seed: opts.seed,
                     listen: None,
                     spawn_workers: true,
+                    io: straggler_sched::coordinator::IoMode::default(),
                 };
                 let quiet = Options {
                     out_dir: None,
@@ -789,7 +791,9 @@ fn run() -> Result<()> {
                 seed: args.u64_or("data-seed", 2024)?,
                 listen: args.str_opt("listen"),
                 spawn_workers: !args.flag("external"),
+                io: straggler_sched::coordinator::IoMode::parse(&args.str_or("io", "reactor"))?,
             };
+            let io = cfg.io;
             let (report, curve) = harness::run_e2e(cfg, &opts)?;
             curve.print();
             println!(
@@ -800,6 +804,16 @@ fn run() -> Result<()> {
                 report.final_loss,
                 report.mean_wire_bytes() / 1024.0
             );
+            if report.ingest.frames > 0 {
+                println!(
+                    "  {io} data plane: {} frames, master dwell p50 {:.1} µs  \
+                     p99 {:.1} µs  max {:.1} µs",
+                    report.ingest.frames,
+                    report.ingest.dwell_p50_us,
+                    report.ingest.dwell_p99_us,
+                    report.ingest.dwell_max_us
+                );
+            }
             if let Some(stats) = &report.decode_cache {
                 println!(
                     "  decode cache: {:.1}% hit rate ({} hits / {} misses / {} evictions)",
@@ -910,7 +924,11 @@ subcommands:
                     the pipelined master (uncoded k-distinct wire
                     only, protocol v4 θ-version tags); --record FILE
                     saves the master's measured delay trace
-                    (--listen ADDR --external for multi-process mode)
+                    (--listen ADDR --external for multi-process mode);
+                    --io reactor|threads picks the master data plane:
+                    the poll-driven zero-copy reactor (default) or the
+                    legacy thread-per-worker receivers (bit-identical
+                    cross-check path)
   trace             the record → fit → replay loop (digital-twin
                     calibration, EXPERIMENTS.md §Traces):
                     trace record --out-trace FILE [--cluster]

@@ -7,6 +7,7 @@ pub mod combin;
 pub mod fnv;
 pub mod json;
 pub mod math;
+pub mod poll;
 pub mod rng;
 pub mod stats;
 

@@ -1,0 +1,159 @@
+//! Minimal raw-FFI wrapper over the OS `poll(2)` syscall.
+//!
+//! The offline build carries no `libc` crate (the only dependency is
+//! the vendored `anyhow` shim), so the `pollfd` layout and event bits
+//! are declared here directly.  Both are fixed by POSIX and identical
+//! across the platforms this crate targets; the one genuine divergence
+//! — the `nfds_t` width — is cfg-gated below.
+//!
+//! This is the readiness substrate of the master's event-driven data
+//! plane ([`crate::coordinator::reactor`]): one `poll` call watches
+//! every worker socket at once, replacing the thread-per-worker
+//! blocking readers.  `poll` (not `epoll`) keeps the wrapper portable
+//! and dependency-free; at the fleet sizes the coordinator runs
+//! (n ≤ a few hundred sockets) the O(n) scan per wakeup is noise next
+//! to one frame decode.
+
+use std::io;
+use std::os::unix::io::RawFd;
+
+/// Readable data available (POSIX `POLLIN`).
+pub const POLLIN: i16 = 0x001;
+/// Writable without blocking (POSIX `POLLOUT`).
+pub const POLLOUT: i16 = 0x004;
+/// Error condition (output only — never requested).
+pub const POLLERR: i16 = 0x008;
+/// Peer hung up (output only).
+pub const POLLHUP: i16 = 0x010;
+/// Fd not open (output only).
+pub const POLLNVAL: i16 = 0x020;
+
+/// POSIX `struct pollfd`, byte-compatible with the C definition.
+#[repr(C)]
+#[derive(Debug, Clone, Copy)]
+pub struct PollFd {
+    pub fd: RawFd,
+    /// Requested events (`POLLIN | POLLOUT`).
+    pub events: i16,
+    /// Returned events, filled by the kernel.
+    pub revents: i16,
+}
+
+impl PollFd {
+    pub fn new(fd: RawFd, events: i16) -> Self {
+        Self {
+            fd,
+            events,
+            revents: 0,
+        }
+    }
+
+    pub fn readable(&self) -> bool {
+        self.revents & POLLIN != 0
+    }
+
+    pub fn writable(&self) -> bool {
+        self.revents & POLLOUT != 0
+    }
+
+    /// Error/hangup/invalid — the connection is done for.
+    pub fn failed(&self) -> bool {
+        self.revents & (POLLERR | POLLHUP | POLLNVAL) != 0
+    }
+}
+
+// `nfds_t` is `unsigned long` on Linux and `unsigned int` on the BSDs
+// (incl. macOS) — the only layout difference in the whole API.
+#[cfg(any(target_os = "macos", target_os = "freebsd", target_os = "openbsd"))]
+type NFds = u32;
+#[cfg(not(any(target_os = "macos", target_os = "freebsd", target_os = "openbsd")))]
+type NFds = core::ffi::c_ulong;
+
+extern "C" {
+    fn poll(fds: *mut PollFd, nfds: NFds, timeout: i32) -> i32;
+}
+
+/// Poll `fds`, blocking up to `timeout_ms` (`0` = non-blocking probe,
+/// negative = wait forever).  Returns the number of fds with non-zero
+/// `revents`.  `EINTR` is retried transparently — callers that care
+/// about the elapsed budget re-derive it from their own deadline.
+pub fn poll_fds(fds: &mut [PollFd], timeout_ms: i32) -> io::Result<usize> {
+    if fds.is_empty() {
+        return Ok(0);
+    }
+    loop {
+        let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as NFds, timeout_ms) };
+        if rc >= 0 {
+            return Ok(rc as usize);
+        }
+        let err = io::Error::last_os_error();
+        if err.kind() != io::ErrorKind::Interrupted {
+            return Err(err);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::os::unix::io::AsRawFd;
+
+    fn pair() -> (TcpStream, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        (client, server)
+    }
+
+    #[test]
+    fn idle_socket_polls_not_readable() {
+        let (client, _server) = pair();
+        let mut fds = [PollFd::new(client.as_raw_fd(), POLLIN)];
+        let n = poll_fds(&mut fds, 0).unwrap();
+        assert_eq!(n, 0, "no data queued yet");
+        assert!(!fds[0].readable());
+    }
+
+    #[test]
+    fn written_socket_polls_readable() {
+        let (mut client, server) = pair();
+        client.write_all(b"ping").unwrap();
+        client.flush().unwrap();
+        let mut fds = [PollFd::new(server.as_raw_fd(), POLLIN)];
+        // a localhost write is visible within any sane timeout
+        let n = poll_fds(&mut fds, 2_000).unwrap();
+        assert_eq!(n, 1);
+        assert!(fds[0].readable());
+        let mut buf = [0u8; 4];
+        (&server).read_exact(&mut buf).unwrap();
+        assert_eq!(&buf, b"ping");
+    }
+
+    #[test]
+    fn fresh_socket_polls_writable() {
+        let (client, _server) = pair();
+        let mut fds = [PollFd::new(client.as_raw_fd(), POLLOUT)];
+        let n = poll_fds(&mut fds, 2_000).unwrap();
+        assert_eq!(n, 1);
+        assert!(fds[0].writable());
+    }
+
+    #[test]
+    fn hangup_is_reported() {
+        let (client, server) = pair();
+        drop(client);
+        let mut fds = [PollFd::new(server.as_raw_fd(), POLLIN)];
+        let n = poll_fds(&mut fds, 2_000).unwrap();
+        assert_eq!(n, 1);
+        // a closed peer reports POLLIN (EOF is readable) and/or POLLHUP
+        assert!(fds[0].readable() || fds[0].failed());
+    }
+
+    #[test]
+    fn empty_fd_set_is_a_noop() {
+        assert_eq!(poll_fds(&mut [], 0).unwrap(), 0);
+    }
+}

@@ -4,7 +4,7 @@
 //! duplicate-safe on the master).
 
 use straggler_sched::adaptive::PolicyKind;
-use straggler_sched::coordinator::{run_cluster, ClusterConfig};
+use straggler_sched::coordinator::{run_cluster, ClusterConfig, IoMode};
 use straggler_sched::data::Dataset;
 use straggler_sched::delay::DelayModelKind;
 use straggler_sched::scheme::{SchemeId, SchemeRegistry};
@@ -39,6 +39,7 @@ fn config(
         loss_every: 1,
         listen: None,
         spawn_workers: true,
+        io: IoMode::default(),
     }
 }
 

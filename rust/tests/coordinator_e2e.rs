@@ -7,7 +7,7 @@
 use std::net::TcpListener;
 
 use straggler_sched::adaptive::PolicyKind;
-use straggler_sched::coordinator::{run_cluster, run_worker, ClusterConfig, WorkerOptions};
+use straggler_sched::coordinator::{run_cluster, run_worker, ClusterConfig, IoMode, WorkerOptions};
 use straggler_sched::data::Dataset;
 use straggler_sched::delay::DelayModelKind;
 use straggler_sched::scheme::{CompletionRule, SchemeId, SchemeRegistry};
@@ -32,6 +32,7 @@ fn base_config(scheme: SchemeId, n: usize, r: usize, k: usize, rounds: usize) ->
         loss_every: 1,
         listen: None,
         spawn_workers: true,
+        io: IoMode::default(),
     }
 }
 

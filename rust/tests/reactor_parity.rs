@@ -1,0 +1,348 @@
+//! Bit-identity cross-check between the master's two data planes
+//! (`IoMode::Threads` vs `IoMode::Reactor`).
+//!
+//! The real fleet is timing-dependent (delivery threads race), so this
+//! harness replaces the workers with a **scripted fleet**: it connects
+//! `n` logical workers, answers every `Assign` with honest grouped
+//! flushes computed from the Assign's own θ, and ships *every* Result
+//! frame — for all logical workers — over **connection 0** in a fixed
+//! order.  The master never validates a frame's `worker_id` against its
+//! arrival connection, so both data planes observe the identical total
+//! program order, and everything downstream of ingestion (aggregation,
+//! θ updates, round accounting) must be **bit-identical**.  Wall-clock
+//! fields (`completion_ms`; the dwell/comm measurements) are the only
+//! legitimate difference and are excluded from the comparison.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::Write as _;
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use straggler_sched::adaptive::PolicyKind;
+use straggler_sched::coordinator::framebuf::encode_result_into;
+use straggler_sched::coordinator::{
+    run_cluster, ClusterConfig, ClusterReport, IoMode, Msg, RoundLog,
+};
+use straggler_sched::data::Dataset;
+use straggler_sched::linalg::{vec_axpy, Mat};
+use straggler_sched::scheme::{SchemeId, SchemeRegistry};
+
+/// One decoded `Assign`, queued per logical worker by the fleet driver.
+struct Assign {
+    round: u32,
+    version: u32,
+    theta: Vec<f32>,
+    tasks: Vec<u32>,
+    batches: Vec<u32>,
+    group: u32,
+    align: bool,
+}
+
+fn connect_retry(addr: &str) -> TcpStream {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return s,
+            Err(e) => {
+                assert!(
+                    Instant::now() < deadline,
+                    "could not reach master at {addr}: {e}"
+                );
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+    }
+}
+
+/// Emulate `run_worker`'s grouped-flush loop for one Assign (without the
+/// stop watermark — the script always completes its row, which is
+/// deterministic in both modes; the master drops the surplus as stale
+/// or duplicate identically).  Frames carry fixed `comp_us` and
+/// `send_ts_us = 0` so nothing wall-clock-dependent reaches the wire.
+fn flush_frames(w: usize, a: &Assign, parts: &HashMap<u32, Mat>) -> Vec<Vec<u8>> {
+    let group = (a.group.max(1) as usize).min(a.tasks.len().max(1));
+    let theta64: Vec<f64> = a.theta.iter().map(|&v| v as f64).collect();
+    let mut frames = Vec::new();
+    let mut buf_tasks: Vec<u32> = Vec::new();
+    let mut buf_sum: Vec<f64> = Vec::new();
+    for (slot, (&task, &batch)) in a.tasks.iter().zip(&a.batches).enumerate() {
+        let part = parts
+            .get(&batch)
+            .unwrap_or_else(|| panic!("worker {w}: batch {batch} was never shipped"));
+        let h = part.gram_matvec(&theta64);
+        buf_tasks.push(task);
+        if buf_sum.is_empty() {
+            buf_sum = h;
+        } else {
+            vec_axpy(&mut buf_sum, 1.0, &h);
+        }
+        let last_slot = slot + 1 == a.tasks.len();
+        let flush = if a.align {
+            last_slot
+                || (task as usize + 1) % group == 0
+                || a.tasks[slot + 1] != task.wrapping_add(1)
+        } else {
+            last_slot || buf_tasks.len() == group
+        };
+        if !flush {
+            continue;
+        }
+        let mut frame = Vec::new();
+        encode_result_into(
+            &mut frame,
+            a.round,
+            a.version,
+            w as u32,
+            &buf_tasks,
+            1_000 + w as u64,
+            0,
+            &buf_sum,
+        );
+        frames.push(frame);
+        buf_tasks.clear();
+        buf_sum.clear();
+    }
+    frames
+}
+
+/// The scripted fleet: pin worker ids by sequential handshakes, then
+/// answer each round's Assigns (all n, in worker order) with flushes
+/// sent exclusively on connection 0.
+fn scripted_fleet(addr: String, n: usize, rounds: usize) {
+    // sequential connect + Welcome read pins accept order = worker id
+    let mut conns: Vec<TcpStream> = Vec::new();
+    for i in 0..n {
+        let stream = connect_retry(&addr);
+        stream.set_nodelay(true).expect("nodelay");
+        let mut rd = stream.try_clone().expect("clone");
+        match Msg::read_from(&mut rd).expect("welcome") {
+            Msg::Welcome { worker_id, .. } => {
+                assert_eq!(worker_id as usize, i, "accept order must pin worker ids")
+            }
+            other => panic!("expected Welcome, got {other:?}"),
+        }
+        conns.push(stream);
+    }
+    // every conn gets its LoadData next; keep each worker's batches
+    let mut parts: Vec<HashMap<u32, Mat>> = Vec::with_capacity(n);
+    for c in &conns {
+        let mut rd = c.try_clone().expect("clone");
+        match Msg::read_from(&mut rd).expect("load data") {
+            Msg::LoadData { d, batches, .. } => {
+                let dim = d as usize;
+                parts.push(
+                    batches
+                        .into_iter()
+                        .map(|(id, x)| {
+                            let b = x.len() / dim;
+                            (id, Mat::from_fn(dim, b, |i, j| x[i * b + j] as f64))
+                        })
+                        .collect(),
+                );
+            }
+            other => panic!("expected LoadData, got {other:?}"),
+        }
+    }
+
+    // reader thread per conn: forward Assigns, swallow Stop/Shutdown
+    let (tx, rx) = mpsc::channel::<(usize, Assign)>();
+    for (i, c) in conns.iter().enumerate() {
+        let mut rd = c.try_clone().expect("clone");
+        let tx = tx.clone();
+        std::thread::spawn(move || loop {
+            match Msg::read_from(&mut rd) {
+                Ok(Msg::Assign {
+                    round,
+                    version,
+                    theta,
+                    tasks,
+                    batches,
+                    group,
+                    align,
+                }) => {
+                    if tx
+                        .send((
+                            i,
+                            Assign {
+                                round,
+                                version,
+                                theta,
+                                tasks,
+                                batches,
+                                group,
+                                align,
+                            },
+                        ))
+                        .is_err()
+                    {
+                        return;
+                    }
+                }
+                Ok(Msg::Stop { .. }) => {}
+                Ok(Msg::Shutdown) | Err(_) => return,
+                Ok(other) => panic!("fleet conn {i}: unexpected {other:?}"),
+            }
+        });
+    }
+
+    // drive the rounds: wait for all n Assigns of the round (the pump
+    // may interleave later rounds' Assigns — queue them), then send
+    // every worker's flushes in worker order on conn 0
+    let mut writer0 = conns[0].try_clone().expect("clone");
+    let mut queues: Vec<VecDeque<Assign>> = (0..n).map(|_| VecDeque::new()).collect();
+    for round in 0..rounds {
+        for w in 0..n {
+            while queues[w].is_empty() {
+                let (i, a) = rx
+                    .recv_timeout(Duration::from_secs(30))
+                    .expect("fleet starved waiting for Assign");
+                queues[i].push_back(a);
+            }
+            let a = queues[w].pop_front().expect("queued assign");
+            assert_eq!(
+                a.round as usize, round,
+                "worker {w}: assigns must arrive in round order"
+            );
+            for frame in flush_frames(w, &a, &parts[w]) {
+                writer0.write_all(&frame).expect("fleet write");
+            }
+        }
+        writer0.flush().expect("fleet flush");
+    }
+}
+
+/// One master run against the scripted fleet.
+fn run_mode(
+    io: IoMode,
+    scheme: SchemeId,
+    n: usize,
+    r: usize,
+    k: usize,
+    staleness: usize,
+) -> ClusterReport {
+    let rounds = 10usize;
+    // learn a free port, release it, and hand it to the master — the
+    // fleet needs the address before `run_cluster` binds
+    let addr = {
+        let probe = TcpListener::bind("127.0.0.1:0").expect("probe bind");
+        probe.local_addr().expect("probe addr").to_string()
+    };
+    let fleet = {
+        let addr = addr.clone();
+        std::thread::spawn(move || scripted_fleet(addr, n, rounds))
+    };
+    let report = run_cluster(ClusterConfig {
+        n,
+        r,
+        k,
+        eta: 0.05,
+        rounds,
+        profile: "quickstart".into(),
+        plan: SchemeRegistry::cluster_plan(scheme, n, r, k)
+            .unwrap_or_else(|e| panic!("{scheme} plan: {e:#}")),
+        policy: PolicyKind::Static,
+        staleness,
+        dataset: Dataset::synthesize(n, 16, n * 8, 42),
+        inject: None,
+        seed: 7,
+        use_pjrt: false,
+        artifact_dir: None,
+        loss_every: 1,
+        listen: Some(addr),
+        spawn_workers: false,
+        io,
+    })
+    .unwrap_or_else(|e| panic!("{io} master run: {e:#}"));
+    fleet.join().expect("scripted fleet panicked");
+    report
+}
+
+/// Everything in a `RoundLog` except wall-clock completion must match.
+fn assert_logs_identical(scheme: SchemeId, a: &[RoundLog], b: &[RoundLog]) {
+    assert_eq!(a.len(), b.len(), "{scheme}: round count");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.round, y.round, "{scheme}");
+        assert_eq!(x.winners, y.winners, "{scheme} round {}", x.round);
+        assert_eq!(
+            x.results_seen, y.results_seen,
+            "{scheme} round {}",
+            x.round
+        );
+        assert_eq!(
+            x.messages_seen, y.messages_seen,
+            "{scheme} round {}",
+            x.round
+        );
+        assert_eq!(x.wire_bytes, y.wire_bytes, "{scheme} round {}", x.round);
+        assert_eq!(x.replanned, y.replanned, "{scheme} round {}", x.round);
+        let (lx, ly) = (x.loss, y.loss);
+        assert_eq!(
+            lx.map(f64::to_bits),
+            ly.map(f64::to_bits),
+            "{scheme} round {}: loss must be bit-identical",
+            x.round
+        );
+    }
+}
+
+fn assert_parity(scheme: SchemeId, n: usize, r: usize, k: usize, staleness: usize) {
+    let threads = run_mode(IoMode::Threads, scheme, n, r, k, staleness);
+    let reactor = run_mode(IoMode::Reactor, scheme, n, r, k, staleness);
+    assert_eq!(
+        threads.final_theta.len(),
+        reactor.final_theta.len(),
+        "{scheme}: θ dimension"
+    );
+    for (i, (a, b)) in threads
+        .final_theta
+        .iter()
+        .zip(&reactor.final_theta)
+        .enumerate()
+    {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "{scheme} (S = {staleness}): θ[{i}] diverged: {a} vs {b}"
+        );
+    }
+    assert_eq!(
+        threads.final_loss.to_bits(),
+        reactor.final_loss.to_bits(),
+        "{scheme}: final loss"
+    );
+    assert_logs_identical(scheme, &threads.rounds, &reactor.rounds);
+    // both planes measured every frame they handed the loop
+    assert_eq!(
+        threads.ingest.frames, reactor.ingest.frames,
+        "{scheme}: ingest frame count"
+    );
+    assert!(threads.ingest.frames > 0 && reactor.ingest.frames > 0);
+}
+
+#[test]
+fn cs_sync_is_bit_identical_across_io_modes() {
+    assert_parity(SchemeId::Cs, 4, 2, 4, 1);
+}
+
+#[test]
+fn cs_staleness2_is_bit_identical_across_io_modes() {
+    assert_parity(SchemeId::Cs, 4, 2, 4, 2);
+}
+
+#[test]
+fn gc2_sync_is_bit_identical_across_io_modes() {
+    assert_parity(SchemeId::Gc(2), 4, 4, 4, 1);
+}
+
+#[test]
+fn gc2_staleness2_is_bit_identical_across_io_modes() {
+    assert_parity(SchemeId::Gc(2), 4, 4, 4, 2);
+}
+
+#[test]
+fn pc_sync_is_bit_identical_across_io_modes() {
+    // coded wire: one full-row flush per worker, Messages-rule stop at
+    // the recovery threshold, master-side Lagrange decode
+    assert_parity(SchemeId::Pc, 4, 2, 4, 1);
+}

@@ -31,7 +31,17 @@ import sys
 THRESHOLD = 1.25
 # the perf surfaces EXPERIMENTS.md §Perf tracks; other groups are
 # reported informationally only
-WATCHED = ("aggregate", "ring", "decode", "fleet", "batch", "coupled3", "estimator", "scheme")
+WATCHED = (
+    "aggregate",
+    "ring",
+    "decode",
+    "fleet",
+    "batch",
+    "coupled3",
+    "estimator",
+    "scheme",
+    "net",
+)
 
 
 def load(path):
