@@ -27,6 +27,7 @@ use crate::scheduler::{CyclicScheduler, Scheduler, StaircaseScheduler, ToMatrix}
 use crate::scheme::gc::GcEvaluator;
 use crate::scheme::{RoundView, SchemeEvaluator, SchemeId, SchemeRegistry};
 use crate::sim::{chunk_rounds, shard_rngs, slot_arrivals_batch, CompletionEstimate, MonteCarlo};
+use crate::telemetry::{metrics as tm, SpanRecorder, SpanSummary};
 use crate::trace::TraceRecorder;
 use crate::util::rng::Rng;
 use crate::util::stats::{RunningStats, StreamingQuantiles};
@@ -164,6 +165,12 @@ pub struct PolicyOutcome {
     /// FNV fold of every decision — the determinism pin: same seed +
     /// arrival trace ⇒ same digest.
     pub decision_digest: u64,
+    /// Round critical-path spans over simulated time (wait-first /
+    /// completion / apply; decode is empty — the simulator does not
+    /// model master-side decode).  Recorded through a *silent*
+    /// [`SpanRecorder`], so simulated milliseconds never leak into the
+    /// process-global wall-clock histograms.
+    pub spans: SpanSummary,
 }
 
 /// Canonical flush block of a scheme's uncoded base plan.
@@ -267,6 +274,11 @@ pub fn run_policy_rounds(
     let mut stats = RunningStats::new();
     let mut quantiles = StreamingQuantiles::new();
     let mut last_plan: Option<RoundPlan> = None;
+    // simulated-time spans (µs), summary-only — telemetry is inert on
+    // the RNG streams and the completion arithmetic
+    let mut spans = SpanRecorder::silent(n, 1);
+    let sim_us = |ms: f64| (ms.max(0.0) * 1e3).round() as u64;
+    let run_t0 = std::time::Instant::now();
 
     let stride = n * r;
     // fleet-aware chunk cap — identical round sequence for any chunking
@@ -289,12 +301,17 @@ pub fn run_policy_rounds(
             let round = done + b;
             let mut replanned = false;
             if let Some(engine) = engine.as_mut() {
+                let plan_t0 = std::time::Instant::now();
                 let plan = engine.plan(round, &mut rng_sched);
                 if last_plan.as_ref() != Some(&plan) {
                     let to = plan.materialize(base_to.as_ref().expect("adaptive base plan"));
                     evaluator = Box::new(GcEvaluator::with_sizes(&to, &plan.sizes, k));
                     last_plan = Some(plan);
                     replanned = true;
+                }
+                tm::SIM_REPLAN_US.record(plan_t0.elapsed().as_secs_f64() * 1e6);
+                if replanned {
+                    tm::SIM_REPLANS_TOTAL.inc();
                 }
             }
             let view = RoundView {
@@ -307,6 +324,20 @@ pub fn run_policy_rounds(
             } else {
                 evaluator.completion_ingest(&view, ingest_ms, &mut rng_sched)
             };
+            spans.begin(round, 0);
+            let (mut first, mut first_w) = (f64::INFINITY, 0usize);
+            for (slot, &a) in view.arrivals.iter().enumerate() {
+                if a < first {
+                    first = a;
+                    first_w = slot / r;
+                }
+            }
+            if first <= t {
+                spans.frame(round, first_w, sim_us(first));
+            }
+            spans.complete(round, None, sim_us(t));
+            spans.apply(round, sim_us(t));
+            tm::SIM_ROUNDS_TOTAL.inc();
             if engine.is_some() || trace.is_some() {
                 // causal feedback, censored at the round's completion
                 // time.  Censoring uses per-task slot arrivals — a
@@ -354,10 +385,16 @@ pub fn run_policy_rounds(
         PolicyKind::Static => scheme_id.to_string(),
         _ => format!("{scheme_id}+{policy}"),
     };
+    let elapsed = run_t0.elapsed().as_secs_f64();
+    if elapsed > 0.0 {
+        tm::SIM_ROUNDS_PER_SEC.set(rounds as f64 / elapsed);
+    }
+    tm::SIM_EST_MEAN_MS.set(stats.mean());
     Ok(PolicyOutcome {
         estimate: CompletionEstimate::from_streams(label, n, r, k, &stats, &quantiles),
         replans: engine.as_ref().map_or(0, |e| e.replans()),
         decision_digest: engine.as_ref().map_or(0, |e| e.decision_digest()),
+        spans: spans.summary(),
     })
 }
 
@@ -437,6 +474,9 @@ fn run_policy_rounds_async(
     let mut stats = RunningStats::new();
     let mut quantiles = StreamingQuantiles::new();
     let mut last_plan: Option<RoundPlan> = None;
+    let mut spans = SpanRecorder::silent(n, staleness);
+    let sim_us = |ms: f64| (ms.max(0.0) * 1e3).round() as u64;
+    let run_t0 = std::time::Instant::now();
 
     let stride = n * r;
     let cap = chunk_rounds(n, r).min(rounds);
@@ -481,12 +521,17 @@ fn run_policy_rounds_async(
             }
             let mut replanned = false;
             if let Some(engine) = engine.as_mut() {
+                let plan_t0 = std::time::Instant::now();
                 let plan = engine.plan(round, &mut rng_sched);
                 if last_plan.as_ref() != Some(&plan) {
                     let to = plan.materialize(base_to.as_ref().expect("adaptive base plan"));
                     evaluator = Box::new(GcEvaluator::with_sizes(&to, &plan.sizes, k));
                     last_plan = Some(plan);
                     replanned = true;
+                }
+                tm::SIM_REPLAN_US.record(plan_t0.elapsed().as_secs_f64() * 1e6);
+                if replanned {
+                    tm::SIM_REPLANS_TOTAL.inc();
                 }
             }
             // a_t = apply_{t−S}; ring slot t % S still holds it
@@ -537,10 +582,24 @@ fn run_policy_rounds_async(
                     }
                 }
             }
+            spans.begin(round, sim_us(issue));
+            let (mut first, mut first_w) = (f64::INFINITY, 0usize);
+            for (slot, &a) in abs_arrivals.iter().enumerate() {
+                if a < first {
+                    first = a;
+                    first_w = slot / r;
+                }
+            }
+            if first <= c {
+                spans.frame(round, first_w, sim_us(first));
+            }
+            spans.complete(round, None, sim_us(c));
+            tm::SIM_ROUNDS_TOTAL.inc();
             let apply = applied_at.max(c);
             let d = apply - applied_at;
             applied_at = apply;
             apply_ring[slot_ix] = apply;
+            spans.apply(round, sim_us(apply));
             stats.push(d);
             quantiles.push(d);
             if let Some(f) = emit.as_mut() {
@@ -554,10 +613,16 @@ fn run_policy_rounds_async(
         PolicyKind::Static => format!("{scheme_id}@s{staleness}"),
         _ => format!("{scheme_id}+{policy}@s{staleness}"),
     };
+    let elapsed = run_t0.elapsed().as_secs_f64();
+    if elapsed > 0.0 {
+        tm::SIM_ROUNDS_PER_SEC.set(rounds as f64 / elapsed);
+    }
+    tm::SIM_EST_MEAN_MS.set(stats.mean());
     Ok(PolicyOutcome {
         estimate: CompletionEstimate::from_streams(label, n, r, k, &stats, &quantiles),
         replans: engine.as_ref().map_or(0, |e| e.replans()),
         decision_digest: engine.as_ref().map_or(0, |e| e.decision_digest()),
+        spans: spans.summary(),
     })
 }
 

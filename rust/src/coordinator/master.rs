@@ -45,7 +45,12 @@ use crate::linalg::{vec_axpy, Mat};
 use crate::metrics::DelayRecorder;
 use crate::scheduler::Scheduler as _;
 use crate::scheme::{ClusterPlan, CompletionRule, WirePlan};
+use crate::telemetry::{
+    metrics as tm, snapshot_into, MetricsConfig, MetricsLog, MetricsServer, Snapshot,
+    SpanRecorder, SpanSummary,
+};
 use crate::trace::{TraceRecorder, TraceStore};
+use crate::util::poll::PollHook;
 use crate::util::rng::Rng;
 use crate::util::stats::{RunningStats, StreamingQuantiles};
 
@@ -133,6 +138,11 @@ pub struct ClusterConfig {
     /// master-side socket I/O: the poll reactor (default) or the
     /// thread-per-worker blocking path (bit-identity cross-check)
     pub io: IoMode,
+    /// telemetry wiring: Prometheus scrape listener + per-round JSONL
+    /// metrics log ([`crate::telemetry`]).  Off by default; provably
+    /// inert on the data path (`tests/reactor_parity.rs` pins θ
+    /// bit-identical with telemetry on vs off).
+    pub metrics: MetricsConfig,
 }
 
 /// Per-round record.
@@ -241,6 +251,9 @@ pub struct ClusterReport {
     pub decode_cache: Option<DecodeCacheStats>,
     /// per-frame master dwell-time percentiles (ready → processed)
     pub ingest: IngestReport,
+    /// round critical-path phases, per-worker straggler attribution and
+    /// wasted-work ledger ([`crate::telemetry::span`])
+    pub spans: SpanSummary,
 }
 
 impl ClusterReport {
@@ -389,11 +402,34 @@ impl DataPlane {
         timeout_ctx: &'static str,
         scratch: &mut ResultScratch,
         ingest: &mut IngestStats,
+        srv: Option<&mut MetricsServer>,
     ) -> Result<Option<ResultMeta>> {
         match self {
             DataPlane::Threads { rx, .. } => {
-                let (msg, frame_len, ready_us) = rx.recv_timeout(timeout).context(timeout_ctx)?;
-                ingest.push(now_us().saturating_sub(ready_us));
+                // with a scrape listener live, slice the blocking wait
+                // into short chunks and pump the listener between them —
+                // frame order stays the channel's FIFO either way
+                let (msg, frame_len, ready_us) = match srv {
+                    None => rx.recv_timeout(timeout).context(timeout_ctx)?,
+                    Some(srv) => {
+                        let deadline = std::time::Instant::now() + timeout;
+                        loop {
+                            srv.pump(0);
+                            let left =
+                                deadline.saturating_duration_since(std::time::Instant::now());
+                            anyhow::ensure!(!left.is_zero(), "{timeout_ctx}");
+                            match rx.recv_timeout(left.min(Duration::from_millis(50))) {
+                                Ok(v) => break v,
+                                Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                                Err(e) => return Err(e).context(timeout_ctx),
+                            }
+                        }
+                    }
+                };
+                let dwell = now_us().saturating_sub(ready_us);
+                ingest.push(dwell);
+                tm::MASTER_DWELL_US.record(dwell as f64);
+                tm::MASTER_FRAMES_TOTAL.inc();
                 let Msg::Result {
                     round,
                     version,
@@ -421,10 +457,14 @@ impl DataPlane {
                 }))
             }
             DataPlane::Reactor(r) => {
-                let Some((_, frame)) = r.poll_frame(timeout)? else {
+                let hook = srv.map(|s| s as &mut dyn PollHook);
+                let Some((_, frame)) = r.poll_frame_hooked(timeout, hook)? else {
                     bail!("{timeout_ctx}");
                 };
-                ingest.push(now_us().saturating_sub(frame.recv_us));
+                let dwell = now_us().saturating_sub(frame.recv_us);
+                ingest.push(dwell);
+                tm::MASTER_DWELL_US.record(dwell as f64);
+                tm::MASTER_FRAMES_TOTAL.inc();
                 match parse_frame(frame.payload)? {
                     FrameView::Result(res) => {
                         res.read_tasks_into(&mut scratch.tasks);
@@ -488,6 +528,7 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
         listen,
         spawn_workers,
         io,
+        metrics,
     } = cfg;
     let ClusterPlan {
         scheduler,
@@ -706,6 +747,22 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
     // data distributed — hand the sockets to the configured data plane
     let mut plane = DataPlane::new(io, streams)?;
 
+    // ---- telemetry -----------------------------------------------------------
+    // the scrape listener shares the data plane's poll loop (reactor) or
+    // is pumped between chunked channel waits (threads); the JSONL log
+    // gets one registry snapshot per applied round
+    let mut srv = match metrics.addr.as_deref() {
+        Some(addr) => {
+            let s = MetricsServer::bind(addr)?;
+            println!("telemetry: serving /metrics on http://{}", s.addr());
+            Some(s)
+        }
+        None => None,
+    };
+    let mut mlog = metrics.log.as_deref().map(MetricsLog::create).transpose()?;
+    let mut msnap = Snapshot::default();
+    let mut spans = SpanRecorder::new(n, staleness);
+
     // ---- round loop ----------------------------------------------------------
     let mut master = UncodedMaster::new(&dataset, eta, k);
     // coded decode target: Xᵀy = Σ_i X_i y_i, precomputed once (eq. 49)
@@ -825,8 +882,10 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
                     );
                     plane.send_frame(id, buf)?;
                 }
+                let t0_us = now_us();
+                spans.begin(round, t0_us);
                 meta[round % staleness] = Some(InFlight {
-                    t0_us: now_us(),
+                    t0_us,
                     results_seen: 0,
                     messages_seen: 0,
                     wire_bytes: 0,
@@ -834,6 +893,7 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
                 });
                 issued += 1;
             }
+            tm::RING_ROUNDS_IN_FLIGHT.set((issued - ring.base_round()) as f64);
 
             // one frame off the data plane
             let Some(fr) = plane.recv_result(
@@ -841,6 +901,7 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
                 "master timed out waiting for results (pipelined pump)",
                 &mut scratch,
                 &mut ingest,
+                srv.as_mut(),
             )?
             else {
                 continue;
@@ -852,6 +913,7 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
                 || worker_id as usize >= n
                 || rr >= rounds
             {
+                tm::MASTER_FRAMES_MALFORMED_TOTAL.inc();
                 eprintln!(
                     "master: dropping malformed result from worker {worker_id} \
                      ({} tasks, {} h values, d = {d}, round {rr})",
@@ -860,8 +922,10 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
                 );
                 continue;
             }
+            let distinct_before = ring.distinct(rr);
             let in_window = match ring.offer(rr, &scratch.tasks, &scratch.h64) {
                 RingOffer::Future => {
+                    spans.wasted_future();
                     eprintln!(
                         "master: dropping result for unissued round {rr} from \
                          worker {worker_id}"
@@ -869,6 +933,7 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
                     continue;
                 }
                 RingOffer::InFlight(Offer::Malformed) => {
+                    tm::MASTER_FRAMES_MALFORMED_TOTAL.inc();
                     eprintln!(
                         "master: dropping out-of-plan range {:?} from \
                          worker {worker_id}",
@@ -876,13 +941,37 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
                     );
                     continue;
                 }
-                RingOffer::InFlight(_) => true,
+                RingOffer::InFlight(verdict) => {
+                    match verdict {
+                        Offer::Duplicate => spans.wasted_duplicate(scratch.tasks.len() as u64),
+                        Offer::Stranded => spans.wasted_stranded(scratch.tasks.len() as u64),
+                        Offer::Accepted { .. } | Offer::Malformed => {}
+                    }
+                    true
+                }
                 // a straggler's flush from an already-applied round:
                 // useless to θ (the ring dropped it whole), but a real
                 // measurement — it still feeds the recorders, the trace
                 // and the estimator below
-                RingOffer::Stale => false,
+                RingOffer::Stale => {
+                    spans.wasted_stale();
+                    false
+                }
             };
+            spans.frame(rr, worker_id as usize, fr.recv_us);
+            if in_window {
+                // the frame that pushes its round across the k-distinct
+                // target is the critical-path delivery; frames landing
+                // after the crossing (round complete, not yet applied)
+                // are wasted work
+                match (distinct_before, ring.distinct(rr)) {
+                    (Some(b), Some(a)) if b < k && a >= k => {
+                        spans.complete(rr, Some(worker_id as usize), fr.recv_us);
+                    }
+                    (Some(b), _) if b >= k => spans.wasted_post_completion(),
+                    _ => {}
+                }
+            }
             let comp_ms = fr.comp_us as f64 / 1e3;
             let comm_ms = (fr.recv_us.saturating_sub(fr.send_ts_us)) as f64 / 1e3;
             recorders[worker_id as usize].record_comp(comp_ms);
@@ -935,6 +1024,7 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
                     winners.to_vec()
                 };
                 let apply_us = now_us();
+                spans.apply(applied, apply_us);
                 let m = meta[applied % staleness].take().expect("in-flight meta");
                 let loss = if loss_every > 0 && (applied + 1) % loss_every == 0 {
                     Some(dataset.loss(&master.theta))
@@ -955,6 +1045,11 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
                     loss,
                 });
                 ring.advance();
+                tm::RING_ROUNDS_IN_FLIGHT.set((issued - ring.base_round()) as f64);
+                if let Some(ml) = mlog.as_mut() {
+                    snapshot_into(&mut msnap);
+                    ml.append(&msnap, apply_us)?;
+                }
             }
         }
     }
@@ -994,6 +1089,7 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
         theta32.extend(master.theta.iter().map(|&v| v as f32));
         let round_tag = round as u32;
         let t0_us = now_us();
+        spans.begin(round, t0_us);
         for id in 0..n {
             // uncoded: the worker's TO row (identity task↔batch map in
             // cluster mode — no Remark-3 reshuffle, it would force data
@@ -1037,16 +1133,19 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
                 "master timed out waiting for results",
                 &mut scratch,
                 &mut ingest,
+                srv.as_mut(),
             )?
             else {
                 continue;
             };
             let worker_id = fr.worker_id;
             if fr.round != round_tag {
+                spans.wasted_post_completion();
                 continue; // stale result from a stopped round
             }
             // v3 invariant: one aggregated d-length block per message
             if scratch.h64.len() != d || scratch.tasks.is_empty() || worker_id as usize >= n {
+                tm::MASTER_FRAMES_MALFORMED_TOTAL.inc();
                 eprintln!(
                     "master: dropping malformed result from worker {worker_id} \
                      ({} tasks, {} h values, d = {d})",
@@ -1060,6 +1159,7 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
                 (None, Some(agg)) => {
                     match agg.offer(&scratch.tasks, &scratch.h64) {
                         Offer::Malformed => {
+                            tm::MASTER_FRAMES_MALFORMED_TOTAL.inc();
                             eprintln!(
                                 "master: dropping out-of-plan range {:?} \
                                  from worker {worker_id}",
@@ -1071,8 +1171,11 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
                         // as received traffic (results_seen includes
                         // duplicates, as in §II) — they just cannot
                         // reach θ
-                        Offer::Accepted { .. } | Offer::Duplicate | Offer::Stranded => {}
+                        Offer::Accepted { .. } => {}
+                        Offer::Duplicate => spans.wasted_duplicate(scratch.tasks.len() as u64),
+                        Offer::Stranded => spans.wasted_stranded(scratch.tasks.len() as u64),
                     }
+                    tm::AGGREGATOR_TASKS_DISTINCT.set(agg.distinct() as f64);
                     match rule {
                         CompletionRule::DistinctTasks => agg.complete(),
                         CompletionRule::Messages { threshold } => {
@@ -1085,6 +1188,7 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
                         // PC: one flush per worker, keyed by worker
                         Coded::Pc(_) => {
                             if scratch.tasks.len() != r {
+                                tm::MASTER_FRAMES_MALFORMED_TOTAL.inc();
                                 eprintln!(
                                     "master: dropping partial PC flush from \
                                      worker {worker_id}"
@@ -1098,6 +1202,7 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
                         Coded::Pcmm(_) => {
                             let slot = scratch.tasks[0];
                             if scratch.tasks.len() != 1 || slot / r != worker_id as usize {
+                                tm::MASTER_FRAMES_MALFORMED_TOTAL.inc();
                                 eprintln!(
                                     "master: dropping malformed PCMM evaluation \
                                      {:?} from worker {worker_id}",
@@ -1124,6 +1229,7 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
                 }
                 (None, None) => unreachable!("uncoded wire always has an aggregator"),
             };
+            spans.frame(round, worker_id as usize, recv_us);
             messages_seen += 1;
             results_seen += scratch.tasks.len();
             wire_bytes += fr.frame_len;
@@ -1154,6 +1260,7 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
                 e.observe_flush(worker_id as usize, scratch.tasks.len(), comp_ms, comm_ms);
             }
             if complete {
+                spans.complete(round, Some(worker_id as usize), recv_us);
                 completion_ms = (recv_us - t0_us) as f64 / 1e3;
                 break;
             }
@@ -1179,6 +1286,7 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
                 // decode input is key-shaped per construction; the
                 // update and winner bookkeeping are shared
                 let cache = decode_cache.as_mut().expect("coded decode cache");
+                spans.decode_start(round, now_us());
                 let xxt = match c {
                     Coded::Pc(pc) => {
                         pc.decode_cached(&responses[..pc.recovery_threshold()], cache)
@@ -1192,6 +1300,7 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
                         pcmm.decode_cached(&pairs, cache)
                     }
                 };
+                spans.decode_end(round, now_us());
                 coded_update(
                     &mut master.theta,
                     &xxt,
@@ -1202,6 +1311,8 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
                 responses.iter().map(|(key, _)| *key).collect()
             }
         };
+        let apply_us = now_us();
+        spans.apply(round, apply_us);
         let loss = if loss_every > 0 && (round + 1) % loss_every == 0 {
             Some(dataset.loss(&master.theta))
         } else {
@@ -1217,9 +1328,31 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
             replanned,
             loss,
         });
+        if let Some(ml) = mlog.as_mut() {
+            snapshot_into(&mut msnap);
+            ml.append(&msnap, apply_us)?;
+        }
     }
 
     // ---- teardown -----------------------------------------------------------
+    // fold run-scoped caches into the process-global registry, then give
+    // the scrape listener one last service pass and the JSONL log a
+    // final snapshot so end-of-run counters are observable
+    if let Some(st) = decode_cache.as_ref().map(|c| c.stats()) {
+        tm::DECODE_CACHE_HITS_TOTAL.add(st.hits);
+        tm::DECODE_CACHE_MISSES_TOTAL.add(st.misses);
+        tm::DECODE_CACHE_EVICTIONS_TOTAL.add(st.evictions);
+    }
+    if let DataPlane::Threads { pool, .. } = &plane {
+        tm::MASTER_FRAME_POOL_BUFFERS.set(pool.pooled() as f64);
+    }
+    if let Some(s) = srv.as_mut() {
+        s.pump(0);
+    }
+    if let Some(ml) = mlog.as_mut() {
+        snapshot_into(&mut msnap);
+        ml.append(&msnap, now_us())?;
+    }
     plane.shutdown();
     for j in worker_joins {
         match j.join() {
@@ -1242,6 +1375,7 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
         final_loss,
         decode_cache: decode_cache.as_ref().map(|c| c.stats()),
         ingest: ingest.report(),
+        spans: spans.summary(),
     })
 }
 

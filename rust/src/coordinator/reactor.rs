@@ -33,7 +33,8 @@ use anyhow::{bail, Context, Result};
 
 use super::framebuf::{Frame, FrameBuf};
 use super::now_us;
-use crate::util::poll::{poll_fds, PollFd, POLLIN, POLLOUT};
+use crate::telemetry::metrics as tm;
+use crate::util::poll::{poll_fds, PollFd, PollHook, POLLIN, POLLOUT};
 use std::os::unix::io::AsRawFd;
 
 /// Max buffers per vectored write burst.
@@ -152,6 +153,7 @@ impl Reactor {
     fn recycle(&mut self, buf: Vec<u8>) {
         if self.send_pool.len() < MAX_POOLED {
             self.send_pool.push(buf);
+            tm::REACTOR_SEND_POOL_BUFFERS.set(self.send_pool.len() as f64);
         }
     }
 
@@ -185,6 +187,7 @@ impl Reactor {
                     return;
                 }
                 Ok(mut n) => {
+                    tm::REACTOR_WRITEV_BATCHES_TOTAL.inc();
                     while n > 0 {
                         let (buf, off) = c.wq.front_mut().expect("bytes written ⇒ queue nonempty");
                         let rem = buf.len() - *off;
@@ -194,9 +197,11 @@ impl Reactor {
                         }
                         n -= rem;
                         let (rc, _) = c.wq.pop_front().unwrap();
+                        tm::REACTOR_WRITEV_FRAMES_TOTAL.inc();
                         if let Ok(owned) = Rc::try_unwrap(rc) {
                             if pool.len() < MAX_POOLED {
                                 pool.push(owned);
+                                tm::REACTOR_SEND_POOL_BUFFERS.set(pool.len() as f64);
                             }
                         }
                     }
@@ -239,6 +244,18 @@ impl Reactor {
     /// every connection is closed with nothing left buffered, or on a
     /// corrupt frame stream.
     pub fn poll_frame(&mut self, timeout: Duration) -> Result<Option<(usize, Frame<'_>)>> {
+        self.poll_frame_hooked(timeout, None)
+    }
+
+    /// [`Reactor::poll_frame`] with an optional [`PollHook`] riding the
+    /// same kernel poll set — the telemetry scrape listener's fds join
+    /// each `poll(2)` call after the worker sockets and are serviced
+    /// after them, so frame delivery order (and thus θ) is untouched.
+    pub fn poll_frame_hooked(
+        &mut self,
+        timeout: Duration,
+        mut hook: Option<&mut dyn PollHook>,
+    ) -> Result<Option<(usize, Frame<'_>)>> {
         let deadline = Instant::now() + timeout;
         loop {
             // 1. fairness scan over already-buffered frames
@@ -257,6 +274,7 @@ impl Reactor {
             }
             if let Some(i) = found {
                 self.scan = (i + 1) % n;
+                tm::REACTOR_PUMP_FRAMES_TOTAL.inc();
                 let frame = self.conns[i].rbuf.next_frame()?.expect("peeked above");
                 return Ok(Some((i, frame)));
             }
@@ -282,9 +300,15 @@ impl Reactor {
             if self.pollfds.is_empty() {
                 bail!("all worker connections closed");
             }
+            // hook fds ride behind the worker sockets in the same set
+            let base = self.pollfds.len();
+            if let Some(h) = hook.as_deref_mut() {
+                h.register(&mut self.pollfds);
+            }
             let wait_ms = ((deadline - now).as_millis().min(i32::MAX as u128) as i32).max(1);
+            tm::REACTOR_PUMP_POLLS_TOTAL.inc();
             poll_fds(&mut self.pollfds, wait_ms).context("poll on worker sockets")?;
-            for p in 0..self.pollfds.len() {
+            for p in 0..base {
                 let pfd = self.pollfds[p];
                 let i = self.poll_map[p];
                 if pfd.writable() {
@@ -296,6 +320,9 @@ impl Reactor {
                 if pfd.readable() || pfd.failed() {
                     Self::fill_conn(&mut self.conns[i]);
                 }
+            }
+            if let Some(h) = hook.as_deref_mut() {
+                h.service(&self.pollfds[base..]);
             }
         }
     }

@@ -38,6 +38,7 @@ use super::protocol::Msg;
 use super::{now_us, TaskDelaySampler};
 use crate::linalg::Mat;
 use crate::runtime::Runtime;
+use crate::telemetry::metrics as tm;
 
 /// Which engine computes `h(X) = X Xᵀ θ` on the worker.
 pub enum Backend {
@@ -307,6 +308,8 @@ pub fn run_worker(addr: std::net::SocketAddr, mut opts: WorkerOptions) -> Result
                         now_us(),
                         &buf_sum,
                     );
+                    tm::WORKER_COMPUTE_US_TOTAL.add(buf_comp_us);
+                    tm::WORKER_FRAMES_SENT_TOTAL.inc();
                     buf_tasks.clear();
                     buf_sum.clear();
                     buf_comp_us = 0;
@@ -320,10 +323,12 @@ pub fn run_worker(addr: std::net::SocketAddr, mut opts: WorkerOptions) -> Result
                             if inj_comm_ms > 0.0 {
                                 spin_sleep(Duration::from_secs_f64(inj_comm_ms / 1e3));
                             }
+                            let send_t0 = now_us();
                             let mut w = writer.lock().expect("writer poisoned");
                             let _ = w.write_all(&frame);
                             let _ = w.flush();
                             drop(w);
+                            tm::WORKER_FLUSH_SEND_US_TOTAL.add(now_us() - send_t0);
                             pool.lock().expect("pool poisoned").put(frame);
                             inflight2.fetch_sub(1, Ordering::SeqCst);
                         })?;

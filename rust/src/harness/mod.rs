@@ -26,6 +26,7 @@ use crate::report::Table;
 use crate::scheduler::SchemeId;
 use crate::scheme::SchemeRegistry;
 use crate::sim::CompletionEstimate;
+use crate::telemetry::MetricsConfig;
 
 /// Common harness options.
 #[derive(Debug, Clone)]
@@ -198,6 +199,7 @@ fn fig5_cluster_spotcheck(opts: &Options) -> Result<Table> {
                 listen: None,
                 spawn_workers: true,
                 io: IoMode::default(),
+                metrics: MetricsConfig::default(),
             })?;
             row.push(Table::fmt(report.mean_completion_ms()));
         }
@@ -361,6 +363,7 @@ fn fig8_cluster_spotcheck(opts: &Options) -> Result<Table> {
             listen: None,
             spawn_workers: true,
             io: IoMode::default(),
+            metrics: MetricsConfig::default(),
         })?;
         let rounds_f = report.rounds.len().max(1) as f64;
         let msgs: usize = report.rounds.iter().map(|l| l.messages_seen).sum();
@@ -492,6 +495,7 @@ pub fn fig3(opts: &Options) -> Result<(Table, Table)> {
         listen: None,
         spawn_workers: true,
         io: IoMode::default(),
+        metrics: MetricsConfig::default(),
     })?;
 
     let mut summary = Table::new(
@@ -627,6 +631,9 @@ pub struct E2eConfig {
     /// thread-per-worker blocking receivers (kept as a bit-identity
     /// cross-check — see [`IoMode`])
     pub io: IoMode,
+    /// live telemetry export: Prometheus scrape address and/or JSONL
+    /// snapshot log (default: disabled — see [`MetricsConfig`])
+    pub metrics: MetricsConfig,
 }
 
 impl Default for E2eConfig {
@@ -649,6 +656,7 @@ impl Default for E2eConfig {
             listen: None,
             spawn_workers: true,
             io: IoMode::default(),
+            metrics: MetricsConfig::default(),
         }
     }
 }
@@ -678,6 +686,7 @@ pub fn run_e2e(cfg: E2eConfig, opts: &Options) -> Result<(ClusterReport, Table)>
         listen: cfg.listen.clone(),
         spawn_workers: cfg.spawn_workers,
         io: cfg.io,
+        metrics: cfg.metrics.clone(),
     })?;
     let mut curve = Table::new(
         &format!(
@@ -707,6 +716,11 @@ pub fn run_e2e(cfg: E2eConfig, opts: &Options) -> Result<(ClusterReport, Table)>
         }
     }
     opts.write(&curve, "e2e_loss_curve")?;
+    opts.write(&report.spans.phase_table(), "e2e_round_phases")?;
+    opts.write(
+        &report.spans.attribution_table(),
+        "e2e_straggler_attribution",
+    )?;
     Ok((report, curve))
 }
 

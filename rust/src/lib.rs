@@ -50,6 +50,10 @@
 //!   the simulator, per-worker model fitting with KS diagnostics, and
 //!   bit-reproducible offline replay of the scheme × policy matrix
 //!   against measured delays — the calibrated digital twin of a fleet;
+//! * [`telemetry`] — the observability spine: a zero-steady-state-
+//!   allocation metrics registry, per-round critical-path spans with
+//!   straggler attribution and wasted-work accounting, and a
+//!   Prometheus/JSONL exporter served from the reactor's poll loop;
 //! * [`harness`] / [`report`] / [`metrics`] — experiment sweeps that
 //!   regenerate every table and figure of the paper's evaluation.
 //!
@@ -75,6 +79,7 @@ pub mod runtime;
 pub mod scheduler;
 pub mod scheme;
 pub mod sim;
+pub mod telemetry;
 pub mod trace;
 pub mod util;
 

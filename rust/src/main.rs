@@ -18,10 +18,13 @@
 //!                 [--policy static|order|order@p95|load|load-rate|alloc-group|alloc-random]
 //!                 [--staleness S]               # pipelined master (uncoded)
 //!                 [--io reactor|threads]        # master data plane
+//!                 [--metrics-addr 127.0.0.1:9464]  # live Prometheus /metrics
+//!                 [--metrics-log m.jsonl]       # per-round snapshot log
 //!                 [--rounds 300] [--k 8] [--no-pjrt] [--record t.jsonl]
 //! straggler trace record --out-trace t.jsonl [--cluster]  # record → fit → replay
 //! straggler trace fit    --trace t.jsonl        # per-worker fits + KS + tiers
 //! straggler trace replay --trace t.jsonl        # scheme × policy matrix + digest
+//! straggler trace report --trace t.jsonl [--k K]  # span/attribution tables
 //! straggler adaptive [--trials N]               # shifting-straggler table
 //! straggler all   [--trials N]                  # every figure + table
 //! ```
@@ -41,6 +44,7 @@ use straggler_sched::delay::{
 use straggler_sched::harness::{self, EvalPoint, Options};
 use straggler_sched::report::Table;
 use straggler_sched::scheme::{SchemeId, SchemeRegistry};
+use straggler_sched::telemetry::{spans_from_trace, MetricsConfig};
 use straggler_sched::trace::{
     fit_traces, replay, ReplayConfig, ReplaySource, TraceRecorder, TraceStore,
 };
@@ -215,6 +219,7 @@ fn run_trace(args: &Args, opts: &Options) -> Result<()> {
                     listen: None,
                     spawn_workers: true,
                     io: straggler_sched::coordinator::IoMode::default(),
+                    metrics: MetricsConfig::default(),
                 };
                 let quiet = Options {
                     out_dir: None,
@@ -340,10 +345,36 @@ fn run_trace(args: &Args, opts: &Options) -> Result<()> {
             let store = TraceStore::load(std::path::Path::new(&path))?;
             run_trace_replay(args, opts, &store, &path)?;
         }
+        "report" => {
+            // offline attribution: reconstruct per-round critical-path
+            // spans from a recorded trace — who delivered the k-th
+            // distinct result, which phase dominated, what was wasted
+            let path = args
+                .str_opt("trace")
+                .ok_or_else(|| anyhow::anyhow!("`trace report` needs --trace FILE"))?;
+            let store = TraceStore::load(std::path::Path::new(&path))?;
+            let k = args.usize_or("k", store.n_workers())?;
+            let spans = spans_from_trace(&store, k)?;
+            println!(
+                "trace report: {} events over {} reconstructed rounds from {path} (k = {k})",
+                store.len(),
+                spans.rounds
+            );
+            let phases = spans.phase_table();
+            phases.print();
+            let attribution = spans.attribution_table();
+            attribution.print();
+            if spans.wasted.total_frames() > 0 {
+                spans.wasted_table().print();
+            }
+            opts.write(&phases, "trace_report_phases")?;
+            opts.write(&attribution, "trace_report_attribution")?;
+        }
         other => bail!(
-            "unknown trace action {other:?} — spell it `straggler trace record|fit|replay` \
+            "unknown trace action {other:?} — spell it \
+             `straggler trace record|fit|replay|report` \
              (record: --out-trace FILE [--cluster] [--scheme S] [--rounds N]; \
-             fit/replay: --trace FILE)"
+             fit/replay/report: --trace FILE)"
         ),
     }
     Ok(())
@@ -792,6 +823,10 @@ fn run() -> Result<()> {
                 listen: args.str_opt("listen"),
                 spawn_workers: !args.flag("external"),
                 io: straggler_sched::coordinator::IoMode::parse(&args.str_or("io", "reactor"))?,
+                metrics: MetricsConfig {
+                    addr: args.str_opt("metrics-addr"),
+                    log: args.str_opt("metrics-log"),
+                },
             };
             let io = cfg.io;
             let (report, curve) = harness::run_e2e(cfg, &opts)?;
@@ -822,6 +857,13 @@ fn run() -> Result<()> {
                     stats.misses,
                     stats.evictions
                 );
+            }
+            if report.spans.rounds > 0 {
+                report.spans.phase_table().print();
+                report.spans.attribution_table().print();
+                if report.spans.wasted.total_frames() > 0 {
+                    report.spans.wasted_table().print();
+                }
             }
             if let Some(rec_path) = args.str_opt("record") {
                 // the master's per-Result-frame trace (real socket
@@ -928,7 +970,16 @@ subcommands:
                     --io reactor|threads picks the master data plane:
                     the poll-driven zero-copy reactor (default) or the
                     legacy thread-per-worker receivers (bit-identical
-                    cross-check path)
+                    cross-check path); --metrics-addr HOST:PORT serves
+                    live Prometheus text on /metrics from the master's
+                    own poll loop (no extra thread; telemetry is inert —
+                    θ is bit-identical with it on or off) and
+                    --metrics-log FILE appends one registry snapshot
+                    per round as JSONL; after the run the master prints
+                    per-round phase spans (wait-first / collect /
+                    decode / apply), straggler attribution (who
+                    delivered the k-th distinct result) and a
+                    wasted-work table
   trace             the record → fit → replay loop (digital-twin
                     calibration, EXPERIMENTS.md §Traces):
                     trace record --out-trace FILE [--cluster]
@@ -944,7 +995,13 @@ subcommands:
                       runs the scheme × policy matrix on the traced
                       fleet (--replay empirical|tg|exp|corr, --schemes,
                       --policies, --trials, --ingest) and prints the
-                      pinned-seed completion digest
+                      pinned-seed completion digest;
+                    trace report --trace FILE [--k K]
+                      offline observability: reconstructs per-round
+                      critical-path spans from the recorded arrivals
+                      (completion = K-th distinct task, default K = n)
+                      and prints phase, straggler-attribution and
+                      wasted-work tables
   worker            external worker process: --connect HOST:PORT
                     [--oracle] [--inject ec2 --n N --id I]
   all               regenerate every table and figure

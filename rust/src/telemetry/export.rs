@@ -1,0 +1,433 @@
+//! Telemetry exporters: the Prometheus text-format encoder, the JSONL
+//! metrics log, and the minimal HTTP/1.1 scrape listener that rides the
+//! master's existing `poll(2)` loop as a [`PollHook`] — no extra
+//! threads on the reactor plane, no dependencies.
+//!
+//! The encoder writes into a caller-owned `String` (warm capacity →
+//! allocation-free re-encode), emitting counters and gauges verbatim
+//! and histograms in the Prometheus `summary` convention
+//! (`name{quantile="0.5"} v` … plus `name_sum`/`name_count`).  The
+//! scrape server answers `GET /metrics` with
+//! `Content-Type: text/plain; version=0.0.4` and closes the connection
+//! per response — exactly what a Prometheus scraper or a plain `curl`
+//! expects — and degrades politely on junk input (400/404/405, bounded
+//! request buffer).
+
+use std::fmt::Write as _;
+use std::fs::File;
+use std::io::{self, BufWriter, ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::metrics as tm;
+use super::registry::Snapshot;
+use crate::util::json::Json;
+use crate::util::poll::{poll_fds, PollFd, PollHook, POLLIN, POLLOUT};
+
+/// Largest request we are willing to buffer before answering 400 —
+/// a real scrape's request line + headers is a few hundred bytes.
+const MAX_REQUEST_BYTES: usize = 8 * 1024;
+
+/// Encode `snap` into the Prometheus text exposition format (v0.0.4).
+/// Appends nothing but the metric families themselves; the caller owns
+/// (and typically reuses) `out`, which is cleared first.
+pub fn encode_prometheus_into(out: &mut String, snap: &Snapshot) {
+    out.clear();
+    for &(name, help, v) in &snap.counters {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} counter");
+        let _ = writeln!(out, "{name} {v}");
+    }
+    for &(name, help, v) in &snap.gauges {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} gauge");
+        let _ = writeln!(out, "{name} {v}");
+    }
+    for &(name, help, h) in &snap.hists {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} summary");
+        let _ = writeln!(out, "{name}{{quantile=\"0.5\"}} {}", h.p50);
+        let _ = writeln!(out, "{name}{{quantile=\"0.9\"}} {}", h.p90);
+        let _ = writeln!(out, "{name}{{quantile=\"0.99\"}} {}", h.p99);
+        let _ = writeln!(out, "{name}_sum {}", h.mean * h.count as f64);
+        let _ = writeln!(out, "{name}_count {}", h.count);
+    }
+}
+
+/// Append-only JSONL metrics log: one compact-JSON snapshot per line,
+/// flushed per append so a killed run still leaves every completed
+/// round's record on disk.
+pub struct MetricsLog {
+    w: BufWriter<File>,
+}
+
+impl MetricsLog {
+    pub fn create(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let f = File::create(path)
+            .with_context(|| format!("creating metrics log {}", path.display()))?;
+        Ok(Self {
+            w: BufWriter::new(f),
+        })
+    }
+
+    /// Write one `{ts_us, counters, gauges, histograms}` line.
+    pub fn append(&mut self, snap: &Snapshot, ts_us: u64) -> Result<()> {
+        let line = Json::obj(vec![
+            ("ts_us", Json::Num(ts_us as f64)),
+            (
+                "counters",
+                Json::Obj(
+                    snap.counters
+                        .iter()
+                        .map(|&(name, _, v)| (name.to_string(), Json::Num(v as f64)))
+                        .collect(),
+                ),
+            ),
+            (
+                "gauges",
+                Json::Obj(
+                    snap.gauges
+                        .iter()
+                        .map(|&(name, _, v)| (name.to_string(), Json::Num(v)))
+                        .collect(),
+                ),
+            ),
+            (
+                "histograms",
+                Json::Obj(
+                    snap.hists
+                        .iter()
+                        .map(|&(name, _, h)| {
+                            (
+                                name.to_string(),
+                                Json::obj(vec![
+                                    ("count", Json::Num(h.count as f64)),
+                                    ("mean", Json::Num(h.mean)),
+                                    ("p50", Json::Num(h.p50)),
+                                    ("p90", Json::Num(h.p90)),
+                                    ("p99", Json::Num(h.p99)),
+                                    ("max", Json::Num(h.max)),
+                                ]),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
+        ]);
+        writeln!(self.w, "{}", line.to_string_compact()).context("writing metrics log line")?;
+        self.w.flush().context("flushing metrics log")
+    }
+}
+
+/// One in-flight scrape connection.
+struct ScrapeConn {
+    stream: TcpStream,
+    req: Vec<u8>,
+    resp: Vec<u8>,
+    sent: usize,
+    /// Request fully read (or rejected) — now draining `resp`.
+    responding: bool,
+}
+
+/// The scrape listener: a non-blocking `TcpListener` plus its in-flight
+/// connections, pumped either by the reactor's poll loop (via
+/// [`PollHook`]) or by [`MetricsServer::pump`] on the threads plane.
+/// Every poll iteration does bounded, non-blocking work only.
+pub struct MetricsServer {
+    listener: TcpListener,
+    addr: SocketAddr,
+    conns: Vec<ScrapeConn>,
+    snap: Snapshot,
+    body: String,
+    /// Scratch poll set for the standalone `pump` path.
+    fds: Vec<PollFd>,
+}
+
+impl MetricsServer {
+    pub fn bind(addr: &str) -> Result<Self> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding metrics listener on {addr}"))?;
+        listener
+            .set_nonblocking(true)
+            .context("metrics listener nonblocking")?;
+        let addr = listener.local_addr().context("metrics listener addr")?;
+        Ok(Self {
+            listener,
+            addr,
+            conns: Vec::new(),
+            snap: Snapshot::default(),
+            body: String::new(),
+            fds: Vec::new(),
+        })
+    }
+
+    /// The bound address (resolves `:0` requests to the real port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Drive accept/read/write readiness once without an external poll
+    /// loop — the threads-plane pump, also handy in tests.  Bounded
+    /// non-blocking work; `timeout_ms` caps the poll wait.
+    pub fn pump(&mut self, timeout_ms: i32) {
+        let mut fds = std::mem::take(&mut self.fds);
+        fds.clear();
+        self.register(&mut fds);
+        if poll_fds(&mut fds, timeout_ms).is_ok() {
+            self.service(&fds);
+        }
+        self.fds = fds;
+    }
+
+    fn accept_new(&mut self) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    self.conns.push(ScrapeConn {
+                        stream,
+                        req: Vec::new(),
+                        resp: Vec::new(),
+                        sent: 0,
+                        responding: false,
+                    });
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+                Err(_) => return,
+            }
+        }
+    }
+
+    /// Refresh the cached snapshot + body and build `conn`'s response.
+    fn respond(conn: &mut ScrapeConn, snap: &mut Snapshot, body: &mut String) {
+        let (status, ok) = match parse_request(&conn.req) {
+            RequestVerdict::Metrics => ("200 OK", true),
+            RequestVerdict::NotFound => ("404 Not Found", false),
+            RequestVerdict::BadMethod => ("405 Method Not Allowed", false),
+            RequestVerdict::Malformed => ("400 Bad Request", false),
+        };
+        if ok {
+            tm::TELEMETRY_SCRAPES_TOTAL.inc();
+            super::snapshot_into(snap);
+            encode_prometheus_into(body, snap);
+        } else {
+            tm::TELEMETRY_SCRAPE_ERRORS_TOTAL.inc();
+            body.clear();
+            body.push_str(status);
+            body.push('\n');
+        }
+        let ctype = if ok {
+            "text/plain; version=0.0.4"
+        } else {
+            "text/plain"
+        };
+        conn.resp.clear();
+        let _ = write!(
+            conn.resp,
+            "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+            body.len()
+        );
+        conn.resp.extend_from_slice(body.as_bytes());
+        conn.sent = 0;
+        conn.responding = true;
+    }
+
+    /// Non-blocking read step; returns `false` when the connection
+    /// should be dropped.
+    fn read_step(conn: &mut ScrapeConn, snap: &mut Snapshot, body: &mut String) -> bool {
+        let mut buf = [0u8; 1024];
+        loop {
+            match conn.stream.read(&mut buf) {
+                Ok(0) => {
+                    // peer closed before completing a request
+                    return false;
+                }
+                Ok(k) => {
+                    conn.req.extend_from_slice(&buf[..k]);
+                    if request_complete(&conn.req) || conn.req.len() > MAX_REQUEST_BYTES {
+                        Self::respond(conn, snap, body);
+                        return true;
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return true,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => return false,
+            }
+        }
+    }
+
+    /// Non-blocking write step; returns `false` once drained or failed.
+    fn write_step(conn: &mut ScrapeConn) -> bool {
+        loop {
+            if conn.sent >= conn.resp.len() {
+                let _ = conn.stream.flush();
+                return false; // response fully sent → close
+            }
+            match conn.stream.write(&conn.resp[conn.sent..]) {
+                Ok(0) => return false,
+                Ok(k) => conn.sent += k,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return true,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => return false,
+            }
+        }
+    }
+}
+
+impl PollHook for MetricsServer {
+    fn register(&mut self, fds: &mut Vec<PollFd>) {
+        fds.push(PollFd::new(self.listener.as_raw_fd(), POLLIN));
+        for c in &self.conns {
+            let ev = if c.responding { POLLOUT } else { POLLIN };
+            fds.push(PollFd::new(c.stream.as_raw_fd(), ev));
+        }
+    }
+
+    fn service(&mut self, fds: &[PollFd]) {
+        if fds.is_empty() {
+            return;
+        }
+        if fds[0].readable() || fds[0].failed() {
+            self.accept_new();
+        }
+        // conn fds follow the listener in registration order; conns
+        // accepted *this* iteration have no fd entry yet and are
+        // simply picked up next round
+        let mut snap = std::mem::take(&mut self.snap);
+        let mut body = std::mem::take(&mut self.body);
+        let n_polled = fds.len() - 1;
+        let mut i = 0usize;
+        self.conns.retain_mut(|c| {
+            let idx = i;
+            i += 1;
+            if idx >= n_polled {
+                return true; // not in this poll set yet
+            }
+            let fd = &fds[idx + 1];
+            if fd.failed() {
+                return false;
+            }
+            if !c.responding && fd.readable() && !Self::read_step(c, &mut snap, &mut body) {
+                return false;
+            }
+            if c.responding && (fd.writable() || fd.readable()) {
+                return Self::write_step(c);
+            }
+            true
+        });
+        self.snap = snap;
+        self.body = body;
+    }
+}
+
+enum RequestVerdict {
+    Metrics,
+    NotFound,
+    BadMethod,
+    Malformed,
+}
+
+fn request_complete(req: &[u8]) -> bool {
+    req.windows(4).any(|w| w == b"\r\n\r\n") || req.windows(2).any(|w| w == b"\n\n")
+}
+
+/// Classify the request line: `GET /metrics` (or `GET /`) is a scrape;
+/// anything else is answered with the matching error status.
+fn parse_request(req: &[u8]) -> RequestVerdict {
+    let Ok(text) = std::str::from_utf8(req) else {
+        return RequestVerdict::Malformed;
+    };
+    let Some(line) = text.lines().next() else {
+        return RequestVerdict::Malformed;
+    };
+    let mut parts = line.split_whitespace();
+    let (Some(method), Some(path), Some(version)) = (parts.next(), parts.next(), parts.next())
+    else {
+        return RequestVerdict::Malformed;
+    };
+    if !version.starts_with("HTTP/1.") {
+        return RequestVerdict::Malformed;
+    }
+    if method != "GET" {
+        return RequestVerdict::BadMethod;
+    }
+    match path {
+        "/metrics" | "/" => RequestVerdict::Metrics,
+        _ => RequestVerdict::NotFound,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::registry::HistSnapshot;
+
+    fn sample_snapshot() -> Snapshot {
+        Snapshot {
+            counters: vec![("t_frames_total", "frames seen", 42)],
+            gauges: vec![("t_in_flight", "rounds in flight", 2.0)],
+            hists: vec![(
+                "t_dwell_us",
+                "dwell",
+                HistSnapshot {
+                    count: 10,
+                    mean: 5.0,
+                    p50: 4.0,
+                    p90: 9.0,
+                    p99: 9.9,
+                    max: 10.0,
+                },
+            )],
+        }
+    }
+
+    #[test]
+    fn prometheus_encoding_is_exact() {
+        let mut out = String::new();
+        encode_prometheus_into(&mut out, &sample_snapshot());
+        let expect = "\
+# HELP t_frames_total frames seen
+# TYPE t_frames_total counter
+t_frames_total 42
+# HELP t_in_flight rounds in flight
+# TYPE t_in_flight gauge
+t_in_flight 2
+# HELP t_dwell_us dwell
+# TYPE t_dwell_us summary
+t_dwell_us{quantile=\"0.5\"} 4
+t_dwell_us{quantile=\"0.9\"} 9
+t_dwell_us{quantile=\"0.99\"} 9.9
+t_dwell_us_sum 50
+t_dwell_us_count 10
+";
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn request_parser_classifies() {
+        assert!(matches!(
+            parse_request(b"GET /metrics HTTP/1.1\r\n\r\n"),
+            RequestVerdict::Metrics
+        ));
+        assert!(matches!(
+            parse_request(b"GET / HTTP/1.0\r\n\r\n"),
+            RequestVerdict::Metrics
+        ));
+        assert!(matches!(
+            parse_request(b"GET /nope HTTP/1.1\r\n\r\n"),
+            RequestVerdict::NotFound
+        ));
+        assert!(matches!(
+            parse_request(b"POST /metrics HTTP/1.1\r\n\r\n"),
+            RequestVerdict::BadMethod
+        ));
+        assert!(matches!(parse_request(b"\xff\xfe"), RequestVerdict::Malformed));
+        assert!(matches!(parse_request(b"GARBAGE"), RequestVerdict::Malformed));
+    }
+}

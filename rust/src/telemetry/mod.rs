@@ -1,0 +1,321 @@
+//! Telemetry subsystem: the observability spine of the cluster and the
+//! measured counterpart of the paper's §IV completion-time analysis.
+//!
+//! Three pillars, all dependency-free:
+//!
+//! * [`registry`] — static [`Counter`]/[`Gauge`]/[`Histogram`] handles
+//!   with atomic hot-path increments and a coherent [`snapshot_into`];
+//!   **zero steady-state allocation** (pinned by `tests/telemetry.rs`
+//!   and the `telemetry/*` bench group with the PR-8
+//!   counting-allocator technique);
+//! * [`span`] — [`RoundSpan`] lifecycle recording on both data planes
+//!   and in the simulator: per-round critical-path breakdown
+//!   (wait-first / collect / decode / apply), per-worker straggler
+//!   attribution (who delivered the k-th distinct task), and
+//!   wasted-work accounting — all RNG- and θ-inert, pinned bitwise by
+//!   `tests/reactor_parity.rs`;
+//! * [`export`] — Prometheus text-format encoder, JSONL metrics log,
+//!   and the [`MetricsServer`] scrape listener that joins the
+//!   reactor's `poll(2)` set as a [`crate::util::poll::PollHook`]
+//!   (threads plane: pumped between channel waits) — wired up via
+//!   `train --metrics-addr ADDR --metrics-log PATH`.
+//!
+//! The metric catalog below is the single source of truth: every
+//! metric is a `static` in [`metrics`], enumerated by [`catalog`], so
+//! the registry needs no runtime registration and a snapshot is one
+//! ordered pass.  Names follow Prometheus conventions
+//! (`straggler_<subsystem>_<what>_<unit|total>`); EXPERIMENTS.md
+//! §Observability documents each series and the scrape workflow.
+
+pub mod export;
+pub mod registry;
+pub mod span;
+
+pub use export::{encode_prometheus_into, MetricsLog, MetricsServer};
+pub use registry::{Counter, Gauge, HistSnapshot, Histogram, Snapshot};
+pub use span::{
+    spans_from_trace, PhaseSummary, RoundSpan, SpanRecorder, SpanSummary, WastedWork,
+    WorkerAttribution,
+};
+
+/// Telemetry wiring of one cluster run — both `None` means fully off
+/// (the default; the data path is bitwise identical either way).
+#[derive(Debug, Clone, Default)]
+pub struct MetricsConfig {
+    /// `host:port` to serve Prometheus text-format scrapes on
+    /// (`127.0.0.1:0` picks a free port, printed at startup).
+    pub addr: Option<String>,
+    /// Path of a JSONL metrics log appended once per applied round.
+    pub log: Option<String>,
+}
+
+impl MetricsConfig {
+    pub fn enabled(&self) -> bool {
+        self.addr.is_some() || self.log.is_some()
+    }
+}
+
+/// The static metric catalog.  Counters end in `_total` (or
+/// `_<unit>_total` for monotonic time sums), gauges are instantaneous,
+/// histograms export the `summary` quantiles.
+pub mod metrics {
+    use super::registry::{Counter, Gauge, Histogram};
+
+    // ── master / aggregation ─────────────────────────────────────────
+    pub static MASTER_ROUNDS_TOTAL: Counter = Counter::new(
+        "straggler_master_rounds_total",
+        "Rounds whose aggregate was applied to the model",
+    );
+    pub static MASTER_FRAMES_TOTAL: Counter = Counter::new(
+        "straggler_master_frames_total",
+        "Result frames ingested by the master data plane",
+    );
+    pub static MASTER_FRAMES_MALFORMED_TOTAL: Counter = Counter::new(
+        "straggler_master_frames_malformed_total",
+        "Result frames rejected as malformed by the aggregator",
+    );
+    pub static MASTER_FRAMES_POST_COMPLETION_TOTAL: Counter = Counter::new(
+        "straggler_master_frames_post_completion_total",
+        "Frames that arrived after their round had already completed (wasted work)",
+    );
+    pub static MASTER_TASKS_DUPLICATE_TOTAL: Counter = Counter::new(
+        "straggler_master_tasks_duplicate_total",
+        "Tasks dropped as duplicates of already-aggregated work",
+    );
+    pub static MASTER_TASKS_STRANDED_TOTAL: Counter = Counter::new(
+        "straggler_master_tasks_stranded_total",
+        "Tasks outside the round plan (stranded ranges)",
+    );
+    pub static RING_FRAMES_STALE_TOTAL: Counter = Counter::new(
+        "straggler_ring_frames_stale_total",
+        "Frames rejected by the bounded-staleness ring as older than the apply window",
+    );
+    pub static RING_FRAMES_FUTURE_TOTAL: Counter = Counter::new(
+        "straggler_ring_frames_future_total",
+        "Frames tagged with a round not yet issued",
+    );
+    pub static AGGREGATOR_TASKS_DISTINCT: Gauge = Gauge::new(
+        "straggler_aggregator_tasks_distinct",
+        "Distinct tasks buffered for the currently collecting round",
+    );
+    pub static RING_ROUNDS_IN_FLIGHT: Gauge = Gauge::new(
+        "straggler_ring_rounds_in_flight",
+        "Issued-but-unapplied rounds in the bounded-staleness pipeline",
+    );
+    pub static MASTER_FRAME_POOL_BUFFERS: Gauge = Gauge::new(
+        "straggler_master_frame_pool_buffers",
+        "Recycled frame buffers parked in the threads-plane frame pool",
+    );
+    pub static MASTER_DWELL_US: Histogram = Histogram::new(
+        "straggler_master_dwell_us",
+        "Socket-readiness to aggregation-loop dwell per frame (µs)",
+    );
+
+    // ── round critical path (span phases) ────────────────────────────
+    pub static ROUND_COMPLETION_MS: Histogram = Histogram::new(
+        "straggler_round_completion_ms",
+        "Assign-issued to k-th distinct arrival per round (ms)",
+    );
+    pub static ROUND_WAIT_FIRST_MS: Histogram = Histogram::new(
+        "straggler_round_wait_first_ms",
+        "Assign-issued to first Result frame per round (ms)",
+    );
+    pub static ROUND_COLLECT_MS: Histogram = Histogram::new(
+        "straggler_round_collect_ms",
+        "First frame to k-th distinct arrival per round (ms)",
+    );
+    pub static ROUND_DECODE_MS: Histogram = Histogram::new(
+        "straggler_round_decode_ms",
+        "Master-side decode time per coded round (ms)",
+    );
+    pub static ROUND_APPLY_MS: Histogram = Histogram::new(
+        "straggler_round_apply_ms",
+        "k-th distinct arrival to theta applied per round (ms)",
+    );
+
+    // ── reactor data plane ───────────────────────────────────────────
+    pub static REACTOR_PUMP_POLLS_TOTAL: Counter = Counter::new(
+        "straggler_reactor_pump_polls_total",
+        "poll(2) wakeups of the reactor pump loop",
+    );
+    pub static REACTOR_PUMP_FRAMES_TOTAL: Counter = Counter::new(
+        "straggler_reactor_pump_frames_total",
+        "Complete frames yielded by the reactor pump",
+    );
+    pub static REACTOR_WRITEV_BATCHES_TOTAL: Counter = Counter::new(
+        "straggler_reactor_writev_batches_total",
+        "Vectored send batches flushed by the reactor",
+    );
+    pub static REACTOR_WRITEV_FRAMES_TOTAL: Counter = Counter::new(
+        "straggler_reactor_writev_frames_total",
+        "Send buffers covered by those vectored batches",
+    );
+    pub static REACTOR_SEND_POOL_BUFFERS: Gauge = Gauge::new(
+        "straggler_reactor_send_pool_buffers",
+        "Recycled send buffers parked in the reactor send pool",
+    );
+
+    // ── worker ───────────────────────────────────────────────────────
+    pub static WORKER_FRAMES_SENT_TOTAL: Counter = Counter::new(
+        "straggler_worker_frames_sent_total",
+        "Result frames encoded and handed to delivery by in-process workers",
+    );
+    pub static WORKER_COMPUTE_US_TOTAL: Counter = Counter::new(
+        "straggler_worker_compute_us_total",
+        "Worker gradient-compute time, summed across flushes (µs)",
+    );
+    pub static WORKER_FLUSH_SEND_US_TOTAL: Counter = Counter::new(
+        "straggler_worker_flush_send_us_total",
+        "Worker socket write+flush time, summed across deliveries (µs)",
+    );
+
+    // ── coded path ───────────────────────────────────────────────────
+    pub static DECODE_CACHE_HITS_TOTAL: Counter = Counter::new(
+        "straggler_decode_cache_hits_total",
+        "Decode-weight cache hits on the coded master path",
+    );
+    pub static DECODE_CACHE_MISSES_TOTAL: Counter = Counter::new(
+        "straggler_decode_cache_misses_total",
+        "Decode-weight cache misses (full Lagrange rebuilds)",
+    );
+    pub static DECODE_CACHE_EVICTIONS_TOTAL: Counter = Counter::new(
+        "straggler_decode_cache_evictions_total",
+        "Decode-weight cache evictions",
+    );
+
+    // ── simulator / adaptive ─────────────────────────────────────────
+    pub static SIM_ROUNDS_TOTAL: Counter = Counter::new(
+        "straggler_sim_rounds_total",
+        "Simulated DGD rounds executed by the policy engine loops",
+    );
+    pub static SIM_REPLANS_TOTAL: Counter = Counter::new(
+        "straggler_sim_replans_total",
+        "Rounds whose adaptive policy changed the assignment plan",
+    );
+    pub static SIM_ROUNDS_PER_SEC: Gauge = Gauge::new(
+        "straggler_sim_rounds_per_sec",
+        "Simulated rounds per wall-clock second, last completed run",
+    );
+    pub static SIM_EST_MEAN_MS: Gauge = Gauge::new(
+        "straggler_sim_est_mean_ms",
+        "Mean simulated round completion of the last run (ms)",
+    );
+    pub static SIM_REPLAN_US: Histogram = Histogram::new(
+        "straggler_sim_replan_us",
+        "Wall-clock cost of one policy plan + plan materialization (µs)",
+    );
+
+    // ── telemetry self-accounting ────────────────────────────────────
+    pub static TELEMETRY_SCRAPES_TOTAL: Counter = Counter::new(
+        "straggler_telemetry_scrapes_total",
+        "Successful /metrics scrapes served",
+    );
+    pub static TELEMETRY_SCRAPE_ERRORS_TOTAL: Counter = Counter::new(
+        "straggler_telemetry_scrape_errors_total",
+        "Scrape requests answered with an error status",
+    );
+}
+
+/// One catalog entry.
+#[derive(Clone, Copy)]
+pub enum Metric {
+    Counter(&'static Counter),
+    Gauge(&'static Gauge),
+    Histogram(&'static Histogram),
+}
+
+/// Every metric the process exports, in exposition order.
+pub fn catalog() -> &'static [Metric] {
+    use metrics as m;
+    static CATALOG: &[Metric] = &[
+        Metric::Counter(&m::MASTER_ROUNDS_TOTAL),
+        Metric::Counter(&m::MASTER_FRAMES_TOTAL),
+        Metric::Counter(&m::MASTER_FRAMES_MALFORMED_TOTAL),
+        Metric::Counter(&m::MASTER_FRAMES_POST_COMPLETION_TOTAL),
+        Metric::Counter(&m::MASTER_TASKS_DUPLICATE_TOTAL),
+        Metric::Counter(&m::MASTER_TASKS_STRANDED_TOTAL),
+        Metric::Counter(&m::RING_FRAMES_STALE_TOTAL),
+        Metric::Counter(&m::RING_FRAMES_FUTURE_TOTAL),
+        Metric::Counter(&m::REACTOR_PUMP_POLLS_TOTAL),
+        Metric::Counter(&m::REACTOR_PUMP_FRAMES_TOTAL),
+        Metric::Counter(&m::REACTOR_WRITEV_BATCHES_TOTAL),
+        Metric::Counter(&m::REACTOR_WRITEV_FRAMES_TOTAL),
+        Metric::Counter(&m::WORKER_FRAMES_SENT_TOTAL),
+        Metric::Counter(&m::WORKER_COMPUTE_US_TOTAL),
+        Metric::Counter(&m::WORKER_FLUSH_SEND_US_TOTAL),
+        Metric::Counter(&m::DECODE_CACHE_HITS_TOTAL),
+        Metric::Counter(&m::DECODE_CACHE_MISSES_TOTAL),
+        Metric::Counter(&m::DECODE_CACHE_EVICTIONS_TOTAL),
+        Metric::Counter(&m::SIM_ROUNDS_TOTAL),
+        Metric::Counter(&m::SIM_REPLANS_TOTAL),
+        Metric::Counter(&m::TELEMETRY_SCRAPES_TOTAL),
+        Metric::Counter(&m::TELEMETRY_SCRAPE_ERRORS_TOTAL),
+        Metric::Gauge(&m::AGGREGATOR_TASKS_DISTINCT),
+        Metric::Gauge(&m::RING_ROUNDS_IN_FLIGHT),
+        Metric::Gauge(&m::MASTER_FRAME_POOL_BUFFERS),
+        Metric::Gauge(&m::REACTOR_SEND_POOL_BUFFERS),
+        Metric::Gauge(&m::SIM_ROUNDS_PER_SEC),
+        Metric::Gauge(&m::SIM_EST_MEAN_MS),
+        Metric::Histogram(&m::MASTER_DWELL_US),
+        Metric::Histogram(&m::ROUND_COMPLETION_MS),
+        Metric::Histogram(&m::ROUND_WAIT_FIRST_MS),
+        Metric::Histogram(&m::ROUND_COLLECT_MS),
+        Metric::Histogram(&m::ROUND_DECODE_MS),
+        Metric::Histogram(&m::ROUND_APPLY_MS),
+        Metric::Histogram(&m::SIM_REPLAN_US),
+    ];
+    CATALOG
+}
+
+/// One coherent pass over the catalog into a reused [`Snapshot`] —
+/// allocation-free once the snapshot's vectors (and every histogram's
+/// scratch) are warm, because the catalog size is fixed.
+pub fn snapshot_into(snap: &mut Snapshot) {
+    snap.counters.clear();
+    snap.gauges.clear();
+    snap.hists.clear();
+    for m in catalog() {
+        match m {
+            Metric::Counter(c) => snap.counters.push((c.name(), c.help(), c.get())),
+            Metric::Gauge(g) => snap.gauges.push((g.name(), g.help(), g.get())),
+            Metric::Histogram(h) => snap.hists.push((h.name(), h.help(), h.snapshot())),
+        }
+    }
+}
+
+/// Convenience allocating snapshot (tests, one-shot dumps).
+pub fn snapshot() -> Snapshot {
+    let mut s = Snapshot::default();
+    snapshot_into(&mut s);
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_names_are_unique_and_prefixed() {
+        let names: Vec<&str> = catalog()
+            .iter()
+            .map(|m| match m {
+                Metric::Counter(c) => c.name(),
+                Metric::Gauge(g) => g.name(),
+                Metric::Histogram(h) => h.name(),
+            })
+            .collect();
+        for (i, a) in names.iter().enumerate() {
+            assert!(a.starts_with("straggler_"), "{a} lacks the namespace prefix");
+            assert!(!names[i + 1..].contains(a), "duplicate metric name {a}");
+        }
+    }
+
+    #[test]
+    fn snapshot_covers_the_catalog() {
+        let s = snapshot();
+        assert_eq!(
+            s.counters.len() + s.gauges.len() + s.hists.len(),
+            catalog().len()
+        );
+    }
+}

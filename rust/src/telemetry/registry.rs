@@ -1,0 +1,251 @@
+//! Dependency-free metrics registry: monotonic [`Counter`]s, [`Gauge`]s
+//! and [`Histogram`]s declared as `static` handles, incremented on hot
+//! paths with relaxed atomics, and read out through a coherent
+//! [`Snapshot`].
+//!
+//! The hard contract (pinned by `tests/telemetry.rs` and the
+//! `telemetry/*` bench group with the PR-8 counting-allocator
+//! technique) is **zero steady-state allocation**: once a histogram's
+//! lazily-built state exists and its quantile estimator has degraded to
+//! the fixed grid, `Counter::inc`, `Gauge::set`, `Histogram::record`,
+//! and [`snapshot_into`] + the Prometheus encoder perform no heap
+//! allocation at all.  Warm-up (the first `record` on a histogram, the
+//! exact-mode sample buffer, the first `snapshot_into` growing the
+//! reused vectors) is the only place the allocator is touched.
+//!
+//! Registry state is **process-global and cumulative** — Prometheus
+//! counter semantics.  Everything a single run needs per-run-accurate
+//! (round spans, attribution) lives in [`crate::telemetry::SpanRecorder`]
+//! instead, which is plain local state.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::stats::{RunningStats, StreamingQuantiles};
+
+/// Monotonic counter.  `inc`/`add` are single relaxed atomic RMWs —
+/// safe to call from any thread, free of heap traffic.
+pub struct Counter {
+    name: &'static str,
+    help: &'static str,
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub const fn new(name: &'static str, help: &'static str) -> Self {
+        Self {
+            name,
+            help,
+            v: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.v.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, delta: u64) {
+        self.v.fetch_add(delta, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    pub fn help(&self) -> &'static str {
+        self.help
+    }
+}
+
+/// Last-write-wins instantaneous value, stored as `f64::to_bits` in an
+/// atomic so `set` is one relaxed store.
+pub struct Gauge {
+    name: &'static str,
+    help: &'static str,
+    bits: AtomicU64,
+}
+
+impl Gauge {
+    pub const fn new(name: &'static str, help: &'static str) -> Self {
+        Self {
+            name,
+            help,
+            bits: AtomicU64::new(0), // 0u64 == 0.0f64.to_bits()
+        }
+    }
+
+    #[inline]
+    pub fn set(&self, x: f64) {
+        self.bits.store(x.to_bits(), Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    pub fn help(&self) -> &'static str {
+        self.help
+    }
+}
+
+/// Heap-side histogram state, built on the first `record` (the one
+/// warm-up allocation) and reused forever after: the streaming quantile
+/// estimator, the moment accumulator, and the scratch vectors the
+/// alloc-free snapshot path needs.
+struct HistState {
+    q: StreamingQuantiles,
+    s: RunningStats,
+    out: Vec<f64>,
+    scratch: Vec<f64>,
+}
+
+impl HistState {
+    fn new() -> Self {
+        Self {
+            q: StreamingQuantiles::new(),
+            s: RunningStats::new(),
+            out: Vec::new(),
+            scratch: Vec::new(),
+        }
+    }
+}
+
+/// Quantile levels every histogram exposes (Prometheus `summary`
+/// convention plus the p90 the ingest report already prints).
+pub const HIST_QUANTILES: [f64; 3] = [0.5, 0.9, 0.99];
+
+/// Streaming histogram: `record` takes an uncontended mutex and pushes
+/// one sample into [`StreamingQuantiles`] + [`RunningStats`].  Exact
+/// mode buffers the first samples (growing a Vec — warm-up); past
+/// `EXACT_CAP` the estimator degrades to a fixed grid and `record` is
+/// allocation-free.
+pub struct Histogram {
+    name: &'static str,
+    help: &'static str,
+    state: Mutex<Option<HistState>>,
+}
+
+impl Histogram {
+    pub const fn new(name: &'static str, help: &'static str) -> Self {
+        Self {
+            name,
+            help,
+            state: Mutex::new(None),
+        }
+    }
+
+    #[inline]
+    pub fn record(&self, x: f64) {
+        if !x.is_finite() {
+            return;
+        }
+        let mut g = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        let st = g.get_or_insert_with(HistState::new);
+        st.q.push(x);
+        st.s.push(x);
+    }
+
+    /// Coherent point-in-time read-out.  Allocation-free once the
+    /// state's `out`/`scratch` vectors are warm (first call, or exact
+    /// mode's copy-and-sort before grid degrade, grows them).
+    pub fn snapshot(&self) -> HistSnapshot {
+        let mut g = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        let Some(st) = g.as_mut() else {
+            return HistSnapshot::default();
+        };
+        if st.q.count() == 0 {
+            return HistSnapshot::default();
+        }
+        st.q.quantiles_with(&HIST_QUANTILES, &mut st.out, &mut st.scratch);
+        HistSnapshot {
+            count: st.s.count(),
+            mean: st.s.mean(),
+            p50: st.out[0],
+            p90: st.out[1],
+            p99: st.out[2],
+            max: st.s.max(),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    pub fn help(&self) -> &'static str {
+        self.help
+    }
+}
+
+/// One histogram's exported summary.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct HistSnapshot {
+    pub count: u64,
+    pub mean: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+/// A coherent one-pass read-out of the whole catalog.  Reuse one
+/// `Snapshot` across scrapes: `snapshot_into` clears and refills the
+/// vectors in place, so at a fixed catalog size the refill is
+/// allocation-free after the first call.
+#[derive(Debug, Clone, Default)]
+pub struct Snapshot {
+    pub counters: Vec<(&'static str, &'static str, u64)>,
+    pub gauges: Vec<(&'static str, &'static str, f64)>,
+    pub hists: Vec<(&'static str, &'static str, HistSnapshot)>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_counts() {
+        static C: Counter = Counter::new("t_total", "test");
+        assert_eq!(C.get(), 0);
+        C.inc();
+        C.add(4);
+        assert_eq!(C.get(), 5);
+        assert_eq!(C.name(), "t_total");
+    }
+
+    #[test]
+    fn gauge_stores_last_write() {
+        static G: Gauge = Gauge::new("t_g", "test");
+        assert_eq!(G.get(), 0.0);
+        G.set(2.5);
+        G.set(-1.25);
+        assert_eq!(G.get(), -1.25);
+    }
+
+    #[test]
+    fn histogram_snapshot_tracks_samples() {
+        static H: Histogram = Histogram::new("t_h", "test");
+        assert_eq!(H.snapshot(), HistSnapshot::default());
+        for i in 1..=100 {
+            H.record(i as f64);
+        }
+        H.record(f64::NAN); // ignored
+        let s = H.snapshot();
+        assert_eq!(s.count, 100);
+        assert!((s.mean - 50.5).abs() < 1e-9);
+        assert!((s.p50 - 50.0).abs() <= 1.0);
+        assert!(s.p99 >= 98.0 && s.p99 <= 100.0);
+        assert_eq!(s.max, 100.0);
+    }
+}

@@ -62,6 +62,25 @@ impl PollFd {
     }
 }
 
+/// An auxiliary fd owner that wants to ride an existing `poll(2)` loop
+/// — the mechanism by which the telemetry scrape listener joins the
+/// reactor's poll set without a thread of its own.
+///
+/// Per poll iteration the loop calls [`PollHook::register`] to let the
+/// hook append its fds (listener + in-flight connections) to the set,
+/// then after `poll_fds` returns hands exactly that appended sub-slice
+/// — same order, `revents` filled — to [`PollHook::service`].  The hook
+/// must tolerate spurious wakeups (service with no ready fds) and must
+/// never block: all its sockets are non-blocking and it does bounded
+/// work per call, so the owning loop's latency is unaffected.
+pub trait PollHook {
+    /// Append this hook's fds (with their requested `events`) to `fds`.
+    fn register(&mut self, fds: &mut Vec<PollFd>);
+    /// Handle readiness on the fds appended by the matching
+    /// `register` call; `fds` is that same sub-slice, `revents` filled.
+    fn service(&mut self, fds: &[PollFd]);
+}
+
 // `nfds_t` is `unsigned long` on Linux and `unsigned int` on the BSDs
 // (incl. macOS) — the only layout difference in the whole API.
 #[cfg(any(target_os = "macos", target_os = "freebsd", target_os = "openbsd"))]

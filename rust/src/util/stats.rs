@@ -336,6 +336,28 @@ impl StreamingQuantiles {
         }
     }
 
+    /// Allocation-reusing variant of [`StreamingQuantiles::quantiles`]
+    /// for the telemetry snapshot path: results land in `out` (cleared
+    /// first) and exact mode sorts into the caller's `scratch` instead
+    /// of a fresh clone.  Once both vectors have warmed to capacity —
+    /// and always in grid mode — the call is allocation-free, which is
+    /// what lets [`crate::telemetry`] promise a zero-steady-state-
+    /// allocation `snapshot`.  Values are bit-identical to
+    /// [`StreamingQuantiles::quantiles`].
+    pub fn quantiles_with(&self, levels: &[f64], out: &mut Vec<f64>, scratch: &mut Vec<f64>) {
+        out.clear();
+        match &self.mode {
+            QuantileMode::Exact(buf) => {
+                assert!(self.count > 0, "quantile of empty estimator");
+                scratch.clear();
+                scratch.extend_from_slice(buf);
+                scratch.sort_unstable_by(f64::total_cmp);
+                out.extend(levels.iter().map(|&q| quantile_sorted(scratch, q)));
+            }
+            QuantileMode::Grid { .. } => out.extend(levels.iter().map(|&q| self.quantile(q))),
+        }
+    }
+
     /// Merge another estimator (per-shard reduction).  Deterministic
     /// for a fixed merge order; the engine folds shards in index order.
     pub fn merge(&mut self, other: &StreamingQuantiles) {
@@ -629,6 +651,25 @@ mod tests {
         e.merge(&a);
         assert_eq!(e.count(), 2);
         assert_eq!(e.quantile(0.5), before);
+    }
+
+    #[test]
+    fn quantiles_with_matches_quantiles_in_both_modes() {
+        let mut out = Vec::new();
+        let mut scratch = Vec::new();
+        let levels = [0.5, 0.9, 0.99];
+        // exact mode
+        let mut sq = StreamingQuantiles::new();
+        (0..1000).for_each(|i| sq.push(((i * 7919) % 1000) as f64));
+        assert!(sq.is_exact());
+        sq.quantiles_with(&levels, &mut out, &mut scratch);
+        assert_eq!(out, sq.quantiles(&levels));
+        // grid mode
+        let mut sq = StreamingQuantiles::new();
+        (0..20_000).for_each(|i| sq.push(((i * 31) % 997) as f64));
+        assert!(!sq.is_exact());
+        sq.quantiles_with(&levels, &mut out, &mut scratch);
+        assert_eq!(out, sq.quantiles(&levels));
     }
 
     #[test]

@@ -40,6 +40,7 @@ fn config(
         listen: None,
         spawn_workers: true,
         io: IoMode::default(),
+        metrics: Default::default(),
     }
 }
 

@@ -33,6 +33,7 @@ fn base_config(scheme: SchemeId, n: usize, r: usize, k: usize, rounds: usize) ->
         listen: None,
         spawn_workers: true,
         io: IoMode::default(),
+        metrics: Default::default(),
     }
 }
 

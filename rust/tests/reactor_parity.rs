@@ -27,6 +27,7 @@ use straggler_sched::coordinator::{
 use straggler_sched::data::Dataset;
 use straggler_sched::linalg::{vec_axpy, Mat};
 use straggler_sched::scheme::{SchemeId, SchemeRegistry};
+use straggler_sched::telemetry::MetricsConfig;
 
 /// One decoded `Assign`, queued per logical worker by the fleet driver.
 struct Assign {
@@ -220,6 +221,7 @@ fn run_mode(
     r: usize,
     k: usize,
     staleness: usize,
+    metrics: MetricsConfig,
 ) -> ClusterReport {
     let rounds = 10usize;
     // learn a free port, release it, and hand it to the master — the
@@ -252,6 +254,7 @@ fn run_mode(
         listen: Some(addr),
         spawn_workers: false,
         io,
+        metrics,
     })
     .unwrap_or_else(|e| panic!("{io} master run: {e:#}"));
     fleet.join().expect("scripted fleet panicked");
@@ -287,8 +290,24 @@ fn assert_logs_identical(scheme: SchemeId, a: &[RoundLog], b: &[RoundLog]) {
 }
 
 fn assert_parity(scheme: SchemeId, n: usize, r: usize, k: usize, staleness: usize) {
-    let threads = run_mode(IoMode::Threads, scheme, n, r, k, staleness);
-    let reactor = run_mode(IoMode::Reactor, scheme, n, r, k, staleness);
+    let threads = run_mode(
+        IoMode::Threads,
+        scheme,
+        n,
+        r,
+        k,
+        staleness,
+        MetricsConfig::default(),
+    );
+    let reactor = run_mode(
+        IoMode::Reactor,
+        scheme,
+        n,
+        r,
+        k,
+        staleness,
+        MetricsConfig::default(),
+    );
     assert_eq!(
         threads.final_theta.len(),
         reactor.final_theta.len(),
@@ -345,4 +364,74 @@ fn pc_sync_is_bit_identical_across_io_modes() {
     // coded wire: one full-row flush per worker, Messages-rule stop at
     // the recovery threshold, master-side Lagrange decode
     assert_parity(SchemeId::Pc, 4, 2, 4, 1);
+}
+
+/// Telemetry must be *inert*: the same scripted fleet with the metrics
+/// exporter fully armed (live `/metrics` listener on an ephemeral port
+/// plus the per-round JSONL snapshot log) must produce bit-identical
+/// θ / loss / round logs versus a plain run.  The exporter consumes no
+/// RNG and never reorders frames, so any divergence here is a bug in
+/// the instrumentation, not noise.
+fn assert_telemetry_inert(io: IoMode, scheme: SchemeId, staleness: usize) {
+    let (n, r, k) = (4usize, 2usize, 4usize);
+    let plain = run_mode(io, scheme, n, r, k, staleness, MetricsConfig::default());
+    let log_path = std::env::temp_dir().join(format!(
+        "straggler_inert_{}_{io}_s{staleness}.jsonl",
+        std::process::id()
+    ));
+    let armed = MetricsConfig {
+        addr: Some("127.0.0.1:0".into()),
+        log: Some(log_path.display().to_string()),
+    };
+    let telemetry = run_mode(io, scheme, n, r, k, staleness, armed);
+    for (i, (a, b)) in plain
+        .final_theta
+        .iter()
+        .zip(&telemetry.final_theta)
+        .enumerate()
+    {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "{scheme} {io} (S = {staleness}): telemetry perturbed θ[{i}]: {a} vs {b}"
+        );
+    }
+    assert_eq!(
+        plain.final_loss.to_bits(),
+        telemetry.final_loss.to_bits(),
+        "{scheme} {io}: telemetry perturbed the final loss"
+    );
+    assert_logs_identical(scheme, &plain.rounds, &telemetry.rounds);
+    assert_eq!(
+        plain.ingest.frames, telemetry.ingest.frames,
+        "{scheme} {io}: telemetry changed the ingest frame count"
+    );
+    // the armed run really exported: one snapshot per round (plus the
+    // final teardown snapshot), each line carrying the core series
+    let log = std::fs::read_to_string(&log_path).expect("metrics log was not written");
+    assert!(
+        log.lines().count() > plain.rounds.len(),
+        "expected at least one JSONL snapshot per round, got {} lines",
+        log.lines().count()
+    );
+    assert!(
+        log.contains("straggler_master_frames_total"),
+        "snapshot lines must carry the registry series"
+    );
+    let _ = std::fs::remove_file(&log_path);
+}
+
+#[test]
+fn telemetry_is_inert_on_threads_plane() {
+    assert_telemetry_inert(IoMode::Threads, SchemeId::Cs, 1);
+}
+
+#[test]
+fn telemetry_is_inert_on_reactor_plane() {
+    assert_telemetry_inert(IoMode::Reactor, SchemeId::Cs, 1);
+}
+
+#[test]
+fn telemetry_is_inert_on_pipelined_reactor() {
+    assert_telemetry_inert(IoMode::Reactor, SchemeId::Cs, 2);
 }

@@ -41,6 +41,7 @@ WATCHED = (
     "estimator",
     "scheme",
     "net",
+    "telemetry",
 )
 
 
