@@ -1014,6 +1014,7 @@ fn main() {
                     2,
                     base * (1.8 + 0.4 * rng.f64()),
                     5.5 * (0.8 + 0.4 * rng.f64()),
+                    0.25,
                     2088,
                     false,
                     round as u32,

@@ -26,8 +26,14 @@
 //!   the two per-round hot frames, byte-identical to
 //!   `Msg::encode` + prefix (pinned by tests below).
 //!
-//! Protocol v4 wire bytes are unchanged — this is purely a different
-//! way of producing and consuming the same frames.
+//! Protocol v5 wire bytes match `Msg::encode` exactly — this is
+//! purely a different way of producing and consuming the same frames.
+//! The one genuinely new trick is [`patch_result_send_ts`]: the
+//! worker's delivery thread back-patches the `send_ts_us` field of an
+//! already-encoded `Result` frame in place, so the send stamp is taken
+//! at the moment the frame actually heads for the socket rather than
+//! at encode time (which is what the separate `enqueue_us` field now
+//! records).
 
 use std::collections::VecDeque;
 use std::io::{self, Read};
@@ -177,6 +183,11 @@ pub struct ResultRef<'a> {
     pub version: u32,
     pub worker_id: u32,
     pub comp_us: u64,
+    /// v5 latency anatomy: worker-clock stamps (first task start,
+    /// compute end, flush encode) — see `Msg::Result` in protocol.rs.
+    pub comp_start_us: u64,
+    pub comp_end_us: u64,
+    pub enqueue_us: u64,
     pub send_ts_us: u64,
     tasks: &'a [u8],
     h: &'a [u8],
@@ -233,6 +244,9 @@ pub fn parse_frame(payload: &[u8]) -> Result<FrameView<'_>> {
     let tasks_len = u32_at(payload, &mut pos)? as usize;
     let tasks = take(payload, &mut pos, tasks_len.saturating_mul(4))?;
     let comp_us = u64_at(payload, &mut pos)?;
+    let comp_start_us = u64_at(payload, &mut pos)?;
+    let comp_end_us = u64_at(payload, &mut pos)?;
+    let enqueue_us = u64_at(payload, &mut pos)?;
     let send_ts_us = u64_at(payload, &mut pos)?;
     let h_len = u32_at(payload, &mut pos)? as usize;
     let h = take(payload, &mut pos, h_len.saturating_mul(4))?;
@@ -244,6 +258,9 @@ pub fn parse_frame(payload: &[u8]) -> Result<FrameView<'_>> {
         version,
         worker_id,
         comp_us,
+        comp_start_us,
+        comp_end_us,
+        enqueue_us,
         send_ts_us,
         tasks,
         h,
@@ -307,6 +324,7 @@ impl FramePool {
 /// f64 running sum to the wire's f32 in place — byte-identical to
 /// `Msg::Result{..}.encode()` behind a prefix, with zero intermediate
 /// allocation.
+#[allow(clippy::too_many_arguments)]
 pub fn encode_result_into(
     out: &mut Vec<u8>,
     round: u32,
@@ -314,10 +332,13 @@ pub fn encode_result_into(
     worker_id: u32,
     tasks: &[u32],
     comp_us: u64,
+    comp_start_us: u64,
+    comp_end_us: u64,
+    enqueue_us: u64,
     send_ts_us: u64,
     h_sum: &[f64],
 ) {
-    let payload_len = 1 + 3 * 4 + (4 + 4 * tasks.len()) + 2 * 8 + (4 + 4 * h_sum.len());
+    let payload_len = 1 + 3 * 4 + (4 + 4 * tasks.len()) + 5 * 8 + (4 + 4 * h_sum.len());
     out.reserve(4 + payload_len);
     put_u32(out, payload_len as u32);
     out.push(Msg::TAG_RESULT);
@@ -329,6 +350,9 @@ pub fn encode_result_into(
         put_u32(out, t);
     }
     put_u64(out, comp_us);
+    put_u64(out, comp_start_us);
+    put_u64(out, comp_end_us);
+    put_u64(out, enqueue_us);
     put_u64(out, send_ts_us);
     put_u32(out, h_sum.len() as u32);
     for &v in h_sum {
@@ -336,10 +360,29 @@ pub fn encode_result_into(
     }
 }
 
+/// Byte offset of `send_ts_us` inside a framed `Result`:
+/// `len(4) tag(1) round(4) version(4) worker(4) tasks_len(4)
+/// tasks(4·n) comp(8) comp_start(8) comp_end(8) enqueue(8)` → 53+4n.
+fn result_send_ts_offset(frame: &[u8]) -> usize {
+    debug_assert!(frame.len() >= 21 && frame[4] == Msg::TAG_RESULT);
+    let n = u32::from_le_bytes(frame[17..21].try_into().unwrap()) as usize;
+    53 + 4 * n
+}
+
+/// Back-patch `send_ts_us` in an already-encoded framed `Result` —
+/// the delivery thread stamps the frame at the instant it picks it up
+/// for the socket, *before* any injected wire delay, so
+/// `recv_us - send_ts_us` measures the full network phase.
+pub fn patch_result_send_ts(frame: &mut [u8], send_ts_us: u64) {
+    let at = result_send_ts_offset(frame);
+    frame[at..at + 8].copy_from_slice(&send_ts_us.to_le_bytes());
+}
+
 /// Append a framed `Assign` to `out`.  Cluster mode always uses the
 /// identity task↔batch map (no Remark-3 reshuffle), so the task list is
 /// written twice — once as `tasks`, once as `batches` — exactly as the
 /// master's `Msg::Assign { batches: tasks.clone(), .. }` did.
+#[allow(clippy::too_many_arguments)]
 pub fn encode_assign_into(
     out: &mut Vec<u8>,
     round: u32,
@@ -347,9 +390,10 @@ pub fn encode_assign_into(
     theta: &[f32],
     tasks: &[u32],
     group: u32,
+    issue_us: u64,
     align: bool,
 ) {
-    let payload_len = 1 + 2 * 4 + (4 + 4 * theta.len()) + 2 * (4 + 4 * tasks.len()) + 4 + 1;
+    let payload_len = 1 + 2 * 4 + (4 + 4 * theta.len()) + 2 * (4 + 4 * tasks.len()) + 4 + 8 + 1;
     out.reserve(4 + payload_len);
     put_u32(out, payload_len as u32);
     out.push(Msg::TAG_ASSIGN);
@@ -366,6 +410,7 @@ pub fn encode_assign_into(
         }
     }
     put_u32(out, group);
+    put_u64(out, issue_us);
     // align stays the FINAL Assign field (see protocol.rs)
     out.push(u8::from(align));
 }
@@ -399,6 +444,9 @@ mod tests {
             worker_id: 2,
             tasks: vec![3, 4, 9],
             comp_us: 1234,
+            comp_start_us: 990_000,
+            comp_end_us: 991_234,
+            enqueue_us: 995_000,
             send_ts_us: 999_999,
             h: vec![1.0, -2.5, f32::MAX],
         }
@@ -414,11 +462,44 @@ mod tests {
             2,
             &[3, 4, 9],
             1234,
+            990_000,
+            991_234,
+            995_000,
             999_999,
             // f64 inputs that round-trip exactly through f32
             &[1.0, -2.5, f32::MAX as f64],
         );
         assert_eq!(out, framed(&sample_result()));
+    }
+
+    #[test]
+    fn patch_result_send_ts_rewrites_only_the_send_stamp() {
+        let mut out = Vec::new();
+        encode_result_into(
+            &mut out,
+            13,
+            11,
+            2,
+            &[3, 4, 9],
+            1234,
+            990_000,
+            991_234,
+            995_000,
+            0, // placeholder the delivery thread overwrites
+            &[1.0, -2.5, f32::MAX as f64],
+        );
+        patch_result_send_ts(&mut out, 999_999);
+        assert_eq!(out, framed(&sample_result()));
+        // idempotent re-patch, and the empty-tasks offset path
+        patch_result_send_ts(&mut out, 999_999);
+        assert_eq!(out, framed(&sample_result()));
+        let mut empty = Vec::new();
+        encode_result_into(&mut empty, 1, 1, 0, &[], 5, 6, 7, 8, 0, &[]);
+        patch_result_send_ts(&mut empty, 77);
+        match parse_frame(&empty[4..]).unwrap() {
+            FrameView::Result(r) => assert_eq!(r.send_ts_us, 77),
+            FrameView::Other(_) => panic!("Result frame must take the zero-copy path"),
+        }
     }
 
     #[test]
@@ -433,10 +514,11 @@ mod tests {
                 tasks: tasks.clone(),
                 batches: tasks.clone(),
                 group: 2,
+                issue_us: 4_242_000,
                 align,
             };
             let mut out = Vec::new();
-            encode_assign_into(&mut out, 12, 10, &theta, &tasks, 2, align);
+            encode_assign_into(&mut out, 12, 10, &theta, &tasks, 2, 4_242_000, align);
             assert_eq!(out, framed(&msg), "align = {align}");
         }
     }
@@ -465,6 +547,10 @@ mod tests {
             FrameView::Result(r) => {
                 assert_eq!((r.round, r.version, r.worker_id), (13, 11, 2));
                 assert_eq!((r.comp_us, r.send_ts_us), (1234, 999_999));
+                assert_eq!(
+                    (r.comp_start_us, r.comp_end_us, r.enqueue_us),
+                    (990_000, 991_234, 995_000)
+                );
                 assert_eq!((r.tasks_len(), r.h_len()), (3, 3));
                 let mut tasks = vec![99usize]; // read_*_into must clear
                 r.read_tasks_into(&mut tasks);
@@ -533,6 +619,9 @@ mod tests {
                 worker_id: 0,
                 tasks: vec![1],
                 comp_us: 5,
+                comp_start_us: 1,
+                comp_end_us: 6,
+                enqueue_us: 6,
                 send_ts_us: 6,
                 h: vec![0.25; 32],
             },

@@ -23,9 +23,11 @@
 //! rounds.  Protocol stays v3 — assignment was always per-round; only
 //! the plan's source changes.
 
+use std::cell::RefCell;
 use std::collections::{HashMap, HashSet};
 use std::io::Write as _;
 use std::net::{TcpListener, TcpStream};
+use std::rc::Rc;
 use std::sync::mpsc;
 use std::time::Duration;
 
@@ -45,12 +47,14 @@ use crate::linalg::{vec_axpy, Mat};
 use crate::metrics::DelayRecorder;
 use crate::scheduler::Scheduler as _;
 use crate::scheme::{ClusterPlan, CompletionRule, WirePlan};
+use crate::telemetry::flight::Phase;
 use crate::telemetry::{
-    metrics as tm, snapshot_into, MetricsConfig, MetricsLog, MetricsServer, Snapshot,
-    SpanRecorder, SpanSummary,
+    metrics as tm, snapshot_into, AnomalyDetector, ClockSync, FlightRecorder, MetricsConfig,
+    MetricsLog, MetricsServer, Snapshot, SpanRecorder, SpanSummary,
 };
 use crate::trace::{TraceRecorder, TraceStore};
 use crate::util::poll::PollHook;
+use crate::util::signal;
 use crate::util::rng::Rng;
 use crate::util::stats::{RunningStats, StreamingQuantiles};
 
@@ -289,12 +293,22 @@ struct ResultMeta {
     version: u32,
     worker_id: u32,
     comp_us: u64,
+    /// worker-clock stamp: first task of the flush began computing —
+    /// the `t1` of the NTP-style exchange (`comp_end_us` also rides
+    /// the wire but the phase decomposition derives compute from
+    /// `comp_us`, so it is not carried past the parse)
+    comp_start_us: u64,
+    /// worker-clock stamp: flush handed to the delivery path
+    enqueue_us: u64,
+    /// worker-clock stamp: delivery thread started writing the frame
     send_ts_us: u64,
     /// wire size (length prefix + payload)
     frame_len: usize,
     /// µs the frame became ready at the master — arrival of its last
     /// byte (reactor) or the channel hand-off (threads)
     recv_us: u64,
+    /// µs the frame waited between ready and the loop processing it
+    dwell_us: u64,
 }
 
 /// The master's socket I/O behind one interface, so both round loops
@@ -436,8 +450,11 @@ impl DataPlane {
                     worker_id,
                     tasks,
                     comp_us,
+                    comp_start_us,
+                    enqueue_us,
                     send_ts_us,
                     h,
+                    ..
                 } = msg
                 else {
                     return Ok(None);
@@ -451,9 +468,12 @@ impl DataPlane {
                     version,
                     worker_id,
                     comp_us,
+                    comp_start_us,
+                    enqueue_us,
                     send_ts_us,
                     frame_len,
                     recv_us: now_us(),
+                    dwell_us: dwell,
                 }))
             }
             DataPlane::Reactor(r) => {
@@ -474,9 +494,12 @@ impl DataPlane {
                             version: res.version,
                             worker_id: res.worker_id,
                             comp_us: res.comp_us,
+                            comp_start_us: res.comp_start_us,
+                            enqueue_us: res.enqueue_us,
                             send_ts_us: res.send_ts_us,
                             frame_len: frame.wire_len,
                             recv_us: frame.recv_us,
+                            dwell_us: dwell,
                         }))
                     }
                     FrameView::Other(_) => Ok(None),
@@ -504,6 +527,82 @@ impl DataPlane {
             }
         }
     }
+}
+
+/// The v5 latency anatomy of one ingested `Result` frame, shared
+/// word-for-word by both round loops: feed the frame's four-stamp
+/// exchange to the worker's clock estimator, decompose the frame's
+/// life into compute → worker-queue → network → master-dwell (worker
+/// stamps mapped onto the master clock), attribute the phases per
+/// worker, and run the anomaly watchdog over them.  Pure observation —
+/// consumes no RNG, reorders nothing; θ-inertness is pinned by
+/// `tests/reactor_parity.rs`.
+///
+/// Returns `(comp_ms, comm_ms, queue_ms)` — compute, *measured*
+/// network (clock-mapped send → arrival), and worker-queue — for the
+/// recorders, the trace tap and the policy estimator downstream.
+fn observe_frame_anatomy(
+    fr: &ResultMeta,
+    issue_us: Option<u64>,
+    round: usize,
+    clocks: &mut [ClockSync],
+    spans: &mut SpanRecorder,
+    anomaly: &mut AnomalyDetector,
+    flight: &Rc<RefCell<FlightRecorder>>,
+) -> (f64, f64, f64) {
+    let w = fr.worker_id as usize;
+    // NTP-style exchange: Assign issue (master) → first compute start
+    // (worker) → delivery send (worker) → frame arrival (master).  The
+    // min-RTT filter inside ClockSync keeps only the tight pings, so
+    // later flushes of a group (whose t1 − t0 span inflates apparent
+    // RTT) are rejected automatically.
+    if let Some(t0) = issue_us {
+        if clocks[w].observe(t0, fr.comp_start_us, fr.send_ts_us, fr.recv_us) {
+            tm::CLOCK_OFFSET_US.set(clocks[w].offset_us());
+        }
+    }
+    let comp_ms = fr.comp_us as f64 / 1e3;
+    // queue: flush enqueue → wire send, both worker-clock — a pure
+    // duration, no offset mapping needed
+    let queue_ms = fr.send_ts_us.saturating_sub(fr.enqueue_us) as f64 / 1e3;
+    // network: worker send stamp mapped onto the master clock → frame
+    // arrival at the master — the *measured* comm delay
+    let send_at_master = clocks[w].map_to_master(fr.send_ts_us);
+    let comm_ms = fr.recv_us.saturating_sub(send_at_master) as f64 / 1e3;
+    let dwell_ms = fr.dwell_us as f64 / 1e3;
+    spans.phases(w, comp_ms, queue_ms, comm_ms, dwell_ms);
+    let mut fl = flight.borrow_mut();
+    fl.record(
+        fr.recv_us,
+        "phase",
+        round as i64,
+        w as i64,
+        [comp_ms, queue_ms, comm_ms, dwell_ms],
+    );
+    for (phase, ms) in Phase::ALL.into_iter().zip([comp_ms, queue_ms, comm_ms, dwell_ms]) {
+        if let Some(a) = anomaly.observe(w, phase, ms) {
+            tm::ANOMALY_TOTAL.inc();
+            // the automatic flight dump: the anomaly lands in the ring
+            // next to the phase events that caused it, ready for
+            // `/debug/flight`
+            fl.record(
+                fr.recv_us,
+                "anomaly",
+                round as i64,
+                w as i64,
+                [a.phase as usize as f64, a.observed_ms, a.fleet_median_ms, anomaly.factor()],
+            );
+            eprintln!(
+                "telemetry: worker {w} {} phase anomalous at round {round}: \
+                 {:.3} ms vs fleet median {:.3} ms (factor {})",
+                a.phase.name(),
+                a.observed_ms,
+                a.fleet_median_ms,
+                anomaly.factor()
+            );
+        }
+    }
+    (comp_ms, comm_ms, queue_ms)
 }
 
 /// Run a full cluster experiment: spawns `n` in-process workers over
@@ -677,17 +776,36 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
 
     // ---- accept + handshake ------------------------------------------------
     // sockets stay blocking through handshake + data distribution; the
-    // chosen data plane (reactor or reader threads) takes over after
+    // chosen data plane (reactor or reader threads) takes over after.
+    // The Welcome→Hello exchange doubles as the clock-sync seed ping
+    // (v5): the worker's Hello stamp lies between the master's write
+    // and read stamps, so every worker clock has a bounded-error
+    // mapping before any round traffic flows.
     let mut streams: Vec<TcpStream> = Vec::with_capacity(n);
+    let mut clocks: Vec<ClockSync> = vec![ClockSync::new(); n];
     for id in 0..n {
         let (stream, _) = listener.accept().context("accepting worker")?;
         stream.set_nodelay(true)?;
+        let t0_us = now_us();
         Msg::Welcome {
             proto: super::protocol::PROTO_VERSION,
             worker_id: id as u32,
             profile: profile.clone(),
         }
         .write_to(&mut &stream)?;
+        let (hello, _) = Msg::read_frame(&mut &stream)
+            .with_context(|| format!("reading Hello from worker {id}"))?;
+        let t3_us = now_us();
+        match hello {
+            Msg::Hello { worker_id, ts_us } => {
+                anyhow::ensure!(
+                    worker_id as usize == id,
+                    "worker {id} answered the handshake as worker {worker_id}"
+                );
+                clocks[id].seed_handshake(t0_us, ts_us, t3_us);
+            }
+            other => bail!("expected Hello from worker {id}, got {other:?}"),
+        }
         streams.push(stream);
     }
 
@@ -751,9 +869,15 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
     // the scrape listener shares the data plane's poll loop (reactor) or
     // is pumped between chunked channel waits (threads); the JSONL log
     // gets one registry snapshot per applied round
+    // the flight recorder rides an Rc between the round loops and the
+    // scrape listener (both live on this thread); the anomaly watchdog
+    // feeds it and `straggler_anomaly_total`
+    let flight = Rc::new(RefCell::new(FlightRecorder::new(metrics.flight_depth)));
+    let mut anomaly = AnomalyDetector::new(n, metrics.anomaly_factor);
     let mut srv = match metrics.addr.as_deref() {
         Some(addr) => {
-            let s = MetricsServer::bind(addr)?;
+            let mut s = MetricsServer::bind(addr)?;
+            s.set_flight(flight.clone());
             println!("telemetry: serving /metrics on http://{}", s.addr());
             Some(s)
         }
@@ -762,6 +886,11 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
     let mut mlog = metrics.log.as_deref().map(MetricsLog::create).transpose()?;
     let mut msnap = Snapshot::default();
     let mut spans = SpanRecorder::new(n, staleness);
+    // Ctrl-C lands between rounds: the latch is polled at each round
+    // loop's top, so an interrupted run still tears down gracefully —
+    // workers get Shutdown frames and the metrics log its final
+    // fsynced snapshot
+    signal::install_sigint_latch();
 
     // ---- round loop ----------------------------------------------------------
     let mut master = UncodedMaster::new(&dataset, eta, k);
@@ -827,6 +956,12 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
         // per-round in-flight bookkeeping, indexed `round % S`
         struct InFlight {
             t0_us: u64,
+            /// master-clock stamp taken *before* the round's Assign
+            /// fan-out — the `t0` of every clock-sync exchange this
+            /// round's Result frames complete (t0_us above stays where
+            /// it always was, after the fan-out, so completion_ms is
+            /// untouched by the v5 extension)
+            issue_us: u64,
             results_seen: usize,
             messages_seen: usize,
             wire_bytes: usize,
@@ -840,6 +975,13 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
         let mut replanned_by_round = vec![false; rounds];
         let mut issued = 0usize;
         while logs.len() < rounds {
+            if signal::interrupted() {
+                eprintln!(
+                    "master: interrupted at {} applied rounds — shutting down gracefully",
+                    logs.len()
+                );
+                break;
+            }
             // top up the issue window
             while issued < rounds && issued < ring.base_round() + staleness {
                 let round = issued;
@@ -867,6 +1009,7 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
                 theta32.clear();
                 theta32.extend(master.theta.iter().map(|&v| v as f32));
                 let version = ring.base_round() as u32;
+                let issue_us = now_us();
                 for id in 0..n {
                     tasks_u32.clear();
                     tasks_u32.extend(to.row(id).iter().map(|&t| t as u32));
@@ -878,6 +1021,7 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
                         &theta32,
                         &tasks_u32,
                         sizes[id] as u32,
+                        issue_us,
                         align && sizes[id] > 1,
                     );
                     plane.send_frame(id, buf)?;
@@ -886,6 +1030,7 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
                 spans.begin(round, t0_us);
                 meta[round % staleness] = Some(InFlight {
                     t0_us,
+                    issue_us,
                     results_seen: 0,
                     messages_seen: 0,
                     wire_bytes: 0,
@@ -972,8 +1117,23 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
                     _ => {}
                 }
             }
-            let comp_ms = fr.comp_us as f64 / 1e3;
-            let comm_ms = (fr.recv_us.saturating_sub(fr.send_ts_us)) as f64 / 1e3;
+            // a stale round's InFlight slot already belongs to a newer
+            // round (or is gone) — its frames still yield phases, but
+            // without an issue stamp they feed no clock exchange
+            let issue_us = if in_window {
+                meta[rr % staleness].as_ref().map(|m| m.issue_us)
+            } else {
+                None
+            };
+            let (comp_ms, comm_ms, queue_ms) = observe_frame_anatomy(
+                &fr,
+                issue_us,
+                rr,
+                &mut clocks,
+                &mut spans,
+                &mut anomaly,
+                &flight,
+            );
             recorders[worker_id as usize].record_comp(comp_ms);
             recorders[worker_id as usize].record_comm(comm_ms);
             let slot = flush_idx.entry((rr, worker_id as usize)).or_insert(0);
@@ -986,6 +1146,7 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
                 scratch.tasks.len(),
                 comp_ms,
                 comm_ms,
+                queue_ms,
                 fr.frame_len,
                 replanned_by_round[rr],
                 fr.version, // the worker's echo of its Assign's θ-version
@@ -1058,6 +1219,12 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
     // pre-pipelining master (the pump above fills `logs` otherwise)
     let sync_rounds = if staleness > 1 { 0 } else { rounds };
     for round in 0..sync_rounds {
+        if signal::interrupted() {
+            eprintln!(
+                "master: interrupted at {round} applied rounds — shutting down gracefully"
+            );
+            break;
+        }
         // ---- the policy's round-boundary re-plan ---------------------------
         // protocol stays v3: assignment was always per-round; only the
         // plan's *source* changes (frozen vs engine-emitted)
@@ -1109,6 +1276,9 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
                 &theta32,
                 &tasks_u32,
                 sizes[id] as u32,
+                // t0_us is stamped before the fan-out, so it is the
+                // exchange's t0 for every worker's first flush
+                t0_us,
                 align && sizes[id] > 1,
             );
             plane.send_frame(id, buf)?;
@@ -1233,8 +1403,15 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
             messages_seen += 1;
             results_seen += scratch.tasks.len();
             wire_bytes += fr.frame_len;
-            let comp_ms = fr.comp_us as f64 / 1e3;
-            let comm_ms = (recv_us.saturating_sub(fr.send_ts_us)) as f64 / 1e3;
+            let (comp_ms, comm_ms, queue_ms) = observe_frame_anatomy(
+                &fr,
+                Some(t0_us),
+                round,
+                &mut clocks,
+                &mut spans,
+                &mut anomaly,
+                &flight,
+            );
             recorders[worker_id as usize].record_comp(comp_ms);
             recorders[worker_id as usize].record_comm(comm_ms);
             // duplicates and stranded overlaps are real fleet
@@ -1249,6 +1426,7 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
                 scratch.tasks.len(),
                 comp_ms,
                 comm_ms,
+                queue_ms,
                 fr.frame_len,
                 replanned,
                 round as u32, // sync: θ-version == round, gap 0
@@ -1349,9 +1527,12 @@ pub fn run_cluster(cfg: ClusterConfig) -> Result<ClusterReport> {
     if let Some(s) = srv.as_mut() {
         s.pump(0);
     }
+    // final snapshot + flush + fsync: whether the run finished or a
+    // SIGINT broke the round loop, the JSONL log ends durable and
+    // parseable at the last applied round
     if let Some(ml) = mlog.as_mut() {
         snapshot_into(&mut msnap);
-        ml.append(&msnap, now_us())?;
+        ml.finalize(&msnap, now_us())?;
     }
     plane.shutdown();
     for j in worker_joins {

@@ -40,10 +40,13 @@ pub const MAX_FRAME: u32 = 256 * 1024 * 1024;
 /// (v2: grouped `Result` frames + `Assign.group`, PR 2; v3: aggregated
 /// partial-sum `Result` blocks + `Assign.align`, PR 3; v4: per-frame
 /// θ-version tags on `Assign`/`Result` for the bounded-staleness async
-/// data plane).  Sent in `Welcome` so a version-skewed worker fails the
-/// handshake with a clear message instead of mis-decoding result
-/// frames.
-pub const PROTO_VERSION: u32 = 4;
+/// data plane; v5: latency anatomy — `Assign.issue_us` master issue
+/// stamp, `Result` worker-local compute-start/compute-end/enqueue
+/// stamps, and the worker → master `Hello` handshake ping that seeds
+/// the per-worker clock-offset estimator).  Sent in `Welcome` so a
+/// version-skewed worker fails the handshake with a clear message
+/// instead of mis-decoding result frames.
+pub const PROTO_VERSION: u32 = 5;
 
 /// Protocol messages.
 #[derive(Debug, Clone, PartialEq)]
@@ -76,7 +79,9 @@ pub enum Msg {
     /// the number of rounds the master had *applied* when it issued the
     /// frame.  Synchronous masters send `version == round` (staleness
     /// gap 0); a bounded-staleness pipeline sends `round − version ≤
-    /// S − 1`.
+    /// S − 1`.  `issue_us` (v5) is the master-clock stamp taken when
+    /// the round's fan-out started — the `t0` of the clock-offset
+    /// exchange ([`crate::telemetry::clock`]).
     Assign {
         round: u32,
         version: u32,
@@ -84,6 +89,7 @@ pub enum Msg {
         tasks: Vec<u32>,
         batches: Vec<u32>,
         group: u32,
+        issue_us: u64,
         align: bool,
     },
     /// worker → master after each flushed group: **one aggregated
@@ -95,12 +101,24 @@ pub enum Msg {
     /// `version` (v4) echoes the `Assign.version` the worker computed
     /// against, so the master's aggregation ring can verify a landing
     /// frame's θ lineage without a round→version side table.
+    ///
+    /// The v5 timing block — all four stamps on the *worker's* local
+    /// monotonic clock, mapped onto the master clock by
+    /// [`crate::telemetry::clock::ClockSync`]:
+    /// `comp_start_us` when the group's first task started computing,
+    /// `comp_end_us` when its last task finished, `enqueue_us` when the
+    /// flush was handed to the send path, and `send_ts_us` when the
+    /// sender thread picked it up — so a frame's latency decomposes
+    /// into compute → worker-queue → network → master-dwell.
     Result {
         round: u32,
         version: u32,
         worker_id: u32,
         tasks: Vec<u32>,
         comp_us: u64,
+        comp_start_us: u64,
+        comp_end_us: u64,
+        enqueue_us: u64,
         send_ts_us: u64,
         h: Vec<f32>,
     },
@@ -109,6 +127,12 @@ pub enum Msg {
     Stop { round: u32 },
     /// master → worker: tear down.
     Shutdown,
+    /// worker → master immediately after validating `Welcome` (v5):
+    /// the handshake ping.  `ts_us` is the worker's local monotonic
+    /// clock at send time; the master brackets the exchange with its
+    /// own stamps around the `Welcome` write / `Hello` read to seed the
+    /// per-worker clock-offset estimator before any round traffic.
+    Hello { worker_id: u32, ts_us: u64 },
 }
 
 impl Msg {
@@ -118,6 +142,7 @@ impl Msg {
     pub(crate) const TAG_RESULT: u8 = 4;
     pub(crate) const TAG_STOP: u8 = 5;
     pub(crate) const TAG_SHUTDOWN: u8 = 6;
+    pub(crate) const TAG_HELLO: u8 = 7;
 
     /// Serialize into a payload (without the length prefix).
     pub fn encode(&self) -> Vec<u8> {
@@ -158,6 +183,7 @@ impl Msg {
                 tasks,
                 batches,
                 group,
+                issue_us,
                 align,
             } => {
                 out.push(Self::TAG_ASSIGN);
@@ -167,6 +193,7 @@ impl Msg {
                 put_u32s(&mut out, tasks);
                 put_u32s(&mut out, batches);
                 put_u32(&mut out, *group);
+                put_u64(&mut out, *issue_us);
                 // align stays the FINAL Assign field across protocol
                 // bumps — rejects_bad_align_byte pokes the last byte
                 out.push(u8::from(*align));
@@ -177,6 +204,9 @@ impl Msg {
                 worker_id,
                 tasks,
                 comp_us,
+                comp_start_us,
+                comp_end_us,
+                enqueue_us,
                 send_ts_us,
                 h,
             } => {
@@ -186,6 +216,9 @@ impl Msg {
                 put_u32(&mut out, *worker_id);
                 put_u32s(&mut out, tasks);
                 put_u64(&mut out, *comp_us);
+                put_u64(&mut out, *comp_start_us);
+                put_u64(&mut out, *comp_end_us);
+                put_u64(&mut out, *enqueue_us);
                 put_u64(&mut out, *send_ts_us);
                 put_f32s(&mut out, h);
             }
@@ -194,6 +227,11 @@ impl Msg {
                 put_u32(&mut out, *round);
             }
             Msg::Shutdown => out.push(Self::TAG_SHUTDOWN),
+            Msg::Hello { worker_id, ts_us } => {
+                out.push(Self::TAG_HELLO);
+                put_u32(&mut out, *worker_id);
+                put_u64(&mut out, *ts_us);
+            }
         }
     }
 
@@ -225,6 +263,7 @@ impl Msg {
                 tasks: c.u32s()?,
                 batches: c.u32s()?,
                 group: c.u32()?,
+                issue_us: c.u64()?,
                 align: match c.u8()? {
                     0 => false,
                     1 => true,
@@ -237,11 +276,18 @@ impl Msg {
                 worker_id: c.u32()?,
                 tasks: c.u32s()?,
                 comp_us: c.u64()?,
+                comp_start_us: c.u64()?,
+                comp_end_us: c.u64()?,
+                enqueue_us: c.u64()?,
                 send_ts_us: c.u64()?,
                 h: c.f32s()?,
             },
             Self::TAG_STOP => Msg::Stop { round: c.u32()? },
             Self::TAG_SHUTDOWN => Msg::Shutdown,
+            Self::TAG_HELLO => Msg::Hello {
+                worker_id: c.u32()?,
+                ts_us: c.u64()?,
+            },
             t => bail!("unknown message tag {t}"),
         };
         if c.pos != buf.len() {
@@ -385,6 +431,7 @@ mod tests {
             tasks: vec![3, 1, 0],
             batches: vec![3, 1, 0],
             group: 2,
+            issue_us: 42_000,
             align: false,
         });
         // async issue: round 13 against the θ of applied round 11 (S=3)
@@ -395,6 +442,7 @@ mod tests {
             tasks: vec![0, 1, 2, 3],
             batches: vec![0, 1, 2, 3],
             group: 2,
+            issue_us: u64::MAX,
             align: true,
         });
         roundtrip(Msg::Result {
@@ -403,6 +451,9 @@ mod tests {
             worker_id: 2,
             tasks: vec![3],
             comp_us: 1234,
+            comp_start_us: 998_000,
+            comp_end_us: 999_234,
+            enqueue_us: 999_500,
             send_ts_us: 999_999,
             h: vec![f32::MIN, f32::MAX, 0.0],
         });
@@ -414,11 +465,18 @@ mod tests {
             worker_id: 0,
             tasks: vec![1, 2],
             comp_us: 2048,
+            comp_start_us: 0,
+            comp_end_us: 0,
+            enqueue_us: 0,
             send_ts_us: 1_000_001,
             h: vec![4.0, 6.0],
         });
         roundtrip(Msg::Stop { round: 12 });
         roundtrip(Msg::Shutdown);
+        roundtrip(Msg::Hello {
+            worker_id: 3,
+            ts_us: 17_000_000,
+        });
     }
 
     #[test]
@@ -458,6 +516,7 @@ mod tests {
             tasks: vec![0],
             batches: vec![0],
             group: 1,
+            issue_us: 9,
             align: false,
         }
         .encode();
@@ -480,7 +539,10 @@ mod tests {
             worker_id: 2,
             tasks: vec![3, 7],
             comp_us: 4,
-            send_ts_us: 5,
+            comp_start_us: 10,
+            comp_end_us: 14,
+            enqueue_us: 15,
+            send_ts_us: 16,
             h: vec![1.0, 2.0],
         }
         .encode();

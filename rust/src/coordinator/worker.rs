@@ -33,7 +33,7 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use super::framebuf::{encode_result_into, FramePool};
+use super::framebuf::{encode_result_into, patch_result_send_ts, FramePool};
 use super::protocol::Msg;
 use super::{now_us, TaskDelaySampler};
 use crate::linalg::Mat;
@@ -101,6 +101,16 @@ pub fn run_worker(addr: std::net::SocketAddr, mut opts: WorkerOptions) -> Result
         }
         other => anyhow::bail!("expected Welcome, got {other:?}"),
     };
+
+    // v5 handshake ping: echo a worker-clock stamp right back so the
+    // master can seed this worker's clock-offset estimate from the
+    // Welcome→Hello round trip (telemetry/clock.rs) before any round
+    // traffic flows.
+    Msg::Hello {
+        worker_id,
+        ts_us: now_us(),
+    }
+    .write_to(&mut *writer.lock().expect("writer poisoned"))?;
 
     // latest acknowledged round (-1 = none): Stop(r) means "round r done"
     let stopped_round = Arc::new(AtomicI64::new(-1));
@@ -226,6 +236,11 @@ pub fn run_worker(addr: std::net::SocketAddr, mut opts: WorkerOptions) -> Result
                 buf_tasks.clear();
                 buf_sum.clear();
                 let mut buf_comp_us: u64 = 0;
+                // v5 group timing: worker-clock stamp of the first
+                // task's start and the last task's end, shipped on the
+                // flushed frame so the master can decompose latency
+                let mut buf_comp_start_us: u64 = 0;
+                let mut buf_comp_end_us: u64 = 0;
                 for (slot, (&task, &batch)) in tasks.iter().zip(&batches).enumerate() {
                     // paper: stop as soon as the ack for *this* round
                     // lands; a partially filled group is abandoned with
@@ -235,6 +250,9 @@ pub fn run_worker(addr: std::net::SocketAddr, mut opts: WorkerOptions) -> Result
                     }
                     // --- computation phase (eq. 1 first term) ---
                     let t0 = now_us();
+                    if buf_tasks.is_empty() {
+                        buf_comp_start_us = t0;
+                    }
                     let (inj_comp_ms, inj_comm_ms) = match opts.injected.as_mut() {
                         Some(s) => s.next(),
                         None => (0.0, 0.0),
@@ -263,7 +281,9 @@ pub fn run_worker(addr: std::net::SocketAddr, mut opts: WorkerOptions) -> Result
                                 .collect()
                         }
                     };
-                    buf_comp_us += now_us() - t0;
+                    let t1 = now_us();
+                    buf_comp_us += t1 - t0;
+                    buf_comp_end_us = t1;
                     buf_tasks.push(task);
                     if buf_sum.is_empty() {
                         buf_sum.extend_from_slice(&h);
@@ -298,6 +318,12 @@ pub fn run_worker(addr: std::net::SocketAddr, mut opts: WorkerOptions) -> Result
                     // the master can audit a frame's lineage without
                     // a round→version side table (protocol v4).
                     let mut frame = send_pool.lock().expect("pool poisoned").get();
+                    // enqueue stamp = encode time; send_ts is a
+                    // placeholder the delivery thread back-patches the
+                    // instant the frame heads for the socket, so the
+                    // gap between them is the worker-queue phase and
+                    // `recv - send` is the full network phase
+                    // (including any injected comm delay).
                     encode_result_into(
                         &mut frame,
                         round,
@@ -305,7 +331,10 @@ pub fn run_worker(addr: std::net::SocketAddr, mut opts: WorkerOptions) -> Result
                         worker_id,
                         &buf_tasks,
                         buf_comp_us,
+                        buf_comp_start_us,
+                        buf_comp_end_us,
                         now_us(),
+                        0,
                         &buf_sum,
                     );
                     tm::WORKER_COMPUTE_US_TOTAL.add(buf_comp_us);
@@ -320,6 +349,7 @@ pub fn run_worker(addr: std::net::SocketAddr, mut opts: WorkerOptions) -> Result
                     std::thread::Builder::new()
                         .name(format!("worker{worker_id}-send"))
                         .spawn(move || {
+                            patch_result_send_ts(&mut frame, now_us());
                             if inj_comm_ms > 0.0 {
                                 spin_sleep(Duration::from_secs_f64(inj_comm_ms / 1e3));
                             }

@@ -308,6 +308,17 @@ pub enum DelayModelKind {
     },
     /// EC2-like empirical traces (the paper's testbed substitute).
     Ec2Like { seed: u64, hetero: f64 },
+    /// Deterministic per-slot delays — every slot takes exactly
+    /// `comp_ms`/`comm_ms`, except the optional `straggler`, whose
+    /// delays are scaled by `factor`.  Consumes no randomness, so
+    /// latency-anatomy tests can assert recovered phase splits against
+    /// exact ground truth.
+    Fixed {
+        comp_ms: f64,
+        comm_ms: f64,
+        straggler: Option<usize>,
+        factor: f64,
+    },
 }
 
 impl DelayModelKind {
@@ -337,7 +348,81 @@ impl DelayModelKind {
             DelayModelKind::Ec2Like { seed, hetero } => {
                 Box::new(Ec2LikeModel::new(n, *seed, *hetero))
             }
+            DelayModelKind::Fixed {
+                comp_ms,
+                comm_ms,
+                straggler,
+                factor,
+            } => Box::new(FixedModel::new(*comp_ms, *comm_ms, *straggler, *factor)),
         }
+    }
+}
+
+/// Deterministic delay model: constant per-slot delays with one
+/// optional straggler scaled by `factor`.  Draws nothing from the RNG
+/// (the batch bit-identity contract holds vacuously), which makes it
+/// the ground truth for latency-anatomy and anomaly-detector tests —
+/// the recovered compute/comm split can be asserted within a tolerance
+/// instead of a distributional bound.
+#[derive(Debug, Clone)]
+pub struct FixedModel {
+    comp_ms: f64,
+    comm_ms: f64,
+    straggler: Option<usize>,
+    factor: f64,
+}
+
+impl FixedModel {
+    pub fn new(comp_ms: f64, comm_ms: f64, straggler: Option<usize>, factor: f64) -> Self {
+        assert!(comp_ms.is_finite() && comp_ms >= 0.0, "comp_ms must be finite and ≥ 0");
+        assert!(comm_ms.is_finite() && comm_ms >= 0.0, "comm_ms must be finite and ≥ 0");
+        assert!(factor.is_finite() && factor > 0.0, "factor must be finite and > 0");
+        Self {
+            comp_ms,
+            comm_ms,
+            straggler,
+            factor,
+        }
+    }
+
+    #[inline]
+    fn scale(&self, worker: usize) -> f64 {
+        if self.straggler == Some(worker) {
+            self.factor
+        } else {
+            1.0
+        }
+    }
+}
+
+impl DelayModel for FixedModel {
+    fn name(&self) -> String {
+        match self.straggler {
+            Some(w) => format!(
+                "fixed(comp={}ms, comm={}ms, straggler={w}×{})",
+                self.comp_ms, self.comm_ms, self.factor
+            ),
+            None => format!("fixed(comp={}ms, comm={}ms)", self.comp_ms, self.comm_ms),
+        }
+    }
+
+    fn sample_into(&self, out: &mut DelaySample, rng: &mut Rng) {
+        let _ = rng; // deterministic: consumes no randomness
+        let (n, r) = (out.n, out.r);
+        for i in 0..n {
+            let s = self.scale(i);
+            let (comp, comm) = (self.comp_ms * s, self.comm_ms * s);
+            out.comp_mut()[i * r..(i + 1) * r].fill(comp);
+            out.comm_mut()[i * r..(i + 1) * r].fill(comm);
+        }
+    }
+
+    fn mean_comp(&self, worker: usize) -> Option<f64> {
+        Some(self.comp_ms * self.scale(worker))
+    }
+
+    fn mean_comm(&self, worker: usize) -> Option<f64> {
+        Some(self.comm_ms * self.scale(worker))
     }
 }
 
@@ -400,6 +485,33 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn fixed_model_is_deterministic_with_one_straggler() {
+        let kind = DelayModelKind::Fixed {
+            comp_ms: 2.0,
+            comm_ms: 0.5,
+            straggler: Some(1),
+            factor: 8.0,
+        };
+        let m = kind.build(3);
+        assert!(m.name().contains("straggler=1×8"), "{}", m.name());
+        let mut rng = Rng::seed_from_u64(0);
+        let before = rng.next_u64();
+        let mut rng = Rng::seed_from_u64(0);
+        let s = m.sample(3, 2, &mut rng);
+        // consumes no randomness at all
+        assert_eq!(rng.next_u64(), before);
+        for j in 0..2 {
+            assert_eq!(s.comp(0, j), 2.0);
+            assert_eq!(s.comm(0, j), 0.5);
+            assert_eq!(s.comp(1, j), 16.0);
+            assert_eq!(s.comm(1, j), 4.0);
+            assert_eq!(s.comp(2, j), 2.0);
+        }
+        assert_eq!(m.mean_comp(1), Some(16.0));
+        assert_eq!(m.mean_comm(0), Some(0.5));
     }
 
     #[test]

@@ -20,11 +20,13 @@
 //!                 [--io reactor|threads]        # master data plane
 //!                 [--metrics-addr 127.0.0.1:9464]  # live Prometheus /metrics
 //!                 [--metrics-log m.jsonl]       # per-round snapshot log
+//!                 [--flight-depth 256]          # anomaly flight-recorder ring
+//!                 [--anomaly-factor 4.0]        # phase-EWMA vs fleet-median trip
 //!                 [--rounds 300] [--k 8] [--no-pjrt] [--record t.jsonl]
 //! straggler trace record --out-trace t.jsonl [--cluster]  # record → fit → replay
 //! straggler trace fit    --trace t.jsonl        # per-worker fits + KS + tiers
 //! straggler trace replay --trace t.jsonl        # scheme × policy matrix + digest
-//! straggler trace report --trace t.jsonl [--k K]  # span/attribution tables
+//! straggler trace report --trace t.jsonl [--k K] [--json]  # span/attribution
 //! straggler adaptive [--trials N]               # shifting-straggler table
 //! straggler all   [--trials N]                  # every figure + table
 //! ```
@@ -355,6 +357,12 @@ fn run_trace(args: &Args, opts: &Options) -> Result<()> {
             let store = TraceStore::load(std::path::Path::new(&path))?;
             let k = args.usize_or("k", store.n_workers())?;
             let spans = spans_from_trace(&store, k)?;
+            if args.flag("json") {
+                // machine path: the same SpanSummary JSON the telemetry
+                // exporter serves — one compact object on stdout, no tables
+                println!("{}", spans.to_json().to_string_compact());
+                return Ok(());
+            }
             println!(
                 "trace report: {} events over {} reconstructed rounds from {path} (k = {k})",
                 store.len(),
@@ -738,7 +746,7 @@ fn run() -> Result<()> {
         }
         "worker" => {
             // external worker process: `straggler worker --connect HOST:PORT
-            // [--oracle] [--inject scenario1|scenario2|ec2] [--n N --id I]`
+            // [--oracle] [--inject scenario1|scenario2|ec2|fixed] [--n N --id I]`
             let connect = args
                 .str_opt("connect")
                 .ok_or_else(|| anyhow::anyhow!("`worker` needs --connect HOST:PORT"))?;
@@ -764,6 +772,23 @@ fn run() -> Result<()> {
                             seed,
                             hetero: 0.2,
                         },
+                        "fixed" => {
+                            // deterministic constants for the latency-anatomy
+                            // e2e: known ground truth per phase, one optional
+                            // straggler slowed by --factor
+                            let straggler = match args.str_opt("straggler") {
+                                None => None,
+                                Some(s) => Some(s.parse::<usize>().map_err(|e| {
+                                    anyhow::anyhow!("bad --straggler {s:?}: {e}")
+                                })?),
+                            };
+                            straggler_sched::delay::DelayModelKind::Fixed {
+                                comp_ms: args.f64_or("comp-ms", 2.0)?,
+                                comm_ms: args.f64_or("comm-ms", 0.5)?,
+                                straggler,
+                                factor: args.f64_or("factor", 4.0)?,
+                            }
+                        }
                         other => bail!("unknown --inject model {other:?}"),
                     };
                     Some(straggler_sched::coordinator::TaskDelaySampler::new(
@@ -826,6 +851,14 @@ fn run() -> Result<()> {
                 metrics: MetricsConfig {
                     addr: args.str_opt("metrics-addr"),
                     log: args.str_opt("metrics-log"),
+                    flight_depth: args.usize_or(
+                        "flight-depth",
+                        straggler_sched::telemetry::flight::DEFAULT_FLIGHT_DEPTH,
+                    )?,
+                    anomaly_factor: args.f64_or(
+                        "anomaly-factor",
+                        straggler_sched::telemetry::flight::DEFAULT_ANOMALY_FACTOR,
+                    )?,
                 },
             };
             let io = cfg.io;
@@ -973,13 +1006,25 @@ subcommands:
                     cross-check path); --metrics-addr HOST:PORT serves
                     live Prometheus text on /metrics from the master's
                     own poll loop (no extra thread; telemetry is inert —
-                    θ is bit-identical with it on or off) and
+                    θ is bit-identical with it on or off), plus
+                    /healthz (uptime + round gauge), /catalog (metric
+                    catalog JSON) and /debug/flight (the anomaly
+                    flight-recorder ring as JSON);
                     --metrics-log FILE appends one registry snapshot
-                    per round as JSONL; after the run the master prints
-                    per-round phase spans (wait-first / collect /
-                    decode / apply), straggler attribution (who
-                    delivered the k-th distinct result) and a
-                    wasted-work table
+                    per round as JSONL (final snapshot flushed + fsynced
+                    on shutdown, Ctrl-C included); protocol v5 frames
+                    carry worker-local timestamps, so each Result
+                    decomposes into compute / worker-queue / network /
+                    master-dwell phases on the master clock (NTP-style
+                    per-worker offset estimation off the Assign→Result
+                    exchange); --flight-depth N bounds the flight ring
+                    (default 256) and --anomaly-factor F trips the
+                    anomaly detector when a worker's phase EWMA exceeds
+                    F × the fleet median (default 4.0); after the run
+                    the master prints per-round phase spans (wait-first
+                    / collect / decode / apply), straggler attribution
+                    (who delivered the k-th distinct result, with
+                    measured per-phase means) and a wasted-work table
   trace             the record → fit → replay loop (digital-twin
                     calibration, EXPERIMENTS.md §Traces):
                     trace record --out-trace FILE [--cluster]
@@ -996,14 +1041,18 @@ subcommands:
                       fleet (--replay empirical|tg|exp|corr, --schemes,
                       --policies, --trials, --ingest) and prints the
                       pinned-seed completion digest;
-                    trace report --trace FILE [--k K]
+                    trace report --trace FILE [--k K] [--json]
                       offline observability: reconstructs per-round
                       critical-path spans from the recorded arrivals
                       (completion = K-th distinct task, default K = n)
                       and prints phase, straggler-attribution and
-                      wasted-work tables
+                      wasted-work tables; --json emits the same
+                      SpanSummary object the telemetry exporter serves
   worker            external worker process: --connect HOST:PORT
-                    [--oracle] [--inject ec2 --n N --id I]
+                    [--oracle] [--inject scenario1|scenario2|ec2|fixed
+                    --n N --id I] (fixed: deterministic --comp-ms,
+                    --comm-ms, optional --straggler W slowed ×--factor —
+                    the latency-anatomy ground-truth injection)
   all               regenerate every table and figure
 
 common flags: --trials N  --seed S  --out DIR  --no-out  --cluster

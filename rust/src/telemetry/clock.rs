@@ -1,0 +1,317 @@
+//! Per-worker clock-offset estimation (protocol v5 latency anatomy).
+//!
+//! Worker clocks are unsynchronized: every worker process stamps its
+//! v5 `Result` timing fields (`comp_start_us`/`comp_end_us`/
+//! `enqueue_us`/`send_ts_us`) with *its own* monotonic clock, so the
+//! master cannot subtract them from its arrival stamps directly.  This
+//! module is the NTP-style fix: each Assign→Result exchange is a
+//! four-timestamp ping
+//!
+//! ```text
+//!   t0  master clock   Assign issue stamp  (carried on the wire)
+//!   t1  worker clock   first task compute start
+//!   t2  worker clock   delivery-thread send stamp
+//!   t3  master clock   frame arrival (FrameBuf fill mark)
+//! ```
+//!
+//! from which the classic midpoint estimate of the worker−master
+//! offset is `θ = ((t1−t0) + (t2−t3)) / 2` with round-trip time
+//! `ρ = (t3−t0) − (t2−t1)`; the estimate's error is bounded by `ρ/2`
+//! regardless of how the one-way delays split (the asymmetry can move
+//! the true offset anywhere inside `θ ± ρ/2`, but no further).  The
+//! estimator therefore keeps the exchange with the **smallest RTT**
+//! seen so far — a running min-RTT midpoint filter — because the
+//! tightest ping gives the tightest bound.  To track *drift* (worker
+//! clocks ticking at slightly different rates), the retained min-RTT
+//! inflates by a small factor per exchange so a long-running worker
+//! keeps refreshing its offset from recent traffic, and the slope
+//! between consecutive accepted midpoints feeds an EWMA drift rate
+//! used to extrapolate the offset when mapping stamps.
+//!
+//! The `Welcome→Hello` handshake ping seeds the estimate before any
+//! round traffic flows (`seed_handshake`), so even round 0's phase
+//! decomposition has a bounded-error mapping.  In-process fleets share
+//! `coordinator::now_us`'s single process clock, so there the
+//! estimator must (and tests assert it does) recover an offset ≈ 0.
+
+/// Multiplicative inflation of the retained min-RTT per observed
+/// exchange: after ~35 exchanges a previously accepted ping has
+/// doubled its effective RTT, so fresher (drift-current) exchanges
+/// displace it even if the wire got slightly slower.
+const MIN_RTT_INFLATE: f64 = 1.02;
+
+/// EWMA weight of the drift-rate update on each accepted exchange.
+const DRIFT_ALPHA: f64 = 0.3;
+
+/// Minimum spacing between accepted exchanges for a drift update: the
+/// slope noise is `(err₁+err₂)/Δt`, so sub-second pairs would swamp
+/// any real oscillator error (tens of ppm) with jitter.
+const DRIFT_MIN_DT_S: f64 = 2.0;
+
+/// Sanity clamp on the drift estimate (µs/s ≈ ppm) — real clocks are
+/// within ±100 ppm; 10× that headroom, and a single corrupt exchange
+/// cannot poison the mapping.
+const DRIFT_CLAMP: f64 = 1_000.0;
+
+/// Offset/drift estimate for one worker's clock against the master's.
+#[derive(Debug, Clone)]
+pub struct ClockSync {
+    /// worker − master offset (µs) at `ref_us` on the worker clock
+    offset_us: f64,
+    /// worker-clock instant of the last accepted exchange
+    ref_us: f64,
+    /// drift of the offset, µs per worker-clock second (≈ ppm)
+    drift_us_per_s: f64,
+    /// effective RTT of the retained exchange (inflated over time)
+    min_rtt_us: f64,
+    exchanges: u64,
+    accepted: u64,
+}
+
+impl Default for ClockSync {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ClockSync {
+    pub fn new() -> Self {
+        Self {
+            offset_us: 0.0,
+            ref_us: 0.0,
+            drift_us_per_s: 0.0,
+            min_rtt_us: f64::INFINITY,
+            exchanges: 0,
+            accepted: 0,
+        }
+    }
+
+    /// Feed one four-stamp exchange (`t0`/`t3` master clock, `t1`/`t2`
+    /// worker clock, µs).  Returns `true` if this exchange displaced
+    /// the retained minimum and updated the offset.
+    pub fn observe(&mut self, t0: u64, t1: u64, t2: u64, t3: u64) -> bool {
+        self.exchanges += 1;
+        let rtt = ((t3 as f64 - t0 as f64) - (t2 as f64 - t1 as f64)).max(0.0);
+        let midpoint = ((t1 as f64 - t0 as f64) + (t2 as f64 - t3 as f64)) / 2.0;
+        // let drift-stale retained pings age out
+        if self.min_rtt_us.is_finite() {
+            self.min_rtt_us *= MIN_RTT_INFLATE;
+        }
+        if rtt > self.min_rtt_us {
+            return false;
+        }
+        if self.accepted > 0 {
+            let dt_s = (t1 as f64 - self.ref_us) / 1e6;
+            if dt_s >= DRIFT_MIN_DT_S {
+                let slope =
+                    ((midpoint - self.offset_us) / dt_s).clamp(-DRIFT_CLAMP, DRIFT_CLAMP);
+                self.drift_us_per_s = if self.drift_us_per_s == 0.0 {
+                    slope
+                } else {
+                    (1.0 - DRIFT_ALPHA) * self.drift_us_per_s + DRIFT_ALPHA * slope
+                };
+            }
+        }
+        self.offset_us = midpoint;
+        self.ref_us = t1 as f64;
+        self.min_rtt_us = rtt;
+        self.accepted += 1;
+        true
+    }
+
+    /// Seed from the `Welcome→Hello` handshake: the worker stamps
+    /// `ts_us` somewhere between the master's write (`t0`) and read
+    /// (`t3`) — a degenerate exchange with zero worker-side hold.
+    pub fn seed_handshake(&mut self, t0_master: u64, ts_worker: u64, t3_master: u64) {
+        self.observe(t0_master, ts_worker, ts_worker, t3_master);
+    }
+
+    /// Map a worker-clock stamp onto the master clock, extrapolating
+    /// the drift since the last accepted exchange.  Saturates at 0
+    /// (the shared process clock starts there).
+    pub fn map_to_master(&self, worker_us: u64) -> u64 {
+        let off = self.offset_at(worker_us as f64);
+        let mapped = worker_us as f64 - off;
+        if mapped <= 0.0 {
+            0
+        } else {
+            mapped as u64
+        }
+    }
+
+    fn offset_at(&self, worker_us: f64) -> f64 {
+        self.offset_us + self.drift_us_per_s * (worker_us - self.ref_us) / 1e6
+    }
+
+    /// Current worker − master offset estimate (µs), at the last
+    /// accepted exchange's reference point.
+    pub fn offset_us(&self) -> f64 {
+        self.offset_us
+    }
+
+    /// Estimated drift (µs of offset per second ≈ ppm).
+    pub fn drift_us_per_s(&self) -> f64 {
+        self.drift_us_per_s
+    }
+
+    /// Hard bound on the offset error: half the retained exchange's
+    /// RTT.  Infinite until the first exchange is accepted.
+    pub fn error_bound_us(&self) -> f64 {
+        if self.accepted == 0 {
+            f64::INFINITY
+        } else {
+            (self.min_rtt_us / 2.0).max(1.0)
+        }
+    }
+
+    pub fn synced(&self) -> bool {
+        self.accepted > 0
+    }
+
+    pub fn exchanges(&self) -> u64 {
+        self.exchanges
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A synthetic worker clock: `worker(t) = t + offset + drift·t`.
+    struct FakeClock {
+        offset_us: f64,
+        drift_ppm: f64,
+    }
+
+    impl FakeClock {
+        fn worker(&self, master_us: u64) -> u64 {
+            let t = master_us as f64;
+            (t + self.offset_us + self.drift_ppm * t / 1e6).round() as u64
+        }
+    }
+
+    /// Run `k` exchanges with deterministic pseudo-random one-way
+    /// delays and return the estimator.
+    fn run_exchanges(clk: &FakeClock, sync: &mut ClockSync, k: u32) {
+        let mut master_t: u64 = 1_000_000;
+        for i in 0..k {
+            // deterministic jitter in [100, 1700) µs, different per leg
+            let up = 100 + (i as u64 * 7919) % 1600;
+            let down = 100 + (i as u64 * 104_729) % 1600;
+            let hold = 500 + (i as u64 * 31) % 2000;
+            let t0 = master_t;
+            let t1 = clk.worker(t0 + up);
+            let t2 = t1 + hold;
+            let t3 = clk.worker_inverse(t2) + down;
+            sync.observe(t0, t1, t2, t3);
+            master_t += 50_000 + (i as u64 * 13) % 10_000;
+        }
+    }
+
+    impl FakeClock {
+        /// master instant at which the worker clock reads `w`
+        fn worker_inverse(&self, worker_us: u64) -> u64 {
+            let w = worker_us as f64;
+            ((w - self.offset_us) / (1.0 + self.drift_ppm / 1e6)).round() as u64
+        }
+    }
+
+    #[test]
+    fn recovers_static_offset_within_error_bound() {
+        for offset in [-3_000_000.0f64, 0.0, 250_000.0, 7_500_000.0] {
+            let clk = FakeClock {
+                offset_us: offset,
+                drift_ppm: 0.0,
+            };
+            let mut sync = ClockSync::new();
+            run_exchanges(&clk, &mut sync, 64);
+            assert!(sync.synced());
+            let bound = sync.error_bound_us();
+            assert!(bound.is_finite() && bound > 0.0);
+            let err = (sync.offset_us() - offset).abs();
+            assert!(
+                err <= bound,
+                "offset {offset}: err {err} exceeds bound {bound}"
+            );
+            // best ping had ≤ ~200+200 µs of asymmetric jitter floor
+            assert!(bound <= 2_000.0, "bound {bound} too loose");
+        }
+    }
+
+    #[test]
+    fn tracks_drift_across_a_long_run() {
+        // 200 ppm is an absurdly bad oscillator — a worst case
+        let clk = FakeClock {
+            offset_us: 1_000_000.0,
+            drift_ppm: 200.0,
+        };
+        let mut sync = ClockSync::new();
+        run_exchanges(&clk, &mut sync, 256);
+        // after ~256 rounds at ~55 ms apart, ~14 s elapsed: the raw
+        // seed offset is stale by ~2.8 ms, the tracker must do better
+        let now_master: u64 = 16_000_000;
+        let now_worker = clk.worker(now_master);
+        let mapped = sync.map_to_master(now_worker);
+        let err = (mapped as f64 - now_master as f64).abs();
+        assert!(err <= 3_000.0, "drift-mapped error {err} µs");
+        assert!(
+            sync.drift_us_per_s() != 0.0,
+            "drift went undetected over a 15 s run at 200 ppm"
+        );
+    }
+
+    #[test]
+    fn handshake_seed_gives_immediate_bounded_mapping() {
+        let clk = FakeClock {
+            offset_us: -500_000.0,
+            drift_ppm: 0.0,
+        };
+        let mut sync = ClockSync::new();
+        assert!(!sync.synced());
+        assert!(sync.error_bound_us().is_infinite());
+        // master writes Welcome at t0, worker stamps mid-flight,
+        // master reads Hello at t3 — 400 µs round trip
+        let t0: u64 = 2_000_000;
+        let ts = clk.worker(t0 + 180);
+        let t3 = t0 + 400;
+        sync.seed_handshake(t0, ts, t3);
+        assert!(sync.synced());
+        assert!(sync.error_bound_us() <= 200.0 + 1.0);
+        let err = (sync.offset_us() - (-500_000.0)).abs();
+        assert!(err <= sync.error_bound_us(), "seed err {err}");
+    }
+
+    #[test]
+    fn shared_process_clock_maps_to_identity() {
+        // in-process fleets: worker stamps ARE master stamps
+        let clk = FakeClock {
+            offset_us: 0.0,
+            drift_ppm: 0.0,
+        };
+        let mut sync = ClockSync::new();
+        run_exchanges(&clk, &mut sync, 32);
+        assert!(sync.offset_us().abs() <= sync.error_bound_us());
+        let w: u64 = 9_999_999;
+        let mapped = sync.map_to_master(w);
+        assert!(
+            (mapped as f64 - w as f64).abs() <= sync.error_bound_us() + 1.0,
+            "identity mapping off by {}",
+            mapped as f64 - w as f64
+        );
+    }
+
+    #[test]
+    fn min_rtt_filter_prefers_the_tight_ping() {
+        let mut sync = ClockSync::new();
+        // sloppy ping: 10 ms RTT, asymmetric → midpoint off by ~4 ms
+        sync.observe(0, 9_000, 9_500, 10_500);
+        let sloppy = sync.offset_us();
+        // tight ping: true offset 1000, up 100 µs / hold 50 / down 50
+        assert!(sync.observe(100_000, 101_100, 101_150, 100_200));
+        assert!((sync.offset_us() - 1_000.0).abs() <= sync.error_bound_us());
+        assert!((sync.offset_us() - sloppy).abs() > 1_000.0);
+        // a later sloppy ping must NOT displace the tight one
+        assert!(!sync.observe(200_000, 209_000, 209_500, 210_500));
+        assert!((sync.offset_us() - 1_000.0).abs() <= sync.error_bound_us());
+    }
+}

@@ -11,19 +11,29 @@
 //! `Content-Type: text/plain; version=0.0.4` and closes the connection
 //! per response — exactly what a Prometheus scraper or a plain `curl`
 //! expects — and degrades politely on junk input (400/404/405, bounded
-//! request buffer).
+//! request buffer).  Three JSON sidecar endpoints ride the same
+//! listener: `/healthz` (liveness + uptime + applied-round count, so
+//! probes can tell "up" from "wrong path"), `/catalog` (the full
+//! metric catalog as `[{name, kind, help}]`), and `/debug/flight`
+//! (the flight-recorder ring attached via
+//! [`MetricsServer::set_flight`]).
 
+use std::cell::RefCell;
 use std::fmt::Write as _;
 use std::fs::File;
 use std::io::{self, BufWriter, ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::os::unix::io::AsRawFd;
 use std::path::Path;
+use std::rc::Rc;
 
 use anyhow::{Context, Result};
 
+use super::flight::FlightRecorder;
 use super::metrics as tm;
 use super::registry::Snapshot;
+use super::Metric;
+use crate::coordinator::now_us;
 use crate::util::json::Json;
 use crate::util::poll::{poll_fds, PollFd, PollHook, POLLIN, POLLOUT};
 
@@ -121,6 +131,18 @@ impl MetricsLog {
         writeln!(self.w, "{}", line.to_string_compact()).context("writing metrics log line")?;
         self.w.flush().context("flushing metrics log")
     }
+
+    /// Graceful-shutdown path (master stop and Ctrl-C): append one
+    /// last snapshot, then flush *and fsync* so the final applied
+    /// rounds survive even if the process dies right after.
+    pub fn finalize(&mut self, snap: &Snapshot, ts_us: u64) -> Result<()> {
+        self.append(snap, ts_us)?;
+        self.w.flush().context("flushing metrics log")?;
+        self.w
+            .get_ref()
+            .sync_all()
+            .context("syncing metrics log to disk")
+    }
 }
 
 /// One in-flight scrape connection.
@@ -145,6 +167,11 @@ pub struct MetricsServer {
     body: String,
     /// Scratch poll set for the standalone `pump` path.
     fds: Vec<PollFd>,
+    /// Process-clock bind time, for `/healthz` uptime.
+    start_us: u64,
+    /// `/debug/flight` source, shared with the master loop (the
+    /// server is only ever pumped from the master's own thread).
+    flight: Option<Rc<RefCell<FlightRecorder>>>,
 }
 
 impl MetricsServer {
@@ -162,12 +189,19 @@ impl MetricsServer {
             snap: Snapshot::default(),
             body: String::new(),
             fds: Vec::new(),
+            start_us: now_us(),
+            flight: None,
         })
     }
 
     /// The bound address (resolves `:0` requests to the real port).
     pub fn addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// Attach the flight recorder `/debug/flight` dumps read from.
+    pub fn set_flight(&mut self, flight: Rc<RefCell<FlightRecorder>>) {
+        self.flight = Some(flight);
     }
 
     /// Drive accept/read/write readiness once without an external poll
@@ -205,28 +239,86 @@ impl MetricsServer {
     }
 
     /// Refresh the cached snapshot + body and build `conn`'s response.
-    fn respond(conn: &mut ScrapeConn, snap: &mut Snapshot, body: &mut String) {
-        let (status, ok) = match parse_request(&conn.req) {
-            RequestVerdict::Metrics => ("200 OK", true),
-            RequestVerdict::NotFound => ("404 Not Found", false),
-            RequestVerdict::BadMethod => ("405 Method Not Allowed", false),
-            RequestVerdict::Malformed => ("400 Bad Request", false),
+    fn respond(
+        conn: &mut ScrapeConn,
+        snap: &mut Snapshot,
+        body: &mut String,
+        flight: Option<&Rc<RefCell<FlightRecorder>>>,
+        start_us: u64,
+    ) {
+        let verdict = parse_request(&conn.req);
+        let (status, ctype) = match verdict {
+            RequestVerdict::Metrics => ("200 OK", "text/plain; version=0.0.4"),
+            RequestVerdict::Healthz | RequestVerdict::Catalog | RequestVerdict::Flight => {
+                ("200 OK", "application/json")
+            }
+            RequestVerdict::NotFound => ("404 Not Found", "text/plain"),
+            RequestVerdict::BadMethod => ("405 Method Not Allowed", "text/plain"),
+            RequestVerdict::Malformed => ("400 Bad Request", "text/plain"),
         };
-        if ok {
-            tm::TELEMETRY_SCRAPES_TOTAL.inc();
-            super::snapshot_into(snap);
-            encode_prometheus_into(body, snap);
-        } else {
-            tm::TELEMETRY_SCRAPE_ERRORS_TOTAL.inc();
-            body.clear();
-            body.push_str(status);
-            body.push('\n');
+        match verdict {
+            RequestVerdict::Metrics => {
+                tm::TELEMETRY_SCRAPES_TOTAL.inc();
+                super::snapshot_into(snap);
+                encode_prometheus_into(body, snap);
+            }
+            RequestVerdict::Healthz => {
+                tm::TELEMETRY_SCRAPES_TOTAL.inc();
+                let doc = Json::obj(vec![
+                    ("status", Json::Str("ok".into())),
+                    ("uptime_us", Json::Num(now_us().saturating_sub(start_us) as f64)),
+                    (
+                        "rounds_applied",
+                        Json::Num(tm::MASTER_ROUNDS_TOTAL.get() as f64),
+                    ),
+                ]);
+                body.clear();
+                body.push_str(&doc.to_string_compact());
+                body.push('\n');
+            }
+            RequestVerdict::Catalog => {
+                tm::TELEMETRY_SCRAPES_TOTAL.inc();
+                let entries: Vec<Json> = super::catalog()
+                    .iter()
+                    .map(|m| {
+                        let (kind, name, help) = match m {
+                            Metric::Counter(c) => ("counter", c.name(), c.help()),
+                            Metric::Gauge(g) => ("gauge", g.name(), g.help()),
+                            Metric::Histogram(h) => ("histogram", h.name(), h.help()),
+                        };
+                        Json::obj(vec![
+                            ("name", Json::Str(name.into())),
+                            ("kind", Json::Str(kind.into())),
+                            ("help", Json::Str(help.into())),
+                        ])
+                    })
+                    .collect();
+                body.clear();
+                body.push_str(&Json::Arr(entries).to_string_compact());
+                body.push('\n');
+            }
+            RequestVerdict::Flight => {
+                tm::TELEMETRY_SCRAPES_TOTAL.inc();
+                let doc = match flight {
+                    Some(fr) => fr.borrow().to_json(),
+                    None => Json::obj(vec![
+                        ("depth", Json::Num(0.0)),
+                        ("recorded", Json::Num(0.0)),
+                        ("dropped", Json::Num(0.0)),
+                        ("events", Json::Arr(Vec::new())),
+                    ]),
+                };
+                body.clear();
+                body.push_str(&doc.to_string_compact());
+                body.push('\n');
+            }
+            RequestVerdict::NotFound | RequestVerdict::BadMethod | RequestVerdict::Malformed => {
+                tm::TELEMETRY_SCRAPE_ERRORS_TOTAL.inc();
+                body.clear();
+                body.push_str(status);
+                body.push('\n');
+            }
         }
-        let ctype = if ok {
-            "text/plain; version=0.0.4"
-        } else {
-            "text/plain"
-        };
         conn.resp.clear();
         let _ = write!(
             conn.resp,
@@ -240,7 +332,13 @@ impl MetricsServer {
 
     /// Non-blocking read step; returns `false` when the connection
     /// should be dropped.
-    fn read_step(conn: &mut ScrapeConn, snap: &mut Snapshot, body: &mut String) -> bool {
+    fn read_step(
+        conn: &mut ScrapeConn,
+        snap: &mut Snapshot,
+        body: &mut String,
+        flight: Option<&Rc<RefCell<FlightRecorder>>>,
+        start_us: u64,
+    ) -> bool {
         let mut buf = [0u8; 1024];
         loop {
             match conn.stream.read(&mut buf) {
@@ -251,7 +349,7 @@ impl MetricsServer {
                 Ok(k) => {
                     conn.req.extend_from_slice(&buf[..k]);
                     if request_complete(&conn.req) || conn.req.len() > MAX_REQUEST_BYTES {
-                        Self::respond(conn, snap, body);
+                        Self::respond(conn, snap, body, flight, start_us);
                         return true;
                     }
                 }
@@ -301,6 +399,8 @@ impl PollHook for MetricsServer {
         // simply picked up next round
         let mut snap = std::mem::take(&mut self.snap);
         let mut body = std::mem::take(&mut self.body);
+        let flight = self.flight.clone();
+        let start_us = self.start_us;
         let n_polled = fds.len() - 1;
         let mut i = 0usize;
         self.conns.retain_mut(|c| {
@@ -313,7 +413,10 @@ impl PollHook for MetricsServer {
             if fd.failed() {
                 return false;
             }
-            if !c.responding && fd.readable() && !Self::read_step(c, &mut snap, &mut body) {
+            if !c.responding
+                && fd.readable()
+                && !Self::read_step(c, &mut snap, &mut body, flight.as_ref(), start_us)
+            {
                 return false;
             }
             if c.responding && (fd.writable() || fd.readable()) {
@@ -328,6 +431,9 @@ impl PollHook for MetricsServer {
 
 enum RequestVerdict {
     Metrics,
+    Healthz,
+    Catalog,
+    Flight,
     NotFound,
     BadMethod,
     Malformed,
@@ -337,7 +443,8 @@ fn request_complete(req: &[u8]) -> bool {
     req.windows(4).any(|w| w == b"\r\n\r\n") || req.windows(2).any(|w| w == b"\n\n")
 }
 
-/// Classify the request line: `GET /metrics` (or `GET /`) is a scrape;
+/// Classify the request line: `GET /metrics` (or `GET /`) is a scrape,
+/// `/healthz`, `/catalog`, and `/debug/flight` are the JSON sidecars;
 /// anything else is answered with the matching error status.
 fn parse_request(req: &[u8]) -> RequestVerdict {
     let Ok(text) = std::str::from_utf8(req) else {
@@ -359,6 +466,9 @@ fn parse_request(req: &[u8]) -> RequestVerdict {
     }
     match path {
         "/metrics" | "/" => RequestVerdict::Metrics,
+        "/healthz" => RequestVerdict::Healthz,
+        "/catalog" => RequestVerdict::Catalog,
+        "/debug/flight" => RequestVerdict::Flight,
         _ => RequestVerdict::NotFound,
     }
 }
@@ -418,6 +528,18 @@ t_dwell_us_count 10
         assert!(matches!(
             parse_request(b"GET / HTTP/1.0\r\n\r\n"),
             RequestVerdict::Metrics
+        ));
+        assert!(matches!(
+            parse_request(b"GET /healthz HTTP/1.1\r\n\r\n"),
+            RequestVerdict::Healthz
+        ));
+        assert!(matches!(
+            parse_request(b"GET /catalog HTTP/1.1\r\n\r\n"),
+            RequestVerdict::Catalog
+        ));
+        assert!(matches!(
+            parse_request(b"GET /debug/flight HTTP/1.1\r\n\r\n"),
+            RequestVerdict::Flight
         ));
         assert!(matches!(
             parse_request(b"GET /nope HTTP/1.1\r\n\r\n"),

@@ -1,0 +1,366 @@
+//! Flight recorder + online phase-anomaly detector (protocol v5).
+//!
+//! A production master cannot keep (or ship) every frame's latency
+//! breakdown, but when a straggler investigation starts, the *recent
+//! past* is exactly what's needed.  [`FlightRecorder`] is a bounded
+//! ring of structured events — frame phase breakdowns, replans, ring
+//! drops, anomalies — recorded allocation-free on the hot path
+//! (fixed-size numeric events, `&'static str` kinds, ring
+//! preallocated at construction) and dumped as JSON from the
+//! `MetricsServer`'s `/debug/flight` endpoint on demand.
+//!
+//! [`AnomalyDetector`] watches the per-worker phase EWMAs against the
+//! fleet median: a worker whose smoothed compute/queue/network/dwell
+//! phase exceeds `factor ×` the median of all workers' smoothed
+//! phases is flagged once (hysteresis re-arms after it recovers to
+//! half the firing threshold), bumping `straggler_anomaly_total` and
+//! dropping an `anomaly` event into the ring — the automatic flight
+//! dump the tentpole asks for.  Detection is pure observation: it
+//! reads frame timings already on the wire, consumes no RNG, and
+//! never touches the data path (inertness pinned by
+//! `tests/reactor_parity.rs`).
+
+use crate::util::json::Json;
+use crate::util::stats::Ewma;
+
+/// Default `/debug/flight` ring depth (`train --flight-depth`).
+pub const DEFAULT_FLIGHT_DEPTH: usize = 256;
+
+/// Default anomaly factor (`train --anomaly-factor`).
+pub const DEFAULT_ANOMALY_FACTOR: f64 = 4.0;
+
+/// EWMA weight for the per-worker per-phase smoothers.
+const PHASE_EWMA_ALPHA: f64 = 0.25;
+
+/// Observations a worker's phase needs before it can be flagged —
+/// one slow first frame (cold caches, page faults) is not an anomaly.
+const MIN_SAMPLES: u64 = 4;
+
+/// Fleet medians below this (ms) never flag: with everything
+/// effectively instant, ratios are noise.
+const MEDIAN_FLOOR_MS: f64 = 0.01;
+
+/// The four v5 latency phases, in wire order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Compute = 0,
+    Queue = 1,
+    Network = 2,
+    Dwell = 3,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 4] = [Phase::Compute, Phase::Queue, Phase::Network, Phase::Dwell];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Compute => "compute",
+            Phase::Queue => "queue",
+            Phase::Network => "network",
+            Phase::Dwell => "dwell",
+        }
+    }
+}
+
+/// One recorded event.  `vals` is kind-specific:
+///
+/// * `"phase"`  — `[compute_ms, queue_ms, network_ms, dwell_ms]`
+/// * `"anomaly"` — `[phase_idx, observed_ms, fleet_median_ms, factor]`
+/// * `"replan"` / `"ring_drop"` / anything else — free numeric slots
+#[derive(Debug, Clone, Default)]
+pub struct FlightEvent {
+    pub seq: u64,
+    pub ts_us: u64,
+    pub kind: &'static str,
+    pub round: i64,
+    pub worker: i64,
+    pub vals: [f64; 4],
+}
+
+impl FlightEvent {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("seq", Json::Num(self.seq as f64)),
+            ("ts_us", Json::Num(self.ts_us as f64)),
+            ("kind", Json::Str(self.kind.to_string())),
+            ("round", Json::Num(self.round as f64)),
+            ("worker", Json::Num(self.worker as f64)),
+            (
+                "vals",
+                Json::Arr(self.vals.iter().map(|&v| Json::Num(v)).collect()),
+            ),
+        ])
+    }
+}
+
+/// Bounded ring of recent [`FlightEvent`]s.  `record` is the hot path
+/// and allocation-free; `to_json` (the `/debug/flight` dump) allocates
+/// and is strictly cold.
+pub struct FlightRecorder {
+    ring: Vec<FlightEvent>,
+    head: usize,
+    len: usize,
+    seq: u64,
+    dropped: u64,
+}
+
+impl FlightRecorder {
+    pub fn new(depth: usize) -> Self {
+        let depth = depth.max(1);
+        Self {
+            ring: vec![FlightEvent::default(); depth],
+            head: 0,
+            len: 0,
+            seq: 0,
+            dropped: 0,
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.ring.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Events evicted by the ring wrapping (total recorded − retained).
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Record one event in place — no allocation, no branch on any
+    /// data-path state.
+    pub fn record(
+        &mut self,
+        ts_us: u64,
+        kind: &'static str,
+        round: i64,
+        worker: i64,
+        vals: [f64; 4],
+    ) {
+        let depth = self.ring.len();
+        let at = (self.head + self.len) % depth;
+        let slot = &mut self.ring[at];
+        slot.seq = self.seq;
+        slot.ts_us = ts_us;
+        slot.kind = kind;
+        slot.round = round;
+        slot.worker = worker;
+        slot.vals = vals;
+        self.seq += 1;
+        if self.len < depth {
+            self.len += 1;
+        } else {
+            self.head = (self.head + 1) % depth;
+            self.dropped += 1;
+        }
+    }
+
+    /// Oldest→newest iteration over the retained window.
+    pub fn iter(&self) -> impl Iterator<Item = &FlightEvent> {
+        let depth = self.ring.len();
+        (0..self.len).map(move |i| &self.ring[(self.head + i) % depth])
+    }
+
+    /// The `/debug/flight` document.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("depth", Json::Num(self.depth() as f64)),
+            ("recorded", Json::Num(self.seq as f64)),
+            ("dropped", Json::Num(self.dropped as f64)),
+            (
+                "events",
+                Json::Arr(self.iter().map(|e| e.to_json()).collect()),
+            ),
+        ])
+    }
+}
+
+/// A fired anomaly: which worker/phase, and the evidence.
+#[derive(Debug, Clone, Copy)]
+pub struct Anomaly {
+    pub worker: usize,
+    pub phase: Phase,
+    pub observed_ms: f64,
+    pub fleet_median_ms: f64,
+}
+
+/// Per-worker per-phase EWMA vs fleet-median watchdog.
+pub struct AnomalyDetector {
+    factor: f64,
+    /// `ewma[worker][phase]`
+    ewma: Vec<[Ewma; 4]>,
+    /// latched worker×phase pairs (hysteresis)
+    latched: Vec<[bool; 4]>,
+    /// scratch for the median scan — preallocated, hot-path alloc-free
+    scratch: Vec<f64>,
+    fired: u64,
+}
+
+impl AnomalyDetector {
+    pub fn new(n_workers: usize, factor: f64) -> Self {
+        assert!(factor > 1.0, "anomaly factor must exceed 1");
+        Self {
+            factor,
+            ewma: (0..n_workers)
+                .map(|_| std::array::from_fn(|_| Ewma::new(PHASE_EWMA_ALPHA)))
+                .collect(),
+            latched: vec![[false; 4]; n_workers],
+            scratch: Vec::with_capacity(n_workers),
+            fired: 0,
+        }
+    }
+
+    pub fn fired(&self) -> u64 {
+        self.fired
+    }
+
+    /// The configured firing threshold (× fleet median).
+    pub fn factor(&self) -> f64 {
+        self.factor
+    }
+
+    /// Feed one frame's phase reading; returns the anomaly if this
+    /// observation pushed the worker's smoothed phase over the
+    /// threshold (rising edge only — the latch holds until the worker
+    /// recovers below half the firing threshold).
+    pub fn observe(&mut self, worker: usize, phase: Phase, ms: f64) -> Option<Anomaly> {
+        if worker >= self.ewma.len() || !ms.is_finite() || ms < 0.0 {
+            return None;
+        }
+        let p = phase as usize;
+        self.ewma[worker][p].push(ms);
+        if self.ewma[worker][p].count() < MIN_SAMPLES {
+            return None;
+        }
+        // fleet median of the *other* workers' smoothed phase — the
+        // suspect must not drag its own median up in a small fleet
+        self.scratch.clear();
+        for (w, e) in self.ewma.iter().enumerate() {
+            if w != worker && e[p].count() > 0 {
+                self.scratch.push(e[p].mean());
+            }
+        }
+        if self.scratch.is_empty() {
+            return None;
+        }
+        self.scratch
+            .sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = self.scratch[self.scratch.len() / 2].max(MEDIAN_FLOOR_MS);
+        let smoothed = self.ewma[worker][p].mean();
+        if smoothed > self.factor * median {
+            if self.latched[worker][p] {
+                return None;
+            }
+            self.latched[worker][p] = true;
+            self.fired += 1;
+            Some(Anomaly {
+                worker,
+                phase,
+                observed_ms: smoothed,
+                fleet_median_ms: median,
+            })
+        } else {
+            if smoothed < self.factor * median / 2.0 {
+                self.latched[worker][p] = false;
+            }
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_retains_the_newest_depth_events() {
+        let mut fr = FlightRecorder::new(4);
+        assert!(fr.is_empty());
+        for i in 0..10u64 {
+            fr.record(i * 100, "phase", i as i64, 0, [i as f64, 0.0, 0.0, 0.0]);
+        }
+        assert_eq!((fr.len(), fr.depth(), fr.dropped()), (4, 4, 6));
+        let seqs: Vec<u64> = fr.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![6, 7, 8, 9]);
+        let j = fr.to_json().to_string_compact();
+        assert!(j.contains("\"dropped\":6") && j.contains("\"kind\":\"phase\""));
+        // the dump must parse back
+        let parsed = Json::parse(&j).unwrap();
+        assert_eq!(parsed.get("depth").and_then(Json::as_f64), Some(4.0));
+    }
+
+    #[test]
+    fn record_path_does_not_allocate_after_construction() {
+        // the ring is fully preallocated; recording past wrap reuses
+        // slots.  (The allocation pin itself lives in
+        // tests/telemetry.rs with the counting allocator.)
+        let mut fr = FlightRecorder::new(2);
+        for i in 0..100 {
+            fr.record(i, "ring_drop", -1, -1, [0.0; 4]);
+        }
+        assert_eq!(fr.len(), 2);
+        assert_eq!(fr.dropped(), 98);
+    }
+
+    #[test]
+    fn detector_fires_once_on_the_straggler_only() {
+        let mut det = AnomalyDetector::new(4, 4.0);
+        let mut fired = Vec::new();
+        for _round in 0..20 {
+            for w in 0..4usize {
+                let ms = if w == 2 { 50.0 } else { 1.0 };
+                if let Some(a) = det.observe(w, Phase::Compute, ms) {
+                    fired.push(a);
+                }
+            }
+        }
+        assert_eq!(fired.len(), 1, "latched: fires on the rising edge only");
+        assert_eq!(fired[0].worker, 2);
+        assert_eq!(fired[0].phase, Phase::Compute);
+        assert!(fired[0].observed_ms > 4.0 * fired[0].fleet_median_ms);
+        assert_eq!(det.fired(), 1);
+    }
+
+    #[test]
+    fn detector_rearms_after_recovery() {
+        let mut det = AnomalyDetector::new(3, 3.0);
+        let feed = |det: &mut AnomalyDetector, ms: f64, rounds: usize| {
+            let mut n = 0;
+            for _ in 0..rounds {
+                for w in 0..3usize {
+                    let v = if w == 0 { ms } else { 1.0 };
+                    if det.observe(w, Phase::Network, v).is_some() {
+                        n += 1;
+                    }
+                }
+            }
+            n
+        };
+        assert_eq!(feed(&mut det, 30.0, 15), 1, "first excursion fires once");
+        // recovery: EWMA decays below half the threshold → re-arm
+        assert_eq!(feed(&mut det, 1.0, 40), 0);
+        assert_eq!(feed(&mut det, 30.0, 15), 1, "second excursion re-fires");
+        assert_eq!(det.fired(), 2);
+    }
+
+    #[test]
+    fn detector_needs_min_samples_and_a_fleet() {
+        let mut det = AnomalyDetector::new(2, 2.0);
+        // fewer than MIN_SAMPLES observations never fire
+        for _ in 0..(MIN_SAMPLES - 1) {
+            assert!(det.observe(0, Phase::Dwell, 100.0).is_none());
+        }
+        // still nothing: worker 1 has no samples → no fleet baseline
+        assert!(det.observe(0, Phase::Dwell, 100.0).is_none());
+        for _ in 0..MIN_SAMPLES {
+            det.observe(1, Phase::Dwell, 1.0);
+        }
+        assert!(det.observe(0, Phase::Dwell, 100.0).is_some());
+    }
+}

@@ -27,26 +27,47 @@
 //! (`straggler_<subsystem>_<what>_<unit|total>`); EXPERIMENTS.md
 //! §Observability documents each series and the scrape workflow.
 
+pub mod clock;
 pub mod export;
+pub mod flight;
 pub mod registry;
 pub mod span;
 
+pub use clock::ClockSync;
 pub use export::{encode_prometheus_into, MetricsLog, MetricsServer};
+pub use flight::{AnomalyDetector, FlightEvent, FlightRecorder};
 pub use registry::{Counter, Gauge, HistSnapshot, Histogram, Snapshot};
 pub use span::{
     spans_from_trace, PhaseSummary, RoundSpan, SpanRecorder, SpanSummary, WastedWork,
     WorkerAttribution,
 };
 
-/// Telemetry wiring of one cluster run — both `None` means fully off
-/// (the default; the data path is bitwise identical either way).
-#[derive(Debug, Clone, Default)]
+/// Telemetry wiring of one cluster run — `addr`/`log` both `None`
+/// means fully off (the default; the data path is bitwise identical
+/// either way).
+#[derive(Debug, Clone)]
 pub struct MetricsConfig {
     /// `host:port` to serve Prometheus text-format scrapes on
     /// (`127.0.0.1:0` picks a free port, printed at startup).
     pub addr: Option<String>,
     /// Path of a JSONL metrics log appended once per applied round.
     pub log: Option<String>,
+    /// Flight-recorder ring depth (events retained for `/debug/flight`).
+    pub flight_depth: usize,
+    /// Anomaly threshold: a worker whose phase EWMA exceeds
+    /// `factor ×` the fleet median fires `straggler_anomaly_total`.
+    pub anomaly_factor: f64,
+}
+
+impl Default for MetricsConfig {
+    fn default() -> Self {
+        Self {
+            addr: None,
+            log: None,
+            flight_depth: flight::DEFAULT_FLIGHT_DEPTH,
+            anomaly_factor: flight::DEFAULT_ANOMALY_FACTOR,
+        }
+    }
 }
 
 impl MetricsConfig {
@@ -131,6 +152,32 @@ pub mod metrics {
     pub static ROUND_APPLY_MS: Histogram = Histogram::new(
         "straggler_round_apply_ms",
         "k-th distinct arrival to theta applied per round (ms)",
+    );
+
+    // ── latency anatomy (protocol v5 phase decomposition) ────────────
+    pub static PHASE_COMPUTE_MS: Histogram = Histogram::new(
+        "straggler_phase_compute_ms",
+        "Worker gradient-compute phase per Result frame (ms, worker clock)",
+    );
+    pub static PHASE_QUEUE_MS: Histogram = Histogram::new(
+        "straggler_phase_queue_ms",
+        "Worker-queue phase per frame: flush encode to delivery pickup (ms)",
+    );
+    pub static PHASE_NETWORK_MS: Histogram = Histogram::new(
+        "straggler_phase_network_ms",
+        "Network phase per frame: delivery send to master arrival, clock-mapped (ms)",
+    );
+    pub static PHASE_DWELL_MS: Histogram = Histogram::new(
+        "straggler_phase_dwell_ms",
+        "Master dwell phase per frame: arrival to aggregation loop (ms)",
+    );
+    pub static ANOMALY_TOTAL: Counter = Counter::new(
+        "straggler_anomaly_total",
+        "Phase anomalies flagged: worker phase EWMA exceeded factor x fleet median",
+    );
+    pub static CLOCK_OFFSET_US: Gauge = Gauge::new(
+        "straggler_clock_offset_us",
+        "Largest-magnitude estimated worker clock offset vs the master (us)",
     );
 
     // ── reactor data plane ───────────────────────────────────────────
@@ -248,6 +295,7 @@ pub fn catalog() -> &'static [Metric] {
         Metric::Counter(&m::DECODE_CACHE_EVICTIONS_TOTAL),
         Metric::Counter(&m::SIM_ROUNDS_TOTAL),
         Metric::Counter(&m::SIM_REPLANS_TOTAL),
+        Metric::Counter(&m::ANOMALY_TOTAL),
         Metric::Counter(&m::TELEMETRY_SCRAPES_TOTAL),
         Metric::Counter(&m::TELEMETRY_SCRAPE_ERRORS_TOTAL),
         Metric::Gauge(&m::AGGREGATOR_TASKS_DISTINCT),
@@ -256,12 +304,17 @@ pub fn catalog() -> &'static [Metric] {
         Metric::Gauge(&m::REACTOR_SEND_POOL_BUFFERS),
         Metric::Gauge(&m::SIM_ROUNDS_PER_SEC),
         Metric::Gauge(&m::SIM_EST_MEAN_MS),
+        Metric::Gauge(&m::CLOCK_OFFSET_US),
         Metric::Histogram(&m::MASTER_DWELL_US),
         Metric::Histogram(&m::ROUND_COMPLETION_MS),
         Metric::Histogram(&m::ROUND_WAIT_FIRST_MS),
         Metric::Histogram(&m::ROUND_COLLECT_MS),
         Metric::Histogram(&m::ROUND_DECODE_MS),
         Metric::Histogram(&m::ROUND_APPLY_MS),
+        Metric::Histogram(&m::PHASE_COMPUTE_MS),
+        Metric::Histogram(&m::PHASE_QUEUE_MS),
+        Metric::Histogram(&m::PHASE_NETWORK_MS),
+        Metric::Histogram(&m::PHASE_DWELL_MS),
         Metric::Histogram(&m::SIM_REPLAN_US),
     ];
     CATALOG

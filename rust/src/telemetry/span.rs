@@ -76,6 +76,12 @@ pub struct WorkerAttribution {
     pub critical_rounds: u64,
     /// Result frames this worker contributed in total.
     pub frames: u64,
+    /// Frames carrying a v5 phase decomposition.
+    pub phase_frames: u64,
+    /// Mean per-frame phase ms — `[compute, queue, network, dwell]`
+    /// from the v5 wire timestamps, clock-mapped onto the master
+    /// timeline; all zero when no timed frames were seen.
+    pub phase_mean_ms: [f64; 4],
 }
 
 /// One phase's distribution over the finished rounds, in milliseconds.
@@ -181,7 +187,16 @@ impl SpanSummary {
     pub fn attribution_table(&self) -> Table {
         let mut t = Table::new(
             "straggler attribution (k-th distinct deliveries)",
-            &["worker", "critical rounds", "critical %", "frames"],
+            &[
+                "worker",
+                "critical rounds",
+                "critical %",
+                "frames",
+                "compute ms",
+                "queue ms",
+                "network ms",
+                "dwell ms",
+            ],
         );
         let attributed: u64 = self.attribution.iter().map(|a| a.critical_rounds).sum();
         for a in &self.attribution {
@@ -195,6 +210,10 @@ impl SpanSummary {
                 a.critical_rounds.to_string(),
                 Table::fmt(pct),
                 a.frames.to_string(),
+                Table::fmt(a.phase_mean_ms[0]),
+                Table::fmt(a.phase_mean_ms[1]),
+                Table::fmt(a.phase_mean_ms[2]),
+                Table::fmt(a.phase_mean_ms[3]),
             ]);
         }
         t
@@ -216,15 +235,19 @@ impl SpanSummary {
         t
     }
 
-    /// Machine-readable form for `train`'s JSON output path.
+    /// Machine-readable form for `train`'s JSON output path and
+    /// `trace report --json`.  Zero-count phases carry NaN stats
+    /// internally; those emit as `null` so the output stays strictly
+    /// valid JSON for downstream parsers.
     pub fn to_json(&self) -> Json {
-        let phase = |p: &PhaseSummary| {
+        let num = |x: f64| if x.is_finite() { Json::Num(x) } else { Json::Null };
+        let phase = move |p: &PhaseSummary| {
             Json::obj(vec![
                 ("rounds", Json::Num(p.count as f64)),
-                ("mean_ms", Json::Num(p.mean_ms)),
-                ("p50_ms", Json::Num(p.p50_ms)),
-                ("p99_ms", Json::Num(p.p99_ms)),
-                ("max_ms", Json::Num(p.max_ms)),
+                ("mean_ms", num(p.mean_ms)),
+                ("p50_ms", num(p.p50_ms)),
+                ("p99_ms", num(p.p99_ms)),
+                ("max_ms", num(p.max_ms)),
             ])
         };
         Json::obj(vec![
@@ -244,6 +267,11 @@ impl SpanSummary {
                                 ("worker", Json::Num(a.worker as f64)),
                                 ("critical_rounds", Json::Num(a.critical_rounds as f64)),
                                 ("frames", Json::Num(a.frames as f64)),
+                                ("phase_frames", Json::Num(a.phase_frames as f64)),
+                                ("compute_ms", Json::Num(a.phase_mean_ms[0])),
+                                ("queue_ms", Json::Num(a.phase_mean_ms[1])),
+                                ("network_ms", Json::Num(a.phase_mean_ms[2])),
+                                ("dwell_ms", Json::Num(a.phase_mean_ms[3])),
                             ])
                         })
                         .collect(),
@@ -283,6 +311,9 @@ pub struct SpanRecorder {
     apply: PhaseAcc,
     critical_rounds: Vec<u64>,
     frames_by_worker: Vec<u64>,
+    /// Per-worker running stats of the four v5 phases
+    /// (`[compute, queue, network, dwell]`, ms).
+    worker_phase: Vec<[RunningStats; 4]>,
     wasted: WastedWork,
 }
 
@@ -312,6 +343,7 @@ impl SpanRecorder {
             apply: PhaseAcc::default(),
             critical_rounds: vec![0; n_workers],
             frames_by_worker: vec![0; n_workers],
+            worker_phase: vec![Default::default(); n_workers],
             wasted: WastedWork::default(),
         }
     }
@@ -346,6 +378,34 @@ impl SpanRecorder {
         if let Some(sp) = self.slot(round) {
             sp.frames += 1;
             sp.first_frame_us.get_or_insert(t_us);
+        }
+    }
+
+    /// One frame's v5 latency decomposition (ms, already clock-mapped
+    /// onto the master timeline by `telemetry/clock.rs`): compute →
+    /// worker-queue → network → master-dwell.  Feeds the per-worker
+    /// attribution means and, on the live plane, the
+    /// `straggler_phase_*` registry histograms.
+    pub fn phases(
+        &mut self,
+        worker: usize,
+        comp_ms: f64,
+        queue_ms: f64,
+        net_ms: f64,
+        dwell_ms: f64,
+    ) {
+        if worker < self.worker_phase.len() {
+            let acc = &mut self.worker_phase[worker];
+            acc[0].push(comp_ms);
+            acc[1].push(queue_ms);
+            acc[2].push(net_ms);
+            acc[3].push(dwell_ms);
+        }
+        if self.publish {
+            tm::PHASE_COMPUTE_MS.record(comp_ms);
+            tm::PHASE_QUEUE_MS.record(queue_ms);
+            tm::PHASE_NETWORK_MS.record(net_ms);
+            tm::PHASE_DWELL_MS.record(dwell_ms);
         }
     }
 
@@ -472,10 +532,21 @@ impl SpanRecorder {
                 .iter()
                 .zip(&self.frames_by_worker)
                 .enumerate()
-                .map(|(w, (&c, &f))| WorkerAttribution {
-                    worker: w,
-                    critical_rounds: c,
-                    frames: f,
+                .map(|(w, (&c, &f))| {
+                    let ph = &self.worker_phase[w];
+                    WorkerAttribution {
+                        worker: w,
+                        critical_rounds: c,
+                        frames: f,
+                        phase_frames: ph[0].count(),
+                        phase_mean_ms: std::array::from_fn(|i| {
+                            if ph[i].count() == 0 {
+                                0.0
+                            } else {
+                                ph[i].mean()
+                            }
+                        }),
+                    }
                 })
                 .collect(),
             wasted: self.wasted,
@@ -572,6 +643,26 @@ mod tests {
     }
 
     #[test]
+    fn phase_means_attribute_per_worker() {
+        let mut rec = SpanRecorder::silent(2, 1);
+        rec.phases(0, 2.0, 0.1, 0.5, 0.05);
+        rec.phases(0, 4.0, 0.3, 1.5, 0.15);
+        rec.phases(1, 1.0, 0.2, 8.0, 0.1); // the slow-wire worker
+        let s = rec.summary();
+        assert_eq!(s.attribution[0].phase_frames, 2);
+        assert!((s.attribution[0].phase_mean_ms[0] - 3.0).abs() < 1e-9);
+        assert!((s.attribution[0].phase_mean_ms[1] - 0.2).abs() < 1e-9);
+        assert!((s.attribution[0].phase_mean_ms[2] - 1.0).abs() < 1e-9);
+        assert!((s.attribution[0].phase_mean_ms[3] - 0.1).abs() < 1e-9);
+        assert!((s.attribution[1].phase_mean_ms[2] - 8.0).abs() < 1e-9);
+        // out-of-range workers are ignored, not a panic
+        rec.phases(9, 1.0, 1.0, 1.0, 1.0);
+        // JSON carries the phase columns
+        let j = rec.summary().to_json().to_string_compact();
+        assert!(j.contains("\"network_ms\":8") && j.contains("\"phase_frames\":2"));
+    }
+
+    #[test]
     fn window_ring_isolates_concurrent_rounds() {
         let mut rec = SpanRecorder::silent(2, 2);
         rec.begin(0, 0);
@@ -628,6 +719,7 @@ mod tests {
             slot,
             tasks: 1,
             compute_s,
+            queue_s: 0.0,
             comm_s,
             bytes: 64,
             scheme: "CS".into(),

@@ -28,9 +28,13 @@ use crate::util::json::Json;
 pub const TRACE_FORMAT: &str = "straggler-trace/v1";
 
 /// Magic prefix of the binary codec (7 bytes + 1 version byte).
-/// `\x02` adds the per-event θ-version tag; `\x01` traces (no tag) are
-/// still accepted and load with `version = 0`.
-pub const BINARY_MAGIC: &[u8; 8] = b"STRGTRC\x02";
+/// `\x03` adds the measured worker-queue delay (`queue_s`); `\x02`
+/// (θ-version tag, no queue) and `\x01` (neither) traces are still
+/// accepted and load with the missing fields zeroed.
+pub const BINARY_MAGIC: &[u8; 8] = b"STRGTRC\x03";
+
+/// The pre-latency-anatomy binary magic — readable, never written.
+pub const BINARY_MAGIC_V2: &[u8; 8] = b"STRGTRC\x02";
 
 /// The pre-async binary magic — readable, never written.
 pub const BINARY_MAGIC_V1: &[u8; 8] = b"STRGTRC\x01";
@@ -53,6 +57,11 @@ pub struct TraceEvent {
     pub compute_s: f64,
     /// Communication delay of the delivery, in **seconds**.
     pub comm_s: f64,
+    /// Worker-side queueing delay of the delivery (flush enqueue →
+    /// wire send, measured on the worker's own clock), in **seconds**.
+    /// `0` for simulated traces and for recordings made before the
+    /// protocol carried worker timestamps.
+    pub queue_s: f64,
     /// On-wire frame bytes (length prefix + payload); `0` for
     /// simulated traces.
     pub bytes: u64,
@@ -78,6 +87,9 @@ impl TraceEvent {
         if !(self.comm_s.is_finite() && self.comm_s >= 0.0) {
             bail!("trace event comm_s must be finite and ≥ 0, got {}", self.comm_s);
         }
+        if !(self.queue_s.is_finite() && self.queue_s >= 0.0) {
+            bail!("trace event queue_s must be finite and ≥ 0, got {}", self.queue_s);
+        }
         if self.scheme.is_empty() {
             bail!("trace event needs a scheme label");
         }
@@ -100,6 +112,7 @@ impl TraceEvent {
             ("tasks", Json::Num(self.tasks as f64)),
             ("compute_s", Json::Num(self.compute_s)),
             ("comm_s", Json::Num(self.comm_s)),
+            ("queue_s", Json::Num(self.queue_s)),
             ("bytes", Json::Num(self.bytes as f64)),
             ("scheme", Json::Str(self.scheme.clone())),
             ("replanned", Json::Bool(self.replanned)),
@@ -126,6 +139,12 @@ impl TraceEvent {
             tasks: u32_field("tasks")?,
             compute_s: f64_field("compute_s")?,
             comm_s: f64_field("comm_s")?,
+            // optional: pre-latency-anatomy traces carry no worker-side
+            // queue measurement — they load as 0
+            queue_s: match v.get("queue_s") {
+                None => 0.0,
+                Some(x) => x.as_f64().context("trace event `queue_s` must be a number")?,
+            },
             bytes: v
                 .get("bytes")
                 .and_then(Json::as_usize)
@@ -290,6 +309,17 @@ impl TraceStore {
             .collect()
     }
 
+    /// Per-message worker-queue delays of `worker` in milliseconds
+    /// (one observation per event, like [`TraceStore::comm_ms`]; all
+    /// zero for simulated and pre-latency-anatomy traces).
+    pub fn queue_ms(&self, worker: usize) -> Vec<f64> {
+        self.events
+            .iter()
+            .filter(|e| e.worker as usize == worker)
+            .map(|e| e.queue_s * 1e3)
+            .collect()
+    }
+
     /// Every worker's `(comp, comm)` millisecond samples in one pass
     /// over the events — what the fitting and replay layers consume
     /// (the per-worker accessors above are O(events) *each*; on an
@@ -380,7 +410,7 @@ impl TraceStore {
     /// (`to_le_bytes`/`from_le_bytes`).
     pub fn to_binary(&self) -> Vec<u8> {
         let schemes = self.schemes();
-        let mut out = Vec::with_capacity(20 + self.events.len() * 45);
+        let mut out = Vec::with_capacity(20 + self.events.len() * 53);
         out.extend_from_slice(BINARY_MAGIC);
         out.extend_from_slice(&self.declared_workers.unwrap_or(0).to_le_bytes());
         out.extend_from_slice(&(schemes.len() as u32).to_le_bytes());
@@ -401,6 +431,7 @@ impl TraceStore {
             out.push(ev.replanned as u8);
             out.extend_from_slice(&ev.compute_s.to_le_bytes());
             out.extend_from_slice(&ev.comm_s.to_le_bytes());
+            out.extend_from_slice(&ev.queue_s.to_le_bytes());
         }
         out
     }
@@ -426,12 +457,15 @@ impl TraceStore {
         }
         let mut pos = 0usize;
         let magic = take(bytes, &mut pos, BINARY_MAGIC.len())?;
-        // v2 carries the per-event θ-version tag; v1 (pre-async) traces
-        // are still readable — their events load with version = 0
-        let has_version = if magic == BINARY_MAGIC {
-            true
+        // v3 carries the worker-queue delay, v2 the per-event θ-version
+        // tag; older traces are still readable — their events load with
+        // the missing fields zeroed
+        let (has_version, has_queue) = if magic == BINARY_MAGIC {
+            (true, true)
+        } else if magic == BINARY_MAGIC_V2 {
+            (true, false)
         } else if magic == BINARY_MAGIC_V1 {
-            false
+            (false, false)
         } else {
             bail!("not a binary straggler trace (bad magic)");
         };
@@ -464,6 +498,7 @@ impl TraceStore {
             let replanned = take(bytes, &mut pos, 1)?[0] != 0;
             let compute_s = f64_at(bytes, &mut pos)?;
             let comm_s = f64_at(bytes, &mut pos)?;
+            let queue_s = if has_queue { f64_at(bytes, &mut pos)? } else { 0.0 };
             let ev = TraceEvent {
                 worker,
                 round,
@@ -471,6 +506,7 @@ impl TraceStore {
                 tasks,
                 compute_s,
                 comm_s,
+                queue_s,
                 bytes: wire,
                 scheme: schemes
                     .get(scheme_idx)
@@ -498,7 +534,10 @@ impl TraceStore {
     pub fn load(path: &Path) -> Result<Self> {
         let bytes = std::fs::read(path)
             .with_context(|| format!("reading trace {}", path.display()))?;
-        if bytes.starts_with(BINARY_MAGIC) || bytes.starts_with(BINARY_MAGIC_V1) {
+        if bytes.starts_with(BINARY_MAGIC)
+            || bytes.starts_with(BINARY_MAGIC_V2)
+            || bytes.starts_with(BINARY_MAGIC_V1)
+        {
             Self::from_binary(&bytes)
         } else {
             let text = std::str::from_utf8(&bytes)
@@ -586,6 +625,7 @@ impl TraceRecorder {
             tasks: 1,
             compute_s: comp_ms * 1e-3,
             comm_s: comm_ms * 1e-3,
+            queue_s: 0.0,
             bytes: 0,
             scheme: self.scheme.clone(),
             replanned,
@@ -596,9 +636,9 @@ impl TraceRecorder {
     }
 
     /// Record one measured cluster flush: `tasks` tasks computed in
-    /// `comp_total_ms`, delivered with `comm_ms` of wire delay in a
-    /// `bytes`-byte frame; `msg_idx` is the message's index within the
-    /// worker's round.
+    /// `comp_total_ms`, delivered with `comm_ms` of wire delay after
+    /// `queue_ms` of worker-side queueing, in a `bytes`-byte frame;
+    /// `msg_idx` is the message's index within the worker's round.
     /// Panics on an invalid frame (zero tasks, non-finite/negative
     /// delay) — same tap-time guarantee as [`TraceRecorder::push_slot`].
     #[allow(clippy::too_many_arguments)]
@@ -610,6 +650,7 @@ impl TraceRecorder {
         tasks: usize,
         comp_total_ms: f64,
         comm_ms: f64,
+        queue_ms: f64,
         bytes: usize,
         replanned: bool,
         version: u32,
@@ -621,6 +662,7 @@ impl TraceRecorder {
             tasks: tasks as u32,
             compute_s: comp_total_ms * 1e-3,
             comm_s: comm_ms * 1e-3,
+            queue_s: queue_ms * 1e-3,
             bytes: bytes as u64,
             scheme: self.scheme.clone(),
             replanned,
@@ -644,8 +686,8 @@ mod tests {
 
     fn sample_store() -> TraceStore {
         let mut rec = TraceRecorder::new("GC(2)");
-        rec.push_flush(0, 0, 0, 2, 3.25, 5.5, 2088, false, 0);
-        rec.push_flush(0, 1, 0, 2, 9.75, 6.25, 2088, false, 0);
+        rec.push_flush(0, 0, 0, 2, 3.25, 5.5, 0.75, 2088, false, 0);
+        rec.push_flush(0, 1, 0, 2, 9.75, 6.25, 0.5, 2088, false, 0);
         rec.push_slot(1, 0, 0, 1.625, 5.0, true, 1);
         rec.into_store()
     }
@@ -663,6 +705,9 @@ mod tests {
         // comm is per message: one observation per event
         assert_eq!(s.comm_ms(0), vec![5.5, 5.0]);
         assert_eq!(s.comm_ms(1), vec![6.25]);
+        // queue rides messages too; simulated slots record zero
+        assert_eq!(s.queue_ms(0), vec![0.75, 0.0]);
+        assert_eq!(s.queue_ms(1), vec![0.5]);
     }
 
     #[test]
@@ -765,6 +810,9 @@ mod tests {
         ev.compute_s = f64::NAN;
         assert!(TraceStore::new(vec![ev]).is_err());
         let mut ev = sample_store().events()[0].clone();
+        ev.queue_s = -1.0;
+        assert!(TraceStore::new(vec![ev]).is_err());
+        let mut ev = sample_store().events()[0].clone();
         ev.tasks = 0;
         assert!(TraceStore::new(vec![ev]).is_err());
         // a θ-version ahead of its round is a corrupt tag
@@ -779,7 +827,7 @@ mod tests {
         // an async recording: round 4 computed against θ-version 2
         let mut rec = TraceRecorder::with_fleet("CS@s3", 2);
         rec.push_slot(4, 0, 0, 0.1, 0.5, false, 2);
-        rec.push_flush(4, 1, 0, 2, 0.2, 0.5, 1024, false, 2);
+        rec.push_flush(4, 1, 0, 2, 0.2, 0.5, 0.1, 1024, false, 2);
         let store = rec.into_store();
         for back in [
             TraceStore::from_jsonl(&store.to_jsonl()).unwrap(),
@@ -797,6 +845,8 @@ mod tests {
         );
         let back = TraceStore::from_jsonl(&legacy).unwrap();
         assert_eq!(back.events()[0].version, 0);
+        // ...and no `queue_s` key either — loads as zero queueing
+        assert_eq!(back.events()[0].queue_s, 0.0);
     }
 
     #[test]
@@ -823,7 +873,36 @@ mod tests {
         assert_eq!(back.len(), 1);
         assert_eq!(back.events()[0].round, 7);
         assert_eq!(back.events()[0].version, 0);
-        // and re-saving upgrades it to the v2 magic
+        assert_eq!(back.events()[0].queue_s, 0.0);
+        // and re-saving upgrades it to the current magic
+        assert!(back.to_binary().starts_with(BINARY_MAGIC));
+    }
+
+    #[test]
+    fn legacy_v2_binary_traces_still_load() {
+        // hand-build a v2 (θ-version tag, no queue_s) binary trace: one
+        // CS event at round 7 / version 3 — must load with queue_s = 0
+        let mut bin = Vec::new();
+        bin.extend_from_slice(BINARY_MAGIC_V2);
+        bin.extend_from_slice(&0u32.to_le_bytes()); // fleet undeclared
+        bin.extend_from_slice(&1u32.to_le_bytes()); // one scheme
+        bin.extend_from_slice(&2u32.to_le_bytes());
+        bin.extend_from_slice(b"CS");
+        bin.extend_from_slice(&1u64.to_le_bytes()); // one event
+        bin.extend_from_slice(&0u32.to_le_bytes()); // worker
+        bin.extend_from_slice(&7u32.to_le_bytes()); // round
+        bin.extend_from_slice(&3u32.to_le_bytes()); // version
+        bin.extend_from_slice(&0u32.to_le_bytes()); // slot
+        bin.extend_from_slice(&1u32.to_le_bytes()); // tasks
+        bin.extend_from_slice(&0u32.to_le_bytes()); // scheme idx
+        bin.extend_from_slice(&0u64.to_le_bytes()); // bytes
+        bin.push(0); // replanned
+        bin.extend_from_slice(&0.001f64.to_le_bytes());
+        bin.extend_from_slice(&0.002f64.to_le_bytes()); // no queue_s!
+        let back = TraceStore::from_binary(&bin).unwrap();
+        assert_eq!(back.len(), 1);
+        assert_eq!(back.events()[0].version, 3);
+        assert_eq!(back.events()[0].queue_s, 0.0);
         assert!(back.to_binary().starts_with(BINARY_MAGIC));
     }
 }

@@ -9,6 +9,7 @@ pub mod json;
 pub mod math;
 pub mod poll;
 pub mod rng;
+pub mod signal;
 pub mod stats;
 
 pub use combin::{binomial_f64, subsets_of_size};

@@ -1,0 +1,306 @@
+//! End-to-end latency anatomy: run a real in-process fleet with a
+//! **deterministic** injected delay profile (`DelayModelKind::Fixed` —
+//! known ground truth per phase, one worker slowed by a known factor)
+//! and assert that the master's v5 wire-timestamp decomposition
+//! recovers the injected compute/comm split per worker, that the
+//! anomaly watchdog fires on exactly the injected straggler, and that
+//! the `/debug/flight` endpoint serves the recorder ring mid-run.
+//!
+//! The geometry (CS, `r = 1`, `k = n`) puts every worker on the
+//! critical path each round, so the straggler's frames always arrive
+//! inside the collect window and feed the anatomy (stale frames are
+//! dropped before observation — see the sync loop).
+//!
+//! Tolerances are one-sided where the substrate guarantees a bound
+//! (`spin_sleep` never undershoots, so measured compute ≥ injected
+//! compute) and ratio-based elsewhere: the clock-offset estimator may
+//! legitimately absorb up to half a worker's min RTT into the network
+//! phase, so absolute floors stay below `inj_comm / 2`.
+
+use std::io::{Read as _, Write as _};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use straggler_sched::adaptive::PolicyKind;
+use straggler_sched::coordinator::{run_cluster, ClusterConfig, IoMode};
+use straggler_sched::data::Dataset;
+use straggler_sched::delay::DelayModelKind;
+use straggler_sched::scheme::{SchemeId, SchemeRegistry};
+use straggler_sched::telemetry::{metrics as tm, MetricsConfig};
+use straggler_sched::util::json::Json;
+
+/// Injected ground truth, generous enough to dominate scheduling noise.
+const COMP_MS: f64 = 2.0;
+const COMM_MS: f64 = 0.5;
+const STRAGGLER: usize = 2;
+const FACTOR: f64 = 8.0;
+
+/// Parse a `/debug/flight` HTTP response into its event list:
+/// `(kind, worker, phase_idx)` per event (`phase_idx` only meaningful
+/// for anomaly events — `vals[0]` on the wire).
+fn flight_events(dump: &str) -> Vec<(String, f64, f64)> {
+    let body = dump
+        .split_once("\r\n\r\n")
+        .map(|(_, b)| b)
+        .expect("flight response has no body");
+    let doc = Json::parse(body.trim()).expect("flight dump must be valid JSON");
+    let events = match doc.get("events") {
+        Some(Json::Arr(evs)) => evs.clone(),
+        other => panic!("flight dump events: {other:?}"),
+    };
+    events
+        .iter()
+        .map(|ev| {
+            let kind = ev
+                .get("kind")
+                .and_then(Json::as_str)
+                .expect("event kind")
+                .to_string();
+            let worker = ev.get("worker").and_then(Json::as_f64).expect("event worker");
+            let phase_idx = match ev.get("vals") {
+                Some(Json::Arr(vals)) => vals[0].as_f64().expect("vals[0]"),
+                other => panic!("event vals: {other:?}"),
+            };
+            (kind, worker, phase_idx)
+        })
+        .collect()
+}
+
+/// Does the dump carry an anomaly event on `worker`'s compute or
+/// network phase — the two the injection actually perturbs?
+fn has_injected_anomaly(dump: &str, worker: usize) -> bool {
+    flight_events(dump).iter().any(|(kind, w, phase)| {
+        kind == "anomaly" && *w as usize == worker && (*phase == 0.0 || *phase == 2.0)
+    })
+}
+
+/// Poll `GET /debug/flight` against the master's scrape listener until
+/// a dump carrying the straggler's anomaly appears (or the run ends).
+/// The listener only exists while `run_cluster` is live, so early
+/// connects fail and are retried; the last successful dump is kept
+/// either way.
+fn poll_flight(addr: String, stop: Arc<AtomicBool>) -> Option<String> {
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let mut last: Option<String> = None;
+    while Instant::now() < deadline {
+        let done = stop.load(Ordering::Relaxed);
+        if let Ok(mut s) = TcpStream::connect(&addr) {
+            let _ = s.set_read_timeout(Some(Duration::from_secs(5)));
+            if s.write_all(b"GET /debug/flight HTTP/1.1\r\n\r\n").is_ok() {
+                let mut resp = Vec::new();
+                let mut buf = [0u8; 65536];
+                loop {
+                    match s.read(&mut buf) {
+                        Ok(0) => break,
+                        Ok(k) => resp.extend_from_slice(&buf[..k]),
+                        Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                        Err(_) => break,
+                    }
+                }
+                let text = String::from_utf8_lossy(&resp).into_owned();
+                if text.starts_with("HTTP/1.1 200") {
+                    let hit = has_injected_anomaly(&text, STRAGGLER);
+                    last = Some(text);
+                    if hit {
+                        return last;
+                    }
+                }
+            }
+        }
+        if done {
+            // one post-shutdown attempt already happened above; the
+            // listener died with the master, so whatever we saw last
+            // is the final word
+            return last;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    last
+}
+
+#[test]
+fn injected_straggler_phases_are_recovered_and_flagged() {
+    let (n, r, k, rounds) = (4usize, 1usize, 4usize, 60usize);
+
+    // the registry is process-global and cumulative — assert on deltas
+    let anomalies_before = tm::ANOMALY_TOTAL.get();
+
+    // reserve a port for the scrape listener so the poller knows the
+    // address before `run_cluster` binds it (same trick the parity
+    // harness uses for the master's own listener)
+    let metrics_addr = {
+        let probe = TcpListener::bind("127.0.0.1:0").expect("probe bind");
+        probe.local_addr().expect("probe addr").to_string()
+    };
+    let stop = Arc::new(AtomicBool::new(false));
+    let poller = {
+        let addr = metrics_addr.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || poll_flight(addr, stop))
+    };
+
+    let report = run_cluster(ClusterConfig {
+        n,
+        r,
+        k,
+        eta: 0.05,
+        rounds,
+        profile: "quickstart".into(),
+        plan: SchemeRegistry::cluster_plan(SchemeId::Cs, n, r, k)
+            .unwrap_or_else(|e| panic!("CS plan: {e:#}")),
+        policy: PolicyKind::Static,
+        staleness: 1,
+        dataset: Dataset::synthesize(n, 16, n * 8, 42),
+        inject: Some(DelayModelKind::Fixed {
+            comp_ms: COMP_MS,
+            comm_ms: COMM_MS,
+            straggler: Some(STRAGGLER),
+            factor: FACTOR,
+        }),
+        seed: 7,
+        use_pjrt: false,
+        artifact_dir: None,
+        loss_every: 1,
+        listen: None,
+        spawn_workers: true,
+        io: IoMode::Reactor,
+        metrics: MetricsConfig {
+            addr: Some(metrics_addr),
+            log: None,
+            ..MetricsConfig::default()
+        },
+    })
+    .unwrap_or_else(|e| panic!("anatomy master run: {e:#}"));
+    stop.store(true, Ordering::Relaxed);
+
+    assert_eq!(report.rounds.len(), rounds);
+    assert!(report.final_loss.is_finite());
+
+    // ---- phase recovery from the report's per-worker attribution ----------
+    let attr = &report.spans.attribution;
+    assert_eq!(attr.len(), n);
+    let strag = attr
+        .iter()
+        .find(|a| a.worker == STRAGGLER)
+        .expect("straggler attribution row");
+    assert!(
+        strag.phase_frames > 0,
+        "the straggler's frames must reach the anatomy"
+    );
+    // compute: spin_sleep never undershoots, so the measured phase is
+    // bounded below by the injection
+    let strag_comp = strag.phase_mean_ms[0];
+    assert!(
+        strag_comp >= COMP_MS * FACTOR - 0.1,
+        "straggler compute {strag_comp:.3} ms < injected {:.1} ms",
+        COMP_MS * FACTOR
+    );
+    let other_comp: Vec<f64> = attr
+        .iter()
+        .filter(|a| a.worker != STRAGGLER)
+        .map(|a| a.phase_mean_ms[0])
+        .collect();
+    for (i, &c) in other_comp.iter().enumerate() {
+        assert!(
+            c >= COMP_MS - 0.1,
+            "non-straggler {i} compute {c:.3} ms < injected {COMP_MS:.1} ms"
+        );
+    }
+    let other_comp_mean = other_comp.iter().sum::<f64>() / other_comp.len() as f64;
+    assert!(
+        strag_comp > 2.5 * other_comp_mean,
+        "injected ×{FACTOR} compute factor not recovered: \
+         straggler {strag_comp:.3} ms vs fleet {other_comp_mean:.3} ms"
+    );
+
+    // network: the comm injection happens after the send stamp, so it
+    // lands in the measured network phase.  The offset estimator can
+    // absorb at most ~min-RTT/2 ≈ inj_comm/2, hence the floor below
+    // COMM_MS × FACTOR / 2.
+    let strag_net = strag.phase_mean_ms[2];
+    assert!(
+        strag_net >= 1.5,
+        "straggler network {strag_net:.3} ms lost the {:.1} ms comm injection",
+        COMM_MS * FACTOR
+    );
+    let other_net_mean = attr
+        .iter()
+        .filter(|a| a.worker != STRAGGLER)
+        .map(|a| a.phase_mean_ms[2])
+        .sum::<f64>()
+        / (n - 1) as f64;
+    assert!(
+        strag_net > 1.5 * other_net_mean,
+        "straggler network {strag_net:.3} ms vs fleet {other_net_mean:.3} ms"
+    );
+    // the recovered compute/comm split stays near the injected 16:4
+    // (estimator slack allows up to ~16:2)
+    let split = strag_comp / strag_net;
+    assert!(
+        (1.5..=14.0).contains(&split),
+        "straggler compute/comm split {split:.2} strayed from the injected \
+         {:.1}",
+        (COMP_MS * FACTOR) / (COMM_MS * FACTOR)
+    );
+    // queue: enqueue → send inside the delivery handoff — must be a
+    // sane small duration, never negative (saturating by construction)
+    for a in attr {
+        assert!(
+            a.phase_mean_ms[1].is_finite() && a.phase_mean_ms[1] >= 0.0,
+            "worker {} queue phase: {}",
+            a.worker,
+            a.phase_mean_ms[1]
+        );
+    }
+
+    // ---- the same split reaches the measured trace ------------------------
+    let strag_trace_comm = report.trace.comm_ms(STRAGGLER);
+    assert!(!strag_trace_comm.is_empty());
+    let trace_net_mean =
+        strag_trace_comm.iter().sum::<f64>() / strag_trace_comm.len() as f64;
+    assert!(
+        trace_net_mean >= 1.5,
+        "trace comm for the straggler lost the injection: {trace_net_mean:.3} ms"
+    );
+
+    // ---- anomaly watchdog -------------------------------------------------
+    assert!(
+        tm::ANOMALY_TOTAL.get() > anomalies_before,
+        "the ×{FACTOR} straggler must trip the anomaly detector"
+    );
+
+    // ---- /debug/flight served the ring mid-run ----------------------------
+    let dump = poller
+        .join()
+        .expect("flight poller panicked")
+        .expect("/debug/flight was never served during the run");
+    let events = flight_events(&dump);
+    assert!(!events.is_empty(), "flight ring empty mid-run");
+    let mut straggler_anomalies = 0usize;
+    for (kind, worker, phase_idx) in &events {
+        match kind.as_str() {
+            "phase" => assert!((0.0..n as f64).contains(worker)),
+            "anomaly" => {
+                // exactness on the phases the injection perturbs: a
+                // compute or network anomaly may only name the injected
+                // straggler (queue/dwell are scheduling-noise phases
+                // the injection leaves alone, so they are not pinned)
+                if *phase_idx == 0.0 || *phase_idx == 2.0 {
+                    assert_eq!(
+                        *worker as usize, STRAGGLER,
+                        "anomaly flagged worker {worker}, injected straggler \
+                         is {STRAGGLER}"
+                    );
+                    straggler_anomalies += 1;
+                }
+            }
+            other => panic!("unexpected flight event kind {other:?}"),
+        }
+    }
+    assert!(
+        straggler_anomalies > 0,
+        "the dump that ended the poll must carry the straggler's anomaly"
+    );
+}

@@ -22,7 +22,7 @@ use std::time::{Duration, Instant};
 use straggler_sched::adaptive::PolicyKind;
 use straggler_sched::coordinator::framebuf::encode_result_into;
 use straggler_sched::coordinator::{
-    run_cluster, ClusterConfig, ClusterReport, IoMode, Msg, RoundLog,
+    now_us, run_cluster, ClusterConfig, ClusterReport, IoMode, Msg, RoundLog,
 };
 use straggler_sched::data::Dataset;
 use straggler_sched::linalg::{vec_axpy, Mat};
@@ -59,8 +59,10 @@ fn connect_retry(addr: &str) -> TcpStream {
 /// Emulate `run_worker`'s grouped-flush loop for one Assign (without the
 /// stop watermark — the script always completes its row, which is
 /// deterministic in both modes; the master drops the surplus as stale
-/// or duplicate identically).  Frames carry fixed `comp_us` and
-/// `send_ts_us = 0` so nothing wall-clock-dependent reaches the wire.
+/// or duplicate identically).  Frames carry fixed `comp_us` and fixed
+/// v5 phase stamps so nothing wall-clock-dependent reaches the wire:
+/// the master's latency anatomy sees garbage offsets, which is exactly
+/// the point — telemetry must stay inert no matter what the stamps say.
 fn flush_frames(w: usize, a: &Assign, parts: &HashMap<u32, Mat>) -> Vec<Vec<u8>> {
     let group = (a.group.max(1) as usize).min(a.tasks.len().max(1));
     let theta64: Vec<f64> = a.theta.iter().map(|&v| v as f64).collect();
@@ -89,6 +91,7 @@ fn flush_frames(w: usize, a: &Assign, parts: &HashMap<u32, Mat>) -> Vec<Vec<u8>>
         if !flush {
             continue;
         }
+        let comp_us = 1_000 + w as u64;
         let mut frame = Vec::new();
         encode_result_into(
             &mut frame,
@@ -96,8 +99,11 @@ fn flush_frames(w: usize, a: &Assign, parts: &HashMap<u32, Mat>) -> Vec<Vec<u8>>
             a.version,
             w as u32,
             &buf_tasks,
-            1_000 + w as u64,
-            0,
+            comp_us,
+            0,       // comp_start_us
+            comp_us, // comp_end_us
+            comp_us, // enqueue_us
+            comp_us, // send_ts_us
             &buf_sum,
         );
         frames.push(frame);
@@ -111,7 +117,9 @@ fn flush_frames(w: usize, a: &Assign, parts: &HashMap<u32, Mat>) -> Vec<Vec<u8>>
 /// answer each round's Assigns (all n, in worker order) with flushes
 /// sent exclusively on connection 0.
 fn scripted_fleet(addr: String, n: usize, rounds: usize) {
-    // sequential connect + Welcome read pins accept order = worker id
+    // sequential connect + Welcome read pins accept order = worker id;
+    // the v5 handshake then expects a Hello back (the master's clock
+    // exchange) before it moves on to the next accept
     let mut conns: Vec<TcpStream> = Vec::new();
     for i in 0..n {
         let stream = connect_retry(&addr);
@@ -123,6 +131,13 @@ fn scripted_fleet(addr: String, n: usize, rounds: usize) {
             }
             other => panic!("expected Welcome, got {other:?}"),
         }
+        let mut wr = stream.try_clone().expect("clone");
+        Msg::Hello {
+            worker_id: i as u32,
+            ts_us: now_us(),
+        }
+        .write_to(&mut wr)
+        .expect("hello");
         conns.push(stream);
     }
     // every conn gets its LoadData next; keep each worker's batches
@@ -161,6 +176,7 @@ fn scripted_fleet(addr: String, n: usize, rounds: usize) {
                     batches,
                     group,
                     align,
+                    .. // issue_us: the clock exchange is telemetry-only
                 }) => {
                     if tx
                         .send((
@@ -382,6 +398,7 @@ fn assert_telemetry_inert(io: IoMode, scheme: SchemeId, staleness: usize) {
     let armed = MetricsConfig {
         addr: Some("127.0.0.1:0".into()),
         log: Some(log_path.display().to_string()),
+        ..MetricsConfig::default()
     };
     let telemetry = run_mode(io, scheme, n, r, k, staleness, armed);
     for (i, (a, b)) in plain

@@ -15,8 +15,8 @@ use std::net::TcpStream;
 use std::time::{Duration, Instant};
 
 use straggler_sched::telemetry::{
-    encode_prometheus_into, metrics as tm, snapshot_into, spans_from_trace, MetricsServer,
-    Snapshot,
+    encode_prometheus_into, metrics as tm, snapshot_into, spans_from_trace, FlightRecorder,
+    MetricsServer, Snapshot,
 };
 use straggler_sched::trace::TraceStore;
 
@@ -191,6 +191,62 @@ fn scrape_server_serves_metrics_and_survives_malformed_requests() {
     }
     let again = exchange(&mut srv, b"GET /metrics HTTP/1.1\r\n\r\n".to_vec());
     assert!(again.starts_with("HTTP/1.1 200 OK"), "got: {again}");
+}
+
+/// The three JSON endpoints riding the same listener: `/healthz`,
+/// `/catalog`, and the flight-recorder dump at `/debug/flight` (empty
+/// shape without an attached recorder, real ring contents with one).
+#[test]
+fn scrape_server_serves_health_catalog_and_flight() {
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    let mut srv = MetricsServer::bind("127.0.0.1:0").expect("bind scrape listener");
+
+    let hz = exchange(&mut srv, b"GET /healthz HTTP/1.1\r\n\r\n".to_vec());
+    assert!(hz.starts_with("HTTP/1.1 200 OK"), "got: {hz}");
+    assert!(hz.contains("Content-Type: application/json"));
+    assert!(hz.contains("\"status\":\"ok\""), "got: {hz}");
+    assert!(hz.contains("\"uptime_us\""), "got: {hz}");
+    assert!(hz.contains("\"rounds_applied\""), "got: {hz}");
+
+    let cat = exchange(&mut srv, b"GET /catalog HTTP/1.1\r\n\r\n".to_vec());
+    assert!(cat.starts_with("HTTP/1.1 200 OK"), "got: {cat}");
+    assert!(cat.contains("Content-Type: application/json"));
+    // the catalog must list every registered series, new phase
+    // histograms and anomaly counter included
+    for name in [
+        "straggler_master_rounds_total",
+        "straggler_phase_compute_ms",
+        "straggler_phase_queue_ms",
+        "straggler_phase_network_ms",
+        "straggler_phase_dwell_ms",
+        "straggler_anomaly_total",
+        "straggler_clock_offset_us",
+    ] {
+        assert!(cat.contains(name), "catalog missing {name}: {cat}");
+    }
+
+    // no recorder attached: an empty, well-shaped dump
+    let empty = exchange(&mut srv, b"GET /debug/flight HTTP/1.1\r\n\r\n".to_vec());
+    assert!(empty.starts_with("HTTP/1.1 200 OK"), "got: {empty}");
+    assert!(empty.contains("\"events\":[]"), "got: {empty}");
+
+    // attach a ring with one phase and one anomaly event; the dump
+    // reflects the shared state on the next request
+    let flight = Rc::new(RefCell::new(FlightRecorder::new(8)));
+    flight
+        .borrow_mut()
+        .record(1_000, "phase", 3, 1, [2.0, 0.1, 0.5, 0.05]);
+    flight
+        .borrow_mut()
+        .record(2_000, "anomaly", 3, 1, [0.0, 16.0, 2.0, 4.0]);
+    srv.set_flight(flight.clone());
+    let dump = exchange(&mut srv, b"GET /debug/flight HTTP/1.1\r\n\r\n".to_vec());
+    assert!(dump.starts_with("HTTP/1.1 200 OK"), "got: {dump}");
+    assert!(dump.contains("\"recorded\":2"), "got: {dump}");
+    assert!(dump.contains("\"kind\":\"phase\""), "got: {dump}");
+    assert!(dump.contains("\"kind\":\"anomaly\""), "got: {dump}");
 }
 
 // ---------------------------------------------------------------------------

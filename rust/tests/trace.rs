@@ -48,6 +48,9 @@ fn random_store(rng: &mut Rng) -> TraceStore {
                     _ => rng.f64() * 1e-2,
                 },
                 comm_s: rng.f64() * 1e-2,
+                // worker-queue delay (binary v3): zeros (legacy shape)
+                // and small positive reals both round-trip
+                queue_s: if rng.below(3) == 0 { 0.0 } else { rng.f64() * 1e-3 },
                 bytes: rng.below(1 << 20) as u64,
                 scheme: schemes[rng.below(schemes.len())].to_string(),
                 replanned: rng.below(2) == 1,
